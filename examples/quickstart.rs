@@ -1,0 +1,111 @@
+//! Quickstart: load the AOT artifacts, run one sparse prefill and a few
+//! decode steps by hand — the minimal end-to-end path through the public
+//! API (runtime -> prefill -> KV handoff -> decode).
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have produced artifacts/ first.
+
+use anyhow::Result;
+
+use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::tensor::math::argmax;
+use amber_pruner::tensor::HostTensor;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = ModelRuntime::new(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let model = "tiny-lm-a";
+    // pick the 8:16 Amber-Pruner prefill if present, else dense
+    let sparse = format!("{model}.prefill64.nm8_16");
+    let (prefill, files): (String, Vec<String>) =
+        if rt.manifest.artifacts.contains_key(&sparse) {
+            (
+                sparse,
+                vec![
+                    format!("{model}.atw"),
+                    format!("{model}.aux_ls.atw"),
+                ],
+            )
+        } else {
+            (
+                format!("{model}.prefill64.nm2_4"),
+                vec![format!("{model}.atw"), format!("{model}.aux_ls.atw")],
+            )
+        };
+    let refs: Vec<&str> = files.iter().map(|s| s.as_str()).collect();
+    let t0 = std::time::Instant::now();
+    let binding = rt.bind(&prefill, &refs)?;
+    println!(
+        "compiled + bound {prefill} in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+
+    // a fact-recall prompt: "<bos> <qry> E3 r1 <ans>" (the model answers
+    // with the entity its training world pairs with (E3, r1))
+    let meta = rt.manifest.artifact(&prefill)?.clone();
+    let (b, s) = (meta.batch, meta.seq);
+    let prompt = vec![1, 4, 51, 33, 5]; // BOS QRY E3 r1 ANS
+    let mut tokens = vec![0i32; b * s];
+    tokens[..prompt.len()].copy_from_slice(&prompt);
+    let out = rt.prefill(&prefill, &binding, &tokens)?;
+    println!(
+        "prefill [{}x{}] -> logits [{b},{s},{}] in {:.1}ms",
+        b, s, out.vocab, out.exec_secs * 1e3
+    );
+    let last = &out.logits
+        [(prompt.len() - 1) * out.vocab..prompt.len() * out.vocab];
+    let mut tok = argmax(last) as i32;
+    println!("first generated token: {tok}");
+
+    // hand-rolled decode loop over the dense decode executable
+    let decode = format!("{model}.decode.dense");
+    let dbind = rt.bind(&decode, &[&files[0]])?;
+    let dmeta = rt.manifest.artifact(&decode)?.clone();
+    let dims = &dmeta.runtime_inputs[2].0;
+    let (l, db, c, h, d) = (dims[0], dims[1], dims[2], dims[3], dims[4]);
+    // scatter row 0 of the prefill cache into slot 0
+    let k_host: Vec<f32> = out.k_cache.to_vec()?;
+    let v_host: Vec<f32> = out.v_cache.to_vec()?;
+    let row = h * d;
+    let mut kc = vec![0f32; l * db * c * row];
+    let mut vc = vec![0f32; l * db * c * row];
+    let plen = prompt.len();
+    for li in 0..l {
+        let src = li * b * s * row;
+        let dst = li * db * c * row;
+        kc[dst..dst + plen * row]
+            .copy_from_slice(&k_host[src..src + plen * row]);
+        vc[dst..dst + plen * row]
+            .copy_from_slice(&v_host[src..src + plen * row]);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    let mut generated = vec![tok];
+    let mut pos = plen as i32;
+    for _ in 0..4 {
+        let k_lit = HostTensor::f32("k", dims_i64.clone(), &kc).to_literal()?;
+        let v_lit = HostTensor::f32("v", dims_i64.clone(), &vc).to_literal()?;
+        let mut token_v = vec![0i32; db];
+        token_v[0] = tok;
+        let mut pos_v = vec![0i32; db];
+        pos_v[0] = pos;
+        let mut len_v = vec![1i32; db];
+        len_v[0] = pos + 1;
+        let dout = rt.decode(
+            &decode, &dbind, &token_v, &pos_v, &k_lit, &v_lit, &len_v,
+        )?;
+        kc = dout.k_cache.to_vec()?;
+        vc = dout.v_cache.to_vec()?;
+        tok = argmax(&dout.logits[..dout.vocab]) as i32;
+        generated.push(tok);
+        pos += 1;
+        if tok == 2 {
+            break; // EOS
+        }
+    }
+    println!("generated tokens: {generated:?}");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Sensitivity / policy explorer: prints the per-layer, per-module e_q
+//! sensitivity table (Appendix D data, computed at build time on real
+//! activations), the derived skip policy, and what-if coverage numbers
+//! for alternative skip budgets — the workflow an operator would use to
+//! tune the accuracy/coverage trade-off on a new model.
+//!
+//!     cargo run --release --example sensitivity_sweep [-- --model NAME]
+
+use anyhow::{Context, Result};
+
+use amber_pruner::runtime::Manifest;
+use amber_pruner::sparsity::coverage::Geometry;
+use amber_pruner::sparsity::policy;
+use amber_pruner::util::cli::Args;
+use amber_pruner::util::fmt::Table;
+use amber_pruner::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["model", "artifacts"])?;
+    let dir = std::path::PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let model = args.opt_or("model", "tiny-lm-a");
+
+    let manifest = Manifest::load(&dir)?;
+    let info = manifest
+        .models
+        .get(&model)
+        .with_context(|| format!("model {model} not in manifest"))?;
+    let g = Geometry::from_config(&info.config);
+
+    let stats_path = dir.join("stats").join(format!(
+        "sensitivity_{model}.json"
+    ));
+    let j = Json::parse(&std::fs::read_to_string(&stats_path)?)?;
+    let modules: Vec<String> = j
+        .req("modules")?
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_str().unwrap().to_string())
+        .collect();
+    let per_layer = j.req("per_layer")?.as_arr().unwrap();
+
+    let mut t = Table::new(
+        &format!("per-(layer, module) sensitivity e_q — {model} @ 4:8"),
+        &[&["layer"][..],
+          &modules.iter().map(|s| s.as_str()).collect::<Vec<_>>()[..]]
+            .concat(),
+    );
+    for (li, row) in per_layer.iter().enumerate() {
+        let mut cells = vec![li.to_string()];
+        for v in row.as_arr().unwrap() {
+            cells.push(format!("{:.4}", v.as_f64().unwrap()));
+        }
+        t.row(cells);
+    }
+    t.print();
+
+    let skips: Vec<usize> = j
+        .req("skip_layers")?
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect();
+    println!("\nchosen q/gate skip layers: {skips:?}");
+    println!(
+        "prunable module types: {:?}",
+        policy::MODULES
+            .iter()
+            .filter(|m| policy::prunable(m))
+            .collect::<Vec<_>>()
+    );
+
+    // what-if: coverage + ideal speedup across skip budgets
+    let mut w = Table::new(
+        "what-if: q/gate skip budget vs coverage",
+        &["skipped layers", "coverage", "ideal 2:4 speedup",
+          "ideal 8:16 speedup"],
+    );
+    // rank layers by the build-time sensitivity (q + gate columns)
+    let qi = modules.iter().position(|m| m == "q_proj").unwrap();
+    let gi = modules.iter().position(|m| m == "gate_proj").unwrap();
+    let mut ranked: Vec<(usize, f64)> = per_layer
+        .iter()
+        .enumerate()
+        .map(|(li, row)| {
+            let r = row.as_arr().unwrap();
+            (li, r[qi].as_f64().unwrap() + r[gi].as_f64().unwrap())
+        })
+        .collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for budget in 0..=g.n_layers.min(4) {
+        let skip: Vec<usize> =
+            ranked.iter().take(budget).map(|(li, _)| *li).collect();
+        w.row(vec![
+            format!("{skip:?}"),
+            format!("{:.1}%", g.coverage(&skip) * 100.0),
+            format!("{:.2}x", g.ideal_linear_speedup(&skip, 2, 4)),
+            format!("{:.2}x", g.ideal_linear_speedup(&skip, 8, 16)),
+        ]);
+    }
+    w.print();
+    println!("sensitivity_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! TCP serving demo: boots the engine + TCP front-end, then acts as its
+//! own client — connects, sends JSON requests at several sparsity configs,
+//! prints responses, queries stats, and shuts down. Demonstrates the wire
+//! protocol a real deployment would speak.
+//!
+//!     cargo run --release --example serve_prefill
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use amber_pruner::coordinator::scheduler::{Engine, EngineConfig, EngineMsg};
+use amber_pruner::metrics::EngineMetrics;
+use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::server::tcp;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let metrics = Arc::new(EngineMetrics::new());
+    let rt = ModelRuntime::new(dir)?;
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig::new("tiny-lm-a"),
+        Arc::clone(&metrics),
+    )?;
+    let (tx, rx) = channel::<EngineMsg>();
+    let (addr, _acceptor) =
+        tcp::serve("127.0.0.1:0", tx.clone(), Arc::clone(&metrics))?;
+    println!("engine listening on {addr}");
+
+    // client thread: speak the line protocol
+    let client = std::thread::spawn(move || -> Result<Vec<String>> {
+        let stream = TcpStream::connect(addr)?;
+        let mut w = stream.try_clone()?;
+        let mut r = BufReader::new(stream);
+        let mut out = Vec::new();
+        let prompts = [
+            // "<bos> <qry> E0 r0 <ans>" at different sparsity configs
+            (r#"{"id":1,"prompt":[1,4,48,32,5],"max_new_tokens":3,"sparsity":"dense"}"#,),
+            (r#"{"id":2,"prompt":[1,4,49,33,5],"max_new_tokens":3,"sparsity":"2:4:ls"}"#,),
+            (r#"{"id":3,"prompt":[1,4,50,34,5],"max_new_tokens":3,"sparsity":"8:16:ls"}"#,),
+            (r#"{"id":4,"prompt":[1,10,20,13,23],"max_new_tokens":3,"sparsity":"4:8:ls"}"#,),
+        ];
+        for (p,) in prompts {
+            writeln!(w, "{p}")?;
+            let mut line = String::new();
+            r.read_line(&mut line)?;
+            out.push(line.trim().to_string());
+        }
+        writeln!(w, r#"{{"cmd":"stats"}}"#)?;
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        out.push(line.trim().to_string());
+        writeln!(w, r#"{{"cmd":"quit"}}"#)?;
+        Ok(out)
+    });
+
+    // run the engine until the client is done, then shut down
+    let shutdown = std::thread::spawn(move || {
+        let lines = client.join().expect("client thread")?;
+        for l in &lines {
+            println!("<- {l}");
+        }
+        let _ = tx.send(EngineMsg::Shutdown);
+        Ok::<Vec<String>, anyhow::Error>(lines)
+    });
+    engine.run(rx)?;
+    let lines = shutdown.join().expect("shutdown thread")?;
+    assert!(lines.len() == 5, "expected 4 responses + stats");
+    assert!(lines[4].contains("requests_completed"));
+    println!("serve_prefill OK");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+"""Build-time python package for the Amber Pruner reproduction.
+
+Everything in here runs ONCE at `make artifacts` time:
+
+  * Layer-1 Pallas kernels (``kernels/``) — the N:M pruning / SpMM /
+    quantized-matmul compute hot-spots, checked against pure-jnp oracles.
+  * Layer-2 JAX model (``model.py`` / ``model_moe.py``) — LLaMA-like and
+    MoE transformers whose prefill path calls the Layer-1 kernels.
+  * The Amber Pruner algorithms (``amber/``) — scoring, sensitivity
+    analysis, SmoothQuant / Outstanding-sparse, W8A8 PTQ and the weight
+    sparsity baselines.
+  * ``train.py`` — trains the tiny models on a structured synthetic corpus
+    so activation statistics are real, not faked.
+  * ``aot.py`` — lowers every model variant to HLO *text* and emits the
+    weights / manifest / eval datasets consumed by the rust runtime.
+
+Python is never imported on the rust request path.
+"""

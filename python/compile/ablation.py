@@ -1,0 +1,143 @@
+"""Ablation studies for the design choices DESIGN.md calls out.
+
+Run:  cd python && python -m compile.ablation [--out ../artifacts]
+
+Emits artifacts/stats/ablation.json with three sweeps (printed by
+`amber repro ablation`):
+
+  A1  scoring method: naive |x| vs Wanda-like (Eq. 2) vs Robust-Norm
+      (Eq. 3-5) — relative output error ||Wx - Wx'|| / ||Wx|| per ratio,
+      measured on real calibration activations of tiny-lm-a.
+  A2  Robust-Norm clipping percentile (the 0.5/99.5 choice): sweep the
+      clip quantile and measure the same output error at 2:4.
+  A3  Outstanding-sparse alpha (the 0.10 choice): sweep alpha in the
+      *inverted* scaling and measure (a) activation-range expansion and
+      (b) N:M pruning output error on the smoothed tensors.
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import corpus, train
+from .amber import scoring, smoothquant
+from .configs import MODELS
+from .kernels import ref
+
+
+def calibration_activations(cfg, params, n_batches=2):
+    """Real post-ln inputs of gate_proj at every layer."""
+    import jax
+    from .model import Projector, attention_block, rmsnorm
+
+    rng = np.random.Generator(np.random.PCG64(777))
+    out = []
+    for _ in range(n_batches):
+        tokens = jnp.asarray(corpus.pack_batch(
+            rng, corpus.WORLD, ("grammar_a", "facts_a", "arith"), 8, 48))
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = params["embed"][tokens]
+        acts = []
+        for li in range(cfg.n_layers):
+            proj = Projector(cfg, "dense", False, layer=li)
+            h = rmsnorm(x, params["ln_attn"][li], cfg.rmsnorm_eps)
+            a, _ = attention_block(cfg, proj, params, li, h, pos)
+            x = x + a
+            h2 = rmsnorm(x, params["ln_mlp"][li], cfg.rmsnorm_eps)
+            acts.append(h2.reshape(-1, cfg.d_model))
+            g = h2 @ params["wg"][li]
+            u = h2 @ params["wu"][li]
+            x = x + (jax.nn.silu(g) * u) @ params["wd"][li]
+        out.append(acts)
+    # concat over batches, per layer
+    return [jnp.concatenate([b[li] for b in out])
+            for li in range(cfg.n_layers)]
+
+
+def output_error(x, w, scale, n, m):
+    y = x @ w
+    xp = ref.nm_prune(x, scale, n, m)
+    return float(jnp.linalg.norm(xp @ w - y) / (jnp.linalg.norm(y) + 1e-9))
+
+
+def sweep_scoring(cfg, params, acts):
+    res = {}
+    for (n, m) in [(2, 4), (4, 8), (8, 16)]:
+        rows = {}
+        for method in ("naive", "wanda", "robust"):
+            errs = []
+            for li in range(cfg.n_layers):
+                w = params["wg"][li]
+                if method == "naive":
+                    s = jnp.ones((cfg.d_model,), jnp.float32)
+                elif method == "wanda":
+                    s = scoring.wanda_scales(w)
+                else:
+                    s = scoring.robust_norm_scales(w)
+                errs.append(output_error(acts[li], w, s, n, m))
+            rows[method] = float(np.mean(errs))
+        res[f"{n}:{m}"] = rows
+    return res
+
+
+def sweep_percentile(cfg, params, acts):
+    res = {}
+    for q in (0.0, 0.001, 0.005, 0.02, 0.05):
+        errs = []
+        for li in range(cfg.n_layers):
+            w = params["wg"][li]
+            s = scoring.robust_norm_scales(w, q_lo=q, q_hi=1.0 - q)
+            errs.append(output_error(acts[li], w, s, 2, 4))
+        res[f"{q}"] = float(np.mean(errs))
+    return res
+
+
+def sweep_alpha(cfg, params, acts):
+    res = {}
+    for alpha in (0.05, 0.10, 0.25, 0.5, 0.75):
+        exps, errs = [], []
+        for li in range(cfg.n_layers):
+            w = params["wg"][li]
+            x = acts[li]
+            xmax = jnp.max(jnp.abs(x), axis=0)
+            wmax = jnp.max(jnp.abs(w), axis=1)
+            s_hat = smoothquant.outstanding_scale(xmax, wmax, alpha)
+            xs = x / s_hat[None, :]
+            ws = w * s_hat[:, None]
+            exps.append(float(jnp.max(jnp.abs(xs)) / jnp.max(jnp.abs(x))))
+            s = scoring.robust_norm_scales(ws)
+            errs.append(output_error(xs, ws, s, 2, 4))
+        res[f"{alpha}"] = dict(range_expansion=float(np.mean(exps)),
+                               output_error=float(np.mean(errs)))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    cfg, _ = MODELS["tiny-lm-a"]
+    params = train.get_or_train("tiny-lm-a", verbose=False)
+    acts = calibration_activations(cfg, params)
+    report = dict(
+        model="tiny-lm-a",
+        scoring=sweep_scoring(cfg, params, acts),
+        robust_percentile=sweep_percentile(cfg, params, acts),
+        outstanding_alpha=sweep_alpha(cfg, params, acts),
+    )
+    os.makedirs(os.path.join(args.out, "stats"), exist_ok=True)
+    path = os.path.join(args.out, "stats", "ablation.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {path}")
+    for k, v in report["scoring"].items():
+        print(k, v)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Amber Pruner algorithms (offline / calibration side).
+
+  * ``topk``            naive N:M magnitude masks (the paper's baseline)
+  * ``scoring``         Wanda-like reversed scoring (Eq. 2) and
+                        Robust-Norm Scoring (Eq. 3-5)
+  * ``sensitivity``     relative perturbation error e_q (Eq. 8) and the
+                        layer-skipping policy derived from it
+  * ``smoothquant``     SmoothQuant scaling (Eq. 9) and the inverted
+                        Outstanding-sparse variant (s_hat = 1/s, alpha=0.10)
+  * ``quant``           W8A8 post-training quantization
+  * ``weight_sparsity`` the weight-pruning baselines of Appendix A
+                        (magnitude, Wanda, SparseGPT, Pruner-Zero-style)
+
+All of this runs offline at `make artifacts` time; its outputs ship as
+auxiliary weights next to the model parameters (< 0.05 % extra size, as the
+paper reports).
+"""

@@ -1,0 +1,143 @@
+"""W8A8 post-training quantization (paper §Outstanding-sparse setup).
+
+Standard PTQ mirroring the paper:
+  * weights:     symmetric per-output-channel int8 (computed offline);
+  * activations: symmetric per-tensor *static* int8, scale calibrated on a
+    small calibration set (the paper uses 50 BoolQ samples; we use 50
+    boolean-skill samples from the synthetic corpus);
+  * skip policies per model (paper: LLaMA skips the first 5 layers' linears
+    and all down_proj; Qwen2 skips all down_proj).
+
+Outputs a ``qparams`` structure the L2 model consumes:
+    qparams["wq"][module][layer]        int8 [d_in, d_out]
+    qparams["w_scale"][module][layer]   f32 [d_out]
+    qparams["x_scale"][module][layer]   f32 scalar
+    qparams["quantized"][module][layer] bool (skip policy)
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import DENSE_MODULES
+from ..model import MODULE_IDX
+
+WMAP = {"q_proj": "wq", "k_proj": "wk", "v_proj": "wv", "o_proj": "wo",
+        "gate_proj": "wg", "up_proj": "wu", "down_proj": "wd"}
+
+
+def quantize_weight(w):
+    """Symmetric per-output-channel int8. w [d_in, d_out] ->
+    (wq int8, scale [d_out])."""
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    wq = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
+    return wq, scale.astype(jnp.float32)
+
+
+def dequantize_weight(wq, scale):
+    return wq.astype(jnp.float32) * scale[None, :]
+
+
+def act_scale_from_stats(absmax_scalar):
+    """Per-tensor activation scale from calibrated |x|max."""
+    return float(max(absmax_scalar / 127.0, 1e-8))
+
+
+def skip_policy(model_name, n_layers):
+    """Paper's per-model quantization skip lists -> set of (layer, module).
+
+    LLaMA3.1-8B  -> tiny-lm-a: first 5 layers fully skipped (scaled to the
+                    first ceil(5/32 * L) layers) + all down_proj.
+    Qwen2-7B     -> tiny-lm-b: all down_proj skipped.
+    Qwen3-30B    -> tiny-moe:  gate_proj never quantized.
+    """
+    skips = set()
+    if model_name == "tiny-lm-a":
+        n_first = max(1, round(5 / 32 * n_layers))
+        for li in range(n_first):
+            for m in DENSE_MODULES:
+                skips.add((li, m))
+        for li in range(n_layers):
+            skips.add((li, "down_proj"))
+    elif model_name == "tiny-lm-b":
+        for li in range(n_layers):
+            skips.add((li, "down_proj"))
+    else:  # moe-style
+        for li in range(n_layers):
+            skips.add((li, "gate_proj"))
+    return skips
+
+
+def collect_activation_stats(cfg, params, batches, forward_fn):
+    """Run calibration batches through the *reference* forward, capturing
+    per-module input activations via jax interception-free bookkeeping:
+    we re-run the forward manually layer by layer (cheap at tiny scale).
+
+    Returns stats[module][layer] = dict(absmax=[d_in], tensor_absmax=float)
+    """
+    from ..kernels import ref
+    from ..model import rmsnorm, attention_block, Projector
+
+    stats = {m: [dict(absmax=None, tmax=0.0) for _ in range(cfg.n_layers)]
+             for m in DENSE_MODULES}
+
+    def upd(module, layer, x):
+        x2 = np.asarray(x).reshape(-1, x.shape[-1])
+        am = np.max(np.abs(x2), axis=0)
+        st = stats[module][layer]
+        st["absmax"] = am if st["absmax"] is None else np.maximum(
+            st["absmax"], am)
+        st["tmax"] = max(st["tmax"], float(am.max()))
+
+    for tokens in batches:
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = params["embed"][tokens]
+        for layer in range(cfg.n_layers):
+            proj = Projector(cfg, "dense", False, layer=layer)
+            h = rmsnorm(x, params["ln_attn"][layer], cfg.rmsnorm_eps)
+            upd("q_proj", layer, h)
+            upd("k_proj", layer, h)
+            upd("v_proj", layer, h)
+            a, _ = attention_block(cfg, proj, params, layer, h, pos)
+            # o_proj input: recompute the pre-projection attention output
+            q = ref.rope((h @ params["wq"][layer]).reshape(
+                b, s, cfg.n_q_heads, cfg.head_dim), pos, cfg.rope_theta)
+            k = ref.rope((h @ params["wk"][layer]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim), pos, cfg.rope_theta)
+            v = (h @ params["wv"][layer]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            o_in = ref.causal_attention(q, k, v).reshape(b, s, cfg.q_dim)
+            upd("o_proj", layer, o_in)
+            x = x + a
+            h = rmsnorm(x, params["ln_mlp"][layer], cfg.rmsnorm_eps)
+            upd("gate_proj", layer, h)
+            upd("up_proj", layer, h)
+            g = h @ params["wg"][layer]
+            u = h @ params["wu"][layer]
+            hh = jax.nn.silu(g) * u
+            upd("down_proj", layer, hh)
+            x = x + hh @ params["wd"][layer]
+    return stats
+
+
+def build_qparams(cfg, params, stats, model_name):
+    """Quantize all linear weights + attach calibrated activation scales."""
+    skips = skip_policy(model_name, cfg.n_layers)
+    qp = {"wq": {}, "w_scale": {}, "x_scale": {}, "quantized": {}}
+    for module in DENSE_MODULES:
+        wname = WMAP[module]
+        wqs, wss, xss, qs = [], [], [], []
+        for layer in range(cfg.n_layers):
+            w = params[wname][layer]
+            wq, ws = quantize_weight(w)
+            wqs.append(wq)
+            wss.append(ws)
+            xss.append(act_scale_from_stats(stats[module][layer]["tmax"]))
+            qs.append((layer, module) not in skips)
+        qp["wq"][module] = jnp.stack(wqs)
+        qp["w_scale"][module] = jnp.stack(wss)
+        qp["x_scale"][module] = np.array(xss, dtype=np.float32)
+        qp["quantized"][module] = np.array(qs, dtype=bool)
+    return qp

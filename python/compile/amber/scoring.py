@@ -1,0 +1,82 @@
+"""Weight-aware activation scoring (paper §Methodology).
+
+The activation element X_ij is scored by S_ij = |X_ij| * f(W_:,j), where
+f summarizes the importance of input-channel j of the downstream weight
+matrix. Two variants:
+
+  * ``wanda_scales``  — Eq. 2: raw column L2 norms, min-normalized so the
+    smallest channel weight is exactly 1 (guards against underflow in
+    low-precision inference).
+  * ``robust_norm_scales`` — Eq. 3-5 (Robust-Norm Scoring): clip W to its
+    [0.5, 99.5] percentile range, standardize by global mean/variance, then
+    take min-normalized column L2 norms of the standardized weights. The
+    standardization spreads concentrated, low-variance weight distributions
+    so boundary-critical channels separate.
+
+The scales are *precomputed offline* and shipped as auxiliary weights; the
+online kernel just multiplies |x| by them (kernels/nm_prune.py).
+
+Convention: our weight matrices are stored [d_in, d_out] (x @ W), so the
+paper's "column" W_:,j (all weights consuming input channel j) is our
+*row* W[j, :].
+"""
+
+import jax.numpy as jnp
+
+
+def _min_normalize(norms, eps=1e-12):
+    return norms / (jnp.min(norms) + eps)
+
+
+def wanda_scales(w):
+    """Eq. 2 channel statistic. w [d_in, d_out] -> scales [d_in]."""
+    norms = jnp.linalg.norm(w, axis=1)
+    return _min_normalize(norms)
+
+
+def robust_norm_scales(w, q_lo=0.005, q_hi=0.995):
+    """Robust-Norm Scoring (Eq. 3-5). w [d_in, d_out] -> scales [d_in].
+
+    1. Outlier removal: clip weights outside the [q_lo, q_hi] quantiles
+       (clipping rather than discarding keeps the tensor rectangular; the
+       extreme <1% of values stop dominating either way).
+    2. Standardize with the clipped tensor's global mean/variance.
+    3. Min-normalized per-input-channel L2 norms of the standardized
+       weights.
+    """
+    lo = jnp.quantile(w, q_lo)
+    hi = jnp.quantile(w, q_hi)
+    wc = jnp.clip(w, lo, hi)
+    mu = jnp.mean(wc)
+    var = jnp.var(wc) + 1e-12
+    wn = (wc - mu) / jnp.sqrt(var)
+    norms = jnp.linalg.norm(wn, axis=1)
+    return _min_normalize(norms)
+
+
+# weight-name mapping used when building the aux scale tensors
+_MODULE_WEIGHTS = {
+    "q_proj": "wq", "k_proj": "wk", "v_proj": "wv", "o_proj": "wo",
+    "gate_proj": "wg", "up_proj": "wu", "down_proj": "wd",
+}
+
+
+def build_aux_scales(cfg, params, method="robust"):
+    """Per-(layer, module) channel scales for the whole model.
+
+    method: "ones" (naive top-k), "wanda" (Eq. 2), "robust" (Eq. 3-5).
+    Returns a dict shaped like model.default_aux()'s scale tensors.
+    """
+    from ..model import AUX_SCALE_NAMES
+
+    fn = {"wanda": wanda_scales, "robust": robust_norm_scales}.get(method)
+    out = {}
+    for module, wname in _MODULE_WEIGHTS.items():
+        aux_name = AUX_SCALE_NAMES[module]
+        per_layer = []
+        for layer in range(cfg.n_layers):
+            w = params[wname][layer]
+            per_layer.append(jnp.ones((w.shape[0],), jnp.float32)
+                             if fn is None else fn(w))
+        out[aux_name] = jnp.stack(per_layer)
+    return out

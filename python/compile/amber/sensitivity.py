@@ -1,0 +1,179 @@
+"""Layer-skipping sensitivity analysis (paper Eq. 6-8, Appendix D).
+
+For each (layer, module) candidate we prune *only that projection's input
+activations* to N:M, run the full forward pass, and measure the relative
+perturbation of the final hidden states:
+
+    e_q(Y, Y') = ||Y - Y'||_2 / (||Y||_2 + eps)            (Eq. 8)
+
+The skip policy then mirrors the paper's §Experimental Setup:
+  * k_proj / v_proj: non-prunable outright — under GQA their FLOPs share is
+    tiny, so pruning them buys ~nothing and only adds error;
+  * o_proj / up_proj: preserved (highest mean sensitivity, Appendix D);
+  * down_proj: pruned in ALL layers (consistently lowest sensitivity);
+  * q_proj / gate_proj: pruned except in the top-`n_skip` most sensitive
+    layers (selective skipping).
+
+Outputs feed three places: the keep_dense aux tensor baked into artifacts,
+the rust coverage accounting, and the Fig. 6 / Appendix D repro harness.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import DENSE_MODULES
+from ..kernels import ref
+from ..model import MODULE_IDX, default_aux
+from .. import model as model_mod
+from .. import model_moe as moe_mod
+
+EPS = 1e-8
+
+# modules that may ever be pruned, per the policy above
+CANDIDATES = ("q_proj", "gate_proj", "down_proj")
+ALWAYS_KEPT = ("k_proj", "v_proj", "o_proj", "up_proj")
+
+
+def final_hidden(cfg, params, tokens, aux, nm, is_moe=False):
+    """Forward returning final-layer hidden logits (the Y of Eq. 8).
+
+    Uses the reference (non-pallas) path: sensitivity analysis is offline.
+    """
+    fwd = moe_mod.forward if is_moe else model_mod.forward
+    kwargs = dict(variant="nm", nm=nm, aux=aux) if nm else dict()
+    return fwd(cfg, params, tokens, **kwargs)
+
+
+def perturbation_error(y, y_prime):
+    """Eq. 8."""
+    num = jnp.linalg.norm(y - y_prime)
+    den = jnp.linalg.norm(y) + EPS
+    return float(num / den)
+
+
+def sensitivity_sweep(cfg, params, tokens, nm, is_moe=False,
+                      modules=DENSE_MODULES):
+    """e_q for every (layer, module) at sparsity ``nm``.
+
+    Returns np.ndarray [n_layers, n_modules] of relative errors. The sparse
+    forward is jit-compiled ONCE — the keep_dense flags are graph *inputs*,
+    so the 7 x n_layers sweep reuses the compiled executable.
+    """
+    import jax
+
+    base_aux = (moe_mod.moe_aux(cfg) if is_moe else default_aux(cfg))
+    fwd = moe_mod.forward if is_moe else model_mod.forward
+    y = jax.jit(lambda p, t: fwd(cfg, p, t))(params, tokens)
+
+    @jax.jit
+    def pruned_forward(p, t, aux):
+        return fwd(cfg, p, t, variant="nm", nm=nm, aux=aux)
+
+    errs = np.zeros((cfg.n_layers, len(modules)), dtype=np.float64)
+    for li in range(cfg.n_layers):
+        for mi, mod in enumerate(modules):
+            aux = dict(base_aux)
+            keep = np.ones((cfg.n_layers, len(DENSE_MODULES)), np.float32)
+            keep[li, MODULE_IDX[mod]] = 0.0  # prune exactly this one
+            aux["keep_dense"] = jnp.asarray(keep)
+            yp = pruned_forward(params, tokens, aux)
+            errs[li, mi] = perturbation_error(y, yp)
+    return errs
+
+
+def module_mean_sensitivity(errs, modules=DENSE_MODULES):
+    """Average over layers — the Appendix D / Fig. 6 series."""
+    return {m: float(errs[:, i].mean()) for i, m in enumerate(modules)}
+
+
+def select_skip_layers(errs, n_skip, modules=DENSE_MODULES):
+    """Pick the `n_skip` layers where q_proj+gate_proj are most sensitive.
+
+    Mirrors the paper's per-model skip lists (e.g. LLaMA3.1-8B skips
+    q/gate in layers {19, 21, 28, 30, 31}).
+    """
+    qi = modules.index("q_proj")
+    gi = modules.index("gate_proj")
+    combined = errs[:, qi] + errs[:, gi]
+    order = np.argsort(-combined)
+    return sorted(int(i) for i in order[:n_skip])
+
+
+def build_keep_dense(cfg, skip_layers, *, no_skip=False):
+    """keep_dense aux tensor [L, n_modules] implementing the policy.
+
+    ``no_skip=True`` is the Naive-top-k setting: prune every module
+    everywhere (Appendix A: "sensitive layer skipping was not applied").
+    """
+    L = cfg.n_layers
+    keep = np.ones((L, len(DENSE_MODULES)), dtype=np.float32)
+    if no_skip:
+        keep[:] = 0.0
+        return jnp.asarray(keep)
+    for mod in CANDIDATES:
+        keep[:, MODULE_IDX[mod]] = 0.0
+    # selective re-skip of q/gate in sensitive layers
+    for li in skip_layers:
+        keep[li, MODULE_IDX["q_proj"]] = 1.0
+        keep[li, MODULE_IDX["gate_proj"]] = 1.0
+    return jnp.asarray(keep)
+
+
+def linear_flops_prefill(cfg, seq, is_moe=False):
+    """Per-token matmul FLOPs (2*din*dout) of each linear module.
+
+    For MoE, expert modules count activated experts only (top-k), matching
+    how the paper counts A3B's "activated" compute.
+    """
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    out = {
+        "q_proj": 2 * d * q,
+        "k_proj": 2 * d * kv,
+        "v_proj": 2 * d * kv,
+        "o_proj": 2 * q * d,
+    }
+    if is_moe:
+        k, fe = cfg.top_k_experts, cfg.d_ff_expert
+        out["gate_proj"] = 2 * d * fe * k
+        out["up_proj"] = 2 * d * fe * k
+        out["down_proj"] = 2 * fe * d * k
+    else:
+        f = cfg.d_ff
+        out["gate_proj"] = 2 * d * f
+        out["up_proj"] = 2 * d * f
+        out["down_proj"] = 2 * f * d
+    return out
+
+
+def coverage(cfg, keep_dense, is_moe=False):
+    """Fraction of linear-projection FLOPs that run through the N:M path —
+    the paper's ">55% of linear computations accelerated" metric."""
+    fl = linear_flops_prefill(cfg, 1, is_moe)
+    keep = np.asarray(keep_dense)
+    total = 0.0
+    pruned = 0.0
+    for li in range(cfg.n_layers):
+        for mod, f in fl.items():
+            total += f
+            if keep[li, MODULE_IDX[mod]] == 0.0:
+                pruned += f
+    return pruned / total
+
+
+def export_report(path, cfg_name, nm, errs, skip_layers, cov,
+                  modules=DENSE_MODULES):
+    """JSON report consumed by the rust fig6/coverage harnesses."""
+    report = {
+        "model": cfg_name,
+        "nm": list(nm),
+        "modules": list(modules),
+        "per_layer": errs.tolist(),
+        "module_mean": module_mean_sensitivity(errs, modules),
+        "skip_layers": skip_layers,
+        "coverage": cov,
+    }
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report

@@ -1,0 +1,108 @@
+"""SmoothQuant scaling and the Outstanding-sparse inversion (paper Eq. 9).
+
+SmoothQuant migrates activation outliers into the weights with a
+per-channel scale
+
+    s_j = max|X_:,j|^alpha / max|W_j,:|^(1-alpha)          (Eq. 9)
+
+applied as  X' = X / s,  W' = diag(s) @ W  (output-preserving).
+
+Outstanding-sparse observes that Amber Pruner selects *better* when the
+activation range is expanded (structured sparsity patterns become visible),
+so it applies the INVERTED factor s_hat = 1/s with a small alpha (0.10):
+activations are stretched, weights shrink correspondingly, and the N:M
+top-k picks survivors on the stretched distribution before quantization.
+
+Like Robust-Norm scales, the smoothing is folded offline: X/s never happens
+at runtime — s is absorbed into the preceding RMSNorm gain (for q/k/v/gate/
+up) or into the preceding projection's weight columns (for o/down).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def smoothquant_scale(x_absmax, w_absmax, alpha=0.5, eps=1e-8):
+    """Eq. 9. x_absmax, w_absmax [d_in] -> s [d_in]."""
+    s = (x_absmax + eps) ** alpha / (w_absmax + eps) ** (1.0 - alpha)
+    # guard degenerate channels (never-activated calibration channels)
+    return jnp.maximum(s, eps)
+
+
+def outstanding_scale(x_absmax, w_absmax, alpha=0.10, eps=1e-8):
+    """Outstanding-sparse: s_hat = 1/s with small alpha — *expands* the
+    activation range instead of compressing it."""
+    return 1.0 / smoothquant_scale(x_absmax, w_absmax, alpha, eps)
+
+
+def apply_smoothing(x, w, s):
+    """Reference semantics (tests): (x/s) @ (s*w) == x @ w."""
+    return x / s[None, :], w * s[:, None]
+
+
+def absmax_stats(xs):
+    """Per-channel max|x| over a calibration batch list."""
+    m = None
+    for x in xs:
+        cur = jnp.max(jnp.abs(x.reshape(-1, x.shape[-1])), axis=0)
+        m = cur if m is None else jnp.maximum(m, cur)
+    return m
+
+
+def fold_into_params(params, layer, module, s):
+    """Fold activation scaling 1/s into the producer of this module's input.
+
+    Producers:
+      q/k/v   <- ln_attn gain        gate/up <- ln_mlp gain
+      down    <- wu output columns
+    o_proj is NOT smoothed: its input is the attention output, whose
+    producer (v) sits behind the softmax-weighted average and, under GQA,
+    a head-group broadcast — released SmoothQuant likewise restricts
+    smoothing to LayerNorm-foldable inputs. For `down`, the input
+    h = silu(g) * u is linear in u, so scaling wu's output columns by 1/s
+    is exact.
+
+    Consumer weights are multiplied by s row-wise. Returns updated params
+    (functional).
+    """
+    p = dict(params)
+    s = jnp.asarray(s)
+    inv = 1.0 / s
+    if module in ("q_proj", "k_proj", "v_proj"):
+        p["ln_attn"] = p["ln_attn"].at[layer].mul(inv)
+        for wn in ("wq", "wk", "wv"):
+            p[wn] = p[wn].at[layer].mul(s[:, None])
+    elif module in ("gate_proj", "up_proj"):
+        p["ln_mlp"] = p["ln_mlp"].at[layer].mul(inv)
+        for wn in ("wg", "wu"):
+            p[wn] = p[wn].at[layer].mul(s[:, None])
+    elif module == "down_proj":
+        p["wu"] = p["wu"].at[layer].mul(inv[None, :])
+        p["wd"] = p["wd"].at[layer].mul(s[:, None])
+    else:
+        raise ValueError(f"module {module} is not smoothable")
+    return p
+
+
+def smooth_model(cfg, params, act_stats, alpha=0.10, inverted=True,
+                 modules=("q_proj", "gate_proj", "down_proj")):
+    """Apply (inverted) smoothing to every foldable module group.
+
+    ``act_stats[module][layer]`` = per-channel |x|max from calibration.
+    q/k/v share one input (post-ln_attn) and must share one s — we use
+    q_proj's stats (dominant FLOPs). gate/up share the post-ln_mlp input;
+    we use gate's stats and fold once.
+    """
+    wmap = {"q_proj": "wq", "gate_proj": "wg", "down_proj": "wd"}
+    p = params
+    scale_fn = outstanding_scale if inverted else smoothquant_scale
+    applied = {}
+    for layer in range(cfg.n_layers):
+        for module in modules:
+            w = p[wmap[module]][layer]
+            xmax = jnp.asarray(act_stats[module][layer])
+            wmax = jnp.max(jnp.abs(w), axis=1)
+            s = scale_fn(xmax, wmax, alpha)
+            p = fold_into_params(p, layer, module, s)
+            applied[(layer, module)] = np.asarray(s)
+    return p, applied

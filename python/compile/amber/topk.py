@@ -1,0 +1,30 @@
+"""Naive N:M top-k activation masks — the paper's activation baseline.
+
+Thin wrappers over the reference kernels with scale == 1 (pure magnitude).
+Kept as its own module because the baseline appears in every table.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import ref
+
+
+def naive_mask(x, n, m):
+    """Magnitude-only exact N:M keep mask."""
+    return ref.nm_mask(jnp.abs(x), n, m)
+
+
+def naive_prune(x, n, m):
+    return x * naive_mask(x, n, m)
+
+
+def density(mask, n, m):
+    """Fraction of kept elements — must be exactly n/m for a valid mask."""
+    return float(jnp.mean(mask))
+
+
+def is_valid_nm(mask, n, m) -> bool:
+    """Check the structural constraint: <= n nonzeros per m-group."""
+    d = mask.shape[-1]
+    g = mask.reshape(*mask.shape[:-1], d // m, m)
+    return bool(jnp.all(jnp.sum(g, axis=-1) <= n))

@@ -1,0 +1,203 @@
+"""Weight-sparsity baselines (paper Appendix A, Table 1).
+
+The paper compares naive top-k *activation* sparsity against the
+representative training-free *weight* N:M pruners and finds activation
+sparsity dominates. We implement all of them:
+
+  * ``magnitude``   |W| within each M-group (classic)
+  * ``wanda``       S_ij = |W_ij| * ||X_:,j||_2 (Sun et al. 2023)
+  * ``sparsegpt``   OBS-based: Hessian H = X^T X + lambda*I, per-column
+                    pruning by w^2 / [H^-1]_jj with error propagation into
+                    the remaining weights (Frantar & Alistarh 2023)
+  * ``prunerzero``  gradient-aware symbolic metric |W| * G^2 (Dong et al.
+                    2024's evolved metric family; gradients from the LM
+                    loss on calibration batches)
+
+Convention: model weights are [d_in, d_out] (x @ W). Hardware weight N:M
+groups run along the *reduction* axis (d_in), i.e. axis 0, independently
+for every output column.
+
+Because weight sparsity only changes the weights, these baselines reuse
+the *dense* AOT artifact — aot.py just emits extra weight files, and the
+rust Appendix-A harness swaps them in.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import DENSE_MODULES
+from .quant import WMAP
+
+
+def _nm_mask_axis0(score, n, m):
+    """Exact N:M keep mask with groups along axis 0. score [d_in, d_out]."""
+    din, dout = score.shape
+    assert din % m == 0
+    g = score.reshape(din // m, m, dout)
+    order = jnp.argsort(-g, axis=1)
+    rank = jnp.argsort(order, axis=1)
+    return (rank < n).astype(score.dtype).reshape(din, dout)
+
+
+def magnitude_prune(w, n, m):
+    return w * _nm_mask_axis0(jnp.abs(w), n, m)
+
+
+def wanda_prune(w, x_norm, n, m):
+    """x_norm [d_in] = ||X_:,j||_2 over the calibration set."""
+    score = jnp.abs(w) * x_norm[:, None]
+    return w * _nm_mask_axis0(score, n, m)
+
+
+def prunerzero_prune(w, g, n, m):
+    """Gradient-aware: score = |W| * G^2."""
+    score = jnp.abs(w) * (g * g)
+    return w * _nm_mask_axis0(score, n, m)
+
+
+def sparsegpt_prune(w, hessian, n, m, percdamp=0.01):
+    """OBS pruning with error propagation (SparseGPT, column-sequential).
+
+    w [d_in, d_out]; hessian [d_in, d_in] = X^T X over calibration.
+    Walks input channels left->right in M-sized groups; within each group
+    selects the N channels to KEEP per output column by the OBS saliency
+    w^2 / [H^-1]_jj, zeroes the rest, and distributes each zeroed weight's
+    reconstruction error onto the not-yet-processed channels via the
+    inverse-Hessian row (the classic OBS update).
+    """
+    w = np.array(w, dtype=np.float64)
+    h = np.array(hessian, dtype=np.float64)
+    din, dout = w.shape
+    assert din % m == 0
+
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    damp = percdamp * np.mean(np.diag(h))
+    h[np.diag_indices(din)] += damp
+
+    # upper-Cholesky trick from the SparseGPT reference implementation:
+    # Hinv's relevant rows come from inv via Cholesky for stability.
+    hinv = np.linalg.inv(h)
+    # symmetrize for numeric hygiene
+    hinv = (hinv + hinv.T) / 2.0
+
+    for g0 in range(0, din, m):
+        # saliency of each channel in the group, per output column
+        cols = np.arange(g0, g0 + m)
+        diag = np.maximum(np.diag(hinv)[cols], 1e-12)  # [m]
+        sal = (w[cols, :] ** 2) / diag[:, None]  # [m, dout]
+        # rank within group: keep top-n saliency per output column
+        order = np.argsort(-sal, axis=0, kind="stable")
+        rank = np.argsort(order, axis=0, kind="stable")
+        prune_mask = rank >= n  # [m, dout] True = prune
+        for off in range(m):
+            j = g0 + off
+            pj = prune_mask[off]  # [dout]
+            if not pj.any():
+                continue
+            err = np.where(pj, w[j, :] / max(hinv[j, j], 1e-12), 0.0)
+            # propagate into *remaining* (not yet processed) channels
+            w[j + 1:, :] -= np.outer(hinv[j, j + 1:], err)
+            w[j, pj] = 0.0
+    return jnp.asarray(w.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Whole-model drivers
+# ---------------------------------------------------------------------------
+
+def collect_weight_calibration(cfg, params, batches, loss_fn):
+    """Per-module input-channel L2 norms, Hessians and gradients from
+    calibration batches (shared by wanda / sparsegpt / prunerzero)."""
+    from .quant import collect_activation_stats
+
+    # activation L2 norms + Hessians need raw inputs; reuse the
+    # layer-by-layer capture from quant.py but accumulate X^T X.
+    from ..kernels import ref
+    from ..model import rmsnorm, attention_block, Projector
+
+    norms = {mod: [np.zeros(0)] * cfg.n_layers for mod in DENSE_MODULES}
+    hess = {mod: [None] * cfg.n_layers for mod in DENSE_MODULES}
+
+    def upd(module, layer, x):
+        x2 = np.asarray(x, dtype=np.float64).reshape(-1, x.shape[-1])
+        nrm = np.sqrt((x2 ** 2).sum(axis=0))
+        if norms[module][layer].size == 0:
+            norms[module][layer] = nrm ** 2
+            hess[module][layer] = x2.T @ x2
+        else:
+            norms[module][layer] += nrm ** 2
+            hess[module][layer] += x2.T @ x2
+
+    for tokens in batches:
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = params["embed"][tokens]
+        for layer in range(cfg.n_layers):
+            proj = Projector(cfg, "dense", False, layer=layer)
+            h = rmsnorm(x, params["ln_attn"][layer], cfg.rmsnorm_eps)
+            for mod in ("q_proj", "k_proj", "v_proj"):
+                upd(mod, layer, h)
+            a, _ = attention_block(cfg, proj, params, layer, h, pos)
+            q = ref.rope((h @ params["wq"][layer]).reshape(
+                b, s, cfg.n_q_heads, cfg.head_dim), pos, cfg.rope_theta)
+            k = ref.rope((h @ params["wk"][layer]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim), pos, cfg.rope_theta)
+            v = (h @ params["wv"][layer]).reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            o_in = ref.causal_attention(q, k, v).reshape(b, s, cfg.q_dim)
+            upd("o_proj", layer, o_in)
+            x = x + a
+            h = rmsnorm(x, params["ln_mlp"][layer], cfg.rmsnorm_eps)
+            upd("gate_proj", layer, h)
+            upd("up_proj", layer, h)
+            g = h @ params["wg"][layer]
+            u = h @ params["wu"][layer]
+            hh = jax.nn.silu(g) * u
+            upd("down_proj", layer, hh)
+            x = x + hh @ params["wd"][layer]
+
+    for mod in DENSE_MODULES:
+        for layer in range(cfg.n_layers):
+            norms[mod][layer] = np.sqrt(norms[mod][layer])
+
+    # gradients for prunerzero
+    grad_fn = jax.grad(lambda p, t: loss_fn(p, t))
+    grads = None
+    for tokens in batches:
+        g = grad_fn(params, tokens)
+        if grads is None:
+            grads = {k: np.asarray(v, dtype=np.float64)
+                     for k, v in g.items()}
+        else:
+            for k2, v in g.items():
+                grads[k2] += np.asarray(v, dtype=np.float64)
+    return dict(norms=norms, hess=hess, grads=grads)
+
+
+def prune_model_weights(cfg, params, calib, method, n, m):
+    """Return a new params dict with every linear projection N:M
+    weight-pruned by ``method``."""
+    p = dict(params)
+    for module in DENSE_MODULES:
+        wname = WMAP[module]
+        pruned = []
+        for layer in range(cfg.n_layers):
+            w = p[wname][layer]
+            if method == "magnitude":
+                pw = magnitude_prune(w, n, m)
+            elif method == "wanda":
+                pw = wanda_prune(w, jnp.asarray(
+                    calib["norms"][module][layer], jnp.float32), n, m)
+            elif method == "sparsegpt":
+                pw = sparsegpt_prune(w, calib["hess"][module][layer], n, m)
+            elif method == "prunerzero":
+                g = jnp.asarray(calib["grads"][wname][layer], jnp.float32)
+                pw = prunerzero_prune(w, g, n, m)
+            else:
+                raise ValueError(method)
+            pruned.append(pw)
+        p[wname] = jnp.stack(pruned)
+    return p

@@ -1,0 +1,498 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + weights files.
+
+This is the single build-time entrypoint (`make artifacts`). It:
+
+  1. trains (or loads cached) tiny models;
+  2. runs the offline Amber Pruner pipeline: Robust-Norm scales (Eq. 3-5),
+     sensitivity sweep (Eq. 8) -> skip sets, SmoothQuant/Outstanding-sparse
+     folding (Eq. 9, inverted, alpha=0.10) and W8A8 PTQ;
+  3. lowers every (model x variant x ratio x shape) graph to HLO **text**
+     (jax >= 0.5 emits protos with 64-bit ids that xla_extension 0.5.1
+     rejects; the text parser reassigns ids — see aot recipe);
+  4. emits weights (.atw), aux-setting files, eval datasets, distribution
+     stats (Fig 2/3/4, Appendix C) and manifest.json for the rust runtime.
+
+Everything is cached: artifacts whose config hash matches are skipped.
+
+Usage:  cd python && python -m compile.aot [--out ../artifacts] [--quick]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus, evalgen, params_io
+from . import model as model_mod
+from . import model_moe as moe_mod
+from .amber import quant as quant_mod
+from .amber import scoring, sensitivity, smoothquant
+from .amber import weight_sparsity
+from .configs import MODELS, RATIOS, SHAPES, SKIP_COUNTS, DENSE_MODULES
+
+SETTINGS = ("naive", "ls", "all")  # naive top-k / +layer-skip / +robust
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_of(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype),
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# graph builders (bundle, *runtime_inputs) -> outputs tuple
+# ---------------------------------------------------------------------------
+
+def build_prefill_fn(cfg, variant, nm, is_moe, static_quantized=None):
+    def fn(bundle, tokens):
+        params = bundle["params"]
+        aux = bundle.get("aux")
+        qparams = None
+        if variant in ("sq", "sq_nm"):
+            qparams = dict(wq=bundle["qwq"], w_scale=bundle["qws"],
+                           x_scale=bundle["qxs"],
+                           quantized=static_quantized)
+        if is_moe:
+            logits, ks, vs = moe_mod.forward(
+                cfg, params, tokens, variant=variant, nm=nm, aux=aux,
+                use_pallas=True, return_kv=True)
+        else:
+            logits, ks, vs = model_mod.forward(
+                cfg, params, tokens, variant=variant, nm=nm, aux=aux,
+                qparams=qparams, use_pallas=True, return_kv=True)
+        return (logits, ks, vs)
+    return fn
+
+
+def build_decode_fn(cfg, variant, is_moe, static_quantized=None):
+    def fn(bundle, token, pos, k_cache, v_cache, kv_len):
+        params = bundle["params"]
+        if is_moe:
+            return moe_mod.decode_step(cfg, params, token, pos, k_cache,
+                                       v_cache, kv_len)
+        qparams = None
+        if variant == "sq":
+            qparams = dict(wq=bundle["qwq"], w_scale=bundle["qws"],
+                           x_scale=bundle["qxs"],
+                           quantized=static_quantized)
+        return model_mod.decode_step(cfg, params, token, pos, k_cache,
+                                     v_cache, kv_len, variant=variant,
+                                     qparams=qparams)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# offline Amber pipeline per model
+# ---------------------------------------------------------------------------
+
+def calibration_batches(n=4, batch=8, seq=48, seed=4242):
+    rng = np.random.Generator(np.random.PCG64(seed))
+    return [jnp.asarray(corpus.pack_batch(
+        rng, corpus.WORLD,
+        ("grammar_a", "facts_a", "arith", "boolean", "kv_recall"),
+        batch, seq)) for _ in range(n)]
+
+
+def build_settings(cfg, params, nm, is_moe, n_skip, calib_tokens):
+    """Aux tensors for each Table-1 setting + the sensitivity report."""
+    errs = sensitivity.sensitivity_sweep(cfg, params, calib_tokens, nm,
+                                         is_moe=is_moe)
+    skip_layers = sensitivity.select_skip_layers(errs, n_skip)
+    keep_policy = sensitivity.build_keep_dense(cfg, skip_layers)
+    keep_naive = sensitivity.build_keep_dense(cfg, [], no_skip=True)
+    base_aux = moe_mod.moe_aux(cfg) if is_moe else model_mod.default_aux(cfg)
+
+    def with_keep(aux, keep):
+        a = dict(aux)
+        a["keep_dense"] = keep
+        return a
+
+    settings = {
+        "naive": with_keep(base_aux, keep_naive),
+        "ls": with_keep(base_aux, keep_policy),
+    }
+    if not is_moe:  # Robust-Norm Scoring is N/A for MoE (paper)
+        robust = dict(base_aux)
+        robust.update(scoring.build_aux_scales(cfg, params, "robust"))
+        settings["all"] = with_keep(robust, keep_policy)
+    return settings, errs, skip_layers
+
+
+# ---------------------------------------------------------------------------
+# emission helpers
+# ---------------------------------------------------------------------------
+
+class Emitter:
+    def __init__(self, outdir, quick=False):
+        self.outdir = outdir
+        self.quick = quick
+        self.manifest = {"artifacts": {}, "models": {}, "settings": {}}
+        # merge with an existing manifest so `--models X` incremental runs
+        # don't drop the other models' entries
+        prev = os.path.join(outdir, "manifest.json")
+        if os.path.exists(prev):
+            try:
+                with open(prev) as f:
+                    old = json.load(f)
+                for k in ("artifacts", "models", "settings"):
+                    self.manifest[k].update(old.get(k, {}))
+            except (json.JSONDecodeError, OSError):
+                pass
+        os.makedirs(outdir, exist_ok=True)
+        os.makedirs(os.path.join(outdir, "hlo"), exist_ok=True)
+        os.makedirs(os.path.join(outdir, "weights"), exist_ok=True)
+        os.makedirs(os.path.join(outdir, "eval"), exist_ok=True)
+        os.makedirs(os.path.join(outdir, "stats"), exist_ok=True)
+
+    def lower_artifact(self, name, fn, bundle, runtime_specs, outputs_doc,
+                       static_doc):
+        """Lower fn(bundle, *runtime) and write hlo + manifest entry."""
+        t0 = time.time()
+        hlo_path = os.path.join(self.outdir, "hlo", f"{name}.hlo.txt")
+        # keep_unused: the weights file ships every bundle tensor, so the
+        # executable must keep the full parameter list even when a skip
+        # policy leaves some (e.g. down_proj quant tensors) unused.
+        lowered = jax.jit(fn, keep_unused=True).lower(
+            spec_of(bundle), *runtime_specs)
+        text = to_hlo_text(lowered)
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        flat = params_io.flatten_for_artifact(bundle)
+        self.manifest["artifacts"][name] = dict(
+            hlo=f"hlo/{name}.hlo.txt",
+            params=[n for n, _ in flat],
+            runtime_inputs=[dict(shape=list(s.shape), dtype=str(s.dtype))
+                            for s in runtime_specs],
+            outputs=outputs_doc,
+            static=static_doc,
+        )
+        print(f"  lowered {name} ({len(text)/1e6:.1f} MB, "
+              f"{time.time()-t0:.1f}s)", flush=True)
+
+    def write_bundle(self, fname, bundle):
+        flat = params_io.flatten_for_artifact(bundle)
+        params_io.write_weights(
+            os.path.join(self.outdir, "weights", fname), flat)
+        return [n for n, _ in flat]
+
+
+def emit_model(em: Emitter, name: str):
+    from . import train as train_mod
+
+    cfg, tc = MODELS[name]
+    is_moe = cfg.is_moe
+    print(f"[{name}] pipeline start", flush=True)
+    params = train_mod.get_or_train(name)
+    calib = calibration_batches()
+    calib_tokens = calib[0]
+
+    S, B = SHAPES.prefill_seq, SHAPES.prefill_batch
+    LS, LB = SHAPES.long_seq, SHAPES.long_batch
+    C, DB = SHAPES.decode_cache, SHAPES.decode_batch
+    ratios = RATIOS if not em.quick else [RATIOS[0]]
+
+    # ---- sensitivity + per-setting aux (use the middle ratio 4:8 for the
+    # sweep, as sensitivity ordering is ratio-stable) ----
+    settings, errs, skip_layers = build_settings(
+        cfg, params, (4, 8), is_moe, SKIP_COUNTS[name], calib_tokens)
+    cov = sensitivity.coverage(cfg, settings["ls"]["keep_dense"], is_moe)
+    sensitivity.export_report(
+        os.path.join(em.outdir, "stats", f"sensitivity_{name}.json"),
+        name, (4, 8), errs, skip_layers, cov)
+    print(f"  skip_layers={skip_layers} coverage={cov:.3f}", flush=True)
+
+    # ---- weights + aux files ----
+    em.write_bundle(f"{name}.atw", dict(params=params))
+    for sname, aux in settings.items():
+        em.write_bundle(f"{name}.aux_{sname}.atw", dict(aux=aux))
+    # dense aux (keep everything) so the nm executable can also serve dense
+    dense_aux = dict(settings["ls"])
+    dense_aux["keep_dense"] = jnp.ones_like(settings["ls"]["keep_dense"])
+    em.write_bundle(f"{name}.aux_dense.atw", dict(aux=dense_aux))
+    em.manifest["settings"][name] = dict(
+        settings=list(settings) + ["dense"],
+        skip_layers=skip_layers, coverage=cov,
+        sensitivity=f"stats/sensitivity_{name}.json")
+
+    # ---- fp artifacts ----
+    tok_spec = jax.ShapeDtypeStruct((B, S), np.int32)
+    ltok_spec = jax.ShapeDtypeStruct((LB, LS), np.int32)
+    aux0 = settings["ls"]
+    kv_doc = ["logits", "k_cache", "v_cache"]
+
+    em.lower_artifact(
+        f"{name}.prefill{S}.dense", build_prefill_fn(cfg, "dense", None,
+                                                     is_moe),
+        dict(params=params), [tok_spec], kv_doc,
+        dict(kind="prefill", variant="dense", batch=B, seq=S))
+    em.lower_artifact(
+        f"{name}.prefill{LS}.dense", build_prefill_fn(cfg, "dense", None,
+                                                      is_moe),
+        dict(params=params), [ltok_spec], kv_doc,
+        dict(kind="prefill", variant="dense", batch=LB, seq=LS))
+    for (n, m) in ratios:
+        em.lower_artifact(
+            f"{name}.prefill{S}.nm{n}_{m}",
+            build_prefill_fn(cfg, "nm", (n, m), is_moe),
+            dict(params=params, aux=aux0), [tok_spec], kv_doc,
+            dict(kind="prefill", variant="nm", n=n, m=m, batch=B, seq=S))
+        em.lower_artifact(
+            f"{name}.prefill{LS}.nm{n}_{m}",
+            build_prefill_fn(cfg, "nm", (n, m), is_moe),
+            dict(params=params, aux=aux0), [ltok_spec], kv_doc,
+            dict(kind="prefill", variant="nm", n=n, m=m, batch=LB, seq=LS))
+
+    dec_specs = [
+        jax.ShapeDtypeStruct((DB,), np.int32),
+        jax.ShapeDtypeStruct((DB,), np.int32),
+        jax.ShapeDtypeStruct((cfg.n_layers, DB, C, cfg.n_kv_heads,
+                              cfg.head_dim), np.float32),
+        jax.ShapeDtypeStruct((cfg.n_layers, DB, C, cfg.n_kv_heads,
+                              cfg.head_dim), np.float32),
+        jax.ShapeDtypeStruct((DB,), np.int32),
+    ]
+    em.lower_artifact(
+        f"{name}.decode.dense", build_decode_fn(cfg, "dense", is_moe),
+        dict(params=params), dec_specs, ["logits", "k_cache", "v_cache"],
+        dict(kind="decode", variant="dense", batch=DB, cache=C))
+
+    # ---- Outstanding-sparse (W8A8) pipeline: dense models only ----
+    if not is_moe and not em.quick:
+        stats = quant_mod.collect_activation_stats(cfg, params, calib,
+                                                   None)
+        act_stats = {m: [stats[m][li]["absmax"]
+                         for li in range(cfg.n_layers)]
+                     for m in DENSE_MODULES}
+        sq_params, applied = smoothquant.smooth_model(
+            cfg, params, act_stats, alpha=0.10, inverted=True)
+        # recalibrate on the smoothed model, then quantize
+        stats_sq = quant_mod.collect_activation_stats(cfg, sq_params,
+                                                      calib, None)
+        qp = quant_mod.build_qparams(cfg, sq_params, stats_sq, name)
+        static_q = {m: qp["quantized"][m] for m in DENSE_MODULES}
+        q_bundle_tensors = dict(
+            qwq={m: qp["wq"][m] for m in DENSE_MODULES},
+            qws={m: qp["w_scale"][m] for m in DENSE_MODULES},
+            qxs={m: jnp.asarray(qp["x_scale"][m]) for m in DENSE_MODULES},
+        )
+        # robust scales recomputed on the smoothed weights
+        sq_settings, sq_errs, sq_skip = build_settings(
+            cfg, sq_params, (4, 8), is_moe, SKIP_COUNTS[name], calib_tokens)
+        em.write_bundle(f"{name}.sq.atw",
+                        dict(params=sq_params, **q_bundle_tensors))
+        for sname, aux in sq_settings.items():
+            em.write_bundle(f"{name}.sq.aux_{sname}.atw", dict(aux=aux))
+
+        # distribution stats for Fig 3/4 (pre/post adjustment)
+        export_sq_stats(em, name, cfg, params, sq_params, calib_tokens)
+
+        sq_bundle = dict(params=sq_params, **q_bundle_tensors)
+        em.lower_artifact(
+            f"{name}.prefill{S}.sq", build_prefill_fn(
+                cfg, "sq", None, is_moe, static_q),
+            sq_bundle, [tok_spec], kv_doc,
+            dict(kind="prefill", variant="sq", batch=B, seq=S))
+        em.lower_artifact(
+            f"{name}.prefill{LS}.sq", build_prefill_fn(
+                cfg, "sq", None, is_moe, static_q),
+            sq_bundle, [ltok_spec], kv_doc,
+            dict(kind="prefill", variant="sq", batch=LB, seq=LS))
+        sq_nm_bundle = dict(params=sq_params, aux=sq_settings["ls"],
+                            **q_bundle_tensors)
+        for (n, m) in ratios:
+            em.lower_artifact(
+                f"{name}.prefill{S}.sq_nm{n}_{m}",
+                build_prefill_fn(cfg, "sq_nm", (n, m), is_moe, static_q),
+                sq_nm_bundle, [tok_spec], kv_doc,
+                dict(kind="prefill", variant="sq_nm", n=n, m=m,
+                     batch=B, seq=S))
+            em.lower_artifact(
+                f"{name}.prefill{LS}.sq_nm{n}_{m}",
+                build_prefill_fn(cfg, "sq_nm", (n, m), is_moe, static_q),
+                sq_nm_bundle, [ltok_spec], kv_doc,
+                dict(kind="prefill", variant="sq_nm", n=n, m=m,
+                     batch=LB, seq=LS))
+        em.lower_artifact(
+            f"{name}.decode.sq", build_decode_fn(cfg, "sq", is_moe,
+                                                 static_q),
+            sq_bundle, dec_specs, ["logits", "k_cache", "v_cache"],
+            dict(kind="decode", variant="sq", batch=DB, cache=C))
+
+    # ---- weight-sparsity baseline weights (Appendix A) ----
+    if name == "tiny-lm-a" and not em.quick:
+        wcal = weight_sparsity.collect_weight_calibration(
+            cfg, params, calib,
+            lambda p, t: model_mod.loss_fn(cfg, p, t))
+        for method in ("magnitude", "wanda", "sparsegpt", "prunerzero"):
+            for (n, m) in ((2, 4), (4, 8)):
+                wp = weight_sparsity.prune_model_weights(
+                    cfg, params, wcal, method, n, m)
+                em.write_bundle(f"{name}.wsp_{method}_{n}_{m}.atw",
+                                dict(params=wp))
+        em.manifest["models"].setdefault(name, {})["weight_sparsity"] = [
+            f"{name}.wsp_{method}_{n}_{m}.atw"
+            for method in ("magnitude", "wanda", "sparsegpt", "prunerzero")
+            for (n, m) in ((2, 4), (4, 8))]
+
+    # activation/weight distribution stats for Fig 2 + Appendix C
+    export_distribution_stats(em, name, cfg, params, calib_tokens, is_moe)
+
+    md = em.manifest["models"].setdefault(name, {})
+    md.update(dict(
+        config={k: getattr(cfg, k) for k in (
+            "vocab_size", "d_model", "n_layers", "n_q_heads", "n_kv_heads",
+            "head_dim", "d_ff", "n_experts", "top_k_experts",
+            "d_ff_expert")},
+        weights=f"weights/{name}.atw",
+        is_moe=is_moe,
+    ))
+
+
+def export_distribution_stats(em, name, cfg, params, tokens, is_moe):
+    """Fig 2 (activation vs weight near-zero mass) + Appendix C heatstats."""
+    from .model import rmsnorm
+
+    layer = cfg.n_layers // 2
+    x = params["embed"][tokens]
+    # run to the chosen layer with the reference path
+    mod = moe_mod if is_moe else model_mod
+    # capture gate_proj input at `layer` by a manual partial forward
+    from .amber.quant import collect_activation_stats
+    stats = {}
+    h = None
+    xs = {}
+    bx = x
+    pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None, :],
+                           tokens.shape)
+    from .model import Projector, attention_block
+    for li in range(layer + 1):
+        proj = Projector(cfg, "dense", False, layer=li)
+        hh = rmsnorm(bx, params["ln_attn"][li], cfg.rmsnorm_eps)
+        if is_moe:
+            a, _ = attention_block(cfg, proj, params, li, hh, pos)
+            bx = bx + a
+            hh2 = rmsnorm(bx, params["ln_mlp"][li], cfg.rmsnorm_eps)
+            if li == layer:
+                xs["gate_proj"] = hh2
+                xs["q_proj"] = hh
+            bx = bx + moe_mod.moe_block(cfg, params, li, hh2, None,
+                                        moe_mod.moe_aux(cfg), False)
+        else:
+            a, _ = attention_block(cfg, proj, params, li, hh, pos)
+            bx = bx + a
+            hh2 = rmsnorm(bx, params["ln_mlp"][li], cfg.rmsnorm_eps)
+            if li == layer:
+                xs["gate_proj"] = hh2
+                xs["q_proj"] = hh
+            g = hh2 @ params["wg"][li]
+            u = hh2 @ params["wu"][li]
+            hmid = jax.nn.silu(g) * u
+            if li == layer:
+                xs["down_proj"] = hmid
+                o_in_dummy = None
+            bx = bx + hmid @ params["wd"][li]
+
+    def tensor_stats(t):
+        t = np.asarray(t).reshape(-1)
+        amax = float(np.abs(t).max()) + 1e-12
+        hist, edges = np.histogram(np.abs(t) / amax, bins=20,
+                                   range=(0, 1))
+        return dict(
+            near_zero_frac=float(np.mean(np.abs(t) < 0.05 * amax)),
+            absmax=amax,
+            hist=hist.tolist(),
+        )
+
+    w_gate = (params["we_g"][layer, 0] if is_moe else params["wg"][layer])
+    out = dict(
+        model=name, layer=layer,
+        activation_gate=tensor_stats(xs["gate_proj"]),
+        weight_gate=tensor_stats(w_gate),
+        activation_q=tensor_stats(xs["q_proj"]),
+        modules={},
+    )
+    if not is_moe:
+        out["activation_down"] = tensor_stats(xs["down_proj"])
+    with open(os.path.join(em.outdir, "stats", f"dist_{name}.json"),
+              "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def export_sq_stats(em, name, cfg, params, sq_params, tokens):
+    """Fig 3/4: activation/weight ranges pre/post Outstanding-sparse."""
+    from .model import rmsnorm
+    layer = cfg.n_layers // 2
+
+    def gate_input(p):
+        x = p["embed"][tokens]
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None, :],
+                               tokens.shape)
+        from .model import Projector, attention_block
+        for li in range(layer + 1):
+            proj = Projector(cfg, "dense", False, layer=li)
+            h = rmsnorm(x, p["ln_attn"][li], cfg.rmsnorm_eps)
+            a, _ = attention_block(cfg, proj, p, li, h, pos)
+            x = x + a
+            h2 = rmsnorm(x, p["ln_mlp"][li], cfg.rmsnorm_eps)
+            if li == layer:
+                return h2
+            g = h2 @ p["wg"][li]
+            u = h2 @ p["wu"][li]
+            x = x + (jax.nn.silu(g) * u) @ p["wd"][li]
+
+    def chan_absmax(t):
+        return np.asarray(jnp.max(jnp.abs(t.reshape(-1, t.shape[-1])),
+                                  axis=0)).tolist()
+
+    pre_x = gate_input(params)
+    post_x = gate_input(sq_params)
+    out = dict(
+        model=name, layer=layer, alpha=0.10,
+        pre=dict(act_absmax=chan_absmax(pre_x),
+                 w_absmax=np.abs(np.asarray(
+                     params["wg"][layer])).max(axis=1).tolist()),
+        post=dict(act_absmax=chan_absmax(post_x),
+                  w_absmax=np.abs(np.asarray(
+                      sq_params["wg"][layer])).max(axis=1).tolist()),
+    )
+    with open(os.path.join(em.outdir, "stats", f"sq_dist_{name}.json"),
+              "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quick", action="store_true",
+                    help="single ratio, fp only, tiny-lm-a only (CI smoke)")
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+
+    em = Emitter(os.path.abspath(args.out), quick=args.quick)
+    names = args.models or (["tiny-lm-a"] if args.quick else list(MODELS))
+    for name in names:
+        emit_model(em, name)
+    evalgen.emit_all(os.path.join(em.outdir, "eval"),
+                     n_samples=32 if args.quick else evalgen.N_SAMPLES)
+    em.manifest["shapes"] = SHAPES.__dict__
+    params_io.write_manifest(os.path.join(em.outdir, "manifest.json"),
+                             em.manifest)
+    print("manifest written", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Model / training / artifact configuration for the reproduction.
+
+The paper evaluates LLaMA3.1-8B-Instruct, Qwen2-7B-Instruct and the MoE
+Qwen3-30B-A3B on 8x Ascend 910B. This environment is a single CPU core, so
+we substitute three *architecturally faithful* tiny models trained from
+scratch on a structured synthetic corpus (see DESIGN.md §2):
+
+  * ``tiny-lm-a``  — LLaMA3.1-8B analogue  (dense, GQA, RoPE, SwiGLU)
+  * ``tiny-lm-b``  — Qwen2-7B analogue     (dense, different width/seed,
+                       trained on the extra "B-subspace" fact corpus so it
+                       has a CEVAL-analogue column)
+  * ``tiny-moe``   — Qwen3-30B-A3B analogue (top-2-of-4-expert MoE MLP)
+
+Module topology matches the paper exactly: q/k/v/o projections in
+attention (GQA so k/v are cheap, which drives the skip policy) and
+gate/up/down in the MLP.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int = 384
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 352
+    rope_theta: float = 10000.0
+    rmsnorm_eps: float = 1e-5
+    # MoE (ignored when n_experts == 0)
+    n_experts: int = 0
+    top_k_experts: int = 2
+    d_ff_expert: int = 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def n_params(self) -> int:
+        """Exact parameter count (embeddings untied)."""
+        d = self.d_model
+        emb = 2 * self.vocab_size * d
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        norms = 2 * d * self.n_layers + d
+        return emb + self.n_layers * (attn + mlp) + norms
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seed: int = 0
+    steps: int = 2200
+    batch_size: int = 16
+    seq_len: int = 48
+    lr: float = 2e-3
+    warmup: int = 80
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    log_every: int = 50
+    # long-context fine-tuning phase: teaches positions the prefill256
+    # artifacts serve (LongBench analogues) — seq_len alone would leave
+    # RoPE positions > 48 out of distribution.
+    long_steps: int = 300
+    long_batch: int = 4
+    long_seq: int = 192
+    # which corpus skills this model is trained on (see corpus.SKILLS)
+    skills: tuple = (
+        "grammar_a", "facts_a", "facts_hop2", "arith", "chain",
+        "copy", "induction", "boolean", "entail", "select",
+        "sort", "kv_recall",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Presets. Sized for a single-CPU-core environment; topology mirrors the
+# paper's models (GQA with few kv heads, SwiGLU MLP, RMSNorm, RoPE).
+# ---------------------------------------------------------------------------
+
+# GQA ratio 4 (LLaMA3.1-8B uses 32q/8kv) and ffn ratio 4 match the
+# paper's models' FLOPs *shares*, so the same skip policy lands the same
+# ">55% of linear computation accelerated" coverage (see DESIGN.md).
+# Sizes are bounded by the single-CPU-core training budget.
+TINY_LM_A = ModelConfig(
+    name="tiny-lm-a", d_model=96, n_layers=6, n_q_heads=3, n_kv_heads=1,
+    head_dim=32, d_ff=384,
+)
+
+TINY_LM_B = ModelConfig(
+    name="tiny-lm-b", d_model=112, n_layers=6, n_q_heads=4, n_kv_heads=1,
+    head_dim=28, d_ff=448,
+)
+
+TINY_MOE = ModelConfig(
+    name="tiny-moe", d_model=96, n_layers=4, n_q_heads=3, n_kv_heads=1,
+    head_dim=32, d_ff=0, n_experts=4, top_k_experts=2, d_ff_expert=160,
+)
+
+TRAIN_A = TrainConfig(seed=1)
+TRAIN_B = TrainConfig(
+    seed=2,
+    skills=(
+        "grammar_a", "grammar_b", "facts_a", "facts_b", "facts_hop2",
+        "arith", "chain", "copy", "induction", "boolean", "entail",
+        "select", "sort", "kv_recall",
+    ),
+)
+TRAIN_MOE = TrainConfig(seed=3, steps=1200)
+
+MODELS = {
+    "tiny-lm-a": (TINY_LM_A, TRAIN_A),
+    "tiny-lm-b": (TINY_LM_B, TRAIN_B),
+    "tiny-moe": (TINY_MOE, TRAIN_MOE),
+}
+
+# Number of layers where q_proj/gate_proj are skipped (paper skips 5/32,
+# 5/28 and 3/48 layers; at our depth that rounds to 1, 1 and 0). Chosen so
+# coverage of linear FLOPs lands >55% like the paper's setups.
+SKIP_COUNTS = {"tiny-lm-a": 1, "tiny-lm-b": 1, "tiny-moe": 0}
+
+# The paper's three evaluated models map onto ours:
+PAPER_MODEL_MAP = {
+    "LLaMA3.1-8B": "tiny-lm-a",
+    "Qwen2-7B": "tiny-lm-b",
+    "Qwen3-30B-A3B": "tiny-moe",
+}
+
+
+@dataclass(frozen=True)
+class ArtifactShapes:
+    """Static shapes baked into the AOT-lowered executables."""
+    prefill_batch: int = 8
+    prefill_seq: int = 64
+    long_batch: int = 2
+    long_seq: int = 256
+    decode_batch: int = 8
+    decode_cache: int = 320  # long_seq + generation headroom
+
+
+SHAPES = ArtifactShapes()
+
+# Sparsity ratios evaluated in the paper (N, M).
+RATIOS = [(2, 4), (4, 8), (8, 16)]
+
+# Linear-projection module names, in paper order.
+DENSE_MODULES = ("q_proj", "k_proj", "v_proj", "o_proj",
+                 "gate_proj", "up_proj", "down_proj")
+MOE_MODULES = ("q_proj", "k_proj", "v_proj", "o_proj",
+               "gate_proj", "up_proj", "down_proj")  # expert mlps share names
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    return asdict(cfg)

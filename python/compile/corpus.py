@@ -1,0 +1,280 @@
+"""Synthetic training corpus + task world.
+
+A deterministic "world" (fact tables, grammar transition matrices) is
+shared between the training corpus and the downstream-task generators in
+``evalgen.py`` so that the tasks actually measure what the model learned.
+
+Skills (each maps onto one of the paper's benchmark analogues):
+
+    grammar_a / grammar_b   sparse first-order Markov grammar over word
+                            subspaces A / B (general language statistics)
+    facts_a                 one-hop relational facts  E_i r E_j  (MMLU)
+    facts_b                 one-hop facts over relations R8..R15 (CEVAL)
+    facts_hop2              two-hop composition  E_i r1 <then> r2 E_k (OBQA)
+    arith                   single-step digit arithmetic mod 10
+    chain                   chained 3-operand arithmetic with worked
+                            intermediate step (GSM8K analogue, CoT style)
+    copy                    delimited copy of a word span
+    induction               periodic pattern continuation (ARC-E/ARC-C)
+    boolean                 digit comparison -> TRUE/FALSE (BoolQ)
+    entail                  premise/hypothesis consistency -> YES/NO (RTE)
+    select                  positional selection <sel1>/<sel2> (Winogrande)
+    sort                    3-digit sorting (PIQA physical-ordering analogue)
+    kv_recall               long-context key/value recall (LongBench)
+"""
+
+import numpy as np
+
+from . import tokenizer as tok
+
+WORLD_SEED = 7_777_777
+
+
+class World:
+    """Deterministic relational / grammatical world shared by train + eval."""
+
+    def __init__(self, seed: int = WORLD_SEED):
+        rng = np.random.Generator(np.random.PCG64(seed))
+        # one-hop fact tables: for each relation, a random permutation-ish
+        # mapping entity -> entity (random with replacement, fixed).
+        self.fact = rng.integers(0, tok.N_ENTS, size=(tok.N_RELS, tok.N_ENTS))
+        # grammar transition: each word allows 4 successors
+        self.gram_a = rng.integers(0, tok.N_WORDS_A, size=(tok.N_WORDS_A, 4))
+        self.gram_b = rng.integers(0, tok.N_WORDS_B, size=(tok.N_WORDS_B, 4))
+
+    def hop2(self, e: int, r1: int, r2: int) -> int:
+        return int(self.fact[r2, self.fact[r1, e]])
+
+
+WORLD = World()
+
+
+# ---------------------------------------------------------------------------
+# Skill sentence generators. Each returns a list[int] token sentence
+# (no BOS/EOS; the packer adds separators).
+# ---------------------------------------------------------------------------
+
+def gen_grammar_a(rng, world):
+    n = int(rng.integers(6, 14))
+    w = int(rng.integers(0, tok.N_WORDS_A))
+    out = [tok.word_a(w)]
+    for _ in range(n - 1):
+        w = int(world.gram_a[w, rng.integers(0, 4)])
+        out.append(tok.word_a(w))
+    return out
+
+
+def gen_grammar_b(rng, world):
+    n = int(rng.integers(6, 14))
+    w = int(rng.integers(0, tok.N_WORDS_B))
+    out = [tok.word_b(w)]
+    for _ in range(n - 1):
+        w = int(world.gram_b[w, rng.integers(0, 4)])
+        out.append(tok.word_b(w))
+    return out
+
+
+def _fact_sentence(rng, world, rel_lo, rel_hi):
+    r = int(rng.integers(rel_lo, rel_hi))
+    e = int(rng.integers(0, tok.N_ENTS))
+    t = int(world.fact[r, e])
+    if rng.random() < 0.5:
+        # declarative
+        return [tok.ent(e), tok.rel(r), tok.ent(t)]
+    # query form (same one the eval tasks use)
+    return [tok.QRY, tok.ent(e), tok.rel(r), tok.ANS, tok.ent(t)]
+
+
+def gen_facts_a(rng, world):
+    return _fact_sentence(rng, world, 0, 8)
+
+
+def gen_facts_b(rng, world):
+    return _fact_sentence(rng, world, 8, 16)
+
+
+def gen_facts_hop2(rng, world):
+    r1 = int(rng.integers(0, 8))
+    r2 = int(rng.integers(0, 8))
+    e = int(rng.integers(0, tok.N_ENTS))
+    t = world.hop2(e, r1, r2)
+    if rng.random() < 0.4:
+        return [tok.ent(e), tok.rel(r1), tok.THEN, tok.rel(r2), tok.ent(t)]
+    return [tok.QRY, tok.ent(e), tok.rel(r1), tok.THEN, tok.rel(r2),
+            tok.ANS, tok.ent(t)]
+
+
+_OPS = [(tok.PLUS, lambda a, b: (a + b) % 10),
+        (tok.MINUS, lambda a, b: (a - b) % 10),
+        (tok.TIMES, lambda a, b: (a * b) % 10)]
+
+
+def gen_arith(rng, world):
+    a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    op_t, op_f = _OPS[int(rng.integers(0, 3))]
+    return [tok.digit(a), op_t, tok.digit(b), tok.EQ, tok.digit(op_f(a, b))]
+
+
+def chain_example(rng):
+    """QRY a op1 b op2 c ANS t f — evaluated left-to-right mod 10,
+    t = a op1 b (worked intermediate), f = t op2 c (final answer)."""
+    a, b, c = (int(rng.integers(0, 10)) for _ in range(3))
+    i1, i2 = int(rng.integers(0, 3)), int(rng.integers(0, 3))
+    (t1, f1), (t2, f2) = _OPS[i1], _OPS[i2]
+    t = f1(a, b)
+    f = f2(t, c)
+    toks = [tok.QRY, tok.digit(a), t1, tok.digit(b), t2, tok.digit(c),
+            tok.ANS, tok.digit(t), tok.digit(f)]
+    return toks, t, f
+
+
+def gen_chain(rng, world):
+    toks, _, _ = chain_example(rng)
+    return toks
+
+
+def gen_copy(rng, world):
+    n = int(rng.integers(3, 7))
+    span = [tok.word_a(int(rng.integers(0, tok.N_WORDS_A))) for _ in range(n)]
+    return [tok.SEP] + span + [tok.SEP] + span
+
+
+def gen_induction(rng, world):
+    period = int(rng.integers(2, 5))
+    motif = [tok.word_a(int(rng.integers(0, tok.N_WORDS_A)))
+             for _ in range(period)]
+    reps = int(rng.integers(3, 5))
+    return motif * reps
+
+
+def gen_boolean(rng, world):
+    a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    use_lt = rng.random() < 0.5
+    cmp_t = tok.LT if use_lt else tok.GT
+    truth = (a < b) if use_lt else (a > b)
+    return [tok.digit(a), cmp_t, tok.digit(b), tok.QRY,
+            tok.TRUE if truth else tok.FALSE]
+
+
+def gen_entail(rng, world):
+    a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    while b == a:
+        b = int(rng.integers(0, 10))
+    lo, hi = min(a, b), max(a, b)
+    # premise: lo < hi  (or hi > lo)
+    if rng.random() < 0.5:
+        prem = [tok.digit(lo), tok.LT, tok.digit(hi)]
+    else:
+        prem = [tok.digit(hi), tok.GT, tok.digit(lo)]
+    # hypothesis: either consistent or contradictory restatement
+    consistent = rng.random() < 0.5
+    if consistent:
+        hyp = [tok.digit(hi), tok.GT, tok.digit(lo)] if rng.random() < 0.5 \
+            else [tok.digit(lo), tok.LT, tok.digit(hi)]
+    else:
+        hyp = [tok.digit(lo), tok.GT, tok.digit(hi)] if rng.random() < 0.5 \
+            else [tok.digit(hi), tok.LT, tok.digit(lo)]
+    return prem + [tok.SEP] + hyp + [tok.QRY, tok.YES if consistent else tok.NO]
+
+
+def gen_select(rng, world):
+    ea, eb = int(rng.integers(0, tok.N_ENTS)), int(rng.integers(0, tok.N_ENTS))
+    first = rng.random() < 0.5
+    sel = tok.SEL1 if first else tok.SEL2
+    answer = ea if first else eb
+    return [tok.ent(ea), tok.COMMA, tok.ent(eb), sel, tok.ANS, tok.ent(answer)]
+
+
+def gen_sort(rng, world):
+    d = sorted(int(rng.integers(0, 10)) for _ in range(3))
+    shuf = list(d)
+    rng.shuffle(shuf)
+    return ([tok.digit(x) for x in shuf] + [tok.SORT]
+            + [tok.digit(x) for x in d])
+
+
+def gen_kv_recall(rng, world, n_pairs=None):
+    n = int(rng.integers(4, 10)) if n_pairs is None else n_pairs
+    keys = rng.choice(tok.N_KEYS, size=n, replace=False)
+    vals = rng.integers(0, 10, size=n)
+    out = []
+    for k, v in zip(keys, vals):
+        out += [tok.key(int(k)), tok.digit(int(v))]
+    q = int(rng.integers(0, n))
+    out += [tok.QRY, tok.key(int(keys[q])), tok.ANS, tok.digit(int(vals[q]))]
+    return out
+
+
+def gen_kv_recall_long(rng, world):
+    """Long-context variant (the LongBench-analogue's distribution)."""
+    return gen_kv_recall(rng, world, n_pairs=int(rng.integers(20, 45)))
+
+
+def gen_induction_long(rng, world):
+    """Motif repetition spanning a long window."""
+    period = int(rng.integers(3, 6))
+    motif = [tok.word_a(int(rng.integers(0, tok.N_WORDS_A)))
+             for _ in range(period)]
+    reps = int(rng.integers(20, 36))
+    return motif * reps
+
+
+SKILLS = {
+    "grammar_a": gen_grammar_a,
+    "grammar_b": gen_grammar_b,
+    "facts_a": gen_facts_a,
+    "facts_b": gen_facts_b,
+    "facts_hop2": gen_facts_hop2,
+    "arith": gen_arith,
+    "chain": gen_chain,
+    "copy": gen_copy,
+    "induction": gen_induction,
+    "boolean": gen_boolean,
+    "entail": gen_entail,
+    "select": gen_select,
+    "sort": gen_sort,
+    "kv_recall": gen_kv_recall,
+    "kv_recall_long": gen_kv_recall_long,
+    "induction_long": gen_induction_long,
+}
+
+# mixture for the long-context fine-tuning phase (positions the prefill256
+# artifacts serve must be in-distribution)
+LONG_SKILLS = ("kv_recall_long", "induction_long", "copy", "grammar_a",
+               "chain")
+
+# relative sampling weight per skill in the training mixture
+SKILL_WEIGHTS = {
+    "grammar_a": 1.0, "grammar_b": 1.0, "facts_a": 2.5, "facts_b": 2.5,
+    "facts_hop2": 2.0, "arith": 2.0, "chain": 3.0, "copy": 1.0,
+    "induction": 1.0, "boolean": 1.5, "entail": 1.5, "select": 1.5,
+    "sort": 1.5, "kv_recall": 2.0, "kv_recall_long": 2.0,
+    "induction_long": 1.0,
+}
+
+
+def pack_batch(rng, world, skills, batch_size, seq_len):
+    """Pack skill sentences into (batch, seq_len) int32 next-token batches.
+
+    Sentences are separated by EOS; each row starts with BOS. Loss is taken
+    on every position (standard packed LM training).
+    """
+    names = list(skills)
+    w = np.array([SKILL_WEIGHTS[n] for n in names], dtype=np.float64)
+    w /= w.sum()
+    rows = np.zeros((batch_size, seq_len), dtype=np.int32)
+    for i in range(batch_size):
+        buf = [tok.BOS]
+        while len(buf) < seq_len:
+            name = names[int(rng.choice(len(names), p=w))]
+            buf += SKILLS[name](rng, world) + [tok.EOS]
+        rows[i] = np.array(buf[:seq_len], dtype=np.int32)
+    return rows
+
+
+def training_stream(seed, skills, batch_size, seq_len):
+    """Infinite deterministic generator of packed batches."""
+    rng = np.random.Generator(np.random.PCG64(seed))
+    world = WORLD
+    while True:
+        yield pack_batch(rng, world, skills, batch_size, seq_len)

@@ -1,0 +1,296 @@
+"""Downstream-task dataset generation (the paper's benchmark analogues).
+
+Every paper benchmark maps to a synthetic task over the trained models'
+token world (DESIGN.md §2). Tasks are emitted as ``.aev`` binaries that the
+rust eval harness replays through the AOT executables — the task *logic*
+(choice construction, scoring spans) all lives here; rust only runs rows
+and sums log-probabilities.
+
+Multiple-choice scoring follows lm-eval-harness: each (context, choice)
+pair becomes one padded row; the score of a choice is the sum of token
+log-probs of the choice span given the context; the predicted choice is the
+argmax; accuracy is mean(pred == gold).
+
+Mapping (paper benchmark -> generator):
+    ARC-Easy       induction_easy     ARC-Challenge  induction_hard
+    BoolQ          boolean            MMLU           facts one-hop (A rels)
+    CEVAL          facts one-hop (B rels, tiny-lm-b only)
+    OBQA           facts two-hop      PIQA           sort (2-choice)
+    RTE            entailment         Winogrande     positional select
+    GSM8K (5-shot) chained arithmetic generation w/ worked step
+    LongBench      long-context KV recall + long induction (avg of 2)
+"""
+
+import os
+
+import numpy as np
+
+from . import tokenizer as tok
+from .corpus import WORLD, chain_example
+
+EVAL_SEED = 987_654_321
+N_SAMPLES = 200          # per task (tables); tests use fewer via arg
+SEQ = 64
+LONG_SEQ = 256
+
+
+def _rng(task_id):
+    return np.random.Generator(np.random.PCG64(EVAL_SEED + task_id))
+
+
+def _mc_rows(samples):
+    """samples: list of (ctx list[int], choices list[list[int]], gold int)
+    -> rows for write_eval_mc."""
+    rows = []
+    for sid, (ctx, choices, gold) in enumerate(samples):
+        for cid, ch in enumerate(choices):
+            toks = list(ctx) + list(ch)
+            rows.append(dict(tokens=toks, sample=sid, choice=cid,
+                             score_start=len(ctx), score_len=len(ch),
+                             gold=gold))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# multiple-choice generators
+# ---------------------------------------------------------------------------
+
+def gen_induction(rng, n, period_lo, period_hi, reps):
+    out = []
+    for _ in range(n):
+        period = int(rng.integers(period_lo, period_hi + 1))
+        motif = [tok.word_a(int(rng.integers(0, tok.N_WORDS_A)))
+                 for _ in range(period)]
+        ctx = [tok.BOS] + motif * reps + motif[:-1]
+        gold_tok = motif[-1]
+        distractors = []
+        while len(distractors) < 3:
+            w = tok.word_a(int(rng.integers(0, tok.N_WORDS_A)))
+            if w != gold_tok and w not in distractors and w not in motif:
+                distractors.append(w)
+        choices = [[gold_tok]] + [[d] for d in distractors]
+        order = rng.permutation(4)
+        gold = int(np.where(order == 0)[0][0])
+        out.append((ctx, [choices[i] for i in order], gold))
+    return out
+
+
+def task_arc_easy(rng, n):
+    return gen_induction(rng, n, 2, 2, 3)
+
+
+def task_arc_challenge(rng, n):
+    return gen_induction(rng, n, 3, 4, 2)
+
+
+def task_boolq(rng, n):
+    out = []
+    for _ in range(n):
+        a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+        use_lt = rng.random() < 0.5
+        cmp_t = tok.LT if use_lt else tok.GT
+        truth = (a < b) if use_lt else (a > b)
+        ctx = [tok.BOS, tok.digit(a), cmp_t, tok.digit(b), tok.QRY]
+        choices = [[tok.TRUE], [tok.FALSE]]
+        out.append((ctx, choices, 0 if truth else 1))
+    return out
+
+
+def _facts_mc(rng, n, rel_lo, rel_hi):
+    out = []
+    for _ in range(n):
+        r = int(rng.integers(rel_lo, rel_hi))
+        e = int(rng.integers(0, tok.N_ENTS))
+        gold_e = int(WORLD.fact[r, e])
+        ctx = [tok.BOS, tok.QRY, tok.ent(e), tok.rel(r), tok.ANS]
+        ents = {gold_e}
+        while len(ents) < 4:
+            ents.add(int(rng.integers(0, tok.N_ENTS)))
+        ents = list(ents)
+        rng.shuffle(ents)
+        gold = ents.index(gold_e)
+        out.append((ctx, [[tok.ent(x)] for x in ents], gold))
+    return out
+
+
+def task_mmlu(rng, n):
+    return _facts_mc(rng, n, 0, 8)
+
+
+def task_ceval(rng, n):
+    return _facts_mc(rng, n, 8, 16)
+
+
+def task_obqa(rng, n):
+    out = []
+    for _ in range(n):
+        r1, r2 = int(rng.integers(0, 8)), int(rng.integers(0, 8))
+        e = int(rng.integers(0, tok.N_ENTS))
+        gold_e = WORLD.hop2(e, r1, r2)
+        ctx = [tok.BOS, tok.QRY, tok.ent(e), tok.rel(r1), tok.THEN,
+               tok.rel(r2), tok.ANS]
+        ents = {gold_e}
+        while len(ents) < 4:
+            ents.add(int(rng.integers(0, tok.N_ENTS)))
+        ents = list(ents)
+        rng.shuffle(ents)
+        gold = ents.index(gold_e)
+        out.append((ctx, [[tok.ent(x)] for x in ents], gold))
+    return out
+
+
+def task_piqa(rng, n):
+    out = []
+    for _ in range(n):
+        d = [int(rng.integers(0, 10)) for _ in range(3)]
+        while len(set(d)) < 2:  # need a distinguishable wrong ordering
+            d[0] = int(rng.integers(0, 10))
+        srt = sorted(d)
+        shuf = list(srt)
+        while shuf == srt:
+            rng.shuffle(shuf)
+        ctx = [tok.BOS] + [tok.digit(x) for x in d] + [tok.SORT]
+        choices = [[tok.digit(x) for x in srt],
+                   [tok.digit(x) for x in shuf]]
+        if rng.random() < 0.5:
+            choices = choices[::-1]
+            gold = 1
+        else:
+            gold = 0
+        out.append((ctx, choices, gold))
+    return out
+
+
+def task_rte(rng, n):
+    out = []
+    for _ in range(n):
+        a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+        while b == a:
+            b = int(rng.integers(0, 10))
+        lo, hi = min(a, b), max(a, b)
+        prem = ([tok.digit(lo), tok.LT, tok.digit(hi)]
+                if rng.random() < 0.5
+                else [tok.digit(hi), tok.GT, tok.digit(lo)])
+        consistent = rng.random() < 0.5
+        if consistent:
+            hyp = ([tok.digit(hi), tok.GT, tok.digit(lo)]
+                   if rng.random() < 0.5
+                   else [tok.digit(lo), tok.LT, tok.digit(hi)])
+        else:
+            hyp = ([tok.digit(lo), tok.GT, tok.digit(hi)]
+                   if rng.random() < 0.5
+                   else [tok.digit(hi), tok.LT, tok.digit(lo)])
+        ctx = [tok.BOS] + prem + [tok.SEP] + hyp + [tok.QRY]
+        out.append((ctx, [[tok.YES], [tok.NO]], 0 if consistent else 1))
+    return out
+
+
+def task_winogrande(rng, n):
+    out = []
+    for _ in range(n):
+        ea = int(rng.integers(0, tok.N_ENTS))
+        eb = int(rng.integers(0, tok.N_ENTS))
+        while eb == ea:
+            eb = int(rng.integers(0, tok.N_ENTS))
+        first = rng.random() < 0.5
+        sel = tok.SEL1 if first else tok.SEL2
+        ctx = [tok.BOS, tok.ent(ea), tok.COMMA, tok.ent(eb), sel, tok.ANS]
+        out.append((ctx, [[tok.ent(ea)], [tok.ent(eb)]], 0 if first else 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# generation tasks
+# ---------------------------------------------------------------------------
+
+def task_gsm8k(rng, n, shots=5):
+    """5-shot chained arithmetic; gold = (intermediate, final) digits."""
+    rows = []
+    for sid in range(n):
+        prompt = [tok.BOS]
+        for _ in range(shots):
+            ex, _, _ = chain_example(rng)
+            prompt += ex + [tok.EOS]
+        q, t, f = chain_example(rng)
+        prompt += q[:-2]  # strip the worked answer, keep "... ANS"
+        rows.append(dict(tokens=prompt, sample=sid,
+                         gold=[tok.digit(t), tok.digit(f)], max_gen=4))
+    return rows
+
+
+def task_longbench_kv(rng, n, n_pairs=40):
+    """Needle-style KV recall over a long context (TriviaQA analogue)."""
+    rows = []
+    for sid in range(n):
+        keys = rng.choice(tok.N_KEYS, size=n_pairs, replace=False)
+        vals = rng.integers(0, 10, size=n_pairs)
+        ctx = [tok.BOS]
+        for k, v in zip(keys, vals):
+            ctx += [tok.key(int(k)), tok.digit(int(v))]
+        q = int(rng.integers(0, n_pairs))
+        ctx += [tok.QRY, tok.key(int(keys[q])), tok.ANS]
+        rows.append(dict(tokens=ctx, sample=sid,
+                         gold=[tok.digit(int(vals[q]))], max_gen=2))
+    return rows
+
+
+def task_longbench_induction(rng, n):
+    """Long repeated-motif continuation filling most of the 256 window."""
+    rows = []
+    for sid in range(n):
+        period = int(rng.integers(3, 6))
+        motif = [tok.word_a(int(rng.integers(0, tok.N_WORDS_A)))
+                 for _ in range(period)]
+        reps = (LONG_SEQ - 24) // period
+        ctx = [tok.BOS] + motif * reps + motif[:-1]
+        rows.append(dict(tokens=ctx, sample=sid, gold=[motif[-1]],
+                         max_gen=2))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# emission
+# ---------------------------------------------------------------------------
+
+MC_TASKS = {
+    # task_name: (generator, n_choices, paper benchmark)
+    "arc_challenge": (task_arc_challenge, 4, "AC"),
+    "arc_easy": (task_arc_easy, 4, "AE"),
+    "boolq": (task_boolq, 2, "BQ"),
+    "mmlu": (task_mmlu, 4, "MMLU"),
+    "ceval": (task_ceval, 4, "CEVAL"),
+    "obqa": (task_obqa, 4, "OBQA"),
+    "piqa": (task_piqa, 2, "PIQA"),
+    "rte": (task_rte, 2, "RTE"),
+    "winogrande": (task_winogrande, 2, "WG"),
+}
+
+GEN_TASKS = {
+    "gsm8k": (task_gsm8k, SEQ, "GSM8K"),
+    "longbench_kv": (task_longbench_kv, LONG_SEQ, "LB-KV"),
+    "longbench_ind": (task_longbench_induction, LONG_SEQ, "LB-IND"),
+}
+
+
+def emit_all(outdir, n_samples=N_SAMPLES):
+    from . import params_io
+
+    os.makedirs(outdir, exist_ok=True)
+    index = {"mc": {}, "gen": {}, "n_samples": n_samples}
+    for tid, (name, (fn, n_choices, bench)) in enumerate(MC_TASKS.items()):
+        rng = _rng(tid)
+        samples = fn(rng, n_samples)
+        rows = _mc_rows(samples)
+        path = os.path.join(outdir, f"{name}.aev")
+        params_io.write_eval_mc(path, SEQ, n_choices, rows,
+                                dict(n_samples=n_samples))
+        index["mc"][name] = dict(file=f"{name}.aev", choices=n_choices,
+                                 bench=bench, seq=SEQ)
+    for tid, (name, (fn, seq, bench)) in enumerate(GEN_TASKS.items()):
+        rng = _rng(1000 + tid)
+        rows = fn(rng, n_samples if seq == SEQ else max(n_samples // 4, 16))
+        path = os.path.join(outdir, f"{name}.aev")
+        params_io.write_eval_gen(path, seq, rows, dict(n_samples=len(rows)))
+        index["gen"][name] = dict(file=f"{name}.aev", bench=bench, seq=seq)
+    params_io.write_manifest(os.path.join(outdir, "index.json"), index)
+    return index

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Every kernel here is the compute hot-spot of the paper's method:
+
+  * ``nm_prune``        scored N:M top-k activation pruning (Amber Pruner
+                        Eq. 2/5 applied online, with the precomputed
+                        channel scale as an auxiliary weight)
+  * ``nm_prune_matmul`` the fused prefill hot path: prune + projection
+  * ``nm_spmm``         N:M-sparse x dense matmul over pruned activations
+  * ``quant_matmul``    W8A8 (SmoothQuant) int8 matmul for Outstanding-sparse
+  * ``attention``       causal GQA prefill attention
+
+Kernels MUST be lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see DESIGN.md §5 for the TPU mapping).
+``ref.py`` holds the pure-jnp oracles pytest checks them against.
+"""

@@ -1,0 +1,90 @@
+"""Pallas kernel: causal GQA prefill attention.
+
+One grid step per (batch, q-head): the (S, Dh) query block and its grouped
+(S, Dh) key/value blocks are VMEM-resident (S<=256, Dh<=64 -> < 200 KiB),
+softmax is computed in f32 with the standard max-subtraction. This is the
+non-linear hot spot between the paper's sparsified projections; it is kept
+dense (the paper sparsifies only the *linear* layers' inputs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nm_prune import PROFILE
+
+
+def _attn_kernel_full(q_ref, k_ref, v_ref, o_ref, *, scale, group):
+    """CPU-profile body: all (batch, head) pairs in one invocation —
+    interpret mode serializes grid steps, so a 24-step grid cost ~10x the
+    math at tiny sizes (§Perf L1)."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    b, s, hq, dh = q.shape
+    kk = jnp.repeat(k, group, axis=2)
+    vv = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * scale
+    ii = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    logits = jnp.where((jj <= ii)[None, None], logits, -1e30)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.einsum("bhqk,bkhd->bqhd", p, vv,
+                            preferred_element_type=jnp.float32)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    # blocks: q [1, S, 1, Dh], k/v [1, S, 1, Dh]
+    q = q_ref[0, :, 0, :]
+    k = k_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :]
+    s = q.shape[0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    ii = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    logits = jnp.where(jj <= ii, logits, -1e30)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, :, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def causal_attention(q, k, v):
+    """q [B,S,Hq,Dh], k/v [B,S,Hkv,Dh] -> [B,S,Hq,Dh], causal, GQA."""
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / float(dh) ** 0.5
+    if PROFILE != "tpu":
+        kernel = functools.partial(_attn_kernel_full, scale=scale,
+                                   group=group)
+        return pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((b, s, hq, dh), lambda i: (0, 0, 0, 0)),
+                pl.BlockSpec((b, s, hkv, dh), lambda i: (0, 0, 0, 0)),
+                pl.BlockSpec((b, s, hkv, dh), lambda i: (0, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((b, s, hq, dh), lambda i: (0, 0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, s, hq, dh), jnp.float32),
+            interpret=True,
+        )(q, k, v)
+    kernel = functools.partial(_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq),
+        in_specs=[
+            pl.BlockSpec((1, s, 1, dh), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda i, h: (i, 0, h // group, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda i, h: (i, 0, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, 1, dh), lambda i, h: (i, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, hq, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

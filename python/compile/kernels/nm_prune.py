@@ -1,0 +1,97 @@
+"""Pallas kernel: scored N:M top-k activation pruning (Amber Pruner core).
+
+Hardware adaptation (DESIGN.md §5): the paper targets an N:M SpMM unit
+(Ascend/Ampere). On a TPU-style target there is no sparse MXU mode, so the
+kernel is structured for VMEM instead: activations stream HBM→VMEM in
+token-tile × full-feature blocks (the feature axis must be resident so each
+M-group is local to the tile), the score/rank/mask runs on the VPU, and the
+masked tile feeds the MXU matmul of the fused variant (``nm_spmm``).
+
+``interpret=True`` everywhere — the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is exact vs ``ref.nm_prune`` either way.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile height. 16 divides every (batch*seq) the artifacts use and
+# keeps the VMEM footprint of a block at 16*D*4B (D<=512 -> 32 KiB).
+TOKEN_TILE = 16
+
+# Tiling profile (§Perf L1): "tpu" uses the VMEM-sized tiles documented in
+# DESIGN.md §5; "cpu" (default for this interpret-mode substrate) uses one
+# full-extent block per pallas_call — interpret mode serializes grid steps
+# through an HLO while-loop, and at tiny-model sizes the loop overhead
+# dominated end-to-end latency by ~8x (EXPERIMENTS.md §Perf, iteration 1).
+PROFILE = os.environ.get("AMBER_TILE_PROFILE", "cpu")
+
+
+def pick_token_tile(t: int) -> int:
+    """Largest legal token tile for the active profile."""
+    if PROFILE == "tpu":
+        assert t % TOKEN_TILE == 0
+        return TOKEN_TILE
+    return t  # cpu/interpret: single block
+
+
+def kernel_nm_mask(score, n, m):
+    """Exact-N:M keep mask inside a kernel body.
+
+    Rank via O(m^2) pairwise comparisons instead of argsort: XLA's CPU
+    sort is comparator-driven and dominated the sparse-prefill latency
+    (§Perf L1 iteration 2, ~3x end-to-end). rank_i = #{j : s_j > s_i or
+    (s_j == s_i and j < i)} reproduces the *stable* descending-argsort
+    position exactly, so the mask is bit-identical to the oracle's.
+    m <= 16 keeps the broadcast at m^2 = 256 lanes per group — VPU-friendly
+    on real hardware too.
+    """
+    t, d = score.shape
+    g = score.reshape(t, d // m, m)
+    a = g[..., :, None]  # s_i
+    b = g[..., None, :]  # s_j
+    jj = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    beats = (b > a) | ((b == a) & (jj < ii))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=-1)  # [t, d//m, m]
+    return (rank < n).astype(score.dtype).reshape(t, d)
+
+
+def _prune_kernel(x_ref, scale_ref, keep_ref, o_ref, *, n, m):
+    """One (TOKEN_TILE, D) block: score, rank per M-group, mask."""
+    x = x_ref[...]
+    score = jnp.abs(x) * scale_ref[...][None, :]
+    mask = kernel_nm_mask(score, n, m)
+    # layer-skip flag arrives as data: keep==1 bypasses pruning.
+    keep = keep_ref[0]
+    mask = jnp.maximum(mask, keep)
+    o_ref[...] = x * mask
+
+
+@functools.partial(jax.named_call, name="amber_nm_prune")
+def nm_prune(x, scale, n, m, keep_dense=None):
+    """Prune ``x`` [T, D] to N:M along D. ``scale`` [D] is the offline
+    channel statistic (ones = naive top-k). ``keep_dense`` scalar f32."""
+    t, d = x.shape
+    assert d % m == 0
+    tt = pick_token_tile(t)
+    assert t % tt == 0, f"token dim {t} % {tt} != 0"
+    if keep_dense is None:
+        keep_dense = jnp.zeros((), jnp.float32)
+    keep = jnp.broadcast_to(keep_dense, (1,)).astype(x.dtype)
+    kernel = functools.partial(_prune_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // tt,),
+        in_specs=[
+            pl.BlockSpec((tt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, scale, keep)

@@ -1,0 +1,96 @@
+"""Pallas kernels: N:M sparse-dense matmul and the fused prune+project
+prefill hot path.
+
+This is the projection the paper accelerates: a N:M-pruned activation tile
+against a dense weight matrix (SpMM). On sparse-matmul hardware the pruned
+tile is consumed in compressed (values, indices) form at N/M of the dense
+FLOPs; on the MXU we express the same schedule as token-tile × out-tile
+blocks with the full reduction axis resident in VMEM, and the mask applied
+on the VPU immediately before the MXU dot. The N/M compute reduction is
+demonstrated natively by `rust/src/sparsity/spmm.rs` on the CPU analogue.
+
+Tile sizes: (TOKEN_TILE x D) activations, (D x OUT_TILE) weights, f32
+accumulation — VMEM footprint per step = TOKEN_TILE*D + D*OUT_TILE floats
+(~ 96 KiB at D=512, OUT_TILE=128), comfortably under a real core's ~16 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nm_prune import kernel_nm_mask, pick_token_tile, PROFILE, TOKEN_TILE
+
+OUT_TILE = 128
+
+
+def _pick_out_tile(d_out):
+    if PROFILE != "tpu":
+        return d_out  # cpu/interpret: single block (see nm_prune.PROFILE)
+    for t in (OUT_TILE, 64, 32, 16, 8, 4, 2, 1):
+        if d_out % t == 0:
+            return t
+    return 1
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def matmul(x, w):
+    """Dense blocked projection: x [T, Din] @ w [Din, Dout]."""
+    t, din = x.shape
+    dout = w.shape[1]
+    tt = pick_token_tile(t)
+    ot = _pick_out_tile(dout)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(t // tt, dout // ot),
+        in_specs=[
+            pl.BlockSpec((tt, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, ot), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tt, ot), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _fused_kernel(x_ref, w_ref, scale_ref, keep_ref, o_ref, *, n, m):
+    """Prune the activation tile in VMEM, then one MXU dot."""
+    x = x_ref[...]
+    score = jnp.abs(x) * scale_ref[...][None, :]
+    mask = kernel_nm_mask(score, n, m)
+    mask = jnp.maximum(mask, keep_ref[0])
+    xp = x * mask
+    o_ref[...] = jnp.dot(xp, w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.named_call, name="amber_nm_prune_matmul")
+def nm_prune_matmul(x, w, scale, n, m, keep_dense=None):
+    """Fused Amber-Pruner projection: N:M-prune x [T, Din] (score =
+    |x| * scale) then project with w [Din, Dout]."""
+    t, din = x.shape
+    dout = w.shape[1]
+    tt = pick_token_tile(t)
+    assert din % m == 0 and t % tt == 0
+    if keep_dense is None:
+        keep_dense = jnp.zeros((), jnp.float32)
+    keep = jnp.broadcast_to(keep_dense, (1,)).astype(x.dtype)
+    ot = _pick_out_tile(dout)
+    kernel = functools.partial(_fused_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // tt, dout // ot),
+        in_specs=[
+            pl.BlockSpec((tt, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, ot), lambda i, j: (0, j)),
+            pl.BlockSpec((din,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tt, ot), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, w, scale, keep)

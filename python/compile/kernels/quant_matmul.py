@@ -1,0 +1,105 @@
+"""Pallas kernels for Outstanding-sparse: W8A8 (SmoothQuant) projections,
+dense and fused with N:M activation pruning.
+
+Semantics (must match ref.w8a8_matmul exactly):
+  * activations: symmetric per-tensor int8 with a *static* calibrated scale
+    (SmoothQuant-style, calibration in amber/quant.py)
+  * weights:     symmetric per-output-channel int8 (precomputed offline,
+    shipped as i8 tensors in weights.bin)
+  * accumulation in int32, dequant to f32 with x_scale * w_scale[j]
+
+For Outstanding-sparse the N:M pruning happens on the *smoothed float*
+activations (where the inverted ŝ = 1/s scaling has expanded the range and
+exposed the sparsity pattern — paper Fig. 3), and the surviving values are
+then quantized. Zeroed slots quantize to exact int8 zeros, so the pruned
+tile is still a valid hardware N:M operand.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nm_prune import kernel_nm_mask, pick_token_tile, TOKEN_TILE
+from .nm_spmm import _pick_out_tile
+
+
+def _quantize(x, x_scale):
+    return jnp.clip(jnp.round(x / x_scale), -127, 127).astype(jnp.int8)
+
+
+def _w8a8_kernel(x_ref, wq_ref, wscale_ref, xscale_ref, o_ref):
+    xq = _quantize(x_ref[...], xscale_ref[0]).astype(jnp.int32)
+    acc = jnp.dot(xq, wq_ref[...].astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    o_ref[...] = acc.astype(jnp.float32) * (xscale_ref[0]
+                                            * wscale_ref[...][None, :])
+
+
+def w8a8_matmul(x, wq, w_scale, x_scale):
+    """Quantized projection: x [T,Din] f32, wq [Din,Dout] i8,
+    w_scale [Dout] f32, x_scale scalar f32."""
+    t, din = x.shape
+    dout = wq.shape[1]
+    tt = pick_token_tile(t)
+    xs = jnp.broadcast_to(x_scale, (1,)).astype(jnp.float32)
+    ot = _pick_out_tile(dout)
+    return pl.pallas_call(
+        _w8a8_kernel,
+        grid=(t // tt, dout // ot),
+        in_specs=[
+            pl.BlockSpec((tt, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, ot), lambda i, j: (0, j)),
+            pl.BlockSpec((ot,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tt, ot), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, wq, w_scale, xs)
+
+
+def _w8a8_nm_kernel(x_ref, wq_ref, wscale_ref, xscale_ref, scale_ref,
+                    keep_ref, o_ref, *, n, m):
+    x = x_ref[...]
+    score = jnp.abs(x) * scale_ref[...][None, :]
+    mask = kernel_nm_mask(score, n, m)
+    mask = jnp.maximum(mask, keep_ref[0])
+    xq = _quantize(x * mask, xscale_ref[0]).astype(jnp.int32)
+    acc = jnp.dot(xq, wq_ref[...].astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    o_ref[...] = acc.astype(jnp.float32) * (xscale_ref[0]
+                                            * wscale_ref[...][None, :])
+
+
+@functools.partial(jax.named_call, name="amber_w8a8_nm_prune_matmul")
+def w8a8_nm_prune_matmul(x, wq, w_scale, x_scale, scale, n, m,
+                         keep_dense=None):
+    """Outstanding-sparse fused hot path: N:M-prune the smoothed float
+    activations, quantize the survivors, int8 projection."""
+    t, din = x.shape
+    dout = wq.shape[1]
+    tt = pick_token_tile(t)
+    assert din % m == 0 and t % tt == 0
+    if keep_dense is None:
+        keep_dense = jnp.zeros((), jnp.float32)
+    keep = jnp.broadcast_to(keep_dense, (1,)).astype(jnp.float32)
+    xs = jnp.broadcast_to(x_scale, (1,)).astype(jnp.float32)
+    ot = _pick_out_tile(dout)
+    kernel = functools.partial(_w8a8_nm_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // tt, dout // ot),
+        in_specs=[
+            pl.BlockSpec((tt, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((din, ot), lambda i, j: (0, j)),
+            pl.BlockSpec((ot,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((din,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tt, ot), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, wq, w_scale, xs, scale, keep)

@@ -1,0 +1,149 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: the Pallas kernels in this package
+must match them exactly (same masking tie-breaks, same accumulation dtype),
+and the training-path model uses them directly (fast native XLA) while the
+AOT artifacts use the Pallas versions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def nm_mask(score, n, m):
+    """Exact-N:M keep mask from a score tensor.
+
+    ``score`` [..., D] with D % m == 0. Within every group of ``m``
+    consecutive channels keep the ``n`` highest-scoring elements. Ties are
+    broken toward the lower channel index (stable argsort), which keeps the
+    mask exactly N:M — a requirement of the hardware SpMM format the paper
+    targets (a ">= kth value" mask can exceed N on ties).
+    """
+    d = score.shape[-1]
+    assert d % m == 0, f"last dim {d} not divisible by M={m}"
+    g = score.reshape(*score.shape[:-1], d // m, m)
+    # rank within group: 0 = largest. argsort of -score is stable, so equal
+    # scores rank lower-index-first.
+    order = jnp.argsort(-g, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    mask = (rank < n).astype(score.dtype)
+    return mask.reshape(score.shape)
+
+
+def nm_prune(x, scale, n, m, keep_dense=None):
+    """Scored N:M activation pruning (Amber Pruner).
+
+    score = |x| * scale  (Eq. 2 / Eq. 5 — the channel statistic of W is
+    precomputed offline into ``scale``; naive top-k is scale == 1).
+    ``keep_dense`` is a 0/1 scalar (float) that bypasses pruning when 1 —
+    this is how the layer-skipping policy reaches the AOT graph as *data*
+    rather than as a separate compiled artifact.
+    """
+    score = jnp.abs(x) * scale
+    mask = nm_mask(score, n, m)
+    if keep_dense is not None:
+        mask = jnp.maximum(mask, keep_dense)
+    return x * mask
+
+
+def matmul(x, w):
+    """Dense reference projection, f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def nm_prune_matmul(x, w, scale, n, m, keep_dense=None):
+    """Fused reference: prune activations then project."""
+    return matmul(nm_prune(x, scale, n, m, keep_dense), w)
+
+
+def nm_compress(xp, n, m):
+    """Compress an N:M-pruned tensor to (values, indices).
+
+    xp [..., D] with at most n nonzeros per m-group (as produced by
+    ``nm_prune``). Returns values [..., D//m, n] and int32 indices
+    [..., D//m, n] (channel offset within the group). This is the memory
+    layout a sparse tensor core / SpMM unit consumes, and the layout the
+    rust-native SpMM benchmark uses.
+    """
+    d = xp.shape[-1]
+    g = xp.reshape(*xp.shape[:-1], d // m, m)
+    nz = (g != 0).astype(jnp.int32)
+    # order channels: nonzeros first (stable), take first n
+    order = jnp.argsort(-nz, axis=-1, stable=True)
+    idx = order[..., :n]
+    vals = jnp.take_along_axis(g, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def nm_decompress(vals, idx, m):
+    """Inverse of ``nm_compress`` (zero-filled)."""
+    shp = vals.shape[:-1]
+    out = jnp.zeros(shp + (m,), vals.dtype)
+    out = jnp.put_along_axis(out, idx.astype(jnp.int32), vals, axis=-1,
+                             inplace=False)
+    return out.reshape(*vals.shape[:-2], vals.shape[-2] * m)
+
+
+def quantize_tensor(x, x_scale):
+    """Per-tensor symmetric int8 quantization with a static scale."""
+    q = jnp.clip(jnp.round(x / x_scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def w8a8_matmul(x, wq, w_scale, x_scale):
+    """W8A8 reference: static per-tensor activation quant, per-channel
+    weight quant, int32 accumulation, float dequant."""
+    xq = quantize_tensor(x, x_scale).astype(jnp.int32)
+    acc = jnp.dot(xq, wq.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (x_scale * w_scale)[None, :]
+
+
+def w8a8_nm_prune_matmul(x, wq, w_scale, x_scale, scale, n, m,
+                         keep_dense=None):
+    """Outstanding-sparse fused hot path: smooth-scaled activations are
+    pruned N:M first, then quantized and projected in int8."""
+    xp = nm_prune(x, scale, n, m, keep_dense)
+    return w8a8_matmul(xp, wq, w_scale, x_scale)
+
+
+def rope(x, pos, theta=10000.0):
+    """Rotary position embedding. x [..., S, H, Dh], pos [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1)
+
+
+def causal_attention(q, k, v, *, pos_q=None, pos_k=None, kv_len=None):
+    """Causal GQA attention reference.
+
+    q [B,Sq,Hq,Dh], k/v [B,Sk,Hkv,Dh]; Hq % Hkv == 0 (grouped queries).
+    ``pos_q``/``pos_k`` [B,Sq]/[B,Sk] are absolute positions used for the
+    causal mask (needed for decode, where Sq=1 mid-cache); defaults to
+    arange. ``kv_len`` [B] optionally masks out cache slots >= length.
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if pos_q is None:
+        pos_q = jnp.broadcast_to(jnp.arange(sq)[None, :], (b, sq))
+    if pos_k is None:
+        pos_k = jnp.broadcast_to(jnp.arange(sk)[None, :], (b, sk))
+    kk = jnp.repeat(k, group, axis=2)  # [B,Sk,Hq,Dh]
+    vv = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / jnp.sqrt(
+        jnp.array(dh, jnp.float32))
+    mask = pos_k[:, None, None, :] <= pos_q[:, None, :, None]  # [B,1,Sq,Sk]
+    if kv_len is not None:
+        mask = mask & (jnp.arange(sk)[None, None, None, :]
+                       < kv_len[:, None, None, None])
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    return out

@@ -1,0 +1,291 @@
+"""Layer-2 JAX model: LLaMA-architecture transformer (GQA + RoPE + SwiGLU
++ RMSNorm) with the Amber-Pruner sparse prefill path.
+
+Three graph variants, selected statically at lowering time:
+
+  * ``variant="dense"``   — plain fp32 projections (the Bfloat16 baseline;
+                            we run fp32 since the CPU path has no bf16 MXU)
+  * ``variant="nm"``      — every linear projection goes through the fused
+                            Layer-1 ``nm_prune_matmul`` kernel; whether a
+                            given (layer, module) actually prunes is *data*
+                            (``keep_dense`` flags + channel score scales
+                            shipped as auxiliary weights), so naive top-k /
+                            Amber-P(l.s.) / Amber-P(all) share one artifact
+  * ``variant="sq"`` / ``"sq_nm"`` — W8A8 SmoothQuant projections
+                            (Outstanding-sparse when fused with N:M)
+
+``use_pallas=False`` swaps every kernel for its pure-jnp oracle — that is
+the training path (fast native XLA) and the pytest equivalence target.
+
+Parameters are dicts of stacked per-layer tensors (scan-friendly ordering,
+stable flattening order == weights.bin order, see params_io.py).
+"""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, DENSE_MODULES
+from .kernels import ref
+from .kernels import nm_prune as k_prune  # noqa: F401 (re-export for tests)
+from .kernels import nm_spmm as k_spmm
+from .kernels import quant_matmul as k_quant
+from .kernels import attention as k_attn
+
+# module index order used by aux tensors (skip flags / score scales)
+MODULE_IDX = {m: i for i, m in enumerate(DENSE_MODULES)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Random init. Stacked [L, ...] tensors, scan/artifact friendly."""
+    k_emb, k_out, *k_layers = jax.random.split(key, 2 + cfg.n_layers)
+    d, q, kv, f = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.d_ff
+
+    def dense_init(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32)
+                * (1.0 / jnp.sqrt(fan_in)))
+
+    def layer(key):
+        ks = jax.random.split(key, 7)
+        return dict(
+            wq=dense_init(ks[0], (d, q), d),
+            wk=dense_init(ks[1], (d, kv), d),
+            wv=dense_init(ks[2], (d, kv), d),
+            wo=dense_init(ks[3], (q, d), q),
+            wg=dense_init(ks[4], (d, f), d),
+            wu=dense_init(ks[5], (d, f), d),
+            wd=dense_init(ks[6], (f, d), f),
+        )
+
+    layers = [layer(k) for k in k_layers]
+    stacked = {name: jnp.stack([l[name] for l in layers])
+               for name in layers[0]}
+    return dict(
+        embed=jax.random.normal(k_emb, (cfg.vocab_size, d)) * 0.02,
+        unembed=dense_init(k_out, (d, cfg.vocab_size), d),
+        ln_attn=jnp.ones((cfg.n_layers, d)),
+        ln_mlp=jnp.ones((cfg.n_layers, d)),
+        ln_final=jnp.ones((d,)),
+        **stacked,
+    )
+
+
+def default_aux(cfg: ModelConfig) -> dict:
+    """Auxiliary sparsity weights: per-(layer, module) keep-dense flags and
+    per-channel score scales. Defaults = prune nothing, naive scores."""
+    L = cfg.n_layers
+    return dict(
+        keep_dense=jnp.ones((L, len(DENSE_MODULES)), jnp.float32),
+        scale_q=jnp.ones((L, cfg.d_model), jnp.float32),
+        scale_k=jnp.ones((L, cfg.d_model), jnp.float32),
+        scale_v=jnp.ones((L, cfg.d_model), jnp.float32),
+        scale_o=jnp.ones((L, cfg.q_dim), jnp.float32),
+        scale_g=jnp.ones((L, cfg.d_model), jnp.float32),
+        scale_u=jnp.ones((L, cfg.d_model), jnp.float32),
+        scale_d=jnp.ones((L, cfg.d_ff), jnp.float32),
+    )
+
+
+AUX_SCALE_NAMES = {
+    "q_proj": "scale_q", "k_proj": "scale_k", "v_proj": "scale_v",
+    "o_proj": "scale_o", "gate_proj": "scale_g", "up_proj": "scale_u",
+    "down_proj": "scale_d",
+}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+class Projector:
+    """Dispatches a named linear projection to the right kernel variant.
+
+    Flattens [B, S, Din] to [B*S, Din] for the token-tiled kernels.
+    """
+
+    def __init__(self, cfg, variant, use_pallas, nm=None, aux=None,
+                 qparams=None, layer=None):
+        self.cfg, self.variant, self.use_pallas = cfg, variant, use_pallas
+        self.nm, self.aux, self.qparams, self.layer = nm, aux, qparams, layer
+
+    def __call__(self, name, x, w):
+        b, s, din = x.shape
+        x2 = x.reshape(b * s, din)
+        mi = MODULE_IDX[name]
+        if self.variant == "dense":
+            y = (k_spmm.matmul(x2, w) if self.use_pallas
+                 else ref.matmul(x2, w))
+        elif self.variant == "nm":
+            n, m = self.nm
+            keep = self.aux["keep_dense"][self.layer, mi]
+            scale = self.aux[AUX_SCALE_NAMES[name]][self.layer]
+            fn = (k_spmm.nm_prune_matmul if self.use_pallas
+                  else ref.nm_prune_matmul)
+            y = fn(x2, w, scale, n, m, keep)
+        elif self.variant in ("sq", "sq_nm"):
+            qp = self.qparams
+            wq = qp["wq"][name][self.layer]
+            w_scale = qp["w_scale"][name][self.layer]
+            x_scale = qp["x_scale"][name][self.layer]
+            quantized = bool(qp["quantized"][name][self.layer])
+            if not quantized:
+                # quantization skip policy (paper §Outstanding-sparse):
+                # fall back to the fp weights for this module.
+                if self.variant == "sq_nm":
+                    n, m = self.nm
+                    keep = self.aux["keep_dense"][self.layer, mi]
+                    scale = self.aux[AUX_SCALE_NAMES[name]][self.layer]
+                    fn = (k_spmm.nm_prune_matmul if self.use_pallas
+                          else ref.nm_prune_matmul)
+                    return fn(x2, w, scale, n, m, keep).reshape(b, s, -1)
+                y = (k_spmm.matmul(x2, w) if self.use_pallas
+                     else ref.matmul(x2, w))
+                return y.reshape(b, s, -1)
+            if self.variant == "sq":
+                fn = (k_quant.w8a8_matmul if self.use_pallas
+                      else ref.w8a8_matmul)
+                y = fn(x2, wq, w_scale, x_scale)
+            else:
+                n, m = self.nm
+                keep = self.aux["keep_dense"][self.layer, mi]
+                scale = self.aux[AUX_SCALE_NAMES[name]][self.layer]
+                fn = (k_quant.w8a8_nm_prune_matmul if self.use_pallas
+                      else ref.w8a8_nm_prune_matmul)
+                y = fn(x2, wq, w_scale, x_scale, scale, n, m, keep)
+        else:
+            raise ValueError(self.variant)
+        return y.reshape(b, s, -1)
+
+
+def attention_block(cfg, proj, params, layer, x, pos, kv_cache=None,
+                    kv_len=None, use_pallas=False):
+    """Self-attention with RoPE + GQA. Returns (out, (k, v)) where k/v are
+    this block's key/value tensors (post-RoPE k) for the cache."""
+    b, s, d = x.shape
+    q = proj("q_proj", x, params["wq"][layer])
+    k = proj("k_proj", x, params["wk"][layer])
+    v = proj("v_proj", x, params["wv"][layer])
+    q = q.reshape(b, s, cfg.n_q_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = ref.rope(q, pos, cfg.rope_theta)
+    k = ref.rope(k, pos, cfg.rope_theta)
+    if kv_cache is None:
+        # prefill: attend within the (causal) block
+        if use_pallas:
+            o = k_attn.causal_attention(q, k, v)
+        else:
+            o = ref.causal_attention(q, k, v)
+        new_kv = (k, v)
+    else:
+        # decode: append to cache at position pos, attend over cache
+        ck, cv = kv_cache  # [B, C, Hkv, Dh]
+        c = ck.shape[1]
+        onehot = jax.nn.one_hot(pos[:, 0], c, dtype=ck.dtype)  # [B, C]
+        ck = ck + onehot[:, :, None, None] * k
+        cv = cv + onehot[:, :, None, None] * v
+        pos_k = jnp.broadcast_to(jnp.arange(c)[None, :], (b, c))
+        o = ref.causal_attention(q, ck, cv, pos_q=pos, pos_k=pos_k,
+                                 kv_len=kv_len)
+        new_kv = (ck, cv)
+    o = o.reshape(b, s, cfg.q_dim)
+    out = proj("o_proj", o, params["wo"][layer])
+    return out, new_kv
+
+
+def mlp_block(proj, params, layer, x):
+    g = proj("gate_proj", x, params["wg"][layer])
+    u = proj("up_proj", x, params["wu"][layer])
+    h = jax.nn.silu(g) * u
+    return proj("down_proj", h, params["wd"][layer])
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens, *, variant="dense",
+            nm=None, aux=None, qparams=None, use_pallas=False,
+            return_kv=False, pos=None):
+    """Prefill forward: tokens [B, S] int32 -> logits [B, S, V].
+
+    With ``return_kv`` also returns stacked KV ([L, B, S, Hkv, Dh] x2) for
+    handing off to the decode executable (the paper's pipeline: sparse
+    prefill feeds a dense decode through the KV cache).
+    """
+    b, s = tokens.shape
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = params["embed"][tokens]
+    kvs = []
+    for layer in range(cfg.n_layers):
+        proj = Projector(cfg, variant, use_pallas, nm=nm, aux=aux,
+                         qparams=qparams, layer=layer)
+        h = rmsnorm(x, params["ln_attn"][layer], cfg.rmsnorm_eps)
+        a, kv = attention_block(cfg, proj, params, layer, h, pos,
+                                use_pallas=use_pallas)
+        x = x + a
+        h = rmsnorm(x, params["ln_mlp"][layer], cfg.rmsnorm_eps)
+        x = x + mlp_block(proj, params, layer, h)
+        kvs.append(kv)
+    x = rmsnorm(x, params["ln_final"], cfg.rmsnorm_eps)
+    logits = jnp.dot(x, params["unembed"])
+    if return_kv:
+        ks = jnp.stack([kv[0] for kv in kvs])  # [L, B, S, Hkv, Dh]
+        vs = jnp.stack([kv[1] for kv in kvs])
+        return logits, ks, vs
+    return logits
+
+
+def decode_step(cfg: ModelConfig, params: dict, token, pos, k_cache,
+                v_cache, kv_len, *, variant="dense", qparams=None,
+                use_pallas=False):
+    """Single-token decode: token [B] int32, pos [B] int32,
+    k/v_cache [L, B, C, Hkv, Dh], kv_len [B] (valid cache length incl. this
+    token). Returns (logits [B, V], k_cache', v_cache').
+
+    Decode is always *dense* (the paper confines N:M sparsity to prefill —
+    decode is memory-bound and batch-1 GEMV gains nothing from N:M compute
+    sparsity on this substrate).
+    """
+    b = token.shape[0]
+    tokens = token[:, None]
+    pos2 = pos[:, None]
+    x = params["embed"][tokens]
+    new_ks, new_vs = [], []
+    for layer in range(cfg.n_layers):
+        proj = Projector(cfg, variant, use_pallas, qparams=qparams,
+                         layer=layer)
+        h = rmsnorm(x, params["ln_attn"][layer], cfg.rmsnorm_eps)
+        a, (ck, cv) = attention_block(
+            cfg, proj, params, layer, h, pos2,
+            kv_cache=(k_cache[layer], v_cache[layer]), kv_len=kv_len,
+            use_pallas=False)
+        x = x + a
+        h = rmsnorm(x, params["ln_mlp"][layer], cfg.rmsnorm_eps)
+        x = x + mlp_block(proj, params, layer, h)
+        new_ks.append(ck)
+        new_vs.append(cv)
+    x = rmsnorm(x, params["ln_final"], cfg.rmsnorm_eps)
+    logits = jnp.dot(x[:, 0], params["unembed"])
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens):
+    """Packed next-token cross-entropy (training path, ref kernels)."""
+    logits = forward(cfg, params, tokens)  # [B, S, V]
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ll = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,157 @@
+"""Binary interchange formats between the python build path and the rust
+runtime. Custom formats (serde/npz are unavailable on the rust side):
+
+weights file  (``*.atw`` — "Amber Tensor Weights"):
+    magic  b"ATWB"            u32-LE version (=1)
+    n_tensors u32
+    per tensor:
+        name_len u16, name utf-8
+        dtype u8  (0=f32, 1=i32, 2=i8, 3=u8)
+        ndim u8, dims i64 x ndim
+        byte_len u64, raw little-endian data
+
+The tensor ORDER in the file is the flattened-argument order of the lowered
+executable: rust loads the file sequentially into PJRT literals and appends
+the runtime inputs (tokens, positions, ...) after them. ``manifest.json``
+records, per artifact, the tensor names, the runtime-input specs and the
+output specs so the rust side can sanity-check shapes without ever parsing
+HLO.
+
+eval dataset file (``*.aev``):
+    magic b"AEVD"  version u32 (=1)
+    kind u8 (0 = multiple-choice, 1 = generation)
+    seq_len u32, n_rows u32, n_samples u32, n_choices u32 (0 for gen)
+    rows: n_rows x seq_len  i32 tokens (PAD-padded right)
+    per row (MC):   sample_id u32, choice_id u16, score_start u16,
+                    score_len u16, gold u16
+    per row (gen):  sample_id u32, prompt_len u16, gold_len u16,
+                    gold tokens i32 x 8 (zero-padded), max_gen u16
+"""
+
+import json
+import struct
+
+import numpy as np
+
+DTYPE_CODES = {"float32": 0, "int32": 1, "int8": 2, "uint8": 3}
+
+
+def write_weights(path, tensors):
+    """tensors: list of (name, np.ndarray). Order == executable arg order."""
+    with open(path, "wb") as f:
+        f.write(b"ATWB")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = DTYPE_CODES[arr.dtype.name]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<q", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_weights(path):
+    """Round-trip reader (tests + python-side verification)."""
+    out = []
+    inv = {v: k for k, v in DTYPE_CODES.items()}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"ATWB"
+        _, n = struct.unpack("<II", f.read(8))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = [struct.unpack("<q", f.read(8))[0] for _ in range(ndim)]
+            (nb,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nb), dtype=inv[code]).reshape(dims)
+            out.append((name, arr))
+    return out
+
+
+def flatten_for_artifact(tree):
+    """Deterministic (name, array) flattening of a params/aux dict.
+
+    Sorted by key at each dict level — matching jax's pytree flattening
+    order for dicts, so the lowered executable's parameter order equals the
+    weights-file order by construction.
+    """
+    flat = []
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}.{k}" if prefix else k, node[k])
+        else:
+            flat.append((prefix, np.asarray(node)))
+
+    rec("", tree)
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# eval datasets
+# ---------------------------------------------------------------------------
+
+def write_eval_mc(path, seq_len, n_choices, rows, meta):
+    """rows: list of dicts(tokens list[int], sample u32, choice u16,
+    score_start, score_len, gold)."""
+    with open(path, "wb") as f:
+        f.write(b"AEVD")
+        f.write(struct.pack("<IBIIII", 1, 0, seq_len, len(rows),
+                            meta["n_samples"], n_choices))
+        for r in rows:
+            t = np.full(seq_len, 0, dtype=np.int32)
+            t[:len(r["tokens"])] = r["tokens"]
+            f.write(t.tobytes())
+        for r in rows:
+            f.write(struct.pack("<IHHHH", r["sample"], r["choice"],
+                                r["score_start"], r["score_len"], r["gold"]))
+
+
+def write_eval_gen(path, seq_len, rows, meta):
+    with open(path, "wb") as f:
+        f.write(b"AEVD")
+        f.write(struct.pack("<IBIIII", 1, 1, seq_len, len(rows),
+                            meta["n_samples"], 0))
+        for r in rows:
+            t = np.full(seq_len, 0, dtype=np.int32)
+            t[:len(r["tokens"])] = r["tokens"]
+            f.write(t.tobytes())
+        for r in rows:
+            gold = np.zeros(8, dtype=np.int32)
+            gold[:len(r["gold"])] = r["gold"]
+            f.write(struct.pack("<IHH", r["sample"], len(r["tokens"]),
+                                len(r["gold"])))
+            f.write(gold.tobytes())
+            f.write(struct.pack("<H", r["max_gen"]))
+
+
+def read_eval(path):
+    """Python-side reader for tests."""
+    with open(path, "rb") as f:
+        assert f.read(4) == b"AEVD"
+        ver, kind, seq_len, n_rows, n_samples, n_choices = struct.unpack(
+            "<IBIIII", f.read(21))
+        rows = np.frombuffer(f.read(4 * seq_len * n_rows),
+                             dtype=np.int32).reshape(n_rows, seq_len)
+        metas = []
+        for _ in range(n_rows):
+            if kind == 0:
+                metas.append(struct.unpack("<IHHHH", f.read(12)))
+            else:
+                sid, plen, glen = struct.unpack("<IHH", f.read(8))
+                gold = np.frombuffer(f.read(32), dtype=np.int32)[:glen]
+                (mg,) = struct.unpack("<H", f.read(2))
+                metas.append((sid, plen, tuple(gold.tolist()), mg))
+    return dict(kind=kind, seq_len=seq_len, n_samples=n_samples,
+                n_choices=n_choices, rows=rows, metas=metas)
+
+
+def write_manifest(path, manifest: dict):
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)

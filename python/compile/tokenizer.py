@@ -1,0 +1,105 @@
+"""Structured synthetic vocabulary (384 tokens).
+
+The tiny models are trained on a synthetic token language rich enough to
+support analogues of the paper's downstream tasks (DESIGN.md §2). The
+vocabulary is partitioned into functional regions:
+
+    0..9     control: PAD BOS EOS SEP QRY ANS TRUE FALSE YES NO
+    10..19   digits 0-9
+    20..31   operators / markers
+    32..47   relation tokens R0..R15 (facts)
+    48..79   entity tokens  E0..E31 (facts)
+    80..207  word subspace A (English-analogue, 128 words)
+    208..335 word subspace B (Chinese-analogue, 128 words)
+    336..383 key tokens K0..K47 (long-context KV recall)
+"""
+
+VOCAB_SIZE = 384
+
+PAD, BOS, EOS, SEP, QRY, ANS, TRUE, FALSE, YES, NO = range(10)
+
+DIGIT0 = 10          # digits are DIGIT0 + d
+
+
+def digit(d: int) -> int:
+    assert 0 <= d <= 9
+    return DIGIT0 + d
+
+
+PLUS, MINUS, TIMES, EQ, LT, GT, IS, COMMA, SEL1, SEL2, SORT, THEN = range(20, 32)
+
+REL0 = 32
+N_RELS = 16
+
+
+def rel(r: int) -> int:
+    assert 0 <= r < N_RELS
+    return REL0 + r
+
+
+ENT0 = 48
+N_ENTS = 32
+
+
+def ent(e: int) -> int:
+    assert 0 <= e < N_ENTS
+    return ENT0 + e
+
+
+WORD_A0 = 80
+N_WORDS_A = 128
+
+
+def word_a(w: int) -> int:
+    assert 0 <= w < N_WORDS_A
+    return WORD_A0 + w
+
+
+WORD_B0 = 208
+N_WORDS_B = 128
+
+
+def word_b(w: int) -> int:
+    assert 0 <= w < N_WORDS_B
+    return WORD_B0 + w
+
+
+KEY0 = 336
+N_KEYS = 48
+
+
+def key(k: int) -> int:
+    assert 0 <= k < N_KEYS
+    return KEY0 + k
+
+
+_NAMES = {
+    PAD: "<pad>", BOS: "<bos>", EOS: "<eos>", SEP: "<sep>", QRY: "<qry>",
+    ANS: "<ans>", TRUE: "<true>", FALSE: "<false>", YES: "<yes>", NO: "<no>",
+    PLUS: "+", MINUS: "-", TIMES: "*", EQ: "=", LT: "<", GT: ">",
+    IS: "is", COMMA: ",", SEL1: "<sel1>", SEL2: "<sel2>", SORT: "<sort>",
+    THEN: "<then>",
+}
+
+
+def token_name(t: int) -> str:
+    """Human-readable token name (debugging / example transcripts)."""
+    if t in _NAMES:
+        return _NAMES[t]
+    if DIGIT0 <= t < DIGIT0 + 10:
+        return str(t - DIGIT0)
+    if REL0 <= t < REL0 + N_RELS:
+        return f"r{t - REL0}"
+    if ENT0 <= t < ENT0 + N_ENTS:
+        return f"E{t - ENT0}"
+    if WORD_A0 <= t < WORD_A0 + N_WORDS_A:
+        return f"a{t - WORD_A0}"
+    if WORD_B0 <= t < WORD_B0 + N_WORDS_B:
+        return f"b{t - WORD_B0}"
+    if KEY0 <= t < KEY0 + N_KEYS:
+        return f"k{t - KEY0}"
+    return f"<{t}>"
+
+
+def detok(tokens) -> str:
+    return " ".join(token_name(int(t)) for t in tokens)

@@ -1,0 +1,171 @@
+"""Tiny-model trainer (build path).
+
+Trains the substitute models on the structured synthetic corpus so that
+the activation statistics Amber Pruner exploits (near-zero mass, channel
+outliers, per-channel weight-norm spread) are *emergent*, not faked.
+
+Pure-jnp model path (no Pallas — that's the AOT path), Adam + cosine decay
+with linear warmup, gradient clipping. Checkpoints are cached under
+``artifacts/ckpt/<name>.npz``; `make artifacts` skips training when the
+checkpoint exists and the config hash matches.
+
+Run manually:  cd python && python -m compile.train [model ...]
+"""
+
+import functools
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import corpus
+from .configs import MODELS, ModelConfig, TrainConfig
+from . import model as model_mod
+from . import model_moe as moe_mod
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def cfg_hash(cfg: ModelConfig, tc: TrainConfig) -> str:
+    blob = json.dumps([cfg.__dict__, tc.__dict__], sort_keys=True,
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return dict(m=z, v=jax.tree_util.tree_map(jnp.zeros_like, params),
+                step=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(tc: TrainConfig, step):
+    warm = jnp.minimum(step / max(tc.warmup, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup) / max(tc.steps - tc.warmup, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(x * x)
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, loss_fn):
+    @jax.jit
+    def step_fn(params, opt, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens))(params)
+        gn = global_norm(grads)
+        clip = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+        step = opt["step"] + 1
+        lr = lr_schedule(tc, step)
+        b1, b2, eps = 0.9, 0.95, 1e-9
+
+        def upd(m, g):
+            return b1 * m + (1 - b1) * g
+
+        def updv(v, g):
+            return b2 * v + (1 - b2) * g * g
+
+        m = jax.tree_util.tree_map(upd, opt["m"], grads)
+        v = jax.tree_util.tree_map(updv, opt["v"], grads)
+        mhat = jax.tree_util.tree_map(
+            lambda x: x / (1 - b1 ** step.astype(jnp.float32)), m)
+        vhat = jax.tree_util.tree_map(
+            lambda x: x / (1 - b2 ** step.astype(jnp.float32)), v)
+        new_params = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps)
+                                        + tc.weight_decay * p),
+            params, mhat, vhat)
+        return new_params, dict(m=m, v=v, step=step), loss, gn
+    return step_fn
+
+
+def train_model(name: str, verbose=True):
+    cfg, tc = MODELS[name]
+    is_moe = cfg.is_moe
+    mod = moe_mod if is_moe else model_mod
+    key = jax.random.PRNGKey(tc.seed)
+    params = mod.init_params(cfg, key)
+    opt = adam_init(params)
+    step_fn = make_train_step(cfg, tc, mod.loss_fn)
+    stream = corpus.training_stream(tc.seed, tc.skills, tc.batch_size,
+                                    tc.seq_len)
+    t0 = time.time()
+    losses = []
+    for i in range(tc.steps):
+        tokens = jnp.asarray(next(stream))
+        params, opt, loss, gn = step_fn(params, opt, tokens)
+        if i % tc.log_every == 0 or i == tc.steps - 1:
+            losses.append((i, float(loss)))
+            if verbose:
+                dt = time.time() - t0
+                print(f"[{name}] step {i:5d} loss {float(loss):.4f} "
+                      f"gnorm {float(gn):.2f} ({dt:.0f}s)", flush=True)
+    # long-context phase (fresh jit: different shapes)
+    if tc.long_steps > 0:
+        long_stream = corpus.training_stream(
+            tc.seed + 1_000_003, corpus.LONG_SKILLS, tc.long_batch,
+            tc.long_seq)
+        long_step_fn = make_train_step(cfg, tc, mod.loss_fn)
+        for i in range(tc.long_steps):
+            tokens = jnp.asarray(next(long_stream))
+            params, opt, loss, gn = long_step_fn(params, opt, tokens)
+            if i % tc.log_every == 0 or i == tc.long_steps - 1:
+                losses.append((tc.steps + i, float(loss)))
+                if verbose:
+                    dt = time.time() - t0
+                    print(f"[{name}] long {i:5d} loss {float(loss):.4f} "
+                          f"({dt:.0f}s)", flush=True)
+    return params, losses
+
+
+def save_checkpoint(name, params, losses, h):
+    os.makedirs(os.path.join(ARTIFACTS, "ckpt"), exist_ok=True)
+    path = os.path.join(ARTIFACTS, "ckpt", f"{name}.npz")
+    flat = {k: np.asarray(v) for k, v in params.items()}
+    np.savez(path, __hash__=np.frombuffer(
+        h.encode(), dtype=np.uint8), **flat)
+    with open(os.path.join(ARTIFACTS, "ckpt", f"{name}.loss.json"), "w") as f:
+        json.dump(losses, f)
+    return path
+
+
+def load_checkpoint(name):
+    path = os.path.join(ARTIFACTS, "ckpt", f"{name}.npz")
+    if not os.path.exists(path):
+        return None, None
+    z = np.load(path)
+    h = bytes(z["__hash__"]).decode()
+    params = {k: jnp.asarray(z[k]) for k in z.files if k != "__hash__"}
+    return params, h
+
+
+def get_or_train(name: str, verbose=True):
+    """Cached-train entrypoint used by aot.py."""
+    cfg, tc = MODELS[name]
+    h = cfg_hash(cfg, tc)
+    params, got = load_checkpoint(name)
+    if params is not None and got == h:
+        if verbose:
+            print(f"[{name}] using cached checkpoint")
+        return params
+    params, losses = train_model(name, verbose)
+    save_checkpoint(name, params, losses, h)
+    return params
+
+
+def main():
+    import sys
+    names = sys.argv[1:] or list(MODELS)
+    for name in names:
+        get_or_train(name)
+
+
+if __name__ == "__main__":
+    main()

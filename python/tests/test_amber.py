@@ -1,0 +1,273 @@
+"""Amber algorithm tests: scoring, sensitivity/skip policy, smoothquant
+folding identity, W8A8 quantization, weight-sparsity baselines."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.configs import ModelConfig, DENSE_MODULES
+from compile.amber import quant, scoring, sensitivity, smoothquant, topk
+from compile.amber import weight_sparsity as ws
+
+CFG = ModelConfig(name="t", vocab_size=64, d_model=32, n_layers=2,
+                  n_q_heads=2, n_kv_heads=1, head_dim=16, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(3))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(5)
+    return jnp.asarray(rng.integers(1, 64, (4, 16)), jnp.int32)
+
+
+# ---------------------------------------------------------------- scoring
+
+def test_wanda_scales_min_normalized():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    s = scoring.wanda_scales(w)
+    assert s.shape == (32,)
+    assert float(jnp.min(s)) == pytest.approx(1.0, rel=1e-4)
+    assert jnp.all(s >= 1.0 - 1e-6)
+
+
+def test_robust_norm_clips_outliers():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    w2 = w.copy()
+    w2[0, 0] = 1000.0  # single extreme outlier
+    s1 = scoring.robust_norm_scales(jnp.asarray(w))
+    s2 = scoring.robust_norm_scales(jnp.asarray(w2))
+    # robust scoring must be nearly insensitive to the single outlier
+    ratio = float(s2[0] / s1[0])
+    assert ratio < 2.0, f"outlier leaked into robust score: {ratio}"
+    # while plain wanda scoring explodes
+    w1 = scoring.wanda_scales(jnp.asarray(w))
+    w2s = scoring.wanda_scales(jnp.asarray(w2))
+    assert float(w2s[0] / w1[0]) > 10.0
+
+
+def test_build_aux_scales_shapes(params):
+    aux = scoring.build_aux_scales(CFG, params, "robust")
+    assert aux["scale_q"].shape == (2, 32)
+    assert aux["scale_o"].shape == (2, CFG.q_dim)
+    assert aux["scale_d"].shape == (2, 64)
+    ones = scoring.build_aux_scales(CFG, params, "ones")
+    assert float(jnp.max(jnp.abs(ones["scale_q"] - 1.0))) == 0.0
+
+
+def test_scored_pruning_reduces_output_error(params):
+    """The Wanda-like score (Eq. 2) must beat naive top-k on the metric it
+    optimizes: ||Wx - Wx'||_2, with weight columns of varied norms."""
+    rng = np.random.default_rng(2)
+    din, dout = 64, 32
+    # weights with strongly varying input-channel norms
+    col_scale = rng.uniform(0.05, 3.0, size=(din, 1))
+    w = jnp.asarray((rng.normal(size=(din, dout)) * col_scale)
+                    .astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(128, din)).astype(np.float32))
+    y = x @ w
+    s = scoring.wanda_scales(w)
+    from compile.kernels import ref
+    err_naive, err_scored = 0.0, 0.0
+    xn = ref.nm_prune(x, jnp.ones((din,)), 2, 4)
+    xs = ref.nm_prune(x, s, 2, 4)
+    err_naive = float(jnp.linalg.norm(xn @ w - y))
+    err_scored = float(jnp.linalg.norm(xs @ w - y))
+    assert err_scored < err_naive
+
+
+# ------------------------------------------------------------ sensitivity
+
+def test_sensitivity_sweep_and_policy(params, tokens):
+    errs = sensitivity.sensitivity_sweep(CFG, params, tokens, (2, 4))
+    assert errs.shape == (2, len(DENSE_MODULES))
+    assert (errs >= 0).all()
+    skip = sensitivity.select_skip_layers(errs, 1)
+    assert len(skip) == 1
+    keep = sensitivity.build_keep_dense(CFG, skip)
+    keep = np.asarray(keep)
+    # k/v/o/up never pruned
+    for mod in ("k_proj", "v_proj", "o_proj", "up_proj"):
+        assert (keep[:, M.MODULE_IDX[mod]] == 1.0).all()
+    # down always pruned
+    assert (keep[:, M.MODULE_IDX["down_proj"]] == 0.0).all()
+    # q/gate pruned except in skip layers
+    for li in range(CFG.n_layers):
+        expect = 1.0 if li in skip else 0.0
+        assert keep[li, M.MODULE_IDX["q_proj"]] == expect
+
+
+def test_no_skip_prunes_everything():
+    keep = np.asarray(sensitivity.build_keep_dense(CFG, [], no_skip=True))
+    assert (keep == 0.0).all()
+
+
+def test_coverage_accounting():
+    keep = sensitivity.build_keep_dense(CFG, [])
+    cov = sensitivity.coverage(CFG, keep)
+    fl = sensitivity.linear_flops_prefill(CFG, 1)
+    expect = (fl["q_proj"] + fl["gate_proj"] + fl["down_proj"]) / sum(
+        fl.values())
+    assert cov == pytest.approx(expect)
+
+
+# ------------------------------------------------------------ smoothquant
+
+def test_smoothing_identity():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    s = smoothquant.smoothquant_scale(
+        jnp.max(jnp.abs(x), axis=0), jnp.max(jnp.abs(w), axis=1), 0.5)
+    xs, wss = smoothquant.apply_smoothing(x, w, s)
+    np.testing.assert_allclose(np.asarray(xs @ wss), np.asarray(x @ w),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_inverted_scale_expands_activations():
+    x_absmax = jnp.asarray([4.0, 2.0, 8.0])
+    w_absmax = jnp.asarray([1.0, 1.0, 1.0])
+    s = smoothquant.smoothquant_scale(x_absmax, w_absmax, 0.10)
+    s_hat = smoothquant.outstanding_scale(x_absmax, w_absmax, 0.10)
+    np.testing.assert_allclose(np.asarray(s_hat), 1.0 / np.asarray(s),
+                               rtol=1e-6)
+    # dividing activations by s_hat (<1 for outlier channels) expands them
+    assert float(s_hat[2]) < 1.0
+
+
+def test_fold_into_params_preserves_forward(params, tokens):
+    """Folding s into ln gains + consumer weights must preserve the
+    function exactly for q/k/v and gate/up."""
+    base = M.forward(CFG, params, tokens)
+    s = jnp.asarray(np.random.default_rng(4).uniform(0.5, 2.0, 32)
+                    .astype(np.float32))
+    p2 = smoothquant.fold_into_params(params, 0, "q_proj", s)
+    out = M.forward(CFG, p2, tokens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               atol=2e-4, rtol=2e-4)
+    p3 = smoothquant.fold_into_params(params, 1, "gate_proj", s)
+    out3 = M.forward(CFG, p3, tokens)
+    np.testing.assert_allclose(np.asarray(out3), np.asarray(base),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_fold_down_proj_preserves_forward(params, tokens):
+    base = M.forward(CFG, params, tokens)
+    s = jnp.asarray(np.random.default_rng(5).uniform(0.5, 2.0, CFG.d_ff)
+                    .astype(np.float32))
+    p2 = smoothquant.fold_into_params(params, 0, "down_proj", s)
+    out = M.forward(CFG, p2, tokens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------------------ quant
+
+def test_weight_quant_roundtrip_error():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32) * 0.2)
+    wq, s = quant.quantize_weight(w)
+    wd = quant.dequantize_weight(wq, s)
+    assert float(jnp.max(jnp.abs(wd - w))) <= float(jnp.max(s)) * 0.51
+
+
+def test_skip_policy_families():
+    sa = quant.skip_policy("tiny-lm-a", 6)
+    assert (0, "q_proj") in sa          # first layers fully skipped
+    assert (5, "down_proj") in sa       # down always skipped
+    assert (5, "q_proj") not in sa
+    sb = quant.skip_policy("tiny-lm-b", 6)
+    assert (0, "q_proj") not in sb
+    assert (3, "down_proj") in sb
+    sm = quant.skip_policy("tiny-moe", 4)
+    assert (2, "gate_proj") in sm
+
+
+def test_collect_stats_and_qparams(params, tokens):
+    stats = quant.collect_activation_stats(CFG, params, [tokens], None)
+    for mod in DENSE_MODULES:
+        assert stats[mod][0]["tmax"] > 0
+    qp = quant.build_qparams(CFG, params, stats, "tiny-lm-b")
+    assert qp["wq"]["q_proj"].dtype == jnp.int8
+    assert qp["wq"]["q_proj"].shape == (2, 32, CFG.q_dim)
+    assert not qp["quantized"]["down_proj"][0]
+    assert qp["quantized"]["q_proj"][0]
+    # quantized matmul close to fp
+    from compile.kernels import ref
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(8, 32))
+                    .astype(np.float32))
+    y = ref.w8a8_matmul(
+        x, qp["wq"]["q_proj"][0], qp["w_scale"]["q_proj"][0],
+        jnp.float32(qp["x_scale"]["q_proj"][0]))
+    yf = x @ params["wq"][0]
+    rel = float(jnp.linalg.norm(y - yf) / jnp.linalg.norm(yf))
+    assert rel < 0.1, rel
+
+
+# -------------------------------------------------------- weight sparsity
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ratio=st.sampled_from([(2, 4),
+                                                              (4, 8)]))
+def test_weight_masks_are_nm(seed, ratio):
+    n, m = ratio
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    for pruned in [
+        ws.magnitude_prune(w, n, m),
+        ws.wanda_prune(w, jnp.asarray(rng.uniform(0.1, 2.0, 32)
+                                      .astype(np.float32)), n, m),
+    ]:
+        g = np.asarray(pruned).reshape(32 // m, m, 16)
+        nz = (g != 0).sum(axis=1)
+        assert (nz <= n).all()
+
+
+def test_sparsegpt_beats_magnitude_on_reconstruction():
+    """SparseGPT's OBS update must beat plain magnitude pruning on
+    calibration-set reconstruction error."""
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(256, 32)).astype(np.float32)
+    # correlated inputs (where OBS compensation matters)
+    x[:, 1] = 0.9 * x[:, 0] + 0.1 * x[:, 1]
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    h = x.T @ x
+    y = x @ np.asarray(w)
+    w_sg = ws.sparsegpt_prune(w, h, 2, 4)
+    w_mag = ws.magnitude_prune(w, 2, 4)
+    e_sg = np.linalg.norm(x @ np.asarray(w_sg) - y)
+    e_mag = np.linalg.norm(x @ np.asarray(w_mag) - y)
+    assert e_sg < e_mag, f"sparsegpt {e_sg} !< magnitude {e_mag}"
+
+
+def test_prune_model_weights_all_methods(params, tokens):
+    calib = ws.collect_weight_calibration(
+        CFG, params, [tokens], lambda p, t: M.loss_fn(CFG, p, t))
+    for method in ("magnitude", "wanda", "sparsegpt", "prunerzero"):
+        p2 = ws.prune_model_weights(CFG, params, calib, method, 2, 4)
+        # every linear is 2:4 along d_in
+        for wname in ("wq", "wk", "wv", "wo", "wg", "wu", "wd"):
+            w = np.asarray(p2[wname][0])
+            g = w.reshape(w.shape[0] // 4, 4, w.shape[1])
+            assert ((g != 0).sum(axis=1) <= 2).all(), (method, wname)
+        # model still runs
+        out = M.forward(CFG, p2, tokens)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+# ------------------------------------------------------------------ topk
+
+def test_naive_mask_validity():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    mask = topk.naive_mask(x, 2, 4)
+    assert topk.is_valid_nm(mask, 2, 4)
+    assert topk.density(mask, 2, 4) == pytest.approx(0.5)

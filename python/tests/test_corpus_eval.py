@@ -1,0 +1,139 @@
+"""Corpus / task-generator / binary-format tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, evalgen, params_io
+from compile import tokenizer as tok
+
+
+def test_world_deterministic():
+    a, b = corpus.World(1), corpus.World(1)
+    assert (a.fact == b.fact).all()
+    assert (a.gram_a == b.gram_a).all()
+    c = corpus.World(2)
+    assert (a.fact != c.fact).any()
+
+
+def test_skills_produce_valid_tokens():
+    rng = np.random.Generator(np.random.PCG64(0))
+    for name, fn in corpus.SKILLS.items():
+        for _ in range(20):
+            s = fn(rng, corpus.WORLD)
+            assert len(s) > 0, name
+            assert all(0 <= t < tok.VOCAB_SIZE for t in s), name
+
+
+def test_pack_batch_shape_and_bos():
+    rng = np.random.Generator(np.random.PCG64(1))
+    b = corpus.pack_batch(rng, corpus.WORLD, ("arith", "boolean"), 4, 32)
+    assert b.shape == (4, 32)
+    assert (b[:, 0] == tok.BOS).all()
+    assert b.dtype == np.int32
+
+
+def test_chain_example_semantics():
+    rng = np.random.Generator(np.random.PCG64(2))
+    for _ in range(50):
+        toks, t, f = corpus.chain_example(rng)
+        assert toks[0] == tok.QRY and toks[6] == tok.ANS
+        assert toks[7] == tok.digit(t) and toks[8] == tok.digit(f)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_kv_recall_answer_is_consistent(seed):
+    rng = np.random.Generator(np.random.PCG64(seed))
+    s = corpus.gen_kv_recall(rng, corpus.WORLD)
+    q = s.index(tok.QRY)
+    qkey = s[q + 1]
+    ans = s[q + 3]
+    # find the value paired with qkey in the context
+    pairs = {s[i]: s[i + 1] for i in range(0, q, 2)}
+    assert pairs[qkey] == ans
+
+
+def test_mc_tasks_golds_and_choices():
+    for tid, (name, (fn, n_choices, _)) in enumerate(
+            evalgen.MC_TASKS.items()):
+        rng = evalgen._rng(tid)
+        samples = fn(rng, 25)
+        assert len(samples) == 25, name
+        for ctx, choices, gold in samples:
+            assert len(choices) == n_choices, name
+            assert 0 <= gold < n_choices, name
+            assert len(ctx) + max(len(c) for c in choices) <= evalgen.SEQ
+
+def test_facts_tasks_agree_with_world():
+    rng = evalgen._rng(3)
+    for ctx, choices, gold in evalgen.task_mmlu(rng, 30):
+        e = ctx[2] - tok.ENT0
+        r = ctx[3] - tok.REL0
+        assert choices[gold][0] == tok.ent(int(corpus.WORLD.fact[r, e]))
+
+
+def test_longbench_fits_window():
+    rng = evalgen._rng(100)
+    for row in evalgen.task_longbench_kv(rng, 8):
+        assert len(row["tokens"]) <= evalgen.LONG_SEQ
+    for row in evalgen.task_longbench_induction(rng, 4):
+        assert len(row["tokens"]) <= evalgen.LONG_SEQ
+
+
+def test_eval_binary_roundtrip(tmp_path):
+    rng = evalgen._rng(0)
+    samples = evalgen.task_boolq(rng, 10)
+    rows = evalgen._mc_rows(samples)
+    p = tmp_path / "x.aev"
+    params_io.write_eval_mc(str(p), 64, 2, rows, dict(n_samples=10))
+    back = params_io.read_eval(str(p))
+    assert back["kind"] == 0
+    assert back["n_samples"] == 10
+    assert back["n_choices"] == 2
+    assert back["rows"].shape == (20, 64)
+    sid, cid, ss, sl, gold = back["metas"][0]
+    assert (sid, cid) == (0, 0)
+    assert sl == 1
+
+
+def test_gen_binary_roundtrip(tmp_path):
+    rng = evalgen._rng(1)
+    rows = evalgen.task_gsm8k(rng, 5)
+    p = tmp_path / "g.aev"
+    params_io.write_eval_gen(str(p), 64, rows, dict(n_samples=5))
+    back = params_io.read_eval(str(p))
+    assert back["kind"] == 1
+    assert len(back["metas"]) == 5
+    sid, plen, gold, mg = back["metas"][0]
+    assert len(gold) == 2 and mg == 4
+    assert plen == len(rows[0]["tokens"])
+
+
+def test_weights_binary_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = [
+        ("a.f32", rng.normal(size=(3, 4)).astype(np.float32)),
+        ("b.i32", rng.integers(0, 10, (2,)).astype(np.int32)),
+        ("c.i8", rng.integers(-5, 5, (4, 2, 2)).astype(np.int8)),
+    ]
+    p = tmp_path / "w.atw"
+    params_io.write_weights(str(p), tensors)
+    back = params_io.read_weights(str(p))
+    assert [n for n, _ in back] == ["a.f32", "b.i32", "c.i8"]
+    for (n1, t1), (n2, t2) in zip(tensors, back):
+        assert t1.dtype == t2.dtype
+        np.testing.assert_array_equal(t1, t2)
+
+
+def test_flatten_order_matches_jax():
+    """flatten_for_artifact must match jax's dict pytree leaf order (the
+    lowered executable's parameter order)."""
+    import jax
+    tree = {"b": {"y": np.zeros(2), "x": np.zeros(3)}, "a": np.zeros(1)}
+    ours = [n for n, _ in params_io.flatten_for_artifact(tree)]
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    jax_names = [
+        ".".join(str(k.key) for k in path) for path, _ in leaves
+    ]
+    assert ours == jax_names == ["a", "b.x", "b.y"]

@@ -1,0 +1,169 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/ratios/scales; exact agreement is required (same
+tie-breaks, same accumulation dtype) because the AOT artifacts embed the
+Pallas path while training/scoring used the oracle path.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import attention as k_attn
+from compile.kernels import nm_prune as k_prune
+from compile.kernels import nm_spmm as k_spmm
+from compile.kernels import quant_matmul as k_quant
+
+RATIOS = [(2, 4), (4, 8), (8, 16)]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("n,m", RATIOS)
+def test_nm_mask_is_exact(n, m):
+    rng = np.random.default_rng(0)
+    x = rand(rng, 16, 64)
+    mask = ref.nm_mask(jnp.abs(x), n, m)
+    g = mask.reshape(16, 64 // m, m)
+    counts = jnp.sum(g, axis=-1)
+    assert jnp.all(counts == n), "mask must be exactly N per M-group"
+
+
+def test_nm_mask_tie_break_lower_index():
+    x = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+    mask = ref.nm_mask(x, 2, 4)
+    assert mask.tolist() == [[1.0, 1.0, 0.0, 0.0]]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t_tiles=st.integers(1, 3),
+    groups=st.integers(1, 6),
+    ratio=st.sampled_from(RATIOS),
+    seed=st.integers(0, 2**31 - 1),
+    scaled=st.booleans(),
+)
+def test_prune_kernel_matches_ref(t_tiles, groups, ratio, seed, scaled):
+    n, m = ratio
+    t, d = t_tiles * k_prune.TOKEN_TILE, groups * m
+    rng = np.random.default_rng(seed)
+    x = rand(rng, t, d)
+    scale = (
+        jnp.asarray(rng.uniform(0.5, 3.0, d).astype(np.float32))
+        if scaled
+        else jnp.ones((d,), jnp.float32)
+    )
+    got = k_prune.nm_prune(x, scale, n, m)
+    want = ref.nm_prune(x, scale, n, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ratio=st.sampled_from(RATIOS),
+    dout=st.sampled_from([8, 48, 96, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_prune_matmul_matches_ref(ratio, dout, seed):
+    n, m = ratio
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 32, 64)
+    w = rand(rng, 64, dout)
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, 64).astype(np.float32))
+    got = k_spmm.nm_prune_matmul(x, w, scale, n, m)
+    want = ref.nm_prune_matmul(x, w, scale, n, m)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_keep_dense_flag_bypasses_pruning():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 16, 32)
+    w = rand(rng, 32, 16)
+    ones = jnp.ones((32,), jnp.float32)
+    keep = jnp.ones((), jnp.float32)
+    got = k_spmm.nm_prune_matmul(x, w, ones, 2, 4, keep)
+    np.testing.assert_allclose(got, ref.matmul(x, w), atol=1e-5)
+
+
+def test_dense_matmul_kernel():
+    rng = np.random.default_rng(2)
+    x = rand(rng, 32, 48)
+    w = rand(rng, 48, 96)
+    np.testing.assert_allclose(
+        k_spmm.matmul(x, w), ref.matmul(x, w), atol=1e-5, rtol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    x_scale=st.floats(0.01, 0.2),
+)
+def test_w8a8_matmul_matches_ref(seed, x_scale):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 16, 32)
+    wq = jnp.asarray(rng.integers(-127, 128, (32, 24)).astype(np.int8))
+    ws = jnp.asarray(rng.uniform(1e-3, 2e-2, 24).astype(np.float32))
+    got = k_quant.w8a8_matmul(x, wq, ws, x_scale)
+    want = ref.w8a8_matmul(x, wq, ws, jnp.float32(x_scale))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,m", RATIOS)
+def test_w8a8_nm_fused_matches_ref(n, m):
+    rng = np.random.default_rng(7)
+    x = rand(rng, 16, 32)
+    wq = jnp.asarray(rng.integers(-127, 128, (32, 24)).astype(np.int8))
+    ws = jnp.asarray(rng.uniform(1e-3, 2e-2, 24).astype(np.float32))
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, 32).astype(np.float32))
+    got = k_quant.w8a8_nm_prune_matmul(x, wq, ws, 0.05, scale, n, m)
+    want = ref.w8a8_nm_prune_matmul(
+        x, wq, ws, jnp.float32(0.05), scale, n, m
+    )
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([8, 16, 32]),
+    hq=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_kernel_matches_ref(b, s, hq, group, seed):
+    hkv = max(hq // group, 1)
+    dh = 8
+    rng = np.random.default_rng(seed)
+    q = rand(rng, b, s, hq, dh)
+    k = rand(rng, b, s, hkv, dh)
+    v = rand(rng, b, s, hkv, dh)
+    got = k_attn.causal_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_compress_decompress_roundtrip():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 8, 32)
+    for n, m in RATIOS:
+        xp = ref.nm_prune(x, jnp.ones((32,)), n, m)
+        vals, idx = ref.nm_compress(xp, n, m)
+        back = ref.nm_decompress(vals, idx, m)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(xp))
+
+
+def test_rope_rotation_preserves_norm():
+    rng = np.random.default_rng(4)
+    x = rand(rng, 2, 8, 2, 16)
+    pos = jnp.broadcast_to(jnp.arange(8)[None, :], (2, 8))
+    r = ref.rope(x, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(r, axis=-1), jnp.linalg.norm(x, axis=-1),
+        atol=1e-4, rtol=1e-4,
+    )

@@ -1,0 +1,144 @@
+"""Layer-2 model tests: shapes, decode==prefill consistency, pallas==ref
+parity of the full forward, sparse-variant behaviors, MoE."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import model_moe as MM
+from compile.configs import ModelConfig
+
+CFG = ModelConfig(name="t", vocab_size=64, d_model=32, n_layers=2,
+                  n_q_heads=2, n_kv_heads=1, head_dim=16, d_ff=64)
+MOE = ModelConfig(name="tm", vocab_size=64, d_model=32, n_layers=2,
+                  n_q_heads=2, n_kv_heads=1, head_dim=16, d_ff=0,
+                  n_experts=2, top_k_experts=1, d_ff_expert=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe_params():
+    return MM.init_params(MOE, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(1, 64, (2, 16)), jnp.int32)
+
+
+def test_forward_shapes(params, tokens):
+    logits, ks, vs = M.forward(CFG, params, tokens, return_kv=True)
+    assert logits.shape == (2, 16, 64)
+    assert ks.shape == (2, 2, 16, 1, 16)  # [L, B, S, Hkv, Dh]
+    assert vs.shape == ks.shape
+
+
+def test_pallas_forward_matches_ref(params, tokens):
+    a = M.forward(CFG, params, tokens)
+    b = M.forward(CFG, params, tokens, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_pallas_sparse_forward_matches_ref(params, tokens):
+    aux = M.default_aux(CFG)
+    aux["keep_dense"] = jnp.zeros_like(aux["keep_dense"])
+    a = M.forward(CFG, params, tokens, variant="nm", nm=(2, 4), aux=aux)
+    b = M.forward(CFG, params, tokens, variant="nm", nm=(2, 4), aux=aux,
+                  use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sparse_with_all_keep_equals_dense(params, tokens):
+    aux = M.default_aux(CFG)  # keep_dense all ones
+    a = M.forward(CFG, params, tokens, variant="nm", nm=(2, 4), aux=aux)
+    b = M.forward(CFG, params, tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_perturbs_monotonically(params, tokens):
+    """2:4 must perturb the logits at least as much as 8:16 (on average)."""
+    aux = M.default_aux(CFG)
+    aux["keep_dense"] = jnp.zeros_like(aux["keep_dense"])
+    base = M.forward(CFG, params, tokens)
+
+    def err(nm):
+        y = M.forward(CFG, params, tokens, variant="nm", nm=nm, aux=aux)
+        return float(jnp.linalg.norm(y - base) / jnp.linalg.norm(base))
+
+    e24, e48, e816 = err((2, 4)), err((4, 8)), err((8, 16))
+    assert e24 > e816, f"{e24} !> {e816}"
+    assert e24 > 0 and e816 > 0
+
+
+def test_decode_matches_prefill(params, tokens):
+    """Teacher-forced decode over the cache == prefill logits."""
+    b, s = tokens.shape
+    cache = 24
+    logits_all, ks, vs = M.forward(CFG, params, tokens, return_kv=True)
+    # seed cache with prefix of length s-2
+    pre = s - 2
+    kc = jnp.zeros((CFG.n_layers, b, cache, CFG.n_kv_heads, CFG.head_dim))
+    vc = jnp.zeros_like(kc)
+    lg, kp, vp = M.forward(CFG, params, tokens[:, :pre], return_kv=True)
+    kc = kc.at[:, :, :pre].set(kp)
+    vc = vc.at[:, :, :pre].set(vp)
+    for i in range(pre, s):
+        lg_step, kc, vc = M.decode_step(
+            CFG, params, tokens[:, i],
+            jnp.full((b,), i, jnp.int32), kc, vc,
+            jnp.full((b,), i + 1, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg_step), np.asarray(logits_all[:, i]),
+            atol=5e-4, rtol=5e-4)
+
+
+def test_moe_forward_and_router(moe_params, tokens):
+    logits = MM.forward(MOE, moe_params, tokens)
+    assert logits.shape == (2, 16, 64)
+    # nm variant runs and differs from dense when pruning everything
+    aux = MM.moe_aux(MOE)
+    aux["keep_dense"] = jnp.zeros_like(aux["keep_dense"])
+    sp = MM.forward(MOE, moe_params, tokens, variant="nm", nm=(2, 4),
+                    aux=aux)
+    assert not np.allclose(np.asarray(sp), np.asarray(logits))
+
+
+def test_moe_decode_matches_prefill(moe_params, tokens):
+    b, s = tokens.shape
+    cache = 20
+    logits_all, ks, vs = MM.forward(MOE, moe_params, tokens,
+                                    return_kv=True)
+    kc = jnp.zeros((MOE.n_layers, b, cache, MOE.n_kv_heads, MOE.head_dim))
+    vc = jnp.zeros_like(kc)
+    pre = s - 1
+    lg, kp, vp = MM.forward(MOE, moe_params, tokens[:, :pre],
+                            return_kv=True)
+    kc = kc.at[:, :, :pre].set(kp)
+    vc = vc.at[:, :, :pre].set(vp)
+    lg_step, _, _ = MM.decode_step(
+        MOE, moe_params, tokens[:, pre],
+        jnp.full((b,), pre, jnp.int32), kc, vc,
+        jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_step),
+                               np.asarray(logits_all[:, pre]),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_loss_decreases_direction(params, tokens):
+    """Gradient step on the LM loss reduces the loss (sanity)."""
+    loss0, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(CFG, p, tokens))(params)
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 0.01 * g, params,
+                                     grads)
+    loss1 = M.loss_fn(CFG, params2, tokens)
+    assert float(loss1) < float(loss0)

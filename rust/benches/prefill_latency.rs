@@ -1,0 +1,98 @@
+//! End-to-end prefill latency through the AOT executables: dense vs each
+//! N:M ratio (fp and W8A8). On the CPU interpret substrate the sparse
+//! graphs pay an argsort overhead instead of gaining SpMM speedup — the
+//! *compute reduction* is reported by the coverage/ideal-speedup model and
+//! the native spmm bench; this bench pins down the absolute artifact
+//! latencies the coordinator schedules around (§Perf L2/L3).
+//!
+//! Skips gracefully when artifacts/ have not been built.
+
+use amber_pruner::bench::bench;
+use amber_pruner::runtime::ModelRuntime;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let Ok(mut rt) = ModelRuntime::new(dir) else {
+        println!("prefill_latency: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let model = "tiny-lm-a";
+    let weights = format!("{model}.atw");
+    let tokens: Vec<i32> = (0..8 * 64).map(|i| 1 + (i % 300) as i32).collect();
+
+    let mut variants: Vec<(String, Vec<String>)> = vec![
+        (format!("{model}.prefill64.dense"), vec![weights.clone()]),
+    ];
+    for (n, m) in [(2, 4), (4, 8), (8, 16)] {
+        let art = format!("{model}.prefill64.nm{n}_{m}");
+        if rt.manifest.artifacts.contains_key(&art) {
+            variants.push((
+                art,
+                vec![weights.clone(), format!("{model}.aux_ls.atw")],
+            ));
+        }
+    }
+    let sq = format!("{model}.prefill64.sq");
+    if rt.manifest.artifacts.contains_key(&sq) {
+        variants.push((sq, vec![format!("{model}.sq.atw")]));
+    }
+
+    println!("== prefill latency (batch 8 x seq 64) ==");
+    let mut dense_med = 0.0;
+    for (art, files) in variants {
+        let refs: Vec<&str> = files.iter().map(|s| s.as_str()).collect();
+        let binding = match rt.bind(&art, &refs) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("skip {art}: {e}");
+                continue;
+            }
+        };
+        let r = bench(&art, 2, 10, Some(8 * 64), || {
+            rt.prefill(&art, &binding, &tokens).expect("prefill");
+        });
+        if art.ends_with("dense") {
+            dense_med = r.median_secs;
+        } else if dense_med > 0.0 {
+            println!(
+                "    -> vs dense: {:.2}x (interpret-substrate overhead; \
+                 see spmm bench for the SpMM mechanism)",
+                dense_med / r.median_secs
+            );
+        }
+    }
+
+    // decode step latency (the TPOT floor)
+    let dec = format!("{model}.decode.dense");
+    if rt.manifest.artifacts.contains_key(&dec) {
+        let binding = rt.bind(&dec, &[&weights]).expect("bind decode");
+        let meta = rt.manifest.artifact(&dec).unwrap().clone();
+        let b = meta.batch;
+        let dims = rt.manifest.artifact(&dec).unwrap().runtime_inputs[2]
+            .0
+            .clone();
+        let n: usize = dims.iter().product();
+        let zeros = vec![0f32; n];
+        let k = amber_pruner::tensor::HostTensor::f32(
+            "k",
+            dims.iter().map(|&d| d as i64).collect(),
+            &zeros,
+        )
+        .to_literal()
+        .unwrap();
+        let v = amber_pruner::tensor::HostTensor::f32(
+            "v",
+            dims.iter().map(|&d| d as i64).collect(),
+            &zeros,
+        )
+        .to_literal()
+        .unwrap();
+        let token = vec![5i32; b];
+        let pos = vec![3i32; b];
+        let kv_len = vec![4i32; b];
+        bench(&dec, 2, 10, Some(b as u64), || {
+            rt.decode(&dec, &binding, &token, &pos, &k, &v, &kv_len)
+                .expect("decode");
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Coordinator micro-benchmarks (no PJRT): prefill-queue packing, KV slot
+//! admit/release, router dispatch. These are the L3 hot-loop costs that
+//! must stay negligible next to the model execution (§Perf L3 target).
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use amber_pruner::bench::{bench, black_box};
+use amber_pruner::coordinator::batcher::{routing, ConfigKey, PrefillQueues};
+use amber_pruner::coordinator::kv::KvSlots;
+use amber_pruner::coordinator::request::{Request, SparsityConfig, Tracked};
+use amber_pruner::util::rng::Rng;
+
+fn tracked(id: u64, cfg: SparsityConfig) -> Tracked {
+    let (tx, rx) = channel();
+    std::mem::forget(rx);
+    Tracked {
+        req: Request { id, prompt: vec![1; 32], max_new_tokens: 8,
+                       config: cfg },
+        arrived: Instant::now(),
+        first_token_at: None,
+        generated: vec![],
+        reply: tx,
+    }
+}
+
+fn main() {
+    println!("== coordinator micro-benches ==");
+    let configs = [
+        SparsityConfig::dense(),
+        SparsityConfig::amber(2, 4),
+        SparsityConfig::amber(8, 16),
+        SparsityConfig::outstanding(4, 8),
+    ];
+
+    bench("queue push+pack (1024 reqs, 4 configs)", 3, 20, Some(1024),
+          || {
+        let mut q = PrefillQueues::new(8, 0.001);
+        let mut rng = Rng::new(1);
+        for i in 0..1024u64 {
+            let cfg = configs[rng.usize_below(4)];
+            let (p, _, _) = routing("tiny-lm-a", 64, &cfg);
+            q.push(ConfigKey(p), tracked(i, cfg));
+        }
+        let now = Instant::now();
+        let mut total = 0;
+        while let Some((_, b)) = q.next_batch(8, true, now) {
+            total += b.len();
+        }
+        assert_eq!(total, 1024);
+        black_box(total);
+    });
+
+    // KV slot admit/release churn at serving-like geometry
+    let (l, slots, c, h, d) = (6usize, 8usize, 320usize, 1usize, 32usize);
+    let pre = vec![0.5f32; l * 8 * 64 * h * d];
+    bench("kv admit+release (8 slots, 64-token prefill)", 3, 50,
+          Some(8), || {
+        let mut kv = KvSlots::new(l, slots, c, h, d);
+        for i in 0..8 {
+            kv.admit(i as u64, &pre, &pre, i, 8, 64, 48).unwrap();
+        }
+        for i in 0..8 {
+            kv.release(i);
+        }
+        black_box(kv.free_slots());
+    });
+
+    bench("routing resolution x1000", 3, 50, Some(1000), || {
+        let mut acc = 0usize;
+        for i in 0..1000u64 {
+            let cfg = configs[(i % 4) as usize];
+            let (p, d, w) = routing("tiny-lm-a", 64, &cfg);
+            acc += p.len() + d.len() + w.len();
+        }
+        black_box(acc);
+    });
+}

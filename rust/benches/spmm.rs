@@ -1,0 +1,59 @@
+//! PERF bench: native N:M compressed SpMM vs dense matmul.
+//!
+//! This is the CPU stand-in for the paper's SpMM hardware: the compressed
+//! kernel touches n/m of the weight rows, so wall-clock should scale
+//! toward n/m of dense at matmul-bound sizes. Regenerates the mechanism
+//! behind the paper's acceleration claims (EXPERIMENTS.md §Perf).
+
+use amber_pruner::bench::{bench, black_box};
+use amber_pruner::quant;
+use amber_pruner::sparsity::spmm::{dense_matmul, NmCompressed};
+use amber_pruner::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn main() {
+    println!("== spmm: dense vs N:M compressed (f32) ==");
+    let mut rng = Rng::new(42);
+    // prefill-like projection sizes: T tokens x (din -> dout)
+    for &(t, din, dout) in &[(256usize, 384usize, 384usize),
+                             (512, 384, 1536),
+                             (512, 1536, 384)] {
+        let x = rand_vec(&mut rng, t * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let name = format!("dense       {t}x{din}x{dout}");
+        let dense = bench(&name, 2, 8, Some((t * din * dout) as u64), || {
+            black_box(dense_matmul(&x, t, din, &w, dout));
+        });
+        for &(n, m) in &[(2usize, 4usize), (4, 8), (8, 16)] {
+            let c = NmCompressed::compress(&x, t, din, &[], n, m);
+            let label = format!("sparse {n}:{m}  {t}x{din}x{dout}");
+            let sp = bench(&label, 2, 8, Some((t * din * dout) as u64), || {
+                black_box(c.matmul(&w, dout));
+            });
+            println!(
+                "    -> speedup {:.2}x (ideal {:.2}x)",
+                dense.median_secs / sp.median_secs,
+                m as f64 / n as f64
+            );
+        }
+        // compression overhead itself (prefill would fuse this)
+        let cname = format!("compress 2:4 {t}x{din}");
+        bench(&cname, 2, 8, Some((t * din) as u64), || {
+            black_box(NmCompressed::compress(&x, t, din, &[], 2, 4));
+        });
+    }
+
+    println!("\n== spmm int8 (Outstanding-sparse compute path) ==");
+    let (t, din, dout) = (256usize, 384usize, 384usize);
+    let x = rand_vec(&mut rng, t * din);
+    let w = rand_vec(&mut rng, din * dout);
+    let (wq, ws) = quant::quantize_weight(&w, din, dout);
+    let xq = quant::quantize(&x, 0.05);
+    bench("w8a8 dense  256x384x384", 2, 8,
+          Some((t * din * dout) as u64), || {
+        black_box(quant::w8a8_matmul(&xq, t, din, &wq, dout, 0.05, &ws));
+    });
+}

@@ -1,0 +1,45 @@
+//! `cargo bench --bench tables` — regenerates the paper's accuracy tables
+//! and figures end-to-end through the rust runtime with a reduced sample
+//! budget (fast smoke of the full repro path; `amber repro <t>` runs the
+//! full budget). One bench entry per paper artifact, per DESIGN.md §4.
+
+use amber_pruner::repro::{self, ReproCtx};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("tables: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let ctx = ReproCtx { artifacts: dir, limit: 12, model: None };
+    // table3's decode loops are the slow path — bench it on one model;
+    // `amber repro table3` runs the full grid.
+    let ctx_one = ReproCtx {
+        artifacts: dir,
+        limit: 8,
+        model: Some("tiny-lm-a".to_string()),
+    };
+    for target in [
+        "coverage",
+        "tpu-model",
+        "ablation",
+        "fig2",
+        "fig34",
+        "fig6",
+        "appc",
+        "table1",
+        "table2",
+        "table3",
+        "app-table1",
+    ] {
+        let c = if target == "table3" { &ctx_one } else { &ctx };
+        let t0 = std::time::Instant::now();
+        match repro::run(target, c) {
+            Ok(()) => println!(
+                "[tables] {target} regenerated in {:.1}s",
+                t0.elapsed().as_secs_f64()
+            ),
+            Err(e) => println!("[tables] {target} SKIPPED: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs `[[bench]]` targets with `harness = false`; each
+//! target uses this module: warmup, N timed iterations, outlier-robust
+//! summary (median + MAD), and machine-readable one-line results that
+//! EXPERIMENTS.md quotes.
+
+use std::time::Instant;
+
+use crate::metrics::stats::Histogram;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_secs: f64,
+    pub mean_secs: f64,
+    pub p95_secs: f64,
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|t| format!("  {:>12.1} elem/s", t))
+            .unwrap_or_default();
+        format!(
+            "bench {:<44} median {:>10.3}ms  mean {:>10.3}ms  p95 {:>10.3}ms  (n={}){}",
+            self.name,
+            self.median_secs * 1e3,
+            self.mean_secs * 1e3,
+            self.p95_secs * 1e3,
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. `elems` (optional)
+/// computes element throughput from the median.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    elems: Option<u64>,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.observe(t0.elapsed().as_secs_f64());
+    }
+    let s = h.summary();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_secs: s.p50,
+        mean_secs: s.mean,
+        p95_secs: s.p95,
+        throughput: elems.map(|e| e as f64 / s.p50.max(1e-12)),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Black-box to stop the optimizer from eliding benched work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

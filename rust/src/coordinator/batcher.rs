@@ -1,0 +1,206 @@
+//! Continuous-batching queues: per-config FIFO prefill queues with a
+//! prefill-prioritized packing policy (the paper accelerates *prefill*, so
+//! the scheduler favors draining prompt work; decode advances whenever no
+//! prefill batch is ready, mirroring vLLM's iteration-level scheduling).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use super::request::{SparsityConfig, Tracked};
+
+/// Queue key: requests in one bucket share prefill artifact + binding.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ConfigKey(pub String);
+
+pub struct PrefillQueues {
+    queues: BTreeMap<ConfigKey, VecDeque<Tracked>>,
+    pub max_batch: usize,
+    /// flush a partial batch when its head has waited this long
+    pub max_wait_secs: f64,
+}
+
+impl PrefillQueues {
+    pub fn new(max_batch: usize, max_wait_secs: f64) -> Self {
+        PrefillQueues {
+            queues: BTreeMap::new(),
+            max_batch,
+            max_wait_secs,
+        }
+    }
+
+    pub fn push(&mut self, key: ConfigKey, t: Tracked) {
+        self.queues.entry(key).or_default().push_back(t);
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiting() == 0
+    }
+
+    /// Pick the bucket to prefill next: a full batch if any bucket has
+    /// one; otherwise the bucket with the oldest head *if* it exceeded
+    /// max_wait or the engine is otherwise idle (`idle == true`).
+    /// Returns up to `free_slots.min(max_batch)` requests.
+    pub fn next_batch(
+        &mut self,
+        free_slots: usize,
+        idle: bool,
+        now: Instant,
+    ) -> Option<(ConfigKey, Vec<Tracked>)> {
+        let cap = self.max_batch.min(free_slots);
+        if cap == 0 {
+            return None;
+        }
+        // full batch available?
+        let full = self
+            .queues
+            .iter()
+            .filter(|(_, q)| q.len() >= cap)
+            .map(|(k, _)| k.clone())
+            .next();
+        let key = match full {
+            Some(k) => Some(k),
+            None => {
+                // oldest head across buckets
+                let oldest = self
+                    .queues
+                    .iter()
+                    .filter(|(_, q)| !q.is_empty())
+                    .min_by_key(|(_, q)| q.front().unwrap().arrived);
+                match oldest {
+                    Some((k, q)) => {
+                        let age = now
+                            .duration_since(q.front().unwrap().arrived)
+                            .as_secs_f64();
+                        if idle || age >= self.max_wait_secs {
+                            Some(k.clone())
+                        } else {
+                            None
+                        }
+                    }
+                    None => None,
+                }
+            }
+        }?;
+        let q = self.queues.get_mut(&key).unwrap();
+        let n = q.len().min(cap);
+        let batch: Vec<Tracked> = q.drain(..n).collect();
+        if q.is_empty() {
+            self.queues.remove(&key);
+        }
+        Some((key, batch))
+    }
+}
+
+/// Map a request's sparsity config to (prefill artifact, decode artifact,
+/// weight files) under the artifact naming convention.
+pub fn routing(
+    model: &str,
+    seq: usize,
+    cfg: &SparsityConfig,
+) -> (String, String, Vec<String>) {
+    let sq = cfg.quantized;
+    let weights = if sq {
+        format!("{model}.sq.atw")
+    } else {
+        format!("{model}.atw")
+    };
+    match cfg.nm {
+        None => {
+            let variant = if sq { "sq" } else { "dense" };
+            (
+                format!("{model}.prefill{seq}.{variant}"),
+                format!("{model}.decode.{}", if sq { "sq" } else { "dense" }),
+                vec![weights],
+            )
+        }
+        Some((n, m)) => {
+            let variant = if sq { "sq_nm" } else { "nm" };
+            let aux = cfg.setting.aux_file(model, sq);
+            (
+                format!("{model}.prefill{seq}.{variant}{n}_{m}"),
+                format!("{model}.decode.{}", if sq { "sq" } else { "dense" }),
+                vec![weights, aux],
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::policy::Setting;
+    use std::sync::mpsc::channel;
+
+    fn tracked(id: u64) -> Tracked {
+        let (tx, _rx) = channel();
+        Tracked {
+            req: super::super::request::Request {
+                id,
+                prompt: vec![1, 2],
+                max_new_tokens: 4,
+                config: SparsityConfig::dense(),
+            },
+            arrived: Instant::now(),
+            first_token_at: None,
+            generated: vec![],
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn full_batch_preferred() {
+        let mut q = PrefillQueues::new(2, 10.0);
+        q.push(ConfigKey("a".into()), tracked(1));
+        q.push(ConfigKey("b".into()), tracked(2));
+        q.push(ConfigKey("b".into()), tracked(3));
+        let (k, batch) =
+            q.next_batch(8, false, Instant::now()).expect("batch");
+        assert_eq!(k.0, "b");
+        assert_eq!(batch.len(), 2);
+        // "a" has a lone request; not flushed while busy & young
+        assert!(q.next_batch(8, false, Instant::now()).is_none());
+        // ... but flushed when idle
+        let (k2, b2) = q.next_batch(8, true, Instant::now()).unwrap();
+        assert_eq!(k2.0, "a");
+        assert_eq!(b2.len(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn respects_free_slots() {
+        let mut q = PrefillQueues::new(8, 0.0);
+        for i in 0..5 {
+            q.push(ConfigKey("a".into()), tracked(i));
+        }
+        let (_, batch) = q.next_batch(3, true, Instant::now()).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(q.waiting(), 2);
+        assert!(q.next_batch(0, true, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn routing_names() {
+        let c = SparsityConfig {
+            setting: Setting::LayerSkip,
+            nm: Some((8, 16)),
+            quantized: false,
+        };
+        let (p, d, w) = routing("tiny-lm-a", 64, &c);
+        assert_eq!(p, "tiny-lm-a.prefill64.nm8_16");
+        assert_eq!(d, "tiny-lm-a.decode.dense");
+        assert_eq!(w, vec!["tiny-lm-a.atw", "tiny-lm-a.aux_ls.atw"]);
+        let (p2, d2, w2) = routing("tiny-lm-a", 64, &SparsityConfig {
+            setting: Setting::Naive,
+            nm: Some((2, 4)),
+            quantized: true,
+        });
+        assert_eq!(p2, "tiny-lm-a.prefill64.sq_nm2_4");
+        assert_eq!(d2, "tiny-lm-a.decode.sq");
+        assert_eq!(w2, vec!["tiny-lm-a.sq.atw",
+                            "tiny-lm-a.sq.aux_naive.atw"]);
+    }
+}

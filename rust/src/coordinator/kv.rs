@@ -1,0 +1,208 @@
+//! KV-cache slot manager.
+//!
+//! The decode executable owns a fixed [L, B_dec, C, H_kv, Dh] cache; this
+//! module manages the B_dec slots: allocation, host staging (scattering a
+//! prefill batch's [L, B_pre, S, ...] cache rows into slots), per-slot
+//! lengths and release. The staging buffer is the host mirror the engine
+//! uploads each decode step (see EXPERIMENTS.md §Perf for the measured
+//! cost and the device-resident variant).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    Active { seq_id: u64 },
+}
+
+pub struct KvSlots {
+    pub n_layers: usize,
+    pub n_slots: usize,
+    pub cache_len: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// host mirrors [L, B, C, H, D]
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub state: Vec<SlotState>,
+    /// valid prefix length per slot (== next write position)
+    pub len: Vec<usize>,
+}
+
+impl KvSlots {
+    pub fn new(
+        n_layers: usize,
+        n_slots: usize,
+        cache_len: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> KvSlots {
+        let sz = n_layers * n_slots * cache_len * kv_heads * head_dim;
+        KvSlots {
+            n_layers,
+            n_slots,
+            cache_len,
+            kv_heads,
+            head_dim,
+            k: vec![0.0; sz],
+            v: vec![0.0; sz],
+            state: vec![SlotState::Free; n_slots],
+            len: vec![0; n_slots],
+        }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.state.iter().filter(|s| **s == SlotState::Free).count()
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.n_slots)
+            .filter(|&i| matches!(self.state[i], SlotState::Active { .. }))
+            .collect()
+    }
+
+    pub fn seq_at(&self, slot: usize) -> Option<u64> {
+        match self.state[slot] {
+            SlotState::Active { seq_id } => Some(seq_id),
+            SlotState::Free => None,
+        }
+    }
+
+    fn slot_stride(&self) -> usize {
+        self.cache_len * self.kv_heads * self.head_dim
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.n_slots * self.slot_stride()
+    }
+
+    /// Claim a free slot for sequence `seq_id`, scattering its prefill
+    /// KV rows (row `src_row` of a [L, B_pre, S, H, D] prefill cache) into
+    /// the slot and zeroing the tail.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit(
+        &mut self,
+        seq_id: u64,
+        prefill_k: &[f32],
+        prefill_v: &[f32],
+        src_row: usize,
+        pre_batch: usize,
+        seq_len: usize,
+        valid_len: usize,
+    ) -> Result<usize> {
+        let slot = match self.state.iter().position(|s| *s == SlotState::Free)
+        {
+            Some(s) => s,
+            None => bail!("no free KV slots"),
+        };
+        if valid_len > self.cache_len {
+            bail!("prefill length {valid_len} exceeds cache {}",
+                  self.cache_len);
+        }
+        let row_sz = self.kv_heads * self.head_dim;
+        let pre_layer_stride = pre_batch * seq_len * row_sz;
+        let pre_row_stride = seq_len * row_sz;
+        let slot_stride = self.slot_stride();
+        for l in 0..self.n_layers {
+            let dst_base = l * self.layer_stride() + slot * slot_stride;
+            let src_base = l * pre_layer_stride + src_row * pre_row_stride;
+            let n = valid_len * row_sz;
+            self.k[dst_base..dst_base + n]
+                .copy_from_slice(&prefill_k[src_base..src_base + n]);
+            self.v[dst_base..dst_base + n]
+                .copy_from_slice(&prefill_v[src_base..src_base + n]);
+            // zero the tail: decode's one-hot write ADDS, so stale values
+            // at positions >= valid_len would corrupt the cache.
+            self.k[dst_base + n..dst_base + slot_stride].fill(0.0);
+            self.v[dst_base + n..dst_base + slot_stride].fill(0.0);
+        }
+        self.state[slot] = SlotState::Active { seq_id };
+        self.len[slot] = valid_len;
+        Ok(slot)
+    }
+
+    /// Replace the host mirror with the decode executable's output caches
+    /// and bump active slot lengths.
+    pub fn absorb_decode_output(&mut self, k: Vec<f32>, v: Vec<f32>,
+                                stepped: &[usize]) {
+        debug_assert_eq!(k.len(), self.k.len());
+        self.k = k;
+        self.v = v;
+        for &slot in stepped {
+            self.len[slot] += 1;
+        }
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        self.state[slot] = SlotState::Free;
+        self.len[slot] = 0;
+    }
+
+    /// Invariant checks used by property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for (i, s) in self.state.iter().enumerate() {
+            if let SlotState::Active { seq_id } = s {
+                if !seen.insert(*seq_id) {
+                    bail!("seq {seq_id} owns two slots");
+                }
+                if self.len[i] == 0 {
+                    bail!("active slot {i} has zero length");
+                }
+                if self.len[i] > self.cache_len {
+                    bail!("slot {i} overflows cache");
+                }
+            } else if self.len[i] != 0 {
+                bail!("free slot {i} has nonzero length");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> KvSlots {
+        KvSlots::new(2, 3, 8, 1, 4)
+    }
+
+    #[test]
+    fn admit_scatter_release() {
+        let mut kv = mk();
+        // prefill cache [L=2, B=2, S=4, H=1, D=4]
+        let pre: Vec<f32> = (0..2 * 2 * 4 * 4).map(|i| i as f32).collect();
+        let slot =
+            kv.admit(7, &pre, &pre, 1, 2, 4, 3).unwrap();
+        assert_eq!(slot, 0);
+        assert_eq!(kv.len[0], 3);
+        // layer 0, slot 0, pos 0 == prefill row 1, pos 0
+        let got = &kv.k[0..4];
+        let want = &pre[1 * 4 * 4..1 * 4 * 4 + 4];
+        assert_eq!(got, want);
+        // tail zeroed
+        assert!(kv.k[3 * 4..8 * 4].iter().all(|&x| x == 0.0));
+        kv.check_invariants().unwrap();
+        kv.release(slot);
+        assert_eq!(kv.free_slots(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut kv = mk();
+        let pre = vec![0.5; 2 * 1 * 4 * 4];
+        for i in 0..3 {
+            kv.admit(i, &pre, &pre, 0, 1, 4, 2).unwrap();
+        }
+        assert!(kv.admit(99, &pre, &pre, 0, 1, 4, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_overflow() {
+        let mut kv = mk();
+        let pre = vec![0.5; 2 * 1 * 16 * 4];
+        assert!(kv.admit(1, &pre, &pre, 0, 1, 16, 16).is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! Layer-3 serving coordinator (the paper's system integrated as a
+//! first-class serving feature).
+//!
+//! vLLM-shaped pipeline, single engine thread, no tokio:
+//!
+//! ```text
+//!  clients ──mpsc──► Router ──per-config queues──► Scheduler loop
+//!                                                    │  prefill batch (N:M sparse, static shapes)
+//!                                                    │  decode batch  (dense, KV-cache slots)
+//!                                                    ▼
+//!                                               ModelRuntime (PJRT)
+//! ```
+//!
+//! The paper's contribution appears as the per-request **sparsity config**:
+//! requests choose `dense | 2:4 | 4:8 | 8:16` x `naive | ls | all` x
+//! `fp | w8a8`; the router buckets by config, the batcher packs same-config
+//! prefills (sparse prefill shares one artifact per ratio — method and
+//! skip-policy arrive as auxiliary weights), and decode is always dense,
+//! exactly as the paper confines sparsity to prefill.
+
+pub mod batcher;
+pub mod kv;
+pub mod paged;
+pub mod request;
+pub mod scheduler;
+pub mod router;
+
+pub use request::{Request, Response, SparsityConfig};
+pub use scheduler::{Engine, EngineConfig};

@@ -1,0 +1,191 @@
+//! Block-granular KV accounting (paged-attention-style allocator).
+//!
+//! The decode executable's physical cache is slot-contiguous (static
+//! shapes — see kv.rs), but admission control and capacity accounting run
+//! at block granularity like vLLM's PagedAttention: a sequence owns
+//! ceil(len / BLOCK) blocks from a global pool, blocks are ref-counted so
+//! a shared prompt prefix can be accounted once (prefix caching), and the
+//! scheduler admits a prefill batch only if its worst-case block demand
+//! fits. This keeps the coordinator's admission logic identical to a
+//! paged deployment even though the tiny-model substrate doesn't need
+//! physical paging.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+pub const DEFAULT_BLOCK: usize = 16;
+
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    pub block_size: usize,
+    pub n_blocks: usize,
+    free: Vec<u32>,
+    refcount: Vec<u16>,
+    /// seq -> owned block ids (in order)
+    owners: HashMap<u64, Vec<u32>>,
+}
+
+impl BlockPool {
+    pub fn new(n_blocks: usize, block_size: usize) -> BlockPool {
+        BlockPool {
+            block_size,
+            n_blocks,
+            free: (0..n_blocks as u32).rev().collect(),
+            refcount: vec![0; n_blocks],
+            owners: HashMap::new(),
+        }
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Allocate blocks for a new sequence of `tokens` tokens.
+    pub fn allocate(&mut self, seq: u64, tokens: usize) -> Result<&[u32]> {
+        if self.owners.contains_key(&seq) {
+            bail!("seq {seq} already has an allocation");
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.free.len() {
+            bail!("pool exhausted: need {need}, free {}", self.free.len());
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().unwrap();
+            self.refcount[b as usize] = 1;
+            blocks.push(b);
+        }
+        self.owners.insert(seq, blocks);
+        Ok(self.owners.get(&seq).unwrap())
+    }
+
+    /// Extend a sequence by `new_tokens` (decode growth); allocates new
+    /// tail blocks as needed.
+    pub fn grow(&mut self, seq: u64, old_tokens: usize, new_tokens: usize)
+                -> Result<()> {
+        let need_total = self.blocks_for(old_tokens + new_tokens);
+        let have = self
+            .owners
+            .get(&seq)
+            .map(|b| b.len())
+            .ok_or_else(|| anyhow::anyhow!("seq {seq} not allocated"))?;
+        let extra = need_total.saturating_sub(have);
+        if extra > self.free.len() {
+            bail!("pool exhausted growing seq {seq}");
+        }
+        for _ in 0..extra {
+            let b = self.free.pop().unwrap();
+            self.refcount[b as usize] = 1;
+            self.owners.get_mut(&seq).unwrap().push(b);
+        }
+        Ok(())
+    }
+
+    /// Fork: new sequence shares the owner's blocks (prefix cache hit) —
+    /// copy-on-write accounting via refcounts.
+    pub fn fork(&mut self, parent: u64, child: u64) -> Result<()> {
+        let blocks = self
+            .owners
+            .get(&parent)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("parent {parent} missing"))?;
+        if self.owners.contains_key(&child) {
+            bail!("child {child} already allocated");
+        }
+        for &b in &blocks {
+            self.refcount[b as usize] += 1;
+        }
+        self.owners.insert(child, blocks);
+        Ok(())
+    }
+
+    pub fn release(&mut self, seq: u64) {
+        if let Some(blocks) = self.owners.remove(&seq) {
+            for b in blocks {
+                let rc = &mut self.refcount[b as usize];
+                *rc -= 1;
+                if *rc == 0 {
+                    self.free.push(b);
+                }
+            }
+        }
+    }
+
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut expected = vec![0u16; self.n_blocks];
+        for blocks in self.owners.values() {
+            for &b in blocks {
+                expected[b as usize] += 1;
+            }
+        }
+        if expected != self.refcount {
+            bail!("refcount drift");
+        }
+        let frees = self.free.len();
+        let used = self.refcount.iter().filter(|r| **r > 0).count();
+        if frees + used != self.n_blocks {
+            bail!("block leak: {frees} free + {used} used != {}",
+                  self.n_blocks);
+        }
+        for &b in &self.free {
+            if self.refcount[b as usize] != 0 {
+                bail!("free block {b} has refcount");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_grow_release() {
+        let mut p = BlockPool::new(8, 16);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+        p.allocate(1, 40).unwrap(); // 3 blocks
+        assert_eq!(p.free_blocks(), 5);
+        p.grow(1, 40, 8).unwrap(); // 48 tokens -> 3 blocks, no extra
+        assert_eq!(p.free_blocks(), 5);
+        p.grow(1, 48, 1).unwrap(); // 49 -> 4 blocks
+        assert_eq!(p.free_blocks(), 4);
+        p.check_invariants().unwrap();
+        p.release(1);
+        assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_and_cow_releases() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 32).unwrap(); // 2 blocks
+        p.fork(1, 2).unwrap();
+        assert_eq!(p.free_blocks(), 2); // shared, not copied
+        p.release(1);
+        assert_eq!(p.free_blocks(), 2); // child still holds them
+        p.check_invariants().unwrap();
+        p.release(2);
+        assert_eq!(p.free_blocks(), 4);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_and_admission() {
+        let mut p = BlockPool::new(2, 16);
+        assert!(p.can_admit(32));
+        assert!(!p.can_admit(33));
+        p.allocate(7, 32).unwrap();
+        assert!(p.allocate(8, 1).is_err());
+    }
+}

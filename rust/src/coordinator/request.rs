@@ -1,0 +1,133 @@
+//! Request / response types and the per-request sparsity configuration.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::sparsity::policy::Setting;
+
+/// Per-request sparsity knob — the paper's method surfaced at the API.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SparsityConfig {
+    pub setting: Setting,
+    /// N:M ratio; None for dense
+    pub nm: Option<(usize, usize)>,
+    /// W8A8 (Outstanding-sparse) path
+    pub quantized: bool,
+}
+
+impl SparsityConfig {
+    pub fn dense() -> Self {
+        SparsityConfig { setting: Setting::Dense, nm: None, quantized: false }
+    }
+
+    pub fn amber(n: usize, m: usize) -> Self {
+        SparsityConfig {
+            setting: Setting::All,
+            nm: Some((n, m)),
+            quantized: false,
+        }
+    }
+
+    pub fn outstanding(n: usize, m: usize) -> Self {
+        SparsityConfig {
+            setting: Setting::LayerSkip,
+            nm: Some((n, m)),
+            quantized: true,
+        }
+    }
+
+    /// Parse "dense", "2:4", "8:16+sq", "4:8:naive" style strings (server
+    /// protocol + CLI).
+    pub fn parse(s: &str) -> Option<SparsityConfig> {
+        let mut quantized = false;
+        let mut core = s.trim();
+        if let Some(stripped) = core.strip_suffix("+sq") {
+            quantized = true;
+            core = stripped;
+        }
+        if core == "dense" {
+            return Some(SparsityConfig {
+                setting: Setting::Dense,
+                nm: None,
+                quantized,
+            });
+        }
+        let parts: Vec<&str> = core.split(':').collect();
+        if parts.len() < 2 {
+            return None;
+        }
+        let n = parts[0].parse().ok()?;
+        let m = parts[1].parse().ok()?;
+        let setting = match parts.get(2).copied() {
+            None | Some("all") => Setting::All,
+            Some("ls") => Setting::LayerSkip,
+            Some("naive") => Setting::Naive,
+            _ => return None,
+        };
+        Some(SparsityConfig { setting, nm: Some((n, m)), quantized })
+    }
+
+    pub fn label(&self) -> String {
+        let q = if self.quantized { "+sq" } else { "" };
+        match self.nm {
+            None => format!("dense{q}"),
+            Some((n, m)) => format!(
+                "{n}:{m}:{}{q}",
+                match self.setting {
+                    Setting::Naive => "naive",
+                    Setting::LayerSkip => "ls",
+                    _ => "all",
+                }
+            ),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub config: SparsityConfig,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub ttft_secs: f64,
+    pub e2e_secs: f64,
+    pub prefill_artifact: String,
+}
+
+/// A request in flight inside the engine.
+pub struct Tracked {
+    pub req: Request,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub generated: Vec<i32>,
+    pub reply: Sender<Response>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for s in ["dense", "2:4:naive", "4:8:ls", "8:16:all", "8:16:ls+sq",
+                  "dense+sq"] {
+            let c = SparsityConfig::parse(s).unwrap();
+            assert_eq!(c.label(), s.replace(":all", ":all"));
+        }
+        assert!(SparsityConfig::parse("3x7").is_none());
+        assert!(SparsityConfig::parse("2:4:bogus").is_none());
+    }
+
+    #[test]
+    fn parse_shorthand() {
+        let c = SparsityConfig::parse("2:4").unwrap();
+        assert_eq!(c.nm, Some((2, 4)));
+        assert_eq!(c.setting, Setting::All);
+    }
+}

@@ -1,0 +1,146 @@
+//! Request router: fronts one or more engine replicas.
+//!
+//! Policies: round-robin, least-outstanding. On this single-core testbed a
+//! single replica is the normal deployment; the router exists so the
+//! serving stack has the full shape of the paper's target environment
+//! (8-NPU node = 8 replicas behind one router) and is exercised by unit +
+//! property tests.
+
+use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::request::{Request, Response};
+use super::scheduler::EngineMsg;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastOutstanding,
+}
+
+pub struct Replica {
+    pub tx: Sender<EngineMsg>,
+    pub outstanding: Arc<AtomicU64>,
+}
+
+pub struct Router {
+    replicas: Vec<Replica>,
+    policy: Policy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(replicas: Vec<Replica>, policy: Policy) -> Router {
+        Router { replicas, policy, rr_next: 0 }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Pick a replica index for the next request.
+    pub fn pick(&mut self) -> Result<usize> {
+        if self.replicas.is_empty() {
+            bail!("no replicas");
+        }
+        Ok(match self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next % self.replicas.len();
+                self.rr_next = (self.rr_next + 1) % self.replicas.len();
+                i
+            }
+            Policy::LeastOutstanding => self
+                .replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.outstanding.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap(),
+        })
+    }
+
+    pub fn dispatch(
+        &mut self,
+        req: Request,
+        reply: Sender<Response>,
+    ) -> Result<usize> {
+        let i = self.pick()?;
+        self.replicas[i]
+            .outstanding
+            .fetch_add(1, Ordering::Relaxed);
+        self.replicas[i]
+            .tx
+            .send(EngineMsg::Submit(req, reply))
+            .map_err(|_| anyhow::anyhow!("replica {i} channel closed"))?;
+        Ok(i)
+    }
+
+    /// Called by the completion fan-in when a response arrives.
+    pub fn complete(&self, replica: usize) {
+        self.replicas[replica]
+            .outstanding
+            .fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn shutdown(&self) {
+        for r in &self.replicas {
+            let _ = r.tx.send(EngineMsg::Shutdown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SparsityConfig;
+    use std::sync::mpsc::channel;
+
+    fn mk_router(n: usize, policy: Policy) -> (Router, Vec<std::sync::mpsc::Receiver<EngineMsg>>) {
+        let mut reps = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            reps.push(Replica {
+                tx,
+                outstanding: Arc::new(AtomicU64::new(0)),
+            });
+            rxs.push(rx);
+        }
+        (Router::new(reps, policy), rxs)
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            config: SparsityConfig::dense(),
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (mut r, rxs) = mk_router(3, Policy::RoundRobin);
+        let (tx, _rx) = channel();
+        let picks: Vec<usize> = (0..6)
+            .map(|i| r.dispatch(req(i), tx.clone()).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(rxs[0].try_iter().count(), 2);
+    }
+
+    #[test]
+    fn least_outstanding_balances() {
+        let (mut r, _rxs) = mk_router(2, Policy::LeastOutstanding);
+        let (tx, _rx) = channel();
+        r.dispatch(req(0), tx.clone()).unwrap(); // -> 0
+        r.dispatch(req(1), tx.clone()).unwrap(); // -> 1
+        r.complete(0);
+        // replica 0 now has 0 outstanding, replica 1 has 1
+        let i = r.dispatch(req(2), tx).unwrap();
+        assert_eq!(i, 0);
+    }
+}

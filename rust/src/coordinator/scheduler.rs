@@ -1,0 +1,397 @@
+//! The engine loop: iteration-level scheduling over the PJRT runtime.
+//!
+//! Each iteration either (a) packs a same-config prefill batch, runs the
+//! (possibly N:M-sparse) prefill executable, samples first tokens and
+//! admits the sequences into KV slots, or (b) advances every active slot
+//! one dense decode step. Prefill is prioritized (the paper's setting:
+//! prefill is the compute bottleneck being accelerated); a partial prefill
+//! batch is flushed once its head request ages past `max_wait` or the
+//! decode side is idle.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{routing, ConfigKey, PrefillQueues};
+use super::kv::KvSlots;
+use super::paged::{BlockPool, DEFAULT_BLOCK};
+use super::request::{Request, Response, Tracked};
+use crate::metrics::EngineMetrics;
+use crate::runtime::ModelRuntime;
+use crate::tensor::math::argmax;
+
+pub const EOS: i32 = 2;
+pub const PAD: i32 = 0;
+
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub model: String,
+    pub prefill_seq: usize,
+    pub max_wait_secs: f64,
+    /// stop after this many completed requests (0 = run until channel
+    /// closes)
+    pub run_until: usize,
+}
+
+impl EngineConfig {
+    pub fn new(model: &str) -> EngineConfig {
+        EngineConfig {
+            model: model.to_string(),
+            prefill_seq: 64,
+            max_wait_secs: 0.005,
+            run_until: 0,
+        }
+    }
+}
+
+pub enum EngineMsg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+struct ActiveSeq {
+    tracked: Tracked,
+    slot: usize,
+    last_token: i32,
+    decode_artifact: String,
+    decode_binding: String,
+    last_token_at: Instant,
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub rt: ModelRuntime,
+    pub metrics: Arc<EngineMetrics>,
+    queues: PrefillQueues,
+    kv: KvSlots,
+    /// block-granular admission accounting (paged-attention style)
+    pool: BlockPool,
+    active: HashMap<u64, ActiveSeq>,
+    /// decode artifact shared by all active seqs in a decode batch;
+    /// batches are grouped per decode artifact (fp vs sq decode differ).
+    #[allow(dead_code)] // kept for config introspection / tests
+    vocab: usize,
+    completed: usize,
+}
+
+impl Engine {
+    pub fn new(
+        rt: ModelRuntime,
+        cfg: EngineConfig,
+        metrics: Arc<EngineMetrics>,
+    ) -> Result<Engine> {
+        // geometry from the manifest
+        let model = rt
+            .manifest
+            .models
+            .get(&cfg.model)
+            .with_context(|| format!("model {} in manifest", cfg.model))?
+            .clone();
+        let g = |k: &str| model.config.get(k).copied().unwrap_or(0);
+        let dec = rt
+            .manifest
+            .artifact(&format!("{}.decode.dense", cfg.model))?
+            .clone();
+        let kv = KvSlots::new(
+            g("n_layers"),
+            dec.batch,
+            dec.cache,
+            g("n_kv_heads"),
+            g("head_dim"),
+        );
+        let pool = BlockPool::new(
+            dec.batch * dec.cache / DEFAULT_BLOCK,
+            DEFAULT_BLOCK,
+        );
+        let vocab = g("vocab_size");
+        Ok(Engine {
+            queues: PrefillQueues::new(
+                // prefill batch = artifact's static batch
+                8,
+                cfg.max_wait_secs,
+            ),
+            cfg,
+            rt,
+            metrics,
+            kv,
+            pool,
+            active: HashMap::new(),
+            vocab,
+            completed: 0,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request, reply: Sender<Response>) {
+        let (prefill, _, _) =
+            routing(&self.cfg.model, self.cfg.prefill_seq, &req.config);
+        EngineMetrics::inc(&self.metrics.requests_admitted, 1);
+        self.queues.push(
+            ConfigKey(prefill),
+            Tracked {
+                req,
+                arrived: Instant::now(),
+                first_token_at: None,
+                generated: Vec::new(),
+                reply: reply.clone(),
+            },
+        );
+    }
+
+    /// Blocking serve loop over a message channel.
+    pub fn run(&mut self, rx: Receiver<EngineMsg>) -> Result<()> {
+        let mut open = true;
+        loop {
+            // drain incoming messages (non-blocking while work pending)
+            let busy = !self.queues.is_empty() || !self.active.is_empty();
+            loop {
+                let msg = if busy {
+                    match rx.try_recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => None,
+                    }
+                } else if open {
+                    match rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                } else {
+                    None
+                };
+                match msg {
+                    Some(EngineMsg::Submit(r, tx)) => self.submit(r, tx),
+                    Some(EngineMsg::Shutdown) => open = false,
+                    None => break,
+                }
+            }
+            if !open && self.queues.is_empty() && self.active.is_empty() {
+                return Ok(());
+            }
+            if self.cfg.run_until > 0 && self.completed >= self.cfg.run_until
+            {
+                return Ok(());
+            }
+            self.step()?;
+        }
+    }
+
+    /// One scheduling iteration. Returns whether any work was done.
+    pub fn step(&mut self) -> Result<bool> {
+        let idle = self.active.is_empty();
+        let now = Instant::now();
+        if let Some((key, batch)) =
+            self.queues.next_batch(self.kv.free_slots(), idle, now)
+        {
+            self.run_prefill(&key, batch)?;
+            return Ok(true);
+        }
+        if !self.active.is_empty() {
+            self.run_decode()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn run_prefill(
+        &mut self,
+        key: &ConfigKey,
+        mut batch: Vec<Tracked>,
+    ) -> Result<()> {
+        let artifact = key.0.clone();
+        let meta = self.rt.manifest.artifact(&artifact)?.clone();
+        let (b, s) = (meta.batch, meta.seq);
+        // weights binding comes from the first request's config (all
+        // requests in a bucket share it by construction)
+        let cfg0 = batch[0].req.config;
+        let (_, decode_artifact, files) =
+            routing(&self.cfg.model, self.cfg.prefill_seq, &cfg0);
+        let file_refs: Vec<&str> = files.iter().map(|f| f.as_str()).collect();
+        let binding = self.rt.bind(&artifact, &file_refs)?;
+        let dec_files = vec![file_refs[0]];
+        let dec_binding = self.rt.bind(&decode_artifact, &dec_files)?;
+
+        // pack tokens (right-pad rows; unused rows stay PAD)
+        let mut tokens = vec![PAD; b * s];
+        let mut lens = vec![0usize; batch.len()];
+        for (i, t) in batch.iter().enumerate() {
+            let p = &t.req.prompt;
+            let n = p.len().min(s);
+            tokens[i * s..i * s + n].copy_from_slice(&p[..n]);
+            lens[i] = n;
+            EngineMetrics::inc(&self.metrics.prefill_tokens, n as u64);
+        }
+        EngineMetrics::inc(
+            &self.metrics.padded_prefill_tokens,
+            (b * s) as u64
+                - lens.iter().sum::<usize>() as u64,
+        );
+        let out = self.rt.prefill(&artifact, &binding, &tokens)?;
+        EngineMetrics::inc(&self.metrics.prefill_batches, 1);
+        let k_host: Vec<f32> = out.k_cache.to_vec()?;
+        let v_host: Vec<f32> = out.v_cache.to_vec()?;
+        let now = Instant::now();
+        for (i, mut t) in batch.drain(..).enumerate() {
+            // greedy first token from the last prompt position
+            let row = &out.logits[(i * s + lens[i] - 1) * out.vocab
+                ..(i * s + lens[i]) * out.vocab];
+            let first = argmax(row) as i32;
+            t.first_token_at = Some(now);
+            self.metrics
+                .observe_ttft(now.duration_since(t.arrived).as_secs_f64());
+            t.generated.push(first);
+            let id = t.req.id;
+            // block-granular admission accounting: reserve the sequence's
+            // worst-case footprint (prompt + full generation budget)
+            self.pool
+                .allocate(id, lens[i] + t.req.max_new_tokens)
+                .ok();
+            let slot = self.kv.admit(
+                id, &k_host, &v_host, i, b, s, lens[i],
+            )?;
+            self.active.insert(
+                id,
+                ActiveSeq {
+                    tracked: t,
+                    slot,
+                    last_token: first,
+                    decode_artifact: decode_artifact.clone(),
+                    decode_binding: dec_binding.clone(),
+                    last_token_at: now,
+                },
+            );
+            // immediately-finished sequences (max_new_tokens == 1 or EOS)
+            self.maybe_complete(id)?;
+        }
+        Ok(())
+    }
+
+    fn run_decode(&mut self) -> Result<()> {
+        // group by decode artifact (fp vs sq)
+        let mut by_art: HashMap<(String, String), Vec<u64>> = HashMap::new();
+        for (id, a) in &self.active {
+            by_art
+                .entry((a.decode_artifact.clone(), a.decode_binding.clone()))
+                .or_default()
+                .push(*id);
+        }
+        let Some(((artifact, binding), mut ids)) =
+            by_art.into_iter().next()
+        else {
+            return Ok(());
+        };
+        ids.sort(); // determinism
+        let meta = self.rt.manifest.artifact(&artifact)?.clone();
+        let b = meta.batch;
+        ids.truncate(b);
+        let mut token = vec![PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut kv_len = vec![1i32; b];
+        let mut slot_of = vec![usize::MAX; b];
+        let mut stepped = Vec::new();
+        for (row, id) in ids.iter().enumerate() {
+            let a = &self.active[id];
+            let slot = a.slot;
+            // each active seq occupies its KV slot row; the decode batch
+            // is indexed BY SLOT (cache layout), so row == slot here.
+            let _ = row;
+            slot_of[slot] = slot;
+            token[slot] = a.last_token;
+            pos[slot] = self.kv.len[slot] as i32;
+            kv_len[slot] = (self.kv.len[slot] + 1) as i32;
+            stepped.push(slot);
+        }
+        let k_lit = crate::tensor::HostTensor::f32(
+            "k",
+            vec![
+                self.kv.n_layers as i64,
+                self.kv.n_slots as i64,
+                self.kv.cache_len as i64,
+                self.kv.kv_heads as i64,
+                self.kv.head_dim as i64,
+            ],
+            &self.kv.k,
+        )
+        .to_literal()?;
+        let v_lit = crate::tensor::HostTensor::f32(
+            "v",
+            vec![
+                self.kv.n_layers as i64,
+                self.kv.n_slots as i64,
+                self.kv.cache_len as i64,
+                self.kv.kv_heads as i64,
+                self.kv.head_dim as i64,
+            ],
+            &self.kv.v,
+        )
+        .to_literal()?;
+        let out = self.rt.decode(
+            &artifact, &binding, &token, &pos, &k_lit, &v_lit, &kv_len,
+        )?;
+        EngineMetrics::inc(&self.metrics.decode_batches, 1);
+        EngineMetrics::inc(&self.metrics.decode_tokens, ids.len() as u64);
+        self.kv.absorb_decode_output(
+            out.k_cache.to_vec()?,
+            out.v_cache.to_vec()?,
+            &stepped,
+        );
+        let now = Instant::now();
+        for id in ids {
+            let a = self.active.get_mut(&id).unwrap();
+            let slot = a.slot;
+            let row = &out.logits[slot * out.vocab..(slot + 1) * out.vocab];
+            let next = argmax(row) as i32;
+            a.last_token = next;
+            a.tracked.generated.push(next);
+            let tpot =
+                now.duration_since(a.last_token_at).as_secs_f64();
+            a.last_token_at = now;
+            self.metrics.observe_tpot(tpot);
+            self.maybe_complete(id)?;
+        }
+        Ok(())
+    }
+
+    fn maybe_complete(&mut self, id: u64) -> Result<()> {
+        let done = {
+            let a = &self.active[&id];
+            let g = &a.tracked.generated;
+            g.len() >= a.tracked.req.max_new_tokens
+                || g.last() == Some(&EOS)
+        };
+        if !done {
+            return Ok(());
+        }
+        let a = self.active.remove(&id).unwrap();
+        self.kv.release(a.slot);
+        self.pool.release(id);
+        let now = Instant::now();
+        let e2e = now.duration_since(a.tracked.arrived).as_secs_f64();
+        self.metrics.observe_e2e(e2e);
+        EngineMetrics::inc(&self.metrics.requests_completed, 1);
+        self.completed += 1;
+        let ttft = a
+            .tracked
+            .first_token_at
+            .map(|t| t.duration_since(a.tracked.arrived).as_secs_f64())
+            .unwrap_or(0.0);
+        let _ = a.tracked.reply.send(Response {
+            id,
+            tokens: a.tracked.generated,
+            ttft_secs: ttft,
+            e2e_secs: e2e,
+            prefill_artifact: String::new(),
+        });
+        Ok(())
+    }
+
+    pub fn kv_invariants(&self) -> Result<()> {
+        self.kv.check_invariants()?;
+        self.pool.check_invariants()
+    }
+}

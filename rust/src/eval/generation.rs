@@ -1,0 +1,159 @@
+//! Greedy-generation evaluation (GSM8K / LongBench analogues): sparse (or
+//! dense) prefill hands its KV cache to the dense decode executable —
+//! exactly the paper's serving pipeline — and the generated continuation
+//! is exact-matched against the gold tokens.
+
+use anyhow::{bail, Result};
+
+use super::TaskResult;
+use crate::runtime::ModelRuntime;
+use crate::tensor::io::{EvalRows, EvalSet};
+use crate::tensor::math::argmax;
+use crate::tensor::HostTensor;
+
+/// Evaluate a generation dataset.
+///
+/// * `prefill_artifact` — dense/sparse/quant prefill at the dataset's
+///   sequence length
+/// * `decode_artifact`  — the model's decode executable (batch B_dec,
+///   cache C >= seq_len + max_gen)
+pub fn eval_generation(
+    rt: &mut ModelRuntime,
+    prefill_artifact: &str,
+    prefill_binding: &str,
+    decode_artifact: &str,
+    decode_binding: &str,
+    task: &str,
+    set: &EvalSet,
+    limit: usize,
+) -> Result<TaskResult> {
+    let pmeta = rt.manifest.artifact(prefill_artifact)?.clone();
+    let dmeta = rt.manifest.artifact(decode_artifact)?.clone();
+    let (pb, s) = (pmeta.batch, pmeta.seq);
+    let (db, cache) = (dmeta.batch, dmeta.cache);
+    if s != set.seq_len {
+        bail!("artifact seq {} != dataset {}", s, set.seq_len);
+    }
+    let rows = match &set.rows {
+        EvalRows::Gen(r) => r,
+        _ => bail!("{task}: not a generation dataset"),
+    };
+    let n = if limit == 0 { rows.len() } else { rows.len().min(limit) };
+    // geometry for the KV shuttle
+    let layers = dmeta
+        .runtime_inputs
+        .get(2)
+        .map(|(shape, _)| shape[0])
+        .unwrap_or(0);
+    let (kv_heads, head_dim) = dmeta
+        .runtime_inputs
+        .get(2)
+        .map(|(shape, _)| (shape[3], shape[4]))
+        .unwrap_or((1, 1));
+
+    let mut correct = 0usize;
+    let mut exec_secs = 0.0;
+    // chunk samples by min(prefill batch, decode batch)
+    let chunk = pb.min(db);
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(chunk);
+        let mut tokens = vec![0i32; pb * s];
+        for j in 0..take {
+            tokens[j * s..(j + 1) * s].copy_from_slice(set.row_tokens(i + j));
+        }
+        let out = rt.prefill(prefill_artifact, prefill_binding, &tokens)?;
+        exec_secs += out.exec_secs;
+        let k_host: Vec<f32> = out.k_cache.to_vec()?;
+        let v_host: Vec<f32> = out.v_cache.to_vec()?;
+        // scatter prefill rows into a fresh decode cache [L, DB, C, H, D]
+        let row_sz = kv_heads * head_dim;
+        let mut kc = vec![0f32; layers * db * cache * row_sz];
+        let mut vc = vec![0f32; layers * db * cache * row_sz];
+        let mut last = vec![0i32; db];
+        let mut pos = vec![0i32; db];
+        let mut kv_len = vec![1i32; db];
+        let mut done = vec![true; db];
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); db];
+        let mut max_gen = 0usize;
+        for j in 0..take {
+            let r = &rows[i + j];
+            let plen = r.prompt_len as usize;
+            for l in 0..layers {
+                let src = l * pb * s * row_sz + j * s * row_sz;
+                let dst = l * db * cache * row_sz + j * cache * row_sz;
+                kc[dst..dst + plen * row_sz]
+                    .copy_from_slice(&k_host[src..src + plen * row_sz]);
+                vc[dst..dst + plen * row_sz]
+                    .copy_from_slice(&v_host[src..src + plen * row_sz]);
+            }
+            // first generated token from the last prompt position
+            let lrow = &out.logits
+                [(j * s + plen - 1) * out.vocab..(j * s + plen) * out.vocab];
+            let t0 = argmax(lrow) as i32;
+            generated[j].push(t0);
+            last[j] = t0;
+            pos[j] = plen as i32;
+            kv_len[j] = (plen + 1) as i32;
+            done[j] = false;
+            max_gen = max_gen.max(r.max_gen as usize);
+        }
+        // decode loop (step 1 already done via prefill logits)
+        let dims = vec![
+            layers as i64,
+            db as i64,
+            cache as i64,
+            kv_heads as i64,
+            head_dim as i64,
+        ];
+        for _step in 1..max_gen {
+            if done.iter().all(|d| *d) {
+                break;
+            }
+            let k_lit = HostTensor::f32("k", dims.clone(), &kc).to_literal()?;
+            let v_lit = HostTensor::f32("v", dims.clone(), &vc).to_literal()?;
+            let dout = rt.decode(
+                decode_artifact,
+                decode_binding,
+                &last,
+                &pos,
+                &k_lit,
+                &v_lit,
+                &kv_len,
+            )?;
+            exec_secs += dout.exec_secs;
+            kc = dout.k_cache.to_vec()?;
+            vc = dout.v_cache.to_vec()?;
+            for j in 0..take {
+                if done[j] {
+                    continue;
+                }
+                let r = &rows[i + j];
+                let lrow =
+                    &dout.logits[j * dout.vocab..(j + 1) * dout.vocab];
+                let t = argmax(lrow) as i32;
+                generated[j].push(t);
+                last[j] = t;
+                pos[j] += 1;
+                kv_len[j] += 1;
+                if generated[j].len() >= r.max_gen as usize {
+                    done[j] = true;
+                }
+            }
+        }
+        for j in 0..take {
+            let r = &rows[i + j];
+            let g = &generated[j];
+            let ok = g.len() >= r.gold.len()
+                && g[..r.gold.len()] == r.gold[..];
+            correct += ok as usize;
+        }
+        i += take;
+    }
+    Ok(TaskResult {
+        task: task.to_string(),
+        accuracy: correct as f64 / n.max(1) as f64,
+        n,
+        exec_secs,
+    })
+}

@@ -1,0 +1,103 @@
+//! Multiple-choice scoring through a prefill executable.
+
+use anyhow::{bail, Result};
+
+use super::TaskResult;
+use crate::runtime::ModelRuntime;
+use crate::tensor::io::{EvalRows, EvalSet};
+use crate::tensor::math::span_logprob;
+
+/// Evaluate one MC dataset through `artifact` (+ weight `binding`).
+/// `limit` truncates to the first N samples (0 = all).
+pub fn eval_multiple_choice(
+    rt: &mut ModelRuntime,
+    artifact: &str,
+    binding: &str,
+    task: &str,
+    set: &EvalSet,
+    limit: usize,
+) -> Result<TaskResult> {
+    let meta = rt.manifest.artifact(artifact)?.clone();
+    let (b, s) = (meta.batch, meta.seq);
+    if s != set.seq_len {
+        bail!(
+            "artifact seq {} != dataset seq {} for task {task}",
+            s,
+            set.seq_len
+        );
+    }
+    let rows = match &set.rows {
+        EvalRows::Mc(r) => r,
+        _ => bail!("{task}: not a multiple-choice dataset"),
+    };
+    let n_rows = if limit == 0 {
+        rows.len()
+    } else {
+        // keep whole samples: limit * n_choices rows
+        (limit * set.n_choices).min(rows.len())
+    };
+    let mut scores: Vec<f64> = vec![f64::NEG_INFINITY; n_rows];
+    let mut exec_secs = 0.0;
+    let mut batch_tokens = vec![0i32; b * s];
+    let mut i = 0;
+    while i < n_rows {
+        let take = (n_rows - i).min(b);
+        batch_tokens.fill(0);
+        for j in 0..take {
+            batch_tokens[j * s..(j + 1) * s]
+                .copy_from_slice(set.row_tokens(i + j));
+        }
+        let out = rt.prefill(artifact, binding, &batch_tokens)?;
+        exec_secs += out.exec_secs;
+        for j in 0..take {
+            let r = &rows[i + j];
+            let toks = set.row_tokens(i + j);
+            let span = &toks[r.score_start as usize
+                ..(r.score_start + r.score_len) as usize];
+            let logits =
+                &out.logits[j * s * out.vocab..(j + 1) * s * out.vocab];
+            scores[i + j] = span_logprob(
+                logits,
+                out.vocab,
+                r.score_start as usize,
+                span,
+            );
+        }
+        i += take;
+    }
+    // aggregate per sample
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut cur_sample = u32::MAX;
+    let mut best = f64::NEG_INFINITY;
+    let mut best_choice = 0u16;
+    let mut gold = 0u16;
+    let mut n_seen = 0usize;
+    for (idx, r) in rows.iter().take(n_rows).enumerate() {
+        if r.sample != cur_sample {
+            if cur_sample != u32::MAX && n_seen == set.n_choices {
+                total += 1;
+                correct += (best_choice == gold) as usize;
+            }
+            cur_sample = r.sample;
+            best = f64::NEG_INFINITY;
+            n_seen = 0;
+            gold = r.gold;
+        }
+        n_seen += 1;
+        if scores[idx] > best {
+            best = scores[idx];
+            best_choice = r.choice;
+        }
+    }
+    if cur_sample != u32::MAX && n_seen == set.n_choices {
+        total += 1;
+        correct += (best_choice == gold) as usize;
+    }
+    Ok(TaskResult {
+        task: task.to_string(),
+        accuracy: correct as f64 / total.max(1) as f64,
+        n: total,
+        exec_secs,
+    })
+}

@@ -1,0 +1,37 @@
+//! Downstream-task evaluation over the AOT executables (the measurement
+//! half of the paper's tables).
+//!
+//! Multiple-choice: each (context, choice) pair is one padded row in the
+//! `.aev` dataset; the row's score is the sum of next-token log-probs over
+//! the choice span (lm-eval-harness convention); accuracy = mean over
+//! samples of argmax(choice score) == gold.
+//!
+//! Generation: rows are prompts; the engine prefills, then greedily
+//! decodes `max_gen` tokens through the decode executable; exact-match of
+//! the first `gold.len()` generated tokens (the worked intermediate step
+//! AND the final answer for the GSM8K analogue).
+
+pub mod generation;
+pub mod mc;
+
+pub use generation::eval_generation;
+pub use mc::eval_multiple_choice;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::tensor::io::{read_eval, EvalSet};
+
+pub fn load_task(artifacts: &Path, file: &str) -> Result<EvalSet> {
+    read_eval(&artifacts.join("eval").join(file))
+}
+
+/// Accuracy result of one (task, setting) cell.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub accuracy: f64,
+    pub n: usize,
+    pub exec_secs: f64,
+}

@@ -1,0 +1,6 @@
+//! Execution substrate: thread pool + helpers (tokio is unavailable
+//! offline; the coordinator is an explicit threaded pipeline instead).
+
+pub mod pool;
+
+pub use pool::ThreadPool;

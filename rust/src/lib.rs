@@ -1,0 +1,22 @@
+//! Amber Pruner — rust serving coordinator (Layer 3).
+//!
+//! Reproduction of "Amber Pruner: Leveraging N:M Activation Sparsity for
+//! Efficient Prefill in Large Language Models". The compute graphs (Layer 2
+//! JAX model + Layer 1 Pallas kernels) are AOT-lowered to HLO text by
+//! `python/compile/aot.py`; this crate loads them through the PJRT C API
+//! (`xla` crate) and serves batched requests with per-request N:M sparsity
+//! configs. Python is never on the request path.
+
+pub mod util;
+pub mod exec;
+pub mod tensor;
+pub mod metrics;
+pub mod sparsity;
+pub mod quant;
+pub mod runtime;
+pub mod coordinator;
+pub mod server;
+pub mod eval;
+pub mod repro;
+pub mod bench;
+pub mod testutil;

@@ -1,0 +1,228 @@
+//! `amber` — the Amber Pruner serving CLI (Layer-3 leader binary).
+//!
+//! Subcommands:
+//!   amber info                         — artifact inventory + platform
+//!   amber serve    [--addr ...]        — TCP serving front-end
+//!   amber bench-serve [...]            — closed-loop serving benchmark
+//!   amber repro <target> [...]         — regenerate a paper table/figure
+//!   amber eval  [...]                  — run one eval cell directly
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use amber_pruner::coordinator::request::SparsityConfig;
+use amber_pruner::coordinator::scheduler::{Engine, EngineConfig, EngineMsg};
+use amber_pruner::eval::{eval_multiple_choice, load_task};
+use amber_pruner::metrics::{EngineMetrics, Timer};
+use amber_pruner::repro::{self, ReproCtx};
+use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::server::{tcp, workload};
+use amber_pruner::util::cli::Args;
+
+const USAGE: &str = "\
+amber — N:M activation-sparse LLM serving (Amber Pruner reproduction)
+
+USAGE:
+  amber info      [--artifacts DIR]
+  amber serve     [--artifacts DIR] [--model NAME] [--addr HOST:PORT]
+  amber bench-serve [--artifacts DIR] [--model NAME] [--requests N]
+                  [--rate R] [--sparsity CFG] [--max-new N]
+  amber repro     TARGET [--artifacts DIR] [--limit N] [--model NAME]
+                  (TARGET: table1 table2 table3 app-table1 fig2 fig34
+                           fig6 appc coverage all)
+  amber eval      --artifact NAME --weights F1[,F2] --task T
+                  [--artifacts DIR] [--limit N]
+
+Sparsity configs: dense | N:M[:naive|ls|all][+sq]   e.g. 8:16:ls+sq
+";
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    let p = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    if !p.join("manifest.json").exists() {
+        // convenience: resolve relative to the repo root when invoked
+        // from a subdirectory (e.g. python/)
+        for up in ["..", "../.."] {
+            let alt = PathBuf::from(up).join(&p);
+            if alt.join("manifest.json").exists() {
+                return alt;
+            }
+        }
+    }
+    p
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[
+        "artifacts", "model", "addr", "requests", "rate", "sparsity",
+        "max-new", "limit", "artifact", "weights", "task", "config",
+    ])?;
+    let cmd = args.positional.first().map(|s| s.as_str());
+    match cmd {
+        Some("info") => info(&args),
+        Some("serve") => serve(&args),
+        Some("bench-serve") => bench_serve(&args),
+        Some("repro") => {
+            let target = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let ctx = ReproCtx {
+                artifacts: &artifacts_dir(&args),
+                limit: args.opt_usize("limit", 0)?,
+                model: args.opt("model").map(String::from),
+            };
+            repro::run(target, &ctx)
+        }
+        Some("eval") => eval_cell(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = ModelRuntime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {}", dir.display());
+    println!("\nmodels:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name}{}  config={:?}",
+            if m.is_moe { " (MoE)" } else { "" },
+            m.config
+        );
+    }
+    println!("\nartifacts ({}):", rt.manifest.artifacts.len());
+    for (name, a) in &rt.manifest.artifacts {
+        println!(
+            "  {name:<44} {}x{}  {} params, variant={}",
+            a.batch,
+            if a.kind == "prefill" { a.seq } else { a.cache },
+            a.params.len(),
+            a.variant
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut scfg = match args.opt("config") {
+        Some(p) => amber_pruner::server::config::ServeConfig::load(
+            std::path::Path::new(p),
+        )?,
+        None => amber_pruner::server::config::ServeConfig::default(),
+    };
+    if let Some(m) = args.opt("model") {
+        scfg.model = m.to_string();
+    }
+    if let Some(a) = args.opt("addr") {
+        scfg.addr = a.to_string();
+    }
+    let metrics = Arc::new(EngineMetrics::new());
+    let rt = ModelRuntime::new(&dir)?;
+    let mut ecfg = EngineConfig::new(&scfg.model);
+    ecfg.prefill_seq = scfg.prefill_seq;
+    ecfg.max_wait_secs = scfg.max_wait_ms / 1e3;
+    let mut engine = Engine::new(rt, ecfg, Arc::clone(&metrics))?;
+    let (tx, rx) = channel::<EngineMsg>();
+    let (bound, _h) = tcp::serve(&scfg.addr, tx, Arc::clone(&metrics))?;
+    println!("serving {} on {bound} (ctrl-c to stop)", scfg.model);
+    engine.run(rx)?;
+    Ok(())
+}
+
+fn bench_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.opt_or("model", "tiny-lm-a");
+    let n = args.opt_usize("requests", 64)?;
+    let rate = args.opt_f64("rate", 0.0)?;
+    let max_new = args.opt_usize("max-new", 8)?;
+    let sparsity = args.opt_or("sparsity", "8:16:ls");
+    let cfg = SparsityConfig::parse(&sparsity)
+        .ok_or_else(|| anyhow::anyhow!("bad --sparsity {sparsity}"))?;
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let rt = ModelRuntime::new(&dir)?;
+    let mut engine =
+        Engine::new(rt, EngineConfig::new(&model), Arc::clone(&metrics))?;
+
+    let mut spec = workload::WorkloadSpec::uniform_dense(n);
+    spec.rate = rate;
+    spec.max_new_tokens = max_new;
+    spec.mix = vec![(cfg, 1.0)];
+    let reqs = workload::generate(&spec);
+
+    let (reply_tx, reply_rx) = channel();
+    let t = Timer::start();
+    // closed-loop: submit respecting arrival offsets, then drain
+    let (tx, rx) = channel::<EngineMsg>();
+    let submitter = std::thread::spawn(move || {
+        let start = std::time::Instant::now();
+        for tr in reqs {
+            let dt = tr.at - start.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+            }
+            if tx.send(EngineMsg::Submit(tr.req, reply_tx.clone())).is_err()
+            {
+                return;
+            }
+        }
+        // closing tx ends the engine loop once queues drain
+    });
+    engine.run(rx)?;
+    submitter.join().ok();
+    let wall = t.secs();
+    let got = reply_rx.try_iter().count();
+    println!(
+        "\n== bench-serve {model} sparsity={} requests={n} rate={rate} ==",
+        cfg.label()
+    );
+    println!("completed {got}/{n} in {wall:.2}s");
+    println!("{}", metrics.report(wall));
+    engine.kv_invariants()?;
+    Ok(())
+}
+
+fn eval_cell(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let artifact = args
+        .opt("artifact")
+        .ok_or_else(|| anyhow::anyhow!("--artifact required"))?
+        .to_string();
+    let weights: Vec<String> = args
+        .opt("weights")
+        .ok_or_else(|| anyhow::anyhow!("--weights required"))?
+        .split(',')
+        .map(String::from)
+        .collect();
+    let task = args
+        .opt("task")
+        .ok_or_else(|| anyhow::anyhow!("--task required"))?
+        .to_string();
+    let limit = args.opt_usize("limit", 0)?;
+    let mut rt = ModelRuntime::new(&dir)?;
+    let wrefs: Vec<&str> = weights.iter().map(|s| s.as_str()).collect();
+    let binding = rt.bind(&artifact, &wrefs)?;
+    let set = load_task(&dir, &format!("{task}.aev"))?;
+    match set.rows {
+        amber_pruner::tensor::io::EvalRows::Mc(_) => {
+            let r = eval_multiple_choice(
+                &mut rt, &artifact, &binding, &task, &set, limit,
+            )?;
+            println!(
+                "{task}: accuracy {:.4} over {} samples ({:.2}s exec)",
+                r.accuracy, r.n, r.exec_secs
+            );
+        }
+        _ => bail!("use `repro table3` for generation tasks"),
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Serving metrics: counters, latency histograms, TTFT/TPOT summaries
+//! (criterion-style statistics without criterion).
+
+pub mod stats;
+
+pub use stats::{Histogram, Summary};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Engine-level metrics, shared across coordinator threads.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests_admitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub prefill_batches: AtomicU64,
+    pub decode_batches: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub decode_tokens: AtomicU64,
+    pub padded_prefill_tokens: AtomicU64,
+    pub ttft: Mutex<Histogram>,
+    pub tpot: Mutex<Histogram>,
+    pub e2e: Mutex<Histogram>,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn observe_ttft(&self, secs: f64) {
+        self.ttft.lock().unwrap().observe(secs);
+    }
+
+    pub fn observe_tpot(&self, secs: f64) {
+        self.tpot.lock().unwrap().observe(secs);
+    }
+
+    pub fn observe_e2e(&self, secs: f64) {
+        self.e2e.lock().unwrap().observe(secs);
+    }
+
+    pub fn report(&self, wall_secs: f64) -> String {
+        let done = self.requests_completed.load(Ordering::Relaxed);
+        let ptok = self.prefill_tokens.load(Ordering::Relaxed);
+        let dtok = self.decode_tokens.load(Ordering::Relaxed);
+        let pad = self.padded_prefill_tokens.load(Ordering::Relaxed);
+        let ttft = self.ttft.lock().unwrap().summary();
+        let tpot = self.tpot.lock().unwrap().summary();
+        let e2e = self.e2e.lock().unwrap().summary();
+        format!(
+            "requests={done} ({:.1} req/s)  prefill_tok={ptok} \
+             decode_tok={dtok} pad_frac={:.2}\n\
+             TTFT  p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
+             TPOT  p50={:.1}ms p95={:.1}ms\n\
+             E2E   p50={:.1}ms p95={:.1}ms  tok_throughput={:.0} tok/s",
+            done as f64 / wall_secs.max(1e-9),
+            if ptok + pad > 0 {
+                pad as f64 / (ptok + pad) as f64
+            } else {
+                0.0
+            },
+            ttft.p50 * 1e3,
+            ttft.p95 * 1e3,
+            ttft.p99 * 1e3,
+            tpot.p50 * 1e3,
+            tpot.p95 * 1e3,
+            e2e.p50 * 1e3,
+            e2e.p95 * 1e3,
+            (ptok + dtok) as f64 / wall_secs.max(1e-9),
+        )
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}

@@ -1,0 +1,112 @@
+//! Streaming statistics: reservoir-free exact histogram (we keep all
+//! samples — serving runs here are small) with percentile queries, plus a
+//! criterion-style summary (mean/median/stddev) for the bench harness.
+
+#[derive(Default, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        // nearest-rank with linear interpolation
+        let x = p / 100.0 * (self.samples.len() - 1) as f64;
+        let lo = x.floor() as usize;
+        let hi = x.ceil() as usize;
+        let frac = x - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn summary(&mut self) -> Summary {
+        if self.samples.is_empty() {
+            return Summary::default();
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let mean = self.samples.iter().sum::<f64>() / n as f64;
+        let var = self
+            .samples
+            .iter()
+            .map(|v| (v - mean) * (v - mean))
+            .sum::<f64>()
+            / n.max(1) as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: self.samples[0],
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            max: *self.samples.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert!((h.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((h.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((h.percentile(100.0) - 100.0).abs() < 1e-9);
+        let s = h.summary();
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.summary().n, 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Int8 quantization helpers (rust mirror of `amber/quant.py`) — used for
+//! verification of the W8A8 artifacts and by the native SpMM bench's int8
+//! variant (Outstanding-sparse's compute path).
+
+/// Symmetric per-tensor int8 quantization with a static scale.
+pub fn quantize(x: &[f32], scale: f32) -> Vec<i8> {
+    x.iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Per-output-channel weight quantization: w [din, dout] row-major ->
+/// (wq, per-column scales).
+pub fn quantize_weight(w: &[f32], din: usize, dout: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut absmax = vec![0f32; dout];
+    for r in 0..din {
+        for c in 0..dout {
+            absmax[c] = absmax[c].max(w[r * dout + c].abs());
+        }
+    }
+    let scales: Vec<f32> =
+        absmax.iter().map(|&a| (a / 127.0).max(1e-8)).collect();
+    let mut wq = vec![0i8; din * dout];
+    for r in 0..din {
+        for c in 0..dout {
+            wq[r * dout + c] = (w[r * dout + c] / scales[c])
+                .round()
+                .clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (wq, scales)
+}
+
+/// W8A8 matmul with int32 accumulation (reference semantics of the
+/// quant_matmul Pallas kernel).
+pub fn w8a8_matmul(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &[i8],
+    dout: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; t * dout];
+    for r in 0..t {
+        for c in 0..dout {
+            let mut acc: i32 = 0;
+            for k in 0..din {
+                acc += xq[r * din + k] as i32 * wq[k * dout + c] as i32;
+            }
+            out[r * dout + c] = acc as f32 * x_scale * w_scales[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let absmax = x.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let scale = absmax / 127.0;
+        let q = quantize(&x, scale);
+        let d = dequantize(&q, scale);
+        for (a, b) in x.iter().zip(d.iter()) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn w8a8_close_to_f32() {
+        let mut rng = Rng::new(6);
+        let (t, din, dout) = (4, 32, 8);
+        let x: Vec<f32> = (0..t * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (wq, ws) = quantize_weight(&w, din, dout);
+        let xmax = x.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let xs = (xmax / 127.0).max(1e-8);
+        let xq = quantize(&x, xs);
+        let yq = w8a8_matmul(&xq, t, din, &wq, dout, xs, &ws);
+        // f32 reference
+        for r in 0..t {
+            for c in 0..dout {
+                let mut acc = 0f32;
+                for k in 0..din {
+                    acc += x[r * din + k] * w[k * dout + c];
+                }
+                let err = (acc - yq[r * dout + c]).abs();
+                assert!(err < 0.15, "err {err} at ({r},{c})");
+            }
+        }
+    }
+}

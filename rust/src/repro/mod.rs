@@ -1,0 +1,54 @@
+//! Regeneration harnesses for every table and figure in the paper
+//! (DESIGN.md §4 experiment index). Each entry prints the same rows /
+//! series the paper reports, measured on this testbed's substitute models.
+//!
+//!   amber repro table1      Zero-shot, Amber Pruner        (paper Tab. 1)
+//!   amber repro table2      Zero-shot, Outstanding-sparse  (paper Tab. 2)
+//!   amber repro table3      GSM8K + LongBench              (paper Tab. 3)
+//!   amber repro app-table1  weight vs activation sparsity  (App. A Tab. 1)
+//!   amber repro fig2        act/weight distributions       (paper Fig. 2)
+//!   amber repro fig34       Outstanding-sparse ranges      (Figs. 3-4)
+//!   amber repro fig6        sensitivity per projection     (App. D Fig. 6)
+//!   amber repro appc        per-module activation stats    (App. C)
+//!   amber repro coverage    % linear FLOPs accelerated     (§Setup claim)
+
+pub mod figures;
+pub mod tables;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+pub struct ReproCtx<'a> {
+    pub artifacts: &'a Path,
+    /// samples per task (0 = full dataset)
+    pub limit: usize,
+    /// restrict to a single model (None = all in manifest)
+    pub model: Option<String>,
+}
+
+pub fn run(what: &str, ctx: &ReproCtx) -> Result<()> {
+    match what {
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "app-table1" => tables::app_table1(ctx),
+        "fig2" => figures::fig2(ctx),
+        "fig34" => figures::fig34(ctx),
+        "fig6" => figures::fig6(ctx),
+        "appc" => figures::appc(ctx),
+        "coverage" => figures::coverage(ctx),
+        "tpu-model" => figures::tpu_model(ctx),
+        "ablation" => figures::ablation(ctx),
+        "all" => {
+            for t in [
+                "coverage", "tpu-model", "fig2", "fig34", "fig6", "appc",
+                "table1", "table2", "table3", "app-table1",
+            ] {
+                run(t, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown repro target '{other}'"),
+    }
+}

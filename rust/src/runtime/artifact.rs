@@ -1,0 +1,188 @@
+//! manifest.json parsing: artifact metadata, model configs, settings.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo: String,
+    /// weight-tensor names in executable argument order (before runtime
+    /// inputs)
+    pub params: Vec<String>,
+    /// runtime input shapes (after the weight params)
+    pub runtime_inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<String>,
+    pub kind: String,    // "prefill" | "decode"
+    pub variant: String, // "dense" | "nm" | "sq" | "sq_nm"
+    pub batch: usize,
+    pub seq: usize,   // prefill only
+    pub cache: usize, // decode only
+    pub nm: Option<(usize, usize)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub weights: String,
+    pub is_moe: bool,
+    pub config: BTreeMap<String, usize>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub settings: BTreeMap<String, Vec<String>>,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let raw = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in raw
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let st = a.req("static")?;
+            let params = a
+                .req("params")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("params not an array"))?
+                .iter()
+                .map(|p| p.as_str().unwrap_or_default().to_string())
+                .collect();
+            let runtime_inputs = a
+                .req("runtime_inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("runtime_inputs not an array"))?
+                .iter()
+                .map(|ri| {
+                    let shape = ri
+                        .req("shape")
+                        .ok()
+                        .and_then(|s| s.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|d| d.as_usize())
+                                .collect::<Vec<_>>()
+                        })
+                        .unwrap_or_default();
+                    let dtype = ri
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    (shape, dtype)
+                })
+                .collect();
+            let nm = match (st.get("n"), st.get("m")) {
+                (Some(n), Some(m)) => Some((
+                    n.as_usize().unwrap_or(0),
+                    m.as_usize().unwrap_or(0),
+                )),
+                _ => None,
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    hlo: a.req_str("hlo")?.to_string(),
+                    params,
+                    runtime_inputs,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|o| o.as_str().unwrap_or("").to_string())
+                        .collect(),
+                    kind: st.req_str("kind")?.to_string(),
+                    variant: st.req_str("variant")?.to_string(),
+                    batch: st.req_usize("batch").unwrap_or(0),
+                    seq: st.req_usize("seq").unwrap_or(0),
+                    cache: st.req_usize("cache").unwrap_or(0),
+                    nm,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        if let Some(ms) = raw.get("models").and_then(|m| m.as_obj()) {
+            for (name, m) in ms {
+                let config = m
+                    .get("config")
+                    .and_then(|c| c.as_obj())
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(|(k, v)| {
+                                v.as_usize().map(|u| (k.clone(), u))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        name: name.clone(),
+                        weights: m.req_str("weights")?.to_string(),
+                        is_moe: m
+                            .get("is_moe")
+                            .and_then(|b| b.as_bool())
+                            .unwrap_or(false),
+                        config,
+                    },
+                );
+            }
+        }
+        let mut settings = BTreeMap::new();
+        if let Some(ss) = raw.get("settings").and_then(|m| m.as_obj()) {
+            for (name, s) in ss {
+                let list = s
+                    .get("settings")
+                    .and_then(|l| l.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                settings.insert(name.clone(), list);
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, models, settings, raw })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Artifact naming convention helper:
+    /// `<model>.prefill<seq>.<variant>` / `<model>.decode.<variant>`.
+    pub fn prefill_name(
+        model: &str,
+        seq: usize,
+        variant: &str,
+        nm: Option<(usize, usize)>,
+    ) -> String {
+        match nm {
+            Some((n, m)) => format!("{model}.prefill{seq}.{variant}{n}_{m}"),
+            None => format!("{model}.prefill{seq}.{variant}"),
+        }
+    }
+
+    pub fn decode_name(model: &str, variant: &str) -> String {
+        format!("{model}.decode.{variant}")
+    }
+}

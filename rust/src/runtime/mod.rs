@@ -1,0 +1,12 @@
+//! PJRT runtime (Layer-3 side of the AOT bridge).
+//!
+//! Loads HLO-text artifacts produced by `python/compile/aot.py`, compiles
+//! them on the PJRT CPU client once, binds the `.atw` weight files in the
+//! executable's flattened-argument order, and exposes typed prefill /
+//! decode entry points to the coordinator. Python never runs here.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use engine::{DecodeOut, ModelRuntime, PrefillOut};

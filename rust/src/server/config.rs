@@ -1,0 +1,117 @@
+//! Serving deployment configuration (JSON file), so `amber serve
+//! --config serve.json` captures a full deployment the way vLLM's engine
+//! args do: model, artifact shapes, scheduler knobs, replica count,
+//! default sparsity policy and admission limits.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::request::SparsityConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub addr: String,
+    pub prefill_seq: usize,
+    pub max_wait_ms: f64,
+    pub replicas: usize,
+    pub default_sparsity: SparsityConfig,
+    /// reject requests when this many are queued (backpressure)
+    pub max_queue: usize,
+    pub max_new_tokens_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "tiny-lm-a".into(),
+            addr: "127.0.0.1:8471".into(),
+            prefill_seq: 64,
+            max_wait_ms: 5.0,
+            replicas: 1,
+            default_sparsity: SparsityConfig::dense(),
+            max_queue: 1024,
+            max_new_tokens_cap: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let get_s = |k: &str, dv: &str| {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .unwrap_or(dv)
+                .to_string()
+        };
+        let get_u =
+            |k: &str, dv: usize| j.get(k).and_then(|v| v.as_usize()).unwrap_or(dv);
+        let sparsity = j
+            .get("default_sparsity")
+            .and_then(|v| v.as_str())
+            .map(|s| {
+                SparsityConfig::parse(s)
+                    .context(format!("bad default_sparsity '{s}'"))
+            })
+            .transpose()?
+            .unwrap_or(d.default_sparsity);
+        Ok(ServeConfig {
+            model: get_s("model", &d.model),
+            addr: get_s("addr", &d.addr),
+            prefill_seq: get_u("prefill_seq", d.prefill_seq),
+            max_wait_ms: j
+                .get("max_wait_ms")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.max_wait_ms),
+            replicas: get_u("replicas", d.replicas),
+            default_sparsity: sparsity,
+            max_queue: get_u("max_queue", d.max_queue),
+            max_new_tokens_cap: get_u("max_new_tokens_cap",
+                                      d.max_new_tokens_cap),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let j = Json::parse(
+            r#"{"model": "tiny-lm-b", "addr": "0.0.0.0:9000",
+                "max_wait_ms": 2.5, "replicas": 2,
+                "default_sparsity": "8:16:ls", "max_queue": 64}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "tiny-lm-b");
+        assert_eq!(c.replicas, 2);
+        assert_eq!(c.max_wait_ms, 2.5);
+        assert_eq!(c.default_sparsity.nm, Some((8, 16)));
+        assert_eq!(c.max_queue, 64);
+        assert_eq!(c.prefill_seq, 64); // default
+    }
+
+    #[test]
+    fn rejects_bad_sparsity() {
+        let j = Json::parse(r#"{"default_sparsity": "nope"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.model, "tiny-lm-a");
+        assert_eq!(c.max_queue, 1024);
+    }
+}

@@ -1,0 +1,13 @@
+//! Serving front-ends and workload generation.
+//!
+//! * `tcp`      — a line-delimited JSON protocol over std::net (no tokio):
+//!                request  {"id":1,"prompt":[...],"max_new_tokens":8,
+//!                          "sparsity":"8:16:ls"}
+//!                response {"id":1,"tokens":[...],"ttft_ms":..,"e2e_ms":..}
+//! * `workload` — deterministic client simulations: poisson arrivals,
+//!                prompt-length mixes, per-request sparsity mixes, and
+//!                trace replay for the serving benches.
+
+pub mod config;
+pub mod tcp;
+pub mod workload;

@@ -1,0 +1,196 @@
+//! Line-delimited JSON TCP front-end (std::net, thread-per-connection).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"id": 1, "prompt": [1, 84, 91], "max_new_tokens": 8,
+//!       "sparsity": "8:16:ls"}
+//!   <- {"id": 1, "tokens": [93, 2], "ttft_ms": 3.1, "e2e_ms": 9.0}
+//!   -> {"cmd": "stats"}            <- {"requests": ...}
+//!   -> {"cmd": "quit"}             (closes the connection)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::request::{Request, Response, SparsityConfig};
+use crate::coordinator::scheduler::EngineMsg;
+use crate::metrics::EngineMetrics;
+use crate::util::json::{self, Json};
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line)?;
+    let id = j.req_usize("id")? as u64;
+    let prompt: Vec<i32> = j
+        .req("prompt")?
+        .as_arr()
+        .context("prompt not an array")?
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .map(|v| v as i32)
+        .collect();
+    let max_new = j.req_usize("max_new_tokens").unwrap_or(8);
+    let cfg = j
+        .get("sparsity")
+        .and_then(|s| s.as_str())
+        .map(|s| SparsityConfig::parse(s))
+        .unwrap_or(Some(SparsityConfig::dense()))
+        .context("bad sparsity config")?;
+    Ok(Request { id, prompt, max_new_tokens: max_new, config: cfg })
+}
+
+pub fn response_json(r: &Response) -> String {
+    json::obj(vec![
+        ("id", json::num(r.id as f64)),
+        (
+            "tokens",
+            Json::Arr(r.tokens.iter().map(|t| json::num(*t as f64)).collect()),
+        ),
+        ("ttft_ms", json::num(r.ttft_secs * 1e3)),
+        ("e2e_ms", json::num(r.e2e_secs * 1e3)),
+    ])
+    .to_string()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine_tx: Sender<EngineMsg>,
+    metrics: Arc<EngineMetrics>,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)?;
+        if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+            match cmd {
+                "quit" => break,
+                "stats" => {
+                    writeln!(writer, "{}", stats_json(&metrics))?;
+                    continue;
+                }
+                other => {
+                    writeln!(
+                        writer,
+                        "{{\"error\":\"unknown cmd {other}\"}}"
+                    )?;
+                    continue;
+                }
+            }
+        }
+        match parse_request(&line) {
+            Ok(req) => {
+                let (tx, rx) = channel();
+                engine_tx
+                    .send(EngineMsg::Submit(req, tx))
+                    .map_err(|_| anyhow::anyhow!("engine gone"))?;
+                // synchronous per-connection semantics: wait for this
+                // request (pipelining across connections, not within one)
+                let resp = rx.recv()?;
+                writeln!(writer, "{}", response_json(&resp))?;
+            }
+            Err(e) => {
+                writeln!(writer, "{{\"error\":{:?}}}", e.to_string())?;
+            }
+        }
+    }
+    log::trace(&format!("connection {peer} closed"));
+    Ok(())
+}
+
+mod log {
+    pub fn trace(_s: &str) {}
+}
+
+fn stats_json(m: &EngineMetrics) -> String {
+    use std::sync::atomic::Ordering;
+    json::obj(vec![
+        (
+            "requests_completed",
+            json::num(m.requests_completed.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "prefill_batches",
+            json::num(m.prefill_batches.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "decode_batches",
+            json::num(m.decode_batches.load(Ordering::Relaxed) as f64),
+        ),
+    ])
+    .to_string()
+}
+
+/// Serve until the process is killed. Returns the bound address (useful
+/// with port 0 in tests).
+pub fn serve(
+    addr: &str,
+    engine_tx: Sender<EngineMsg>,
+    metrics: Arc<EngineMetrics>,
+) -> Result<(std::net::SocketAddr, thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("bind {addr}"))?;
+    let bound = listener.local_addr()?;
+    let handle = thread::Builder::new()
+        .name("tcp-acceptor".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(s) => {
+                        let tx = engine_tx.clone();
+                        let m = Arc::clone(&metrics);
+                        thread::spawn(move || {
+                            let _ = handle_conn(s, tx, m);
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok((bound, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_full() {
+        let r = parse_request(
+            r#"{"id": 3, "prompt": [1, 2, 3], "max_new_tokens": 5,
+                "sparsity": "4:8:ls"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 5);
+        assert_eq!(r.config.nm, Some((4, 8)));
+    }
+
+    #[test]
+    fn parse_request_defaults() {
+        let r = parse_request(r#"{"id": 1, "prompt": [1]}"#).unwrap();
+        assert!(r.config.nm.is_none());
+        assert_eq!(r.max_new_tokens, 8);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response {
+            id: 9,
+            tokens: vec![5, 2],
+            ttft_secs: 0.001,
+            e2e_secs: 0.002,
+            prefill_artifact: String::new(),
+        };
+        let j = Json::parse(&response_json(&r)).unwrap();
+        assert_eq!(j.req_usize("id").unwrap(), 9);
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

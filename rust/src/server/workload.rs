@@ -1,0 +1,178 @@
+//! Workload generation for the serving benches: synthetic prompts drawn
+//! from the same token world the models were trained on, poisson or burst
+//! arrivals, and per-request sparsity-config mixes.
+
+use crate::coordinator::request::{Request, SparsityConfig};
+use crate::util::rng::Rng;
+
+/// Token-vocabulary constants mirrored from python/compile/tokenizer.py.
+pub mod vocab {
+    pub const BOS: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const QRY: i32 = 4;
+    pub const ANS: i32 = 5;
+    pub const DIGIT0: i32 = 10;
+    pub const REL0: i32 = 32;
+    pub const ENT0: i32 = 48;
+    pub const WORD_A0: i32 = 80;
+    pub const N_WORDS_A: i32 = 128;
+    pub const KEY0: i32 = 336;
+    pub const N_KEYS: i32 = 48;
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    /// mean requests/second for poisson arrivals (0 = all at once)
+    pub rate: f64,
+    pub prompt_len_lo: usize,
+    pub prompt_len_hi: usize,
+    pub max_new_tokens: usize,
+    /// sparsity mix: (config, weight)
+    pub mix: Vec<(SparsityConfig, f64)>,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn uniform_dense(n: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            n_requests: n,
+            rate: 0.0,
+            prompt_len_lo: 12,
+            prompt_len_hi: 48,
+            max_new_tokens: 8,
+            mix: vec![(SparsityConfig::dense(), 1.0)],
+            seed: 7,
+        }
+    }
+}
+
+/// A generated request + its arrival offset (seconds from start).
+pub struct TimedRequest {
+    pub at: f64,
+    pub req: Request,
+}
+
+/// Grammar-like synthetic prompt (plausible in-distribution tokens).
+pub fn gen_prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    let mut p = vec![vocab::BOS];
+    while p.len() < len.saturating_sub(4) {
+        match rng.below(4) {
+            0 => {
+                // fact query
+                p.extend([
+                    vocab::QRY,
+                    vocab::ENT0 + rng.below(32) as i32,
+                    vocab::REL0 + rng.below(8) as i32,
+                    vocab::ANS,
+                ]);
+            }
+            1 => {
+                // grammar words
+                for _ in 0..rng.below(6) + 2 {
+                    p.push(vocab::WORD_A0 + rng.below(128) as i32);
+                }
+                p.push(vocab::EOS);
+            }
+            2 => {
+                // kv pairs
+                for _ in 0..rng.below(4) + 1 {
+                    p.push(vocab::KEY0 + rng.below(vocab::N_KEYS as u64) as i32);
+                    p.push(vocab::DIGIT0 + rng.below(10) as i32);
+                }
+            }
+            _ => {
+                // arithmetic
+                p.extend([
+                    vocab::DIGIT0 + rng.below(10) as i32,
+                    20, // PLUS
+                    vocab::DIGIT0 + rng.below(10) as i32,
+                    23, // EQ
+                ]);
+            }
+        }
+    }
+    // fill to exactly `len` with grammar words
+    while p.len() < len {
+        p.push(vocab::WORD_A0 + rng.below(vocab::N_WORDS_A as u64) as i32);
+    }
+    p.truncate(len);
+    p
+}
+
+pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(spec.seed);
+    let total_w: f64 = spec.mix.iter().map(|(_, w)| w).sum();
+    let mut out = Vec::with_capacity(spec.n_requests);
+    let mut t = 0.0;
+    for id in 0..spec.n_requests {
+        let len = spec.prompt_len_lo
+            + rng.usize_below(spec.prompt_len_hi - spec.prompt_len_lo + 1);
+        let mut pick = rng.f64() * total_w;
+        let mut config = spec.mix[0].0;
+        for (c, w) in &spec.mix {
+            if pick < *w {
+                config = *c;
+                break;
+            }
+            pick -= w;
+        }
+        if spec.rate > 0.0 {
+            t += rng.exp(spec.rate);
+        }
+        out.push(TimedRequest {
+            at: t,
+            req: Request {
+                id: id as u64,
+                prompt: gen_prompt(&mut rng, len),
+                max_new_tokens: spec.max_new_tokens,
+                config,
+            },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let spec = WorkloadSpec::uniform_dense(50);
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert!(x.req.prompt.len() >= 12 && x.req.prompt.len() <= 48);
+            assert_eq!(x.req.prompt[0], vocab::BOS);
+        }
+    }
+
+    #[test]
+    fn poisson_monotone_arrivals() {
+        let mut spec = WorkloadSpec::uniform_dense(20);
+        spec.rate = 100.0;
+        let reqs = generate(&spec);
+        for w in reqs.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        assert!(reqs.last().unwrap().at > 0.0);
+    }
+
+    #[test]
+    fn mix_selects_all_configs() {
+        let mut spec = WorkloadSpec::uniform_dense(200);
+        spec.mix = vec![
+            (SparsityConfig::dense(), 1.0),
+            (SparsityConfig::amber(8, 16), 1.0),
+        ];
+        let reqs = generate(&spec);
+        let dense = reqs
+            .iter()
+            .filter(|r| r.req.config.nm.is_none())
+            .count();
+        assert!(dense > 40 && dense < 160, "dense={dense}");
+    }
+}

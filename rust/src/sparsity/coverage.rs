@@ -1,0 +1,133 @@
+//! FLOPs coverage accounting — the paper's headline efficiency metric
+//! ("Amber Pruner accelerates over 55% of linear projection computation").
+//!
+//! Counts per-token matmul FLOPs (2 * d_in * d_out) of every linear module
+//! and the fraction routed through the N:M path under a skip policy. For
+//! MoE models the expert MLP counts activated experts only (top-k), the
+//! same accounting the paper applies to Qwen3-30B-*A3B*.
+
+use std::collections::BTreeMap;
+
+use super::policy;
+
+/// Minimal model geometry (parsed from manifest config).
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub q_dim: usize,
+    pub kv_dim: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff_expert: usize,
+}
+
+impl Geometry {
+    pub fn from_config(cfg: &BTreeMap<String, usize>) -> Geometry {
+        let g = |k: &str| cfg.get(k).copied().unwrap_or(0);
+        Geometry {
+            d_model: g("d_model"),
+            n_layers: g("n_layers"),
+            q_dim: g("n_q_heads") * g("head_dim"),
+            kv_dim: g("n_kv_heads") * g("head_dim"),
+            d_ff: g("d_ff"),
+            n_experts: g("n_experts"),
+            top_k: g("top_k_experts"),
+            d_ff_expert: g("d_ff_expert"),
+        }
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 0
+    }
+
+    /// Per-token FLOPs of each linear module type.
+    pub fn module_flops(&self) -> BTreeMap<&'static str, u64> {
+        let d = self.d_model as u64;
+        let q = self.q_dim as u64;
+        let kv = self.kv_dim as u64;
+        let mut out = BTreeMap::new();
+        out.insert("q_proj", 2 * d * q);
+        out.insert("k_proj", 2 * d * kv);
+        out.insert("v_proj", 2 * d * kv);
+        out.insert("o_proj", 2 * q * d);
+        if self.is_moe() {
+            let k = self.top_k as u64;
+            let fe = self.d_ff_expert as u64;
+            out.insert("gate_proj", 2 * d * fe * k);
+            out.insert("up_proj", 2 * d * fe * k);
+            out.insert("down_proj", 2 * fe * d * k);
+        } else {
+            let f = self.d_ff as u64;
+            out.insert("gate_proj", 2 * d * f);
+            out.insert("up_proj", 2 * d * f);
+            out.insert("down_proj", 2 * f * d);
+        }
+        out
+    }
+
+    /// Fraction of linear FLOPs pruned under the policy with the given
+    /// per-layer q/gate skip list.
+    pub fn coverage(&self, skip_layers: &[usize]) -> f64 {
+        let fl = self.module_flops();
+        let mut total = 0u64;
+        let mut pruned = 0u64;
+        for layer in 0..self.n_layers {
+            for (m, f) in &fl {
+                total += f;
+                if policy::pruned_in_layer(m, layer, skip_layers) {
+                    pruned += f;
+                }
+            }
+        }
+        pruned as f64 / total as f64
+    }
+
+    /// Effective speedup of the covered computation at ratio n/m assuming
+    /// ideal SpMM hardware (Amdahl over the linear-layer fraction).
+    pub fn ideal_linear_speedup(&self, skip_layers: &[usize], n: usize,
+                                m: usize) -> f64 {
+        let cov = self.coverage(skip_layers);
+        1.0 / (1.0 - cov + cov * n as f64 / m as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_a() -> Geometry {
+        Geometry {
+            d_model: 96,
+            n_layers: 6,
+            q_dim: 96,
+            kv_dim: 32,
+            d_ff: 384,
+            n_experts: 0,
+            top_k: 0,
+            d_ff_expert: 0,
+        }
+    }
+
+    #[test]
+    fn coverage_above_55_with_one_skip() {
+        let g = tiny_a();
+        let cov = g.coverage(&[5]);
+        assert!(cov > 0.55, "coverage {cov}");
+        assert!(cov < 0.60);
+    }
+
+    #[test]
+    fn no_skip_higher_than_skip() {
+        let g = tiny_a();
+        assert!(g.coverage(&[]) > g.coverage(&[0]));
+    }
+
+    #[test]
+    fn speedup_bounds() {
+        let g = tiny_a();
+        let s = g.ideal_linear_speedup(&[5], 2, 4);
+        assert!(s > 1.0 && s < 2.0);
+    }
+}

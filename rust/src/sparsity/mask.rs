@@ -1,0 +1,77 @@
+//! Exact N:M masks (rust mirror of `kernels/ref.py::nm_mask`).
+//!
+//! Scores are |x| * scale; within every group of `m` consecutive channels
+//! the `n` highest-scoring survive; ties break toward the lower channel
+//! index (stable ordering), keeping the pattern exactly N:M — the
+//! structural requirement of the hardware SpMM format.
+
+/// Keep-mask for one row. `x` length divisible by `m`; `scale` same length
+/// (pass `&[]` for naive magnitude scoring).
+pub fn nm_mask_scored(x: &[f32], scale: &[f32], n: usize, m: usize) -> Vec<bool> {
+    assert!(x.len() % m == 0, "len {} % m {} != 0", x.len(), m);
+    let mut mask = vec![false; x.len()];
+    let mut idx: Vec<usize> = (0..m).collect();
+    for g in 0..x.len() / m {
+        let base = g * m;
+        let score = |j: usize| {
+            let s = if scale.is_empty() { 1.0 } else { scale[base + j] };
+            x[base + j].abs() * s
+        };
+        idx.iter_mut().enumerate().for_each(|(i, v)| *v = i);
+        // stable sort by descending score
+        idx.sort_by(|&a, &b| {
+            score(b)
+                .partial_cmp(&score(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for &j in idx.iter().take(n) {
+            mask[base + j] = true;
+        }
+    }
+    mask
+}
+
+/// Apply the mask: pruned copy of x.
+pub fn nm_prune(x: &[f32], scale: &[f32], n: usize, m: usize) -> Vec<f32> {
+    let mask = nm_mask_scored(x, scale, n, m);
+    x.iter()
+        .zip(mask)
+        .map(|(&v, keep)| if keep { v } else { 0.0 })
+        .collect()
+}
+
+/// Structural check: at most n nonzeros in every m-group.
+pub fn validate_nm(x: &[f32], n: usize, m: usize) -> bool {
+    if x.len() % m != 0 {
+        return false;
+    }
+    x.chunks_exact(m)
+        .all(|g| g.iter().filter(|v| **v != 0.0).count() <= n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_counts() {
+        let x = vec![1.0, -2.0, 3.0, 0.5, 4.0, 4.0, 4.0, 4.0];
+        let p = nm_prune(&x, &[], 2, 4);
+        assert!(validate_nm(&p, 2, 4));
+        // group 1: all ties -> lower indices win
+        assert_eq!(&p[4..], &[4.0, 4.0, 0.0, 0.0]);
+        // group 0: keeps -2, 3
+        assert_eq!(&p[..4], &[0.0, -2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_changes_selection() {
+        let x = vec![1.0, 0.9, 0.1, 0.2];
+        let p_naive = nm_prune(&x, &[], 1, 4);
+        assert_eq!(p_naive, vec![1.0, 0.0, 0.0, 0.0]);
+        let scale = vec![1.0, 1.0, 100.0, 1.0];
+        let p_scored = nm_prune(&x, &scale, 1, 4);
+        assert_eq!(p_scored, vec![0.0, 0.0, 0.1, 0.0]);
+    }
+}

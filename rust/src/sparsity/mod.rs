@@ -1,0 +1,23 @@
+//! N:M sparsity substrate on the rust side.
+//!
+//! * `mask`      — exact N:M mask construction + validity checks (mirrors
+//!                 the python kernels; used for verification and property
+//!                 tests against vectors emitted at build time)
+//! * `spmm`      — a native compressed N:M sparse x dense matmul; this is
+//!                 the CPU stand-in for the paper's SpMM hardware and what
+//!                 `cargo bench --bench spmm` measures (the N/M compute
+//!                 scaling the paper's accelerator would deliver)
+//! * `coverage`  — GQA-aware accounting of the fraction of linear-layer
+//!                 FLOPs routed through the sparse path (the paper's
+//!                 ">55% of linear computations accelerated" headline)
+//! * `policy`    — the layer-skipping policy table (which module types are
+//!                 prunable, mirroring the paper's setup section)
+
+pub mod coverage;
+pub mod estimate;
+pub mod mask;
+pub mod policy;
+pub mod spmm;
+
+pub use mask::{nm_mask_scored, nm_prune, validate_nm};
+pub use spmm::{NmCompressed, SpmmStats};

@@ -1,0 +1,90 @@
+//! The paper's layer-skipping policy, as a rust-side table (mirrors
+//! `amber/sensitivity.py`; the actual keep_dense tensors ship as aux
+//! weights — this module is for accounting, display and serving-config
+//! validation).
+
+pub const MODULES: [&str; 7] = [
+    "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj",
+    "down_proj",
+];
+
+/// Index of a module name in the aux keep_dense layout.
+pub fn module_index(name: &str) -> Option<usize> {
+    MODULES.iter().position(|m| *m == name)
+}
+
+/// Module types that may ever be pruned (paper §Experimental Setup):
+/// k/v are non-prunable under GQA (negligible FLOPs), o/up are preserved
+/// (highest sensitivity), down is always pruned, q/gate selectively.
+pub fn prunable(name: &str) -> bool {
+    matches!(name, "q_proj" | "gate_proj" | "down_proj")
+}
+
+/// Whether a module is pruned in a given layer under the policy.
+pub fn pruned_in_layer(name: &str, layer: usize, skip_layers: &[usize]) -> bool {
+    match name {
+        "down_proj" => true,
+        "q_proj" | "gate_proj" => !skip_layers.contains(&layer),
+        _ => false,
+    }
+}
+
+/// The three Table-1 settings and the dense baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Setting {
+    Dense,
+    /// magnitude top-k everywhere, no skipping (the paper's baseline)
+    Naive,
+    /// + layer skipping ("Amber-P (l.s.)")
+    LayerSkip,
+    /// + Robust-Norm Scoring ("Amber-P (all)"; dense models only)
+    All,
+}
+
+impl Setting {
+    pub fn aux_file(&self, model: &str, sq: bool) -> String {
+        let infix = if sq { ".sq" } else { "" };
+        let tag = match self {
+            Setting::Dense => "dense",
+            Setting::Naive => "naive",
+            Setting::LayerSkip => "ls",
+            Setting::All => "all",
+        };
+        format!("{model}{infix}.aux_{tag}.atw")
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Setting::Dense => "Baseline",
+            Setting::Naive => "Naive top-k",
+            Setting::LayerSkip => "Amber-P (l.s.)",
+            Setting::All => "Amber-P (all)",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_table() {
+        assert!(pruned_in_layer("down_proj", 3, &[3]));
+        assert!(!pruned_in_layer("q_proj", 3, &[3]));
+        assert!(pruned_in_layer("q_proj", 2, &[3]));
+        assert!(!pruned_in_layer("o_proj", 0, &[]));
+        assert!(!prunable("k_proj"));
+    }
+
+    #[test]
+    fn aux_names() {
+        assert_eq!(
+            Setting::All.aux_file("tiny-lm-a", false),
+            "tiny-lm-a.aux_all.atw"
+        );
+        assert_eq!(
+            Setting::Naive.aux_file("tiny-lm-b", true),
+            "tiny-lm-b.sq.aux_naive.atw"
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Native N:M compressed SpMM — the CPU stand-in for the sparse matmul
+//! unit the paper targets (Ascend / Ampere sparse tensor cores).
+//!
+//! An N:M-pruned activation row compresses to `din * n / m` (value, index)
+//! pairs; the matmul then touches only the surviving channels' weight
+//! rows, doing exactly n/m of the dense multiply-adds — the same compute
+//! scaling the hardware SpMM delivers. `cargo bench --bench spmm` measures
+//! dense vs compressed wall-clock across ratios and sizes (PERF row of the
+//! experiment index).
+
+use super::mask::nm_mask_scored;
+
+/// Compressed N:M activation matrix [t, din*n/m] with per-element group
+/// channel indices.
+pub struct NmCompressed {
+    pub t: usize,
+    pub din: usize,
+    pub n: usize,
+    pub m: usize,
+    /// surviving values, row-major [t, din/m, n]
+    pub values: Vec<f32>,
+    /// absolute channel index of each surviving value
+    pub index: Vec<u32>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SpmmStats {
+    pub dense_flops: u64,
+    pub sparse_flops: u64,
+}
+
+impl NmCompressed {
+    /// Compress a dense [t, din] matrix with scored N:M pruning.
+    pub fn compress(
+        x: &[f32],
+        t: usize,
+        din: usize,
+        scale: &[f32],
+        n: usize,
+        m: usize,
+    ) -> NmCompressed {
+        assert_eq!(x.len(), t * din);
+        let groups = din / m;
+        let mut values = Vec::with_capacity(t * groups * n);
+        let mut index = Vec::with_capacity(t * groups * n);
+        for r in 0..t {
+            let row = &x[r * din..(r + 1) * din];
+            let mask = nm_mask_scored(row, scale, n, m);
+            for g in 0..groups {
+                let mut cnt = 0;
+                for j in 0..m {
+                    let c = g * m + j;
+                    if mask[c] {
+                        values.push(row[c]);
+                        index.push(c as u32);
+                        cnt += 1;
+                    }
+                }
+                debug_assert_eq!(cnt, n);
+            }
+        }
+        NmCompressed { t, din, n, m, values, index }
+    }
+
+    /// Decompress back to dense (tests / verification).
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.t * self.din];
+        let per_row = self.din / self.m * self.n;
+        for r in 0..self.t {
+            for k in 0..per_row {
+                let v = self.values[r * per_row + k];
+                let c = self.index[r * per_row + k] as usize;
+                out[r * self.din + c] = v;
+            }
+        }
+        out
+    }
+
+    /// Compressed matmul: self [t, din] (sparse) x w [din, dout] -> dense
+    /// [t, dout]. Only surviving channels' weight rows are touched.
+    pub fn matmul(&self, w: &[f32], dout: usize) -> Vec<f32> {
+        assert_eq!(w.len(), self.din * dout);
+        let per_row = self.din / self.m * self.n;
+        let mut out = vec![0.0f32; self.t * dout];
+        for r in 0..self.t {
+            let orow = &mut out[r * dout..(r + 1) * dout];
+            let base = r * per_row;
+            for k in 0..per_row {
+                let v = self.values[base + k];
+                if v == 0.0 {
+                    continue;
+                }
+                let c = self.index[base + k] as usize;
+                let wrow = &w[c * dout..(c + 1) * dout];
+                // axpy over the output row — contiguous, vectorizable
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += v * wv;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn stats(&self, dout: usize) -> SpmmStats {
+        SpmmStats {
+            dense_flops: 2 * (self.t * self.din * dout) as u64,
+            sparse_flops: 2 * (self.t * self.din * dout) as u64
+                * self.n as u64
+                / self.m as u64,
+        }
+    }
+}
+
+/// Dense reference matmul (row-major x [t, din] @ w [din, dout]), written
+/// with the same axpy loop structure so the bench compares algorithms, not
+/// loop orders.
+pub fn dense_matmul(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * dout];
+    for r in 0..t {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let xrow = &x[r * din..(r + 1) * din];
+        for (c, &v) in xrow.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let wrow = &w[c * dout..(c + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += v * wv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn compress_roundtrip_and_matmul() {
+        let mut rng = Rng::new(1);
+        let (t, din, dout) = (8, 32, 16);
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        for &(n, m) in &[(2usize, 4usize), (4, 8), (8, 16)] {
+            let c = NmCompressed::compress(&x, t, din, &[], n, m);
+            let xd = c.decompress();
+            // decompressed equals mask-pruned x
+            for (r, row) in xd.chunks_exact(din).enumerate() {
+                let pr = crate::sparsity::mask::nm_prune(
+                    &x[r * din..(r + 1) * din],
+                    &[],
+                    n,
+                    m,
+                );
+                assert_eq!(row, &pr[..]);
+            }
+            // compressed matmul == dense matmul over pruned x
+            let y_sparse = c.matmul(&w, dout);
+            let y_dense = dense_matmul(&xd, t, din, &w, dout);
+            for (a, b) in y_sparse.iter().zip(y_dense.iter()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn flops_ratio() {
+        let c = NmCompressed {
+            t: 4,
+            din: 16,
+            n: 2,
+            m: 4,
+            values: vec![0.0; 4 * 8],
+            index: vec![0; 4 * 8],
+        };
+        let s = c.stats(10);
+        assert_eq!(s.sparse_flops * 2, s.dense_flops);
+    }
+}

@@ -1,0 +1,194 @@
+//! Readers for the python-emitted binary formats (see params_io.py):
+//! `.atw` weights files and `.aev` eval datasets.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{DType, HostTensor};
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_i64(r: &mut impl Read) -> Result<i64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(i64::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Load an `.atw` weights file; tensor order == executable argument order.
+pub fn read_weights(path: &Path) -> Result<Vec<HostTensor>> {
+    let f = File::open(path)
+        .with_context(|| format!("open weights {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"ATWB" {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let dtype = DType::from_code(read_u8(&mut r)?)?;
+        let ndim = read_u8(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_i64(&mut r)?);
+        }
+        let nbytes = read_u64(&mut r)? as usize;
+        let expect = dims.iter().product::<i64>() as usize * dtype.size();
+        if nbytes != expect {
+            bail!("tensor byte length {nbytes} != expected {expect}");
+        }
+        let mut data = vec![0u8; nbytes];
+        r.read_exact(&mut data)?;
+        out.push(HostTensor {
+            name: String::from_utf8(name)?,
+            dtype,
+            dims,
+            data,
+        });
+    }
+    Ok(out)
+}
+
+/// One row of a multiple-choice eval set.
+#[derive(Debug, Clone)]
+pub struct McRow {
+    pub sample: u32,
+    pub choice: u16,
+    pub score_start: u16,
+    pub score_len: u16,
+    pub gold: u16,
+}
+
+/// One row of a generation eval set.
+#[derive(Debug, Clone)]
+pub struct GenRow {
+    pub sample: u32,
+    pub prompt_len: u16,
+    pub gold: Vec<i32>,
+    pub max_gen: u16,
+}
+
+#[derive(Debug)]
+pub enum EvalRows {
+    Mc(Vec<McRow>),
+    Gen(Vec<GenRow>),
+}
+
+/// A loaded `.aev` dataset: `tokens` is [n_rows, seq_len] row-major.
+#[derive(Debug)]
+pub struct EvalSet {
+    pub seq_len: usize,
+    pub n_samples: usize,
+    pub n_choices: usize,
+    pub tokens: Vec<i32>,
+    pub rows: EvalRows,
+}
+
+impl EvalSet {
+    pub fn n_rows(&self) -> usize {
+        match &self.rows {
+            EvalRows::Mc(r) => r.len(),
+            EvalRows::Gen(r) => r.len(),
+        }
+    }
+
+    pub fn row_tokens(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+}
+
+pub fn read_eval(path: &Path) -> Result<EvalSet> {
+    let f = File::open(path)
+        .with_context(|| format!("open eval {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"AEVD" {
+        bail!("{}: bad magic", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("unsupported eval version {version}");
+    }
+    let kind = read_u8(&mut r)?;
+    let seq_len = read_u32(&mut r)? as usize;
+    let n_rows = read_u32(&mut r)? as usize;
+    let n_samples = read_u32(&mut r)? as usize;
+    let n_choices = read_u32(&mut r)? as usize;
+    let mut tok_bytes = vec![0u8; 4 * seq_len * n_rows];
+    r.read_exact(&mut tok_bytes)?;
+    let tokens: Vec<i32> = tok_bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let rows = if kind == 0 {
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            rows.push(McRow {
+                sample: read_u32(&mut r)?,
+                choice: read_u16(&mut r)?,
+                score_start: read_u16(&mut r)?,
+                score_len: read_u16(&mut r)?,
+                gold: read_u16(&mut r)?,
+            });
+        }
+        EvalRows::Mc(rows)
+    } else {
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            let sample = read_u32(&mut r)?;
+            let prompt_len = read_u16(&mut r)?;
+            let gold_len = read_u16(&mut r)? as usize;
+            let mut gold_all = [0i32; 8];
+            for g in gold_all.iter_mut() {
+                *g = {
+                    let mut b = [0u8; 4];
+                    r.read_exact(&mut b)?;
+                    i32::from_le_bytes(b)
+                };
+            }
+            let max_gen = read_u16(&mut r)?;
+            rows.push(GenRow {
+                sample,
+                prompt_len,
+                gold: gold_all[..gold_len].to_vec(),
+                max_gen,
+            });
+        }
+        EvalRows::Gen(rows)
+    };
+    Ok(EvalSet { seq_len, n_samples, n_choices, tokens, rows })
+}

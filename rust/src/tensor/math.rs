@@ -1,0 +1,77 @@
+//! Host-side numeric helpers for the eval path (log-softmax scoring,
+//! greedy argmax) — computed on logits copied back from PJRT.
+
+/// Log-softmax over the last axis of a [rows, v] matrix, evaluated lazily:
+/// returns log p(target) for one position without materializing the whole
+/// distribution.
+pub fn token_logprob(logits_row: &[f32], target: usize) -> f64 {
+    let mx = logits_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut denom = 0.0f64;
+    for &v in logits_row {
+        denom += ((v - mx) as f64).exp();
+    }
+    (logits_row[target] - mx) as f64 - denom.ln()
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sum of log-probs of `targets[i]` read from rows `start..start+len` of a
+/// [seq, vocab] logits matrix, with the usual next-token shift: the logits
+/// at position p-1 predict token at position p.
+pub fn span_logprob(
+    logits: &[f32],
+    vocab: usize,
+    span_start: usize,
+    targets: &[i32],
+) -> f64 {
+    let mut acc = 0.0;
+    for (i, &t) in targets.iter().enumerate() {
+        let pos = span_start + i - 1; // predicting token at span_start + i
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        acc += token_logprob(row, t as usize);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logprob_normalizes() {
+        let row = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|t| token_logprob(&row, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // higher logit -> higher logprob
+        assert!(token_logprob(&row, 2) > token_logprob(&row, 0));
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn span_shift() {
+        // vocab=2, seq=3. logits[0] strongly predicts token 1,
+        // logits[1] strongly predicts token 0.
+        let logits = vec![
+            -10.0, 10.0, // pos 0
+            10.0, -10.0, // pos 1
+            0.0, 0.0, // pos 2
+        ];
+        // span starting at position 1, targets [1, 0]: uses rows 0 and 1
+        let lp = span_logprob(&logits, 2, 1, &[1, 0]);
+        assert!(lp > -1e-6, "lp={lp}");
+    }
+}

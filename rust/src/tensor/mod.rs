@@ -1,0 +1,118 @@
+//! Host-side tensors: dtype-tagged buffers, the .atw/.aev binary formats,
+//! and the small numeric helpers the eval path needs (log-softmax etc.).
+
+pub mod io;
+pub mod math;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+    U8,
+}
+
+impl DType {
+    pub fn from_code(c: u8) -> Result<DType> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            3 => DType::U8,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+/// A named host tensor (row-major, little-endian raw bytes).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<i64>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn f32(name: &str, dims: Vec<i64>, vals: &[f32]) -> HostTensor {
+        assert_eq!(vals.len() as i64, dims.iter().product::<i64>());
+        HostTensor {
+            name: name.to_string(),
+            dtype: DType::F32,
+            dims,
+            data: vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn i32(name: &str, dims: Vec<i64>, vals: &[i32]) -> HostTensor {
+        assert_eq!(vals.len() as i64, dims.iter().product::<i64>());
+        HostTensor {
+            name: name.to_string(),
+            dtype: DType::I32,
+            dims,
+            data: vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{}: not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let ty = match self.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I8 => xla::ElementType::S8,
+            DType::U8 => xla::ElementType::U8,
+        };
+        let dims: Vec<usize> = self.dims.iter().map(|&d| d as usize).collect();
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, &dims, &self.data,
+        )?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::f32("x", vec![2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.n_elems(), 4);
+        assert!(t.as_i32().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Mini property-testing kit (proptest is unavailable offline).
+//!
+//! Deterministic, seeded generators + a `prop_check` driver that reports
+//! the first failing case with its seed so it can be replayed. Used for
+//! the coordinator invariants (routing, batching, KV-slot management) and
+//! the sparsity mask laws.
+
+pub mod prop;
+
+pub use prop::{prop_check, Gen};

@@ -1,0 +1,85 @@
+//! Property-testing driver: run a predicate over N seeded random cases;
+//! on failure, retry the case with a simple halving shrink over the
+//! generator's "size" knob and report the minimal failing seed.
+
+use crate::util::rng::Rng;
+
+/// A generator is any Fn(&mut Rng, usize /*size*/) -> T.
+pub struct Gen;
+
+impl Gen {
+    pub fn usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    pub fn choice<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+        &xs[rng.usize_below(xs.len())]
+    }
+}
+
+/// Run `cases` random checks. `f(rng, size)` returns Err(description) on
+/// property violation. Panics with the seed + description of the first
+/// failure (replay by calling f with Rng::new(seed)).
+pub fn prop_check<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        // grow the size knob over the run: early cases are small (easier
+        // to debug), later cases stress harder.
+        let size = 2 + case * 30 / cases.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(desc) = f(&mut rng, size) {
+            // shrink: retry with smaller sizes, same seed
+            let mut min_size = size;
+            let mut min_desc = desc;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng2 = Rng::new(seed);
+                match f(&mut rng2, s) {
+                    Err(d2) => {
+                        min_size = s;
+                        min_desc = d2;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={min_size}): \
+                 {min_desc}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        prop_check("reverse-reverse", 50, |rng, size| {
+            let v: Vec<u64> = (0..size).map(|_| rng.below(100)).collect();
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            if r == v {
+                Ok(())
+            } else {
+                Err("reverse^2 != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        prop_check("always-fails", 5, |_, _| Err("nope".into()));
+    }
+}

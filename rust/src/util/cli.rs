@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// option keys that take a value (everything else is a bare flag)
+    valued: Vec<&'static str>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String], valued: &[&'static str]) -> Result<Args> {
+        let mut out = Args { valued: valued.to_vec(), ..Default::default() };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if out.valued.contains(&rest) {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        anyhow!("option --{rest} expects a value")
+                    })?;
+                    out.options.insert(rest.to_string(), v.clone());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(valued: &[&'static str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, valued)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v} not an integer: {e}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v} not a number: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = Args::parse(
+            &sv(&["serve", "--port", "8080", "--verbose", "--x=1"]),
+            &["port"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("x", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--port"]), &["port"]).is_err());
+    }
+}

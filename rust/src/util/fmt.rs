@@ -1,0 +1,98 @@
+//! Paper-style table rendering for the repro harnesses.
+
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(c.len());
+                } else {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// "0.6537" style cell for accuracies, "-2.3%" for drops.
+pub fn acc(v: f64) -> String {
+    format!("{:.4}", v)
+}
+
+pub fn pct_drop(baseline: f64, v: f64) -> String {
+    let d = (v - baseline) * 100.0;
+    format!("{}{:.1}%", if d >= 0.0 { "+" } else { "" }, d)
+}
+
+pub fn ms(v: f64) -> String {
+    format!("{:.2}ms", v * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["xx".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("| xx | 1    |"));
+    }
+
+    #[test]
+    fn pct() {
+        assert_eq!(pct_drop(0.70, 0.65), "-5.0%");
+        assert_eq!(pct_drop(0.70, 0.71), "+1.0%");
+    }
+}

@@ -1,0 +1,94 @@
+//! Minimal leveled logger (env-controlled, no `log` crate facade needed
+//! on the hot path — macros compile to a branch on a relaxed atomic).
+//!
+//! Level via `AMBER_LOG` = error|warn|info|debug|trace (default: warn).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static INIT: OnceLock<()> = OnceLock::new();
+
+pub fn level() -> Level {
+    INIT.get_or_init(|| {
+        let lvl = match std::env::var("AMBER_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Warn,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn set_level(l: Level) {
+    INIT.get_or_init(|| ());
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, module: &str, msg: &str) {
+    if enabled(l) {
+        eprintln!("[{:5}] {module}: {msg}", format!("{l:?}").to_lowercase());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info,
+                               module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug,
+                               module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn,
+                               module_path!(), &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-rolled substrates. The offline environment only vendors the `xla`
+//! and `anyhow` crates, so JSON, CLI parsing, PRNG and table formatting are
+//! implemented here (DESIGN.md §6).
+
+pub mod cli;
+pub mod log;
+pub mod fmt;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,170 @@
+//! Format-level tests that need no PJRT: manifest parsing, eval-set
+//! aggregation logic, weights-file round trip against bytes written in
+//! the same layout python emits.
+
+use std::io::Write;
+
+use amber_pruner::runtime::Manifest;
+use amber_pruner::tensor::io::{read_eval, read_weights};
+use amber_pruner::tensor::math::{span_logprob, token_logprob};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("amber-test-{name}-{}",
+                                              std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn manifest_parses_minimal() {
+    let dir = tmpdir("manifest");
+    let manifest = r#"{
+      "artifacts": {
+        "m.prefill64.dense": {
+          "hlo": "hlo/m.prefill64.dense.hlo.txt",
+          "params": ["params.embed", "params.wq"],
+          "runtime_inputs": [{"shape": [8, 64], "dtype": "int32"}],
+          "outputs": ["logits", "k", "v"],
+          "static": {"kind": "prefill", "variant": "dense",
+                      "batch": 8, "seq": 64}
+        },
+        "m.decode.dense": {
+          "hlo": "hlo/m.decode.dense.hlo.txt",
+          "params": ["params.embed"],
+          "runtime_inputs": [
+            {"shape": [8], "dtype": "int32"},
+            {"shape": [8], "dtype": "int32"},
+            {"shape": [2, 8, 32, 1, 4], "dtype": "float32"},
+            {"shape": [2, 8, 32, 1, 4], "dtype": "float32"},
+            {"shape": [8], "dtype": "int32"}
+          ],
+          "outputs": ["logits", "k", "v"],
+          "static": {"kind": "decode", "variant": "dense",
+                      "batch": 8, "cache": 32}
+        }
+      },
+      "models": {
+        "m": {"weights": "weights/m.atw", "is_moe": false,
+               "config": {"n_layers": 2, "vocab_size": 64}}
+      },
+      "settings": {"m": {"settings": ["naive", "ls"]}}
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let a = m.artifact("m.prefill64.dense").unwrap();
+    assert_eq!(a.batch, 8);
+    assert_eq!(a.seq, 64);
+    assert_eq!(a.params.len(), 2);
+    assert_eq!(a.runtime_inputs[0].0, vec![8, 64]);
+    let d = m.artifact("m.decode.dense").unwrap();
+    assert_eq!(d.cache, 32);
+    assert_eq!(d.runtime_inputs[2].0, vec![2, 8, 32, 1, 4]);
+    assert!(m.models.get("m").unwrap().config["n_layers"] == 2);
+    assert_eq!(m.settings["m"], vec!["naive", "ls"]);
+    assert!(m.artifact("nope").is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn weights_file_layout_matches_python_writer() {
+    // bytes laid out exactly as params_io.write_weights does
+    let dir = tmpdir("weights");
+    let path = dir.join("x.atw");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(b"ATWB").unwrap();
+    f.write_all(&1u32.to_le_bytes()).unwrap(); // version
+    f.write_all(&2u32.to_le_bytes()).unwrap(); // n_tensors
+    // tensor 1: "a" f32 [2, 2]
+    f.write_all(&1u16.to_le_bytes()).unwrap();
+    f.write_all(b"a").unwrap();
+    f.write_all(&[0u8, 2u8]).unwrap(); // dtype f32, ndim 2
+    f.write_all(&2i64.to_le_bytes()).unwrap();
+    f.write_all(&2i64.to_le_bytes()).unwrap();
+    f.write_all(&16u64.to_le_bytes()).unwrap();
+    for v in [1.0f32, 2.0, 3.0, 4.0] {
+        f.write_all(&v.to_le_bytes()).unwrap();
+    }
+    // tensor 2: "b.c" i8 [3]
+    f.write_all(&3u16.to_le_bytes()).unwrap();
+    f.write_all(b"b.c").unwrap();
+    f.write_all(&[2u8, 1u8]).unwrap();
+    f.write_all(&3i64.to_le_bytes()).unwrap();
+    f.write_all(&3u64.to_le_bytes()).unwrap();
+    f.write_all(&[5u8, 250u8, 7u8]).unwrap(); // -6 as u8=250
+    drop(f);
+    let ts = read_weights(&path).unwrap();
+    assert_eq!(ts.len(), 2);
+    assert_eq!(ts[0].name, "a");
+    assert_eq!(ts[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    assert_eq!(ts[1].name, "b.c");
+    assert_eq!(ts[1].dims, vec![3]);
+    assert_eq!(ts[1].data, vec![5u8, 250, 7]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn weights_file_rejects_corruption() {
+    let dir = tmpdir("weights-bad");
+    let path = dir.join("bad.atw");
+    std::fs::write(&path, b"NOPE").unwrap();
+    assert!(read_weights(&path).is_err());
+    // truncated header
+    std::fs::write(&path, b"ATWB\x01\x00\x00\x00").unwrap();
+    assert!(read_weights(&path).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eval_set_bytes_roundtrip() {
+    // MC set written in the python layout: 2 samples x 2 choices, seq 8
+    let dir = tmpdir("eval");
+    let path = dir.join("t.aev");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(b"AEVD").unwrap();
+    f.write_all(&1u32.to_le_bytes()).unwrap();
+    f.write_all(&[0u8]).unwrap(); // kind MC
+    f.write_all(&8u32.to_le_bytes()).unwrap(); // seq
+    f.write_all(&4u32.to_le_bytes()).unwrap(); // rows
+    f.write_all(&2u32.to_le_bytes()).unwrap(); // samples
+    f.write_all(&2u32.to_le_bytes()).unwrap(); // choices
+    for row in 0..4i32 {
+        for pos in 0..8i32 {
+            f.write_all(&(row * 10 + pos).to_le_bytes()).unwrap();
+        }
+    }
+    for (sample, choice, gold) in
+        [(0u32, 0u16, 1u16), (0, 1, 1), (1, 0, 0), (1, 1, 0)]
+    {
+        f.write_all(&sample.to_le_bytes()).unwrap();
+        f.write_all(&choice.to_le_bytes()).unwrap();
+        f.write_all(&3u16.to_le_bytes()).unwrap(); // score_start
+        f.write_all(&2u16.to_le_bytes()).unwrap(); // score_len
+        f.write_all(&gold.to_le_bytes()).unwrap();
+    }
+    drop(f);
+    let set = read_eval(&path).unwrap();
+    assert_eq!(set.seq_len, 8);
+    assert_eq!(set.n_samples, 2);
+    assert_eq!(set.n_choices, 2);
+    assert_eq!(set.n_rows(), 4);
+    assert_eq!(set.row_tokens(2)[0], 20);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn logprob_scoring_selects_higher_likelihood_span() {
+    // vocab 4, seq 4. Build logits where span [2..4) = tokens [1, 2]
+    // is very likely and an alternative [3, 3] is unlikely.
+    let vocab = 4;
+    let mut logits = vec![0f32; 4 * vocab];
+    logits[1 * vocab + 1] = 8.0; // pos1 predicts token1 (at pos2)
+    logits[2 * vocab + 2] = 8.0; // pos2 predicts token2 (at pos3)
+    let good = span_logprob(&logits, vocab, 2, &[1, 2]);
+    let bad = span_logprob(&logits, vocab, 2, &[3, 3]);
+    assert!(good > bad + 5.0);
+    // token_logprob normalizes
+    let p: f64 = (0..vocab)
+        .map(|t| token_logprob(&logits[0..vocab], t).exp())
+        .sum();
+    assert!((p - 1.0).abs() < 1e-9);
+}

@@ -1,0 +1,282 @@
+//! Integration tests over the real artifacts (skipped gracefully when
+//! `make artifacts` hasn't run) + property tests on coordinator
+//! invariants that need no PJRT.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use amber_pruner::coordinator::batcher::{routing, ConfigKey, PrefillQueues};
+use amber_pruner::coordinator::kv::KvSlots;
+use amber_pruner::coordinator::request::{Request, SparsityConfig, Tracked};
+use amber_pruner::coordinator::scheduler::{Engine, EngineConfig};
+use amber_pruner::metrics::EngineMetrics;
+use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::sparsity::mask;
+use amber_pruner::sparsity::policy::Setting;
+use amber_pruner::testutil::prop::{prop_check, Gen};
+use amber_pruner::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("integration: artifacts/ missing; skipping PJRT tests");
+        None
+    }
+}
+
+// ----------------------------------------------------------------- PJRT
+
+#[test]
+fn manifest_artifacts_compile_and_run() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::new(&dir).unwrap();
+    let art = "tiny-lm-a.prefill64.dense";
+    if !rt.manifest.artifacts.contains_key(art) {
+        return;
+    }
+    let binding = rt.bind(art, &["tiny-lm-a.atw"]).unwrap();
+    let meta = rt.manifest.artifact(art).unwrap().clone();
+    let tokens: Vec<i32> =
+        (0..meta.batch * meta.seq).map(|i| 1 + (i as i32 % 300)).collect();
+    let out = rt.prefill(art, &binding, &tokens).unwrap();
+    assert_eq!(out.vocab, 384);
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn sparse_artifact_with_dense_aux_matches_dense_artifact() {
+    // keep_dense == 1 everywhere must reproduce the dense graph exactly
+    // (the contract that lets one nm executable serve dense requests).
+    let Some(dir) = artifacts() else { return };
+    let mut rt = ModelRuntime::new(&dir).unwrap();
+    let nm_art = "tiny-lm-a.prefill64.nm2_4";
+    if !rt.manifest.artifacts.contains_key(nm_art) {
+        return;
+    }
+    let b_dense = rt
+        .bind("tiny-lm-a.prefill64.dense", &["tiny-lm-a.atw"])
+        .unwrap();
+    let b_nm = rt
+        .bind(nm_art, &["tiny-lm-a.atw", "tiny-lm-a.aux_dense.atw"])
+        .unwrap();
+    let meta = rt.manifest.artifact(nm_art).unwrap().clone();
+    let tokens: Vec<i32> =
+        (0..meta.batch * meta.seq).map(|i| 1 + (i as i32 % 300)).collect();
+    let a = rt
+        .prefill("tiny-lm-a.prefill64.dense", &b_dense, &tokens)
+        .unwrap();
+    let c = rt.prefill(nm_art, &b_nm, &tokens).unwrap();
+    let max_diff = a
+        .logits
+        .iter()
+        .zip(c.logits.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 2e-3, "dense-aux nm differs from dense: {max_diff}");
+}
+
+#[test]
+fn engine_serves_mixed_sparsity_requests() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::new(&dir).unwrap();
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig::new("tiny-lm-a"),
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let (tx, rx) = channel();
+    let (reply_tx, reply_rx) = channel();
+    let configs = [
+        SparsityConfig::dense(),
+        SparsityConfig {
+            setting: Setting::LayerSkip,
+            nm: Some((2, 4)),
+            quantized: false,
+        },
+        SparsityConfig {
+            setting: Setting::Naive,
+            nm: Some((2, 4)),
+            quantized: false,
+        },
+    ];
+    let mut rng = Rng::new(3);
+    for id in 0..12u64 {
+        let len = 8 + rng.usize_below(24);
+        let prompt: Vec<i32> =
+            (0..len).map(|_| 1 + rng.below(300) as i32).collect();
+        tx.send(amber_pruner::coordinator::scheduler::EngineMsg::Submit(
+            Request {
+                id,
+                prompt,
+                max_new_tokens: 3,
+                config: configs[(id % 3) as usize],
+            },
+            reply_tx.clone(),
+        ))
+        .unwrap();
+    }
+    drop(tx);
+    drop(reply_tx);
+    engine.run(rx).unwrap();
+    let responses: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(responses.len(), 12);
+    for r in &responses {
+        assert!(!r.tokens.is_empty());
+        assert!(r.tokens.len() <= 3);
+        assert!(r.ttft_secs >= 0.0 && r.e2e_secs >= r.ttft_secs);
+    }
+    engine.kv_invariants().unwrap();
+}
+
+// ------------------------------------------------- property tests (no PJRT)
+
+#[test]
+fn prop_nm_mask_is_exact_and_scored() {
+    prop_check("nm-mask-exact", 200, |rng, size| {
+        let m = *Gen::choice(rng, &[4usize, 8, 16]);
+        let n = m / 2;
+        let groups = 1 + size % 8;
+        let d = groups * m;
+        let x = Gen::f32_vec(rng, d, 2.0);
+        let scale: Vec<f32> =
+            (0..d).map(|_| rng.f64() as f32 * 3.0 + 0.1).collect();
+        let pruned = mask::nm_prune(&x, &scale, n, m);
+        if !mask::validate_nm(&pruned, n, m) {
+            return Err(format!("invalid N:M for n={n} m={m}"));
+        }
+        // kept values are exactly the original values
+        for (a, b) in x.iter().zip(pruned.iter()) {
+            if *b != 0.0 && a != b {
+                return Err("pruning altered a kept value".into());
+            }
+        }
+        // exactly n survivors per group when x has no zeros
+        if x.iter().all(|v| *v != 0.0) {
+            for g in pruned.chunks_exact(m) {
+                let nz = g.iter().filter(|v| **v != 0.0).count();
+                if nz != n {
+                    return Err(format!("group has {nz} != {n} nonzeros"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_slots_never_leak_or_alias() {
+    prop_check("kv-slots", 120, |rng, size| {
+        let slots = 2 + size % 6;
+        let mut kv = KvSlots::new(2, slots, 16, 1, 4);
+        let pre = vec![1.0f32; 2 * slots * 8 * 4];
+        let mut active: Vec<(u64, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..size * 4 {
+            if rng.bool(0.6) && active.len() < slots {
+                let vl = 1 + rng.usize_below(8);
+                let slot = kv
+                    .admit(next_id, &pre, &pre, 0, slots, 8, vl)
+                    .map_err(|e| e.to_string())?;
+                active.push((next_id, slot));
+                next_id += 1;
+            } else if !active.is_empty() {
+                let i = rng.usize_below(active.len());
+                let (_, slot) = active.swap_remove(i);
+                kv.release(slot);
+            }
+            kv.check_invariants().map_err(|e| e.to_string())?;
+            if kv.free_slots() != slots - active.len() {
+                return Err("free-slot accounting drifted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_and_groups_requests() {
+    prop_check("batcher", 100, |rng, size| {
+        let mut q = PrefillQueues::new(4, 0.0);
+        let n = size * 3 + 1;
+        let configs = [
+            SparsityConfig::dense(),
+            SparsityConfig::amber(2, 4),
+            SparsityConfig::outstanding(8, 16),
+        ];
+        let mut pushed = std::collections::HashMap::new();
+        for id in 0..n as u64 {
+            let cfg = configs[rng.usize_below(3)];
+            let (p, _, _) = routing("m", 64, &cfg);
+            *pushed.entry(p.clone()).or_insert(0usize) += 1;
+            let (tx, _rx) = channel();
+            q.push(
+                ConfigKey(p),
+                Tracked {
+                    req: Request {
+                        id,
+                        prompt: vec![1],
+                        max_new_tokens: 1,
+                        config: cfg,
+                    },
+                    arrived: std::time::Instant::now(),
+                    first_token_at: None,
+                    generated: vec![],
+                    reply: tx,
+                },
+            );
+        }
+        let mut drained = std::collections::HashMap::new();
+        let now = std::time::Instant::now();
+        while let Some((key, batch)) = q.next_batch(8, true, now) {
+            if batch.is_empty() || batch.len() > 4 {
+                return Err(format!("bad batch size {}", batch.len()));
+            }
+            // all requests in a batch route to the same artifact
+            for t in &batch {
+                let (p, _, _) = routing("m", 64, &t.req.config);
+                if p != key.0 {
+                    return Err("mixed-config batch".into());
+                }
+            }
+            *drained.entry(key.0).or_insert(0usize) += batch.len();
+        }
+        if pushed != drained {
+            return Err(format!("lost requests: {pushed:?} vs {drained:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparsity_config_label_roundtrip() {
+    prop_check("config-roundtrip", 100, |rng, _| {
+        let cfg = SparsityConfig {
+            setting: *Gen::choice(
+                rng,
+                &[Setting::Naive, Setting::LayerSkip, Setting::All],
+            ),
+            nm: if rng.bool(0.2) {
+                None
+            } else {
+                Some(*Gen::choice(rng, &[(2, 4), (4, 8), (8, 16)]))
+            },
+            quantized: rng.bool(0.5),
+        };
+        let label = cfg.label();
+        let parsed = SparsityConfig::parse(&label)
+            .ok_or(format!("unparseable label {label}"))?;
+        // nm + quantized must survive; setting collapses for dense
+        if parsed.nm != cfg.nm || parsed.quantized != cfg.quantized {
+            return Err(format!("roundtrip mismatch: {label}"));
+        }
+        if cfg.nm.is_some() && parsed.setting != cfg.setting {
+            return Err(format!("setting mismatch: {label}"));
+        }
+        Ok(())
+    });
+}
