@@ -1,8 +1,9 @@
 //! End-to-end serving driver (the DESIGN.md "end-to-end validation"
-//! deliverable): boots the full stack — PJRT runtime, KV slot manager,
-//! continuous-batching scheduler — loads the trained tiny model, serves a
-//! batched mixed-sparsity workload through the real engine loop, and
-//! reports latency/throughput + an output-quality spot check.
+//! deliverable): boots the full stack — execution engine, KV slot
+//! manager, continuous-batching scheduler — serves a batched
+//! mixed-sparsity workload through the real engine loop, and reports
+//! latency/throughput + an output-quality spot check. Runs on the native
+//! CPU backend out of the box (an `artifacts/` manifest is optional).
 //!
 //!     cargo run --release --example e2e_serving [-- --requests 48]
 
@@ -14,7 +15,7 @@ use anyhow::Result;
 use amber_pruner::coordinator::request::SparsityConfig;
 use amber_pruner::coordinator::scheduler::{Engine, EngineConfig, EngineMsg};
 use amber_pruner::metrics::{EngineMetrics, Timer};
-use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::runtime::{engine_for, Engine as _};
 use amber_pruner::server::workload::{self, WorkloadSpec};
 use amber_pruner::util::cli::Args;
 
@@ -26,7 +27,7 @@ fn main() -> Result<()> {
     let rate = args.opt_f64("rate", 20.0)?;
 
     let metrics = Arc::new(EngineMetrics::new());
-    let rt = ModelRuntime::new(&dir)?;
+    let rt = engine_for(&dir)?;
     println!("platform={} model={model}", rt.platform());
     let mut engine =
         Engine::new(rt, EngineConfig::new(&model), Arc::clone(&metrics))?;
@@ -75,6 +76,15 @@ fn main() -> Result<()> {
     let responses: Vec<_> = reply_rx.try_iter().collect();
     println!("\ncompleted {}/{} in {wall:.2}s", responses.len(), n);
     println!("{}", metrics.report(wall));
+    if let Some(audit) = engine.audit() {
+        println!(
+            "sparsity: {} pruned matmuls, {:.1}% linear FLOPs saved, \
+             {} N:M violations",
+            audit.pruned_matmuls,
+            audit.flops_saved_frac() * 100.0,
+            audit.nm_violations
+        );
+    }
     engine.kv_invariants()?;
 
     // quality spot check: every response generated tokens; non-trivial

@@ -1,51 +1,55 @@
-//! Quickstart: load the AOT artifacts, run one sparse prefill and a few
-//! decode steps by hand — the minimal end-to-end path through the public
-//! API (runtime -> prefill -> KV handoff -> decode).
+//! Quickstart: run one sparse prefill and a few decode steps by hand —
+//! the minimal end-to-end path through the public API
+//! (engine -> prefill -> KV handoff -> decode).
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Requires `make artifacts` to have produced artifacts/ first.
+//! Works out of the box: with an `artifacts/` tree the engine adopts its
+//! manifest; without one it serves the synthetic tiny-lm inventory.
 
 use anyhow::Result;
 
-use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::runtime::{engine_for, Engine as _};
 use amber_pruner::tensor::math::argmax;
-use amber_pruner::tensor::HostTensor;
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
-    let mut rt = ModelRuntime::new(dir)?;
-    println!("PJRT platform: {}", rt.platform());
+    let mut rt = engine_for(dir)?;
+    println!("engine platform: {}", rt.platform());
 
     let model = "tiny-lm-a";
-    // pick the 8:16 Amber-Pruner prefill if present, else dense
-    let sparse = format!("{model}.prefill64.nm8_16");
-    let (prefill, files): (String, Vec<String>) =
-        if rt.manifest.artifacts.contains_key(&sparse) {
-            (
-                sparse,
-                vec![
-                    format!("{model}.atw"),
-                    format!("{model}.aux_ls.atw"),
-                ],
-            )
-        } else {
-            (
-                format!("{model}.prefill64.nm2_4"),
-                vec![format!("{model}.atw"), format!("{model}.aux_ls.atw")],
-            )
-        };
+    // pick the 8:16 Amber-Pruner prefill if present, then 2:4, then the
+    // dense artifact (always present) so dense-only artifact trees run
+    let nm8 = format!("{model}.prefill64.nm8_16");
+    let nm2 = format!("{model}.prefill64.nm2_4");
+    let have = |a: &str| rt.manifest().artifacts.contains_key(a);
+    let (prefill, files): (String, Vec<String>) = if have(&nm8) {
+        (
+            nm8,
+            vec![format!("{model}.atw"), format!("{model}.aux_ls.atw")],
+        )
+    } else if have(&nm2) {
+        (
+            nm2,
+            vec![format!("{model}.atw"), format!("{model}.aux_ls.atw")],
+        )
+    } else {
+        (
+            format!("{model}.prefill64.dense"),
+            vec![format!("{model}.atw")],
+        )
+    };
     let refs: Vec<&str> = files.iter().map(|s| s.as_str()).collect();
     let t0 = std::time::Instant::now();
     let binding = rt.bind(&prefill, &refs)?;
     println!(
-        "compiled + bound {prefill} in {:.2}s",
+        "prepared + bound {prefill} in {:.2}s",
         t0.elapsed().as_secs_f64()
     );
 
     // a fact-recall prompt: "<bos> <qry> E3 r1 <ans>" (the model answers
     // with the entity its training world pairs with (E3, r1))
-    let meta = rt.manifest.artifact(&prefill)?.clone();
+    let meta = rt.manifest().artifact(&prefill)?.clone();
     let (b, s) = (meta.batch, meta.seq);
     let prompt = vec![1, 4, 51, 33, 5]; // BOS QRY E3 r1 ANS
     let mut tokens = vec![0i32; b * s];
@@ -60,15 +64,13 @@ fn main() -> Result<()> {
     let mut tok = argmax(last) as i32;
     println!("first generated token: {tok}");
 
-    // hand-rolled decode loop over the dense decode executable
+    // hand-rolled decode loop over the dense decode artifact
     let decode = format!("{model}.decode.dense");
     let dbind = rt.bind(&decode, &[&files[0]])?;
-    let dmeta = rt.manifest.artifact(&decode)?.clone();
+    let dmeta = rt.manifest().artifact(&decode)?.clone();
     let dims = &dmeta.runtime_inputs[2].0;
     let (l, db, c, h, d) = (dims[0], dims[1], dims[2], dims[3], dims[4]);
     // scatter row 0 of the prefill cache into slot 0
-    let k_host: Vec<f32> = out.k_cache.to_vec()?;
-    let v_host: Vec<f32> = out.v_cache.to_vec()?;
     let row = h * d;
     let mut kc = vec![0f32; l * db * c * row];
     let mut vc = vec![0f32; l * db * c * row];
@@ -77,16 +79,13 @@ fn main() -> Result<()> {
         let src = li * b * s * row;
         let dst = li * db * c * row;
         kc[dst..dst + plen * row]
-            .copy_from_slice(&k_host[src..src + plen * row]);
+            .copy_from_slice(&out.k_cache[src..src + plen * row]);
         vc[dst..dst + plen * row]
-            .copy_from_slice(&v_host[src..src + plen * row]);
+            .copy_from_slice(&out.v_cache[src..src + plen * row]);
     }
-    let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
     let mut generated = vec![tok];
     let mut pos = plen as i32;
     for _ in 0..4 {
-        let k_lit = HostTensor::f32("k", dims_i64.clone(), &kc).to_literal()?;
-        let v_lit = HostTensor::f32("v", dims_i64.clone(), &vc).to_literal()?;
         let mut token_v = vec![0i32; db];
         token_v[0] = tok;
         let mut pos_v = vec![0i32; db];
@@ -94,10 +93,10 @@ fn main() -> Result<()> {
         let mut len_v = vec![1i32; db];
         len_v[0] = pos + 1;
         let dout = rt.decode(
-            &decode, &dbind, &token_v, &pos_v, &k_lit, &v_lit, &len_v,
+            &decode, &dbind, &token_v, &pos_v, &kc, &vc, &len_v,
         )?;
-        kc = dout.k_cache.to_vec()?;
-        vc = dout.v_cache.to_vec()?;
+        kc = dout.k_cache;
+        vc = dout.v_cache;
         tok = argmax(&dout.logits[..dout.vocab]) as i32;
         generated.push(tok);
         pos += 1;

@@ -14,13 +14,13 @@ use anyhow::Result;
 
 use amber_pruner::coordinator::scheduler::{Engine, EngineConfig, EngineMsg};
 use amber_pruner::metrics::EngineMetrics;
-use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::runtime::engine_for;
 use amber_pruner::server::tcp;
 
 fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
     let metrics = Arc::new(EngineMetrics::new());
-    let rt = ModelRuntime::new(dir)?;
+    let rt = engine_for(dir)?;
     let mut engine = Engine::new(
         rt,
         EngineConfig::new("tiny-lm-a"),

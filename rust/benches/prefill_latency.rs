@@ -1,31 +1,42 @@
-//! End-to-end prefill latency through the AOT executables: dense vs each
-//! N:M ratio (fp and W8A8). On the CPU interpret substrate the sparse
-//! graphs pay an argsort overhead instead of gaining SpMM speedup — the
-//! *compute reduction* is reported by the coverage/ideal-speedup model and
-//! the native spmm bench; this bench pins down the absolute artifact
-//! latencies the coordinator schedules around (§Perf L2/L3).
+//! End-to-end prefill latency through the execution engine: dense vs each
+//! N:M ratio (fp and W8A8). On the native CPU backend the sparse
+//! artifacts really do less matmul work (compressed SpMM), so the ratios
+//! report the paper's compute scaling directly; the coverage/ideal-speedup
+//! model and the native spmm bench report the isolated mechanism
+//! (§Perf L2/L3).
 //!
-//! Skips gracefully when artifacts/ have not been built.
+//! Runs out of the box: without an `artifacts/` manifest the native
+//! engine serves its synthetic inventory.
 
 use amber_pruner::bench::bench;
-use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::runtime::{engine_for, Engine as _};
 
 fn main() {
     let dir = std::path::Path::new("artifacts");
-    let Ok(mut rt) = ModelRuntime::new(dir) else {
-        println!("prefill_latency: artifacts/ missing — run `make artifacts`");
-        return;
+    let mut rt = match engine_for(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("prefill_latency: engine unavailable: {e}");
+            return;
+        }
     };
     let model = "tiny-lm-a";
     let weights = format!("{model}.atw");
-    let tokens: Vec<i32> = (0..8 * 64).map(|i| 1 + (i % 300) as i32).collect();
+    let prefill_art = format!("{model}.prefill64.dense");
+    let Some(meta) = rt.manifest().artifacts.get(&prefill_art).cloned()
+    else {
+        println!("prefill_latency: {prefill_art} not in manifest");
+        return;
+    };
+    let (b, s) = (meta.batch, meta.seq);
+    let tokens: Vec<i32> =
+        (0..b * s).map(|i| 1 + (i % 300) as i32).collect();
 
-    let mut variants: Vec<(String, Vec<String>)> = vec![
-        (format!("{model}.prefill64.dense"), vec![weights.clone()]),
-    ];
+    let mut variants: Vec<(String, Vec<String>)> =
+        vec![(prefill_art.clone(), vec![weights.clone()])];
     for (n, m) in [(2, 4), (4, 8), (8, 16)] {
         let art = format!("{model}.prefill64.nm{n}_{m}");
-        if rt.manifest.artifacts.contains_key(&art) {
+        if rt.manifest().artifacts.contains_key(&art) {
             variants.push((
                 art,
                 vec![weights.clone(), format!("{model}.aux_ls.atw")],
@@ -33,30 +44,29 @@ fn main() {
         }
     }
     let sq = format!("{model}.prefill64.sq");
-    if rt.manifest.artifacts.contains_key(&sq) {
+    if rt.manifest().artifacts.contains_key(&sq) {
         variants.push((sq, vec![format!("{model}.sq.atw")]));
     }
 
-    println!("== prefill latency (batch 8 x seq 64) ==");
+    println!("== prefill latency (batch {b} x seq {s}) ==");
     let mut dense_med = 0.0;
     for (art, files) in variants {
         let refs: Vec<&str> = files.iter().map(|s| s.as_str()).collect();
         let binding = match rt.bind(&art, &refs) {
-            Ok(b) => b,
+            Ok(bd) => bd,
             Err(e) => {
                 println!("skip {art}: {e}");
                 continue;
             }
         };
-        let r = bench(&art, 2, 10, Some(8 * 64), || {
+        let r = bench(&art, 2, 10, Some((b * s) as u64), || {
             rt.prefill(&art, &binding, &tokens).expect("prefill");
         });
         if art.ends_with("dense") {
             dense_med = r.median_secs;
         } else if dense_med > 0.0 {
             println!(
-                "    -> vs dense: {:.2}x (interpret-substrate overhead; \
-                 see spmm bench for the SpMM mechanism)",
+                "    -> vs dense: {:.2}x",
                 dense_med / r.median_secs
             );
         }
@@ -64,34 +74,19 @@ fn main() {
 
     // decode step latency (the TPOT floor)
     let dec = format!("{model}.decode.dense");
-    if rt.manifest.artifacts.contains_key(&dec) {
+    if rt.manifest().artifacts.contains_key(&dec) {
         let binding = rt.bind(&dec, &[&weights]).expect("bind decode");
-        let meta = rt.manifest.artifact(&dec).unwrap().clone();
-        let b = meta.batch;
-        let dims = rt.manifest.artifact(&dec).unwrap().runtime_inputs[2]
-            .0
-            .clone();
+        let dmeta = rt.manifest().artifact(&dec).unwrap().clone();
+        let db = dmeta.batch;
+        let dims = dmeta.runtime_inputs[2].0.clone();
         let n: usize = dims.iter().product();
-        let zeros = vec![0f32; n];
-        let k = amber_pruner::tensor::HostTensor::f32(
-            "k",
-            dims.iter().map(|&d| d as i64).collect(),
-            &zeros,
-        )
-        .to_literal()
-        .unwrap();
-        let v = amber_pruner::tensor::HostTensor::f32(
-            "v",
-            dims.iter().map(|&d| d as i64).collect(),
-            &zeros,
-        )
-        .to_literal()
-        .unwrap();
-        let token = vec![5i32; b];
-        let pos = vec![3i32; b];
-        let kv_len = vec![4i32; b];
-        bench(&dec, 2, 10, Some(b as u64), || {
-            rt.decode(&dec, &binding, &token, &pos, &k, &v, &kv_len)
+        let kc = vec![0f32; n];
+        let vc = vec![0f32; n];
+        let token = vec![5i32; db];
+        let pos = vec![3i32; db];
+        let kv_len = vec![4i32; db];
+        bench(&dec, 2, 10, Some(db as u64), || {
+            rt.decode(&dec, &binding, &token, &pos, &kc, &vc, &kv_len)
                 .expect("decode");
         });
     }

@@ -7,7 +7,9 @@
 
 use amber_pruner::bench::{bench, black_box};
 use amber_pruner::quant;
-use amber_pruner::sparsity::spmm::{dense_matmul, NmCompressed};
+use amber_pruner::sparsity::spmm::{
+    dense_matmul, dense_matmul_skip_zeros, NmCompressed,
+};
 use amber_pruner::util::rng::Rng;
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -23,6 +25,8 @@ fn main() {
                              (512, 1536, 384)] {
         let x = rand_vec(&mut rng, t * din);
         let w = rand_vec(&mut rng, din * dout);
+        // fairness: the baseline is a TRUE dense matmul — no zero
+        // skipping — so pruned inputs cannot make it silently sparse
         let name = format!("dense       {t}x{din}x{dout}");
         let dense = bench(&name, 2, 8, Some((t * din * dout) as u64), || {
             black_box(dense_matmul(&x, t, din, &w, dout));
@@ -39,6 +43,14 @@ fn main() {
                 m as f64 / n as f64
             );
         }
+        // third series: what a branchy scalar kernel gets from the same
+        // pruned input without the compressed format
+        let pruned = NmCompressed::compress(&x, t, din, &[], 2, 4)
+            .decompress();
+        let bname = format!("branch 2:4  {t}x{din}x{dout}");
+        bench(&bname, 2, 8, Some((t * din * dout) as u64), || {
+            black_box(dense_matmul_skip_zeros(&pruned, t, din, &w, dout));
+        });
         // compression overhead itself (prefill would fuse this)
         let cname = format!("compress 2:4 {t}x{din}");
         bench(&cname, 2, 8, Some((t * din) as u64), || {

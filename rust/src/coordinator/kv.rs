@@ -121,13 +121,26 @@ impl KvSlots {
         Ok(slot)
     }
 
-    /// Replace the host mirror with the decode executable's output caches
-    /// and bump active slot lengths.
+    /// Merge the decode output caches back into the host mirror and bump
+    /// slot lengths — but ONLY for the slots that actually stepped. The
+    /// engine writes a K/V row for *every* batch row (static shapes), so
+    /// rows that belong to a different decode group this iteration, or to
+    /// no sequence at all, carry garbage at their write position; copying
+    /// the whole cache would corrupt them.
     pub fn absorb_decode_output(&mut self, k: Vec<f32>, v: Vec<f32>,
                                 stepped: &[usize]) {
         debug_assert_eq!(k.len(), self.k.len());
-        self.k = k;
-        self.v = v;
+        let slot_stride = self.slot_stride();
+        for l in 0..self.n_layers {
+            let lbase = l * self.layer_stride();
+            for &slot in stepped {
+                let a = lbase + slot * slot_stride;
+                self.k[a..a + slot_stride]
+                    .copy_from_slice(&k[a..a + slot_stride]);
+                self.v[a..a + slot_stride]
+                    .copy_from_slice(&v[a..a + slot_stride]);
+            }
+        }
         for &slot in stepped {
             self.len[slot] += 1;
         }

@@ -8,7 +8,9 @@
 //!                                                    │  prefill batch (N:M sparse, static shapes)
 //!                                                    │  decode batch  (dense, KV-cache slots)
 //!                                                    ▼
-//!                                               ModelRuntime (PJRT)
+//!                                     dyn runtime::Engine
+//!                                     (NativeEngine by default;
+//!                                      PJRT behind the `pjrt` feature)
 //! ```
 //!
 //! The paper's contribution appears as the per-request **sparsity config**:

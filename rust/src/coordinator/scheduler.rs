@@ -1,12 +1,16 @@
-//! The engine loop: iteration-level scheduling over the PJRT runtime.
+//! The engine loop: iteration-level scheduling over an execution backend.
 //!
 //! Each iteration either (a) packs a same-config prefill batch, runs the
-//! (possibly N:M-sparse) prefill executable, samples first tokens and
+//! (possibly N:M-sparse) prefill artifact, samples first tokens and
 //! admits the sequences into KV slots, or (b) advances every active slot
 //! one dense decode step. Prefill is prioritized (the paper's setting:
 //! prefill is the compute bottleneck being accelerated); a partial prefill
 //! batch is flushed once its head request ages past `max_wait` or the
 //! decode side is idle.
+//!
+//! The loop is backend-neutral: it drives a `Box<dyn runtime::Engine>`,
+//! so the same scheduler serves the native CPU backend (default) and the
+//! PJRT backend (`pjrt` feature).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -20,7 +24,7 @@ use super::kv::KvSlots;
 use super::paged::{BlockPool, DEFAULT_BLOCK};
 use super::request::{Request, Response, Tracked};
 use crate::metrics::EngineMetrics;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{Engine as ExecEngine, SparsityAudit};
 use crate::tensor::math::argmax;
 
 pub const EOS: i32 = 2;
@@ -63,7 +67,7 @@ struct ActiveSeq {
 
 pub struct Engine {
     pub cfg: EngineConfig,
-    pub rt: ModelRuntime,
+    pub rt: Box<dyn ExecEngine>,
     pub metrics: Arc<EngineMetrics>,
     queues: PrefillQueues,
     kv: KvSlots,
@@ -79,22 +83,32 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(
-        rt: ModelRuntime,
+        rt: Box<dyn ExecEngine>,
         cfg: EngineConfig,
         metrics: Arc<EngineMetrics>,
     ) -> Result<Engine> {
         // geometry from the manifest
         let model = rt
-            .manifest
+            .manifest()
             .models
             .get(&cfg.model)
             .with_context(|| format!("model {} in manifest", cfg.model))?
             .clone();
         let g = |k: &str| model.config.get(k).copied().unwrap_or(0);
         let dec = rt
-            .manifest
+            .manifest()
             .artifact(&format!("{}.decode.dense", cfg.model))?
             .clone();
+        // prefill batch = the prefill artifact's static batch
+        let prefill_batch = rt
+            .manifest()
+            .artifact(&format!(
+                "{}.prefill{}.dense",
+                cfg.model, cfg.prefill_seq
+            ))
+            .map(|a| a.batch)
+            .unwrap_or(8)
+            .max(1);
         let kv = KvSlots::new(
             g("n_layers"),
             dec.batch,
@@ -108,11 +122,7 @@ impl Engine {
         );
         let vocab = g("vocab_size");
         Ok(Engine {
-            queues: PrefillQueues::new(
-                // prefill batch = artifact's static batch
-                8,
-                cfg.max_wait_secs,
-            ),
+            queues: PrefillQueues::new(prefill_batch, cfg.max_wait_secs),
             cfg,
             rt,
             metrics,
@@ -204,7 +214,7 @@ impl Engine {
         mut batch: Vec<Tracked>,
     ) -> Result<()> {
         let artifact = key.0.clone();
-        let meta = self.rt.manifest.artifact(&artifact)?.clone();
+        let meta = self.rt.manifest().artifact(&artifact)?.clone();
         let (b, s) = (meta.batch, meta.seq);
         // weights binding comes from the first request's config (all
         // requests in a bucket share it by construction)
@@ -223,18 +233,18 @@ impl Engine {
             let p = &t.req.prompt;
             let n = p.len().min(s);
             tokens[i * s..i * s + n].copy_from_slice(&p[..n]);
-            lens[i] = n;
+            // an empty prompt (rejected at the TCP layer, but defend the
+            // engine too) scores its first token from the PAD at pos 0
+            // instead of underflowing `lens[i] - 1` below
+            lens[i] = n.max(1);
             EngineMetrics::inc(&self.metrics.prefill_tokens, n as u64);
         }
         EngineMetrics::inc(
             &self.metrics.padded_prefill_tokens,
-            (b * s) as u64
-                - lens.iter().sum::<usize>() as u64,
+            (b * s) as u64 - lens.iter().sum::<usize>() as u64,
         );
         let out = self.rt.prefill(&artifact, &binding, &tokens)?;
         EngineMetrics::inc(&self.metrics.prefill_batches, 1);
-        let k_host: Vec<f32> = out.k_cache.to_vec()?;
-        let v_host: Vec<f32> = out.v_cache.to_vec()?;
         let now = Instant::now();
         for (i, mut t) in batch.drain(..).enumerate() {
             // greedy first token from the last prompt position
@@ -252,7 +262,13 @@ impl Engine {
                 .allocate(id, lens[i] + t.req.max_new_tokens)
                 .ok();
             let slot = self.kv.admit(
-                id, &k_host, &v_host, i, b, s, lens[i],
+                id,
+                &out.k_cache,
+                &out.v_cache,
+                i,
+                b,
+                s,
+                lens[i],
             )?;
             self.active.insert(
                 id,
@@ -280,66 +296,38 @@ impl Engine {
                 .or_default()
                 .push(*id);
         }
-        let Some(((artifact, binding), mut ids)) =
-            by_art.into_iter().next()
+        let Some(((artifact, binding), mut ids)) = by_art.into_iter().next()
         else {
             return Ok(());
         };
         ids.sort(); // determinism
-        let meta = self.rt.manifest.artifact(&artifact)?.clone();
+        let meta = self.rt.manifest().artifact(&artifact)?.clone();
         let b = meta.batch;
         ids.truncate(b);
         let mut token = vec![PAD; b];
         let mut pos = vec![0i32; b];
         let mut kv_len = vec![1i32; b];
-        let mut slot_of = vec![usize::MAX; b];
         let mut stepped = Vec::new();
-        for (row, id) in ids.iter().enumerate() {
+        for id in &ids {
             let a = &self.active[id];
             let slot = a.slot;
             // each active seq occupies its KV slot row; the decode batch
-            // is indexed BY SLOT (cache layout), so row == slot here.
-            let _ = row;
-            slot_of[slot] = slot;
+            // is indexed BY SLOT (cache layout)
             token[slot] = a.last_token;
             pos[slot] = self.kv.len[slot] as i32;
             kv_len[slot] = (self.kv.len[slot] + 1) as i32;
             stepped.push(slot);
         }
-        let k_lit = crate::tensor::HostTensor::f32(
-            "k",
-            vec![
-                self.kv.n_layers as i64,
-                self.kv.n_slots as i64,
-                self.kv.cache_len as i64,
-                self.kv.kv_heads as i64,
-                self.kv.head_dim as i64,
-            ],
-            &self.kv.k,
-        )
-        .to_literal()?;
-        let v_lit = crate::tensor::HostTensor::f32(
-            "v",
-            vec![
-                self.kv.n_layers as i64,
-                self.kv.n_slots as i64,
-                self.kv.cache_len as i64,
-                self.kv.kv_heads as i64,
-                self.kv.head_dim as i64,
-            ],
-            &self.kv.v,
-        )
-        .to_literal()?;
-        let out = self.rt.decode(
-            &artifact, &binding, &token, &pos, &k_lit, &v_lit, &kv_len,
+        // split the borrows: the engine runs over the KV host mirrors
+        let rt = &mut self.rt;
+        let out = rt.decode(
+            &artifact, &binding, &token, &pos, &self.kv.k, &self.kv.v,
+            &kv_len,
         )?;
         EngineMetrics::inc(&self.metrics.decode_batches, 1);
         EngineMetrics::inc(&self.metrics.decode_tokens, ids.len() as u64);
-        self.kv.absorb_decode_output(
-            out.k_cache.to_vec()?,
-            out.v_cache.to_vec()?,
-            &stepped,
-        );
+        self.kv
+            .absorb_decode_output(out.k_cache, out.v_cache, &stepped);
         let now = Instant::now();
         for id in ids {
             let a = self.active.get_mut(&id).unwrap();
@@ -348,8 +336,7 @@ impl Engine {
             let next = argmax(row) as i32;
             a.last_token = next;
             a.tracked.generated.push(next);
-            let tpot =
-                now.duration_since(a.last_token_at).as_secs_f64();
+            let tpot = now.duration_since(a.last_token_at).as_secs_f64();
             a.last_token_at = now;
             self.metrics.observe_tpot(tpot);
             self.maybe_complete(id)?;
@@ -393,5 +380,10 @@ impl Engine {
     pub fn kv_invariants(&self) -> Result<()> {
         self.kv.check_invariants()?;
         self.pool.check_invariants()
+    }
+
+    /// Sparsity accounting from the backend, if it tracks any.
+    pub fn audit(&self) -> Option<SparsityAudit> {
+        self.rt.audit()
     }
 }

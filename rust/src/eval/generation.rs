@@ -1,24 +1,25 @@
 //! Greedy-generation evaluation (GSM8K / LongBench analogues): sparse (or
-//! dense) prefill hands its KV cache to the dense decode executable —
+//! dense) prefill hands its KV cache to the dense decode artifact —
 //! exactly the paper's serving pipeline — and the generated continuation
-//! is exact-matched against the gold tokens.
+//! is exact-matched against the gold tokens. Runs on any `Engine`
+//! backend; caches move as host vectors.
 
 use anyhow::{bail, Result};
 
 use super::TaskResult;
-use crate::runtime::ModelRuntime;
+use crate::runtime::Engine;
 use crate::tensor::io::{EvalRows, EvalSet};
 use crate::tensor::math::argmax;
-use crate::tensor::HostTensor;
 
 /// Evaluate a generation dataset.
 ///
 /// * `prefill_artifact` — dense/sparse/quant prefill at the dataset's
 ///   sequence length
-/// * `decode_artifact`  — the model's decode executable (batch B_dec,
+/// * `decode_artifact`  — the model's decode artifact (batch B_dec,
 ///   cache C >= seq_len + max_gen)
+#[allow(clippy::too_many_arguments)]
 pub fn eval_generation(
-    rt: &mut ModelRuntime,
+    rt: &mut dyn Engine,
     prefill_artifact: &str,
     prefill_binding: &str,
     decode_artifact: &str,
@@ -27,8 +28,8 @@ pub fn eval_generation(
     set: &EvalSet,
     limit: usize,
 ) -> Result<TaskResult> {
-    let pmeta = rt.manifest.artifact(prefill_artifact)?.clone();
-    let dmeta = rt.manifest.artifact(decode_artifact)?.clone();
+    let pmeta = rt.manifest().artifact(prefill_artifact)?.clone();
+    let dmeta = rt.manifest().artifact(decode_artifact)?.clone();
     let (pb, s) = (pmeta.batch, pmeta.seq);
     let (db, cache) = (dmeta.batch, dmeta.cache);
     if s != set.seq_len {
@@ -64,8 +65,6 @@ pub fn eval_generation(
         }
         let out = rt.prefill(prefill_artifact, prefill_binding, &tokens)?;
         exec_secs += out.exec_secs;
-        let k_host: Vec<f32> = out.k_cache.to_vec()?;
-        let v_host: Vec<f32> = out.v_cache.to_vec()?;
         // scatter prefill rows into a fresh decode cache [L, DB, C, H, D]
         let row_sz = kv_heads * head_dim;
         let mut kc = vec![0f32; layers * db * cache * row_sz];
@@ -83,9 +82,9 @@ pub fn eval_generation(
                 let src = l * pb * s * row_sz + j * s * row_sz;
                 let dst = l * db * cache * row_sz + j * cache * row_sz;
                 kc[dst..dst + plen * row_sz]
-                    .copy_from_slice(&k_host[src..src + plen * row_sz]);
+                    .copy_from_slice(&out.k_cache[src..src + plen * row_sz]);
                 vc[dst..dst + plen * row_sz]
-                    .copy_from_slice(&v_host[src..src + plen * row_sz]);
+                    .copy_from_slice(&out.v_cache[src..src + plen * row_sz]);
             }
             // first generated token from the last prompt position
             let lrow = &out.logits
@@ -99,31 +98,22 @@ pub fn eval_generation(
             max_gen = max_gen.max(r.max_gen as usize);
         }
         // decode loop (step 1 already done via prefill logits)
-        let dims = vec![
-            layers as i64,
-            db as i64,
-            cache as i64,
-            kv_heads as i64,
-            head_dim as i64,
-        ];
         for _step in 1..max_gen {
             if done.iter().all(|d| *d) {
                 break;
             }
-            let k_lit = HostTensor::f32("k", dims.clone(), &kc).to_literal()?;
-            let v_lit = HostTensor::f32("v", dims.clone(), &vc).to_literal()?;
             let dout = rt.decode(
                 decode_artifact,
                 decode_binding,
                 &last,
                 &pos,
-                &k_lit,
-                &v_lit,
+                &kc,
+                &vc,
                 &kv_len,
             )?;
             exec_secs += dout.exec_secs;
-            kc = dout.k_cache.to_vec()?;
-            vc = dout.v_cache.to_vec()?;
+            kc = dout.k_cache;
+            vc = dout.v_cache;
             for j in 0..take {
                 if done[j] {
                     continue;

@@ -1,23 +1,23 @@
-//! Multiple-choice scoring through a prefill executable.
+//! Multiple-choice scoring through a prefill artifact (any backend).
 
 use anyhow::{bail, Result};
 
 use super::TaskResult;
-use crate::runtime::ModelRuntime;
+use crate::runtime::Engine;
 use crate::tensor::io::{EvalRows, EvalSet};
 use crate::tensor::math::span_logprob;
 
 /// Evaluate one MC dataset through `artifact` (+ weight `binding`).
 /// `limit` truncates to the first N samples (0 = all).
 pub fn eval_multiple_choice(
-    rt: &mut ModelRuntime,
+    rt: &mut dyn Engine,
     artifact: &str,
     binding: &str,
     task: &str,
     set: &EvalSet,
     limit: usize,
 ) -> Result<TaskResult> {
-    let meta = rt.manifest.artifact(artifact)?.clone();
+    let meta = rt.manifest().artifact(artifact)?.clone();
     let (b, s) = (meta.batch, meta.seq);
     if s != set.seq_len {
         bail!(

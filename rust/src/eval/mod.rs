@@ -1,5 +1,5 @@
-//! Downstream-task evaluation over the AOT executables (the measurement
-//! half of the paper's tables).
+//! Downstream-task evaluation over the execution engine (the measurement
+//! half of the paper's tables); backend-neutral via `runtime::Engine`.
 //!
 //! Multiple-choice: each (context, choice) pair is one padded row in the
 //! `.aev` dataset; the row's score is the sum of next-token log-probs over

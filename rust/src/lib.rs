@@ -1,11 +1,21 @@
 //! Amber Pruner — rust serving coordinator (Layer 3).
 //!
 //! Reproduction of "Amber Pruner: Leveraging N:M Activation Sparsity for
-//! Efficient Prefill in Large Language Models". The compute graphs (Layer 2
-//! JAX model + Layer 1 Pallas kernels) are AOT-lowered to HLO text by
-//! `python/compile/aot.py`; this crate loads them through the PJRT C API
-//! (`xla` crate) and serves batched requests with per-request N:M sparsity
-//! configs. Python is never on the request path.
+//! Efficient Prefill in Large Language Models". The serving stack — a
+//! continuous-batching scheduler with per-request N:M sparsity configs,
+//! KV slot management, TCP front-end, eval + repro harnesses — drives a
+//! backend-neutral [`runtime::Engine`]:
+//!
+//! * the default [`runtime::NativeEngine`] executes prefill/decode
+//!   entirely on CPU in pure Rust (`tensor::math`,
+//!   `sparsity::spmm::NmCompressed`, `quant`) with no external
+//!   dependencies, so `cargo build && cargo test` and the whole serving
+//!   path work out of the box;
+//! * the `pjrt` cargo feature adds [`runtime::ModelRuntime`], which
+//!   loads compute graphs AOT-lowered to HLO text by
+//!   `python/compile/aot.py` through the PJRT C API (`xla` crate).
+//!
+//! Python is never on the request path in either backend.
 
 pub mod util;
 pub mod exec;

@@ -6,6 +6,10 @@
 //!   amber bench-serve [...]            — closed-loop serving benchmark
 //!   amber repro <target> [...]         — regenerate a paper table/figure
 //!   amber eval  [...]                  — run one eval cell directly
+//!
+//! Every subcommand takes `--engine native` (default; pure-CPU, works
+//! with or without an artifacts directory) or `--engine pjrt` (requires
+//! building with `--features pjrt` and a compiled artifacts/ tree).
 
 use std::path::PathBuf;
 use std::sync::mpsc::channel;
@@ -18,7 +22,7 @@ use amber_pruner::coordinator::scheduler::{Engine, EngineConfig, EngineMsg};
 use amber_pruner::eval::{eval_multiple_choice, load_task};
 use amber_pruner::metrics::{EngineMetrics, Timer};
 use amber_pruner::repro::{self, ReproCtx};
-use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::runtime::{engine_for, Engine as ExecEngine};
 use amber_pruner::server::{tcp, workload};
 use amber_pruner::util::cli::Args;
 
@@ -26,7 +30,7 @@ const USAGE: &str = "\
 amber — N:M activation-sparse LLM serving (Amber Pruner reproduction)
 
 USAGE:
-  amber info      [--artifacts DIR]
+  amber info      [--artifacts DIR] [--engine native|pjrt]
   amber serve     [--artifacts DIR] [--model NAME] [--addr HOST:PORT]
   amber bench-serve [--artifacts DIR] [--model NAME] [--requests N]
                   [--rate R] [--sparsity CFG] [--max-new N]
@@ -37,6 +41,7 @@ USAGE:
                   [--artifacts DIR] [--limit N]
 
 Sparsity configs: dense | N:M[:naive|ls|all][+sq]   e.g. 8:16:ls+sq
+Engines: native (default, pure-CPU) | pjrt (needs --features pjrt)
 ";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -54,10 +59,33 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     p
 }
 
+/// Build the selected execution backend.
+fn make_engine(
+    dir: &std::path::Path,
+    args: &Args,
+) -> Result<Box<dyn ExecEngine>> {
+    match args.opt("engine").unwrap_or("native") {
+        "native" => engine_for(dir),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(
+            amber_pruner::runtime::ModelRuntime::new(dir)?,
+        )),
+        other => bail!(
+            "unknown --engine '{other}' (available: native{})",
+            if cfg!(feature = "pjrt") {
+                ", pjrt"
+            } else {
+                "; rebuild with --features pjrt for the PJRT backend"
+            }
+        ),
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "artifacts", "model", "addr", "requests", "rate", "sparsity",
         "max-new", "limit", "artifact", "weights", "task", "config",
+        "engine",
     ])?;
     let cmd = args.positional.first().map(|s| s.as_str());
     match cmd {
@@ -87,19 +115,19 @@ fn main() -> Result<()> {
 
 fn info(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let rt = ModelRuntime::new(&dir)?;
+    let rt = make_engine(&dir, args)?;
     println!("platform: {}", rt.platform());
     println!("artifacts dir: {}", dir.display());
     println!("\nmodels:");
-    for (name, m) in &rt.manifest.models {
+    for (name, m) in &rt.manifest().models {
         println!(
             "  {name}{}  config={:?}",
             if m.is_moe { " (MoE)" } else { "" },
             m.config
         );
     }
-    println!("\nartifacts ({}):", rt.manifest.artifacts.len());
-    for (name, a) in &rt.manifest.artifacts {
+    println!("\nartifacts ({}):", rt.manifest().artifacts.len());
+    for (name, a) in &rt.manifest().artifacts {
         println!(
             "  {name:<44} {}x{}  {} params, variant={}",
             a.batch,
@@ -126,7 +154,7 @@ fn serve(args: &Args) -> Result<()> {
         scfg.addr = a.to_string();
     }
     let metrics = Arc::new(EngineMetrics::new());
-    let rt = ModelRuntime::new(&dir)?;
+    let rt = make_engine(&dir, args)?;
     let mut ecfg = EngineConfig::new(&scfg.model);
     ecfg.prefill_seq = scfg.prefill_seq;
     ecfg.max_wait_secs = scfg.max_wait_ms / 1e3;
@@ -149,7 +177,7 @@ fn bench_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --sparsity {sparsity}"))?;
 
     let metrics = Arc::new(EngineMetrics::new());
-    let rt = ModelRuntime::new(&dir)?;
+    let rt = make_engine(&dir, args)?;
     let mut engine =
         Engine::new(rt, EngineConfig::new(&model), Arc::clone(&metrics))?;
 
@@ -187,6 +215,17 @@ fn bench_serve(args: &Args) -> Result<()> {
     );
     println!("completed {got}/{n} in {wall:.2}s");
     println!("{}", metrics.report(wall));
+    if let Some(audit) = engine.audit() {
+        println!(
+            "sparsity: {} pruned / {} dense matmuls, {:.1}% linear FLOPs \
+             saved, {} N:M violations, {} dense fallbacks",
+            audit.pruned_matmuls,
+            audit.dense_matmuls,
+            audit.flops_saved_frac() * 100.0,
+            audit.nm_violations,
+            audit.pruned_fallbacks
+        );
+    }
     engine.kv_invariants()?;
     Ok(())
 }
@@ -208,14 +247,19 @@ fn eval_cell(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--task required"))?
         .to_string();
     let limit = args.opt_usize("limit", 0)?;
-    let mut rt = ModelRuntime::new(&dir)?;
+    let mut rt = make_engine(&dir, args)?;
     let wrefs: Vec<&str> = weights.iter().map(|s| s.as_str()).collect();
     let binding = rt.bind(&artifact, &wrefs)?;
     let set = load_task(&dir, &format!("{task}.aev"))?;
     match set.rows {
         amber_pruner::tensor::io::EvalRows::Mc(_) => {
             let r = eval_multiple_choice(
-                &mut rt, &artifact, &binding, &task, &set, limit,
+                &mut *rt,
+                &artifact,
+                &binding,
+                &task,
+                &set,
+                limit,
             )?;
             println!(
                 "{task}: accuracy {:.4} over {} samples ({:.2}s exec)",

@@ -1,10 +1,14 @@
 //! Table harnesses (paper Tables 1-3 + Appendix A Table 1).
+//!
+//! Backend-neutral: each harness asks `runtime::engine_for` for the
+//! default engine over the artifacts directory (native CPU unless a
+//! caller wires up PJRT) and drives it through the `Engine` trait.
 
 use anyhow::Result;
 
 use super::ReproCtx;
 use crate::eval::{eval_generation, eval_multiple_choice, load_task};
-use crate::runtime::ModelRuntime;
+use crate::runtime::{engine_for, Engine, Manifest};
 use crate::sparsity::policy::Setting;
 use crate::util::fmt::{acc, pct_drop, Table};
 
@@ -23,10 +27,10 @@ const MC_ORDER: [(&str, &str); 9] = [
     ("winogrande", "WG"),
 ];
 
-fn models(ctx: &ReproCtx, rt: &ModelRuntime) -> Vec<String> {
+fn models(ctx: &ReproCtx, manifest: &Manifest) -> Vec<String> {
     match &ctx.model {
         Some(m) => vec![m.clone()],
-        None => rt.manifest.models.keys().cloned().collect(),
+        None => manifest.models.keys().cloned().collect(),
     }
 }
 
@@ -51,9 +55,9 @@ fn settings_for(model: &str, is_moe: bool) -> Vec<Setting> {
 
 /// Evaluate the zero-shot row set for one (model, quantized?) grid.
 fn zero_shot_table(ctx: &ReproCtx, sq: bool, title: &str) -> Result<()> {
-    let mut rt = ModelRuntime::new(ctx.artifacts)?;
-    for model in models(ctx, &rt) {
-        let info = rt.manifest.models.get(&model).unwrap().clone();
+    let mut rt = engine_for(ctx.artifacts)?;
+    for model in models(ctx, rt.manifest()) {
+        let info = rt.manifest().models.get(&model).unwrap().clone();
         if sq && info.is_moe {
             // the paper's MoE W8A8 uses per-token dynamic quantization
             // (not lowered here; see DESIGN.md substitutions)
@@ -86,7 +90,12 @@ fn zero_shot_table(ctx: &ReproCtx, sq: bool, title: &str) -> Result<()> {
         for t in &tasks {
             let set = load_task(ctx.artifacts, &format!("{t}.aev"))?;
             let r = eval_multiple_choice(
-                &mut rt, &base_art, &binding, t, &set, ctx.limit,
+                &mut *rt,
+                &base_art,
+                &binding,
+                t,
+                &set,
+                ctx.limit,
             )?;
             base_accs.push(r.accuracy);
         }
@@ -112,7 +121,12 @@ fn zero_shot_table(ctx: &ReproCtx, sq: bool, title: &str) -> Result<()> {
                     let set =
                         load_task(ctx.artifacts, &format!("{t}.aev"))?;
                     let r = eval_multiple_choice(
-                        &mut rt, &art, &b, t, &set, ctx.limit,
+                        &mut *rt,
+                        &art,
+                        &b,
+                        t,
+                        &set,
+                        ctx.limit,
                     )?;
                     accs.push(r.accuracy);
                 }
@@ -144,9 +158,9 @@ pub fn table2(ctx: &ReproCtx) -> Result<()> {
 
 /// Table 3: Few-shot (GSM8K analogue) + LongBench analogues, fp and W8A8.
 pub fn table3(ctx: &ReproCtx) -> Result<()> {
-    let mut rt = ModelRuntime::new(ctx.artifacts)?;
-    for model in models(ctx, &rt) {
-        let info = rt.manifest.models.get(&model).unwrap().clone();
+    let mut rt = engine_for(ctx.artifacts)?;
+    for model in models(ctx, rt.manifest()) {
+        let info = rt.manifest().models.get(&model).unwrap().clone();
         for sq in [false, true] {
             if sq && info.is_moe {
                 continue;
@@ -168,7 +182,7 @@ pub fn table3(ctx: &ReproCtx) -> Result<()> {
                 &["Rt.", "Settings", "GSM8K", "Drop", "LB avg", "Drop"],
             );
             let gen_limit = if ctx.limit == 0 { 0 } else { ctx.limit };
-            let run_cell = |rt: &mut ModelRuntime,
+            let run_cell = |rt: &mut dyn Engine,
                             prefill: &str,
                             binding: &str,
                             task: &str,
@@ -187,9 +201,11 @@ pub fn table3(ctx: &ReproCtx) -> Result<()> {
             let p256 = format!("{model}.prefill256.{infix}");
             let b64 = rt.bind(&p64, &[&weights])?;
             let b256 = rt.bind(&p256, &[&weights])?;
-            let g0 = run_cell(&mut rt, &p64, &b64, "gsm8k", 64)?;
-            let lk0 = run_cell(&mut rt, &p256, &b256, "longbench_kv", 256)?;
-            let li0 = run_cell(&mut rt, &p256, &b256, "longbench_ind", 256)?;
+            let g0 = run_cell(&mut *rt, &p64, &b64, "gsm8k", 64)?;
+            let lk0 =
+                run_cell(&mut *rt, &p256, &b256, "longbench_kv", 256)?;
+            let li0 =
+                run_cell(&mut *rt, &p256, &b256, "longbench_ind", 256)?;
             let lb0 = (lk0 + li0) / 2.0;
             table.row(vec![
                 "-".into(),
@@ -208,12 +224,21 @@ pub fn table3(ctx: &ReproCtx) -> Result<()> {
                     let aux = setting.aux_file(&model, sq);
                     let b64 = rt.bind(&a64, &[&weights, &aux])?;
                     let b256 = rt.bind(&a256, &[&weights, &aux])?;
-                    let g = run_cell(&mut rt, &a64, &b64, "gsm8k", 64)?;
+                    let g =
+                        run_cell(&mut *rt, &a64, &b64, "gsm8k", 64)?;
                     let lk = run_cell(
-                        &mut rt, &a256, &b256, "longbench_kv", 256,
+                        &mut *rt,
+                        &a256,
+                        &b256,
+                        "longbench_kv",
+                        256,
                     )?;
                     let li = run_cell(
-                        &mut rt, &a256, &b256, "longbench_ind", 256,
+                        &mut *rt,
+                        &a256,
+                        &b256,
+                        "longbench_ind",
+                        256,
                     )?;
                     let lb = (lk + li) / 2.0;
                     table.row(vec![
@@ -237,7 +262,7 @@ pub fn table3(ctx: &ReproCtx) -> Result<()> {
 /// skipping — weight methods reuse the *dense* executable with pruned
 /// weight files.
 pub fn app_table1(ctx: &ReproCtx) -> Result<()> {
-    let mut rt = ModelRuntime::new(ctx.artifacts)?;
+    let mut rt = engine_for(ctx.artifacts)?;
     let model = "tiny-lm-a".to_string();
     let tasks = tasks_for(&model);
     let mut table = Table::new(
@@ -253,7 +278,7 @@ pub fn app_table1(ctx: &ReproCtx) -> Result<()> {
     );
     let dense_art = format!("{model}.prefill64.dense");
     let weights = format!("{model}.atw");
-    let eval_all = |rt: &mut ModelRuntime,
+    let eval_all = |rt: &mut dyn Engine,
                     art: &str,
                     binding: &str|
      -> Result<Vec<f64>> {
@@ -269,7 +294,7 @@ pub fn app_table1(ctx: &ReproCtx) -> Result<()> {
             .collect()
     };
     let b = rt.bind(&dense_art, &[&weights])?;
-    let base = eval_all(&mut rt, &dense_art, &b)?;
+    let base = eval_all(&mut *rt, &dense_art, &b)?;
     let base_avg = base.iter().sum::<f64>() / base.len() as f64;
     let mut row = vec!["-".into(), "Baseline: float32".into()];
     row.extend(base.iter().map(|a| acc(*a)));
@@ -281,7 +306,7 @@ pub fn app_table1(ctx: &ReproCtx) -> Result<()> {
         let art = format!("{model}.prefill64.nm{n}_{m}");
         let aux = Setting::Naive.aux_file(&model, false);
         let b = rt.bind(&art, &[&weights, &aux])?;
-        let accs = eval_all(&mut rt, &art, &b)?;
+        let accs = eval_all(&mut *rt, &art, &b)?;
         let avg = accs.iter().sum::<f64>() / accs.len() as f64;
         let mut row = vec![
             format!("{n}:{m}"),
@@ -295,7 +320,7 @@ pub fn app_table1(ctx: &ReproCtx) -> Result<()> {
         for method in ["sparsegpt", "wanda", "prunerzero", "magnitude"] {
             let wfile = format!("{model}.wsp_{method}_{n}_{m}.atw");
             let b = rt.bind(&dense_art, &[&wfile])?;
-            let accs = eval_all(&mut rt, &dense_art, &b)?;
+            let accs = eval_all(&mut *rt, &dense_art, &b)?;
             let avg = accs.iter().sum::<f64>() / accs.len() as f64;
             let mut row = vec![
                 format!("{n}:{m}"),

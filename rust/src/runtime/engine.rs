@@ -1,310 +1,135 @@
-//! The PJRT execution engine.
+//! The execution-engine abstraction the coordinator schedules against.
 //!
-//! One `ModelRuntime` owns the CPU client, the compiled executables and the
-//! bound weight literals. The coordinator calls the typed entry points
-//! (`prefill`, `decode`); everything below is generic tuple plumbing.
+//! `Engine` is the backend-neutral contract: load/bind artifacts by name,
+//! run a prefill batch, advance a decode batch. Two implementations ship:
 //!
-//! Perf note (§Perf in EXPERIMENTS.md): weights are uploaded to device
-//! buffers ONCE per (artifact, weight-set) binding via
-//! `buffer_from_host_literal`, and executions use `execute_b` so steady-
-//! state calls only upload the small runtime inputs (tokens / KV cache).
+//! * [`crate::runtime::NativeEngine`] — pure-Rust CPU execution built on
+//!   `tensor::math`, `sparsity::spmm::NmCompressed` and `quant`; the
+//!   default backend, no external dependencies, runs the paper's
+//!   N:M-sparse prefill semantics directly (and audits them).
+//! * [`crate::runtime::ModelRuntime`] — the PJRT/XLA path over AOT HLO
+//!   artifacts, behind the `pjrt` cargo feature.
+//!
+//! KV caches cross the trait boundary as host `Vec<f32>` in the
+//! `[L, B, S|C, H_kv, D_h]` layout, which is what the KV slot manager
+//! stages anyway; backends convert to device buffers internally.
 
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::time::Instant;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use anyhow::Result;
 
-use super::artifact::{ArtifactMeta, Manifest};
-use crate::tensor::io::read_weights;
-use crate::tensor::HostTensor;
+use super::artifact::Manifest;
 
-/// A compiled artifact + the device-resident weight buffers for one or
-/// more weight-set bindings (e.g. the same nm executable bound to the
-/// "naive" / "ls" / "all" aux settings).
-struct Compiled {
-    exe: PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-    /// binding key (weight files joined with '+') -> device buffers in
-    /// executable argument order
-    bindings: HashMap<String, Vec<PjRtBuffer>>,
-}
-
+/// Output of one prefill execution.
 pub struct PrefillOut {
-    pub logits: Vec<f32>, // [batch, seq, vocab]
+    /// `[batch, seq, vocab]`, row-major
+    pub logits: Vec<f32>,
     pub batch: usize,
     pub seq: usize,
     pub vocab: usize,
-    pub k_cache: Literal, // [L, B, S, Hkv, Dh]
-    pub v_cache: Literal,
+    /// `[L, B, S, H_kv, D_h]`
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
     pub exec_secs: f64,
 }
 
+/// Output of one decode step.
 pub struct DecodeOut {
-    pub logits: Vec<f32>, // [batch, vocab]
+    /// `[batch, vocab]`
+    pub logits: Vec<f32>,
     pub batch: usize,
     pub vocab: usize,
-    pub k_cache: Literal,
-    pub v_cache: Literal,
+    /// `[L, B, C, H_kv, D_h]` — the caller's cache with this step's K/V
+    /// written at each row's position
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
     pub exec_secs: f64,
 }
 
-pub struct ModelRuntime {
-    client: PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    compiled: HashMap<String, Compiled>,
-    /// weight file -> tensor name -> host literal
-    weight_files: HashMap<String, HashMap<String, Literal>>,
+/// Running account of how much linear compute went through the sparse
+/// path, and whether every pruned activation satisfied the N:M contract.
+/// Copy-cheap so engines can expose a snapshot.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SparsityAudit {
+    pub pruned_matmuls: u64,
+    pub dense_matmuls: u64,
+    /// FLOPs the executed matmuls would cost densely
+    pub dense_flops: u64,
+    /// dense-equivalent FLOPs after pruning — what the paper's SpMM
+    /// hardware would execute (pruned matmuls count n/m of dense; the
+    /// native f32 compressed kernel really does this share, the int8
+    /// reference path executes dense-shaped work over the pruned input)
+    pub sparse_flops: u64,
+    /// pruned activations run through `validate_nm`
+    pub nm_checks: u64,
+    /// pruned activation rows that violated exact N:M (must stay 0)
+    pub nm_violations: u64,
+    /// projections where pruning was requested but fell back to dense
+    /// because `din % m != 0` (should stay 0 on sane geometry)
+    pub pruned_fallbacks: u64,
 }
 
-impl ModelRuntime {
-    pub fn new(artifacts_dir: &std::path::Path) -> Result<ModelRuntime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu()?;
-        Ok(ModelRuntime {
-            client,
-            manifest,
-            dir: artifacts_dir.to_path_buf(),
-            compiled: HashMap::new(),
-            weight_files: HashMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact (idempotent). Returns compile seconds.
-    pub fn load_artifact(&mut self, name: &str) -> Result<f64> {
-        if self.compiled.contains_key(name) {
-            return Ok(0.0);
+impl SparsityAudit {
+    /// Fraction of dense-equivalent FLOPs eliminated by pruning.
+    pub fn flops_saved_frac(&self) -> f64 {
+        if self.dense_flops == 0 {
+            return 0.0;
         }
-        let meta = self.manifest.artifact(name)?.clone();
-        let hlo_path = self.dir.join(&meta.hlo);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile artifact {name}"))?;
-        let secs = t0.elapsed().as_secs_f64();
-        self.compiled.insert(
-            name.to_string(),
-            Compiled { exe, meta, bindings: HashMap::new() },
-        );
-        Ok(secs)
+        1.0 - self.sparse_flops as f64 / self.dense_flops as f64
     }
+}
 
-    fn ensure_weight_file(&mut self, file: &str) -> Result<()> {
-        if self.weight_files.contains_key(file) {
-            return Ok(());
-        }
-        let path = self.dir.join("weights").join(file);
-        let tensors = read_weights(&path)?;
-        let mut map = HashMap::new();
-        for t in tensors {
-            let lit = t.to_literal()?;
-            map.insert(t.name.clone(), lit);
-        }
-        self.weight_files.insert(file.to_string(), map);
-        Ok(())
-    }
+/// Backend-neutral execution engine. Object-safe: the coordinator holds
+/// a `Box<dyn Engine>`.
+pub trait Engine {
+    /// Backend identifier (e.g. "native-cpu", a PJRT platform name).
+    fn platform(&self) -> String;
 
-    /// Bind a set of weight files to an artifact: resolves every name in
-    /// the artifact's flattened-parameter list against the union of the
-    /// files and uploads the literals to device buffers once.
-    pub fn bind(&mut self, artifact: &str, files: &[&str]) -> Result<String> {
-        let key = files.join("+");
-        if self
-            .compiled
-            .get(artifact)
-            .map(|c| c.bindings.contains_key(&key))
-            .unwrap_or(false)
-        {
-            return Ok(key);
-        }
-        self.load_artifact(artifact)?;
-        for f in files {
-            self.ensure_weight_file(f)?;
-        }
-        let meta = self.compiled[artifact].meta.clone();
-        let mut buffers = Vec::with_capacity(meta.params.len());
-        for pname in &meta.params {
-            let mut found = None;
-            for f in files {
-                if let Some(lit) = self.weight_files[*f].get(pname) {
-                    found = Some(lit);
-                    break;
-                }
-            }
-            let lit = found.ok_or_else(|| {
-                anyhow!(
-                    "artifact {artifact}: param '{pname}' not found in \
-                     weight files {files:?}"
-                )
-            })?;
-            let buf = self.client.buffer_from_host_literal(None, lit)?;
-            buffers.push(buf);
-        }
-        self.compiled
-            .get_mut(artifact)
-            .unwrap()
-            .bindings
-            .insert(key.clone(), buffers);
-        Ok(key)
-    }
+    /// Artifact + model inventory this engine serves.
+    fn manifest(&self) -> &Manifest;
 
-    /// Raw tuple execution: weights from `binding`, then `inputs`.
-    fn execute(
-        &self,
-        artifact: &str,
-        binding: &str,
-        inputs: &[&Literal],
-    ) -> Result<(Vec<Literal>, f64)> {
-        let c = self
-            .compiled
-            .get(artifact)
-            .ok_or_else(|| anyhow!("artifact {artifact} not loaded"))?;
-        let weights = c
-            .bindings
-            .get(binding)
-            .ok_or_else(|| anyhow!("binding {binding} missing"))?;
-        if c.meta.runtime_inputs.len() != inputs.len() {
-            bail!(
-                "artifact {artifact}: expected {} runtime inputs, got {}",
-                c.meta.runtime_inputs.len(),
-                inputs.len()
-            );
-        }
-        // upload runtime inputs, then run fully on device buffers.
-        // Buffers can't be cheaply cloned; execute_b borrows, so we build
-        // a reference vec over (weights..., uploaded inputs...).
-        let t0 = Instant::now();
-        let uploaded: Vec<PjRtBuffer> = inputs
-            .iter()
-            .map(|l| self.client.buffer_from_host_literal(None, l))
-            .collect::<Result<_, _>>()?;
-        let mut refs: Vec<&PjRtBuffer> = Vec::with_capacity(
-            weights.len() + uploaded.len(),
-        );
-        refs.extend(weights.iter());
-        refs.extend(uploaded.iter());
-        let result = c.exe.execute_b(&refs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        Ok((parts, t0.elapsed().as_secs_f64()))
-    }
+    /// Load (and for compiled backends, compile) an artifact.
+    /// Idempotent; returns preparation seconds.
+    fn load_artifact(&mut self, name: &str) -> Result<f64>;
 
-    pub fn meta(&self, artifact: &str) -> Result<&ArtifactMeta> {
-        self.manifest.artifact(artifact)
-    }
+    /// Bind weight files to an artifact; returns the binding key used by
+    /// `prefill`/`decode`.
+    fn bind(&mut self, artifact: &str, files: &[&str]) -> Result<String>;
 
-    /// Run a prefill artifact on a [batch, seq] token matrix.
-    pub fn prefill(
+    /// Run a prefill artifact on a `[batch, seq]` token matrix.
+    fn prefill(
         &mut self,
         artifact: &str,
         binding: &str,
         tokens: &[i32],
-    ) -> Result<PrefillOut> {
-        let meta = self.manifest.artifact(artifact)?.clone();
-        let (b, s) = (meta.batch, meta.seq);
-        if tokens.len() != b * s {
-            bail!(
-                "prefill {artifact}: tokens len {} != {}x{}",
-                tokens.len(),
-                b,
-                s
-            );
-        }
-        let tok = HostTensor::i32("tokens", vec![b as i64, s as i64], tokens)
-            .to_literal()?;
-        let (parts, secs) = self.execute(artifact, binding, &[&tok])?;
-        if parts.len() != 3 {
-            bail!("prefill {artifact}: expected 3 outputs");
-        }
-        let mut it = parts.into_iter();
-        let logits_lit = it.next().unwrap();
-        let k = it.next().unwrap();
-        let v = it.next().unwrap();
-        let logits: Vec<f32> = logits_lit.to_vec()?;
-        let vocab = logits.len() / (b * s);
-        Ok(PrefillOut {
-            logits,
-            batch: b,
-            seq: s,
-            vocab,
-            k_cache: k,
-            v_cache: v,
-            exec_secs: secs,
-        })
-    }
+    ) -> Result<PrefillOut>;
 
-    /// Run a decode artifact one step. KV caches move as literals here;
-    /// the scheduler's hot loop uses `decode_buffers` instead.
+    /// Advance every batch row one decode step. `pos[i]` is the cache
+    /// position the new token is written at; `kv_len[i]` the attention
+    /// span (typically `pos[i] + 1`).
     #[allow(clippy::too_many_arguments)]
-    pub fn decode(
+    fn decode(
         &mut self,
         artifact: &str,
         binding: &str,
         token: &[i32],
         pos: &[i32],
-        k_cache: &Literal,
-        v_cache: &Literal,
+        k_cache: &[f32],
+        v_cache: &[f32],
         kv_len: &[i32],
-    ) -> Result<DecodeOut> {
-        let meta = self.manifest.artifact(artifact)?.clone();
-        let b = meta.batch;
-        let tok =
-            HostTensor::i32("token", vec![b as i64], token).to_literal()?;
-        let pos_l =
-            HostTensor::i32("pos", vec![b as i64], pos).to_literal()?;
-        let len_l =
-            HostTensor::i32("kv_len", vec![b as i64], kv_len).to_literal()?;
-        let (parts, secs) = self.execute(
-            artifact,
-            binding,
-            &[&tok, &pos_l, k_cache, v_cache, &len_l],
-        )?;
-        let mut it = parts.into_iter();
-        let logits_lit = it.next().unwrap();
-        let k = it.next().unwrap();
-        let v = it.next().unwrap();
-        let logits: Vec<f32> = logits_lit.to_vec()?;
-        let vocab = logits.len() / b;
-        Ok(DecodeOut {
-            logits,
-            batch: b,
-            vocab,
-            k_cache: k,
-            v_cache: v,
-            exec_secs: secs,
-        })
-    }
+    ) -> Result<DecodeOut>;
 
-    // NOTE on device-resident KV (§Perf L3, investigated and rejected):
-    // `execute_b` lets inputs stay as PJRT buffers, but this xla crate's
-    // execute path returns the whole output TUPLE as a single buffer —
-    // splitting it into (logits, k, v) requires `to_literal_sync`, i.e. a
-    // full host round-trip anyway, after which the caches must be
-    // re-uploaded. The buffer path therefore costs strictly more than the
-    // literal path here; the decode KV shuttle stays host-side and is
-    // measured in EXPERIMENTS.md §Perf (it is ~1% of decode exec time at
-    // this scale).
-
-    pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
-        let lit = t.to_literal()?;
-        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    /// Sparsity accounting, if the backend tracks it (the native engine
+    /// does; PJRT executes pruning inside the compiled graph).
+    fn audit(&self) -> Option<SparsityAudit> {
+        None
     }
+}
 
-    pub fn upload_literal(&self, l: &Literal) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_literal(None, l)?)
-    }
+/// Default engine for an artifacts directory: the native CPU backend,
+/// using the on-disk manifest when present and a self-contained synthetic
+/// model inventory otherwise. The PJRT backend is opt-in via
+/// `ModelRuntime::new` under the `pjrt` feature.
+pub fn engine_for(dir: &Path) -> Result<Box<dyn Engine>> {
+    Ok(Box::new(super::native::NativeEngine::from_dir(dir)?))
 }

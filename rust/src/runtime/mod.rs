@@ -1,12 +1,24 @@
-//! PJRT runtime (Layer-3 side of the AOT bridge).
+//! Execution runtime: the backend-neutral [`Engine`] trait plus its two
+//! implementations.
 //!
-//! Loads HLO-text artifacts produced by `python/compile/aot.py`, compiles
-//! them on the PJRT CPU client once, binds the `.atw` weight files in the
-//! executable's flattened-argument order, and exposes typed prefill /
-//! decode entry points to the coordinator. Python never runs here.
+//! * `engine`   — the trait, the host-side `PrefillOut`/`DecodeOut`
+//!                types, and the `SparsityAudit` accounting
+//! * `native`   — the default pure-Rust CPU backend (`NativeEngine`):
+//!                N:M-sparse prefill through `sparsity::spmm`, W8A8
+//!                through `quant`, no external dependencies
+//! * `artifact` — manifest.json parsing (shared by both backends)
+//! * `pjrt`     — the PJRT/XLA backend over AOT HLO artifacts produced
+//!                by `python/compile/aot.py`; opt-in via the `pjrt`
+//!                cargo feature
 
 pub mod artifact;
 pub mod engine;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Manifest};
-pub use engine::{DecodeOut, ModelRuntime, PrefillOut};
+pub use engine::{engine_for, DecodeOut, Engine, PrefillOut, SparsityAudit};
+pub use native::{ModelSpec, NativeEngine};
+#[cfg(feature = "pjrt")]
+pub use pjrt::ModelRuntime;

@@ -1,0 +1,1189 @@
+//! `NativeEngine` — pure-Rust CPU execution of the serving path.
+//!
+//! The default backend: no PJRT, no XLA, no network. It executes a small
+//! decoder-only transformer (GQA attention + SwiGLU MLP, RMSNorm, no
+//! positional encoding — causality alone breaks symmetry at this scale)
+//! directly with the crate's own numeric substrate:
+//!
+//! * dense projections via `sparsity::spmm::dense_matmul`,
+//! * N:M-pruned projections via `sparsity::spmm::NmCompressed` — the
+//!   same compressed SpMM the paper's hardware would run, applied to
+//!   exactly the module types the paper prunes (`sparsity::policy`),
+//! * the W8A8 Outstanding-sparse compute path via `quant`.
+//!
+//! Per-request N:M configs arrive exactly as they do on the PJRT path:
+//! the artifact name carries the ratio (`...nm2_4`) and the bound aux
+//! file carries the setting (`naive` / `ls` / `all` / `dense`).
+//!
+//! Weights are synthesized deterministically (seeded by model name), so
+//! the full coordinator stack — router, batcher, scheduler, KV slots,
+//! TCP front-end — runs end-to-end out of the box: with a real
+//! `artifacts/manifest.json` the engine adopts its model geometry and
+//! artifact inventory; without one it serves a self-contained synthetic
+//! inventory. Every pruned activation is checked against `validate_nm`
+//! and accounted in a [`SparsityAudit`].
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::{ArtifactMeta, Manifest, ModelInfo};
+use super::engine::{DecodeOut, Engine, PrefillOut, SparsityAudit};
+use crate::quant;
+use crate::sparsity::mask::validate_nm;
+use crate::sparsity::policy::{self, Setting};
+use crate::sparsity::spmm::{dense_matmul, NmCompressed};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The N:M ratios every model's artifact inventory covers.
+pub const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
+
+/// Geometry + serving shapes of one native model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub prefill_batch: usize,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batch: usize,
+    pub cache_len: usize,
+    /// layers where q/gate stay dense under the `ls` / `all` settings
+    pub skip_layers: Vec<usize>,
+    pub seed: u64,
+}
+
+impl ModelSpec {
+    /// Self-contained default: the tiny-lm geometry the repo's tests and
+    /// token world (vocab 384) assume. All dims divide 16 so every
+    /// supported N:M group size applies cleanly.
+    pub fn tiny(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            vocab: 384,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 16,
+            d_ff: 64,
+            prefill_batch: 8,
+            prefill_seqs: vec![64],
+            decode_batch: 8,
+            cache_len: 96,
+            skip_layers: vec![1],
+            seed: fnv1a(name.as_bytes()),
+        }
+    }
+
+    /// Adopt geometry from a real manifest entry; anything missing keeps
+    /// the tiny default. Dimensions are then sanitized so attention and
+    /// pruning group math stay well-defined.
+    pub fn from_manifest(
+        info: &ModelInfo,
+        manifest: &Manifest,
+        dir: &Path,
+    ) -> ModelSpec {
+        let mut spec = ModelSpec::tiny(&info.name);
+        let g = |k: &str| info.config.get(k).copied().unwrap_or(0);
+        let adopt = |cur: &mut usize, v: usize| {
+            if v > 0 {
+                *cur = v;
+            }
+        };
+        adopt(&mut spec.vocab, g("vocab_size"));
+        adopt(&mut spec.d_model, g("d_model"));
+        adopt(&mut spec.n_layers, g("n_layers"));
+        adopt(&mut spec.n_q_heads, g("n_q_heads"));
+        adopt(&mut spec.n_kv_heads, g("n_kv_heads"));
+        adopt(&mut spec.head_dim, g("head_dim"));
+        adopt(&mut spec.d_ff, g("d_ff"));
+        // serving shapes from the artifact inventory
+        let mut seqs: Vec<usize> = Vec::new();
+        for a in manifest.artifacts.values() {
+            if !a.name.starts_with(&format!("{}.", info.name)) {
+                continue;
+            }
+            if a.kind == "prefill" {
+                if !seqs.contains(&a.seq) && a.seq > 0 {
+                    seqs.push(a.seq);
+                }
+                if a.batch > 0 {
+                    spec.prefill_batch = a.batch;
+                }
+            } else if a.kind == "decode" {
+                if a.batch > 0 {
+                    spec.decode_batch = a.batch;
+                }
+                if a.cache > 0 {
+                    spec.cache_len = a.cache;
+                }
+            }
+        }
+        if !seqs.is_empty() {
+            seqs.sort_unstable();
+            spec.prefill_seqs = seqs;
+        }
+        if let Some(skips) = stats_skip_layers(dir, &info.name) {
+            spec.skip_layers = skips;
+        } else {
+            spec.skip_layers = vec![spec.n_layers.saturating_sub(1)];
+        }
+        spec.sanitize()
+    }
+
+    fn sanitize(mut self) -> ModelSpec {
+        if self.n_kv_heads == 0 || self.n_q_heads % self.n_kv_heads != 0 {
+            self.n_kv_heads = self.n_q_heads.max(1);
+            self.n_q_heads = self.n_kv_heads;
+        }
+        self.vocab = self.vocab.max(16);
+        self.cache_len = self.cache_len.max(self.max_prefill_seq() + 16);
+        self
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_q_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn max_prefill_seq(&self) -> usize {
+        self.prefill_seqs.iter().copied().max().unwrap_or(64)
+    }
+
+    /// Synthesize the manifest entries (artifacts + model info +
+    /// settings) this model serves.
+    fn manifest_entries(
+        &self,
+        artifacts: &mut BTreeMap<String, ArtifactMeta>,
+        models: &mut BTreeMap<String, ModelInfo>,
+        settings: &mut BTreeMap<String, Vec<String>>,
+    ) {
+        let prefill_meta = |name: &str,
+                           variant: &str,
+                           seq: usize,
+                           nm: Option<(usize, usize)>| {
+            ArtifactMeta {
+                name: name.to_string(),
+                hlo: String::new(),
+                params: Vec::new(),
+                runtime_inputs: vec![(
+                    vec![self.prefill_batch, seq],
+                    "int32".to_string(),
+                )],
+                outputs: vec!["logits".into(), "k".into(), "v".into()],
+                kind: "prefill".to_string(),
+                variant: variant.to_string(),
+                batch: self.prefill_batch,
+                seq,
+                cache: 0,
+                nm,
+            }
+        };
+        for &seq in &self.prefill_seqs {
+            for (variant, nm) in prefill_variants() {
+                let name = match nm {
+                    Some((n, m)) => format!(
+                        "{}.prefill{seq}.{variant}{n}_{m}",
+                        self.name
+                    ),
+                    None => format!("{}.prefill{seq}.{variant}", self.name),
+                };
+                artifacts
+                    .insert(name.clone(), prefill_meta(&name, variant, seq, nm));
+            }
+        }
+        let cache_shape = vec![
+            self.n_layers,
+            self.decode_batch,
+            self.cache_len,
+            self.n_kv_heads,
+            self.head_dim,
+        ];
+        for variant in ["dense", "sq"] {
+            let name = format!("{}.decode.{variant}", self.name);
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    hlo: String::new(),
+                    params: Vec::new(),
+                    runtime_inputs: vec![
+                        (vec![self.decode_batch], "int32".to_string()),
+                        (vec![self.decode_batch], "int32".to_string()),
+                        (cache_shape.clone(), "float32".to_string()),
+                        (cache_shape.clone(), "float32".to_string()),
+                        (vec![self.decode_batch], "int32".to_string()),
+                    ],
+                    outputs: vec!["logits".into(), "k".into(), "v".into()],
+                    kind: "decode".to_string(),
+                    variant: variant.to_string(),
+                    batch: self.decode_batch,
+                    seq: 0,
+                    cache: self.cache_len,
+                    nm: None,
+                },
+            );
+        }
+        let mut config = BTreeMap::new();
+        config.insert("vocab_size".to_string(), self.vocab);
+        config.insert("d_model".to_string(), self.d_model);
+        config.insert("n_layers".to_string(), self.n_layers);
+        config.insert("n_q_heads".to_string(), self.n_q_heads);
+        config.insert("n_kv_heads".to_string(), self.n_kv_heads);
+        config.insert("head_dim".to_string(), self.head_dim);
+        config.insert("d_ff".to_string(), self.d_ff);
+        models.insert(
+            self.name.clone(),
+            ModelInfo {
+                name: self.name.clone(),
+                weights: format!("weights/{}.atw", self.name),
+                is_moe: false,
+                config,
+            },
+        );
+        settings.insert(
+            self.name.clone(),
+            vec!["naive".into(), "ls".into(), "all".into()],
+        );
+    }
+}
+
+fn prefill_variants() -> Vec<(&'static str, Option<(usize, usize)>)> {
+    let mut v: Vec<(&'static str, Option<(usize, usize)>)> =
+        vec![("dense", None), ("sq", None)];
+    for &(n, m) in &RATIOS {
+        v.push(("nm", Some((n, m))));
+        v.push(("sq_nm", Some((n, m))));
+    }
+    v
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn stats_skip_layers(dir: &Path, model: &str) -> Option<Vec<usize>> {
+    let p = dir.join("stats").join(format!("sensitivity_{model}.json"));
+    let text = std::fs::read_to_string(p).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let arr = j.get("skip_layers")?.as_arr()?;
+    Some(arr.iter().filter_map(|v| v.as_usize()).collect())
+}
+
+/// One transformer layer's weights; projections are `[din, dout]`
+/// row-major (the `spmm` convention). `scale_*` are the per-input-channel
+/// weight norms the `all` setting uses as Robust-Norm-style scores.
+struct LayerWeights {
+    attn_norm: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    w_gate: Vec<f32>,
+    w_up: Vec<f32>,
+    w_down: Vec<f32>,
+    scale_q: Vec<f32>,
+    scale_gate: Vec<f32>,
+    scale_down: Vec<f32>,
+}
+
+/// A native model: spec + deterministically synthesized weights.
+pub struct NativeModel {
+    pub spec: ModelSpec,
+    embed: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    final_norm: Vec<f32>,
+    lm_head: Vec<f32>,
+}
+
+fn rand_mat(rng: &mut Rng, din: usize, dout: usize) -> Vec<f32> {
+    let scale = 1.0 / (din.max(1) as f64).sqrt();
+    (0..din * dout)
+        .map(|_| (rng.normal() * scale) as f32)
+        .collect()
+}
+
+/// Per-input-channel L2 norm of a `[din, dout]` weight matrix.
+fn row_norms(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
+    (0..din)
+        .map(|j| {
+            w[j * dout..(j + 1) * dout]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+fn rmsnorm(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        let row = &x[r * d..(r + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for j in 0..d {
+            out[r * d + j] = row[j] * inv * w[j];
+        }
+    }
+    out
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Pruning directive for one projection: ratio + optional channel scores.
+type PruneCfg<'a> = Option<(usize, usize, Option<&'a [f32]>)>;
+
+/// Resolve the paper's policy for one module in one layer.
+fn prune_cfg<'a>(
+    nm: Option<(usize, usize)>,
+    setting: Setting,
+    module: &str,
+    layer: usize,
+    skip_layers: &[usize],
+    scale: Option<&'a [f32]>,
+) -> PruneCfg<'a> {
+    let (n, m) = nm?;
+    let pruned = match setting {
+        Setting::Dense => false,
+        Setting::Naive => policy::pruned_in_layer(module, layer, &[]),
+        Setting::LayerSkip | Setting::All => {
+            policy::pruned_in_layer(module, layer, skip_layers)
+        }
+    };
+    if !pruned {
+        return None;
+    }
+    let scale = if setting == Setting::All { scale } else { None };
+    Some((n, m, scale))
+}
+
+/// One projection: dense, N:M-compressed, and/or W8A8 per the directive.
+/// Pruned activations are validated against the exact-N:M contract and
+/// accounted in `audit`.
+#[allow(clippy::too_many_arguments)]
+fn proj(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    prune: PruneCfg<'_>,
+    quantized: bool,
+    audit: &mut SparsityAudit,
+    validate: bool,
+) -> Vec<f32> {
+    match prune {
+        Some((n, m, scale)) if din % m == 0 => {
+            let scale = scale.unwrap_or(&[]);
+            let c = NmCompressed::compress(x, t, din, scale, n, m);
+            audit.pruned_matmuls += 1;
+            let st = c.stats(dout);
+            audit.dense_flops += st.dense_flops;
+            audit.sparse_flops += st.sparse_flops;
+            // decompress at most once, shared by validation and the
+            // int8 reference path
+            let pruned_dense = if validate || quantized {
+                Some(c.decompress())
+            } else {
+                None
+            };
+            if let Some(pd) = &pruned_dense {
+                if validate {
+                    audit.nm_checks += 1;
+                    for row in pd.chunks_exact(din) {
+                        if !validate_nm(row, n, m) {
+                            audit.nm_violations += 1;
+                        }
+                    }
+                }
+            }
+            if quantized {
+                // NOTE: the int8 reference executes dense-shaped work
+                // over the pruned input; the audit still records n/m
+                // sparse FLOPs — the SpMM-hardware cost model (see
+                // SparsityAudit docs)
+                w8a8_dense(pruned_dense.as_deref().unwrap(), t, din, w, dout)
+            } else {
+                c.matmul(w, dout)
+            }
+        }
+        other => {
+            if other.is_some() {
+                // pruning was requested but din is not a multiple of m:
+                // execute dense and record the fallback loudly
+                audit.pruned_fallbacks += 1;
+            }
+            audit.dense_matmuls += 1;
+            let fl = 2 * (t * din * dout) as u64;
+            audit.dense_flops += fl;
+            audit.sparse_flops += fl;
+            if quantized {
+                w8a8_dense(x, t, din, w, dout)
+            } else {
+                dense_matmul(x, t, din, w, dout)
+            }
+        }
+    }
+}
+
+/// W8A8 reference path: per-tensor activation scale, per-channel weight
+/// scales. Weights are quantized per call — at native-model sizes this is
+/// noise next to the matmul itself.
+fn w8a8_dense(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    let (wq, ws) = quant::quantize_weight(w, din, dout);
+    let absmax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let xs = (absmax / 127.0).max(1e-8);
+    let xq = quant::quantize(x, xs);
+    quant::w8a8_matmul(&xq, t, din, &wq, dout, xs, &ws)
+}
+
+impl NativeModel {
+    pub fn build(spec: ModelSpec) -> NativeModel {
+        let mut rng = Rng::new(spec.seed);
+        let (d, qd, kvd, f) =
+            (spec.d_model, spec.q_dim(), spec.kv_dim(), spec.d_ff);
+        let layers = (0..spec.n_layers)
+            .map(|_| {
+                let wq = rand_mat(&mut rng, d, qd);
+                let w_gate = rand_mat(&mut rng, d, f);
+                let w_down = rand_mat(&mut rng, f, d);
+                LayerWeights {
+                    attn_norm: vec![1.0; d],
+                    wk: rand_mat(&mut rng, d, kvd),
+                    wv: rand_mat(&mut rng, d, kvd),
+                    wo: rand_mat(&mut rng, qd, d),
+                    mlp_norm: vec![1.0; d],
+                    w_up: rand_mat(&mut rng, d, f),
+                    scale_q: row_norms(&wq, d, qd),
+                    scale_gate: row_norms(&w_gate, d, f),
+                    scale_down: row_norms(&w_down, f, d),
+                    wq,
+                    w_gate,
+                    w_down,
+                }
+            })
+            .collect();
+        NativeModel {
+            embed: rand_mat(&mut rng, spec.vocab, spec.d_model),
+            final_norm: vec![1.0; spec.d_model],
+            lm_head: rand_mat(&mut rng, spec.d_model, spec.vocab),
+            layers,
+            spec,
+        }
+    }
+
+    fn embed_tokens(&self, tokens: &[i32]) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let id = (tok.max(0) as usize).min(self.spec.vocab - 1);
+            x[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embed[id * d..(id + 1) * d]);
+        }
+        x
+    }
+
+    fn logits(
+        &self,
+        x: &[f32],
+        t: usize,
+        audit: &mut SparsityAudit,
+    ) -> Vec<f32> {
+        let h = rmsnorm(x, t, self.spec.d_model, &self.final_norm);
+        proj(
+            &h,
+            t,
+            self.spec.d_model,
+            &self.lm_head,
+            self.spec.vocab,
+            None,
+            false,
+            audit,
+            false,
+        )
+    }
+
+    /// Full prefill over `[b, s]` tokens with causal attention; N:M
+    /// pruning per (`nm`, `setting`) on exactly the policy's modules.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        nm: Option<(usize, usize)>,
+        setting: Setting,
+        quantized: bool,
+        audit: &mut SparsityAudit,
+        validate: bool,
+    ) -> PrefillOut {
+        let sp = &self.spec;
+        let (d, qd, kvd, f) = (sp.d_model, sp.q_dim(), sp.kv_dim(), sp.d_ff);
+        let t = b * s;
+        let t0 = Instant::now();
+        let mut x = self.embed_tokens(tokens);
+        let mut k_cache = vec![0.0f32; sp.n_layers * t * kvd];
+        let mut v_cache = vec![0.0f32; sp.n_layers * t * kvd];
+        for (l, lw) in self.layers.iter().enumerate() {
+            let h = rmsnorm(&x, t, d, &lw.attn_norm);
+            let q_cfg = prune_cfg(
+                nm,
+                setting,
+                "q_proj",
+                l,
+                &sp.skip_layers,
+                Some(&lw.scale_q),
+            );
+            let q =
+                proj(&h, t, d, &lw.wq, qd, q_cfg, quantized, audit, validate);
+            let k =
+                proj(&h, t, d, &lw.wk, kvd, None, quantized, audit, validate);
+            let v =
+                proj(&h, t, d, &lw.wv, kvd, None, quantized, audit, validate);
+            // stash this layer's K/V in [L, B, S, H_kv, D_h]
+            let base = l * t * kvd;
+            k_cache[base..base + t * kvd].copy_from_slice(&k);
+            v_cache[base..base + t * kvd].copy_from_slice(&v);
+            let attn = causal_attention(&q, &k, &v, b, s, sp);
+            let o = proj(
+                &attn, t, qd, &lw.wo, d, None, quantized, audit, validate,
+            );
+            for (xi, oi) in x.iter_mut().zip(o.iter()) {
+                *xi += oi;
+            }
+            let h2 = rmsnorm(&x, t, d, &lw.mlp_norm);
+            let gate_cfg = prune_cfg(
+                nm,
+                setting,
+                "gate_proj",
+                l,
+                &sp.skip_layers,
+                Some(&lw.scale_gate),
+            );
+            let gate = proj(
+                &h2, t, d, &lw.w_gate, f, gate_cfg, quantized, audit,
+                validate,
+            );
+            let up = proj(
+                &h2, t, d, &lw.w_up, f, None, quantized, audit, validate,
+            );
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down_cfg = prune_cfg(
+                nm,
+                setting,
+                "down_proj",
+                l,
+                &sp.skip_layers,
+                Some(&lw.scale_down),
+            );
+            let down = proj(
+                &act, t, f, &lw.w_down, d, down_cfg, quantized, audit,
+                validate,
+            );
+            for (xi, di) in x.iter_mut().zip(down.iter()) {
+                *xi += di;
+            }
+        }
+        let logits = self.logits(&x, t, audit);
+        PrefillOut {
+            logits,
+            batch: b,
+            seq: s,
+            vocab: sp.vocab,
+            k_cache,
+            v_cache,
+            exec_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// One dense decode step over the slot cache (the paper confines
+    /// sparsity to prefill; decode is always dense / W8A8).
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        kv_len: &[i32],
+        cache: usize,
+        quantized: bool,
+        audit: &mut SparsityAudit,
+    ) -> (Vec<f32>, f64) {
+        let sp = &self.spec;
+        let b = token.len();
+        let (d, qd, kvd, f) = (sp.d_model, sp.q_dim(), sp.kv_dim(), sp.d_ff);
+        let dh = sp.head_dim;
+        let group = sp.n_q_heads / sp.n_kv_heads;
+        let t0 = Instant::now();
+        let mut x = self.embed_tokens(token);
+        for (l, lw) in self.layers.iter().enumerate() {
+            let h = rmsnorm(&x, b, d, &lw.attn_norm);
+            let q = proj(&h, b, d, &lw.wq, qd, None, quantized, audit, false);
+            let k = proj(&h, b, d, &lw.wk, kvd, None, quantized, audit, false);
+            let v = proj(&h, b, d, &lw.wv, kvd, None, quantized, audit, false);
+            let mut attn = vec![0.0f32; b * qd];
+            for bi in 0..b {
+                let p = (pos[bi].max(0) as usize).min(cache - 1);
+                let span = (kv_len[bi].max(1) as usize).min(cache);
+                // write this step's K/V at the row's position (assign,
+                // not accumulate — stale slot data is harmless)
+                let slot = ((l * b + bi) * cache + p) * kvd;
+                k_cache[slot..slot + kvd]
+                    .copy_from_slice(&k[bi * kvd..(bi + 1) * kvd]);
+                v_cache[slot..slot + kvd]
+                    .copy_from_slice(&v[bi * kvd..(bi + 1) * kvd]);
+                for hq in 0..sp.n_q_heads {
+                    let kvh = hq / group;
+                    let qrow = &q[bi * qd + hq * dh..bi * qd + (hq + 1) * dh];
+                    let mut scores = vec![0.0f32; span];
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        let kr = ((l * b + bi) * cache + j) * kvd + kvh * dh;
+                        let krow = &k_cache[kr..kr + dh];
+                        let dot: f32 = qrow
+                            .iter()
+                            .zip(krow.iter())
+                            .map(|(a, c)| a * c)
+                            .sum();
+                        *sc = dot / (dh as f32).sqrt();
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = &mut attn
+                        [bi * qd + hq * dh..bi * qd + (hq + 1) * dh];
+                    for (j, &wgt) in scores.iter().enumerate() {
+                        let vr = ((l * b + bi) * cache + j) * kvd + kvh * dh;
+                        for (oe, &ve) in
+                            orow.iter_mut().zip(v_cache[vr..vr + dh].iter())
+                        {
+                            *oe += wgt * ve;
+                        }
+                    }
+                }
+            }
+            let o =
+                proj(&attn, b, qd, &lw.wo, d, None, quantized, audit, false);
+            for (xi, oi) in x.iter_mut().zip(o.iter()) {
+                *xi += oi;
+            }
+            let h2 = rmsnorm(&x, b, d, &lw.mlp_norm);
+            let gate = proj(
+                &h2, b, d, &lw.w_gate, f, None, quantized, audit, false,
+            );
+            let up =
+                proj(&h2, b, d, &lw.w_up, f, None, quantized, audit, false);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = proj(
+                &act, b, f, &lw.w_down, d, None, quantized, audit, false,
+            );
+            for (xi, di) in x.iter_mut().zip(down.iter()) {
+                *xi += di;
+            }
+        }
+        let logits = self.logits(&x, b, audit);
+        (logits, t0.elapsed().as_secs_f64())
+    }
+}
+
+fn softmax_inplace(scores: &mut [f32]) {
+    let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - mx).exp();
+        denom += *s;
+    }
+    let inv = 1.0 / denom.max(1e-30);
+    for s in scores.iter_mut() {
+        *s *= inv;
+    }
+}
+
+/// Causal GQA attention over a packed `[b, s]` prefill batch.
+fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    s: usize,
+    sp: &ModelSpec,
+) -> Vec<f32> {
+    let (qd, kvd, dh) = (sp.q_dim(), sp.kv_dim(), sp.head_dim);
+    let group = sp.n_q_heads / sp.n_kv_heads;
+    let inv_sqrt = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; b * s * qd];
+    let mut scores = vec![0.0f32; s];
+    for bi in 0..b {
+        for p in 0..s {
+            let qbase = (bi * s + p) * qd;
+            for hq in 0..sp.n_q_heads {
+                let kvh = hq / group;
+                let qrow = &q[qbase + hq * dh..qbase + (hq + 1) * dh];
+                for (j, sc) in scores.iter_mut().take(p + 1).enumerate() {
+                    let kr = (bi * s + j) * kvd + kvh * dh;
+                    let krow = &k[kr..kr + dh];
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(krow.iter())
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    *sc = dot * inv_sqrt;
+                }
+                softmax_inplace(&mut scores[..p + 1]);
+                let orow =
+                    &mut out[qbase + hq * dh..qbase + (hq + 1) * dh];
+                for (j, &wgt) in scores[..p + 1].iter().enumerate() {
+                    let vr = (bi * s + j) * kvd + kvh * dh;
+                    for (oe, &ve) in orow.iter_mut().zip(v[vr..vr + dh].iter())
+                    {
+                        *oe += wgt * ve;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The native CPU execution engine (see module docs).
+pub struct NativeEngine {
+    manifest: Manifest,
+    models: BTreeMap<String, NativeModel>,
+    /// "artifact::binding-key" -> resolved setting
+    bindings: HashMap<String, Setting>,
+    audit: SparsityAudit,
+    /// run `validate_nm` on every pruned activation (cheap; on by default)
+    pub validate: bool,
+}
+
+impl NativeEngine {
+    /// Engine over an artifacts directory: adopts `manifest.json` when
+    /// present, otherwise serves the self-contained synthetic inventory.
+    pub fn from_dir(dir: &Path) -> Result<NativeEngine> {
+        if dir.join("manifest.json").exists() {
+            let manifest = Manifest::load(dir)?;
+            let models = manifest
+                .models
+                .values()
+                .map(|info| {
+                    let spec = ModelSpec::from_manifest(info, &manifest, dir);
+                    (info.name.clone(), NativeModel::build(spec))
+                })
+                .collect();
+            Ok(NativeEngine {
+                manifest,
+                models,
+                bindings: HashMap::new(),
+                audit: SparsityAudit::default(),
+                validate: true,
+            })
+        } else {
+            Ok(NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")]))
+        }
+    }
+
+    /// Fully self-contained engine from explicit model specs.
+    pub fn synthetic(specs: Vec<ModelSpec>) -> NativeEngine {
+        let specs: Vec<ModelSpec> =
+            specs.into_iter().map(ModelSpec::sanitize).collect();
+        let mut artifacts = BTreeMap::new();
+        let mut models_info = BTreeMap::new();
+        let mut settings = BTreeMap::new();
+        for spec in &specs {
+            spec.manifest_entries(
+                &mut artifacts,
+                &mut models_info,
+                &mut settings,
+            );
+        }
+        let manifest = Manifest {
+            dir: std::path::PathBuf::new(),
+            artifacts,
+            models: models_info,
+            settings,
+            raw: Json::Obj(BTreeMap::new()),
+        };
+        let models = specs
+            .into_iter()
+            .map(|spec| (spec.name.clone(), NativeModel::build(spec)))
+            .collect();
+        NativeEngine {
+            manifest,
+            models,
+            bindings: HashMap::new(),
+            audit: SparsityAudit::default(),
+            validate: true,
+        }
+    }
+
+    /// The default synthetic single-model engine.
+    pub fn tiny() -> NativeEngine {
+        NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")])
+    }
+
+    pub fn reset_audit(&mut self) {
+        self.audit = SparsityAudit::default();
+    }
+
+    pub fn model(&self, name: &str) -> Option<&NativeModel> {
+        self.models.get(name)
+    }
+
+    fn model_for_artifact(&self, artifact: &str) -> Result<&NativeModel> {
+        let model_name = artifact.split('.').next().unwrap_or(artifact);
+        self.models.get(model_name).ok_or_else(|| {
+            anyhow!("artifact {artifact}: model '{model_name}' not loaded")
+        })
+    }
+
+    fn binding_setting(
+        &self,
+        artifact: &str,
+        binding: &str,
+    ) -> Result<Setting> {
+        self.bindings
+            .get(&binding_key(artifact, binding))
+            .copied()
+            .ok_or_else(|| {
+                anyhow!("artifact {artifact}: binding '{binding}' missing")
+            })
+    }
+}
+
+fn binding_key(artifact: &str, binding: &str) -> String {
+    format!("{artifact}::{binding}")
+}
+
+/// Resolve the setting encoded in a bound file list: the aux file name
+/// carries it (`<model>[.sq].aux_<tag>.atw`). N:M artifacts bound with no
+/// aux default to naive magnitude scoring; dense artifacts to dense.
+fn setting_from_files(files: &[&str], is_nm: bool) -> Result<Setting> {
+    for f in files {
+        let Some(idx) = f.find(".aux_") else { continue };
+        let tag = f[idx + ".aux_".len()..].trim_end_matches(".atw");
+        return match tag {
+            "dense" => Ok(Setting::Dense),
+            "naive" => Ok(Setting::Naive),
+            "ls" => Ok(Setting::LayerSkip),
+            "all" => Ok(Setting::All),
+            other => Err(anyhow!("unknown aux setting '{other}' in {f}")),
+        };
+    }
+    Ok(if is_nm { Setting::Naive } else { Setting::Dense })
+}
+
+impl Engine for NativeEngine {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_artifact(&mut self, name: &str) -> Result<f64> {
+        self.manifest.artifact(name)?;
+        self.model_for_artifact(name)?;
+        Ok(0.0)
+    }
+
+    fn bind(&mut self, artifact: &str, files: &[&str]) -> Result<String> {
+        let meta = self.manifest.artifact(artifact)?;
+        let is_nm = meta.nm.is_some();
+        self.model_for_artifact(artifact)?;
+        let setting = setting_from_files(files, is_nm)?;
+        let key = files.join("+");
+        self.bindings
+            .insert(binding_key(artifact, &key), setting);
+        Ok(key)
+    }
+
+    fn prefill(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        tokens: &[i32],
+    ) -> Result<PrefillOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "prefill" {
+            bail!("artifact {artifact} is not a prefill artifact");
+        }
+        let (b, s) = (meta.batch, meta.seq);
+        if tokens.len() != b * s {
+            bail!(
+                "prefill {artifact}: tokens len {} != {b}x{s}",
+                tokens.len()
+            );
+        }
+        let setting = self.binding_setting(artifact, binding)?;
+        let quantized = meta.variant.starts_with("sq");
+        let validate = self.validate;
+        let mut audit = self.audit;
+        let model = self.model_for_artifact(artifact)?;
+        let out = model.prefill(
+            tokens, b, s, meta.nm, setting, quantized, &mut audit, validate,
+        );
+        self.audit = audit;
+        Ok(out)
+    }
+
+    fn decode(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        kv_len: &[i32],
+    ) -> Result<DecodeOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "decode" {
+            bail!("artifact {artifact} is not a decode artifact");
+        }
+        self.binding_setting(artifact, binding)?;
+        let b = meta.batch;
+        let cache = meta.cache;
+        if b == 0 || cache == 0 {
+            bail!("decode {artifact}: degenerate batch {b} / cache {cache}");
+        }
+        if token.len() != b || pos.len() != b || kv_len.len() != b {
+            bail!("decode {artifact}: batch inputs must have len {b}");
+        }
+        let quantized = meta.variant.starts_with("sq");
+        let model = self.model_for_artifact(artifact)?;
+        let expect =
+            model.spec.n_layers * b * cache * model.spec.kv_dim();
+        if k_cache.len() != expect || v_cache.len() != expect {
+            bail!(
+                "decode {artifact}: cache len {} != expected {expect}",
+                k_cache.len()
+            );
+        }
+        let vocab = model.spec.vocab;
+        let mut kc = k_cache.to_vec();
+        let mut vc = v_cache.to_vec();
+        let mut audit = self.audit;
+        let (logits, secs) = model.decode(
+            token, pos, &mut kc, &mut vc, kv_len, cache, quantized,
+            &mut audit,
+        );
+        self.audit = audit;
+        Ok(DecodeOut {
+            logits,
+            batch: b,
+            vocab,
+            k_cache: kc,
+            v_cache: vc,
+            exec_secs: secs,
+        })
+    }
+
+    fn audit(&self) -> Option<SparsityAudit> {
+        Some(self.audit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> ModelSpec {
+        ModelSpec {
+            prefill_batch: 2,
+            prefill_seqs: vec![16],
+            decode_batch: 2,
+            cache_len: 24,
+            ..ModelSpec::tiny("tiny-lm-a")
+        }
+    }
+
+    fn tokens_for(b: usize, s: usize) -> Vec<i32> {
+        (0..b * s).map(|i| 1 + (i as i32 % 300)).collect()
+    }
+
+    #[test]
+    fn prefill_shapes_and_finite() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let art = "tiny-lm-a.prefill16.dense";
+        let bind = e.bind(art, &["tiny-lm-a.atw"]).unwrap();
+        let out = e.prefill(art, &bind, &tokens_for(2, 16)).unwrap();
+        assert_eq!(out.vocab, 384);
+        assert_eq!(out.logits.len(), 2 * 16 * 384);
+        assert_eq!(out.k_cache.len(), 2 * 2 * 16 * 16); // L*B*S*kvd
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nm_artifact_with_dense_aux_matches_dense_artifact() {
+        // keep_dense everywhere must reproduce the dense path exactly —
+        // the contract that lets one nm artifact serve dense requests.
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let toks = tokens_for(2, 16);
+        let b_dense = e
+            .bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let b_nm = e
+            .bind(
+                "tiny-lm-a.prefill16.nm2_4",
+                &["tiny-lm-a.atw", "tiny-lm-a.aux_dense.atw"],
+            )
+            .unwrap();
+        let a = e
+            .prefill("tiny-lm-a.prefill16.dense", &b_dense, &toks)
+            .unwrap();
+        let c = e
+            .prefill("tiny-lm-a.prefill16.nm2_4", &b_nm, &toks)
+            .unwrap();
+        for (x, y) in a.logits.iter().zip(c.logits.iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn sparse_prefill_audits_and_differs_from_dense() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let toks = tokens_for(2, 16);
+        let b_dense = e
+            .bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let dense = e
+            .prefill("tiny-lm-a.prefill16.dense", &b_dense, &toks)
+            .unwrap();
+        e.reset_audit();
+        let b_nm = e
+            .bind(
+                "tiny-lm-a.prefill16.nm2_4",
+                &["tiny-lm-a.atw", "tiny-lm-a.aux_ls.atw"],
+            )
+            .unwrap();
+        let sparse = e
+            .prefill("tiny-lm-a.prefill16.nm2_4", &b_nm, &toks)
+            .unwrap();
+        let audit = Engine::audit(&e).unwrap();
+        assert!(audit.pruned_matmuls > 0, "no pruned projections ran");
+        assert_eq!(audit.nm_violations, 0, "N:M contract violated");
+        assert_eq!(audit.pruned_fallbacks, 0, "unexpected dense fallback");
+        // 2:4 over layer-0 q/gate/down saves ~8% of this model's total
+        // linear FLOPs (layer 1 is skipped by the ls policy)
+        assert!(audit.flops_saved_frac() > 0.05);
+        let diff = dense
+            .logits
+            .iter()
+            .zip(sparse.logits.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff > 0.0, "2:4 pruning changed nothing");
+        assert!(sparse.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_continues_from_prefill_cache() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let art = "tiny-lm-a.prefill16.dense";
+        let bind = e.bind(art, &["tiny-lm-a.atw"]).unwrap();
+        let toks = tokens_for(2, 16);
+        let out = e.prefill(art, &bind, &toks).unwrap();
+        // scatter prefill row 0 into a fresh decode cache
+        let spec = e.model("tiny-lm-a").unwrap().spec.clone();
+        let (l, b, c, kvd) =
+            (spec.n_layers, spec.decode_batch, spec.cache_len, spec.kv_dim());
+        let plen = 5usize;
+        let mut kc = vec![0.0f32; l * b * c * kvd];
+        let mut vc = vec![0.0f32; l * b * c * kvd];
+        for li in 0..l {
+            let src = (li * 2 * 16) * kvd; // prefill [L, 2, 16, kvd]
+            let dst = (li * b * c) * kvd;
+            kc[dst..dst + plen * kvd]
+                .copy_from_slice(&out.k_cache[src..src + plen * kvd]);
+            vc[dst..dst + plen * kvd]
+                .copy_from_slice(&out.v_cache[src..src + plen * kvd]);
+        }
+        let dec = "tiny-lm-a.decode.dense";
+        let dbind = e.bind(dec, &["tiny-lm-a.atw"]).unwrap();
+        let mut token = vec![0i32; b];
+        token[0] = 7;
+        let mut pos = vec![0i32; b];
+        pos[0] = plen as i32;
+        let mut kv_len = vec![1i32; b];
+        kv_len[0] = (plen + 1) as i32;
+        let d = e
+            .decode(dec, &dbind, &token, &pos, &kc, &vc, &kv_len)
+            .unwrap();
+        assert_eq!(d.logits.len(), b * 384);
+        assert!(d.logits.iter().all(|v| v.is_finite()));
+        // the new K/V landed at position plen of slot 0
+        let slot = plen * kvd;
+        assert!(d.k_cache[slot..slot + kvd].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn quantized_path_close_to_f32() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let toks = tokens_for(2, 16);
+        let bf = e
+            .bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let fp = e
+            .prefill("tiny-lm-a.prefill16.dense", &bf, &toks)
+            .unwrap();
+        let bq = e
+            .bind("tiny-lm-a.prefill16.sq", &["tiny-lm-a.sq.atw"])
+            .unwrap();
+        let q = e.prefill("tiny-lm-a.prefill16.sq", &bq, &toks).unwrap();
+        let max_abs =
+            fp.logits.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let diff = fp
+            .logits
+            .iter()
+            .zip(q.logits.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            diff < max_abs.max(1.0) * 0.5,
+            "w8a8 drifted too far: {diff} vs absmax {max_abs}"
+        );
+    }
+
+    #[test]
+    fn unknown_binding_is_rejected() {
+        let mut e = NativeEngine::tiny();
+        let err = e
+            .prefill("tiny-lm-a.prefill64.dense", "nope", &[0; 8 * 64])
+            .unwrap_err();
+        assert!(err.to_string().contains("binding"));
+    }
+}

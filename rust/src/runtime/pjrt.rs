@@ -1,0 +1,311 @@
+//! The PJRT execution engine (`pjrt` cargo feature).
+//!
+//! One `ModelRuntime` owns the CPU client, the compiled executables and
+//! the bound weight literals. The coordinator reaches it through the
+//! [`Engine`](super::engine::Engine) trait; everything below is generic
+//! tuple plumbing over the `xla` crate.
+//!
+//! Perf note (§Perf in EXPERIMENTS.md): weights are uploaded to device
+//! buffers ONCE per (artifact, weight-set) binding via
+//! `buffer_from_host_literal`, and executions use `execute_b` so steady-
+//! state calls only upload the small runtime inputs (tokens / KV cache).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::{ArtifactMeta, Manifest};
+use super::engine::{DecodeOut, Engine, PrefillOut};
+use crate::tensor::io::read_weights;
+use crate::tensor::HostTensor;
+
+/// A compiled artifact + the device-resident weight buffers for one or
+/// more weight-set bindings (e.g. the same nm executable bound to the
+/// "naive" / "ls" / "all" aux settings).
+struct Compiled {
+    exe: PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// binding key (weight files joined with '+') -> device buffers in
+    /// executable argument order
+    bindings: HashMap<String, Vec<PjRtBuffer>>,
+}
+
+pub struct ModelRuntime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    compiled: HashMap<String, Compiled>,
+    /// weight file -> tensor name -> host literal
+    weight_files: HashMap<String, HashMap<String, Literal>>,
+}
+
+impl ModelRuntime {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(ModelRuntime {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            compiled: HashMap::new(),
+            weight_files: HashMap::new(),
+        })
+    }
+
+    /// Load + compile an artifact (idempotent). Returns compile seconds.
+    fn load_artifact_inner(&mut self, name: &str) -> Result<f64> {
+        if self.compiled.contains_key(name) {
+            return Ok(0.0);
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let hlo_path = self.dir.join(&meta.hlo);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {name}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.compiled.insert(
+            name.to_string(),
+            Compiled { exe, meta, bindings: HashMap::new() },
+        );
+        Ok(secs)
+    }
+
+    fn ensure_weight_file(&mut self, file: &str) -> Result<()> {
+        if self.weight_files.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.dir.join("weights").join(file);
+        let tensors = read_weights(&path)?;
+        let mut map = HashMap::new();
+        for t in tensors {
+            let lit = t.to_literal()?;
+            map.insert(t.name.clone(), lit);
+        }
+        self.weight_files.insert(file.to_string(), map);
+        Ok(())
+    }
+
+    /// Bind a set of weight files to an artifact: resolves every name in
+    /// the artifact's flattened-parameter list against the union of the
+    /// files and uploads the literals to device buffers once.
+    fn bind_inner(&mut self, artifact: &str, files: &[&str]) -> Result<String> {
+        let key = files.join("+");
+        if self
+            .compiled
+            .get(artifact)
+            .map(|c| c.bindings.contains_key(&key))
+            .unwrap_or(false)
+        {
+            return Ok(key);
+        }
+        self.load_artifact_inner(artifact)?;
+        for f in files {
+            self.ensure_weight_file(f)?;
+        }
+        let meta = self.compiled[artifact].meta.clone();
+        let mut buffers = Vec::with_capacity(meta.params.len());
+        for pname in &meta.params {
+            let mut found = None;
+            for f in files {
+                if let Some(lit) = self.weight_files[*f].get(pname) {
+                    found = Some(lit);
+                    break;
+                }
+            }
+            let lit = found.ok_or_else(|| {
+                anyhow!(
+                    "artifact {artifact}: param '{pname}' not found in \
+                     weight files {files:?}"
+                )
+            })?;
+            let buf = self.client.buffer_from_host_literal(None, lit)?;
+            buffers.push(buf);
+        }
+        self.compiled
+            .get_mut(artifact)
+            .unwrap()
+            .bindings
+            .insert(key.clone(), buffers);
+        Ok(key)
+    }
+
+    /// Raw tuple execution: weights from `binding`, then `inputs`.
+    fn execute(
+        &self,
+        artifact: &str,
+        binding: &str,
+        inputs: &[&Literal],
+    ) -> Result<(Vec<Literal>, f64)> {
+        let c = self
+            .compiled
+            .get(artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact} not loaded"))?;
+        let weights = c
+            .bindings
+            .get(binding)
+            .ok_or_else(|| anyhow!("binding {binding} missing"))?;
+        if c.meta.runtime_inputs.len() != inputs.len() {
+            bail!(
+                "artifact {artifact}: expected {} runtime inputs, got {}",
+                c.meta.runtime_inputs.len(),
+                inputs.len()
+            );
+        }
+        // upload runtime inputs, then run fully on device buffers.
+        // Buffers can't be cheaply cloned; execute_b borrows, so we build
+        // a reference vec over (weights..., uploaded inputs...).
+        let t0 = Instant::now();
+        let uploaded: Vec<PjRtBuffer> = inputs
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<Result<_, _>>()?;
+        let mut refs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(weights.len() + uploaded.len());
+        refs.extend(weights.iter());
+        refs.extend(uploaded.iter());
+        let result = c.exe.execute_b(&refs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        Ok((parts, t0.elapsed().as_secs_f64()))
+    }
+
+    /// `[L, B, C, H_kv, D_h]` shape of a decode artifact's cache input.
+    fn cache_dims(meta: &ArtifactMeta) -> Result<Vec<i64>> {
+        let dims = meta
+            .runtime_inputs
+            .get(2)
+            .map(|(shape, _)| shape.clone())
+            .ok_or_else(|| {
+                anyhow!("artifact {}: no KV cache input", meta.name)
+            })?;
+        Ok(dims.into_iter().map(|d| d as i64).collect())
+    }
+}
+
+impl Engine for ModelRuntime {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_artifact(&mut self, name: &str) -> Result<f64> {
+        self.load_artifact_inner(name)
+    }
+
+    fn bind(&mut self, artifact: &str, files: &[&str]) -> Result<String> {
+        self.bind_inner(artifact, files)
+    }
+
+    fn prefill(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        tokens: &[i32],
+    ) -> Result<PrefillOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        let (b, s) = (meta.batch, meta.seq);
+        if tokens.len() != b * s {
+            bail!(
+                "prefill {artifact}: tokens len {} != {}x{}",
+                tokens.len(),
+                b,
+                s
+            );
+        }
+        let tok = HostTensor::i32("tokens", vec![b as i64, s as i64], tokens)
+            .to_literal()?;
+        let (parts, secs) = self.execute(artifact, binding, &[&tok])?;
+        if parts.len() != 3 {
+            bail!("prefill {artifact}: expected 3 outputs");
+        }
+        let mut it = parts.into_iter();
+        let logits_lit = it.next().unwrap();
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        let logits: Vec<f32> = logits_lit.to_vec()?;
+        let vocab = logits.len() / (b * s);
+        Ok(PrefillOut {
+            logits,
+            batch: b,
+            seq: s,
+            vocab,
+            k_cache: k.to_vec()?,
+            v_cache: v.to_vec()?,
+            exec_secs: secs,
+        })
+    }
+
+    fn decode(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        kv_len: &[i32],
+    ) -> Result<DecodeOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        let b = meta.batch;
+        let dims = Self::cache_dims(&meta)?;
+        let expect: i64 = dims.iter().product();
+        if k_cache.len() as i64 != expect {
+            bail!(
+                "decode {artifact}: cache len {} != {expect}",
+                k_cache.len()
+            );
+        }
+        let tok =
+            HostTensor::i32("token", vec![b as i64], token).to_literal()?;
+        let pos_l =
+            HostTensor::i32("pos", vec![b as i64], pos).to_literal()?;
+        let len_l =
+            HostTensor::i32("kv_len", vec![b as i64], kv_len).to_literal()?;
+        let k_lit = HostTensor::f32("k", dims.clone(), k_cache).to_literal()?;
+        let v_lit = HostTensor::f32("v", dims, v_cache).to_literal()?;
+        let (parts, secs) = self.execute(
+            artifact,
+            binding,
+            &[&tok, &pos_l, &k_lit, &v_lit, &len_l],
+        )?;
+        let mut it = parts.into_iter();
+        let logits_lit = it.next().unwrap();
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        let logits: Vec<f32> = logits_lit.to_vec()?;
+        let vocab = logits.len() / b;
+        Ok(DecodeOut {
+            logits,
+            batch: b,
+            vocab,
+            k_cache: k.to_vec()?,
+            v_cache: v.to_vec()?,
+            exec_secs: secs,
+        })
+    }
+}
+
+// NOTE on device-resident KV (§Perf L3, investigated and rejected):
+// `execute_b` lets inputs stay as PJRT buffers, but this xla crate's
+// execute path returns the whole output TUPLE as a single buffer —
+// splitting it into (logits, k, v) requires `to_literal_sync`, i.e. a
+// full host round-trip anyway, after which the caches must be
+// re-uploaded. The buffer path therefore costs strictly more than the
+// literal path here; the decode KV shuttle stays host-side and is
+// measured in EXPERIMENTS.md §Perf (it is ~1% of decode exec time at
+// this scale).

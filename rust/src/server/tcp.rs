@@ -31,6 +31,9 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .filter_map(|v| v.as_f64())
         .map(|v| v as i32)
         .collect();
+    if prompt.is_empty() {
+        anyhow::bail!("prompt must be a non-empty token array");
+    }
     let max_new = j.req_usize("max_new_tokens").unwrap_or(8);
     let cfg = j
         .get("sparsity")
@@ -178,6 +181,12 @@ mod tests {
         let r = parse_request(r#"{"id": 1, "prompt": [1]}"#).unwrap();
         assert!(r.config.nm.is_none());
         assert_eq!(r.max_new_tokens, 8);
+    }
+
+    #[test]
+    fn parse_request_rejects_empty_prompt() {
+        let e = parse_request(r#"{"id": 1, "prompt": []}"#).unwrap_err();
+        assert!(e.to_string().contains("non-empty"));
     }
 
     #[test]

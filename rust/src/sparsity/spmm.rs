@@ -7,6 +7,13 @@
 //! scaling the hardware SpMM delivers. `cargo bench --bench spmm` measures
 //! dense vs compressed wall-clock across ratios and sizes (PERF row of the
 //! experiment index).
+//!
+//! Bench fairness: [`dense_matmul`] is a *true* dense baseline — it does
+//! the full `t*din*dout` multiply-adds with no zero-skipping, so a pruned
+//! input cannot silently turn the baseline sparse. The zero-skipping
+//! variant lives on as [`dense_matmul_skip_zeros`] (it is what a
+//! scalar-sparse CPU kernel would do), and [`dense_matmul_counted`] pins
+//! the FLOP behavior of both in tests.
 
 use super::mask::nm_mask_scored;
 
@@ -31,6 +38,12 @@ pub struct SpmmStats {
 
 impl NmCompressed {
     /// Compress a dense [t, din] matrix with scored N:M pruning.
+    ///
+    /// # Panics
+    /// With a clear message when the ratio is malformed (`n == 0`,
+    /// `n > m`), when `din` is not a multiple of the group size `m`, or
+    /// when `x` is not `t * din` long — the structural preconditions of
+    /// the hardware SpMM format.
     pub fn compress(
         x: &[f32],
         t: usize,
@@ -39,7 +52,23 @@ impl NmCompressed {
         n: usize,
         m: usize,
     ) -> NmCompressed {
-        assert_eq!(x.len(), t * din);
+        assert!(
+            n >= 1 && n <= m,
+            "compress: malformed N:M ratio {n}:{m} (need 1 <= n <= m)"
+        );
+        assert!(
+            din % m == 0,
+            "compress: din {din} is not divisible by the N:M group \
+             size m = {m}"
+        );
+        assert_eq!(
+            x.len(),
+            t * din,
+            "compress: x has {} elements, expected t*din = {}x{}",
+            x.len(),
+            t,
+            din
+        );
         let groups = din / m;
         let mut values = Vec::with_capacity(t * groups * n);
         let mut index = Vec::with_capacity(t * groups * n);
@@ -112,9 +141,36 @@ impl NmCompressed {
 }
 
 /// Dense reference matmul (row-major x [t, din] @ w [din, dout]), written
-/// with the same axpy loop structure so the bench compares algorithms, not
-/// loop orders.
+/// with the same axpy loop structure as the compressed kernel so the
+/// bench compares algorithms, not loop orders. Performs the full
+/// `t*din*dout` multiply-adds unconditionally — zeros in `x` are
+/// multiplied like any other value, exactly as a dense MXU would.
 pub fn dense_matmul(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * dout];
+    for r in 0..t {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let xrow = &x[r * din..(r + 1) * din];
+        for (c, &v) in xrow.iter().enumerate() {
+            let wrow = &w[c * dout..(c + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += v * wv;
+            }
+        }
+    }
+    out
+}
+
+/// The scalar-sparse variant of [`dense_matmul`]: skips zero input
+/// channels. On a pruned input this does only the surviving fraction of
+/// the work — useful as a *third* bench series (what a branchy CPU kernel
+/// achieves without the compressed format), but NOT a dense baseline.
+pub fn dense_matmul_skip_zeros(
     x: &[f32],
     t: usize,
     din: usize,
@@ -136,6 +192,38 @@ pub fn dense_matmul(
         }
     }
     out
+}
+
+/// Instrumented matmul pinning FLOP behavior: returns the output plus the
+/// number of multiply-add row operations actually executed (`din`-axis
+/// channels x `dout` each). With `skip_zeros == false` this is always
+/// `t * din`, regardless of how sparse `x` is — the regression contract
+/// that keeps the dense bench baseline honest.
+pub fn dense_matmul_counted(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    skip_zeros: bool,
+) -> (Vec<f32>, u64) {
+    let mut out = vec![0.0f32; t * dout];
+    let mut rows_touched = 0u64;
+    for r in 0..t {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let xrow = &x[r * din..(r + 1) * din];
+        for (c, &v) in xrow.iter().enumerate() {
+            if skip_zeros && v == 0.0 {
+                continue;
+            }
+            rows_touched += 1;
+            let wrow = &w[c * dout..(c + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += v * wv;
+            }
+        }
+    }
+    (out, rows_touched)
 }
 
 #[cfg(test)]
@@ -187,5 +275,57 @@ mod tests {
         };
         let s = c.stats(10);
         assert_eq!(s.sparse_flops * 2, s.dense_flops);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by the N:M group")]
+    fn compress_rejects_ragged_din() {
+        // din = 10 is not a multiple of m = 4: must fail up front with a
+        // clear message, not deep inside the mask kernel
+        let x = vec![1.0f32; 2 * 10];
+        NmCompressed::compress(&x, 2, 10, &[], 2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed N:M ratio")]
+    fn compress_rejects_n_above_m() {
+        let x = vec![1.0f32; 8];
+        NmCompressed::compress(&x, 1, 8, &[], 6, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "malformed N:M ratio")]
+    fn compress_rejects_zero_n() {
+        let x = vec![1.0f32; 8];
+        NmCompressed::compress(&x, 1, 8, &[], 0, 4);
+    }
+
+    #[test]
+    fn dense_baseline_does_full_work_on_pruned_input() {
+        // regression pin for bench fairness: the dense baseline must do
+        // t*din channel-row operations even when the input is N:M-pruned,
+        // while the skip-zeros variant does only the surviving share.
+        let mut rng = Rng::new(9);
+        let (t, din, dout) = (4, 32, 8);
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        let pruned = NmCompressed::compress(&x, t, din, &[], 2, 4)
+            .decompress();
+        let (y_full, ops_full) =
+            dense_matmul_counted(&pruned, t, din, &w, dout, false);
+        let (y_skip, ops_skip) =
+            dense_matmul_counted(&pruned, t, din, &w, dout, true);
+        assert_eq!(ops_full, (t * din) as u64);
+        assert_eq!(ops_skip, (t * din / 2) as u64); // exactly 2:4 survive
+        // same math either way
+        for (a, b) in y_full.iter().zip(y_skip.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // and the public entry points agree with the counted kernel
+        assert_eq!(dense_matmul(&pruned, t, din, &w, dout), y_full);
+        assert_eq!(
+            dense_matmul_skip_zeros(&pruned, t, din, &w, dout),
+            y_skip
+        );
     }
 }

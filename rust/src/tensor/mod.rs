@@ -89,7 +89,8 @@ impl HostTensor {
             .collect())
     }
 
-    /// Convert to a PJRT literal.
+    /// Convert to a PJRT literal (PJRT backend only).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let ty = match self.dtype {
             DType::F32 => xla::ElementType::F32,

@@ -98,6 +98,7 @@ impl Json {
             .ok_or_else(|| anyhow!("'{key}' not a number"))
     }
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -1,8 +1,7 @@
-//! Integration tests over the real artifacts (skipped gracefully when
-//! `make artifacts` hasn't run) + property tests on coordinator
-//! invariants that need no PJRT.
+//! Integration tests over the native execution engine (no artifacts
+//! directory needed — the synthetic inventory serves them) + property
+//! tests on coordinator invariants that need no runtime at all.
 
-use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
@@ -11,34 +10,21 @@ use amber_pruner::coordinator::kv::KvSlots;
 use amber_pruner::coordinator::request::{Request, SparsityConfig, Tracked};
 use amber_pruner::coordinator::scheduler::{Engine, EngineConfig};
 use amber_pruner::metrics::EngineMetrics;
-use amber_pruner::runtime::ModelRuntime;
+use amber_pruner::runtime::{Engine as ExecEngine, NativeEngine};
 use amber_pruner::sparsity::mask;
 use amber_pruner::sparsity::policy::Setting;
 use amber_pruner::testutil::prop::{prop_check, Gen};
 use amber_pruner::util::rng::Rng;
 
-fn artifacts() -> Option<PathBuf> {
-    let p = Path::new("artifacts");
-    if p.join("manifest.json").exists() {
-        Some(p.to_path_buf())
-    } else {
-        eprintln!("integration: artifacts/ missing; skipping PJRT tests");
-        None
-    }
-}
-
-// ----------------------------------------------------------------- PJRT
+// -------------------------------------------------------- native engine
 
 #[test]
-fn manifest_artifacts_compile_and_run() {
-    let Some(dir) = artifacts() else { return };
-    let mut rt = ModelRuntime::new(&dir).unwrap();
+fn synthetic_inventory_prefills() {
+    let mut rt = NativeEngine::tiny();
     let art = "tiny-lm-a.prefill64.dense";
-    if !rt.manifest.artifacts.contains_key(art) {
-        return;
-    }
+    assert!(rt.manifest().artifacts.contains_key(art));
     let binding = rt.bind(art, &["tiny-lm-a.atw"]).unwrap();
-    let meta = rt.manifest.artifact(art).unwrap().clone();
+    let meta = rt.manifest().artifact(art).unwrap().clone();
     let tokens: Vec<i32> =
         (0..meta.batch * meta.seq).map(|i| 1 + (i as i32 % 300)).collect();
     let out = rt.prefill(art, &binding, &tokens).unwrap();
@@ -50,19 +36,15 @@ fn manifest_artifacts_compile_and_run() {
 fn sparse_artifact_with_dense_aux_matches_dense_artifact() {
     // keep_dense == 1 everywhere must reproduce the dense graph exactly
     // (the contract that lets one nm executable serve dense requests).
-    let Some(dir) = artifacts() else { return };
-    let mut rt = ModelRuntime::new(&dir).unwrap();
+    let mut rt = NativeEngine::tiny();
     let nm_art = "tiny-lm-a.prefill64.nm2_4";
-    if !rt.manifest.artifacts.contains_key(nm_art) {
-        return;
-    }
     let b_dense = rt
         .bind("tiny-lm-a.prefill64.dense", &["tiny-lm-a.atw"])
         .unwrap();
     let b_nm = rt
         .bind(nm_art, &["tiny-lm-a.atw", "tiny-lm-a.aux_dense.atw"])
         .unwrap();
-    let meta = rt.manifest.artifact(nm_art).unwrap().clone();
+    let meta = rt.manifest().artifact(nm_art).unwrap().clone();
     let tokens: Vec<i32> =
         (0..meta.batch * meta.seq).map(|i| 1 + (i as i32 % 300)).collect();
     let a = rt
@@ -80,8 +62,7 @@ fn sparse_artifact_with_dense_aux_matches_dense_artifact() {
 
 #[test]
 fn engine_serves_mixed_sparsity_requests() {
-    let Some(dir) = artifacts() else { return };
-    let rt = ModelRuntime::new(&dir).unwrap();
+    let rt = Box::new(NativeEngine::tiny());
     let metrics = Arc::new(EngineMetrics::new());
     let mut engine = Engine::new(
         rt,
@@ -131,9 +112,13 @@ fn engine_serves_mixed_sparsity_requests() {
         assert!(r.ttft_secs >= 0.0 && r.e2e_secs >= r.ttft_secs);
     }
     engine.kv_invariants().unwrap();
+    // sparse requests actually went through the pruned path, validly
+    let audit = engine.audit().expect("native engine audits");
+    assert!(audit.pruned_matmuls > 0);
+    assert_eq!(audit.nm_violations, 0);
 }
 
-// ------------------------------------------------- property tests (no PJRT)
+// ------------------------------------------- property tests (no runtime)
 
 #[test]
 fn prop_nm_mask_is_exact_and_scored() {

@@ -1,0 +1,148 @@
+//! Property tests for the N:M kernel contract (ISSUE 1 satellite):
+//! the laws every pruning path must satisfy, checked over >= 100 random
+//! cases per invariant across the 2:4 / 4:8 / 8:16 ratios with random
+//! t / din / dout / scale draws.
+//!
+//! 1. `nm_mask_scored` keeps exactly n channels per m-group;
+//! 2. `decompress(compress(x)) == nm_prune(x)` (bit-exact);
+//! 3. `NmCompressed::matmul == dense_matmul` on the pruned input
+//!    within 1e-4;
+//! 4. `validate_nm` holds after every prune path.
+
+use amber_pruner::sparsity::mask::{nm_mask_scored, nm_prune, validate_nm};
+use amber_pruner::sparsity::spmm::{dense_matmul, NmCompressed};
+use amber_pruner::testutil::prop::{prop_check, Gen};
+use amber_pruner::util::rng::Rng;
+
+const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
+
+/// Random (t, din, scale, x) tuple for one ratio; din is a multiple of m.
+fn gen_case(
+    rng: &mut Rng,
+    size: usize,
+    m: usize,
+) -> (usize, usize, Vec<f32>, Vec<f32>) {
+    let t = Gen::usize(rng, 1, 1 + size % 8);
+    let groups = Gen::usize(rng, 1, 1 + size % 6);
+    let din = groups * m;
+    let x = Gen::f32_vec(rng, t * din, 2.0);
+    // scale: empty (naive magnitude) half the time, else random positive
+    let scale: Vec<f32> = if rng.bool(0.5) {
+        Vec::new()
+    } else {
+        (0..din).map(|_| rng.f32() * 3.0 + 0.05).collect()
+    };
+    (t, din, scale, x)
+}
+
+#[test]
+fn prop_mask_keeps_exactly_n_per_group() {
+    prop_check("mask-exactly-n-per-group", 150, |rng, size| {
+        let &(n, m) = Gen::choice(rng, &RATIOS);
+        let (t, din, scale, x) = gen_case(rng, size, m);
+        for r in 0..t {
+            let row = &x[r * din..(r + 1) * din];
+            let mask = nm_mask_scored(row, &scale, n, m);
+            for (g, chunk) in mask.chunks_exact(m).enumerate() {
+                let kept = chunk.iter().filter(|k| **k).count();
+                if kept != n {
+                    return Err(format!(
+                        "row {r} group {g}: kept {kept} != n {n} \
+                         (ratio {n}:{m})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decompress_compress_equals_prune() {
+    prop_check("decompress-compress-eq-prune", 150, |rng, size| {
+        let &(n, m) = Gen::choice(rng, &RATIOS);
+        let (t, din, scale, x) = gen_case(rng, size, m);
+        let c = NmCompressed::compress(&x, t, din, &scale, n, m);
+        let round = c.decompress();
+        for r in 0..t {
+            let want = nm_prune(&x[r * din..(r + 1) * din], &scale, n, m);
+            let got = &round[r * din..(r + 1) * din];
+            if got != &want[..] {
+                return Err(format!(
+                    "row {r} roundtrip mismatch at ratio {n}:{m}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compressed_matmul_equals_dense_on_pruned() {
+    prop_check("spmm-eq-dense-on-pruned", 120, |rng, size| {
+        let &(n, m) = Gen::choice(rng, &RATIOS);
+        let (t, din, scale, x) = gen_case(rng, size, m);
+        let dout = Gen::usize(rng, 1, 4 + size);
+        let w = Gen::f32_vec(rng, din * dout, 1.0);
+        let c = NmCompressed::compress(&x, t, din, &scale, n, m);
+        let y_sparse = c.matmul(&w, dout);
+        let y_dense = dense_matmul(&c.decompress(), t, din, &w, dout);
+        for (i, (a, b)) in y_sparse.iter().zip(y_dense.iter()).enumerate()
+        {
+            if (a - b).abs() >= 1e-4 {
+                return Err(format!(
+                    "elem {i}: sparse {a} vs dense {b} at ratio {n}:{m} \
+                     (t={t} din={din} dout={dout})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_validate_nm_holds_after_every_prune_path() {
+    prop_check("validate-nm-after-prune", 150, |rng, size| {
+        let &(n, m) = Gen::choice(rng, &RATIOS);
+        let (t, din, scale, x) = gen_case(rng, size, m);
+        // path 1: nm_prune
+        for r in 0..t {
+            let pruned = nm_prune(&x[r * din..(r + 1) * din], &scale, n, m);
+            if !validate_nm(&pruned, n, m) {
+                return Err(format!("nm_prune row {r} violates {n}:{m}"));
+            }
+        }
+        // path 2: compress -> decompress
+        let c = NmCompressed::compress(&x, t, din, &scale, n, m);
+        for (r, row) in c.decompress().chunks_exact(din).enumerate() {
+            if !validate_nm(row, n, m) {
+                return Err(format!("compress row {r} violates {n}:{m}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scale_reweights_but_preserves_structure() {
+    // scored selection changes WHICH channels survive, never HOW MANY
+    prop_check("scale-preserves-structure", 100, |rng, size| {
+        let &(n, m) = Gen::choice(rng, &RATIOS);
+        let (_, din, _, _) = gen_case(rng, size, m);
+        let x = Gen::f32_vec(rng, din, 1.0);
+        let scale: Vec<f32> =
+            (0..din).map(|_| rng.f32() * 10.0 + 0.01).collect();
+        let naive = nm_prune(&x, &[], n, m);
+        let scored = nm_prune(&x, &scale, n, m);
+        if !validate_nm(&naive, n, m) || !validate_nm(&scored, n, m) {
+            return Err(format!("structure broken at {n}:{m}"));
+        }
+        // every kept value must be an original value
+        for (a, b) in x.iter().zip(scored.iter()) {
+            if *b != 0.0 && a != b {
+                return Err("scored pruning altered a kept value".into());
+            }
+        }
+        Ok(())
+    });
+}

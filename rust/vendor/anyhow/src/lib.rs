@@ -1,0 +1,146 @@
+//! Offline shim of the `anyhow` API surface used by `amber_pruner`.
+//!
+//! The build environment has no crates.io access, so this path-vendored
+//! crate supplies the subset the codebase relies on: `Result`/`Error`,
+//! the `anyhow!` and `bail!` macros, and the `Context` extension trait
+//! over `Result` and `Option`. Error chains are flattened into one
+//! message string ("context: cause"), which is what the callers format
+//! with `{e}` / `{e:#}` anyway. Swapping back to the real crate is a
+//! one-line change in Cargo.toml; no call sites change.
+
+use std::fmt;
+
+/// `anyhow::Result`, with the same default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A flattened error: the full "context: cause" chain in one string.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer, outermost first (anyhow convention).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the flattened chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: like the real anyhow::Error, this type deliberately does NOT
+// implement std::error::Error — that is what makes the blanket From
+// impl below coherent (no overlap with `impl From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include one level of source, which covers the io::Error-style
+        // wrappers this crate encounters
+        match e.source() {
+            Some(src) => Error { msg: format!("{e}: {src}") },
+            None => Error::msg(&e),
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!(fmt, ...)` — construct an `Error` from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!(fmt, ...)` — early-return an `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/\u{0}")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_layers_prepend() {
+        let r: Result<(), Error> = Err(anyhow!("inner {}", 3));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 3");
+        let o: Option<u32> = None;
+        let e2 = o.with_context(|| "missing").unwrap_err();
+        assert_eq!(e2.to_string(), "missing");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("nope {x}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope true");
+    }
+}
