@@ -5,24 +5,26 @@
 //! model and the native spmm bench report the isolated mechanism
 //! (§Perf L2/L3).
 //!
+//! The batched section drives the token-packed pipeline across
+//! tokens x {dense, 2:4, 4:8, 8:16} x pool width and emits
+//! machine-readable results to `BENCH_prefill.json` (written next to the
+//! package manifest when run via `cargo bench --bench prefill_latency`) —
+//! the perf baseline future PRs regress against.
+//!
 //! Runs out of the box: without an `artifacts/` manifest the native
 //! engine serves its synthetic inventory.
 
+use std::collections::BTreeMap;
+
 use amber_pruner::bench::bench;
 use amber_pruner::runtime::{engine_for, Engine as _};
+use amber_pruner::util::json::Json;
 
-fn main() {
-    let dir = std::path::Path::new("artifacts");
-    let mut rt = match engine_for(dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("prefill_latency: engine unavailable: {e}");
-            return;
-        }
-    };
-    let model = "tiny-lm-a";
-    let weights = format!("{model}.atw");
-    let prefill_art = format!("{model}.prefill64.dense");
+const MODEL: &str = "tiny-lm-a";
+
+fn artifact_section(rt: &mut Box<dyn amber_pruner::runtime::Engine>) {
+    let weights = format!("{MODEL}.atw");
+    let prefill_art = format!("{MODEL}.prefill64.dense");
     let Some(meta) = rt.manifest().artifacts.get(&prefill_art).cloned()
     else {
         println!("prefill_latency: {prefill_art} not in manifest");
@@ -35,17 +37,17 @@ fn main() {
     let mut variants: Vec<(String, Vec<String>)> =
         vec![(prefill_art.clone(), vec![weights.clone()])];
     for (n, m) in [(2, 4), (4, 8), (8, 16)] {
-        let art = format!("{model}.prefill64.nm{n}_{m}");
+        let art = format!("{MODEL}.prefill64.nm{n}_{m}");
         if rt.manifest().artifacts.contains_key(&art) {
             variants.push((
                 art,
-                vec![weights.clone(), format!("{model}.aux_ls.atw")],
+                vec![weights.clone(), format!("{MODEL}.aux_ls.atw")],
             ));
         }
     }
-    let sq = format!("{model}.prefill64.sq");
+    let sq = format!("{MODEL}.prefill64.sq");
     if rt.manifest().artifacts.contains_key(&sq) {
-        variants.push((sq, vec![format!("{model}.sq.atw")]));
+        variants.push((sq, vec![format!("{MODEL}.sq.atw")]));
     }
 
     println!("== prefill latency (batch {b} x seq {s}) ==");
@@ -73,7 +75,7 @@ fn main() {
     }
 
     // decode step latency (the TPOT floor)
-    let dec = format!("{model}.decode.dense");
+    let dec = format!("{MODEL}.decode.dense");
     if rt.manifest().artifacts.contains_key(&dec) {
         let binding = rt.bind(&dec, &[&weights]).expect("bind decode");
         let dmeta = rt.manifest().artifact(&dec).unwrap().clone();
@@ -90,4 +92,109 @@ fn main() {
                 .expect("decode");
         });
     }
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Batched token-packed prefill: tokens x variant x pool width, emitted
+/// to BENCH_prefill.json.
+fn batched_section() {
+    let dir = std::path::Path::new("artifacts");
+    let seq = 64usize;
+    let weights = format!("{MODEL}.atw");
+    let mut results: Vec<Json> = Vec::new();
+    println!("== batched packed prefill (seq {seq} per request) ==");
+    for &pool in &[1usize, 4] {
+        let mut rt = match engine_for(dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                println!("batched: engine unavailable: {e}");
+                return;
+            }
+        };
+        rt.set_parallelism(pool);
+        let mut dense_med: BTreeMap<usize, f64> = BTreeMap::new();
+        for variant in ["dense", "nm2_4", "nm4_8", "nm8_16"] {
+            let art = format!("{MODEL}.prefill{seq}.{variant}");
+            if !rt.manifest().artifacts.contains_key(&art) {
+                println!("skip {art}: not in manifest");
+                continue;
+            }
+            let files: Vec<String> = if variant == "dense" {
+                vec![weights.clone()]
+            } else {
+                vec![weights.clone(), format!("{MODEL}.aux_ls.atw")]
+            };
+            let refs: Vec<&str> =
+                files.iter().map(|s| s.as_str()).collect();
+            let binding = rt.bind(&art, &refs).expect("bind");
+            for &tokens in &[64usize, 256, 1024] {
+                let n_req = tokens / seq;
+                let prompts: Vec<Vec<i32>> = (0..n_req)
+                    .map(|r| {
+                        (0..seq)
+                            .map(|i| 1 + ((r * seq + i) % 300) as i32)
+                            .collect()
+                    })
+                    .collect();
+                let name =
+                    format!("packed.{variant}.t{tokens}.pool{pool}");
+                let r = bench(&name, 2, 10, Some(tokens as u64), || {
+                    rt.prefill_packed(&art, &binding, &prompts)
+                        .expect("packed prefill");
+                });
+                let speedup = if variant == "dense" {
+                    dense_med.insert(tokens, r.median_secs);
+                    1.0
+                } else {
+                    dense_med
+                        .get(&tokens)
+                        .map(|d| d / r.median_secs)
+                        .unwrap_or(0.0)
+                };
+                if variant != "dense" && speedup > 0.0 {
+                    println!("    -> vs dense: {speedup:.2}x");
+                }
+                let mut o = BTreeMap::new();
+                o.insert("variant".into(), Json::Str(variant.into()));
+                o.insert("tokens".into(), num(tokens as f64));
+                o.insert("pool".into(), num(pool as f64));
+                o.insert("requests".into(), num(n_req as f64));
+                o.insert("median_secs".into(), num(r.median_secs));
+                o.insert("mean_secs".into(), num(r.mean_secs));
+                o.insert("p95_secs".into(), num(r.p95_secs));
+                o.insert(
+                    "toks_per_sec".into(),
+                    num(r.throughput.unwrap_or(0.0)),
+                );
+                o.insert("speedup_vs_dense".into(), num(speedup));
+                results.push(Json::Obj(o));
+            }
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("batched_prefill".into()));
+    root.insert("model".into(), Json::Str(MODEL.into()));
+    root.insert("seq_per_request".into(), num(seq as f64));
+    root.insert("results".into(), Json::Arr(results));
+    let path = "BENCH_prefill.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = match engine_for(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("prefill_latency: engine unavailable: {e}");
+            return;
+        }
+    };
+    artifact_section(&mut rt);
+    batched_section();
 }

@@ -40,9 +40,53 @@ impl PrefillQueues {
         self.waiting() == 0
     }
 
-    /// Pick the bucket to prefill next: a full batch if any bucket has
-    /// one; otherwise the bucket with the oldest head *if* it exceeded
-    /// max_wait or the engine is otherwise idle (`idle == true`).
+    /// The shared bucket-selection policy: a "full" bucket if any
+    /// (per the caller's capacity rule), otherwise the bucket with the
+    /// oldest head *if* it exceeded max_wait or the engine is otherwise
+    /// idle (`idle == true`).
+    fn select_bucket<F: Fn(&VecDeque<Tracked>) -> bool>(
+        &self,
+        is_full: F,
+        idle: bool,
+        now: Instant,
+    ) -> Option<ConfigKey> {
+        let full = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty() && is_full(q))
+            .map(|(k, _)| k.clone())
+            .next();
+        if full.is_some() {
+            return full;
+        }
+        let (k, q) = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(_, q)| q.front().unwrap().arrived)?;
+        let age = now
+            .duration_since(q.front().unwrap().arrived)
+            .as_secs_f64();
+        if idle || age >= self.max_wait_secs {
+            Some(k.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Drain the first `n` requests of `key`'s bucket, dropping the
+    /// bucket when emptied.
+    fn drain_bucket(&mut self, key: ConfigKey, n: usize)
+                    -> (ConfigKey, Vec<Tracked>) {
+        let q = self.queues.get_mut(&key).unwrap();
+        let batch: Vec<Tracked> = q.drain(..n.min(q.len())).collect();
+        if q.is_empty() {
+            self.queues.remove(&key);
+        }
+        (key, batch)
+    }
+
+    /// Pick the bucket to prefill next (see [`Self::select_bucket`]).
     /// Returns up to `free_slots.min(max_batch)` requests.
     pub fn next_batch(
         &mut self,
@@ -54,44 +98,60 @@ impl PrefillQueues {
         if cap == 0 {
             return None;
         }
-        // full batch available?
-        let full = self
-            .queues
-            .iter()
-            .filter(|(_, q)| q.len() >= cap)
-            .map(|(k, _)| k.clone())
-            .next();
-        let key = match full {
-            Some(k) => Some(k),
-            None => {
-                // oldest head across buckets
-                let oldest = self
-                    .queues
-                    .iter()
-                    .filter(|(_, q)| !q.is_empty())
-                    .min_by_key(|(_, q)| q.front().unwrap().arrived);
-                match oldest {
-                    Some((k, q)) => {
-                        let age = now
-                            .duration_since(q.front().unwrap().arrived)
-                            .as_secs_f64();
-                        if idle || age >= self.max_wait_secs {
-                            Some(k.clone())
-                        } else {
-                            None
-                        }
-                    }
-                    None => None,
+        let key = self.select_bucket(|q| q.len() >= cap, idle, now)?;
+        Some(self.drain_bucket(key, cap))
+    }
+
+    /// Token-packed variant of [`PrefillQueues::next_batch`]: the bucket
+    /// is chosen by the same policy ([`Self::select_bucket`]), but the
+    /// batch is cut by a *token* budget rather than a fixed request
+    /// count — each request contributes `min(prompt_len, seq).max(1)`
+    /// packed tokens, so short prompts can pack more than `max_batch`
+    /// requests (up to `free_slots`) into the same kernel budget and
+    /// long prompts fewer. A bucket counts as "full" once it can fill
+    /// the token budget, `max_batch` requests, or every free slot.
+    pub fn next_packed_batch(
+        &mut self,
+        free_slots: usize,
+        seq: usize,
+        max_tokens: usize,
+        idle: bool,
+        now: Instant,
+    ) -> Option<(ConfigKey, Vec<Tracked>)> {
+        if free_slots == 0 || max_tokens == 0 {
+            return None;
+        }
+        let full_at = self.max_batch.min(free_slots).max(1);
+        let packable = |q: &VecDeque<Tracked>| -> (usize, usize) {
+            let mut toks = 0usize;
+            let mut n = 0usize;
+            for t in q.iter() {
+                if n >= free_slots {
+                    break;
+                }
+                let tk = t.req.prompt.len().min(seq).max(1);
+                // always take at least one request per batch
+                if n > 0 && toks + tk > max_tokens {
+                    break;
+                }
+                toks += tk;
+                n += 1;
+                if toks >= max_tokens {
+                    break;
                 }
             }
-        }?;
-        let q = self.queues.get_mut(&key).unwrap();
-        let n = q.len().min(cap);
-        let batch: Vec<Tracked> = q.drain(..n).collect();
-        if q.is_empty() {
-            self.queues.remove(&key);
-        }
-        Some((key, batch))
+            (n, toks)
+        };
+        let key = self.select_bucket(
+            |q| {
+                let (n, toks) = packable(q);
+                n >= full_at || toks >= max_tokens
+            },
+            idle,
+            now,
+        )?;
+        let (n, _) = packable(&self.queues[&key]);
+        Some(self.drain_bucket(key, n))
     }
 }
 
@@ -135,12 +195,12 @@ mod tests {
     use crate::sparsity::policy::Setting;
     use std::sync::mpsc::channel;
 
-    fn tracked(id: u64) -> Tracked {
+    fn tracked_len(id: u64, prompt_len: usize) -> Tracked {
         let (tx, _rx) = channel();
         Tracked {
             req: super::super::request::Request {
                 id,
-                prompt: vec![1, 2],
+                prompt: vec![1; prompt_len.max(1)],
                 max_new_tokens: 4,
                 config: SparsityConfig::dense(),
             },
@@ -149,6 +209,10 @@ mod tests {
             generated: vec![],
             reply: tx,
         }
+    }
+
+    fn tracked(id: u64) -> Tracked {
+        tracked_len(id, 2)
     }
 
     #[test]
@@ -180,6 +244,71 @@ mod tests {
         assert_eq!(batch.len(), 3);
         assert_eq!(q.waiting(), 2);
         assert!(q.next_batch(0, true, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn packed_batch_packs_short_prompts_beyond_max_batch() {
+        // max_batch 2, but five 2-token prompts fit the 64-token budget
+        // and the 8 free slots: the packed batch takes all five
+        let mut q = PrefillQueues::new(2, 10.0);
+        for i in 0..5 {
+            q.push(ConfigKey("a".into()), tracked_len(i, 2));
+        }
+        let (_, batch) = q
+            .next_packed_batch(8, 64, 64, true, Instant::now())
+            .expect("batch");
+        assert_eq!(batch.len(), 5);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn packed_batch_cuts_on_token_budget() {
+        // 40-token prompts against a 64-token budget: one per batch
+        // (the first request is always taken)
+        let mut q = PrefillQueues::new(8, 10.0);
+        for i in 0..3 {
+            q.push(ConfigKey("a".into()), tracked_len(i, 40));
+        }
+        let now = Instant::now();
+        let (_, b1) = q.next_packed_batch(8, 64, 64, true, now).unwrap();
+        assert_eq!(b1.len(), 1);
+        assert_eq!(b1[0].req.id, 0);
+        let (_, b2) = q.next_packed_batch(8, 64, 64, true, now).unwrap();
+        assert_eq!(b2.len(), 1);
+        assert_eq!(b2[0].req.id, 1);
+        assert_eq!(q.waiting(), 1);
+        // prompt lengths clamp to seq: two 40-token prompts at seq 16
+        // cost 16 each and pack together under the 64-token budget
+        let mut q2 = PrefillQueues::new(8, 10.0);
+        for i in 0..2 {
+            q2.push(ConfigKey("a".into()), tracked_len(i, 40));
+        }
+        let (_, b3) = q2.next_packed_batch(8, 16, 64, true, now).unwrap();
+        assert_eq!(b3.len(), 2);
+    }
+
+    #[test]
+    fn packed_batch_respects_free_slots_and_wait_policy() {
+        let mut q = PrefillQueues::new(4, 10.0);
+        for i in 0..6 {
+            q.push(ConfigKey("a".into()), tracked_len(i, 2));
+        }
+        let now = Instant::now();
+        // only 3 free slots: batch caps there even with token budget left
+        let (_, b) = q.next_packed_batch(3, 64, 256, true, now).unwrap();
+        assert_eq!(b.len(), 3);
+        // remaining 3 < max_batch and under budget: not a full bucket,
+        // so nothing is cut while busy & young...
+        assert!(q.next_packed_batch(8, 64, 256, false, now).is_none());
+        // ...but an idle engine flushes them all
+        let (_, b2) = q.next_packed_batch(8, 64, 256, true, now).unwrap();
+        assert_eq!(b2.len(), 3);
+        // a lone young request is not flushed while busy...
+        q.push(ConfigKey("a".into()), tracked_len(9, 2));
+        assert!(q.next_packed_batch(8, 64, 256, false, now).is_none());
+        // ...but is when idle
+        assert!(q.next_packed_batch(8, 64, 256, true, now).is_some());
+        assert!(q.next_packed_batch(0, 64, 256, true, now).is_none());
     }
 
     #[test]

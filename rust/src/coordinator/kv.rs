@@ -79,6 +79,11 @@ impl KvSlots {
     /// Claim a free slot for sequence `seq_id`, scattering its prefill
     /// KV rows (row `src_row` of a [L, B_pre, S, H, D] prefill cache) into
     /// the slot and zeroing the tail.
+    ///
+    /// The padded layout is the packed layout with `pre_batch * seq_len`
+    /// total rows and this request's rows starting at `src_row * seq_len`,
+    /// so this delegates to [`KvSlots::admit_packed`] — one copy of the
+    /// slot-claim / tail-zero logic.
     #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &mut self,
@@ -90,6 +95,30 @@ impl KvSlots {
         seq_len: usize,
         valid_len: usize,
     ) -> Result<usize> {
+        self.admit_packed(
+            seq_id,
+            prefill_k,
+            prefill_v,
+            src_row * seq_len,
+            pre_batch * seq_len,
+            valid_len,
+        )
+    }
+
+    /// Claim a free slot from a token-packed prefill cache
+    /// `[L, total_tokens, H, D]`: this sequence's K/V occupy rows
+    /// `start .. start + valid_len` of every layer. The slot tail is
+    /// zeroed: decode's one-hot write ADDS, so stale values at positions
+    /// >= valid_len would corrupt the cache.
+    pub fn admit_packed(
+        &mut self,
+        seq_id: u64,
+        packed_k: &[f32],
+        packed_v: &[f32],
+        start: usize,
+        total_tokens: usize,
+        valid_len: usize,
+    ) -> Result<usize> {
         let slot = match self.state.iter().position(|s| *s == SlotState::Free)
         {
             Some(s) => s,
@@ -99,20 +128,23 @@ impl KvSlots {
             bail!("prefill length {valid_len} exceeds cache {}",
                   self.cache_len);
         }
+        if start + valid_len > total_tokens {
+            bail!(
+                "packed rows {start}..{} exceed batch of {total_tokens}",
+                start + valid_len
+            );
+        }
         let row_sz = self.kv_heads * self.head_dim;
-        let pre_layer_stride = pre_batch * seq_len * row_sz;
-        let pre_row_stride = seq_len * row_sz;
         let slot_stride = self.slot_stride();
         for l in 0..self.n_layers {
             let dst_base = l * self.layer_stride() + slot * slot_stride;
-            let src_base = l * pre_layer_stride + src_row * pre_row_stride;
+            let src_base = (l * total_tokens + start) * row_sz;
             let n = valid_len * row_sz;
             self.k[dst_base..dst_base + n]
-                .copy_from_slice(&prefill_k[src_base..src_base + n]);
+                .copy_from_slice(&packed_k[src_base..src_base + n]);
             self.v[dst_base..dst_base + n]
-                .copy_from_slice(&prefill_v[src_base..src_base + n]);
-            // zero the tail: decode's one-hot write ADDS, so stale values
-            // at positions >= valid_len would corrupt the cache.
+                .copy_from_slice(&packed_v[src_base..src_base + n]);
+            // zero the tail (see the doc comment above)
             self.k[dst_base + n..dst_base + slot_stride].fill(0.0);
             self.v[dst_base + n..dst_base + slot_stride].fill(0.0);
         }
@@ -200,6 +232,53 @@ mod tests {
         kv.release(slot);
         assert_eq!(kv.free_slots(), 3);
         kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_packed_matches_padded_admit() {
+        // the same rows staged through [L, B, S, H, D] and through the
+        // packed [L, total, H, D] layout must land identically
+        let (l, b, s, hd) = (2usize, 2usize, 4usize, 4usize);
+        let pre: Vec<f32> =
+            (0..l * b * s * hd).map(|i| i as f32).collect();
+        // packed layout: request 0 = 3 rows, request 1 = 4 rows
+        let lens = [3usize, 4usize];
+        let total: usize = lens.iter().sum();
+        let mut packed = vec![0.0f32; l * total * hd];
+        for li in 0..l {
+            let mut row = 0usize;
+            for (bi, &len) in lens.iter().enumerate() {
+                let src = (li * b + bi) * s * hd;
+                let dst = (li * total + row) * hd;
+                packed[dst..dst + len * hd]
+                    .copy_from_slice(&pre[src..src + len * hd]);
+                row += len;
+            }
+        }
+        let mut kv_a = mk();
+        let mut kv_b = mk();
+        for (bi, &len) in lens.iter().enumerate() {
+            let sa = kv_a
+                .admit(bi as u64, &pre, &pre, bi, b, s, len)
+                .unwrap();
+            let start: usize = lens[..bi].iter().sum();
+            let sb = kv_b
+                .admit_packed(
+                    bi as u64, &packed, &packed, start, total, len,
+                )
+                .unwrap();
+            assert_eq!(sa, sb);
+        }
+        assert_eq!(kv_a.k, kv_b.k);
+        assert_eq!(kv_a.len, kv_b.len);
+        kv_b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_packed_rejects_out_of_range_rows() {
+        let mut kv = mk();
+        let packed = vec![0.5f32; 2 * 6 * 4];
+        assert!(kv.admit_packed(1, &packed, &packed, 4, 6, 4).is_err());
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct EngineConfig {
     /// stop after this many completed requests (0 = run until channel
     /// closes)
     pub run_until: usize,
+    /// width of the execution backend's projection thread pool (the
+    /// engine owns the pool; 1 = serial). Defaults to the host's
+    /// available parallelism, capped at 8 — results are bit-identical
+    /// at every width (see the batch-parity suite).
+    pub pool_threads: usize,
 }
 
 impl EngineConfig {
@@ -47,8 +52,16 @@ impl EngineConfig {
             prefill_seq: 64,
             max_wait_secs: 0.005,
             run_until: 0,
+            pool_threads: default_pool_threads(),
         }
     }
+}
+
+fn default_pool_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
 }
 
 pub enum EngineMsg {
@@ -83,10 +96,13 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(
-        rt: Box<dyn ExecEngine>,
+        mut rt: Box<dyn ExecEngine>,
         cfg: EngineConfig,
         metrics: Arc<EngineMetrics>,
     ) -> Result<Engine> {
+        // the engine owns one projection pool; its width comes from the
+        // coordinator config and reaches every batched kernel
+        rt.set_parallelism(cfg.pool_threads);
         // geometry from the manifest
         let model = rt
             .manifest()
@@ -195,9 +211,17 @@ impl Engine {
     pub fn step(&mut self) -> Result<bool> {
         let idle = self.active.is_empty();
         let now = Instant::now();
-        if let Some((key, batch)) =
-            self.queues.next_batch(self.kv.free_slots(), idle, now)
-        {
+        // token-packed batching: the budget is the prefill artifact's
+        // static token capacity (batch x seq), but short prompts can
+        // pack more requests than the static batch into it
+        let budget = self.queues.max_batch * self.cfg.prefill_seq;
+        if let Some((key, batch)) = self.queues.next_packed_batch(
+            self.kv.free_slots(),
+            self.cfg.prefill_seq,
+            budget,
+            idle,
+            now,
+        ) {
             self.run_prefill(&key, batch)?;
             return Ok(true);
         }
@@ -214,8 +238,6 @@ impl Engine {
         mut batch: Vec<Tracked>,
     ) -> Result<()> {
         let artifact = key.0.clone();
-        let meta = self.rt.manifest().artifact(&artifact)?.clone();
-        let (b, s) = (meta.batch, meta.seq);
         // weights binding comes from the first request's config (all
         // requests in a bucket share it by construction)
         let cfg0 = batch[0].req.config;
@@ -226,30 +248,31 @@ impl Engine {
         let dec_files = vec![file_refs[0]];
         let dec_binding = self.rt.bind(&decode_artifact, &dec_files)?;
 
-        // pack tokens (right-pad rows; unused rows stay PAD)
-        let mut tokens = vec![PAD; b * s];
-        let mut lens = vec![0usize; batch.len()];
-        for (i, t) in batch.iter().enumerate() {
-            let p = &t.req.prompt;
-            let n = p.len().min(s);
-            tokens[i * s..i * s + n].copy_from_slice(&p[..n]);
-            // an empty prompt (rejected at the TCP layer, but defend the
-            // engine too) scores its first token from the PAD at pos 0
-            // instead of underflowing `lens[i] - 1` below
-            lens[i] = n.max(1);
-            EngineMetrics::inc(&self.metrics.prefill_tokens, n as u64);
-        }
+        // token-packed submission: each request's prompt rides verbatim
+        // (the engine clamps to the artifact seq); no PAD rows between
+        // requests, so the batch reaches the kernel as one
+        // [total_tokens, d] matrix
+        let prompts: Vec<Vec<i32>> =
+            batch.iter().map(|t| t.req.prompt.clone()).collect();
+        let out = self.rt.prefill_packed(&artifact, &binding, &prompts)?;
+        let total = out.total_tokens();
+        EngineMetrics::inc(&self.metrics.prefill_tokens, total as u64);
+        // 0 on the native shape-flexible pipeline; the real padding cost
+        // on backends using the pad-and-gather default path (PJRT)
         EngineMetrics::inc(
             &self.metrics.padded_prefill_tokens,
-            (b * s) as u64 - lens.iter().sum::<usize>() as u64,
+            out.padded_tokens as u64,
         );
-        let out = self.rt.prefill(&artifact, &binding, &tokens)?;
         EngineMetrics::inc(&self.metrics.prefill_batches, 1);
         let now = Instant::now();
+        let mut start = 0usize; // packed row offset of request i
         for (i, mut t) in batch.drain(..).enumerate() {
-            // greedy first token from the last prompt position
-            let row = &out.logits[(i * s + lens[i] - 1) * out.vocab
-                ..(i * s + lens[i]) * out.vocab];
+            let len = out.lens[i];
+            // greedy first token from the last prompt position (an empty
+            // prompt — rejected at the TCP layer, but defend the engine
+            // too — occupies one PAD row and scores from it)
+            let row = &out.logits
+                [(start + len - 1) * out.vocab..(start + len) * out.vocab];
             let first = argmax(row) as i32;
             t.first_token_at = Some(now);
             self.metrics
@@ -259,17 +282,17 @@ impl Engine {
             // block-granular admission accounting: reserve the sequence's
             // worst-case footprint (prompt + full generation budget)
             self.pool
-                .allocate(id, lens[i] + t.req.max_new_tokens)
+                .allocate(id, len + t.req.max_new_tokens)
                 .ok();
-            let slot = self.kv.admit(
+            let slot = self.kv.admit_packed(
                 id,
                 &out.k_cache,
                 &out.v_cache,
-                i,
-                b,
-                s,
-                lens[i],
+                start,
+                total,
+                len,
             )?;
+            start += len;
             self.active.insert(
                 id,
                 ActiveSeq {

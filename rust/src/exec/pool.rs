@@ -2,8 +2,17 @@
 //!
 //! The serving coordinator uses explicit threads (client simulation, TCP
 //! acceptor, engine loop); the pool covers fan-out work such as parallel
-//! artifact compilation and workload generation.
+//! artifact compilation, workload generation and — since the batched
+//! prefill pipeline — the row-tile fan-out of `NmCompressedBatch` /
+//! `dense_matmul_parallel` (the native engine owns one pool and hands it
+//! to every projection kernel).
+//!
+//! Panic safety: a panicking job is caught inside the worker (the worker
+//! thread survives and keeps draining the queue), and [`ThreadPool::map`]
+//! re-raises the failure on the *calling* thread after every item has
+//! settled — loud, and never a deadlock.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -26,9 +35,15 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
+                        // the lock guard is dropped before the job runs,
+                        // so a panicking job can never poison the shared
+                        // receiver; catching the panic keeps this worker
+                        // alive for subsequent jobs.
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break,
                         }
                     })
@@ -36,6 +51,11 @@ impl ThreadPool {
             })
             .collect();
         ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -46,30 +66,55 @@ impl ThreadPool {
             .expect("pool receiver gone");
     }
 
-    /// Run `f` over all items, collecting results in order.
+    /// Run `f` over all items, collecting results **in input order**
+    /// (result `i` always corresponds to `items[i]`, however the pool
+    /// interleaves execution — the guarantee the batched SpMM tiling
+    /// relies on). An empty `items` returns an empty vec immediately.
+    ///
+    /// # Panics
+    /// If any item's `f` panics, every remaining item still runs to
+    /// completion and `map` then panics on the calling thread with the
+    /// indices of the failed items. The pool itself stays usable.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
         let f = Arc::new(f);
         let (tx, rx) = mpsc::channel();
-        let n = items.len();
         for (i, item) in items.into_iter().enumerate() {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.submit(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
                 let _ = tx.send((i, r));
             });
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut failed: Vec<usize> = Vec::new();
         for (i, r) in rx {
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(_) => failed.push(i),
+            }
         }
-        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+        if !failed.is_empty() {
+            failed.sort_unstable();
+            panic!(
+                "ThreadPool::map: {} of {n} item(s) panicked \
+                 (indices {failed:?})",
+                failed.len()
+            );
+        }
+        out.into_iter()
+            .map(|r| r.expect("map result missing"))
+            .collect()
     }
 }
 
@@ -103,8 +148,58 @@ mod tests {
 
     #[test]
     fn map_preserves_order() {
-        let pool = ThreadPool::new(3);
-        let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * 2);
-        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+        // the in-order-collection guarantee: result i belongs to item i
+        // for every pool width, including width 1
+        for width in [1, 3, 7] {
+            let pool = ThreadPool::new(width);
+            let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * 2);
+            assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_empty_items_returns_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+        // and the pool is still alive afterwards
+        assert_eq!(pool.map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn panicking_map_item_fails_loudly_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0u32, 1, 2, 3], |x| {
+                if x == 2 {
+                    panic!("boom");
+                }
+                x * 10
+            })
+        }));
+        let msg = match r {
+            Ok(_) => panic!("map must propagate the item panic"),
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+        };
+        assert!(msg.contains("panicked"), "unhelpful message: {msg}");
+        assert!(msg.contains("[2]"), "missing failed index: {msg}");
+        // the pool survived: workers did not die, nothing deadlocks
+        assert_eq!(pool.map(vec![5, 6], |x| x + 1), vec![6, 7]);
+    }
+
+    #[test]
+    fn panicking_submitted_job_does_not_kill_workers() {
+        let pool = ThreadPool::new(1); // single worker: it MUST survive
+        pool.submit(|| panic!("raw job panic"));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 }

@@ -16,7 +16,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use super::artifact::Manifest;
 
@@ -33,6 +33,37 @@ pub struct PrefillOut {
     pub exec_secs: f64,
 }
 
+/// Output of one token-packed prefill execution: `prompts.len()`
+/// requests laid out back-to-back with **no padding rows** — request `i`
+/// owns rows `row_start(i) .. row_start(i) + lens[i]`.
+pub struct PackedPrefillOut {
+    /// `[total_tokens, vocab]`, row-major
+    pub logits: Vec<f32>,
+    /// per-request token counts after clamping to the artifact's seq
+    pub lens: Vec<usize>,
+    pub vocab: usize,
+    /// `[L, total_tokens, H_kv, D_h]`
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+    /// PAD-row tokens the backend actually computed to serve this batch:
+    /// 0 on a shape-flexible pipeline (native), the full right-padding
+    /// cost on the pad-and-gather default path — keeps the coordinator's
+    /// padding metric honest across backends
+    pub padded_tokens: usize,
+    pub exec_secs: f64,
+}
+
+impl PackedPrefillOut {
+    pub fn total_tokens(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// First token row of request `i` in the packed layout.
+    pub fn row_start(&self, i: usize) -> usize {
+        self.lens[..i].iter().sum()
+    }
+}
+
 /// Output of one decode step.
 pub struct DecodeOut {
     /// `[batch, vocab]`
@@ -44,6 +75,41 @@ pub struct DecodeOut {
     pub k_cache: Vec<f32>,
     pub v_cache: Vec<f32>,
     pub exec_secs: f64,
+}
+
+/// The projection module types the audit attributes FLOPs to:
+/// [`crate::sparsity::policy::MODULES`] plus the lm_head.
+pub const AUDIT_MODULES: [&str; 8] = [
+    "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj",
+    "down_proj", "lm_head",
+];
+
+/// Index of a module name in [`AUDIT_MODULES`].
+pub fn audit_module_index(name: &str) -> Option<usize> {
+    AUDIT_MODULES.iter().position(|m| *m == name)
+}
+
+/// Per-projection-module share of the audit.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ModuleAudit {
+    pub pruned_matmuls: u64,
+    pub dense_matmuls: u64,
+    pub dense_flops: u64,
+    pub sparse_flops: u64,
+    /// dense-equivalent FLOPs of the matmuls that went through the N:M
+    /// path (the paper's "computation accelerated" numerator)
+    pub covered_flops: u64,
+}
+
+impl ModuleAudit {
+    /// Fraction of this module's dense-equivalent FLOPs that went
+    /// through the N:M path at all (coverage, not savings).
+    pub fn coverage_frac(&self) -> f64 {
+        if self.dense_flops == 0 {
+            return 0.0;
+        }
+        self.covered_flops as f64 / self.dense_flops as f64
+    }
 }
 
 /// Running account of how much linear compute went through the sparse
@@ -67,6 +133,9 @@ pub struct SparsityAudit {
     /// projections where pruning was requested but fell back to dense
     /// because `din % m != 0` (should stay 0 on sane geometry)
     pub pruned_fallbacks: u64,
+    /// per-module breakdown over [`AUDIT_MODULES`] — the packed-batch
+    /// per-projection coverage report
+    pub per_module: [ModuleAudit; 8],
 }
 
 impl SparsityAudit {
@@ -76,6 +145,43 @@ impl SparsityAudit {
             return 0.0;
         }
         1.0 - self.sparse_flops as f64 / self.dense_flops as f64
+    }
+
+    /// Record one projection that ran through the N:M path.
+    pub fn record_pruned(
+        &mut self,
+        module: &str,
+        dense_flops: u64,
+        sparse_flops: u64,
+    ) {
+        self.pruned_matmuls += 1;
+        self.dense_flops += dense_flops;
+        self.sparse_flops += sparse_flops;
+        if let Some(mi) = audit_module_index(module) {
+            let m = &mut self.per_module[mi];
+            m.pruned_matmuls += 1;
+            m.dense_flops += dense_flops;
+            m.sparse_flops += sparse_flops;
+            m.covered_flops += dense_flops;
+        }
+    }
+
+    /// Record one projection that executed densely.
+    pub fn record_dense(&mut self, module: &str, flops: u64) {
+        self.dense_matmuls += 1;
+        self.dense_flops += flops;
+        self.sparse_flops += flops;
+        if let Some(mi) = audit_module_index(module) {
+            let m = &mut self.per_module[mi];
+            m.dense_matmuls += 1;
+            m.dense_flops += flops;
+            m.sparse_flops += flops;
+        }
+    }
+
+    /// Per-module audit entry by name.
+    pub fn module(&self, name: &str) -> Option<&ModuleAudit> {
+        audit_module_index(name).map(|mi| &self.per_module[mi])
     }
 }
 
@@ -103,6 +209,113 @@ pub trait Engine {
         binding: &str,
         tokens: &[i32],
     ) -> Result<PrefillOut>;
+
+    /// Run a prefill over a token-packed multi-request batch: no padding
+    /// rows between requests, arbitrary per-request lengths (clamped to
+    /// the artifact's seq). The default implementation right-pads into
+    /// the artifact's static `[batch, seq]` shape — chunking when more
+    /// requests arrive than the static batch holds — runs [`Engine::prefill`],
+    /// and gathers the valid rows back into the packed layout, so every
+    /// backend supports the packed calling convention; backends with a
+    /// genuinely shape-flexible pipeline (the native engine) override it
+    /// and skip the padding work entirely.
+    fn prefill_packed(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        prompts: &[Vec<i32>],
+    ) -> Result<PackedPrefillOut> {
+        let meta = self.manifest().artifact(artifact)?.clone();
+        if meta.kind != "prefill" {
+            bail!("artifact {artifact} is not a prefill artifact");
+        }
+        let (b, s) = (meta.batch, meta.seq);
+        if b == 0 || s == 0 {
+            bail!("prefill {artifact}: degenerate shape {b}x{s}");
+        }
+        if prompts.is_empty() {
+            bail!("prefill_packed {artifact}: empty batch");
+        }
+        // model geometry for the KV gather
+        let model_name = artifact.split('.').next().unwrap_or(artifact);
+        let (layers, kvd) = {
+            let info =
+                self.manifest().models.get(model_name).ok_or_else(|| {
+                    anyhow!(
+                        "artifact {artifact}: model '{model_name}' not in \
+                         manifest"
+                    )
+                })?;
+            let g = |k: &str| info.config.get(k).copied().unwrap_or(0);
+            (g("n_layers"), g("n_kv_heads") * g("head_dim"))
+        };
+        if layers == 0 || kvd == 0 {
+            bail!(
+                "prefill_packed {artifact}: packed KV gather needs \
+                 n_layers/n_kv_heads/head_dim in the manifest config"
+            );
+        }
+        // empty prompts still occupy one (PAD) token row, mirroring the
+        // scheduler's defensive clamping
+        let lens: Vec<usize> =
+            prompts.iter().map(|p| p.len().min(s).max(1)).collect();
+        let total: usize = lens.iter().sum();
+        let mut logits: Vec<f32> = Vec::new();
+        let mut k_cache: Vec<f32> = Vec::new();
+        let mut v_cache: Vec<f32> = Vec::new();
+        let mut vocab = 0usize;
+        let mut exec_secs = 0.0;
+        let mut padded_tokens = 0usize;
+        let mut start = 0usize; // packed row offset of the chunk head
+        for (ci, chunk) in prompts.chunks(b).enumerate() {
+            let clens = &lens[ci * b..ci * b + chunk.len()];
+            padded_tokens += b * s - clens.iter().sum::<usize>();
+            let mut tokens = vec![0i32; b * s];
+            for (j, p) in chunk.iter().enumerate() {
+                let n = p.len().min(s);
+                tokens[j * s..j * s + n].copy_from_slice(&p[..n]);
+            }
+            let out = self.prefill(artifact, binding, &tokens)?;
+            exec_secs += out.exec_secs;
+            if vocab == 0 {
+                vocab = out.vocab;
+                logits = vec![0.0; total * vocab];
+                k_cache = vec![0.0; layers * total * kvd];
+                v_cache = vec![0.0; layers * total * kvd];
+            }
+            let mut row = start;
+            for (j, &len) in clens.iter().enumerate() {
+                logits[row * vocab..(row + len) * vocab].copy_from_slice(
+                    &out.logits[j * s * vocab..(j * s + len) * vocab],
+                );
+                for l in 0..layers {
+                    let src = (l * b + j) * s * kvd;
+                    let dst = (l * total + row) * kvd;
+                    k_cache[dst..dst + len * kvd].copy_from_slice(
+                        &out.k_cache[src..src + len * kvd],
+                    );
+                    v_cache[dst..dst + len * kvd].copy_from_slice(
+                        &out.v_cache[src..src + len * kvd],
+                    );
+                }
+                row += len;
+            }
+            start = row;
+        }
+        Ok(PackedPrefillOut {
+            logits,
+            lens,
+            vocab,
+            k_cache,
+            v_cache,
+            padded_tokens,
+            exec_secs,
+        })
+    }
+
+    /// Hint the backend's intra-op parallelism (projection thread-pool
+    /// width). Backends without an internal pool ignore it.
+    fn set_parallelism(&mut self, _threads: usize) {}
 
     /// Advance every batch row one decode step. `pos[i]` is the cache
     /// position the new token is written at; `kv_len[i]` the attention

@@ -3,9 +3,12 @@
 //!
 //! * `engine`   — the trait, the host-side `PrefillOut`/`DecodeOut`
 //!                types, and the `SparsityAudit` accounting
-//! * `native`   — the default pure-Rust CPU backend (`NativeEngine`):
-//!                N:M-sparse prefill through `sparsity::spmm`, W8A8
-//!                through `quant`, no external dependencies
+//! * `native`   — the default pure-Rust CPU backend (`NativeEngine`), a
+//!                module tree (`model`/`layers`/`prefill`/`decode`): the
+//!                batched, thread-pool-parallel projection pipeline with
+//!                N:M-sparse prefill through `sparsity::spmm`, per-prefill
+//!                `sparsity::plan::SparsityPlan`s, W8A8 through `quant`,
+//!                no external dependencies
 //! * `artifact` — manifest.json parsing (shared by both backends)
 //! * `pjrt`     — the PJRT/XLA backend over AOT HLO artifacts produced
 //!                by `python/compile/aot.py`; opt-in via the `pjrt`
@@ -18,7 +21,10 @@ pub mod native;
 pub mod pjrt;
 
 pub use artifact::{ArtifactMeta, Manifest};
-pub use engine::{engine_for, DecodeOut, Engine, PrefillOut, SparsityAudit};
+pub use engine::{
+    engine_for, DecodeOut, Engine, ModuleAudit, PackedPrefillOut,
+    PrefillOut, SparsityAudit,
+};
 pub use native::{ModelSpec, NativeEngine};
 #[cfg(feature = "pjrt")]
 pub use pjrt::ModelRuntime;

@@ -1,0 +1,149 @@
+//! One dense decode step over the slot cache (the paper confines
+//! sparsity to prefill; decode is always dense / W8A8).
+
+use crate::runtime::engine::SparsityAudit;
+use crate::sparsity::plan::SparsityPlan;
+
+use super::layers::{rmsnorm, silu, softmax_inplace, ExecOpts, ProjKind};
+use super::model::NativeModel;
+
+impl NativeModel {
+    /// Advance every batch row one decode step against `[L, B, C, H, D]`
+    /// caches. Projections run through the same [`super::layers::Projection`]
+    /// steps as prefill, under the all-dense plan.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+        kv_len: &[i32],
+        cache: usize,
+        quantized: bool,
+        block_rows: usize,
+        audit: &mut SparsityAudit,
+    ) -> Vec<f32> {
+        let sp = &self.spec;
+        let b = token.len();
+        let (d, qd, kvd) = (sp.d_model, sp.q_dim(), sp.kv_dim());
+        let dh = sp.head_dim;
+        let group = sp.n_q_heads / sp.n_kv_heads;
+        let dense_plan = SparsityPlan::dense(sp.n_layers);
+        let opts =
+            ExecOpts::new(&dense_plan, quantized, false, None, block_rows);
+        let mut x = self.embed_tokens(token);
+        for (l, lw) in self.layers.iter().enumerate() {
+            let h = rmsnorm(&x, b, d, &lw.attn_norm);
+            let q = lw.projection(ProjKind::Q, sp).run(&h, b, l, &opts, audit);
+            let k = lw.projection(ProjKind::K, sp).run(&h, b, l, &opts, audit);
+            let v = lw.projection(ProjKind::V, sp).run(&h, b, l, &opts, audit);
+            let mut attn = vec![0.0f32; b * qd];
+            for bi in 0..b {
+                let p = (pos[bi].max(0) as usize).min(cache - 1);
+                let span = (kv_len[bi].max(1) as usize).min(cache);
+                // write this step's K/V at the row's position (assign,
+                // not accumulate — stale slot data is harmless)
+                let slot = ((l * b + bi) * cache + p) * kvd;
+                k_cache[slot..slot + kvd]
+                    .copy_from_slice(&k[bi * kvd..(bi + 1) * kvd]);
+                v_cache[slot..slot + kvd]
+                    .copy_from_slice(&v[bi * kvd..(bi + 1) * kvd]);
+                for hq in 0..sp.n_q_heads {
+                    let kvh = hq / group;
+                    let qrow = &q[bi * qd + hq * dh..bi * qd + (hq + 1) * dh];
+                    let mut scores = vec![0.0f32; span];
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        let kr = ((l * b + bi) * cache + j) * kvd + kvh * dh;
+                        let krow = &k_cache[kr..kr + dh];
+                        let dot: f32 = qrow
+                            .iter()
+                            .zip(krow.iter())
+                            .map(|(a, c)| a * c)
+                            .sum();
+                        *sc = dot / (dh as f32).sqrt();
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = &mut attn
+                        [bi * qd + hq * dh..bi * qd + (hq + 1) * dh];
+                    for (j, &wgt) in scores.iter().enumerate() {
+                        let vr = ((l * b + bi) * cache + j) * kvd + kvh * dh;
+                        for (oe, &ve) in
+                            orow.iter_mut().zip(v_cache[vr..vr + dh].iter())
+                        {
+                            *oe += wgt * ve;
+                        }
+                    }
+                }
+            }
+            let o =
+                lw.projection(ProjKind::O, sp).run(&attn, b, l, &opts, audit);
+            for (xi, oi) in x.iter_mut().zip(o.iter()) {
+                *xi += oi;
+            }
+            let h2 = rmsnorm(&x, b, d, &lw.mlp_norm);
+            let gate =
+                lw.projection(ProjKind::Gate, sp).run(&h2, b, l, &opts, audit);
+            let up =
+                lw.projection(ProjKind::Up, sp).run(&h2, b, l, &opts, audit);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down =
+                lw.projection(ProjKind::Down, sp).run(&act, b, l, &opts, audit);
+            for (xi, di) in x.iter_mut().zip(down.iter()) {
+                *xi += di;
+            }
+        }
+        self.logits(&x, b, None, block_rows, audit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime::engine::Engine;
+    use crate::runtime::native::testsupport::{small_spec, tokens_for};
+    use crate::runtime::native::NativeEngine;
+
+    #[test]
+    fn decode_continues_from_prefill_cache() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let art = "tiny-lm-a.prefill16.dense";
+        let bind = e.bind(art, &["tiny-lm-a.atw"]).unwrap();
+        let toks = tokens_for(2, 16);
+        let out = e.prefill(art, &bind, &toks).unwrap();
+        // scatter prefill row 0 into a fresh decode cache
+        let spec = e.model("tiny-lm-a").unwrap().spec.clone();
+        let (l, b, c, kvd) =
+            (spec.n_layers, spec.decode_batch, spec.cache_len, spec.kv_dim());
+        let plen = 5usize;
+        let mut kc = vec![0.0f32; l * b * c * kvd];
+        let mut vc = vec![0.0f32; l * b * c * kvd];
+        for li in 0..l {
+            let src = (li * 2 * 16) * kvd; // prefill [L, 2, 16, kvd]
+            let dst = (li * b * c) * kvd;
+            kc[dst..dst + plen * kvd]
+                .copy_from_slice(&out.k_cache[src..src + plen * kvd]);
+            vc[dst..dst + plen * kvd]
+                .copy_from_slice(&out.v_cache[src..src + plen * kvd]);
+        }
+        let dec = "tiny-lm-a.decode.dense";
+        let dbind = e.bind(dec, &["tiny-lm-a.atw"]).unwrap();
+        let mut token = vec![0i32; b];
+        token[0] = 7;
+        let mut pos = vec![0i32; b];
+        pos[0] = plen as i32;
+        let mut kv_len = vec![1i32; b];
+        kv_len[0] = (plen + 1) as i32;
+        let d = e
+            .decode(dec, &dbind, &token, &pos, &kc, &vc, &kv_len)
+            .unwrap();
+        assert_eq!(d.logits.len(), b * 384);
+        assert!(d.logits.iter().all(|v| v.is_finite()));
+        // the new K/V landed at position plen of slot 0
+        let slot = plen * kvd;
+        assert!(d.k_cache[slot..slot + kvd].iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,0 +1,370 @@
+//! The projection-step layer of the native pipeline.
+//!
+//! A transformer block is executed as a sequence of [`Projection`] steps
+//! (q/k/v/o, gate/up/down, lm_head) instead of inline matmul code: each
+//! step resolves its [`ProjPolicy`] from the prefill's [`SparsityPlan`],
+//! dispatches to the batched dense or block-compressed N:M kernel
+//! (optionally fanned out over the engine [`ThreadPool`]), validates
+//! pruned activations, and attributes FLOPs to its module in the
+//! [`SparsityAudit`] — one place for the policy/kernel/audit plumbing
+//! the old monolith re-derived at every call site.
+
+use crate::exec::ThreadPool;
+use crate::quant;
+use crate::runtime::engine::SparsityAudit;
+use crate::sparsity::mask::validate_nm;
+use crate::sparsity::plan::SparsityPlan;
+use crate::sparsity::spmm::{
+    dense_matmul, dense_matmul_parallel, NmCompressedBatch,
+};
+
+use std::sync::Arc;
+
+use super::model::{LayerWeights, ModelSpec, NativeModel};
+
+/// Execution knobs shared by every projection of one forward pass.
+pub(super) struct ExecOpts<'a> {
+    pub plan: &'a SparsityPlan,
+    /// W8A8 (Outstanding-sparse) reference path
+    pub quantized: bool,
+    /// run `validate_nm` on every pruned activation
+    pub validate: bool,
+    /// row-tile fan-out pool; `None` = serial (bit-identical either way)
+    pub pool: Option<&'a ThreadPool>,
+    /// row-tile height for the batched kernels
+    pub block_rows: usize,
+}
+
+impl<'a> ExecOpts<'a> {
+    pub(super) fn new(
+        plan: &'a SparsityPlan,
+        quantized: bool,
+        validate: bool,
+        pool: Option<&'a ThreadPool>,
+        block_rows: usize,
+    ) -> ExecOpts<'a> {
+        ExecOpts {
+            plan,
+            quantized,
+            validate,
+            pool,
+            block_rows: block_rows.max(1),
+        }
+    }
+}
+
+/// The seven per-layer projection slots (plus the lm_head, built ad hoc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum ProjKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+/// One linear projection step: which policy module it resolves against,
+/// its `[din, dout]` weight, and the optional Robust-Norm channel scores.
+pub(super) struct Projection<'m> {
+    pub module: &'static str,
+    pub w: &'m Arc<Vec<f32>>,
+    pub din: usize,
+    pub dout: usize,
+    pub scale: Option<&'m [f32]>,
+}
+
+impl LayerWeights {
+    /// The projection step for one slot of this layer.
+    pub(super) fn projection<'m>(
+        &'m self,
+        kind: ProjKind,
+        sp: &ModelSpec,
+    ) -> Projection<'m> {
+        let (d, qd, kvd, f) =
+            (sp.d_model, sp.q_dim(), sp.kv_dim(), sp.d_ff);
+        match kind {
+            ProjKind::Q => Projection {
+                module: "q_proj",
+                w: &self.wq,
+                din: d,
+                dout: qd,
+                scale: Some(&self.scale_q),
+            },
+            ProjKind::K => Projection {
+                module: "k_proj",
+                w: &self.wk,
+                din: d,
+                dout: kvd,
+                scale: None,
+            },
+            ProjKind::V => Projection {
+                module: "v_proj",
+                w: &self.wv,
+                din: d,
+                dout: kvd,
+                scale: None,
+            },
+            ProjKind::O => Projection {
+                module: "o_proj",
+                w: &self.wo,
+                din: qd,
+                dout: d,
+                scale: None,
+            },
+            ProjKind::Gate => Projection {
+                module: "gate_proj",
+                w: &self.w_gate,
+                din: d,
+                dout: f,
+                scale: Some(&self.scale_gate),
+            },
+            ProjKind::Up => Projection {
+                module: "up_proj",
+                w: &self.w_up,
+                din: d,
+                dout: f,
+                scale: None,
+            },
+            ProjKind::Down => Projection {
+                module: "down_proj",
+                w: &self.w_down,
+                din: f,
+                dout: d,
+                scale: Some(&self.scale_down),
+            },
+        }
+    }
+}
+
+impl<'m> Projection<'m> {
+    /// Execute this step over `[t, din]` activations under the plan's
+    /// policy for (`layer`, module). Pruned activations are validated
+    /// against the exact-N:M contract and accounted per module.
+    pub(super) fn run(
+        &self,
+        x: &[f32],
+        t: usize,
+        layer: usize,
+        opts: &ExecOpts<'_>,
+        audit: &mut SparsityAudit,
+    ) -> Vec<f32> {
+        let policy = opts.plan.policy(layer, self.module);
+        match policy.nm {
+            Some((n, m)) if self.din % m == 0 => {
+                let scale: &[f32] = if policy.scored {
+                    self.scale.unwrap_or(&[])
+                } else {
+                    &[]
+                };
+                let c = NmCompressedBatch::compress(
+                    x,
+                    t,
+                    self.din,
+                    scale,
+                    n,
+                    m,
+                    opts.block_rows,
+                );
+                let st = c.stats(self.dout);
+                audit.record_pruned(
+                    self.module,
+                    st.dense_flops,
+                    st.sparse_flops,
+                );
+                // decompress at most once, shared by validation and the
+                // int8 reference path
+                let pruned_dense = if opts.validate || opts.quantized {
+                    Some(c.decompress())
+                } else {
+                    None
+                };
+                if let Some(pd) = &pruned_dense {
+                    if opts.validate {
+                        audit.nm_checks += 1;
+                        for row in pd.chunks_exact(self.din) {
+                            if !validate_nm(row, n, m) {
+                                audit.nm_violations += 1;
+                            }
+                        }
+                    }
+                }
+                if opts.quantized {
+                    // NOTE: the int8 reference executes dense-shaped work
+                    // over the pruned input; the audit still records n/m
+                    // sparse FLOPs — the SpMM-hardware cost model (see
+                    // SparsityAudit docs)
+                    w8a8_dense(
+                        pruned_dense.as_deref().unwrap(),
+                        t,
+                        self.din,
+                        self.w,
+                        self.dout,
+                    )
+                } else {
+                    match opts.pool {
+                        Some(pool) => {
+                            c.matmul_parallel(self.w, self.dout, pool)
+                        }
+                        None => c.matmul(self.w, self.dout),
+                    }
+                }
+            }
+            other => {
+                if other.is_some() {
+                    // pruning was requested but din is not a multiple of
+                    // m: execute dense and record the fallback loudly
+                    audit.pruned_fallbacks += 1;
+                }
+                audit.record_dense(
+                    self.module,
+                    2 * (t * self.din * self.dout) as u64,
+                );
+                if opts.quantized {
+                    w8a8_dense(x, t, self.din, self.w, self.dout)
+                } else {
+                    match opts.pool {
+                        Some(pool) => dense_matmul_parallel(
+                            x,
+                            t,
+                            self.din,
+                            self.w,
+                            self.dout,
+                            pool,
+                            opts.block_rows,
+                        ),
+                        None => {
+                            dense_matmul(x, t, self.din, self.w, self.dout)
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// W8A8 reference path: per-tensor activation scale, per-channel weight
+/// scales. Weights are quantized per call — at native-model sizes this is
+/// noise next to the matmul itself.
+fn w8a8_dense(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    let (wq, ws) = quant::quantize_weight(w, din, dout);
+    let absmax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    let xs = (absmax / 127.0).max(1e-8);
+    let xq = quant::quantize(x, xs);
+    quant::w8a8_matmul(&xq, t, din, &wq, dout, xs, &ws)
+}
+
+pub(super) fn rmsnorm(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    for r in 0..t {
+        let row = &x[r * d..(r + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for j in 0..d {
+            out[r * d + j] = row[j] * inv * w[j];
+        }
+    }
+    out
+}
+
+pub(super) fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+pub(super) fn softmax_inplace(scores: &mut [f32]) {
+    let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - mx).exp();
+        denom += *s;
+    }
+    let inv = 1.0 / denom.max(1e-30);
+    for s in scores.iter_mut() {
+        *s *= inv;
+    }
+}
+
+/// Causal GQA attention over token-packed segments: `segs` lists each
+/// request's `(start_row, len)` in the packed `[total, *]` activation;
+/// every token attends to its own segment's prefix only. A right-padded
+/// `[b, s]` batch is the special case `segs = [(0,s), (s,s), ...]`, which
+/// reproduces the pre-refactor per-batch-row attention bit-for-bit.
+pub(super) fn causal_attention_segments(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    segs: &[(usize, usize)],
+    sp: &ModelSpec,
+) -> Vec<f32> {
+    let (qd, kvd, dh) = (sp.q_dim(), sp.kv_dim(), sp.head_dim);
+    let group = sp.n_q_heads / sp.n_kv_heads;
+    let inv_sqrt = 1.0 / (dh as f32).sqrt();
+    let total = q.len() / qd;
+    let max_len = segs.iter().map(|&(_, l)| l).max().unwrap_or(0);
+    let mut out = vec![0.0f32; total * qd];
+    let mut scores = vec![0.0f32; max_len];
+    for &(start, len) in segs {
+        for p in 0..len {
+            let qbase = (start + p) * qd;
+            for hq in 0..sp.n_q_heads {
+                let kvh = hq / group;
+                let qrow = &q[qbase + hq * dh..qbase + (hq + 1) * dh];
+                for (j, sc) in scores.iter_mut().take(p + 1).enumerate() {
+                    let kr = (start + j) * kvd + kvh * dh;
+                    let krow = &k[kr..kr + dh];
+                    let dot: f32 = qrow
+                        .iter()
+                        .zip(krow.iter())
+                        .map(|(a, c)| a * c)
+                        .sum();
+                    *sc = dot * inv_sqrt;
+                }
+                softmax_inplace(&mut scores[..p + 1]);
+                let orow =
+                    &mut out[qbase + hq * dh..qbase + (hq + 1) * dh];
+                for (j, &wgt) in scores[..p + 1].iter().enumerate() {
+                    let vr = (start + j) * kvd + kvh * dh;
+                    for (oe, &ve) in orow.iter_mut().zip(v[vr..vr + dh].iter())
+                    {
+                        *oe += wgt * ve;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl NativeModel {
+    /// Final norm + lm_head logits. The lm_head always runs dense f32
+    /// (never quantized, never pruned, never validated) — the same
+    /// special case as the pre-refactor `logits` helper.
+    pub(super) fn logits(
+        &self,
+        x: &[f32],
+        t: usize,
+        pool: Option<&ThreadPool>,
+        block_rows: usize,
+        audit: &mut SparsityAudit,
+    ) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let h = rmsnorm(x, t, d, &self.final_norm);
+        let dense_plan = SparsityPlan::dense(0);
+        let opts = ExecOpts::new(&dense_plan, false, false, pool, block_rows);
+        let head = Projection {
+            module: "lm_head",
+            w: &self.lm_head,
+            din: d,
+            dout: self.spec.vocab,
+            scale: None,
+        };
+        head.run(&h, t, 0, &opts, audit)
+    }
+}

@@ -1,0 +1,489 @@
+//! `NativeEngine` — pure-Rust CPU execution of the serving path.
+//!
+//! The default backend: no PJRT, no XLA, no network. It executes a small
+//! decoder-only transformer (GQA attention + SwiGLU MLP, RMSNorm, no
+//! positional encoding — causality alone breaks symmetry at this scale)
+//! as a composable prefill pipeline:
+//!
+//! * `model`   — [`ModelSpec`] geometry + deterministically synthesized
+//!               weights (`Arc`-shared for the tile fan-out)
+//! * `layers`  — the [`layers::Projection`] step abstraction: policy
+//!               resolution from a [`SparsityPlan`], batched dense /
+//!               block-compressed N:M kernels, W8A8, per-module audit
+//! * `prefill` — one forward pass over a token-packed segment batch
+//!               (right-padded `[b, s]` prefill is the equal-segment
+//!               special case)
+//! * `decode`  — the dense decode step over KV slot caches
+//!
+//! Per-request N:M configs arrive exactly as they do on the PJRT path:
+//! the artifact name carries the ratio (`...nm2_4`) and the bound aux
+//! file carries the setting (`naive` / `ls` / `all` / `dense`); the
+//! engine turns them into an explicit [`SparsityPlan`] before anything
+//! touches a kernel. The engine owns one [`ThreadPool`]
+//! ([`Engine::set_parallelism`], driven by the coordinator's
+//! `EngineConfig`) that every projection's row tiles fan out over.
+//!
+//! Weights are synthesized deterministically (seeded by model name), so
+//! the full coordinator stack — router, batcher, scheduler, KV slots,
+//! TCP front-end — runs end-to-end out of the box: with a real
+//! `artifacts/manifest.json` the engine adopts its model geometry and
+//! artifact inventory; without one it serves a self-contained synthetic
+//! inventory. Every pruned activation is checked against `validate_nm`
+//! and accounted in a [`SparsityAudit`].
+
+mod decode;
+mod layers;
+mod model;
+mod prefill;
+
+pub use model::{ModelSpec, NativeModel, RATIOS};
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::Manifest;
+use super::engine::{
+    DecodeOut, Engine, PackedPrefillOut, PrefillOut, SparsityAudit,
+};
+use crate::exec::ThreadPool;
+use crate::sparsity::plan::SparsityPlan;
+use crate::sparsity::policy::Setting;
+use crate::sparsity::spmm::DEFAULT_BLOCK_ROWS;
+use crate::util::json::Json;
+
+use layers::ExecOpts;
+
+/// The native CPU execution engine (see module docs).
+pub struct NativeEngine {
+    manifest: Manifest,
+    models: BTreeMap<String, NativeModel>,
+    /// "artifact::binding-key" -> the per-layer/per-projection plan,
+    /// built once at [`Engine::bind`] time and reused by every prefill
+    /// (the plan carries its [`Setting`])
+    bindings: HashMap<String, Arc<SparsityPlan>>,
+    audit: SparsityAudit,
+    /// run `validate_nm` on every pruned activation (cheap; on by default)
+    pub validate: bool,
+    /// projection fan-out pool; `None` = serial execution
+    pool: Option<Arc<ThreadPool>>,
+    /// row-tile height for the batched kernels
+    pub block_rows: usize,
+}
+
+impl NativeEngine {
+    /// Engine over an artifacts directory: adopts `manifest.json` when
+    /// present, otherwise serves the self-contained synthetic inventory.
+    pub fn from_dir(dir: &Path) -> Result<NativeEngine> {
+        if dir.join("manifest.json").exists() {
+            let manifest = Manifest::load(dir)?;
+            let models = manifest
+                .models
+                .values()
+                .map(|info| {
+                    let spec = ModelSpec::from_manifest(info, &manifest, dir);
+                    (info.name.clone(), NativeModel::build(spec))
+                })
+                .collect();
+            Ok(NativeEngine::assemble(manifest, models))
+        } else {
+            Ok(NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")]))
+        }
+    }
+
+    /// Fully self-contained engine from explicit model specs.
+    pub fn synthetic(specs: Vec<ModelSpec>) -> NativeEngine {
+        let specs: Vec<ModelSpec> =
+            specs.into_iter().map(ModelSpec::sanitize).collect();
+        let mut artifacts = BTreeMap::new();
+        let mut models_info = BTreeMap::new();
+        let mut settings = BTreeMap::new();
+        for spec in &specs {
+            spec.manifest_entries(
+                &mut artifacts,
+                &mut models_info,
+                &mut settings,
+            );
+        }
+        let manifest = Manifest {
+            dir: std::path::PathBuf::new(),
+            artifacts,
+            models: models_info,
+            settings,
+            raw: Json::Obj(BTreeMap::new()),
+        };
+        let models = specs
+            .into_iter()
+            .map(|spec| (spec.name.clone(), NativeModel::build(spec)))
+            .collect();
+        NativeEngine::assemble(manifest, models)
+    }
+
+    /// The default synthetic single-model engine.
+    pub fn tiny() -> NativeEngine {
+        NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")])
+    }
+
+    fn assemble(
+        manifest: Manifest,
+        models: BTreeMap<String, NativeModel>,
+    ) -> NativeEngine {
+        NativeEngine {
+            manifest,
+            models,
+            bindings: HashMap::new(),
+            audit: SparsityAudit::default(),
+            validate: true,
+            pool: None,
+            block_rows: DEFAULT_BLOCK_ROWS,
+        }
+    }
+
+    /// Builder-style [`Engine::set_parallelism`].
+    pub fn with_parallelism(mut self, threads: usize) -> NativeEngine {
+        self.set_parallelism(threads);
+        self
+    }
+
+    pub fn reset_audit(&mut self) {
+        self.audit = SparsityAudit::default();
+    }
+
+    pub fn model(&self, name: &str) -> Option<&NativeModel> {
+        self.models.get(name)
+    }
+
+    fn model_for_artifact(&self, artifact: &str) -> Result<&NativeModel> {
+        let model_name = artifact.split('.').next().unwrap_or(artifact);
+        self.models.get(model_name).ok_or_else(|| {
+            anyhow!("artifact {artifact}: model '{model_name}' not loaded")
+        })
+    }
+
+    fn binding_plan(
+        &self,
+        artifact: &str,
+        binding: &str,
+    ) -> Result<&Arc<SparsityPlan>> {
+        self.bindings
+            .get(&binding_key(artifact, binding))
+            .ok_or_else(|| {
+                anyhow!("artifact {artifact}: binding '{binding}' missing")
+            })
+    }
+
+    /// The explicit per-layer/per-projection plan an (artifact, binding)
+    /// pair resolves to — exactly what the kernels execute (prebuilt at
+    /// bind time).
+    pub fn plan_for(
+        &self,
+        artifact: &str,
+        binding: &str,
+    ) -> Result<SparsityPlan> {
+        Ok(self.binding_plan(artifact, binding)?.as_ref().clone())
+    }
+
+    /// Shared prefill execution: resolve the binding's prebuilt plan,
+    /// run the segment pipeline under the engine's pool/audit, and
+    /// return `(logits, k_cache, v_cache, vocab, exec_secs)`. Both
+    /// [`Engine::prefill`] (equal segments) and [`Engine::prefill_packed`]
+    /// funnel through here so the padded and packed paths cannot
+    /// diverge.
+    fn exec_prefill(
+        &mut self,
+        artifact: &str,
+        quantized: bool,
+        binding: &str,
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize, f64)> {
+        let plan = Arc::clone(self.binding_plan(artifact, binding)?);
+        let validate = self.validate;
+        let block_rows = self.block_rows;
+        let pool = self.pool.clone();
+        let mut audit = self.audit;
+        let model = self.model_for_artifact(artifact)?;
+        let opts = ExecOpts {
+            plan: &plan,
+            quantized,
+            validate,
+            pool: pool.as_deref(),
+            block_rows,
+        };
+        let vocab = model.spec.vocab;
+        let t0 = Instant::now();
+        let (logits, k_cache, v_cache) =
+            model.prefill_segments(tokens, lens, &opts, &mut audit);
+        let exec_secs = t0.elapsed().as_secs_f64();
+        self.audit = audit;
+        Ok((logits, k_cache, v_cache, vocab, exec_secs))
+    }
+}
+
+fn binding_key(artifact: &str, binding: &str) -> String {
+    format!("{artifact}::{binding}")
+}
+
+/// Resolve the setting encoded in a bound file list: the aux file name
+/// carries it (`<model>[.sq].aux_<tag>.atw`). N:M artifacts bound with no
+/// aux default to naive magnitude scoring; dense artifacts to dense.
+fn setting_from_files(files: &[&str], is_nm: bool) -> Result<Setting> {
+    for f in files {
+        let Some(idx) = f.find(".aux_") else { continue };
+        let tag = f[idx + ".aux_".len()..].trim_end_matches(".atw");
+        return match tag {
+            "dense" => Ok(Setting::Dense),
+            "naive" => Ok(Setting::Naive),
+            "ls" => Ok(Setting::LayerSkip),
+            "all" => Ok(Setting::All),
+            other => Err(anyhow!("unknown aux setting '{other}' in {f}")),
+        };
+    }
+    Ok(if is_nm { Setting::Naive } else { Setting::Dense })
+}
+
+impl Engine for NativeEngine {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_artifact(&mut self, name: &str) -> Result<f64> {
+        self.manifest.artifact(name)?;
+        self.model_for_artifact(name)?;
+        Ok(0.0)
+    }
+
+    fn bind(&mut self, artifact: &str, files: &[&str]) -> Result<String> {
+        let meta = self.manifest.artifact(artifact)?;
+        let nm = meta.nm;
+        let setting = setting_from_files(files, nm.is_some())?;
+        let model = self.model_for_artifact(artifact)?;
+        let key = files.join("+");
+        let map_key = binding_key(artifact, &key);
+        // the plan is built once per binding and reused by every prefill
+        if !self.bindings.contains_key(&map_key) {
+            let plan = Arc::new(SparsityPlan::build(
+                model.spec.n_layers,
+                &model.spec.skip_layers,
+                nm,
+                setting,
+            ));
+            self.bindings.insert(map_key, plan);
+        }
+        Ok(key)
+    }
+
+    fn prefill(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        tokens: &[i32],
+    ) -> Result<PrefillOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "prefill" {
+            bail!("artifact {artifact} is not a prefill artifact");
+        }
+        let (b, s) = (meta.batch, meta.seq);
+        if tokens.len() != b * s {
+            bail!(
+                "prefill {artifact}: tokens len {} != {b}x{s}",
+                tokens.len()
+            );
+        }
+        let lens = vec![s; b]; // padded prefill = equal segments
+        let (logits, k_cache, v_cache, vocab, exec_secs) = self
+            .exec_prefill(
+                artifact,
+                meta.variant.starts_with("sq"),
+                binding,
+                tokens,
+                &lens,
+            )?;
+        Ok(PrefillOut {
+            logits,
+            batch: b,
+            seq: s,
+            vocab,
+            k_cache,
+            v_cache,
+            exec_secs,
+        })
+    }
+
+    fn prefill_packed(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        prompts: &[Vec<i32>],
+    ) -> Result<PackedPrefillOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "prefill" {
+            bail!("artifact {artifact} is not a prefill artifact");
+        }
+        if prompts.is_empty() {
+            bail!("prefill_packed {artifact}: empty batch");
+        }
+        let s = meta.seq;
+        if s == 0 {
+            bail!("prefill_packed {artifact}: degenerate seq 0");
+        }
+        // clamp to the artifact's seq; empty prompts occupy one PAD row
+        // (mirrors the scheduler's defensive clamping and the default
+        // trait implementation)
+        let lens: Vec<usize> =
+            prompts.iter().map(|p| p.len().min(s).max(1)).collect();
+        let total: usize = lens.iter().sum();
+        let mut tokens: Vec<i32> = Vec::with_capacity(total);
+        for (p, &len) in prompts.iter().zip(&lens) {
+            if p.is_empty() {
+                tokens.push(0); // PAD
+            } else {
+                tokens.extend_from_slice(&p[..len]);
+            }
+        }
+        let (logits, k_cache, v_cache, vocab, exec_secs) = self
+            .exec_prefill(
+                artifact,
+                meta.variant.starts_with("sq"),
+                binding,
+                &tokens,
+                &lens,
+            )?;
+        Ok(PackedPrefillOut {
+            logits,
+            lens,
+            vocab,
+            k_cache,
+            v_cache,
+            padded_tokens: 0, // shape-flexible: no PAD rows computed
+            exec_secs,
+        })
+    }
+
+    fn decode(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        token: &[i32],
+        pos: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        kv_len: &[i32],
+    ) -> Result<DecodeOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "decode" {
+            bail!("artifact {artifact} is not a decode artifact");
+        }
+        self.binding_plan(artifact, binding)?;
+        let b = meta.batch;
+        let cache = meta.cache;
+        if b == 0 || cache == 0 {
+            bail!("decode {artifact}: degenerate batch {b} / cache {cache}");
+        }
+        if token.len() != b || pos.len() != b || kv_len.len() != b {
+            bail!("decode {artifact}: batch inputs must have len {b}");
+        }
+        let quantized = meta.variant.starts_with("sq");
+        let model = self.model_for_artifact(artifact)?;
+        let expect =
+            model.spec.n_layers * b * cache * model.spec.kv_dim();
+        if k_cache.len() != expect || v_cache.len() != expect {
+            bail!(
+                "decode {artifact}: cache len {} != expected {expect}",
+                k_cache.len()
+            );
+        }
+        let vocab = model.spec.vocab;
+        let mut kc = k_cache.to_vec();
+        let mut vc = v_cache.to_vec();
+        let mut audit = self.audit;
+        let block_rows = self.block_rows;
+        let t0 = Instant::now();
+        let logits = model.decode(
+            token, pos, &mut kc, &mut vc, kv_len, cache, quantized,
+            block_rows, &mut audit,
+        );
+        let exec_secs = t0.elapsed().as_secs_f64();
+        self.audit = audit;
+        Ok(DecodeOut {
+            logits,
+            batch: b,
+            vocab,
+            k_cache: kc,
+            v_cache: vc,
+            exec_secs,
+        })
+    }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        if threads <= 1 {
+            self.pool = None;
+        } else if self.pool.as_ref().map(|p| p.size()) != Some(threads) {
+            self.pool = Some(Arc::new(ThreadPool::new(threads)));
+        }
+    }
+
+    fn audit(&self) -> Option<SparsityAudit> {
+        Some(self.audit)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use super::ModelSpec;
+
+    pub(crate) fn small_spec() -> ModelSpec {
+        ModelSpec {
+            prefill_batch: 2,
+            prefill_seqs: vec![16],
+            decode_batch: 2,
+            cache_len: 24,
+            ..ModelSpec::tiny("tiny-lm-a")
+        }
+    }
+
+    pub(crate) fn tokens_for(b: usize, s: usize) -> Vec<i32> {
+        (0..b * s).map(|i| 1 + (i as i32 % 300)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testsupport::small_spec;
+    use super::*;
+
+    #[test]
+    fn plan_for_resolves_binding_to_policy_table() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let bind = e
+            .bind(
+                "tiny-lm-a.prefill16.nm2_4",
+                &["tiny-lm-a.atw", "tiny-lm-a.aux_ls.atw"],
+            )
+            .unwrap();
+        let plan = e.plan_for("tiny-lm-a.prefill16.nm2_4", &bind).unwrap();
+        assert!(plan.policy(0, "down_proj").is_sparse());
+        assert!(plan.policy(0, "q_proj").is_sparse());
+        // layer 1 is the tiny spec's skip layer: q/gate dense, down sparse
+        assert!(!plan.policy(1, "q_proj").is_sparse());
+        assert!(plan.policy(1, "down_proj").is_sparse());
+        assert!(!plan.policy(0, "o_proj").is_sparse());
+    }
+
+    #[test]
+    fn unknown_binding_is_rejected() {
+        let mut e = NativeEngine::tiny();
+        let err = e
+            .prefill("tiny-lm-a.prefill64.dense", "nope", &[0; 8 * 64])
+            .unwrap_err();
+        assert!(err.to_string().contains("binding"));
+    }
+}

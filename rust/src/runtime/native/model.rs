@@ -1,0 +1,357 @@
+//! Model geometry ([`ModelSpec`]) and deterministically synthesized
+//! weights ([`NativeModel`]) for the native CPU backend.
+//!
+//! Projection weight matrices are `[din, dout]` row-major (the `spmm`
+//! convention) and `Arc`-shared so the batched projection pipeline can
+//! fan row-tiles out over the engine thread pool without copying
+//! weights per tile.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use super::super::artifact::{ArtifactMeta, Manifest, ModelInfo};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The N:M ratios every model's artifact inventory covers.
+pub const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
+
+/// Geometry + serving shapes of one native model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub prefill_batch: usize,
+    pub prefill_seqs: Vec<usize>,
+    pub decode_batch: usize,
+    pub cache_len: usize,
+    /// layers where q/gate stay dense under the `ls` / `all` settings
+    pub skip_layers: Vec<usize>,
+    pub seed: u64,
+}
+
+impl ModelSpec {
+    /// Self-contained default: the tiny-lm geometry the repo's tests and
+    /// token world (vocab 384) assume. All dims divide 16 so every
+    /// supported N:M group size applies cleanly.
+    pub fn tiny(name: &str) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            vocab: 384,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 16,
+            d_ff: 64,
+            prefill_batch: 8,
+            prefill_seqs: vec![64],
+            decode_batch: 8,
+            cache_len: 96,
+            skip_layers: vec![1],
+            seed: fnv1a(name.as_bytes()),
+        }
+    }
+
+    /// Adopt geometry from a real manifest entry; anything missing keeps
+    /// the tiny default. Dimensions are then sanitized so attention and
+    /// pruning group math stay well-defined.
+    pub fn from_manifest(
+        info: &ModelInfo,
+        manifest: &Manifest,
+        dir: &Path,
+    ) -> ModelSpec {
+        let mut spec = ModelSpec::tiny(&info.name);
+        let g = |k: &str| info.config.get(k).copied().unwrap_or(0);
+        let adopt = |cur: &mut usize, v: usize| {
+            if v > 0 {
+                *cur = v;
+            }
+        };
+        adopt(&mut spec.vocab, g("vocab_size"));
+        adopt(&mut spec.d_model, g("d_model"));
+        adopt(&mut spec.n_layers, g("n_layers"));
+        adopt(&mut spec.n_q_heads, g("n_q_heads"));
+        adopt(&mut spec.n_kv_heads, g("n_kv_heads"));
+        adopt(&mut spec.head_dim, g("head_dim"));
+        adopt(&mut spec.d_ff, g("d_ff"));
+        // serving shapes from the artifact inventory
+        let mut seqs: Vec<usize> = Vec::new();
+        for a in manifest.artifacts.values() {
+            if !a.name.starts_with(&format!("{}.", info.name)) {
+                continue;
+            }
+            if a.kind == "prefill" {
+                if !seqs.contains(&a.seq) && a.seq > 0 {
+                    seqs.push(a.seq);
+                }
+                if a.batch > 0 {
+                    spec.prefill_batch = a.batch;
+                }
+            } else if a.kind == "decode" {
+                if a.batch > 0 {
+                    spec.decode_batch = a.batch;
+                }
+                if a.cache > 0 {
+                    spec.cache_len = a.cache;
+                }
+            }
+        }
+        if !seqs.is_empty() {
+            seqs.sort_unstable();
+            spec.prefill_seqs = seqs;
+        }
+        if let Some(skips) = stats_skip_layers(dir, &info.name) {
+            spec.skip_layers = skips;
+        } else {
+            spec.skip_layers = vec![spec.n_layers.saturating_sub(1)];
+        }
+        spec.sanitize()
+    }
+
+    pub(super) fn sanitize(mut self) -> ModelSpec {
+        if self.n_kv_heads == 0 || self.n_q_heads % self.n_kv_heads != 0 {
+            self.n_kv_heads = self.n_q_heads.max(1);
+            self.n_q_heads = self.n_kv_heads;
+        }
+        self.vocab = self.vocab.max(16);
+        self.cache_len = self.cache_len.max(self.max_prefill_seq() + 16);
+        self
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_q_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    pub fn max_prefill_seq(&self) -> usize {
+        self.prefill_seqs.iter().copied().max().unwrap_or(64)
+    }
+
+    /// Synthesize the manifest entries (artifacts + model info +
+    /// settings) this model serves.
+    pub(super) fn manifest_entries(
+        &self,
+        artifacts: &mut BTreeMap<String, ArtifactMeta>,
+        models: &mut BTreeMap<String, ModelInfo>,
+        settings: &mut BTreeMap<String, Vec<String>>,
+    ) {
+        let prefill_meta = |name: &str,
+                           variant: &str,
+                           seq: usize,
+                           nm: Option<(usize, usize)>| {
+            ArtifactMeta {
+                name: name.to_string(),
+                hlo: String::new(),
+                params: Vec::new(),
+                runtime_inputs: vec![(
+                    vec![self.prefill_batch, seq],
+                    "int32".to_string(),
+                )],
+                outputs: vec!["logits".into(), "k".into(), "v".into()],
+                kind: "prefill".to_string(),
+                variant: variant.to_string(),
+                batch: self.prefill_batch,
+                seq,
+                cache: 0,
+                nm,
+            }
+        };
+        for &seq in &self.prefill_seqs {
+            for (variant, nm) in prefill_variants() {
+                let name = match nm {
+                    Some((n, m)) => format!(
+                        "{}.prefill{seq}.{variant}{n}_{m}",
+                        self.name
+                    ),
+                    None => format!("{}.prefill{seq}.{variant}", self.name),
+                };
+                artifacts
+                    .insert(name.clone(), prefill_meta(&name, variant, seq, nm));
+            }
+        }
+        let cache_shape = vec![
+            self.n_layers,
+            self.decode_batch,
+            self.cache_len,
+            self.n_kv_heads,
+            self.head_dim,
+        ];
+        for variant in ["dense", "sq"] {
+            let name = format!("{}.decode.{variant}", self.name);
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    hlo: String::new(),
+                    params: Vec::new(),
+                    runtime_inputs: vec![
+                        (vec![self.decode_batch], "int32".to_string()),
+                        (vec![self.decode_batch], "int32".to_string()),
+                        (cache_shape.clone(), "float32".to_string()),
+                        (cache_shape.clone(), "float32".to_string()),
+                        (vec![self.decode_batch], "int32".to_string()),
+                    ],
+                    outputs: vec!["logits".into(), "k".into(), "v".into()],
+                    kind: "decode".to_string(),
+                    variant: variant.to_string(),
+                    batch: self.decode_batch,
+                    seq: 0,
+                    cache: self.cache_len,
+                    nm: None,
+                },
+            );
+        }
+        let mut config = BTreeMap::new();
+        config.insert("vocab_size".to_string(), self.vocab);
+        config.insert("d_model".to_string(), self.d_model);
+        config.insert("n_layers".to_string(), self.n_layers);
+        config.insert("n_q_heads".to_string(), self.n_q_heads);
+        config.insert("n_kv_heads".to_string(), self.n_kv_heads);
+        config.insert("head_dim".to_string(), self.head_dim);
+        config.insert("d_ff".to_string(), self.d_ff);
+        models.insert(
+            self.name.clone(),
+            ModelInfo {
+                name: self.name.clone(),
+                weights: format!("weights/{}.atw", self.name),
+                is_moe: false,
+                config,
+            },
+        );
+        settings.insert(
+            self.name.clone(),
+            vec!["naive".into(), "ls".into(), "all".into()],
+        );
+    }
+}
+
+fn prefill_variants() -> Vec<(&'static str, Option<(usize, usize)>)> {
+    let mut v: Vec<(&'static str, Option<(usize, usize)>)> =
+        vec![("dense", None), ("sq", None)];
+    for &(n, m) in &RATIOS {
+        v.push(("nm", Some((n, m))));
+        v.push(("sq_nm", Some((n, m))));
+    }
+    v
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn stats_skip_layers(dir: &Path, model: &str) -> Option<Vec<usize>> {
+    let p = dir.join("stats").join(format!("sensitivity_{model}.json"));
+    let text = std::fs::read_to_string(p).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let arr = j.get("skip_layers")?.as_arr()?;
+    Some(arr.iter().filter_map(|v| v.as_usize()).collect())
+}
+
+/// One transformer layer's weights; `scale_*` are the per-input-channel
+/// weight norms the `all` setting uses as Robust-Norm-style scores.
+pub(super) struct LayerWeights {
+    pub(super) attn_norm: Vec<f32>,
+    pub(super) wq: Arc<Vec<f32>>,
+    pub(super) wk: Arc<Vec<f32>>,
+    pub(super) wv: Arc<Vec<f32>>,
+    pub(super) wo: Arc<Vec<f32>>,
+    pub(super) mlp_norm: Vec<f32>,
+    pub(super) w_gate: Arc<Vec<f32>>,
+    pub(super) w_up: Arc<Vec<f32>>,
+    pub(super) w_down: Arc<Vec<f32>>,
+    pub(super) scale_q: Vec<f32>,
+    pub(super) scale_gate: Vec<f32>,
+    pub(super) scale_down: Vec<f32>,
+}
+
+/// A native model: spec + deterministically synthesized weights.
+pub struct NativeModel {
+    pub spec: ModelSpec,
+    pub(super) embed: Vec<f32>,
+    pub(super) layers: Vec<LayerWeights>,
+    pub(super) final_norm: Vec<f32>,
+    pub(super) lm_head: Arc<Vec<f32>>,
+}
+
+fn rand_mat(rng: &mut Rng, din: usize, dout: usize) -> Vec<f32> {
+    let scale = 1.0 / (din.max(1) as f64).sqrt();
+    (0..din * dout)
+        .map(|_| (rng.normal() * scale) as f32)
+        .collect()
+}
+
+/// Per-input-channel L2 norm of a `[din, dout]` weight matrix.
+fn row_norms(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
+    (0..din)
+        .map(|j| {
+            w[j * dout..(j + 1) * dout]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+impl NativeModel {
+    pub fn build(spec: ModelSpec) -> NativeModel {
+        let mut rng = Rng::new(spec.seed);
+        let (d, qd, kvd, f) =
+            (spec.d_model, spec.q_dim(), spec.kv_dim(), spec.d_ff);
+        let layers = (0..spec.n_layers)
+            .map(|_| {
+                let wq = rand_mat(&mut rng, d, qd);
+                let w_gate = rand_mat(&mut rng, d, f);
+                let w_down = rand_mat(&mut rng, f, d);
+                LayerWeights {
+                    attn_norm: vec![1.0; d],
+                    wk: Arc::new(rand_mat(&mut rng, d, kvd)),
+                    wv: Arc::new(rand_mat(&mut rng, d, kvd)),
+                    wo: Arc::new(rand_mat(&mut rng, qd, d)),
+                    mlp_norm: vec![1.0; d],
+                    w_up: Arc::new(rand_mat(&mut rng, d, f)),
+                    scale_q: row_norms(&wq, d, qd),
+                    scale_gate: row_norms(&w_gate, d, f),
+                    scale_down: row_norms(&w_down, f, d),
+                    wq: Arc::new(wq),
+                    w_gate: Arc::new(w_gate),
+                    w_down: Arc::new(w_down),
+                }
+            })
+            .collect();
+        NativeModel {
+            embed: rand_mat(&mut rng, spec.vocab, spec.d_model),
+            final_norm: vec![1.0; spec.d_model],
+            lm_head: Arc::new(rand_mat(&mut rng, spec.d_model, spec.vocab)),
+            layers,
+            spec,
+        }
+    }
+
+    pub(super) fn embed_tokens(&self, tokens: &[i32]) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let mut x = vec![0.0f32; tokens.len() * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let id = (tok.max(0) as usize).min(self.spec.vocab - 1);
+            x[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embed[id * d..(id + 1) * d]);
+        }
+        x
+    }
+}

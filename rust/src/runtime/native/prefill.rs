@@ -1,0 +1,264 @@
+//! The batched prefill pipeline: one forward pass over a token-packed
+//! segment batch.
+//!
+//! Both entry points funnel into [`NativeModel::prefill_segments`]:
+//!
+//! * the classic right-padded `[b, s]` prefill is segments of equal
+//!   length `s` (bit-identical to the pre-refactor monolith);
+//! * the token-packed multi-request prefill is arbitrary per-request
+//!   segments with **no padding rows** — the coordinator's batches
+//!   finally reach the kernel as one `[total_tokens, d]` matrix,
+//!   compressed once and tiled over the engine thread pool.
+
+use crate::runtime::engine::SparsityAudit;
+
+use super::layers::{
+    causal_attention_segments, rmsnorm, silu, ExecOpts, ProjKind,
+};
+use super::model::NativeModel;
+
+impl NativeModel {
+    /// Forward pass over packed segments: `tokens` is the concatenation
+    /// of every request's prompt (`lens[i]` tokens each); request `i`
+    /// owns rows `sum(lens[..i]) ..+ lens[i]` of every activation,
+    /// attends only within its own segment, and its K/V land at the same
+    /// rows of the `[L, total, H_kv*Dh]` caches.
+    pub(super) fn prefill_segments(
+        &self,
+        tokens: &[i32],
+        lens: &[usize],
+        opts: &ExecOpts<'_>,
+        audit: &mut SparsityAudit,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let sp = &self.spec;
+        let (d, kvd) = (sp.d_model, sp.kv_dim());
+        let t: usize = lens.iter().sum();
+        debug_assert_eq!(tokens.len(), t, "tokens must match packed lens");
+        let mut segs = Vec::with_capacity(lens.len());
+        let mut start = 0usize;
+        for &len in lens {
+            segs.push((start, len));
+            start += len;
+        }
+        let mut x = self.embed_tokens(tokens);
+        let mut k_cache = vec![0.0f32; sp.n_layers * t * kvd];
+        let mut v_cache = vec![0.0f32; sp.n_layers * t * kvd];
+        for (l, lw) in self.layers.iter().enumerate() {
+            let h = rmsnorm(&x, t, d, &lw.attn_norm);
+            let q = lw.projection(ProjKind::Q, sp).run(&h, t, l, opts, audit);
+            let k = lw.projection(ProjKind::K, sp).run(&h, t, l, opts, audit);
+            let v = lw.projection(ProjKind::V, sp).run(&h, t, l, opts, audit);
+            // stash this layer's K/V in [L, total, H_kv, D_h]
+            let base = l * t * kvd;
+            k_cache[base..base + t * kvd].copy_from_slice(&k);
+            v_cache[base..base + t * kvd].copy_from_slice(&v);
+            let attn = causal_attention_segments(&q, &k, &v, &segs, sp);
+            let o =
+                lw.projection(ProjKind::O, sp).run(&attn, t, l, opts, audit);
+            for (xi, oi) in x.iter_mut().zip(o.iter()) {
+                *xi += oi;
+            }
+            let h2 = rmsnorm(&x, t, d, &lw.mlp_norm);
+            let gate =
+                lw.projection(ProjKind::Gate, sp).run(&h2, t, l, opts, audit);
+            let up =
+                lw.projection(ProjKind::Up, sp).run(&h2, t, l, opts, audit);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(up.iter())
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down =
+                lw.projection(ProjKind::Down, sp).run(&act, t, l, opts, audit);
+            for (xi, di) in x.iter_mut().zip(down.iter()) {
+                *xi += di;
+            }
+        }
+        let logits = self.logits(&x, t, opts.pool, opts.block_rows, audit);
+        (logits, k_cache, v_cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime::engine::Engine;
+    use crate::runtime::native::testsupport::{small_spec, tokens_for};
+    use crate::runtime::native::NativeEngine;
+
+    #[test]
+    fn prefill_shapes_and_finite() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let art = "tiny-lm-a.prefill16.dense";
+        let bind = e.bind(art, &["tiny-lm-a.atw"]).unwrap();
+        let out = e.prefill(art, &bind, &tokens_for(2, 16)).unwrap();
+        assert_eq!(out.vocab, 384);
+        assert_eq!(out.logits.len(), 2 * 16 * 384);
+        assert_eq!(out.k_cache.len(), 2 * 2 * 16 * 16); // L*B*S*kvd
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sparse_prefill_audits_and_differs_from_dense() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let toks = tokens_for(2, 16);
+        let b_dense = e
+            .bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let dense = e
+            .prefill("tiny-lm-a.prefill16.dense", &b_dense, &toks)
+            .unwrap();
+        e.reset_audit();
+        let b_nm = e
+            .bind(
+                "tiny-lm-a.prefill16.nm2_4",
+                &["tiny-lm-a.atw", "tiny-lm-a.aux_ls.atw"],
+            )
+            .unwrap();
+        let sparse = e
+            .prefill("tiny-lm-a.prefill16.nm2_4", &b_nm, &toks)
+            .unwrap();
+        let audit = Engine::audit(&e).unwrap();
+        assert!(audit.pruned_matmuls > 0, "no pruned projections ran");
+        assert_eq!(audit.nm_violations, 0, "N:M contract violated");
+        assert_eq!(audit.pruned_fallbacks, 0, "unexpected dense fallback");
+        // 2:4 over layer-0 q/gate/down saves ~8% of this model's total
+        // linear FLOPs (layer 1 is skipped by the ls policy)
+        assert!(audit.flops_saved_frac() > 0.05);
+        // per-projection coverage: under ls with layer 1 skipped, down
+        // is fully covered, q/gate half-covered, k/v/o/up/lm_head not
+        let m = |name: &str| audit.module(name).unwrap();
+        assert!((m("down_proj").coverage_frac() - 1.0).abs() < 1e-12);
+        assert!((m("q_proj").coverage_frac() - 0.5).abs() < 1e-12);
+        assert!((m("gate_proj").coverage_frac() - 0.5).abs() < 1e-12);
+        for dense_mod in ["k_proj", "v_proj", "o_proj", "up_proj", "lm_head"]
+        {
+            assert_eq!(m(dense_mod).coverage_frac(), 0.0, "{dense_mod}");
+            assert!(m(dense_mod).dense_flops > 0, "{dense_mod} never ran");
+        }
+        let diff = dense
+            .logits
+            .iter()
+            .zip(sparse.logits.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff > 0.0, "2:4 pruning changed nothing");
+        assert!(sparse.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_path_close_to_f32() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let toks = tokens_for(2, 16);
+        let bf = e
+            .bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let fp = e
+            .prefill("tiny-lm-a.prefill16.dense", &bf, &toks)
+            .unwrap();
+        let bq = e
+            .bind("tiny-lm-a.prefill16.sq", &["tiny-lm-a.sq.atw"])
+            .unwrap();
+        let q = e.prefill("tiny-lm-a.prefill16.sq", &bq, &toks).unwrap();
+        let max_abs =
+            fp.logits.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let diff = fp
+            .logits
+            .iter()
+            .zip(q.logits.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            diff < max_abs.max(1.0) * 0.5,
+            "w8a8 drifted too far: {diff} vs absmax {max_abs}"
+        );
+    }
+
+    #[test]
+    fn nm_artifact_with_dense_aux_matches_dense_artifact() {
+        // keep_dense everywhere must reproduce the dense path exactly —
+        // the contract that lets one nm artifact serve dense requests.
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let toks = tokens_for(2, 16);
+        let b_dense = e
+            .bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let b_nm = e
+            .bind(
+                "tiny-lm-a.prefill16.nm2_4",
+                &["tiny-lm-a.atw", "tiny-lm-a.aux_dense.atw"],
+            )
+            .unwrap();
+        let a = e
+            .prefill("tiny-lm-a.prefill16.dense", &b_dense, &toks)
+            .unwrap();
+        let c = e
+            .prefill("tiny-lm-a.prefill16.nm2_4", &b_nm, &toks)
+            .unwrap();
+        for (x, y) in a.logits.iter().zip(c.logits.iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn parallelism_is_bit_transparent() {
+        // same engine weights, pool on vs off: identical logits
+        let toks = tokens_for(2, 16);
+        let art = "tiny-lm-a.prefill16.nm4_8";
+        let run = |threads: usize| {
+            let mut e = NativeEngine::synthetic(vec![small_spec()])
+                .with_parallelism(threads);
+            let bind = e
+                .bind(art, &["tiny-lm-a.atw", "tiny-lm-a.aux_ls.atw"])
+                .unwrap();
+            e.prefill(art, &bind, &toks).unwrap().logits
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(4));
+    }
+
+    #[test]
+    fn packed_prefill_matches_padded_rows() {
+        // native packed pipeline == padded pipeline, row for row
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let art = "tiny-lm-a.prefill16.nm2_4";
+        let bind = e
+            .bind(art, &["tiny-lm-a.atw", "tiny-lm-a.aux_ls.atw"])
+            .unwrap();
+        let prompts: Vec<Vec<i32>> =
+            vec![tokens_for(1, 7), tokens_for(1, 16)];
+        // padded reference through the static [2, 16] artifact
+        let mut padded = vec![0i32; 2 * 16];
+        padded[..7].copy_from_slice(&prompts[0]);
+        padded[16..32].copy_from_slice(&prompts[1]);
+        let full = e.prefill(art, &bind, &padded).unwrap();
+        let packed = e.prefill_packed(art, &bind, &prompts).unwrap();
+        assert_eq!(packed.lens, vec![7, 16]);
+        assert_eq!(packed.total_tokens(), 23);
+        let v = packed.vocab;
+        assert_eq!(v, full.vocab);
+        // request 0 rows 0..7, request 1 rows 7..23
+        assert_eq!(&packed.logits[..7 * v], &full.logits[..7 * v]);
+        assert_eq!(
+            &packed.logits[7 * v..23 * v],
+            &full.logits[16 * v..32 * v]
+        );
+        // K/V gather parity: [L, total, kvd] vs [L, B, S, kvd]
+        let kvd = 16;
+        for l in 0..2usize {
+            let p0 = l * 23 * kvd;
+            let f0 = l * 2 * 16 * kvd;
+            assert_eq!(
+                &packed.k_cache[p0..p0 + 7 * kvd],
+                &full.k_cache[f0..f0 + 7 * kvd]
+            );
+            assert_eq!(
+                &packed.k_cache[p0 + 7 * kvd..p0 + 23 * kvd],
+                &full.k_cache[f0 + 16 * kvd..f0 + 32 * kvd]
+            );
+            assert_eq!(
+                &packed.v_cache[p0 + 7 * kvd..p0 + 23 * kvd],
+                &full.v_cache[f0 + 16 * kvd..f0 + 32 * kvd]
+            );
+        }
+    }
+}

@@ -6,7 +6,13 @@
 //! * `spmm`      — a native compressed N:M sparse x dense matmul; this is
 //!                 the CPU stand-in for the paper's SpMM hardware and what
 //!                 `cargo bench --bench spmm` measures (the N/M compute
-//!                 scaling the paper's accelerator would deliver)
+//!                 scaling the paper's accelerator would deliver). The
+//!                 block-compressed [`spmm::NmCompressedBatch`] variant
+//!                 compresses a whole activation batch once and tiles the
+//!                 SpMM over the engine thread pool
+//! * `plan`      — the per-layer/per-projection [`plan::SparsityPlan`]
+//!                 that decides dense-vs-N:M (and the ratio) for one
+//!                 prefill, built from `coverage::Geometry` + `policy`
 //! * `coverage`  — GQA-aware accounting of the fraction of linear-layer
 //!                 FLOPs routed through the sparse path (the paper's
 //!                 ">55% of linear computations accelerated" headline)
@@ -16,8 +22,10 @@
 pub mod coverage;
 pub mod estimate;
 pub mod mask;
+pub mod plan;
 pub mod policy;
 pub mod spmm;
 
 pub use mask::{nm_mask_scored, nm_prune, validate_nm};
-pub use spmm::{NmCompressed, SpmmStats};
+pub use plan::{ProjPolicy, SparsityPlan};
+pub use spmm::{NmCompressed, NmCompressedBatch, SpmmStats};

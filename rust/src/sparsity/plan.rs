@@ -1,0 +1,235 @@
+//! Per-projection sparsity planning.
+//!
+//! A [`SparsityPlan`] is the explicit, precomputed answer to "what does
+//! each linear projection of each layer do for this prefill?": stay
+//! dense, or compress activations at some N:M ratio (optionally with
+//! Robust-Norm channel scoring). It is built once per (model, ratio,
+//! setting) from the policy table ([`super::policy`]) and the model's
+//! skip-layer list, then threaded scheduler → engine → kernel — replacing
+//! the ad-hoc `(nm, setting)` flag-juggling the runtime used to re-derive
+//! inside every projection call.
+//!
+//! The plan also carries its own coverage accounting against a
+//! [`Geometry`] (the paper's ">55% of linear computation sparsified"
+//! headline), so serving, audits and the repro tables all report from the
+//! same source of truth.
+
+use std::collections::BTreeMap;
+
+use super::coverage::Geometry;
+use super::policy::{self, Setting, MODULES};
+
+/// What one projection in one layer does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProjPolicy {
+    /// N:M ratio to compress the activation with; `None` = dense.
+    pub nm: Option<(usize, usize)>,
+    /// Use Robust-Norm channel scores (the `all` setting) rather than
+    /// naive magnitude scoring.
+    pub scored: bool,
+}
+
+impl ProjPolicy {
+    pub const DENSE: ProjPolicy = ProjPolicy { nm: None, scored: false };
+
+    pub fn is_sparse(&self) -> bool {
+        self.nm.is_some()
+    }
+}
+
+/// The full per-layer/per-projection decision table for one prefill.
+#[derive(Debug, Clone)]
+pub struct SparsityPlan {
+    pub setting: Setting,
+    pub nm: Option<(usize, usize)>,
+    /// `cells[layer][module_index]` over [`policy::MODULES`].
+    cells: Vec<[ProjPolicy; MODULES.len()]>,
+}
+
+impl SparsityPlan {
+    /// The all-dense plan (dense artifacts, decode, lm_head-only paths).
+    pub fn dense(n_layers: usize) -> SparsityPlan {
+        SparsityPlan::build(n_layers, &[], None, Setting::Dense)
+    }
+
+    /// Build the plan for `n_layers` transformer layers under the paper's
+    /// policy: `nm = None` or `setting == Dense` yields the dense plan;
+    /// `Naive` prunes every policy-prunable module in every layer;
+    /// `LayerSkip`/`All` additionally keep q/gate dense in `skip_layers`,
+    /// and `All` turns on Robust-Norm scoring.
+    pub fn build(
+        n_layers: usize,
+        skip_layers: &[usize],
+        nm: Option<(usize, usize)>,
+        setting: Setting,
+    ) -> SparsityPlan {
+        let mut cells = vec![[ProjPolicy::DENSE; MODULES.len()]; n_layers];
+        if let Some((n, m)) = nm {
+            if setting != Setting::Dense {
+                let skips: &[usize] = match setting {
+                    Setting::Naive => &[],
+                    _ => skip_layers,
+                };
+                let scored = setting == Setting::All;
+                for (layer, row) in cells.iter_mut().enumerate() {
+                    for (mi, name) in MODULES.iter().enumerate() {
+                        if policy::pruned_in_layer(name, layer, skips) {
+                            row[mi] =
+                                ProjPolicy { nm: Some((n, m)), scored };
+                        }
+                    }
+                }
+            }
+        }
+        SparsityPlan { setting, nm, cells }
+    }
+
+    /// Build for a [`Geometry`] (uses its layer count).
+    pub fn for_geometry(
+        g: &Geometry,
+        skip_layers: &[usize],
+        nm: Option<(usize, usize)>,
+        setting: Setting,
+    ) -> SparsityPlan {
+        SparsityPlan::build(g.n_layers, skip_layers, nm, setting)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Decision for `module` ("q_proj", ...) in `layer`. Unknown modules
+    /// (e.g. "lm_head") and out-of-range layers are dense — the safe
+    /// default for everything the policy table does not cover.
+    pub fn policy(&self, layer: usize, module: &str) -> ProjPolicy {
+        match (self.cells.get(layer), policy::module_index(module)) {
+            (Some(row), Some(mi)) => row[mi],
+            _ => ProjPolicy::DENSE,
+        }
+    }
+
+    /// Any projection sparse at all?
+    pub fn is_sparse(&self) -> bool {
+        self.cells
+            .iter()
+            .any(|row| row.iter().any(|p| p.is_sparse()))
+    }
+
+    /// Fraction of per-token linear FLOPs this plan routes through the
+    /// N:M path under geometry `g` (the paper's coverage headline,
+    /// computed from the actual decision table rather than re-deriving
+    /// the policy).
+    pub fn coverage(&self, g: &Geometry) -> f64 {
+        let fl = g.module_flops();
+        let mut total = 0u64;
+        let mut pruned = 0u64;
+        for row in &self.cells {
+            for (mi, name) in MODULES.iter().enumerate() {
+                let f = fl.get(name).copied().unwrap_or(0);
+                total += f;
+                if row[mi].is_sparse() {
+                    pruned += f;
+                }
+            }
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        pruned as f64 / total as f64
+    }
+
+    /// Per-module coverage: module name -> fraction of that module's
+    /// layers that are sparse under the plan.
+    pub fn module_coverage(&self) -> BTreeMap<&'static str, f64> {
+        let n = self.n_layers().max(1) as f64;
+        MODULES
+            .iter()
+            .enumerate()
+            .map(|(mi, name)| {
+                let sparse = self
+                    .cells
+                    .iter()
+                    .filter(|row| row[mi].is_sparse())
+                    .count();
+                (*name, sparse as f64 / n)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_plan_is_all_dense() {
+        let p = SparsityPlan::dense(4);
+        assert!(!p.is_sparse());
+        assert_eq!(p.policy(2, "down_proj"), ProjPolicy::DENSE);
+        // nm set but setting dense still means dense
+        let p2 = SparsityPlan::build(4, &[], Some((2, 4)), Setting::Dense);
+        assert!(!p2.is_sparse());
+    }
+
+    #[test]
+    fn plan_matches_policy_table() {
+        let skips = [1usize];
+        let p =
+            SparsityPlan::build(3, &skips, Some((4, 8)), Setting::LayerSkip);
+        for layer in 0..3 {
+            for name in MODULES {
+                let want =
+                    policy::pruned_in_layer(name, layer, &skips);
+                let got = p.policy(layer, name);
+                assert_eq!(got.is_sparse(), want, "{name} layer {layer}");
+                if want {
+                    assert_eq!(got.nm, Some((4, 8)));
+                    assert!(!got.scored, "ls setting must not score");
+                }
+            }
+        }
+        // naive ignores the skip list; all turns on scoring
+        let naive =
+            SparsityPlan::build(3, &skips, Some((2, 4)), Setting::Naive);
+        assert!(naive.policy(1, "q_proj").is_sparse());
+        let all = SparsityPlan::build(3, &skips, Some((2, 4)), Setting::All);
+        assert!(all.policy(0, "q_proj").scored);
+        assert!(!all.policy(1, "q_proj").is_sparse());
+    }
+
+    #[test]
+    fn unknown_module_and_layer_are_dense() {
+        let p = SparsityPlan::build(2, &[], Some((2, 4)), Setting::Naive);
+        assert_eq!(p.policy(0, "lm_head"), ProjPolicy::DENSE);
+        assert_eq!(p.policy(99, "down_proj"), ProjPolicy::DENSE);
+    }
+
+    #[test]
+    fn coverage_agrees_with_geometry_coverage() {
+        let g = Geometry {
+            d_model: 96,
+            n_layers: 6,
+            q_dim: 96,
+            kv_dim: 32,
+            d_ff: 384,
+            n_experts: 0,
+            top_k: 0,
+            d_ff_expert: 0,
+        };
+        let skips = [5usize];
+        let p = SparsityPlan::for_geometry(
+            &g,
+            &skips,
+            Some((2, 4)),
+            Setting::LayerSkip,
+        );
+        let want = g.coverage(&skips);
+        assert!((p.coverage(&g) - want).abs() < 1e-12);
+        assert!(p.coverage(&g) > 0.55);
+        // per-module: down is pruned everywhere, o never
+        let mc = p.module_coverage();
+        assert_eq!(mc["down_proj"], 1.0);
+        assert_eq!(mc["o_proj"], 0.0);
+        assert!((mc["q_proj"] - 5.0 / 6.0).abs() < 1e-12);
+    }
+}

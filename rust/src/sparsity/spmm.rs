@@ -15,7 +15,10 @@
 //! scalar-sparse CPU kernel would do), and [`dense_matmul_counted`] pins
 //! the FLOP behavior of both in tests.
 
+use std::sync::Arc;
+
 use super::mask::nm_mask_scored;
+use crate::exec::ThreadPool;
 
 /// Compressed N:M activation matrix [t, din*n/m] with per-element group
 /// channel indices.
@@ -138,6 +141,250 @@ impl NmCompressed {
                 / self.m as u64,
         }
     }
+}
+
+/// One row-tile of an [`NmCompressedBatch`]: `rows` consecutive token
+/// rows in the same compressed (value, channel-index) layout as
+/// [`NmCompressed`]. Blocks are `Arc`-shared so the tiled SpMM can fan
+/// them out over a [`ThreadPool`] without copying the sparse data.
+pub struct NmBlock {
+    /// first token row this block covers
+    pub row0: usize,
+    /// number of token rows in this block
+    pub rows: usize,
+    /// surviving values, row-major `[rows, din/m*n]`
+    pub values: Vec<f32>,
+    /// absolute channel index of each surviving value
+    pub index: Vec<u32>,
+}
+
+impl NmBlock {
+    /// Per-row tile matmul — the *same* per-row axpy loop as
+    /// [`NmCompressed::matmul`], so outputs are bit-identical.
+    fn matmul(&self, w: &[f32], din: usize, n: usize, m: usize,
+              dout: usize) -> Vec<f32> {
+        let per_row = din / m * n;
+        let mut out = vec![0.0f32; self.rows * dout];
+        for r in 0..self.rows {
+            let orow = &mut out[r * dout..(r + 1) * dout];
+            let base = r * per_row;
+            for k in 0..per_row {
+                let v = self.values[base + k];
+                if v == 0.0 {
+                    continue;
+                }
+                let c = self.index[base + k] as usize;
+                let wrow = &w[c * dout..(c + 1) * dout];
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += v * wv;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Block-compressed N:M activation batch: a whole `[t, din]` activation
+/// matrix compressed **once** into row-tiles of `block_rows` token rows
+/// each (a blocked CSR analogue with implicit per-row offsets — exact N:M
+/// makes every row's nnz the same). The tiled SpMM runs each tile
+/// independently, serially or fanned out over the engine's
+/// [`ThreadPool`]; because every row's compressed layout and axpy order
+/// match [`NmCompressed`] exactly, the result is bit-identical to the
+/// per-row path regardless of tiling or pool width.
+pub struct NmCompressedBatch {
+    pub t: usize,
+    pub din: usize,
+    pub n: usize,
+    pub m: usize,
+    pub block_rows: usize,
+    blocks: Vec<Arc<NmBlock>>,
+}
+
+/// Default row-tile height for the batched kernels: small enough to give
+/// a pool useful parallel slack at serving batch sizes, large enough to
+/// amortize per-tile dispatch.
+pub const DEFAULT_BLOCK_ROWS: usize = 32;
+
+impl NmCompressedBatch {
+    /// Compress a dense `[t, din]` matrix with scored N:M pruning into
+    /// row-blocks. Same preconditions (and panic messages) as
+    /// [`NmCompressed::compress`]; `block_rows` is clamped to >= 1.
+    pub fn compress(
+        x: &[f32],
+        t: usize,
+        din: usize,
+        scale: &[f32],
+        n: usize,
+        m: usize,
+        block_rows: usize,
+    ) -> NmCompressedBatch {
+        assert!(
+            n >= 1 && n <= m,
+            "compress: malformed N:M ratio {n}:{m} (need 1 <= n <= m)"
+        );
+        assert!(
+            din % m == 0,
+            "compress: din {din} is not divisible by the N:M group \
+             size m = {m}"
+        );
+        assert_eq!(
+            x.len(),
+            t * din,
+            "compress: x has {} elements, expected t*din = {}x{}",
+            x.len(),
+            t,
+            din
+        );
+        let block_rows = block_rows.max(1);
+        let groups = din / m;
+        let mut blocks = Vec::with_capacity(t.div_ceil(block_rows));
+        let mut row0 = 0;
+        while row0 < t {
+            let rows = block_rows.min(t - row0);
+            let mut values = Vec::with_capacity(rows * groups * n);
+            let mut index = Vec::with_capacity(rows * groups * n);
+            for r in row0..row0 + rows {
+                let row = &x[r * din..(r + 1) * din];
+                let mask = nm_mask_scored(row, scale, n, m);
+                for g in 0..groups {
+                    let mut cnt = 0;
+                    for j in 0..m {
+                        let c = g * m + j;
+                        if mask[c] {
+                            values.push(row[c]);
+                            index.push(c as u32);
+                            cnt += 1;
+                        }
+                    }
+                    debug_assert_eq!(cnt, n);
+                }
+            }
+            blocks.push(Arc::new(NmBlock { row0, rows, values, index }));
+            row0 += rows;
+        }
+        NmCompressedBatch { t, din, n, m, block_rows, blocks }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Decompress back to dense (validation / the int8 reference path).
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.t * self.din];
+        let per_row = self.din / self.m * self.n;
+        for b in &self.blocks {
+            for r in 0..b.rows {
+                for k in 0..per_row {
+                    let v = b.values[r * per_row + k];
+                    let c = b.index[r * per_row + k] as usize;
+                    out[(b.row0 + r) * self.din + c] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Serial tiled SpMM: every tile on the calling thread, outputs
+    /// concatenated in row order.
+    pub fn matmul(&self, w: &[f32], dout: usize) -> Vec<f32> {
+        assert_eq!(w.len(), self.din * dout);
+        let mut out = vec![0.0f32; self.t * dout];
+        for b in &self.blocks {
+            let tile = b.matmul(w, self.din, self.n, self.m, dout);
+            out[b.row0 * dout..(b.row0 + b.rows) * dout]
+                .copy_from_slice(&tile);
+        }
+        out
+    }
+
+    /// Parallel tiled SpMM: row-tiles fanned out over `pool`
+    /// ([`ThreadPool::map`] keeps tile order, so assembly is a straight
+    /// concatenation). Falls back to the serial path when the pool has a
+    /// single worker or there is only one tile — the result is
+    /// bit-identical either way.
+    pub fn matmul_parallel(
+        &self,
+        w: &Arc<Vec<f32>>,
+        dout: usize,
+        pool: &ThreadPool,
+    ) -> Vec<f32> {
+        assert_eq!(w.len(), self.din * dout);
+        if pool.size() <= 1 || self.blocks.len() <= 1 {
+            return self.matmul(w, dout);
+        }
+        let (din, n, m) = (self.din, self.n, self.m);
+        let w = Arc::clone(w);
+        let tiles = pool.map(self.blocks.clone(), move |b| {
+            b.matmul(&w, din, n, m, dout)
+        });
+        let mut out = vec![0.0f32; self.t * dout];
+        for (b, tile) in self.blocks.iter().zip(tiles) {
+            out[b.row0 * dout..(b.row0 + b.rows) * dout]
+                .copy_from_slice(&tile);
+        }
+        out
+    }
+
+    pub fn stats(&self, dout: usize) -> SpmmStats {
+        SpmmStats {
+            dense_flops: 2 * (self.t * self.din * dout) as u64,
+            sparse_flops: 2 * (self.t * self.din * dout) as u64
+                * self.n as u64
+                / self.m as u64,
+        }
+    }
+}
+
+/// Row-tiled parallel variant of [`dense_matmul`]: rows are chunked into
+/// `block_rows`-high tiles and fanned out over `pool`. Each row's inner
+/// loop is identical to [`dense_matmul`], so the output is bit-identical
+/// to the serial kernel for every tiling and pool width.
+///
+/// The activation is shared with the workers through a single `Arc`'d
+/// copy (`ThreadPool::map` jobs are `'static`, so `x` cannot be
+/// borrowed); eliminating even that one copy needs `Arc`-threaded
+/// activations end-to-end — a ROADMAP item.
+pub fn dense_matmul_parallel(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &Arc<Vec<f32>>,
+    dout: usize,
+    pool: &ThreadPool,
+    block_rows: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), t * din);
+    assert_eq!(w.len(), din * dout);
+    let block_rows = block_rows.max(1);
+    if pool.size() <= 1 || t <= block_rows {
+        return dense_matmul(x, t, din, w, dout);
+    }
+    let mut tiles_spec: Vec<(usize, usize)> = Vec::new();
+    let mut row0 = 0;
+    while row0 < t {
+        let rows = block_rows.min(t - row0);
+        tiles_spec.push((row0, rows));
+        row0 += rows;
+    }
+    let xs = Arc::new(x.to_vec());
+    let w2 = Arc::clone(w);
+    let tiles = pool.map(tiles_spec, move |(row0, rows)| {
+        dense_matmul(
+            &xs[row0 * din..(row0 + rows) * din],
+            rows,
+            din,
+            &w2,
+            dout,
+        )
+    });
+    // map preserves tile order: assembly is a straight concatenation
+    let mut out = Vec::with_capacity(t * dout);
+    for tile in tiles {
+        out.extend_from_slice(&tile);
+    }
+    out
 }
 
 /// Dense reference matmul (row-major x [t, din] @ w [din, dout]), written
@@ -298,6 +545,59 @@ mod tests {
     fn compress_rejects_zero_n() {
         let x = vec![1.0f32; 8];
         NmCompressed::compress(&x, 1, 8, &[], 0, 4);
+    }
+
+    #[test]
+    fn batch_compress_matches_per_row_bitwise() {
+        // block-compressed layout == per-row layout, for every ratio and
+        // a block height that does NOT divide t (exercises the tail tile)
+        let mut rng = Rng::new(3);
+        let (t, din, dout) = (11, 32, 8);
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        for &(n, m) in &[(2usize, 4usize), (4, 8), (8, 16)] {
+            let per_row = NmCompressed::compress(&x, t, din, &[], n, m);
+            let batch =
+                NmCompressedBatch::compress(&x, t, din, &[], n, m, 4);
+            assert_eq!(batch.n_blocks(), 3);
+            assert_eq!(batch.decompress(), per_row.decompress());
+            let y_row = per_row.matmul(&w, dout);
+            assert_eq!(batch.matmul(&w, dout), y_row, "{n}:{m} serial");
+            let wa = Arc::new(w.clone());
+            for width in [1usize, 2, 4] {
+                let pool = ThreadPool::new(width);
+                assert_eq!(
+                    batch.matmul_parallel(&wa, dout, &pool),
+                    y_row,
+                    "{n}:{m} pool {width}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_zero_rows_is_empty() {
+        let b = NmCompressedBatch::compress(&[], 0, 16, &[], 2, 4, 8);
+        assert_eq!(b.n_blocks(), 0);
+        assert!(b.decompress().is_empty());
+        assert!(b.matmul(&vec![0.0; 16 * 4], 4).is_empty());
+    }
+
+    #[test]
+    fn dense_parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(7);
+        let (t, din, dout) = (13, 16, 8);
+        let x = rand_mat(&mut rng, t * din);
+        let w = Arc::new(rand_mat(&mut rng, din * dout));
+        let serial = dense_matmul(&x, t, din, &w, dout);
+        for width in [1usize, 2, 4] {
+            let pool = ThreadPool::new(width);
+            assert_eq!(
+                dense_matmul_parallel(&x, t, din, &w, dout, &pool, 4),
+                serial,
+                "pool {width}"
+            );
+        }
     }
 
     #[test]
