@@ -1,6 +1,6 @@
 //! End-to-end serving driver (the DESIGN.md "end-to-end validation"
-//! deliverable): boots the full stack — execution engine, KV slot
-//! manager, continuous-batching scheduler — serves a batched
+//! deliverable): boots the full stack — execution engine, block-paged
+//! KV store, continuous-batching scheduler — serves a batched
 //! mixed-sparsity workload through the real engine loop, and reports
 //! latency/throughput + an output-quality spot check. Runs on the native
 //! CPU backend out of the box (an `artifacts/` manifest is optional).

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use amber_pruner::bench::{bench, black_box};
 use amber_pruner::coordinator::batcher::{routing, ConfigKey, PrefillQueues};
-use amber_pruner::coordinator::kv::KvSlots;
+use amber_pruner::coordinator::kv::KvPages;
 use amber_pruner::coordinator::request::{Request, SparsityConfig, Tracked};
 use amber_pruner::util::rng::Rng;
 
@@ -51,19 +51,20 @@ fn main() {
         black_box(total);
     });
 
-    // KV slot admit/release churn at serving-like geometry
-    let (l, slots, c, h, d) = (6usize, 8usize, 320usize, 1usize, 32usize);
+    // paged KV admit/release churn at serving-like geometry: 8 seqs of
+    // a 64-token prefill staged block-by-block, worst-case reservation
+    let (l, seqs, c, h, d) = (6usize, 8usize, 320usize, 1usize, 32usize);
     let pre = vec![0.5f32; l * 8 * 64 * h * d];
-    bench("kv admit+release (8 slots, 64-token prefill)", 3, 50,
+    bench("kv admit+release (paged, 8 seqs, 64-token prefill)", 3, 50,
           Some(8), || {
-        let mut kv = KvSlots::new(l, slots, c, h, d);
-        for i in 0..8 {
-            kv.admit(i as u64, &pre, &pre, i, 8, 64, 48).unwrap();
+        let mut kv = KvPages::new(l, seqs * c / 16, 16, h, d, c);
+        for i in 0..seqs {
+            kv.admit(i as u64, &pre, &pre, i, 8, 64, 48, 64).unwrap();
         }
-        for i in 0..8 {
-            kv.release(i);
+        for i in 0..seqs {
+            kv.release(i as u64).unwrap();
         }
-        black_box(kv.free_slots());
+        black_box(kv.free_blocks());
     });
 
     bench("routing resolution x1000", 3, 50, Some(1000), || {

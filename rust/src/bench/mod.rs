@@ -9,16 +9,24 @@ use std::time::Instant;
 
 use crate::metrics::stats::Histogram;
 
+/// Summary of one benchmark run.
 pub struct BenchResult {
+    /// benchmark name
     pub name: String,
+    /// timed iterations
     pub iters: usize,
+    /// median iteration seconds
     pub median_secs: f64,
+    /// mean iteration seconds
     pub mean_secs: f64,
+    /// 95th-percentile iteration seconds
     pub p95_secs: f64,
+    /// elements/second from the median, when an element count was given
     pub throughput: Option<f64>,
 }
 
 impl BenchResult {
+    /// One-line machine-readable report.
     pub fn report(&self) -> String {
         let tp = self
             .throughput

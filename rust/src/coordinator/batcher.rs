@@ -12,14 +12,18 @@ use super::request::{SparsityConfig, Tracked};
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ConfigKey(pub String);
 
+/// Per-config FIFO prefill queues + the packing policy (module docs).
 pub struct PrefillQueues {
     queues: BTreeMap<ConfigKey, VecDeque<Tracked>>,
+    /// the prefill artifact's static batch — the "full bucket" threshold
     pub max_batch: usize,
     /// flush a partial batch when its head has waited this long
     pub max_wait_secs: f64,
 }
 
 impl PrefillQueues {
+    /// Queues with a `max_batch` full-bucket threshold and `max_wait_secs`
+    /// flush policy.
     pub fn new(max_batch: usize, max_wait_secs: f64) -> Self {
         PrefillQueues {
             queues: BTreeMap::new(),
@@ -28,14 +32,17 @@ impl PrefillQueues {
         }
     }
 
+    /// Enqueue a tracked request into its config bucket.
     pub fn push(&mut self, key: ConfigKey, t: Tracked) {
         self.queues.entry(key).or_default().push_back(t);
     }
 
+    /// Requests waiting across all buckets.
     pub fn waiting(&self) -> usize {
         self.queues.values().map(|q| q.len()).sum()
     }
 
+    /// Whether every bucket is drained.
     pub fn is_empty(&self) -> bool {
         self.waiting() == 0
     }
@@ -86,7 +93,7 @@ impl PrefillQueues {
         (key, batch)
     }
 
-    /// Pick the bucket to prefill next (see [`Self::select_bucket`]).
+    /// Pick the bucket to prefill next (see `select_bucket`).
     /// Returns up to `free_slots.min(max_batch)` requests.
     pub fn next_batch(
         &mut self,
@@ -102,56 +109,130 @@ impl PrefillQueues {
         Some(self.drain_bucket(key, cap))
     }
 
-    /// Token-packed variant of [`PrefillQueues::next_batch`]: the bucket
-    /// is chosen by the same policy ([`Self::select_bucket`]), but the
-    /// batch is cut by a *token* budget rather than a fixed request
-    /// count — each request contributes `min(prompt_len, seq).max(1)`
-    /// packed tokens, so short prompts can pack more than `max_batch`
-    /// requests (up to `free_slots`) into the same kernel budget and
-    /// long prompts fewer. A bucket counts as "full" once it can fill
-    /// the token budget, `max_batch` requests, or every free slot.
+    /// Token-packed, block-budgeted variant of
+    /// [`PrefillQueues::next_batch`]: the bucket is chosen by the same
+    /// policy (`select_bucket`), but the batch is cut by two
+    /// budgets instead of a fixed request count —
+    ///
+    /// * a **token** budget: each request contributes
+    ///   `min(prompt_len, seq).max(1)` packed tokens, so short prompts
+    ///   can pack more than `max_batch` requests into the same kernel
+    ///   budget and long prompts fewer;
+    /// * a **block** budget ([`BlockBudget`]): each request reserves
+    ///   `ceil((tokens + max_new_tokens) / block_size)` KV blocks, which
+    ///   may live *anywhere* in the pool. When the free-block budget
+    ///   cuts a bucket, the admitted prefix runs now and the remainder
+    ///   continues in a later batch once decode frees blocks —
+    ///   partial-prefill continuation, not head-of-line blocking.
+    ///
+    /// A bucket counts as "full" once it can fill the token budget,
+    /// `max_batch` requests, or the free-block budget (a block-cut
+    /// bucket flushes immediately: waiting cannot help until blocks
+    /// free up). Demand is the cap-clamped reservation admission will
+    /// actually take ([`BlockBudget::demand`]), so an admissible head
+    /// always fits the pool eventually (free recovers to total as
+    /// decode drains). A genuinely unservable request (prompt beyond
+    /// the per-sequence cap) is rejected per-request at admission, not
+    /// here; a defensive branch additionally surfaces a head whose
+    /// demand exceeds a (hand-built) pool smaller than the cap, so no
+    /// budget shape can deadlock the queue.
     pub fn next_packed_batch(
         &mut self,
-        free_slots: usize,
+        budget: BlockBudget,
         seq: usize,
         max_tokens: usize,
         idle: bool,
         now: Instant,
     ) -> Option<(ConfigKey, Vec<Tracked>)> {
-        if free_slots == 0 || max_tokens == 0 {
+        if budget.free_blocks == 0 || max_tokens == 0 {
             return None;
         }
-        let full_at = self.max_batch.min(free_slots).max(1);
-        let packable = |q: &VecDeque<Tracked>| -> (usize, usize) {
+        let full_at = self.max_batch.max(1);
+        // (requests to take, packed tokens, cut by the block budget?)
+        let packable = |q: &VecDeque<Tracked>| -> (usize, usize, bool) {
             let mut toks = 0usize;
+            let mut blocks = 0usize;
             let mut n = 0usize;
+            let mut cut = false;
             for t in q.iter() {
-                if n >= free_slots {
-                    break;
-                }
                 let tk = t.req.prompt.len().min(seq).max(1);
-                // always take at least one request per batch
-                if n > 0 && toks + tk > max_tokens {
+                let bl = budget.demand(tk, t.req.max_new_tokens);
+                if n == 0 {
+                    if bl > budget.free_blocks {
+                        // head doesn't fit the free blocks: wait for
+                        // decode to release some. The > total branch is
+                        // purely defensive — unreachable for a
+                        // scheduler-built budget (demand clamps to the
+                        // cap and the pool is sized to hold the cap),
+                        // but a hand-built budget smaller than the cap
+                        // would otherwise wait forever, so surface the
+                        // head alone and let admission reject it.
+                        if bl <= budget.total_blocks {
+                            cut = true;
+                            break;
+                        }
+                        return (1, tk, true);
+                    }
+                } else if toks + tk > max_tokens {
+                    break;
+                } else if blocks + bl > budget.free_blocks {
+                    cut = true;
                     break;
                 }
                 toks += tk;
+                blocks += bl;
                 n += 1;
                 if toks >= max_tokens {
                     break;
                 }
             }
-            (n, toks)
+            (n, toks, cut)
         };
         let key = self.select_bucket(
             |q| {
-                let (n, toks) = packable(q);
-                n >= full_at || toks >= max_tokens
+                let (n, toks, cut) = packable(q);
+                n >= full_at || toks >= max_tokens || (cut && n > 0)
             },
             idle,
             now,
         )?;
-        let (n, _) = packable(&self.queues[&key]);
+        let (n, _, _) = packable(&self.queues[&key]);
+        if n == 0 {
+            return None; // head waits for blocks to free up
+        }
         Some(self.drain_bucket(key, n))
+    }
+}
+
+/// Free-KV-block budget the packed batcher admits against (built by the
+/// scheduler from the [`super::kv::KvPages`] pool each iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockBudget {
+    /// blocks currently free (anywhere in the pool)
+    pub free_blocks: usize,
+    /// pool capacity — a request needing more than this can never run
+    pub total_blocks: usize,
+    /// tokens per block
+    pub block_size: usize,
+    /// per-sequence token cap (admission clamps reservations here, so
+    /// the batcher must account the same clamped demand)
+    pub max_seq_tokens: usize,
+}
+
+impl BlockBudget {
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size.max(1)).max(1)
+    }
+
+    /// Blocks a request with `prompt_tokens` + `max_new` generation
+    /// budget will actually reserve: the worst case, clamped to the
+    /// per-sequence cap — exactly what admission reserves, so batcher
+    /// accounting and `KvPages::admit_packed` can never disagree.
+    pub fn demand(&self, prompt_tokens: usize, max_new: usize) -> usize {
+        self.blocks_for(
+            (prompt_tokens + max_new).min(self.max_seq_tokens),
+        )
     }
 }
 
@@ -246,16 +327,27 @@ mod tests {
         assert!(q.next_batch(0, true, Instant::now()).is_none());
     }
 
+    fn budget(free: usize, total: usize, bs: usize) -> BlockBudget {
+        BlockBudget {
+            free_blocks: free,
+            total_blocks: total,
+            block_size: bs,
+            // a cap high enough that no test demand clamps
+            max_seq_tokens: 1 << 20,
+        }
+    }
+
     #[test]
     fn packed_batch_packs_short_prompts_beyond_max_batch() {
-        // max_batch 2, but five 2-token prompts fit the 64-token budget
-        // and the 8 free slots: the packed batch takes all five
+        // max_batch 2, but five 2-token prompts (1 KV block each) fit
+        // the 64-token budget and the 8 free blocks: all five pack
         let mut q = PrefillQueues::new(2, 10.0);
         for i in 0..5 {
             q.push(ConfigKey("a".into()), tracked_len(i, 2));
         }
         let (_, batch) = q
-            .next_packed_batch(8, 64, 64, true, Instant::now())
+            .next_packed_batch(budget(8, 8, 16), 64, 64, true,
+                               Instant::now())
             .expect("batch");
         assert_eq!(batch.len(), 5);
         assert!(q.is_empty());
@@ -270,10 +362,11 @@ mod tests {
             q.push(ConfigKey("a".into()), tracked_len(i, 40));
         }
         let now = Instant::now();
-        let (_, b1) = q.next_packed_batch(8, 64, 64, true, now).unwrap();
+        let bb = budget(16, 16, 16);
+        let (_, b1) = q.next_packed_batch(bb, 64, 64, true, now).unwrap();
         assert_eq!(b1.len(), 1);
         assert_eq!(b1[0].req.id, 0);
-        let (_, b2) = q.next_packed_batch(8, 64, 64, true, now).unwrap();
+        let (_, b2) = q.next_packed_batch(bb, 64, 64, true, now).unwrap();
         assert_eq!(b2.len(), 1);
         assert_eq!(b2[0].req.id, 1);
         assert_eq!(q.waiting(), 1);
@@ -283,32 +376,86 @@ mod tests {
         for i in 0..2 {
             q2.push(ConfigKey("a".into()), tracked_len(i, 40));
         }
-        let (_, b3) = q2.next_packed_batch(8, 16, 64, true, now).unwrap();
+        let (_, b3) = q2.next_packed_batch(bb, 16, 64, true, now).unwrap();
         assert_eq!(b3.len(), 2);
     }
 
     #[test]
-    fn packed_batch_respects_free_slots_and_wait_policy() {
+    fn packed_batch_respects_block_budget_and_wait_policy() {
+        // 2-token prompts + 4 generation tokens = 6 tokens = 1 block
+        // at block_size 16
         let mut q = PrefillQueues::new(4, 10.0);
         for i in 0..6 {
             q.push(ConfigKey("a".into()), tracked_len(i, 2));
         }
         let now = Instant::now();
-        // only 3 free slots: batch caps there even with token budget left
-        let (_, b) = q.next_packed_batch(3, 64, 256, true, now).unwrap();
+        // only 3 free blocks: the batch cuts there even with token
+        // budget left, and flushes immediately (a block-cut batch is
+        // "full" — waiting cannot help until decode frees blocks); the
+        // remaining requests continue in a later batch
+        let (_, b) = q
+            .next_packed_batch(budget(3, 24, 16), 64, 256, false, now)
+            .unwrap();
         assert_eq!(b.len(), 3);
-        // remaining 3 < max_batch and under budget: not a full bucket,
-        // so nothing is cut while busy & young...
-        assert!(q.next_packed_batch(8, 64, 256, false, now).is_none());
+        // remaining 3 < max_batch and under both budgets: not a full
+        // bucket, so nothing is cut while busy & young...
+        assert!(q
+            .next_packed_batch(budget(24, 24, 16), 64, 256, false, now)
+            .is_none());
         // ...but an idle engine flushes them all
-        let (_, b2) = q.next_packed_batch(8, 64, 256, true, now).unwrap();
+        let (_, b2) = q
+            .next_packed_batch(budget(24, 24, 16), 64, 256, true, now)
+            .unwrap();
         assert_eq!(b2.len(), 3);
         // a lone young request is not flushed while busy...
         q.push(ConfigKey("a".into()), tracked_len(9, 2));
-        assert!(q.next_packed_batch(8, 64, 256, false, now).is_none());
+        assert!(q
+            .next_packed_batch(budget(24, 24, 16), 64, 256, false, now)
+            .is_none());
         // ...but is when idle
-        assert!(q.next_packed_batch(8, 64, 256, true, now).is_some());
-        assert!(q.next_packed_batch(0, 64, 256, true, now).is_none());
+        assert!(q
+            .next_packed_batch(budget(24, 24, 16), 64, 256, true, now)
+            .is_some());
+        assert!(q
+            .next_packed_batch(budget(0, 24, 16), 64, 256, true, now)
+            .is_none());
+    }
+
+    #[test]
+    fn block_demand_clamps_to_the_per_seq_cap() {
+        let bb = BlockBudget {
+            free_blocks: 4,
+            total_blocks: 4,
+            block_size: 16,
+            max_seq_tokens: 32,
+        };
+        // a 100-token worst case clamps to the 32-token cap -> 2 blocks
+        assert_eq!(bb.demand(20, 80), 2);
+        assert_eq!(bb.demand(4, 4), 1);
+        // clamped demand always fits a pool sized to hold the cap, so
+        // admission and batcher accounting cannot disagree
+        assert!(bb.demand(64, 500) <= bb.total_blocks);
+    }
+
+    #[test]
+    fn packed_batch_head_waits_for_blocks_or_is_surfaced_alone() {
+        let now = Instant::now();
+        // head needs 3 blocks (40 + 4 tokens at block 16); only 2 free
+        // but the pool holds 8: wait for decode to release blocks
+        let mut q = PrefillQueues::new(4, 10.0);
+        q.push(ConfigKey("a".into()), tracked_len(1, 40));
+        assert!(q
+            .next_packed_batch(budget(2, 8, 16), 64, 256, true, now)
+            .is_none());
+        assert_eq!(q.waiting(), 1, "waiting head must stay queued");
+        // head bigger than the whole pool: cut alone for admission to
+        // resolve (clamped reservation or a loud error) rather than
+        // deadlocking the queue behind it
+        let (_, b) = q
+            .next_packed_batch(budget(2, 2, 16), 64, 256, false, now)
+            .expect("oversized head is surfaced");
+        assert_eq!(b.len(), 1);
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -1,89 +1,202 @@
-//! KV-cache slot manager.
+//! Block-paged KV store: the physical memory behind the block tables.
 //!
-//! The decode executable owns a fixed [L, B_dec, C, H_kv, Dh] cache; this
-//! module manages the B_dec slots: allocation, host staging (scattering a
-//! prefill batch's [L, B_pre, S, ...] cache rows into slots), per-slot
-//! lengths and release. The staging buffer is the host mirror the engine
-//! uploads each decode step (see EXPERIMENTS.md §Perf for the measured
-//! cost and the device-resident variant).
+//! [`KvPages`] owns the host K/V arrays in the paged layout
+//! `[L, n_blocks, block_size, H_kv, D_h]` plus a
+//! [`super::paged::BlockPool`] that hands out physical block ids.
+//! Admission stages a prefill batch's KV rows **block by block** through
+//! each sequence's table (copy-on-admit), so a long prompt needs free
+//! blocks *anywhere* in the pool — never a contiguous run; decode
+//! appends each new token's K/V into the sequence's tail block through
+//! a [`PagedKv`] view, allocating a fresh block only on a block
+//! boundary. The engine uploads or addresses this mirror per backend:
+//! the native engine walks the block tables directly, compiled static
+//! backends get a contiguous gather from the default
+//! [`crate::runtime::Engine::decode_paged`].
 
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SlotState {
-    Free,
-    Active { seq_id: u64 },
-}
+use super::paged::{BlockPool, FragStats};
+use crate::runtime::PagedKv;
 
-pub struct KvSlots {
+/// Block-paged KV store (module docs).
+pub struct KvPages {
+    /// transformer layers
     pub n_layers: usize,
-    pub n_slots: usize,
-    pub cache_len: usize,
+    /// KV heads per layer
     pub kv_heads: usize,
+    /// head dimension
     pub head_dim: usize,
-    /// host mirrors [L, B, C, H, D]
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
-    pub state: Vec<SlotState>,
-    /// valid prefix length per slot (== next write position)
-    pub len: Vec<usize>,
+    /// per-sequence token ceiling — the decode artifact's static cache
+    /// length, which is what a compiled contiguous gather can address
+    pub max_seq_tokens: usize,
+    pool: BlockPool,
+    /// keys, `[L, n_blocks, block_size, H_kv * D_h]`
+    k: Vec<f32>,
+    /// values, same layout
+    v: Vec<f32>,
+    /// valid token prefix per admitted sequence
+    len: HashMap<u64, usize>,
 }
 
-impl KvSlots {
+impl KvPages {
+    /// A store of `n_blocks` blocks of `block_size` token rows each,
+    /// shared by all sequences; `max_seq_tokens` caps any one sequence.
     pub fn new(
         n_layers: usize,
-        n_slots: usize,
-        cache_len: usize,
+        n_blocks: usize,
+        block_size: usize,
         kv_heads: usize,
         head_dim: usize,
-    ) -> KvSlots {
-        let sz = n_layers * n_slots * cache_len * kv_heads * head_dim;
-        KvSlots {
+        max_seq_tokens: usize,
+    ) -> KvPages {
+        let sz = n_layers * n_blocks * block_size * kv_heads * head_dim;
+        KvPages {
             n_layers,
-            n_slots,
-            cache_len,
             kv_heads,
             head_dim,
+            max_seq_tokens,
+            pool: BlockPool::new(n_blocks, block_size),
             k: vec![0.0; sz],
             v: vec![0.0; sz],
-            state: vec![SlotState::Free; n_slots],
-            len: vec![0; n_slots],
+            len: HashMap::new(),
         }
     }
 
-    pub fn free_slots(&self) -> usize {
-        self.state.iter().filter(|s| **s == SlotState::Free).count()
+    /// `H_kv * D_h` floats per token row.
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
     }
 
-    pub fn active_slots(&self) -> Vec<usize> {
-        (0..self.n_slots)
-            .filter(|&i| matches!(self.state[i], SlotState::Active { .. }))
-            .collect()
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
     }
 
-    pub fn seq_at(&self, slot: usize) -> Option<u64> {
-        match self.state[slot] {
-            SlotState::Active { seq_id } => Some(seq_id),
-            SlotState::Free => None,
+    /// Total physical blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.pool.n_blocks()
+    }
+
+    /// Currently free blocks.
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Blocks needed for `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.pool.blocks_for(tokens)
+    }
+
+    /// Whether a sequence of `tokens` tokens could be admitted now.
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        tokens <= self.max_seq_tokens && self.pool.can_admit(tokens)
+    }
+
+    /// Free-list fragmentation snapshot (observability).
+    pub fn frag_stats(&self) -> FragStats {
+        self.pool.frag_stats()
+    }
+
+    /// Admitted sequence ids, ascending.
+    pub fn active(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.len.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Valid token prefix of an admitted sequence.
+    pub fn seq_len(&self, seq: u64) -> Option<usize> {
+        self.len.get(&seq).copied()
+    }
+
+    /// The sequence's block table (physical ids in token order).
+    pub fn table(&self, seq: u64) -> Option<&[u32]> {
+        self.pool.table(seq)
+    }
+
+    /// float offset of (layer, block, in-block row 0)
+    fn block_base(&self, layer: usize, block: u32) -> usize {
+        ((layer * self.n_blocks() + block as usize) * self.block_size())
+            * self.kv_dim()
+    }
+
+    /// Zero the physical storage of `blocks` in every layer. Decode's
+    /// paged append writes one row at a time, so stale data past a
+    /// sequence's valid prefix must never be observable.
+    fn zero_blocks(&mut self, blocks: &[u32]) {
+        let span = self.block_size() * self.kv_dim();
+        for l in 0..self.n_layers {
+            for &b in blocks {
+                let at = self.block_base(l, b);
+                self.k[at..at + span].fill(0.0);
+                self.v[at..at + span].fill(0.0);
+            }
         }
     }
 
-    fn slot_stride(&self) -> usize {
-        self.cache_len * self.kv_heads * self.head_dim
+    /// Admit sequence `seq_id` from a token-packed prefill cache
+    /// `[L, total_tokens, H, D]`: its K/V occupy rows
+    /// `start .. start + valid_len` of every layer, and are staged
+    /// block-by-block into a freshly allocated table covering
+    /// `reserve_tokens` (≥ `valid_len`; the scheduler reserves
+    /// `prompt + max_new_tokens` so decode growth can never fail).
+    /// All allocated blocks are zeroed before staging.
+    pub fn admit_packed(
+        &mut self,
+        seq_id: u64,
+        packed_k: &[f32],
+        packed_v: &[f32],
+        start: usize,
+        total_tokens: usize,
+        valid_len: usize,
+        reserve_tokens: usize,
+    ) -> Result<()> {
+        if valid_len == 0 {
+            bail!("admit of empty sequence {seq_id}");
+        }
+        let reserve = reserve_tokens.max(valid_len);
+        if reserve > self.max_seq_tokens {
+            bail!(
+                "sequence {seq_id} needs {reserve} tokens, cache holds {}",
+                self.max_seq_tokens
+            );
+        }
+        if start + valid_len > total_tokens {
+            bail!(
+                "packed rows {start}..{} exceed batch of {total_tokens}",
+                start + valid_len
+            );
+        }
+        let table: Vec<u32> = self.pool.allocate(seq_id, reserve)?.to_vec();
+        self.zero_blocks(&table);
+        let row_sz = self.kv_dim();
+        let bs = self.block_size();
+        for l in 0..self.n_layers {
+            let mut done = 0usize;
+            for &blk in &table {
+                if done >= valid_len {
+                    break;
+                }
+                let rows = bs.min(valid_len - done);
+                let src = (l * total_tokens + start + done) * row_sz;
+                let dst = self.block_base(l, blk);
+                self.k[dst..dst + rows * row_sz]
+                    .copy_from_slice(&packed_k[src..src + rows * row_sz]);
+                self.v[dst..dst + rows * row_sz]
+                    .copy_from_slice(&packed_v[src..src + rows * row_sz]);
+                done += rows;
+            }
+        }
+        self.len.insert(seq_id, valid_len);
+        Ok(())
     }
 
-    fn layer_stride(&self) -> usize {
-        self.n_slots * self.slot_stride()
-    }
-
-    /// Claim a free slot for sequence `seq_id`, scattering its prefill
-    /// KV rows (row `src_row` of a [L, B_pre, S, H, D] prefill cache) into
-    /// the slot and zeroing the tail.
-    ///
-    /// The padded layout is the packed layout with `pre_batch * seq_len`
-    /// total rows and this request's rows starting at `src_row * seq_len`,
-    /// so this delegates to [`KvSlots::admit_packed`] — one copy of the
-    /// slot-claim / tail-zero logic.
+    /// Admit from a right-padded `[L, B_pre, S, H, D]` prefill cache:
+    /// row `src_row`'s first `valid_len` positions. The padded layout is
+    /// the packed layout with `pre_batch * seq_len` total rows and this
+    /// request's rows starting at `src_row * seq_len`, so this delegates
+    /// to [`KvPages::admit_packed`].
     #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &mut self,
@@ -94,7 +207,8 @@ impl KvSlots {
         pre_batch: usize,
         seq_len: usize,
         valid_len: usize,
-    ) -> Result<usize> {
+        reserve_tokens: usize,
+    ) -> Result<()> {
         self.admit_packed(
             seq_id,
             prefill_k,
@@ -102,103 +216,133 @@ impl KvSlots {
             src_row * seq_len,
             pre_batch * seq_len,
             valid_len,
+            reserve_tokens,
         )
     }
 
-    /// Claim a free slot from a token-packed prefill cache
-    /// `[L, total_tokens, H, D]`: this sequence's K/V occupy rows
-    /// `start .. start + valid_len` of every layer. The slot tail is
-    /// zeroed: decode's one-hot write ADDS, so stale values at positions
-    /// >= valid_len would corrupt the cache.
-    pub fn admit_packed(
-        &mut self,
-        seq_id: u64,
-        packed_k: &[f32],
-        packed_v: &[f32],
-        start: usize,
-        total_tokens: usize,
-        valid_len: usize,
-    ) -> Result<usize> {
-        let slot = match self.state.iter().position(|s| *s == SlotState::Free)
-        {
-            Some(s) => s,
-            None => bail!("no free KV slots"),
-        };
-        if valid_len > self.cache_len {
-            bail!("prefill length {valid_len} exceeds cache {}",
-                  self.cache_len);
-        }
-        if start + valid_len > total_tokens {
+    /// Make sure `seq`'s table covers `tokens` tokens, allocating (and
+    /// zeroing) tail blocks on a block boundary. A no-op while the
+    /// admission-time reservation still covers the length.
+    pub fn ensure_capacity(&mut self, seq: u64, tokens: usize)
+                           -> Result<()> {
+        if tokens > self.max_seq_tokens {
             bail!(
-                "packed rows {start}..{} exceed batch of {total_tokens}",
-                start + valid_len
+                "sequence {seq} grew to {tokens} tokens, cache holds {}",
+                self.max_seq_tokens
             );
         }
-        let row_sz = self.kv_heads * self.head_dim;
-        let slot_stride = self.slot_stride();
-        for l in 0..self.n_layers {
-            let dst_base = l * self.layer_stride() + slot * slot_stride;
-            let src_base = (l * total_tokens + start) * row_sz;
-            let n = valid_len * row_sz;
-            self.k[dst_base..dst_base + n]
-                .copy_from_slice(&packed_k[src_base..src_base + n]);
-            self.v[dst_base..dst_base + n]
-                .copy_from_slice(&packed_v[src_base..src_base + n]);
-            // zero the tail (see the doc comment above)
-            self.k[dst_base + n..dst_base + slot_stride].fill(0.0);
-            self.v[dst_base + n..dst_base + slot_stride].fill(0.0);
+        let added = self.pool.extend(seq, tokens)?;
+        if !added.is_empty() {
+            self.zero_blocks(&added);
         }
-        self.state[slot] = SlotState::Active { seq_id };
-        self.len[slot] = valid_len;
-        Ok(slot)
+        Ok(())
     }
 
-    /// Merge the decode output caches back into the host mirror and bump
-    /// slot lengths — but ONLY for the slots that actually stepped. The
-    /// engine writes a K/V row for *every* batch row (static shapes), so
-    /// rows that belong to a different decode group this iteration, or to
-    /// no sequence at all, carry garbage at their write position; copying
-    /// the whole cache would corrupt them.
-    pub fn absorb_decode_output(&mut self, k: Vec<f32>, v: Vec<f32>,
-                                stepped: &[usize]) {
-        debug_assert_eq!(k.len(), self.k.len());
-        let slot_stride = self.slot_stride();
+    /// Bump `seq`'s valid length after the engine appended one decoded
+    /// token's K/V through the paged view.
+    pub fn advance(&mut self, seq: u64) -> Result<()> {
+        let Some(len) = self.len.get_mut(&seq) else {
+            bail!("advance of unknown seq {seq}");
+        };
+        let cap = self
+            .pool
+            .table(seq)
+            .map(|t| t.len() * self.pool.block_size())
+            .unwrap_or(0);
+        if *len + 1 > cap {
+            bail!("seq {seq} advanced past its block table ({cap} tokens)");
+        }
+        *len += 1;
+        Ok(())
+    }
+
+    /// Release a sequence's blocks back to the pool.
+    pub fn release(&mut self, seq: u64) -> Result<()> {
+        self.pool.release(seq)?;
+        self.len.remove(&seq);
+        Ok(())
+    }
+
+    /// A [`PagedKv`] view for one decode step: `rows[i]` names the
+    /// sequence occupying decode-batch row `i` (`None` = static-shape
+    /// filler row with an empty table). Tables are snapshotted into the
+    /// view; the K/V storage is borrowed mutably.
+    pub fn view(&mut self, rows: &[Option<u64>]) -> PagedKv<'_> {
+        let tables: Vec<Vec<u32>> = rows
+            .iter()
+            .map(|r| match r {
+                Some(id) => self
+                    .pool
+                    .table(*id)
+                    .map(|t| t.to_vec())
+                    .unwrap_or_default(),
+                None => Vec::new(),
+            })
+            .collect();
+        PagedKv {
+            n_layers: self.n_layers,
+            n_blocks: self.pool.n_blocks(),
+            block_size: self.pool.block_size(),
+            kv_dim: self.kv_heads * self.head_dim,
+            tables,
+            k: &mut self.k,
+            v: &mut self.v,
+        }
+    }
+
+    /// Contiguous `[L, rows, H*D]` gather of a sequence's first `rows`
+    /// positions — the slot-style view, for parity tests and contiguous
+    /// backends.
+    pub fn gather_seq(&self, seq: u64, rows: usize)
+                      -> Option<(Vec<f32>, Vec<f32>)> {
+        let table = self.pool.table(seq)?;
+        let kvd = self.kv_dim();
+        let bs = self.block_size();
+        if rows > table.len() * bs {
+            return None;
+        }
+        let mut gk = vec![0.0f32; self.n_layers * rows * kvd];
+        let mut gv = vec![0.0f32; self.n_layers * rows * kvd];
         for l in 0..self.n_layers {
-            let lbase = l * self.layer_stride();
-            for &slot in stepped {
-                let a = lbase + slot * slot_stride;
-                self.k[a..a + slot_stride]
-                    .copy_from_slice(&k[a..a + slot_stride]);
-                self.v[a..a + slot_stride]
-                    .copy_from_slice(&v[a..a + slot_stride]);
+            let mut at = 0usize;
+            for &blk in table {
+                if at >= rows {
+                    break;
+                }
+                let n = bs.min(rows - at);
+                let src = self.block_base(l, blk);
+                let dst = (l * rows + at) * kvd;
+                gk[dst..dst + n * kvd]
+                    .copy_from_slice(&self.k[src..src + n * kvd]);
+                gv[dst..dst + n * kvd]
+                    .copy_from_slice(&self.v[src..src + n * kvd]);
+                at += n;
             }
         }
-        for &slot in stepped {
-            self.len[slot] += 1;
-        }
+        Some((gk, gv))
     }
 
-    pub fn release(&mut self, slot: usize) {
-        self.state[slot] = SlotState::Free;
-        self.len[slot] = 0;
-    }
-
-    /// Invariant checks used by property tests.
+    /// Invariant checks used by the property/parity suites.
     pub fn check_invariants(&self) -> Result<()> {
-        let mut seen = std::collections::HashSet::new();
-        for (i, s) in self.state.iter().enumerate() {
-            if let SlotState::Active { seq_id } = s {
-                if !seen.insert(*seq_id) {
-                    bail!("seq {seq_id} owns two slots");
-                }
-                if self.len[i] == 0 {
-                    bail!("active slot {i} has zero length");
-                }
-                if self.len[i] > self.cache_len {
-                    bail!("slot {i} overflows cache");
-                }
-            } else if self.len[i] != 0 {
-                bail!("free slot {i} has nonzero length");
+        self.pool.check_invariants()?;
+        for (&seq, &len) in &self.len {
+            let Some(table) = self.pool.table(seq) else {
+                bail!("seq {seq} has a length but no block table");
+            };
+            if len == 0 {
+                bail!("admitted seq {seq} has zero length");
+            }
+            if len > table.len() * self.pool.block_size() {
+                bail!("seq {seq} length {len} overflows its table");
+            }
+            if len > self.max_seq_tokens {
+                bail!("seq {seq} overflows the per-sequence cap");
+            }
+        }
+        // every owned table belongs to an admitted sequence
+        for seq in self.active() {
+            if self.pool.table(seq).is_none() {
+                bail!("seq {seq} admitted without blocks");
             }
         }
         Ok(())
@@ -209,39 +353,38 @@ impl KvSlots {
 mod tests {
     use super::*;
 
-    fn mk() -> KvSlots {
-        KvSlots::new(2, 3, 8, 1, 4)
+    fn mk(block: usize) -> KvPages {
+        // 2 layers, capacity 3 seqs x 8 tokens, H*D = 4
+        KvPages::new(2, 24 / block, block, 1, 4, 8)
     }
 
     #[test]
-    fn admit_scatter_release() {
-        let mut kv = mk();
+    fn admit_stage_release() {
+        let mut kv = mk(4);
         // prefill cache [L=2, B=2, S=4, H=1, D=4]
         let pre: Vec<f32> = (0..2 * 2 * 4 * 4).map(|i| i as f32).collect();
-        let slot =
-            kv.admit(7, &pre, &pre, 1, 2, 4, 3).unwrap();
-        assert_eq!(slot, 0);
-        assert_eq!(kv.len[0], 3);
-        // layer 0, slot 0, pos 0 == prefill row 1, pos 0
-        let got = &kv.k[0..4];
-        let want = &pre[1 * 4 * 4..1 * 4 * 4 + 4];
-        assert_eq!(got, want);
-        // tail zeroed
-        assert!(kv.k[3 * 4..8 * 4].iter().all(|&x| x == 0.0));
+        kv.admit(7, &pre, &pre, 1, 2, 4, 3, 3).unwrap();
+        assert_eq!(kv.seq_len(7), Some(3));
+        // gather reproduces prefill row 1's first 3 positions per layer
+        let (gk, _) = kv.gather_seq(7, 3).unwrap();
+        for l in 0..2 {
+            let src = (l * 2 + 1) * 4 * 4;
+            assert_eq!(&gk[l * 3 * 4..(l * 3 + 3) * 4],
+                       &pre[src..src + 3 * 4]);
+        }
         kv.check_invariants().unwrap();
-        kv.release(slot);
-        assert_eq!(kv.free_slots(), 3);
+        kv.release(7).unwrap();
+        assert_eq!(kv.free_blocks(), kv.n_blocks());
         kv.check_invariants().unwrap();
     }
 
     #[test]
-    fn admit_packed_matches_padded_admit() {
+    fn admit_packed_matches_padded_admit_across_block_sizes() {
         // the same rows staged through [L, B, S, H, D] and through the
         // packed [L, total, H, D] layout must land identically
         let (l, b, s, hd) = (2usize, 2usize, 4usize, 4usize);
         let pre: Vec<f32> =
             (0..l * b * s * hd).map(|i| i as f32).collect();
-        // packed layout: request 0 = 3 rows, request 1 = 4 rows
         let lens = [3usize, 4usize];
         let total: usize = lens.iter().sum();
         let mut packed = vec![0.0f32; l * total * hd];
@@ -255,46 +398,94 @@ mod tests {
                 row += len;
             }
         }
-        let mut kv_a = mk();
-        let mut kv_b = mk();
-        for (bi, &len) in lens.iter().enumerate() {
-            let sa = kv_a
-                .admit(bi as u64, &pre, &pre, bi, b, s, len)
-                .unwrap();
-            let start: usize = lens[..bi].iter().sum();
-            let sb = kv_b
-                .admit_packed(
-                    bi as u64, &packed, &packed, start, total, len,
+        for block in [2usize, 4, 8] {
+            let mut kv_a = mk(block);
+            let mut kv_b = mk(block);
+            for (bi, &len) in lens.iter().enumerate() {
+                kv_a.admit(bi as u64, &pre, &pre, bi, b, s, len, len)
+                    .unwrap();
+                let start: usize = lens[..bi].iter().sum();
+                kv_b.admit_packed(
+                    bi as u64, &packed, &packed, start, total, len, len,
                 )
                 .unwrap();
-            assert_eq!(sa, sb);
+            }
+            for (bi, &len) in lens.iter().enumerate() {
+                assert_eq!(
+                    kv_a.gather_seq(bi as u64, len),
+                    kv_b.gather_seq(bi as u64, len),
+                    "block {block} seq {bi}"
+                );
+            }
+            kv_b.check_invariants().unwrap();
         }
-        assert_eq!(kv_a.k, kv_b.k);
-        assert_eq!(kv_a.len, kv_b.len);
-        kv_b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reservation_spans_blocks_and_zeroes_them() {
+        let mut kv = mk(4);
+        let pre: Vec<f32> = (0..2 * 6 * 4).map(|_| 1.5f32).collect();
+        // 3 valid tokens, reserve 7 -> 2 blocks; tail must be zero
+        kv.admit_packed(1, &pre, &pre, 0, 6, 3, 7).unwrap();
+        assert_eq!(kv.table(1).unwrap().len(), 2);
+        let (gk, gv) = kv.gather_seq(1, 7).unwrap();
+        for l in 0..2 {
+            let base = l * 7 * 4;
+            assert!(gk[base..base + 3 * 4].iter().all(|&x| x == 1.5));
+            assert!(gk[base + 3 * 4..base + 7 * 4]
+                .iter()
+                .chain(gv[base + 3 * 4..base + 7 * 4].iter())
+                .all(|&x| x == 0.0));
+        }
     }
 
     #[test]
     fn admit_packed_rejects_out_of_range_rows() {
-        let mut kv = mk();
+        let mut kv = mk(4);
         let packed = vec![0.5f32; 2 * 6 * 4];
-        assert!(kv.admit_packed(1, &packed, &packed, 4, 6, 4).is_err());
+        assert!(kv
+            .admit_packed(1, &packed, &packed, 4, 6, 4, 4)
+            .is_err());
     }
 
     #[test]
-    fn exhaustion() {
-        let mut kv = mk();
-        let pre = vec![0.5; 2 * 1 * 4 * 4];
+    fn exhaustion_and_per_seq_cap() {
+        let mut kv = mk(8); // 3 blocks of 8
+        let pre = vec![0.5; 2 * 8 * 4];
         for i in 0..3 {
-            kv.admit(i, &pre, &pre, 0, 1, 4, 2).unwrap();
+            kv.admit_packed(i, &pre, &pre, 0, 8, 2, 8).unwrap();
         }
-        assert!(kv.admit(99, &pre, &pre, 0, 1, 4, 2).is_err());
+        assert!(kv.admit_packed(99, &pre, &pre, 0, 8, 2, 8).is_err());
+        kv.release(0).unwrap();
+        // per-sequence cap: 9 > max_seq_tokens 8
+        assert!(kv.admit_packed(99, &pre, &pre, 0, 8, 2, 9).is_err());
+        assert!(!kv.can_admit(9));
     }
 
     #[test]
-    fn rejects_overflow() {
-        let mut kv = mk();
-        let pre = vec![0.5; 2 * 1 * 16 * 4];
-        assert!(kv.admit(1, &pre, &pre, 0, 1, 16, 16).is_err());
+    fn ensure_capacity_allocates_on_block_boundary() {
+        let mut kv = mk(4);
+        let pre = vec![0.5; 2 * 4 * 4];
+        kv.admit_packed(1, &pre, &pre, 0, 4, 4, 4).unwrap(); // 1 block
+        assert_eq!(kv.table(1).unwrap().len(), 1);
+        kv.ensure_capacity(1, 4).unwrap(); // still 1 block
+        assert_eq!(kv.table(1).unwrap().len(), 1);
+        kv.ensure_capacity(1, 5).unwrap(); // boundary -> 2 blocks
+        assert_eq!(kv.table(1).unwrap().len(), 2);
+        kv.advance(1).unwrap();
+        assert_eq!(kv.seq_len(1), Some(5));
+        // growth past the per-seq cap is rejected
+        assert!(kv.ensure_capacity(1, 9).is_err());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn advance_past_table_is_an_error() {
+        let mut kv = mk(4);
+        let pre = vec![0.5; 2 * 4 * 4];
+        kv.admit_packed(1, &pre, &pre, 0, 4, 4, 4).unwrap();
+        // table covers 4 tokens, len is 4: advancing without
+        // ensure_capacity must fail loudly
+        assert!(kv.advance(1).is_err());
     }
 }

@@ -5,13 +5,19 @@
 //!
 //! ```text
 //!  clients ──mpsc──► Router ──per-config queues──► Scheduler loop
-//!                                                    │  prefill batch (N:M sparse, static shapes)
-//!                                                    │  decode batch  (dense, KV-cache slots)
+//!                                                    │  prefill batch (N:M sparse, token-packed)
+//!                                                    │  decode batch  (dense, block-paged KV)
 //!                                                    ▼
 //!                                     dyn runtime::Engine
 //!                                     (NativeEngine by default;
 //!                                      PJRT behind the `pjrt` feature)
 //! ```
+//!
+//! The KV cache is genuinely block-paged (`paged::BlockPool` allocator +
+//! `kv::KvPages` physical store): admission is by free-**block** count,
+//! so long prompts never need a contiguous slot and concurrency is
+//! bounded by KV memory, not by decode-batch slots. See
+//! `docs/ARCHITECTURE.md` for the full request lifecycle.
 //!
 //! The paper's contribution appears as the per-request **sparsity config**:
 //! requests choose `dense | 2:4 | 4:8 | 8:16` x `naive | ls | all` x

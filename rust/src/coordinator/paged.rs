@@ -1,34 +1,73 @@
-//! Block-granular KV accounting (paged-attention-style allocator).
+//! Block-granular KV allocator (paged-attention-style).
 //!
-//! The decode executable's physical cache is slot-contiguous (static
-//! shapes — see kv.rs), but admission control and capacity accounting run
-//! at block granularity like vLLM's PagedAttention: a sequence owns
-//! ceil(len / BLOCK) blocks from a global pool, blocks are ref-counted so
-//! a shared prompt prefix can be accounted once (prefix caching), and the
-//! scheduler admits a prefill batch only if its worst-case block demand
-//! fits. This keeps the coordinator's admission logic identical to a
-//! paged deployment even though the tiny-model substrate doesn't need
-//! physical paging.
+//! This is a *real* allocator, not an accounting stub: [`BlockPool`]
+//! hands out physical block ids from a global free list and keeps a
+//! per-sequence **block table** (the ordered list of physical blocks
+//! holding that sequence's KV rows, like vLLM's PagedAttention). The
+//! physical storage lives in [`super::kv::KvPages`], which stages
+//! prefill KV into the allocated blocks and lets decode append into a
+//! sequence's tail block; the scheduler admits a prefill batch by free
+//! **block** count, so a long prompt never needs a contiguous run of
+//! anything — its table can be scattered across the whole pool.
+//!
+//! Blocks are ref-counted so a shared prompt prefix can be accounted
+//! once ([`BlockPool::fork`], copy-on-write accounting); writers must
+//! copy a shared tail block before appending to it (the serving
+//! scheduler never forks, so its blocks are always exclusively owned).
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
+/// Default tokens-per-block of the paged KV cache (vLLM's default).
 pub const DEFAULT_BLOCK: usize = 16;
 
+/// Snapshot of the free list's shape (see [`BlockPool::frag_stats`]).
+///
+/// Fragmentation is *observability only*: allocation never needs a
+/// contiguous run, so a scattered free list affects nothing but cache
+/// locality. The metric exists so serving dashboards can correlate
+/// paging behavior with latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FragStats {
+    /// Total blocks in the pool.
+    pub n_blocks: usize,
+    /// Currently free blocks.
+    pub free_blocks: usize,
+    /// Length of the longest run of physically consecutive free ids.
+    pub longest_free_run: usize,
+    /// Number of maximal consecutive free runs.
+    pub free_runs: usize,
+}
+
+impl FragStats {
+    /// `0.0` = all free space is one contiguous run; approaches `1.0`
+    /// as the free list scatters into single-block islands. `0.0` when
+    /// nothing is free.
+    pub fn fragmentation(&self) -> f64 {
+        if self.free_blocks == 0 {
+            return 0.0;
+        }
+        1.0 - self.longest_free_run as f64 / self.free_blocks as f64
+    }
+}
+
+/// Physical block allocator + per-sequence block tables (module docs).
 #[derive(Debug, Clone)]
 pub struct BlockPool {
-    pub block_size: usize,
-    pub n_blocks: usize,
+    block_size: usize,
+    n_blocks: usize,
+    /// LIFO free list of physical ids (deterministic allocation order).
     free: Vec<u32>,
     refcount: Vec<u16>,
-    /// seq -> owned block ids (in order)
+    /// seq -> block table: owned physical ids in token order.
     owners: HashMap<u64, Vec<u32>>,
 }
 
 impl BlockPool {
+    /// A pool of `n_blocks` physical blocks of `block_size` tokens each.
     pub fn new(n_blocks: usize, block_size: usize) -> BlockPool {
         BlockPool {
-            block_size,
+            block_size: block_size.max(1),
             n_blocks,
             free: (0..n_blocks as u32).rev().collect(),
             refcount: vec![0; n_blocks],
@@ -36,24 +75,45 @@ impl BlockPool {
         }
     }
 
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Total blocks in the pool.
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }
 
+    /// Currently free blocks.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Whether `tokens` more tokens could be allocated right now — from
+    /// *anywhere* in the pool; contiguity is never required.
     pub fn can_admit(&self, tokens: usize) -> bool {
         self.blocks_for(tokens) <= self.free.len()
     }
 
-    /// Allocate blocks for a new sequence of `tokens` tokens.
+    /// The sequence's block table (physical ids in token order), if
+    /// allocated.
+    pub fn table(&self, seq: u64) -> Option<&[u32]> {
+        self.owners.get(&seq).map(|b| b.as_slice())
+    }
+
+    /// Allocate blocks for a new sequence of `tokens` tokens; returns
+    /// the table.
     pub fn allocate(&mut self, seq: u64, tokens: usize) -> Result<&[u32]> {
         if self.owners.contains_key(&seq) {
             bail!("seq {seq} already has an allocation");
         }
-        let need = self.blocks_for(tokens);
+        let need = self.blocks_for(tokens).max(1);
         if need > self.free.len() {
             bail!("pool exhausted: need {need}, free {}", self.free.len());
         }
@@ -67,11 +127,12 @@ impl BlockPool {
         Ok(self.owners.get(&seq).unwrap())
     }
 
-    /// Extend a sequence by `new_tokens` (decode growth); allocates new
-    /// tail blocks as needed.
-    pub fn grow(&mut self, seq: u64, old_tokens: usize, new_tokens: usize)
-                -> Result<()> {
-        let need_total = self.blocks_for(old_tokens + new_tokens);
+    /// Extend a sequence's table to cover `total_tokens` tokens (decode
+    /// growth past a block boundary); returns the newly allocated tail
+    /// block ids (empty when the table already covers the length).
+    pub fn extend(&mut self, seq: u64, total_tokens: usize)
+                  -> Result<Vec<u32>> {
+        let need_total = self.blocks_for(total_tokens).max(1);
         let have = self
             .owners
             .get(&seq)
@@ -79,18 +140,24 @@ impl BlockPool {
             .ok_or_else(|| anyhow::anyhow!("seq {seq} not allocated"))?;
         let extra = need_total.saturating_sub(have);
         if extra > self.free.len() {
-            bail!("pool exhausted growing seq {seq}");
+            bail!(
+                "pool exhausted growing seq {seq}: need {extra}, free {}",
+                self.free.len()
+            );
         }
+        let mut added = Vec::with_capacity(extra);
         for _ in 0..extra {
             let b = self.free.pop().unwrap();
             self.refcount[b as usize] = 1;
             self.owners.get_mut(&seq).unwrap().push(b);
+            added.push(b);
         }
-        Ok(())
+        Ok(added)
     }
 
     /// Fork: new sequence shares the owner's blocks (prefix cache hit) —
-    /// copy-on-write accounting via refcounts.
+    /// copy-on-write accounting via refcounts. Writers must copy a
+    /// shared block before mutating it.
     pub fn fork(&mut self, parent: u64, child: u64) -> Result<()> {
         let blocks = self
             .owners
@@ -107,18 +174,52 @@ impl BlockPool {
         Ok(())
     }
 
-    pub fn release(&mut self, seq: u64) {
-        if let Some(blocks) = self.owners.remove(&seq) {
-            for b in blocks {
-                let rc = &mut self.refcount[b as usize];
-                *rc -= 1;
-                if *rc == 0 {
-                    self.free.push(b);
+    /// Return a sequence's blocks to the free list. Freeing a sequence
+    /// that owns nothing, or freeing twice, is an error — silent
+    /// double-frees are how block tables end up aliased.
+    pub fn release(&mut self, seq: u64) -> Result<()> {
+        let Some(blocks) = self.owners.remove(&seq) else {
+            bail!("release of unallocated seq {seq} (double free?)");
+        };
+        for b in blocks {
+            let rc = &mut self.refcount[b as usize];
+            if *rc == 0 {
+                bail!("double free of block {b} (refcount already 0)");
+            }
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    /// Free-list shape for the fragmentation gauge (module docs).
+    pub fn frag_stats(&self) -> FragStats {
+        let mut ids: Vec<u32> = self.free.clone();
+        ids.sort_unstable();
+        let (mut longest, mut runs, mut cur) = (0usize, 0usize, 0usize);
+        let mut prev: Option<u32> = None;
+        for &b in &ids {
+            match prev {
+                Some(p) if b == p + 1 => cur += 1,
+                _ => {
+                    runs += 1;
+                    cur = 1;
                 }
             }
+            longest = longest.max(cur);
+            prev = Some(b);
+        }
+        FragStats {
+            n_blocks: self.n_blocks,
+            free_blocks: ids.len(),
+            longest_free_run: longest,
+            free_runs: runs,
         }
     }
 
+    /// Internal-consistency checks used by the property/parity suites.
     pub fn check_invariants(&self) -> Result<()> {
         let mut expected = vec![0u16; self.n_blocks];
         for blocks in self.owners.values() {
@@ -149,20 +250,44 @@ mod tests {
     use super::*;
 
     #[test]
-    fn alloc_grow_release() {
+    fn alloc_extend_release() {
         let mut p = BlockPool::new(8, 16);
         assert_eq!(p.blocks_for(1), 1);
         assert_eq!(p.blocks_for(16), 1);
         assert_eq!(p.blocks_for(17), 2);
-        p.allocate(1, 40).unwrap(); // 3 blocks
+        let table = p.allocate(1, 40).unwrap().to_vec(); // 3 blocks
+        assert_eq!(table.len(), 3);
         assert_eq!(p.free_blocks(), 5);
-        p.grow(1, 40, 8).unwrap(); // 48 tokens -> 3 blocks, no extra
+        assert!(p.extend(1, 48).unwrap().is_empty()); // still 3 blocks
         assert_eq!(p.free_blocks(), 5);
-        p.grow(1, 48, 1).unwrap(); // 49 -> 4 blocks
+        let added = p.extend(1, 49).unwrap(); // 49 -> 4 blocks
+        assert_eq!(added.len(), 1);
+        assert_eq!(p.table(1).unwrap().len(), 4);
         assert_eq!(p.free_blocks(), 4);
         p.check_invariants().unwrap();
-        p.release(1);
+        p.release(1).unwrap();
         assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocation_needs_no_contiguous_run() {
+        // free every other sequence so no two free ids are adjacent,
+        // then allocate a table bigger than any contiguous free run
+        let mut p = BlockPool::new(8, 4);
+        for seq in 0..4u64 {
+            p.allocate(seq, 8).unwrap(); // 2 blocks each
+        }
+        p.release(0).unwrap();
+        p.release(2).unwrap();
+        let fs = p.frag_stats();
+        assert_eq!(fs.free_blocks, 4);
+        assert!(fs.longest_free_run < 4, "free list must be fragmented");
+        assert!(fs.fragmentation() > 0.0);
+        // 4 blocks = 16 tokens, scattered: still admits
+        assert!(p.can_admit(16));
+        let t = p.allocate(9, 16).unwrap().to_vec();
+        assert_eq!(t.len(), 4);
         p.check_invariants().unwrap();
     }
 
@@ -172,10 +297,10 @@ mod tests {
         p.allocate(1, 32).unwrap(); // 2 blocks
         p.fork(1, 2).unwrap();
         assert_eq!(p.free_blocks(), 2); // shared, not copied
-        p.release(1);
+        p.release(1).unwrap();
         assert_eq!(p.free_blocks(), 2); // child still holds them
         p.check_invariants().unwrap();
-        p.release(2);
+        p.release(2).unwrap();
         assert_eq!(p.free_blocks(), 4);
         p.check_invariants().unwrap();
     }
@@ -187,5 +312,50 @@ mod tests {
         assert!(!p.can_admit(33));
         p.allocate(7, 32).unwrap();
         assert!(p.allocate(8, 1).is_err());
+    }
+
+    #[test]
+    fn release_of_unallocated_seq_is_an_error() {
+        let mut p = BlockPool::new(2, 16);
+        let err = p.release(5).unwrap_err();
+        assert!(err.to_string().contains("unallocated"));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_free_is_an_error() {
+        let mut p = BlockPool::new(2, 16);
+        p.allocate(1, 16).unwrap();
+        p.release(1).unwrap();
+        assert!(p.release(1).is_err());
+        assert_eq!(p.free_blocks(), 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_of_unallocated_seq_is_an_error() {
+        let mut p = BlockPool::new(2, 16);
+        assert!(p.extend(3, 16).is_err());
+    }
+
+    #[test]
+    fn frag_stats_track_free_runs() {
+        let mut p = BlockPool::new(6, 4);
+        let fresh = p.frag_stats();
+        assert_eq!(fresh.longest_free_run, 6);
+        assert_eq!(fresh.free_runs, 1);
+        assert_eq!(fresh.fragmentation(), 0.0);
+        // LIFO free list: seqs own ids in order 0..6
+        for seq in 0..6u64 {
+            p.allocate(seq, 4).unwrap();
+        }
+        p.release(1).unwrap();
+        p.release(3).unwrap();
+        p.release(4).unwrap();
+        let fs = p.frag_stats();
+        assert_eq!(fs.free_blocks, 3);
+        assert_eq!(fs.longest_free_run, 2); // {3,4}
+        assert_eq!(fs.free_runs, 2); // {1}, {3,4}
+        assert!(fs.fragmentation() > 0.0);
     }
 }

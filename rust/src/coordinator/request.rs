@@ -8,6 +8,7 @@ use crate::sparsity::policy::Setting;
 /// Per-request sparsity knob — the paper's method surfaced at the API.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SparsityConfig {
+    /// skip-policy setting (naive / layer-skip / all)
     pub setting: Setting,
     /// N:M ratio; None for dense
     pub nm: Option<(usize, usize)>,
@@ -16,10 +17,12 @@ pub struct SparsityConfig {
 }
 
 impl SparsityConfig {
+    /// The dense fp baseline config.
     pub fn dense() -> Self {
         SparsityConfig { setting: Setting::Dense, nm: None, quantized: false }
     }
 
+    /// Amber Pruner at N:M (fp, full policy with Robust-Norm scoring).
     pub fn amber(n: usize, m: usize) -> Self {
         SparsityConfig {
             setting: Setting::All,
@@ -28,6 +31,7 @@ impl SparsityConfig {
         }
     }
 
+    /// Outstanding-sparse at N:M (W8A8 + layer skipping).
     pub fn outstanding(n: usize, m: usize) -> Self {
         SparsityConfig {
             setting: Setting::LayerSkip,
@@ -67,6 +71,7 @@ impl SparsityConfig {
         Some(SparsityConfig { setting, nm: Some((n, m)), quantized })
     }
 
+    /// Canonical string form (inverse of [`SparsityConfig::parse`]).
     pub fn label(&self) -> String {
         let q = if self.quantized { "+sq" } else { "" };
         match self.nm {
@@ -83,29 +88,45 @@ impl SparsityConfig {
     }
 }
 
+/// One generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// caller-chosen request id (echoed in the response)
     pub id: u64,
+    /// prompt token ids
     pub prompt: Vec<i32>,
+    /// generation budget
     pub max_new_tokens: usize,
+    /// the request's sparsity configuration
     pub config: SparsityConfig,
 }
 
+/// The completed generation for one request.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// the request's id
     pub id: u64,
+    /// generated token ids (includes the terminating EOS, if any)
     pub tokens: Vec<i32>,
+    /// time to first token, seconds
     pub ttft_secs: f64,
+    /// end-to-end latency, seconds
     pub e2e_secs: f64,
+    /// the prefill artifact that served the request (may be empty)
     pub prefill_artifact: String,
 }
 
 /// A request in flight inside the engine.
 pub struct Tracked {
+    /// the request itself
     pub req: Request,
+    /// when it entered the engine
     pub arrived: Instant,
+    /// when its first token was produced
     pub first_token_at: Option<Instant>,
+    /// tokens generated so far
     pub generated: Vec<i32>,
+    /// where the response goes on completion
     pub reply: Sender<Response>,
 }
 

@@ -15,17 +15,24 @@ use anyhow::{bail, Result};
 use super::request::{Request, Response};
 use super::scheduler::EngineMsg;
 
+/// Replica-selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// cycle through replicas in order
     RoundRobin,
+    /// pick the replica with the fewest requests in flight
     LeastOutstanding,
 }
 
+/// One engine replica behind the router.
 pub struct Replica {
+    /// the replica's message channel
     pub tx: Sender<EngineMsg>,
+    /// requests dispatched but not yet completed
     pub outstanding: Arc<AtomicU64>,
 }
 
+/// Fronts one or more engine replicas (module docs).
 pub struct Router {
     replicas: Vec<Replica>,
     policy: Policy,
@@ -33,10 +40,12 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over `replicas` with the given policy.
     pub fn new(replicas: Vec<Replica>, policy: Policy) -> Router {
         Router { replicas, policy, rr_next: 0 }
     }
 
+    /// Replica count.
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
     }
@@ -62,6 +71,7 @@ impl Router {
         })
     }
 
+    /// Route one request to a replica; returns the replica index.
     pub fn dispatch(
         &mut self,
         req: Request,
@@ -85,6 +95,7 @@ impl Router {
             .fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Send shutdown to every replica.
     pub fn shutdown(&self) {
         for r in &self.replicas {
             let _ = r.tx.send(EngineMsg::Shutdown);

@@ -2,38 +2,54 @@
 //!
 //! Each iteration either (a) packs a same-config prefill batch, runs the
 //! (possibly N:M-sparse) prefill artifact, samples first tokens and
-//! admits the sequences into KV slots, or (b) advances every active slot
-//! one dense decode step. Prefill is prioritized (the paper's setting:
-//! prefill is the compute bottleneck being accelerated); a partial prefill
-//! batch is flushed once its head request ages past `max_wait` or the
-//! decode side is idle.
+//! admits the sequences into the block-paged KV store, or (b) advances a
+//! decode batch one step. Prefill is prioritized (the paper's setting:
+//! prefill is the compute bottleneck being accelerated); a partial
+//! prefill batch is flushed once its head request ages past `max_wait`,
+//! the decode side is idle, or the free-block budget cuts it (the rest
+//! of the bucket continues in a later batch).
+//!
+//! Admission is by free **block** count ([`super::paged::BlockPool`]):
+//! a request reserves `ceil((prompt + max_new_tokens) / block)` blocks,
+//! which may live anywhere in the pool — long prompts never need a
+//! contiguous KV slot, so concurrency is bounded by total KV memory,
+//! not by `decode_batch` slots. When more sequences are active than the
+//! decode artifact's static batch, decode steps the least-advanced
+//! sequences first (fair round-robin by generated length, then id).
 //!
 //! The loop is backend-neutral: it drives a `Box<dyn runtime::Engine>`,
 //! so the same scheduler serves the native CPU backend (default) and the
-//! PJRT backend (`pjrt` feature).
+//! PJRT backend (`pjrt` feature), which sees contiguous KV via the
+//! default [`crate::runtime::Engine::decode_paged`] gather.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{routing, ConfigKey, PrefillQueues};
-use super::kv::KvSlots;
-use super::paged::{BlockPool, DEFAULT_BLOCK};
+use super::batcher::{routing, BlockBudget, ConfigKey, PrefillQueues};
+use super::kv::KvPages;
+use super::paged::DEFAULT_BLOCK;
 use super::request::{Request, Response, Tracked};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{Engine as ExecEngine, SparsityAudit};
 use crate::tensor::math::argmax;
 
+/// End-of-sequence token id of the synthetic token world.
 pub const EOS: i32 = 2;
+/// Padding token id.
 pub const PAD: i32 = 0;
 
+/// Engine-loop configuration (model, serving shapes, scheduling knobs).
 #[derive(Clone)]
 pub struct EngineConfig {
+    /// model name (manifest key)
     pub model: String,
+    /// prefill artifact sequence length to serve
     pub prefill_seq: usize,
+    /// flush a partial prefill batch after its head waited this long
     pub max_wait_secs: f64,
     /// stop after this many completed requests (0 = run until channel
     /// closes)
@@ -43,9 +59,16 @@ pub struct EngineConfig {
     /// available parallelism, capped at 8 — results are bit-identical
     /// at every width (see the batch-parity suite).
     pub pool_threads: usize,
+    /// tokens per KV block ([`DEFAULT_BLOCK`] unless overridden).
+    /// Results are bit-identical at every block size (see the
+    /// paged-parity suite); the knob exists for memory-granularity
+    /// tuning and tests.
+    pub kv_block: usize,
 }
 
 impl EngineConfig {
+    /// Defaults for `model`: seq 64, 5 ms max-wait, host parallelism,
+    /// [`DEFAULT_BLOCK`]-token KV blocks.
     pub fn new(model: &str) -> EngineConfig {
         EngineConfig {
             model: model.to_string(),
@@ -53,6 +76,7 @@ impl EngineConfig {
             max_wait_secs: 0.005,
             run_until: 0,
             pool_threads: default_pool_threads(),
+            kv_block: DEFAULT_BLOCK,
         }
     }
 }
@@ -64,37 +88,46 @@ fn default_pool_threads() -> usize {
         .min(8)
 }
 
+/// Messages accepted by [`Engine::run`]'s channel.
 pub enum EngineMsg {
+    /// Enqueue a request; the response goes to the provided sender.
     Submit(Request, Sender<Response>),
+    /// Drain remaining work, then exit the serve loop.
     Shutdown,
 }
 
 struct ActiveSeq {
     tracked: Tracked,
-    slot: usize,
     last_token: i32,
     decode_artifact: String,
     decode_binding: String,
     last_token_at: Instant,
 }
 
+/// The serving engine: scheduler state over an execution backend.
 pub struct Engine {
+    /// engine-loop configuration
     pub cfg: EngineConfig,
+    /// the execution backend being scheduled
     pub rt: Box<dyn ExecEngine>,
+    /// shared serving metrics
     pub metrics: Arc<EngineMetrics>,
     queues: PrefillQueues,
-    kv: KvSlots,
-    /// block-granular admission accounting (paged-attention style)
-    pool: BlockPool,
+    /// block-paged KV store (physical blocks + per-sequence tables)
+    kv: KvPages,
     active: HashMap<u64, ActiveSeq>,
-    /// decode artifact shared by all active seqs in a decode batch;
-    /// batches are grouped per decode artifact (fp vs sq decode differ).
+    /// round-robin cursor over decode-artifact groups (fp vs sq decode
+    /// differ), so no group starves under sustained mixed-config load
+    decode_rr: usize,
     #[allow(dead_code)] // kept for config introspection / tests
     vocab: usize,
     completed: usize,
 }
 
 impl Engine {
+    /// Build the engine for `cfg.model`, sizing the paged KV store from
+    /// the decode artifact's static shapes (`batch * cache` tokens of
+    /// capacity, split into `cfg.kv_block`-token blocks).
     pub fn new(
         mut rt: Box<dyn ExecEngine>,
         cfg: EngineConfig,
@@ -125,17 +158,21 @@ impl Engine {
             .map(|a| a.batch)
             .unwrap_or(8)
             .max(1);
-        let kv = KvSlots::new(
+        let kv_block = cfg.kv_block.max(1);
+        let n_blocks = (dec.batch * dec.cache / kv_block).max(1);
+        // the per-sequence cap must never exceed what the pool can
+        // physically hold (block flooring can shave tokens off the
+        // nominal batch*cache capacity)
+        let max_seq = dec.cache.min(n_blocks * kv_block);
+        let kv = KvPages::new(
             g("n_layers"),
-            dec.batch,
-            dec.cache,
+            n_blocks,
+            kv_block,
             g("n_kv_heads"),
             g("head_dim"),
+            max_seq,
         );
-        let pool = BlockPool::new(
-            dec.batch * dec.cache / DEFAULT_BLOCK,
-            DEFAULT_BLOCK,
-        );
+        EngineMetrics::set(&metrics.kv_blocks_total, n_blocks as u64);
         let vocab = g("vocab_size");
         Ok(Engine {
             queues: PrefillQueues::new(prefill_batch, cfg.max_wait_secs),
@@ -143,13 +180,14 @@ impl Engine {
             rt,
             metrics,
             kv,
-            pool,
             active: HashMap::new(),
+            decode_rr: 0,
             vocab,
             completed: 0,
         })
     }
 
+    /// Enqueue a request into its config bucket.
     pub fn submit(&mut self, req: Request, reply: Sender<Response>) {
         let (prefill, _, _) =
             routing(&self.cfg.model, self.cfg.prefill_seq, &req.config);
@@ -213,10 +251,18 @@ impl Engine {
         let now = Instant::now();
         // token-packed batching: the budget is the prefill artifact's
         // static token capacity (batch x seq), but short prompts can
-        // pack more requests than the static batch into it
+        // pack more requests than the static batch into it. Admission
+        // itself is by free-block count: each request's worst-case KV
+        // footprint must fit somewhere in the pool.
         let budget = self.queues.max_batch * self.cfg.prefill_seq;
+        let blocks = BlockBudget {
+            free_blocks: self.kv.free_blocks(),
+            total_blocks: self.kv.n_blocks(),
+            block_size: self.kv.block_size(),
+            max_seq_tokens: self.kv.max_seq_tokens,
+        };
         if let Some((key, batch)) = self.queues.next_packed_batch(
-            self.kv.free_slots(),
+            blocks,
             self.cfg.prefill_seq,
             budget,
             idle,
@@ -279,25 +325,50 @@ impl Engine {
                 .observe_ttft(now.duration_since(t.arrived).as_secs_f64());
             t.generated.push(first);
             let id = t.req.id;
-            // block-granular admission accounting: reserve the sequence's
-            // worst-case footprint (prompt + full generation budget)
-            self.pool
-                .allocate(id, len + t.req.max_new_tokens)
-                .ok();
-            let slot = self.kv.admit_packed(
+            // block-paged admission: stage this request's packed KV rows
+            // block-by-block, reserving its worst-case footprint
+            // (prompt + full generation budget) so decode growth cannot
+            // fail mid-stream. Blocks may be scattered anywhere. The
+            // reservation clamps to the per-sequence cap — a generation
+            // budget the cache can't hold truncates at the cap
+            // (run_decode force-completes) instead of erroring.
+            let reserve =
+                (len + t.req.max_new_tokens).min(self.kv.max_seq_tokens);
+            if let Err(err) = self.kv.admit_packed(
                 id,
                 &out.k_cache,
                 &out.v_cache,
                 start,
                 total,
                 len,
-            )?;
+                reserve,
+            ) {
+                // unservable request (e.g. a prompt longer than the KV
+                // cap on a misconfigured manifest): fail it ALONE with
+                // its prefill-sampled token, never the whole serve loop
+                crate::warn_log!(
+                    "request {id} rejected by KV admission: {err}"
+                );
+                start += len;
+                let e2e =
+                    now.duration_since(t.arrived).as_secs_f64();
+                self.metrics.observe_e2e(e2e);
+                EngineMetrics::inc(&self.metrics.requests_completed, 1);
+                self.completed += 1;
+                let _ = t.reply.send(Response {
+                    id,
+                    tokens: t.generated,
+                    ttft_secs: e2e,
+                    e2e_secs: e2e,
+                    prefill_artifact: String::new(),
+                });
+                continue;
+            }
             start += len;
             self.active.insert(
                 id,
                 ActiveSeq {
                     tracked: t,
-                    slot,
                     last_token: first,
                     decode_artifact: decode_artifact.clone(),
                     decode_binding: dec_binding.clone(),
@@ -307,62 +378,104 @@ impl Engine {
             // immediately-finished sequences (max_new_tokens == 1 or EOS)
             self.maybe_complete(id)?;
         }
+        self.publish_paging();
+        self.publish_frag();
         Ok(())
     }
 
     fn run_decode(&mut self) -> Result<()> {
-        // group by decode artifact (fp vs sq)
-        let mut by_art: HashMap<(String, String), Vec<u64>> = HashMap::new();
+        // group by decode artifact (fp vs sq); BTreeMap so group order
+        // is deterministic (HashMap iteration varies run to run, and
+        // W8A8 logits depend on batch composition), and a round-robin
+        // cursor over the sorted groups so none starves when several
+        // stay populated under sustained load
+        let mut by_art: BTreeMap<(String, String), Vec<u64>> =
+            BTreeMap::new();
         for (id, a) in &self.active {
             by_art
                 .entry((a.decode_artifact.clone(), a.decode_binding.clone()))
                 .or_default()
                 .push(*id);
         }
-        let Some(((artifact, binding), mut ids)) = by_art.into_iter().next()
+        if by_art.is_empty() {
+            return Ok(());
+        }
+        let pick = self.decode_rr % by_art.len();
+        self.decode_rr = self.decode_rr.wrapping_add(1);
+        let Some(((artifact, binding), ids)) = by_art.into_iter().nth(pick)
         else {
             return Ok(());
         };
-        ids.sort(); // determinism
         let meta = self.rt.manifest().artifact(&artifact)?.clone();
         let b = meta.batch;
-        ids.truncate(b);
+        // a sequence whose KV hit the per-sequence cap cannot take
+        // another token: finish it with what it has (the cap is the
+        // decode cache — only reachable when a request's generation
+        // budget exceeds what the cache can hold)
+        let cap = self.kv.max_seq_tokens;
+        let (step_ids, full_ids): (Vec<u64>, Vec<u64>) = ids
+            .into_iter()
+            .partition(|id| self.kv.seq_len(*id).unwrap_or(0) < cap);
+        for id in full_ids {
+            self.complete(id)?;
+        }
+        let mut ids = step_ids;
+        if ids.is_empty() {
+            return Ok(());
+        }
+        // paged KV admits more concurrent sequences than the decode
+        // artifact's static batch; step the least-advanced first so
+        // nobody starves (deterministic: generated length, then id)
+        if ids.len() > b {
+            ids.sort_unstable_by_key(|id| {
+                (self.active[id].tracked.generated.len(), *id)
+            });
+            ids.truncate(b);
+        }
+        ids.sort_unstable(); // determinism of row assignment
         let mut token = vec![PAD; b];
         let mut pos = vec![0i32; b];
         let mut kv_len = vec![1i32; b];
-        let mut stepped = Vec::new();
-        for id in &ids {
+        let mut rows: Vec<Option<u64>> = vec![None; b];
+        for (row, id) in ids.iter().enumerate() {
             let a = &self.active[id];
-            let slot = a.slot;
-            // each active seq occupies its KV slot row; the decode batch
-            // is indexed BY SLOT (cache layout)
-            token[slot] = a.last_token;
-            pos[slot] = self.kv.len[slot] as i32;
-            kv_len[slot] = (self.kv.len[slot] + 1) as i32;
-            stepped.push(slot);
+            let len = self
+                .kv
+                .seq_len(*id)
+                .with_context(|| format!("seq {id} missing from KV"))?;
+            // append lands at position `len`: allocate the tail block if
+            // `len` crosses a block boundary (a no-op while the
+            // admission-time reservation covers it)
+            self.kv.ensure_capacity(*id, len + 1)?;
+            token[row] = a.last_token;
+            pos[row] = len as i32;
+            kv_len[row] = (len + 1) as i32;
+            rows[row] = Some(*id);
         }
-        // split the borrows: the engine runs over the KV host mirrors
+        // split the borrows: the backend runs over the paged KV view
         let rt = &mut self.rt;
-        let out = rt.decode(
-            &artifact, &binding, &token, &pos, &self.kv.k, &self.kv.v,
-            &kv_len,
+        let mut view = self.kv.view(&rows);
+        let out = rt.decode_paged(
+            &artifact, &binding, &token, &pos, &mut view, &kv_len,
         )?;
         EngineMetrics::inc(&self.metrics.decode_batches, 1);
         EngineMetrics::inc(&self.metrics.decode_tokens, ids.len() as u64);
-        self.kv
-            .absorb_decode_output(out.k_cache, out.v_cache, &stepped);
+        // the engine wrote each stepped sequence's K/V in place through
+        // its block table; just bump the valid lengths
+        for id in &ids {
+            self.kv.advance(*id)?;
+        }
         let now = Instant::now();
-        for id in ids {
-            let a = self.active.get_mut(&id).unwrap();
-            let slot = a.slot;
-            let row = &out.logits[slot * out.vocab..(slot + 1) * out.vocab];
-            let next = argmax(row) as i32;
+        for (row, id) in ids.iter().enumerate() {
+            let a = self.active.get_mut(id).unwrap();
+            let r = &out.logits[row * out.vocab..(row + 1) * out.vocab];
+            let next = argmax(r) as i32;
             a.last_token = next;
             a.tracked.generated.push(next);
             let tpot = now.duration_since(a.last_token_at).as_secs_f64();
             a.last_token_at = now;
             self.metrics.observe_tpot(tpot);
-            self.maybe_complete(id)?;
+            self.maybe_complete(*id)?;
         }
         Ok(())
     }
@@ -377,9 +490,15 @@ impl Engine {
         if !done {
             return Ok(());
         }
+        self.complete(id)
+    }
+
+    /// Finish a sequence unconditionally: release its KV blocks, record
+    /// metrics and send the response.
+    fn complete(&mut self, id: u64) -> Result<()> {
         let a = self.active.remove(&id).unwrap();
-        self.kv.release(a.slot);
-        self.pool.release(id);
+        self.kv.release(id)?;
+        self.publish_paging();
         let now = Instant::now();
         let e2e = now.duration_since(a.tracked.arrived).as_secs_f64();
         self.metrics.observe_e2e(e2e);
@@ -400,9 +519,29 @@ impl Engine {
         Ok(())
     }
 
+    /// Push the O(1) paged-KV gauges (blocks in use, peak). Called on
+    /// every admission/release.
+    fn publish_paging(&self) {
+        let used =
+            (self.kv.n_blocks() - self.kv.free_blocks()) as u64;
+        EngineMetrics::set(&self.metrics.kv_blocks_in_use, used);
+        EngineMetrics::set_max(&self.metrics.kv_blocks_peak, used);
+    }
+
+    /// Refresh the fragmentation gauge. Costs a free-list sort, so it
+    /// runs once per prefill batch rather than per completion.
+    fn publish_frag(&self) {
+        let fs = self.kv.frag_stats();
+        EngineMetrics::set(
+            &self.metrics.kv_frag_permille,
+            (fs.fragmentation() * 1000.0).round() as u64,
+        );
+    }
+
+    /// Check the paged KV store's invariants (block tables, refcounts,
+    /// lengths); used by tests after a drained run.
     pub fn kv_invariants(&self) -> Result<()> {
-        self.kv.check_invariants()?;
-        self.pool.check_invariants()
+        self.kv.check_invariants()
     }
 
     /// Sparsity accounting from the backend, if it tracks any.

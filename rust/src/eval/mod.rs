@@ -23,6 +23,7 @@ use anyhow::Result;
 
 use crate::tensor::io::{read_eval, EvalSet};
 
+/// Load an `.aev` eval dataset from `<artifacts>/eval/<file>`.
 pub fn load_task(artifacts: &Path, file: &str) -> Result<EvalSet> {
     read_eval(&artifacts.join("eval").join(file))
 }
@@ -30,8 +31,12 @@ pub fn load_task(artifacts: &Path, file: &str) -> Result<EvalSet> {
 /// Accuracy result of one (task, setting) cell.
 #[derive(Debug, Clone)]
 pub struct TaskResult {
+    /// task name (dataset stem)
     pub task: String,
+    /// fraction of samples answered correctly
     pub accuracy: f64,
+    /// samples evaluated
     pub n: usize,
+    /// engine execution seconds spent
     pub exec_secs: f64,
 }

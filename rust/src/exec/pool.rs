@@ -19,12 +19,14 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size worker pool over one shared job queue (module docs).
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// A pool of `n.max(1)` worker threads.
     pub fn new(n: usize) -> ThreadPool {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -58,6 +60,7 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Enqueue a fire-and-forget job on the pool.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

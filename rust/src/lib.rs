@@ -11,11 +11,15 @@
 //!   `sparsity::spmm::NmCompressed`, `quant`) with no external
 //!   dependencies, so `cargo build && cargo test` and the whole serving
 //!   path work out of the box;
-//! * the `pjrt` cargo feature adds [`runtime::ModelRuntime`], which
+//! * the `pjrt` cargo feature adds `runtime::ModelRuntime`, which
 //!   loads compute graphs AOT-lowered to HLO text by
 //!   `python/compile/aot.py` through the PJRT C API (`xla` crate).
 //!
 //! Python is never on the request path in either backend.
+//!
+//! `docs/ARCHITECTURE.md` (repo root) maps the full request lifecycle
+//! across these modules.
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod exec;

@@ -2,38 +2,52 @@
 //! samples — serving runs here are small) with percentile queries, plus a
 //! criterion-style summary (mean/median/stddev) for the bench harness.
 
+/// Exact sample histogram with percentile queries (module docs).
 #[derive(Default, Clone)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
 }
 
+/// Point statistics of a [`Histogram`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Summary {
+    /// sample count
     pub n: usize,
+    /// arithmetic mean
     pub mean: f64,
+    /// population standard deviation
     pub std: f64,
+    /// smallest sample
     pub min: f64,
+    /// median
     pub p50: f64,
+    /// 95th percentile
     pub p95: f64,
+    /// 99th percentile
     pub p99: f64,
+    /// largest sample
     pub max: f64,
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Histogram {
         Histogram::default()
     }
 
+    /// Record one sample.
     pub fn observe(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
     }
 
+    /// Samples recorded so far.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Whether no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -46,6 +60,8 @@ impl Histogram {
         }
     }
 
+    /// The `p`-th percentile (0–100), nearest-rank with linear
+    /// interpolation; 0.0 on an empty histogram.
     pub fn percentile(&mut self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -59,6 +75,7 @@ impl Histogram {
         self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
     }
 
+    /// Full point-statistics summary (zeroed on an empty histogram).
     pub fn summary(&mut self) -> Summary {
         if self.samples.is_empty() {
             return Summary::default();

@@ -9,6 +9,7 @@ pub fn quantize(x: &[f32], scale: f32) -> Vec<i8> {
         .collect()
 }
 
+/// Dequantize int8 values back to f32 with one scale.
 pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
     q.iter().map(|&v| v as f32 * scale).collect()
 }

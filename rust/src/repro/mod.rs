@@ -19,7 +19,9 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
+/// Shared context every repro harness receives.
 pub struct ReproCtx<'a> {
+    /// artifacts directory (manifest + eval datasets + stats)
     pub artifacts: &'a Path,
     /// samples per task (0 = full dataset)
     pub limit: usize,
@@ -27,6 +29,7 @@ pub struct ReproCtx<'a> {
     pub model: Option<String>,
 }
 
+/// Run one repro target by name (see module docs for the index).
 pub fn run(what: &str, ctx: &ReproCtx) -> Result<()> {
     match what {
         "table1" => tables::table1(ctx),

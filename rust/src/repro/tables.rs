@@ -12,6 +12,7 @@ use crate::runtime::{engine_for, Engine, Manifest};
 use crate::sparsity::policy::Setting;
 use crate::util::fmt::{acc, pct_drop, Table};
 
+/// The N:M ratios every table sweeps.
 pub const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
 
 /// Zero-shot MC task order of the paper's tables.
@@ -144,10 +145,12 @@ fn zero_shot_table(ctx: &ReproCtx, sq: bool, title: &str) -> Result<()> {
     Ok(())
 }
 
+/// Table 1: Amber Pruner (fp) on zero-shot tasks.
 pub fn table1(ctx: &ReproCtx) -> Result<()> {
     zero_shot_table(ctx, false, "Table 1: Amber Pruner on Zero-shot tasks")
 }
 
+/// Table 2: Outstanding-sparse (W8A8) on zero-shot tasks.
 pub fn table2(ctx: &ReproCtx) -> Result<()> {
     zero_shot_table(
         ctx,

@@ -7,42 +7,65 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+/// Static metadata of one compiled (or synthetic) artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// artifact name (manifest key)
     pub name: String,
+    /// HLO text file, relative to the artifacts dir (compiled backends)
     pub hlo: String,
     /// weight-tensor names in executable argument order (before runtime
     /// inputs)
     pub params: Vec<String>,
     /// runtime input shapes (after the weight params)
     pub runtime_inputs: Vec<(Vec<usize>, String)>,
+    /// output tensor names
     pub outputs: Vec<String>,
-    pub kind: String,    // "prefill" | "decode"
-    pub variant: String, // "dense" | "nm" | "sq" | "sq_nm"
+    /// `"prefill"` or `"decode"`
+    pub kind: String,
+    /// `"dense"` | `"nm"` | `"sq"` | `"sq_nm"`
+    pub variant: String,
+    /// static batch
     pub batch: usize,
-    pub seq: usize,   // prefill only
-    pub cache: usize, // decode only
+    /// static sequence length (prefill only)
+    pub seq: usize,
+    /// static cache length (decode only)
+    pub cache: usize,
+    /// the N:M ratio baked into an nm artifact
     pub nm: Option<(usize, usize)>,
 }
 
+/// One model of the manifest's inventory.
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
+    /// model name (manifest key)
     pub name: String,
+    /// weight-file path, relative to the artifacts dir
     pub weights: String,
+    /// whether the model is mixture-of-experts
     pub is_moe: bool,
+    /// geometry config (d_model, n_layers, ...)
     pub config: BTreeMap<String, usize>,
 }
 
+/// Parsed `manifest.json`: the artifact + model inventory a backend
+/// serves.
 #[derive(Debug)]
 pub struct Manifest {
+    /// the artifacts directory the manifest was loaded from
     pub dir: PathBuf,
+    /// artifact name -> metadata
     pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// model name -> info
     pub models: BTreeMap<String, ModelInfo>,
+    /// model name -> available sparsity settings
     pub settings: BTreeMap<String, Vec<String>>,
+    /// the raw parsed JSON (for fields this struct doesn't model)
     pub raw: Json,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -162,6 +185,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts, models, settings, raw })
     }
 
+    /// The named artifact's metadata, or an error naming it.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
         self.artifacts
             .get(name)
@@ -182,6 +206,7 @@ impl Manifest {
         }
     }
 
+    /// Decode-artifact naming convention helper.
     pub fn decode_name(model: &str, variant: &str) -> String {
         format!("{model}.decode.{variant}")
     }

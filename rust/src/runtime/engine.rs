@@ -7,12 +7,16 @@
 //!   `tensor::math`, `sparsity::spmm::NmCompressed` and `quant`; the
 //!   default backend, no external dependencies, runs the paper's
 //!   N:M-sparse prefill semantics directly (and audits them).
-//! * [`crate::runtime::ModelRuntime`] — the PJRT/XLA path over AOT HLO
+//! * `crate::runtime::ModelRuntime` — the PJRT/XLA path over AOT HLO
 //!   artifacts, behind the `pjrt` cargo feature.
 //!
-//! KV caches cross the trait boundary as host `Vec<f32>` in the
-//! `[L, B, S|C, H_kv, D_h]` layout, which is what the KV slot manager
-//! stages anyway; backends convert to device buffers internally.
+//! KV caches cross the trait boundary as host floats: prefill returns
+//! `[L, B, S, H_kv, D_h]` (or the token-packed `[L, total, H_kv, D_h]`)
+//! caches the coordinator stages into its block-paged store, and decode
+//! reads/writes that store either through a [`PagedKv`] block-table
+//! view ([`Engine::decode_paged`]) or, for backends with static
+//! compiled shapes, through the contiguous `[L, B, C, H_kv, D_h]`
+//! gather the default `decode_paged` implementation materializes.
 
 use std::path::Path;
 
@@ -24,12 +28,17 @@ use super::artifact::Manifest;
 pub struct PrefillOut {
     /// `[batch, seq, vocab]`, row-major
     pub logits: Vec<f32>,
+    /// static batch of the executed artifact
     pub batch: usize,
+    /// static sequence length of the executed artifact
     pub seq: usize,
+    /// vocabulary size (logits row width)
     pub vocab: usize,
     /// `[L, B, S, H_kv, D_h]`
     pub k_cache: Vec<f32>,
+    /// same layout as `k_cache`
     pub v_cache: Vec<f32>,
+    /// backend execution seconds (excludes host staging)
     pub exec_secs: f64,
 }
 
@@ -41,19 +50,23 @@ pub struct PackedPrefillOut {
     pub logits: Vec<f32>,
     /// per-request token counts after clamping to the artifact's seq
     pub lens: Vec<usize>,
+    /// vocabulary size (logits row width)
     pub vocab: usize,
     /// `[L, total_tokens, H_kv, D_h]`
     pub k_cache: Vec<f32>,
+    /// same layout as `k_cache`
     pub v_cache: Vec<f32>,
     /// PAD-row tokens the backend actually computed to serve this batch:
     /// 0 on a shape-flexible pipeline (native), the full right-padding
     /// cost on the pad-and-gather default path — keeps the coordinator's
     /// padding metric honest across backends
     pub padded_tokens: usize,
+    /// backend execution seconds (excludes host staging)
     pub exec_secs: f64,
 }
 
 impl PackedPrefillOut {
+    /// Valid (non-PAD) token rows in the packed batch.
     pub fn total_tokens(&self) -> usize {
         self.lens.iter().sum()
     }
@@ -64,16 +77,88 @@ impl PackedPrefillOut {
     }
 }
 
-/// Output of one decode step.
+/// Output of one decode step over caller-owned contiguous caches.
 pub struct DecodeOut {
     /// `[batch, vocab]`
     pub logits: Vec<f32>,
+    /// static decode batch of the executed artifact
     pub batch: usize,
+    /// vocabulary size (logits row width)
     pub vocab: usize,
     /// `[L, B, C, H_kv, D_h]` — the caller's cache with this step's K/V
     /// written at each row's position
     pub k_cache: Vec<f32>,
+    /// same layout as `k_cache`
     pub v_cache: Vec<f32>,
+    /// backend execution seconds (excludes host staging)
+    pub exec_secs: f64,
+}
+
+/// Borrowed view of a block-paged KV cache, the unit the coordinator
+/// hands to [`Engine::decode_paged`].
+///
+/// Physical storage is `[L, n_blocks, block_size, H_kv * D_h]`: every
+/// layer sees the same global pool of `n_blocks` blocks of `block_size`
+/// token rows. A sequence's rows live wherever its **block table**
+/// (from `coordinator::paged::BlockPool`) points — logical token `pos`
+/// maps to physical block `table[pos / block_size]`, in-block row
+/// `pos % block_size`. `tables[i]` is the table of the sequence
+/// occupying decode-batch row `i`; an empty table marks an inactive
+/// (static-shape filler) row that owns no storage.
+pub struct PagedKv<'a> {
+    /// transformer layers in the physical store
+    pub n_layers: usize,
+    /// physical blocks per layer
+    pub n_blocks: usize,
+    /// token rows per block
+    pub block_size: usize,
+    /// `H_kv * D_h` floats per token row
+    pub kv_dim: usize,
+    /// per decode-batch row: that sequence's block table (physical ids
+    /// in token order); empty = inactive row
+    pub tables: Vec<Vec<u32>>,
+    /// keys, `[L, n_blocks, block_size, kv_dim]`
+    pub k: &'a mut [f32],
+    /// values, same layout as `k`
+    pub v: &'a mut [f32],
+}
+
+impl PagedKv<'_> {
+    /// Float offset of `(layer, physical block, in-block row)`.
+    pub fn block_offset(&self, layer: usize, block: u32, row: usize)
+                        -> usize {
+        ((layer * self.n_blocks + block as usize) * self.block_size + row)
+            * self.kv_dim
+    }
+
+    /// Float offset of logical token `pos` of the sequence owning
+    /// `table`.
+    pub fn pos_offset(&self, layer: usize, table: &[u32], pos: usize)
+                      -> usize {
+        self.block_offset(
+            layer,
+            table[pos / self.block_size],
+            pos % self.block_size,
+        )
+    }
+
+    /// Token rows addressable through `table`.
+    pub fn capacity(&self, table: &[u32]) -> usize {
+        table.len() * self.block_size
+    }
+}
+
+/// Output of one decode step over a [`PagedKv`] view. The step's K/V
+/// rows are written **in place** through the block tables, so unlike
+/// [`DecodeOut`] there are no cache copies to absorb.
+pub struct PagedDecodeOut {
+    /// `[batch, vocab]`
+    pub logits: Vec<f32>,
+    /// static decode batch of the executed artifact
+    pub batch: usize,
+    /// vocabulary size (logits row width)
+    pub vocab: usize,
+    /// backend execution seconds (excludes host staging)
     pub exec_secs: f64,
 }
 
@@ -92,9 +177,13 @@ pub fn audit_module_index(name: &str) -> Option<usize> {
 /// Per-projection-module share of the audit.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct ModuleAudit {
+    /// matmuls of this module that ran through the N:M path
     pub pruned_matmuls: u64,
+    /// matmuls of this module that executed densely
     pub dense_matmuls: u64,
+    /// FLOPs this module's matmuls would cost densely
     pub dense_flops: u64,
+    /// dense-equivalent FLOPs after pruning (see [`SparsityAudit`])
     pub sparse_flops: u64,
     /// dense-equivalent FLOPs of the matmuls that went through the N:M
     /// path (the paper's "computation accelerated" numerator)
@@ -117,7 +206,9 @@ impl ModuleAudit {
 /// Copy-cheap so engines can expose a snapshot.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SparsityAudit {
+    /// matmuls that ran through the N:M path
     pub pruned_matmuls: u64,
+    /// matmuls that executed densely
     pub dense_matmuls: u64,
     /// FLOPs the executed matmuls would cost densely
     pub dense_flops: u64,
@@ -317,9 +408,11 @@ pub trait Engine {
     /// width). Backends without an internal pool ignore it.
     fn set_parallelism(&mut self, _threads: usize) {}
 
-    /// Advance every batch row one decode step. `pos[i]` is the cache
-    /// position the new token is written at; `kv_len[i]` the attention
-    /// span (typically `pos[i] + 1`).
+    /// Advance every batch row one decode step over caller-owned
+    /// **contiguous** `[L, B, C, H_kv, D_h]` caches. `pos[i]` is the
+    /// cache position the new token is written at; `kv_len[i]` the
+    /// attention span (typically `pos[i] + 1`). Returns updated cache
+    /// copies the caller absorbs.
     #[allow(clippy::too_many_arguments)]
     fn decode(
         &mut self,
@@ -331,6 +424,111 @@ pub trait Engine {
         v_cache: &[f32],
         kv_len: &[i32],
     ) -> Result<DecodeOut>;
+
+    /// Advance one decode step over a **block-paged** KV view: row `i`'s
+    /// cache rows live wherever `kv.tables[i]` points, and this step's
+    /// K/V row is appended in place at `pos[i]` through the table (the
+    /// coordinator allocates the tail block before calling).
+    ///
+    /// The default implementation keeps every backend correct without a
+    /// native paged kernel: it gathers each row's blocks into the
+    /// artifact's static contiguous `[L, B, C, H_kv, D_h]` shape, runs
+    /// [`Engine::decode`], and scatters the one written row per
+    /// sequence back through its table — so the PJRT path sees exactly
+    /// the contiguous cache its compiled graph expects. Backends that
+    /// can address blocks directly (the native engine) override this
+    /// and skip the gather entirely.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_paged(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        token: &[i32],
+        pos: &[i32],
+        kv: &mut PagedKv<'_>,
+        kv_len: &[i32],
+    ) -> Result<PagedDecodeOut> {
+        let meta = self.manifest().artifact(artifact)?.clone();
+        if meta.kind != "decode" {
+            bail!("artifact {artifact} is not a decode artifact");
+        }
+        let (b, c) = (meta.batch, meta.cache);
+        if b == 0 || c == 0 {
+            bail!("decode {artifact}: degenerate batch {b} / cache {c}");
+        }
+        if kv.tables.len() != b {
+            bail!(
+                "decode_paged {artifact}: {} row tables != batch {b}",
+                kv.tables.len()
+            );
+        }
+        if token.len() != b || pos.len() != b || kv_len.len() != b {
+            bail!("decode_paged {artifact}: batch inputs must have len {b}");
+        }
+        // loud, not silent: a write position beyond a row's block table
+        // means the caller forgot to allocate the tail block — clamping
+        // would silently drop the new token's K/V
+        for (row, table) in kv.tables.iter().enumerate() {
+            if table.is_empty() {
+                continue;
+            }
+            let p = pos[row].max(0) as usize;
+            if p >= kv.capacity(table) || p >= c {
+                bail!(
+                    "decode_paged {artifact}: row {row} writes at {p} \
+                     beyond its table ({} tokens) or cache {c} — \
+                     allocate the tail block first",
+                    kv.capacity(table)
+                );
+            }
+        }
+        let (layers, kvd, bs) = (kv.n_layers, kv.kv_dim, kv.block_size);
+        // gather: block tables -> the static contiguous cache layout
+        let mut kc = vec![0.0f32; layers * b * c * kvd];
+        let mut vc = vec![0.0f32; layers * b * c * kvd];
+        for l in 0..layers {
+            for (row, table) in kv.tables.iter().enumerate() {
+                let mut at = 0usize;
+                for &blk in table {
+                    if at >= c {
+                        break;
+                    }
+                    let rows = bs.min(c - at);
+                    let src = kv.block_offset(l, blk, 0);
+                    let dst = ((l * b + row) * c + at) * kvd;
+                    kc[dst..dst + rows * kvd]
+                        .copy_from_slice(&kv.k[src..src + rows * kvd]);
+                    vc[dst..dst + rows * kvd]
+                        .copy_from_slice(&kv.v[src..src + rows * kvd]);
+                    at += rows;
+                }
+            }
+        }
+        let out = self.decode(artifact, binding, token, pos, &kc, &vc,
+                              kv_len)?;
+        // scatter back the single K/V row each active sequence wrote
+        // (positions validated against table + cache bounds above)
+        for row in 0..b {
+            if kv.tables[row].is_empty() {
+                continue;
+            }
+            let p = pos[row].max(0) as usize;
+            for l in 0..layers {
+                let src = ((l * b + row) * c + p) * kvd;
+                let dst = kv.pos_offset(l, &kv.tables[row], p);
+                kv.k[dst..dst + kvd]
+                    .copy_from_slice(&out.k_cache[src..src + kvd]);
+                kv.v[dst..dst + kvd]
+                    .copy_from_slice(&out.v_cache[src..src + kvd]);
+            }
+        }
+        Ok(PagedDecodeOut {
+            logits: out.logits,
+            batch: out.batch,
+            vocab: out.vocab,
+            exec_secs: out.exec_secs,
+        })
+    }
 
     /// Sparsity accounting, if the backend tracks it (the native engine
     /// does; PJRT executes pruning inside the compiled graph).

@@ -23,7 +23,7 @@ pub mod pjrt;
 pub use artifact::{ArtifactMeta, Manifest};
 pub use engine::{
     engine_for, DecodeOut, Engine, ModuleAudit, PackedPrefillOut,
-    PrefillOut, SparsityAudit,
+    PagedDecodeOut, PagedKv, PrefillOut, SparsityAudit,
 };
 pub use native::{ModelSpec, NativeEngine};
 #[cfg(feature = "pjrt")]

@@ -1,25 +1,37 @@
-//! One dense decode step over the slot cache (the paper confines
+//! One dense decode step over block-paged KV (the paper confines
 //! sparsity to prefill; decode is always dense / W8A8).
+//!
+//! [`NativeModel::decode_paged`] is the single decode implementation:
+//! every cache access goes through a [`PagedKv`] block table (logical
+//! position `p` → physical block `table[p / block]`, in-block row
+//! `p % block`), the new token's K/V is appended into the sequence's
+//! tail block in place, and attention gathers per block. The contiguous
+//! `[L, B, C, H, D]` path used by [`crate::runtime::Engine::decode`] is
+//! the special case "one block of `C` rows per batch row" — the same
+//! code, the same float-op order, so paged and slot-style execution are
+//! bit-identical by construction (pinned by `tests/paged_parity.rs`).
 
-use crate::runtime::engine::SparsityAudit;
+use crate::runtime::engine::{PagedKv, SparsityAudit};
 use crate::sparsity::plan::SparsityPlan;
 
 use super::layers::{rmsnorm, silu, softmax_inplace, ExecOpts, ProjKind};
 use super::model::NativeModel;
 
 impl NativeModel {
-    /// Advance every batch row one decode step against `[L, B, C, H, D]`
-    /// caches. Projections run through the same [`super::layers::Projection`]
-    /// steps as prefill, under the all-dense plan.
+    /// Advance every batch row one decode step against a block-paged KV
+    /// view. Projections run through the same
+    /// [`super::layers::Projection`] steps as prefill, under the
+    /// all-dense plan. Rows with an empty block table are static-shape
+    /// fillers: they compute (so W8A8's per-tensor activation scale sees
+    /// the same batch the slot path saw) but own no storage — they
+    /// attend to their own freshly computed K/V only and write nothing.
     #[allow(clippy::too_many_arguments)]
-    pub(super) fn decode(
+    pub(super) fn decode_paged(
         &self,
         token: &[i32],
         pos: &[i32],
-        k_cache: &mut [f32],
-        v_cache: &mut [f32],
+        kv: &mut PagedKv<'_>,
         kv_len: &[i32],
-        cache: usize,
         quantized: bool,
         block_rows: usize,
         audit: &mut SparsityAudit,
@@ -40,22 +52,48 @@ impl NativeModel {
             let v = lw.projection(ProjKind::V, sp).run(&h, b, l, &opts, audit);
             let mut attn = vec![0.0f32; b * qd];
             for bi in 0..b {
-                let p = (pos[bi].max(0) as usize).min(cache - 1);
-                let span = (kv_len[bi].max(1) as usize).min(cache);
-                // write this step's K/V at the row's position (assign,
-                // not accumulate — stale slot data is harmless)
-                let slot = ((l * b + bi) * cache + p) * kvd;
-                k_cache[slot..slot + kvd]
-                    .copy_from_slice(&k[bi * kvd..(bi + 1) * kvd]);
-                v_cache[slot..slot + kvd]
-                    .copy_from_slice(&v[bi * kvd..(bi + 1) * kvd]);
+                let krow_new = &k[bi * kvd..(bi + 1) * kvd];
+                let vrow_new = &v[bi * kvd..(bi + 1) * kvd];
+                let paged = !kv.tables[bi].is_empty();
+                let span = if paged {
+                    let cap = kv.capacity(&kv.tables[bi]);
+                    let p = (pos[bi].max(0) as usize).min(cap - 1);
+                    // append this step's K/V at the row's position
+                    // through the block table (assign, not accumulate —
+                    // admission zeroed the blocks)
+                    let w = kv.pos_offset(l, &kv.tables[bi], p);
+                    kv.k[w..w + kvd].copy_from_slice(krow_new);
+                    kv.v[w..w + kvd].copy_from_slice(vrow_new);
+                    (kv_len[bi].max(1) as usize).min(cap)
+                } else {
+                    // filler row: no storage; span clamps to its own
+                    // just-computed K/V (bit-identical to the slot path,
+                    // which read position 0 right after writing it)
+                    1
+                };
+                // hoist the block-table address translation out of the
+                // per-head loops: offs[j] = float offset of position j,
+                // shared by the K and V reads across every query head
+                // (the inner loops then run on plain adds, like the old
+                // contiguous slot stride)
+                let offs: Vec<usize> = if paged {
+                    (0..span)
+                        .map(|j| kv.pos_offset(l, &kv.tables[bi], j))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
                 for hq in 0..sp.n_q_heads {
                     let kvh = hq / group;
                     let qrow = &q[bi * qd + hq * dh..bi * qd + (hq + 1) * dh];
                     let mut scores = vec![0.0f32; span];
                     for (j, sc) in scores.iter_mut().enumerate() {
-                        let kr = ((l * b + bi) * cache + j) * kvd + kvh * dh;
-                        let krow = &k_cache[kr..kr + dh];
+                        let krow: &[f32] = if paged {
+                            let kr = offs[j] + kvh * dh;
+                            &kv.k[kr..kr + dh]
+                        } else {
+                            &krow_new[kvh * dh..(kvh + 1) * dh]
+                        };
                         let dot: f32 = qrow
                             .iter()
                             .zip(krow.iter())
@@ -67,10 +105,13 @@ impl NativeModel {
                     let orow = &mut attn
                         [bi * qd + hq * dh..bi * qd + (hq + 1) * dh];
                     for (j, &wgt) in scores.iter().enumerate() {
-                        let vr = ((l * b + bi) * cache + j) * kvd + kvh * dh;
-                        for (oe, &ve) in
-                            orow.iter_mut().zip(v_cache[vr..vr + dh].iter())
-                        {
+                        let vrow: &[f32] = if paged {
+                            let vr = offs[j] + kvh * dh;
+                            &kv.v[vr..vr + dh]
+                        } else {
+                            &vrow_new[kvh * dh..(kvh + 1) * dh]
+                        };
+                        for (oe, &ve) in orow.iter_mut().zip(vrow.iter()) {
                             *oe += wgt * ve;
                         }
                     }

@@ -7,13 +7,15 @@
 //!
 //! * `model`   — [`ModelSpec`] geometry + deterministically synthesized
 //!               weights (`Arc`-shared for the tile fan-out)
-//! * `layers`  — the [`layers::Projection`] step abstraction: policy
+//! * `layers`  — the `Projection` step abstraction: policy
 //!               resolution from a [`SparsityPlan`], batched dense /
 //!               block-compressed N:M kernels, W8A8, per-module audit
 //! * `prefill` — one forward pass over a token-packed segment batch
 //!               (right-padded `[b, s]` prefill is the equal-segment
 //!               special case)
-//! * `decode`  — the dense decode step over KV slot caches
+//! * `decode`  — the dense decode step over block-paged KV
+//!               ([`crate::runtime::PagedKv`] block tables; the
+//!               contiguous slot cache is the one-block special case)
 //!
 //! Per-request N:M configs arrive exactly as they do on the PJRT path:
 //! the artifact name carries the ratio (`...nm2_4`) and the bound aux
@@ -47,7 +49,8 @@ use anyhow::{anyhow, bail, Result};
 
 use super::artifact::Manifest;
 use super::engine::{
-    DecodeOut, Engine, PackedPrefillOut, PrefillOut, SparsityAudit,
+    DecodeOut, Engine, PackedPrefillOut, PagedDecodeOut, PagedKv,
+    PrefillOut, SparsityAudit,
 };
 use crate::exec::ThreadPool;
 use crate::sparsity::plan::SparsityPlan;
@@ -148,10 +151,12 @@ impl NativeEngine {
         self
     }
 
+    /// Zero the accumulated [`SparsityAudit`].
     pub fn reset_audit(&mut self) {
         self.audit = SparsityAudit::default();
     }
 
+    /// The loaded model by name, if any.
     pub fn model(&self, name: &str) -> Option<&NativeModel> {
         self.models.get(name)
     }
@@ -403,12 +408,25 @@ impl Engine for NativeEngine {
         let vocab = model.spec.vocab;
         let mut kc = k_cache.to_vec();
         let mut vc = v_cache.to_vec();
+        // contiguous [L, B, C, H, D] is the paged layout's special case
+        // "one block of C rows per batch row": run the one paged
+        // implementation over a trivial view — identical offsets,
+        // identical float-op order (see decode.rs module docs)
+        let mut view = PagedKv {
+            n_layers: model.spec.n_layers,
+            n_blocks: b,
+            block_size: cache,
+            kv_dim: model.spec.kv_dim(),
+            tables: (0..b).map(|i| vec![i as u32]).collect(),
+            k: &mut kc,
+            v: &mut vc,
+        };
         let mut audit = self.audit;
         let block_rows = self.block_rows;
         let t0 = Instant::now();
-        let logits = model.decode(
-            token, pos, &mut kc, &mut vc, kv_len, cache, quantized,
-            block_rows, &mut audit,
+        let logits = model.decode_paged(
+            token, pos, &mut view, kv_len, quantized, block_rows,
+            &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
         self.audit = audit;
@@ -418,6 +436,86 @@ impl Engine for NativeEngine {
             vocab,
             k_cache: kc,
             v_cache: vc,
+            exec_secs,
+        })
+    }
+
+    fn decode_paged(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        token: &[i32],
+        pos: &[i32],
+        kv: &mut PagedKv<'_>,
+        kv_len: &[i32],
+    ) -> Result<PagedDecodeOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "decode" {
+            bail!("artifact {artifact} is not a decode artifact");
+        }
+        self.binding_plan(artifact, binding)?;
+        let b = meta.batch;
+        if token.len() != b || pos.len() != b || kv_len.len() != b {
+            bail!("decode {artifact}: batch inputs must have len {b}");
+        }
+        if kv.tables.len() != b {
+            bail!(
+                "decode {artifact}: {} row tables != batch {b}",
+                kv.tables.len()
+            );
+        }
+        // loud, not silent: a write position beyond a row's block table
+        // means the caller forgot to allocate the tail block (the inner
+        // kernel's clamp is for the contiguous wrap only)
+        for (row, table) in kv.tables.iter().enumerate() {
+            if table.is_empty() {
+                continue;
+            }
+            let p = pos[row].max(0) as usize;
+            if p >= kv.capacity(table) {
+                bail!(
+                    "decode {artifact}: row {row} writes at {p} beyond \
+                     its table ({} tokens) — allocate the tail block \
+                     first",
+                    kv.capacity(table)
+                );
+            }
+        }
+        let quantized = meta.variant.starts_with("sq");
+        let model = self.model_for_artifact(artifact)?;
+        if kv.n_layers != model.spec.n_layers
+            || kv.kv_dim != model.spec.kv_dim()
+        {
+            bail!(
+                "decode {artifact}: paged view geometry {}x{} != model \
+                 {}x{}",
+                kv.n_layers,
+                kv.kv_dim,
+                model.spec.n_layers,
+                model.spec.kv_dim()
+            );
+        }
+        let expect =
+            kv.n_layers * kv.n_blocks * kv.block_size * kv.kv_dim;
+        if kv.k.len() != expect || kv.v.len() != expect {
+            bail!(
+                "decode {artifact}: paged store len {} != expected {expect}",
+                kv.k.len()
+            );
+        }
+        let vocab = model.spec.vocab;
+        let mut audit = self.audit;
+        let block_rows = self.block_rows;
+        let t0 = Instant::now();
+        let logits = model.decode_paged(
+            token, pos, kv, kv_len, quantized, block_rows, &mut audit,
+        );
+        let exec_secs = t0.elapsed().as_secs_f64();
+        self.audit = audit;
+        Ok(PagedDecodeOut {
+            logits,
+            batch: b,
+            vocab,
             exec_secs,
         })
     }

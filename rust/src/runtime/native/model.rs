@@ -20,20 +20,33 @@ pub const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
 /// Geometry + serving shapes of one native model.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// model name (manifest key, weight seed)
     pub name: String,
+    /// vocabulary size
     pub vocab: usize,
+    /// model width
     pub d_model: usize,
+    /// transformer layers
     pub n_layers: usize,
+    /// query heads
     pub n_q_heads: usize,
+    /// key/value heads (GQA when < n_q_heads)
     pub n_kv_heads: usize,
+    /// per-head dimension
     pub head_dim: usize,
+    /// MLP hidden width
     pub d_ff: usize,
+    /// static prefill batch of the synthetic artifacts
     pub prefill_batch: usize,
+    /// prefill sequence lengths served
     pub prefill_seqs: Vec<usize>,
+    /// static decode batch
     pub decode_batch: usize,
+    /// decode cache length (per-sequence KV token ceiling)
     pub cache_len: usize,
     /// layers where q/gate stay dense under the `ls` / `all` settings
     pub skip_layers: Vec<usize>,
+    /// weight-synthesis seed
     pub seed: u64,
 }
 
@@ -126,14 +139,17 @@ impl ModelSpec {
         self
     }
 
+    /// Query projection width (`n_q_heads * head_dim`).
     pub fn q_dim(&self) -> usize {
         self.n_q_heads * self.head_dim
     }
 
+    /// Key/value projection width (`n_kv_heads * head_dim`).
     pub fn kv_dim(&self) -> usize {
         self.n_kv_heads * self.head_dim
     }
 
+    /// Longest served prefill sequence length.
     pub fn max_prefill_seq(&self) -> usize {
         self.prefill_seqs.iter().copied().max().unwrap_or(64)
     }
@@ -282,6 +298,7 @@ pub(super) struct LayerWeights {
 
 /// A native model: spec + deterministically synthesized weights.
 pub struct NativeModel {
+    /// the model's geometry + serving shapes
     pub spec: ModelSpec,
     pub(super) embed: Vec<f32>,
     pub(super) layers: Vec<LayerWeights>,
@@ -310,6 +327,7 @@ fn row_norms(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
 }
 
 impl NativeModel {
+    /// Synthesize the model's weights deterministically from its spec.
     pub fn build(spec: ModelSpec) -> NativeModel {
         let mut rng = Rng::new(spec.seed);
         let (d, qd, kvd, f) =

@@ -33,8 +33,10 @@ struct Compiled {
     bindings: HashMap<String, Vec<PjRtBuffer>>,
 }
 
+/// The PJRT/XLA execution engine over AOT-compiled HLO artifacts.
 pub struct ModelRuntime {
     client: PjRtClient,
+    /// the artifact + model inventory being served
     pub manifest: Manifest,
     dir: PathBuf,
     compiled: HashMap<String, Compiled>,
@@ -43,6 +45,8 @@ pub struct ModelRuntime {
 }
 
 impl ModelRuntime {
+    /// A runtime over `<artifacts_dir>/manifest.json` with a CPU PJRT
+    /// client.
     pub fn new(artifacts_dir: &std::path::Path) -> Result<ModelRuntime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = PjRtClient::cpu()?;

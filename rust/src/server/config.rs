@@ -10,16 +10,24 @@ use anyhow::{Context, Result};
 use crate::coordinator::request::SparsityConfig;
 use crate::util::json::Json;
 
+/// One serving deployment, as read from `serve.json` (module docs).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// model to serve (manifest key)
     pub model: String,
+    /// TCP bind address
     pub addr: String,
+    /// prefill artifact sequence length
     pub prefill_seq: usize,
+    /// partial-batch flush age, milliseconds
     pub max_wait_ms: f64,
+    /// engine replicas behind the router
     pub replicas: usize,
+    /// sparsity config for requests that name none
     pub default_sparsity: SparsityConfig,
     /// reject requests when this many are queued (backpressure)
     pub max_queue: usize,
+    /// clamp per-request generation budgets to this many tokens
     pub max_new_tokens_cap: usize,
 }
 
@@ -39,6 +47,7 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Parse a config object; missing keys keep their defaults.
     pub fn from_json(j: &Json) -> Result<ServeConfig> {
         let d = ServeConfig::default();
         let get_s = |k: &str, dv: &str| {
@@ -74,6 +83,7 @@ impl ServeConfig {
         })
     }
 
+    /// Load and parse a JSON config file.
     pub fn load(path: &Path) -> Result<ServeConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read config {}", path.display()))?;

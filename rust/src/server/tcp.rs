@@ -20,6 +20,8 @@ use crate::coordinator::scheduler::EngineMsg;
 use crate::metrics::EngineMetrics;
 use crate::util::json::{self, Json};
 
+/// Parse one request line of the wire protocol (module docs) into a
+/// coordinator [`Request`].
 pub fn parse_request(line: &str) -> Result<Request> {
     let j = Json::parse(line)?;
     let id = j.req_usize("id")? as u64;
@@ -44,6 +46,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(Request { id, prompt, max_new_tokens: max_new, config: cfg })
 }
 
+/// Serialize a coordinator [`Response`] as one wire-protocol line.
 pub fn response_json(r: &Response) -> String {
     json::obj(vec![
         ("id", json::num(r.id as f64)),

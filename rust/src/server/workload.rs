@@ -7,33 +7,51 @@ use crate::util::rng::Rng;
 
 /// Token-vocabulary constants mirrored from python/compile/tokenizer.py.
 pub mod vocab {
+    /// beginning-of-sequence
     pub const BOS: i32 = 1;
+    /// end-of-sequence
     pub const EOS: i32 = 2;
+    /// fact-query marker
     pub const QRY: i32 = 4;
+    /// answer marker
     pub const ANS: i32 = 5;
+    /// first digit token (0–9 follow)
     pub const DIGIT0: i32 = 10;
+    /// first relation token
     pub const REL0: i32 = 32;
+    /// first entity token
     pub const ENT0: i32 = 48;
+    /// first grammar-word token
     pub const WORD_A0: i32 = 80;
+    /// grammar-word vocabulary size
     pub const N_WORDS_A: i32 = 128;
+    /// first key token of the kv-pair sublanguage
     pub const KEY0: i32 = 336;
+    /// key vocabulary size
     pub const N_KEYS: i32 = 48;
 }
 
+/// Shape of a synthetic serving workload.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// requests to generate
     pub n_requests: usize,
     /// mean requests/second for poisson arrivals (0 = all at once)
     pub rate: f64,
+    /// shortest prompt, tokens
     pub prompt_len_lo: usize,
+    /// longest prompt, tokens
     pub prompt_len_hi: usize,
+    /// generation budget per request
     pub max_new_tokens: usize,
     /// sparsity mix: (config, weight)
     pub mix: Vec<(SparsityConfig, f64)>,
+    /// RNG seed (same spec -> same workload)
     pub seed: u64,
 }
 
 impl WorkloadSpec {
+    /// `n` all-dense requests with 12–48-token prompts, no arrival gaps.
     pub fn uniform_dense(n: usize) -> WorkloadSpec {
         WorkloadSpec {
             n_requests: n,
@@ -49,7 +67,9 @@ impl WorkloadSpec {
 
 /// A generated request + its arrival offset (seconds from start).
 pub struct TimedRequest {
+    /// arrival time, seconds from workload start
     pub at: f64,
+    /// the request itself
     pub req: Request,
 }
 
@@ -100,6 +120,7 @@ pub fn gen_prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
     p
 }
 
+/// Generate the spec's full request schedule, deterministically.
 pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
     let mut rng = Rng::new(spec.seed);
     let total_w: f64 = spec.mix.iter().map(|(_, w)| w).sum();

@@ -13,17 +13,26 @@ use super::policy;
 /// Minimal model geometry (parsed from manifest config).
 #[derive(Debug, Clone)]
 pub struct Geometry {
+    /// model width
     pub d_model: usize,
+    /// transformer layers
     pub n_layers: usize,
+    /// query projection width (heads x head_dim)
     pub q_dim: usize,
+    /// key/value projection width
     pub kv_dim: usize,
+    /// MLP hidden width (dense models)
     pub d_ff: usize,
+    /// expert count (0 = dense model)
     pub n_experts: usize,
+    /// activated experts per token
     pub top_k: usize,
+    /// per-expert MLP hidden width
     pub d_ff_expert: usize,
 }
 
 impl Geometry {
+    /// Geometry from a manifest model config (missing keys are 0).
     pub fn from_config(cfg: &BTreeMap<String, usize>) -> Geometry {
         let g = |k: &str| cfg.get(k).copied().unwrap_or(0);
         Geometry {
@@ -38,6 +47,7 @@ impl Geometry {
         }
     }
 
+    /// Whether the geometry describes a mixture-of-experts model.
     pub fn is_moe(&self) -> bool {
         self.n_experts > 0
     }

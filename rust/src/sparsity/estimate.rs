@@ -19,12 +19,19 @@
 //!
 //! Printed by `amber repro tpu-model`; quoted in EXPERIMENTS.md §Perf.
 
+/// Accelerator parameters of the analytic model (defaults are a
+/// TPUv5e-like part).
 #[derive(Debug, Clone)]
 pub struct TpuParams {
+    /// on-chip vector memory, bytes
     pub vmem_bytes: u64,
+    /// matrix-unit FLOPs per cycle
     pub mxu_flops_per_cycle: u64,
+    /// core clock, Hz
     pub clock_hz: f64,
+    /// HBM bandwidth, bytes/second
     pub hbm_bytes_per_sec: f64,
+    /// vector-unit lanes (for the unfused selector cost)
     pub vpu_lanes: u64,
 }
 
@@ -46,22 +53,36 @@ impl Default for TpuParams {
 /// steps, so its HBM cost is amortized.
 #[derive(Debug, Clone)]
 pub struct KernelGeometry {
+    /// token rows per grid step
     pub token_tile: usize,
+    /// total prefill tokens (batch x seq)
     pub tokens_total: usize,
+    /// contraction width
     pub d_in: usize,
+    /// output columns per grid step
     pub out_tile: usize,
+    /// bytes per element
     pub dtype_bytes: usize,
 }
 
+/// Analytic cost estimate of one kernel grid step.
 #[derive(Debug, Clone)]
 pub struct KernelEstimate {
+    /// resident tile bytes
     pub vmem_bytes: u64,
+    /// fraction of VMEM the tiles occupy
     pub vmem_frac: f64,
+    /// matrix-unit cycles
     pub mxu_cycles: f64,
+    /// selector (top-k rank) cycles, 0 when fused
     pub selector_cycles: f64,
+    /// HBM transfer cycles
     pub hbm_cycles: f64,
+    /// the binding resource: "mxu" | "hbm" | "selector"
     pub bound: &'static str,
+    /// achieved / peak matrix-unit utilization
     pub mxu_utilization: f64,
+    /// estimated wall seconds per grid step
     pub est_secs_per_step: f64,
 }
 
@@ -81,10 +102,12 @@ impl KernelGeometry {
         (x + o + w) * self.dtype_bytes as f64
     }
 
+    /// Estimate the dense kernel.
     pub fn estimate_dense(&self, p: &TpuParams) -> KernelEstimate {
         self.estimate(p, 1.0, 0.0)
     }
 
+    /// Estimate the N:M kernel, with or without a fused selector unit.
     pub fn estimate_nm(&self, p: &TpuParams, n: usize, m: usize,
                        fused_selector: bool) -> KernelEstimate {
         let selector_cycles = if fused_selector {

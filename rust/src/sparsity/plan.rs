@@ -30,8 +30,10 @@ pub struct ProjPolicy {
 }
 
 impl ProjPolicy {
+    /// The dense decision (no compression, no scoring).
     pub const DENSE: ProjPolicy = ProjPolicy { nm: None, scored: false };
 
+    /// Whether this projection compresses its activation at all.
     pub fn is_sparse(&self) -> bool {
         self.nm.is_some()
     }
@@ -40,7 +42,9 @@ impl ProjPolicy {
 /// The full per-layer/per-projection decision table for one prefill.
 #[derive(Debug, Clone)]
 pub struct SparsityPlan {
+    /// the policy setting the plan was built from
     pub setting: Setting,
+    /// the plan's N:M ratio (`None` = dense plan)
     pub nm: Option<(usize, usize)>,
     /// `cells[layer][module_index]` over [`policy::MODULES`].
     cells: Vec<[ProjPolicy; MODULES.len()]>,
@@ -94,6 +98,7 @@ impl SparsityPlan {
         SparsityPlan::build(g.n_layers, skip_layers, nm, setting)
     }
 
+    /// Layers the plan covers.
     pub fn n_layers(&self) -> usize {
         self.cells.len()
     }

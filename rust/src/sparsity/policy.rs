@@ -3,6 +3,7 @@
 //! weights — this module is for accounting, display and serving-config
 //! validation).
 
+/// The seven per-layer projection module types, in aux-tensor order.
 pub const MODULES: [&str; 7] = [
     "q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj",
     "down_proj",
@@ -32,6 +33,7 @@ pub fn pruned_in_layer(name: &str, layer: usize, skip_layers: &[usize]) -> bool 
 /// The three Table-1 settings and the dense baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Setting {
+    /// no pruning anywhere (the dense baseline)
     Dense,
     /// magnitude top-k everywhere, no skipping (the paper's baseline)
     Naive,
@@ -42,6 +44,7 @@ pub enum Setting {
 }
 
 impl Setting {
+    /// The aux weight-file name that carries this setting.
     pub fn aux_file(&self, model: &str, sq: bool) -> String {
         let infix = if sq { ".sq" } else { "" };
         let tag = match self {
@@ -53,6 +56,7 @@ impl Setting {
         format!("{model}{infix}.aux_{tag}.atw")
     }
 
+    /// The paper's display label for this setting.
     pub fn label(&self) -> &'static str {
         match self {
             Setting::Dense => "Baseline",

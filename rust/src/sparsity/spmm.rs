@@ -23,9 +23,13 @@ use crate::exec::ThreadPool;
 /// Compressed N:M activation matrix [t, din*n/m] with per-element group
 /// channel indices.
 pub struct NmCompressed {
+    /// token rows
     pub t: usize,
+    /// dense contraction width
     pub din: usize,
+    /// survivors per group
     pub n: usize,
+    /// group size
     pub m: usize,
     /// surviving values, row-major [t, din/m, n]
     pub values: Vec<f32>,
@@ -33,9 +37,12 @@ pub struct NmCompressed {
     pub index: Vec<u32>,
 }
 
+/// FLOP accounting of one SpMM call.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SpmmStats {
+    /// multiply-add FLOPs the dense matmul would cost
     pub dense_flops: u64,
+    /// multiply-add FLOPs the compressed matmul executes
     pub sparse_flops: u64,
 }
 
@@ -133,6 +140,7 @@ impl NmCompressed {
         out
     }
 
+    /// Dense vs executed FLOPs for a matmul against `dout` columns.
     pub fn stats(&self, dout: usize) -> SpmmStats {
         SpmmStats {
             dense_flops: 2 * (self.t * self.din * dout) as u64,
@@ -193,10 +201,15 @@ impl NmBlock {
 /// match [`NmCompressed`] exactly, the result is bit-identical to the
 /// per-row path regardless of tiling or pool width.
 pub struct NmCompressedBatch {
+    /// token rows
     pub t: usize,
+    /// dense contraction width
     pub din: usize,
+    /// survivors per group
     pub n: usize,
+    /// group size
     pub m: usize,
+    /// row-tile height the batch was compressed with
     pub block_rows: usize,
     blocks: Vec<Arc<NmBlock>>,
 }
@@ -266,6 +279,7 @@ impl NmCompressedBatch {
         NmCompressedBatch { t, din, n, m, block_rows, blocks }
     }
 
+    /// Row-tiles the batch compressed into.
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
     }
@@ -327,6 +341,7 @@ impl NmCompressedBatch {
         out
     }
 
+    /// Dense vs executed FLOPs for a matmul against `dout` columns.
     pub fn stats(&self, dout: usize) -> SpmmStats {
         SpmmStats {
             dense_flops: 2 * (self.t * self.din * dout) as u64,

@@ -85,39 +85,57 @@ pub fn read_weights(path: &Path) -> Result<Vec<HostTensor>> {
 /// One row of a multiple-choice eval set.
 #[derive(Debug, Clone)]
 pub struct McRow {
+    /// sample the row belongs to
     pub sample: u32,
+    /// choice index within the sample
     pub choice: u16,
+    /// first token position of the scored span
     pub score_start: u16,
+    /// scored span length, tokens
     pub score_len: u16,
+    /// the sample's correct choice index
     pub gold: u16,
 }
 
 /// One row of a generation eval set.
 #[derive(Debug, Clone)]
 pub struct GenRow {
+    /// sample the row belongs to
     pub sample: u32,
+    /// prompt length, tokens
     pub prompt_len: u16,
+    /// reference continuation to exact-match against
     pub gold: Vec<i32>,
+    /// generation budget
     pub max_gen: u16,
 }
 
+/// Row table of an eval set (task kind decides the variant).
 #[derive(Debug)]
 pub enum EvalRows {
+    /// multiple-choice rows
     Mc(Vec<McRow>),
+    /// generation rows
     Gen(Vec<GenRow>),
 }
 
 /// A loaded `.aev` dataset: `tokens` is [n_rows, seq_len] row-major.
 #[derive(Debug)]
 pub struct EvalSet {
+    /// padded row length, tokens
     pub seq_len: usize,
+    /// distinct samples
     pub n_samples: usize,
+    /// choices per sample (MC sets; 0 otherwise)
     pub n_choices: usize,
+    /// `[n_rows, seq_len]` token matrix, row-major
     pub tokens: Vec<i32>,
+    /// per-row metadata
     pub rows: EvalRows,
 }
 
 impl EvalSet {
+    /// Total rows in the token matrix.
     pub fn n_rows(&self) -> usize {
         match &self.rows {
             EvalRows::Mc(r) => r.len(),
@@ -125,11 +143,13 @@ impl EvalSet {
         }
     }
 
+    /// Token row `i`.
     pub fn row_tokens(&self, i: usize) -> &[i32] {
         &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
     }
 }
 
+/// Read an `.aev` eval dataset from disk.
 pub fn read_eval(path: &Path) -> Result<EvalSet> {
     let f = File::open(path)
         .with_context(|| format!("open eval {}", path.display()))?;

@@ -13,6 +13,7 @@ pub fn token_logprob(logits_row: &[f32], target: usize) -> f64 {
     (logits_row[target] - mx) as f64 - denom.ln()
 }
 
+/// Index of the largest value (first wins on ties; 0 on empty input).
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;

@@ -6,15 +6,21 @@ pub mod math;
 
 use anyhow::{bail, Result};
 
+/// Element type of a [`HostTensor`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer
     I32,
+    /// 8-bit signed integer
     I8,
+    /// 8-bit unsigned integer
     U8,
 }
 
 impl DType {
+    /// Decode the `.atw` on-disk dtype code.
     pub fn from_code(c: u8) -> Result<DType> {
         Ok(match c {
             0 => DType::F32,
@@ -25,6 +31,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element.
     pub fn size(&self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
@@ -36,13 +43,18 @@ impl DType {
 /// A named host tensor (row-major, little-endian raw bytes).
 #[derive(Debug, Clone)]
 pub struct HostTensor {
+    /// tensor name
     pub name: String,
+    /// element type
     pub dtype: DType,
+    /// shape
     pub dims: Vec<i64>,
+    /// raw little-endian bytes, row-major
     pub data: Vec<u8>,
 }
 
 impl HostTensor {
+    /// An f32 tensor from values (panics on shape mismatch).
     pub fn f32(name: &str, dims: Vec<i64>, vals: &[f32]) -> HostTensor {
         assert_eq!(vals.len() as i64, dims.iter().product::<i64>());
         HostTensor {
@@ -53,6 +65,7 @@ impl HostTensor {
         }
     }
 
+    /// An i32 tensor from values (panics on shape mismatch).
     pub fn i32(name: &str, dims: Vec<i64>, vals: &[i32]) -> HostTensor {
         assert_eq!(vals.len() as i64, dims.iter().product::<i64>());
         HostTensor {
@@ -63,10 +76,12 @@ impl HostTensor {
         }
     }
 
+    /// Element count (product of dims).
     pub fn n_elems(&self) -> usize {
         self.dims.iter().product::<i64>() as usize
     }
 
+    /// Decode as f32 values (errors on dtype mismatch).
     pub fn as_f32(&self) -> Result<Vec<f32>> {
         if self.dtype != DType::F32 {
             bail!("{}: not f32", self.name);
@@ -78,6 +93,7 @@ impl HostTensor {
             .collect())
     }
 
+    /// Decode as i32 values (errors on dtype mismatch).
     pub fn as_i32(&self) -> Result<Vec<i32>> {
         if self.dtype != DType::I32 {
             bail!("{}: not i32", self.name);

@@ -8,14 +8,17 @@ use crate::util::rng::Rng;
 pub struct Gen;
 
 impl Gen {
+    /// Uniform integer in `lo..=hi`.
     pub fn usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
         lo + rng.usize_below(hi - lo + 1)
     }
 
+    /// `len` normal-distributed floats scaled by `scale`.
     pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
         (0..len).map(|_| rng.normal() as f32 * scale).collect()
     }
 
+    /// Uniformly chosen element of `xs` (panics on empty input).
     pub fn choice<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
         &xs[rng.usize_below(xs.len())]
     }

@@ -6,16 +6,21 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
+/// Parsed command line: positionals, `--key value` options, flags.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// positional arguments, in order
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options
     pub options: BTreeMap<String, String>,
+    /// bare `--flag` switches
     pub flags: Vec<String>,
     /// option keys that take a value (everything else is a bare flag)
     valued: Vec<&'static str>,
 }
 
 impl Args {
+    /// Parse `argv`; `valued` lists option keys that consume a value.
     pub fn parse(argv: &[String], valued: &[&'static str]) -> Result<Args> {
         let mut out = Args { valued: valued.to_vec(), ..Default::default() };
         let mut i = 0;
@@ -41,23 +46,28 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env(valued: &[&'static str]) -> Result<Args> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&argv, valued)
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default`.
     pub fn opt_or(&self, name: &str, default: &str) -> String {
         self.opt(name).unwrap_or(default).to_string()
     }
 
+    /// Integer option with default; errors on unparseable input.
     pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.opt(name) {
             None => Ok(default),
@@ -67,6 +77,7 @@ impl Args {
         }
     }
 
+    /// Float option with default; errors on unparseable input.
     pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.opt(name) {
             None => Ok(default),

@@ -1,12 +1,17 @@
 //! Paper-style table rendering for the repro harnesses.
 
+/// An aligned ASCII table (paper-table shaped).
 pub struct Table {
+    /// column headers
     pub header: Vec<String>,
+    /// data rows
     pub rows: Vec<Vec<String>>,
+    /// table caption
     pub title: String,
 }
 
 impl Table {
+    /// An empty table with a caption and headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -15,10 +20,12 @@ impl Table {
         }
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: Vec<String>) {
         self.rows.push(cells);
     }
 
+    /// Render to an aligned multi-line string.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> =
             self.header.iter().map(|h| h.len()).collect();
@@ -59,6 +66,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
@@ -69,11 +77,13 @@ pub fn acc(v: f64) -> String {
     format!("{:.4}", v)
 }
 
+/// Signed percentage-point delta cell, e.g. `-2.3%`.
 pub fn pct_drop(baseline: f64, v: f64) -> String {
     let d = (v - baseline) * 100.0;
     format!("{}{:.1}%", if d >= 0.0 { "+" } else { "" }, d)
 }
 
+/// Milliseconds cell from seconds, e.g. `1.25ms`.
 pub fn ms(v: f64) -> String {
     format!("{:.2}ms", v * 1e3)
 }

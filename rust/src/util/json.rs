@@ -6,17 +6,25 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any number, as f64
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (sorted keys)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -28,6 +36,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (None on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -44,6 +53,7 @@ impl Json {
         Some(cur)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -51,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -58,10 +69,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -69,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -76,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -88,16 +103,19 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
 
+    /// Required string field.
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.req(key)?.as_str().ok_or_else(|| anyhow!("'{key}' not a string"))
     }
 
+    /// Required numeric field, as usize.
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.req(key)?
             .as_usize()
             .ok_or_else(|| anyhow!("'{key}' not a number"))
     }
 
+    /// Serialize back to compact JSON text.
     #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
@@ -143,14 +161,17 @@ impl Json {
     }
 }
 
+/// Object literal helper: `obj(vec![("k", num(1.0))])`.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number literal helper.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String literal helper.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

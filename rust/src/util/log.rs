@@ -6,19 +6,26 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
+/// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// unrecoverable problems
     Error = 0,
+    /// suspicious but survivable (the default threshold)
     Warn = 1,
+    /// high-level progress
     Info = 2,
+    /// verbose diagnostics
     Debug = 3,
+    /// per-event firehose
     Trace = 4,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
 static INIT: OnceLock<()> = OnceLock::new();
 
+/// The active threshold (initialized from `AMBER_LOG` on first call).
 pub fn level() -> Level {
     INIT.get_or_init(|| {
         let lvl = match std::env::var("AMBER_LOG").as_deref() {
@@ -39,21 +46,25 @@ pub fn level() -> Level {
     }
 }
 
+/// Override the threshold programmatically.
 pub fn set_level(l: Level) {
     INIT.get_or_init(|| ());
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at `l` currently pass the threshold.
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Emit one message to stderr if `l` passes the threshold.
 pub fn log(l: Level, module: &str, msg: &str) {
     if enabled(l) {
         eprintln!("[{:5}] {module}: {msg}", format!("{l:?}").to_lowercase());
     }
 }
 
+/// Log at [`util::log::Level::Info`](crate::util::log::Level).
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
@@ -62,6 +73,7 @@ macro_rules! info {
     };
 }
 
+/// Log at [`util::log::Level::Debug`](crate::util::log::Level).
 #[macro_export]
 macro_rules! debug_log {
     ($($arg:tt)*) => {
@@ -70,6 +82,7 @@ macro_rules! debug_log {
     };
 }
 
+/// Log at [`util::log::Level::Warn`](crate::util::log::Level).
 #[macro_export]
 macro_rules! warn_log {
     ($($arg:tt)*) => {

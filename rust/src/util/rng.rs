@@ -1,12 +1,14 @@
 //! Deterministic PRNG (xoshiro256**) — reproducible workloads, property
 //! tests and samplers without the `rand` crate.
 
+/// xoshiro256** PRNG state.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// Seeded generator (same seed -> same stream).
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed
         let mut x = seed.wrapping_add(0x9e3779b97f4a7c15);
@@ -20,6 +22,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)
@@ -49,6 +52,7 @@ impl Rng {
         }
     }
 
+    /// Uniform in [0, n), as usize.
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
     }
@@ -58,6 +62,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -74,10 +79,12 @@ impl Rng {
         -self.f64().max(1e-300).ln() / lambda
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
 
+    /// Fisher-Yates in-place shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.usize_below(i + 1);
@@ -85,6 +92,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly chosen element (panics on empty input).
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize_below(xs.len())]
     }

@@ -6,7 +6,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use amber_pruner::coordinator::batcher::{routing, ConfigKey, PrefillQueues};
-use amber_pruner::coordinator::kv::KvSlots;
+use amber_pruner::coordinator::kv::KvPages;
 use amber_pruner::coordinator::request::{Request, SparsityConfig, Tracked};
 use amber_pruner::coordinator::scheduler::{Engine, EngineConfig};
 use amber_pruner::metrics::EngineMetrics;
@@ -154,29 +154,35 @@ fn prop_nm_mask_is_exact_and_scored() {
 }
 
 #[test]
-fn prop_kv_slots_never_leak_or_alias() {
-    prop_check("kv-slots", 120, |rng, size| {
-        let slots = 2 + size % 6;
-        let mut kv = KvSlots::new(2, slots, 16, 1, 4);
-        let pre = vec![1.0f32; 2 * slots * 8 * 4];
-        let mut active: Vec<(u64, usize)> = Vec::new();
+fn prop_kv_pages_never_leak_or_alias() {
+    prop_check("kv-pages", 120, |rng, size| {
+        let block = *Gen::choice(rng, &[2usize, 4, 8]);
+        let n_blocks = 4 + size % 12;
+        let mut kv = KvPages::new(2, n_blocks, block, 1, 4, 16);
+        // packed prefill cache [L=2, total=16, kvd=4]
+        let pre = vec![1.0f32; 2 * 16 * 4];
+        let mut active: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
         for _ in 0..size * 4 {
-            if rng.bool(0.6) && active.len() < slots {
-                let vl = 1 + rng.usize_below(8);
-                let slot = kv
-                    .admit(next_id, &pre, &pre, 0, slots, 8, vl)
+            let vl = 1 + rng.usize_below(8);
+            let reserve = (vl + rng.usize_below(8)).min(16);
+            if rng.bool(0.6) && kv.can_admit(reserve) {
+                kv.admit_packed(next_id, &pre, &pre, 0, 16, vl, reserve)
                     .map_err(|e| e.to_string())?;
-                active.push((next_id, slot));
+                active.push(next_id);
                 next_id += 1;
             } else if !active.is_empty() {
                 let i = rng.usize_below(active.len());
-                let (_, slot) = active.swap_remove(i);
-                kv.release(slot);
+                let id = active.swap_remove(i);
+                kv.release(id).map_err(|e| e.to_string())?;
             }
             kv.check_invariants().map_err(|e| e.to_string())?;
-            if kv.free_slots() != slots - active.len() {
-                return Err("free-slot accounting drifted".into());
+            let owned: usize = active
+                .iter()
+                .map(|id| kv.table(*id).map(|t| t.len()).unwrap_or(0))
+                .sum();
+            if kv.free_blocks() != n_blocks - owned {
+                return Err("free-block accounting drifted".into());
             }
         }
         Ok(())
