@@ -9,7 +9,11 @@
 //! tokens x {dense, 2:4, 4:8, 8:16} x pool width and emits
 //! machine-readable results to `BENCH_prefill.json` (written next to the
 //! package manifest when run via `cargo bench --bench prefill_latency`) —
-//! the perf baseline future PRs regress against.
+//! the perf baseline future PRs regress against. Every projection here
+//! executes through the register-tiled kernel core (`kernels::*` via
+//! the engine's `SparsityPlan::dout_tile`), so these numbers reflect
+//! the tiled kernels, not the retained reference loops (those are
+//! benched head-to-head in `cargo bench --bench spmm`).
 //!
 //! Runs out of the box: without an `artifacts/` manifest the native
 //! engine serves its synthetic inventory.

@@ -1,71 +1,316 @@
-//! PERF bench: native N:M compressed SpMM vs dense matmul.
+//! PERF bench: reference (naive axpy / dot) vs register-tiled kernels
+//! across the three compute classes — dense f32, N:M compressed SpMM,
+//! and W8A8 int8 — at prefill-like token counts.
 //!
-//! This is the CPU stand-in for the paper's SpMM hardware: the compressed
-//! kernel touches n/m of the weight rows, so wall-clock should scale
-//! toward n/m of dense at matmul-bound sizes. Regenerates the mechanism
-//! behind the paper's acceleration claims (EXPERIMENTS.md §Perf).
+//! This is the CPU stand-in for the paper's SpMM hardware: the
+//! compressed kernel touches n/m of the weight rows, so wall-clock
+//! should scale toward n/m of dense at matmul-bound sizes, **provided
+//! the kernel is tile-aware** — the point of the `kernels` layer. Each
+//! series is emitted to `BENCH_spmm.json` (written next to the package
+//! manifest when run via `cargo bench --bench spmm`) with executed
+//! GFLOP/s, and the sparse:dense crossover point per ratio (smallest
+//! token count where the tiled N:M kernel beats the tiled dense
+//! kernel) is recorded — the honest version of the paper's
+//! acceleration claim (EXPERIMENTS.md §Perf).
+//!
+//! Compression / quantization happen outside the timed region (a fused
+//! prefill amortizes them); the `compress` series reports their cost
+//! separately.
+
+use std::collections::BTreeMap;
 
 use amber_pruner::bench::{bench, black_box};
+use amber_pruner::kernels::{dense, int8, nm, reference, DEFAULT_DOUT_TILE};
 use amber_pruner::quant;
-use amber_pruner::sparsity::spmm::{
-    dense_matmul, dense_matmul_skip_zeros, NmCompressed,
-};
+use amber_pruner::sparsity::spmm::NmCompressed;
+use amber_pruner::util::json::Json;
 use amber_pruner::util::rng::Rng;
+
+const DIN: usize = 384;
+const DOUT: usize = 384;
+const TOKENS: [usize; 3] = [64, 256, 1024];
+const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
+const WARMUP: usize = 1;
+const ITERS: usize = 5;
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
 }
 
+struct Row {
+    kernel: &'static str,
+    imp: &'static str,
+    ratio: Option<(usize, usize)>,
+    tokens: usize,
+    median_secs: f64,
+    executed_flops: u64,
+}
+
+impl Row {
+    fn gflops(&self) -> f64 {
+        self.executed_flops as f64 / self.median_secs.max(1e-12) / 1e9
+    }
+    fn json(&self, tiled_dense_median: Option<f64>) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kernel".into(), Json::Str(self.kernel.into()));
+        o.insert("impl".into(), Json::Str(self.imp.into()));
+        o.insert(
+            "ratio".into(),
+            match self.ratio {
+                Some((n, m)) => Json::Str(format!("{n}:{m}")),
+                None => Json::Null,
+            },
+        );
+        o.insert("tokens".into(), Json::Num(self.tokens as f64));
+        o.insert("din".into(), Json::Num(DIN as f64));
+        o.insert("dout".into(), Json::Num(DOUT as f64));
+        o.insert("median_secs".into(), Json::Num(self.median_secs));
+        o.insert("gflops".into(), Json::Num(self.gflops()));
+        // dense-equivalent throughput: what this wall-clock delivers in
+        // dense-matmul terms (the serving-relevant number)
+        let dense_flops = 2.0 * (self.tokens * DIN * DOUT) as f64;
+        o.insert(
+            "dense_equiv_gflops".into(),
+            Json::Num(dense_flops / self.median_secs.max(1e-12) / 1e9),
+        );
+        o.insert(
+            "speedup_vs_tiled_dense".into(),
+            match tiled_dense_median {
+                Some(d) => Json::Num(d / self.median_secs.max(1e-12)),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(o)
+    }
+}
+
 fn main() {
-    println!("== spmm: dense vs N:M compressed (f32) ==");
     let mut rng = Rng::new(42);
-    // prefill-like projection sizes: T tokens x (din -> dout)
-    for &(t, din, dout) in &[(256usize, 384usize, 384usize),
-                             (512, 384, 1536),
-                             (512, 1536, 384)] {
-        let x = rand_vec(&mut rng, t * din);
-        let w = rand_vec(&mut rng, din * dout);
-        // fairness: the baseline is a TRUE dense matmul — no zero
-        // skipping — so pruned inputs cannot make it silently sparse
-        let name = format!("dense       {t}x{din}x{dout}");
-        let dense = bench(&name, 2, 8, Some((t * din * dout) as u64), || {
-            black_box(dense_matmul(&x, t, din, &w, dout));
+    let w = rand_vec(&mut rng, DIN * DOUT);
+    let (wq, ws) = quant::quantize_weight(&w, DIN, DOUT);
+    let mut rows: Vec<Row> = Vec::new();
+    // tiled-dense medians per token count, the speedup/crossover base
+    let mut dense_tiled_med: BTreeMap<usize, f64> = BTreeMap::new();
+
+    println!("== spmm kernel core: reference vs tiled ({DIN}x{DOUT}) ==");
+    for &t in &TOKENS {
+        let x = rand_vec(&mut rng, t * DIN);
+        let dense_flops = 2 * (t * DIN * DOUT) as u64;
+
+        // ---- dense f32
+        let r = bench(
+            &format!("dense.reference      t={t}"),
+            WARMUP,
+            ITERS,
+            Some(dense_flops),
+            || {
+                black_box(reference::dense(&x, t, DIN, &w, DOUT));
+            },
+        );
+        rows.push(Row {
+            kernel: "dense",
+            imp: "reference",
+            ratio: None,
+            tokens: t,
+            median_secs: r.median_secs,
+            executed_flops: dense_flops,
         });
-        for &(n, m) in &[(2usize, 4usize), (4, 8), (8, 16)] {
-            let c = NmCompressed::compress(&x, t, din, &[], n, m);
-            let label = format!("sparse {n}:{m}  {t}x{din}x{dout}");
-            let sp = bench(&label, 2, 8, Some((t * din * dout) as u64), || {
-                black_box(c.matmul(&w, dout));
+        let mut out = vec![0.0f32; t * DOUT];
+        let r = bench(
+            &format!("dense.tiled          t={t}"),
+            WARMUP,
+            ITERS,
+            Some(dense_flops),
+            || {
+                dense::dense_tiled(
+                    &x,
+                    t,
+                    DIN,
+                    &w,
+                    DOUT,
+                    DEFAULT_DOUT_TILE,
+                    &mut out,
+                );
+                black_box(&out);
+            },
+        );
+        dense_tiled_med.insert(t, r.median_secs);
+        rows.push(Row {
+            kernel: "dense",
+            imp: "tiled",
+            ratio: None,
+            tokens: t,
+            median_secs: r.median_secs,
+            executed_flops: dense_flops,
+        });
+
+        // ---- N:M compressed SpMM, every ratio
+        for &(n, m) in &RATIOS {
+            let c = NmCompressed::compress(&x, t, DIN, &[], n, m);
+            let per_row = DIN / m * n;
+            let sparse_flops = dense_flops * n as u64 / m as u64;
+            let r = bench(
+                &format!("nm{n}_{m}.reference    t={t}"),
+                WARMUP,
+                ITERS,
+                Some(sparse_flops),
+                || {
+                    black_box(reference::spmm_nm(
+                        &c.values, &c.index, t, per_row, &w, DOUT,
+                    ));
+                },
+            );
+            rows.push(Row {
+                kernel: "nm",
+                imp: "reference",
+                ratio: Some((n, m)),
+                tokens: t,
+                median_secs: r.median_secs,
+                executed_flops: sparse_flops,
             });
+            let mut out = vec![0.0f32; t * DOUT];
+            let r = bench(
+                &format!("nm{n}_{m}.tiled        t={t}"),
+                WARMUP,
+                ITERS,
+                Some(sparse_flops),
+                || {
+                    nm::spmm_nm_tiled(
+                        &c.values,
+                        &c.index,
+                        t,
+                        per_row,
+                        &w,
+                        DOUT,
+                        DEFAULT_DOUT_TILE,
+                        &mut out,
+                    );
+                    black_box(&out);
+                },
+            );
             println!(
-                "    -> speedup {:.2}x (ideal {:.2}x)",
-                dense.median_secs / sp.median_secs,
+                "    -> vs tiled dense: {:.2}x (ideal {:.2}x)",
+                dense_tiled_med[&t] / r.median_secs,
                 m as f64 / n as f64
             );
+            rows.push(Row {
+                kernel: "nm",
+                imp: "tiled",
+                ratio: Some((n, m)),
+                tokens: t,
+                median_secs: r.median_secs,
+                executed_flops: sparse_flops,
+            });
         }
-        // third series: what a branchy scalar kernel gets from the same
-        // pruned input without the compressed format
-        let pruned = NmCompressed::compress(&x, t, din, &[], 2, 4)
-            .decompress();
-        let bname = format!("branch 2:4  {t}x{din}x{dout}");
-        bench(&bname, 2, 8, Some((t * din * dout) as u64), || {
-            black_box(dense_matmul_skip_zeros(&pruned, t, din, &w, dout));
+
+        // ---- W8A8 int8 (per-token activation scales, as served)
+        let (xq, xs) = quant::quantize_per_token(&x, t, DIN);
+        let r = bench(
+            &format!("w8a8.reference       t={t}"),
+            WARMUP,
+            ITERS,
+            Some(dense_flops),
+            || {
+                black_box(reference::w8a8_per_token(
+                    &xq, t, DIN, &wq, DOUT, &xs, &ws,
+                ));
+            },
+        );
+        rows.push(Row {
+            kernel: "w8a8",
+            imp: "reference",
+            ratio: None,
+            tokens: t,
+            median_secs: r.median_secs,
+            executed_flops: dense_flops,
         });
+        let mut out = vec![0.0f32; t * DOUT];
+        let r = bench(
+            &format!("w8a8.tiled           t={t}"),
+            WARMUP,
+            ITERS,
+            Some(dense_flops),
+            || {
+                int8::w8a8_tiled_per_token(
+                    &xq,
+                    t,
+                    DIN,
+                    &wq,
+                    DOUT,
+                    DEFAULT_DOUT_TILE,
+                    &xs,
+                    &ws,
+                    &mut out,
+                );
+                black_box(&out);
+            },
+        );
+        rows.push(Row {
+            kernel: "w8a8",
+            imp: "tiled",
+            ratio: None,
+            tokens: t,
+            median_secs: r.median_secs,
+            executed_flops: dense_flops,
+        });
+
         // compression overhead itself (prefill would fuse this)
-        let cname = format!("compress 2:4 {t}x{din}");
-        bench(&cname, 2, 8, Some((t * din) as u64), || {
-            black_box(NmCompressed::compress(&x, t, din, &[], 2, 4));
-        });
+        bench(
+            &format!("compress 2:4         t={t}"),
+            WARMUP,
+            ITERS,
+            Some((t * DIN) as u64),
+            || {
+                black_box(NmCompressed::compress(&x, t, DIN, &[], 2, 4));
+            },
+        );
     }
 
-    println!("\n== spmm int8 (Outstanding-sparse compute path) ==");
-    let (t, din, dout) = (256usize, 384usize, 384usize);
-    let x = rand_vec(&mut rng, t * din);
-    let w = rand_vec(&mut rng, din * dout);
-    let (wq, ws) = quant::quantize_weight(&w, din, dout);
-    let xq = quant::quantize(&x, 0.05);
-    bench("w8a8 dense  256x384x384", 2, 8,
-          Some((t * din * dout) as u64), || {
-        black_box(quant::w8a8_matmul(&xq, t, din, &wq, dout, 0.05, &ws));
-    });
+    // ---- crossover: smallest token count where tiled N:M beats tiled
+    // dense, per ratio (None = never on these shapes)
+    let mut crossover = BTreeMap::new();
+    for &(n, m) in &RATIOS {
+        let cross = TOKENS.iter().copied().find(|&t| {
+            rows.iter().any(|r| {
+                r.kernel == "nm"
+                    && r.imp == "tiled"
+                    && r.ratio == Some((n, m))
+                    && r.tokens == t
+                    && r.median_secs < dense_tiled_med[&t]
+            })
+        });
+        println!(
+            "crossover {n}:{m}: {}",
+            cross
+                .map(|t| format!("tokens >= {t}"))
+                .unwrap_or_else(|| "not reached".into())
+        );
+        crossover.insert(
+            format!("{n}:{m}"),
+            match cross {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Null,
+            },
+        );
+    }
+
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| r.json(dense_tiled_med.get(&r.tokens).copied()))
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("spmm_kernel_core".into()));
+    root.insert("din".into(), Json::Num(DIN as f64));
+    root.insert("dout".into(), Json::Num(DOUT as f64));
+    root.insert(
+        "dout_tile".into(),
+        Json::Num(DEFAULT_DOUT_TILE as f64),
+    );
+    root.insert("crossover".into(), Json::Obj(crossover));
+    root.insert("results".into(), Json::Arr(results));
+    let path = "BENCH_spmm.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
 }

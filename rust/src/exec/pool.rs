@@ -5,7 +5,11 @@
 //! artifact compilation, workload generation and — since the batched
 //! prefill pipeline — the row-tile fan-out of `NmCompressedBatch` /
 //! `dense_matmul_parallel` (the native engine owns one pool and hands it
-//! to every projection kernel).
+//! to every projection kernel). Pool jobs are `'static`, so fan-out
+//! callers share buffers with workers via `Arc` rather than borrows;
+//! since the register-tiled kernel core, activations and weights are
+//! `Arc`-threaded end-to-end through the pipeline, so submitting a
+//! row-tile job copies nothing.
 //!
 //! Panic safety: a panicking job is caught inside the worker (the worker
 //! thread survives and keeps draining the queue), and [`ThreadPool::map`]

@@ -1,0 +1,113 @@
+//! Register-tiled dense matmul: the true-dense baseline, cache-blocked.
+//!
+//! Performs the full `t·din·dout` multiply-adds unconditionally (no
+//! zero skipping — a pruned input cannot make the baseline silently
+//! sparse), with the same `dout`-tile accumulator scheme as the N:M
+//! kernel. See the [module docs](crate::kernels) for the tiling scheme
+//! and the bitwise-parity argument against
+//! [`reference::dense`](super::reference::dense).
+
+use super::{clamp_tile, MAX_DOUT_TILE};
+
+/// One `(row, tile)` microkernel at const width `W`.
+#[inline(always)]
+fn row_tile<const W: usize>(
+    xrow: &[f32],
+    w: &[f32],
+    dout: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [0.0f32; W];
+    for (k, &v) in xrow.iter().enumerate() {
+        let start = k * dout + c0;
+        let wrow: &[f32; W] =
+            w[start..start + W].try_into().expect("tile width");
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..W].copy_from_slice(&acc);
+}
+
+/// Runtime-width `(row, tile)` microkernel for ragged tails and
+/// non-specialized tile widths.
+#[inline(always)]
+fn row_tile_dyn(
+    xrow: &[f32],
+    w: &[f32],
+    dout: usize,
+    c0: usize,
+    tw: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(tw <= MAX_DOUT_TILE);
+    let mut buf = [0.0f32; MAX_DOUT_TILE];
+    let acc = &mut buf[..tw];
+    for (k, &v) in xrow.iter().enumerate() {
+        let start = k * dout + c0;
+        let wrow = &w[start..start + tw];
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..tw].copy_from_slice(acc);
+}
+
+/// Tiled dense matmul: row-major `x [t, din] @ w [din, dout]` written
+/// into `out` (`[t, dout]`, fully overwritten). Bitwise identical to
+/// [`reference::dense`](super::reference::dense) for every `dout_tile`.
+pub fn dense_tiled(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    dout_tile: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * din, "activation shape");
+    assert_eq!(w.len(), din * dout, "weight shape");
+    assert_eq!(out.len(), t * dout, "output shape");
+    let tile = clamp_tile(dout_tile);
+    for r in 0..t {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut c0 = 0;
+        while c0 < dout {
+            let tw = tile.min(dout - c0);
+            let ot = &mut orow[c0..c0 + tw];
+            match tw {
+                4 => row_tile::<4>(xrow, w, dout, c0, ot),
+                8 => row_tile::<8>(xrow, w, dout, c0, ot),
+                16 => row_tile::<16>(xrow, w, dout, c0, ot),
+                32 => row_tile::<32>(xrow, w, dout, c0, ot),
+                _ => row_tile_dyn(xrow, w, dout, c0, tw, ot),
+            }
+            c0 += tw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiled_matches_reference_across_tile_widths() {
+        let mut rng = Rng::new(13);
+        let (t, din, dout) = (7usize, 24usize, 29usize);
+        let x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let golden = reference::dense(&x, t, din, &w, dout);
+        for tile in [1usize, 3, 4, 8, 11, 16, 32, 64, 1000] {
+            let mut out = vec![0.0f32; t * dout];
+            dense_tiled(&x, t, din, &w, dout, tile, &mut out);
+            assert_eq!(out, golden, "tile {tile}");
+        }
+    }
+}

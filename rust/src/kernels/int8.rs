@@ -1,0 +1,174 @@
+//! Register-tiled W8A8 matmul: int8 operands, `i32` accumulation, and
+//! activation scales fused at dequant — per-tensor or **per-token**.
+//!
+//! Integer accumulation is exact, so the tile order cannot change the
+//! accumulator; bitwise parity with
+//! [`reference::w8a8_per_token`](super::reference::w8a8_per_token)
+//! additionally requires the dequant expression to match — both
+//! kernels compute `(acc as f32 * x_scale) * w_scale[c]` in that
+//! association order. Per-token scales make a token's quantized output
+//! depend only on its own row (not its batchmates), which is what
+//! turns packed-vs-sequential sq prefill parity from tolerance-based
+//! into bitwise (`tests/kernel_parity.rs`).
+
+use super::{clamp_tile, MAX_DOUT_TILE};
+
+/// One `(row, tile)` microkernel at const width `W`: `W` i32
+/// accumulators in registers, dequantized on store.
+#[inline(always)]
+fn row_tile<const W: usize>(
+    xrow: &[i8],
+    wq: &[i8],
+    dout: usize,
+    c0: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    let mut acc = [0i32; W];
+    for (k, &v) in xrow.iter().enumerate() {
+        let start = k * dout + c0;
+        let wrow: &[i8; W] =
+            wq[start..start + W].try_into().expect("tile width");
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v as i32 * wv as i32;
+        }
+    }
+    let ws = &w_scales[c0..c0 + W];
+    for ((o, &a), &s) in out[..W].iter_mut().zip(acc.iter()).zip(ws) {
+        *o = a as f32 * x_scale * s;
+    }
+}
+
+/// Runtime-width `(row, tile)` microkernel for ragged tails and
+/// non-specialized tile widths.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn row_tile_dyn(
+    xrow: &[i8],
+    wq: &[i8],
+    dout: usize,
+    c0: usize,
+    tw: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(tw <= MAX_DOUT_TILE);
+    let mut buf = [0i32; MAX_DOUT_TILE];
+    let acc = &mut buf[..tw];
+    for (k, &v) in xrow.iter().enumerate() {
+        let start = k * dout + c0;
+        let wrow = &wq[start..start + tw];
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v as i32 * wv as i32;
+        }
+    }
+    let ws = &w_scales[c0..c0 + tw];
+    for ((o, &a), &s) in out[..tw].iter_mut().zip(acc.iter()).zip(ws) {
+        *o = a as f32 * x_scale * s;
+    }
+}
+
+/// Tiled W8A8 matmul with **per-token** activation scales:
+/// `xq [t, din] @ wq [din, dout]` with `i32` accumulation, dequantized
+/// as `(acc as f32 * x_scales[r]) * w_scales[c]` into `out`
+/// (`[t, dout]`, fully overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn w8a8_tiled_per_token(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &[i8],
+    dout: usize,
+    dout_tile: usize,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(xq.len(), t * din, "activation shape");
+    assert_eq!(wq.len(), din * dout, "weight shape");
+    assert_eq!(x_scales.len(), t, "one activation scale per token row");
+    assert_eq!(w_scales.len(), dout, "one weight scale per column");
+    assert_eq!(out.len(), t * dout, "output shape");
+    let tile = clamp_tile(dout_tile);
+    for r in 0..t {
+        let xrow = &xq[r * din..(r + 1) * din];
+        let xs = x_scales[r];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut c0 = 0;
+        while c0 < dout {
+            let tw = tile.min(dout - c0);
+            let ot = &mut orow[c0..c0 + tw];
+            match tw {
+                4 => row_tile::<4>(xrow, wq, dout, c0, xs, w_scales, ot),
+                8 => row_tile::<8>(xrow, wq, dout, c0, xs, w_scales, ot),
+                16 => row_tile::<16>(xrow, wq, dout, c0, xs, w_scales, ot),
+                32 => row_tile::<32>(xrow, wq, dout, c0, xs, w_scales, ot),
+                _ => row_tile_dyn(
+                    xrow, wq, dout, c0, tw, xs, w_scales, ot,
+                ),
+            }
+            c0 += tw;
+        }
+    }
+}
+
+/// Tiled W8A8 matmul with one **per-tensor** activation scale — the
+/// per-token kernel with the scale broadcast to every row.
+#[allow(clippy::too_many_arguments)]
+pub fn w8a8_tiled(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &[i8],
+    dout: usize,
+    dout_tile: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    let scales = vec![x_scale; t];
+    w8a8_tiled_per_token(
+        xq, t, din, wq, dout, dout_tile, &scales, w_scales, out,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiled_matches_reference_across_tile_widths() {
+        let mut rng = Rng::new(17);
+        let (t, din, dout) = (6usize, 32usize, 21usize);
+        let xq: Vec<i8> = (0..t * din)
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let wq: Vec<i8> = (0..din * dout)
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let ws: Vec<f32> =
+            (0..dout).map(|_| rng.f64() as f32 * 0.01 + 1e-4).collect();
+        let xs: Vec<f32> =
+            (0..t).map(|_| rng.f64() as f32 * 0.1 + 1e-4).collect();
+        let golden = reference::w8a8_per_token(
+            &xq, t, din, &wq, dout, &xs, &ws,
+        );
+        for tile in [1usize, 4, 7, 8, 16, 32, 64] {
+            let mut out = vec![0.0f32; t * dout];
+            w8a8_tiled_per_token(
+                &xq, t, din, &wq, dout, tile, &xs, &ws, &mut out,
+            );
+            assert_eq!(out, golden, "tile {tile}");
+        }
+        // per-tensor == per-token with a broadcast scale
+        let golden_pt =
+            reference::w8a8(&xq, t, din, &wq, dout, 0.05, &ws);
+        let mut out = vec![0.0f32; t * dout];
+        w8a8_tiled(&xq, t, din, &wq, dout, 8, 0.05, &ws, &mut out);
+        assert_eq!(out, golden_pt);
+    }
+}

@@ -1,0 +1,73 @@
+//! Register-tiled, cache-blocked CPU microkernels — the compute core
+//! every hot matmul in the crate dispatches to.
+//!
+//! # Why a kernel layer
+//!
+//! The paper's speedup claim lives or dies on the N:M SpMM actually
+//! beating the dense matmul it replaces. The original kernels were
+//! naive axpy loops: for every input channel they re-streamed the full
+//! `dout`-wide accumulator row plus one full weight row, so at
+//! realistic `dout` the accumulator fell out of L1 on every pass and
+//! the sparse kernel's FLOP savings were eaten by memory traffic. The
+//! tiled kernels here iterate a fixed `dout`-tile of accumulators kept
+//! in registers over the row's contraction axis instead:
+//!
+//! ```text
+//! for each token row r:
+//!   for each dout-tile [c0, c0+W):
+//!     acc[0..W] = 0                       // W registers
+//!     for each k (nonzero / channel of row r, ascending):
+//!       acc[j] += x[r,k] * w[k, c0+j]    // one W-wide FMA row
+//!     out[r, c0..c0+W] = acc
+//! ```
+//!
+//! The accumulator tile never leaves registers, the weight tile is
+//! streamed exactly once per (row, tile), and the compressed N:M row
+//! (`din·n/m` value/index pairs — constant per row by the exact-N:M
+//! contract, so the walk is branch-free fixed-stride) stays L1-resident
+//! while it is re-streamed once per tile.
+//!
+//! # Bitwise parity with the reference kernels
+//!
+//! For every output element `out[r, c]`, the tiled kernels add the
+//! same contributions `x[r,k]·w[k,c]` in the same ascending-`k` order,
+//! starting from `+0.0`, one `f32` add at a time — exactly the
+//! per-element reduction chain of the naive loops (which interleave
+//! different `c`s between adds, but each element's own chain is
+//! unchanged). Rust never contracts `a*b + c` into an FMA on its own,
+//! so the tiled outputs are **bitwise identical** to the retained
+//! [`reference`] kernels for every tile width, and tile width is a pure
+//! performance knob. `tests/kernel_parity.rs` pins this property across
+//! ratios, shapes, tile widths, row-block heights and pool widths.
+//!
+//! The int8 kernel accumulates in `i32` (exact, associative), then
+//! dequantizes each element as `(acc as f32 * x_scale) * w_scale[c]` —
+//! the same expression, in the same association order, as the
+//! reference, with per-token `x_scale` support fused at dequant.
+//!
+//! # Tuning
+//!
+//! [`DEFAULT_DOUT_TILE`] (8) fits comfortably in two SSE / one AVX2
+//! register set with room for the broadcast multiplier; widths 4, 8,
+//! 16 and 32 get const-unrolled fast paths, anything else (and every
+//! ragged tail tile) takes the runtime-width path. The knob rides on
+//! [`crate::sparsity::plan::SparsityPlan::dout_tile`] and is clamped to
+//! `1..=`[`MAX_DOUT_TILE`].
+
+pub mod dense;
+pub mod int8;
+pub mod nm;
+pub mod reference;
+
+/// Default accumulator-tile width (output columns per register tile).
+pub const DEFAULT_DOUT_TILE: usize = 8;
+
+/// Ceiling for the tile-width knob: the runtime-width fallback keeps
+/// its accumulators in one stack array of this size.
+pub const MAX_DOUT_TILE: usize = 64;
+
+/// Clamp a user-supplied tile width into the supported range.
+#[inline]
+pub fn clamp_tile(dout_tile: usize) -> usize {
+    dout_tile.clamp(1, MAX_DOUT_TILE)
+}

@@ -1,0 +1,149 @@
+//! Register-tiled N:M SpMM over the compressed `(value, index)` row
+//! format of [`crate::sparsity::spmm::NmCompressed`].
+//!
+//! Exact N:M makes every row's nonzero count a compile-visible constant
+//! (`din·n/m`), so the compressed walk is a branch-free fixed-stride
+//! scan; the only branch kept is the `v == 0.0` skip the reference
+//! kernel performs (required for bitwise parity — a surviving channel
+//! can legitimately hold `0.0`, and skipping it is not a no-op for
+//! `-0.0` accumulators). See the [module docs](crate::kernels) for the
+//! tiling scheme and the bitwise-parity argument.
+
+use super::{clamp_tile, MAX_DOUT_TILE};
+
+/// One `(row, tile)` microkernel at const width `W`: `W` accumulators
+/// in registers, streamed over the row's compressed nonzeros.
+#[inline(always)]
+fn row_tile<const W: usize>(
+    vals: &[f32],
+    idx: &[u32],
+    w: &[f32],
+    dout: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [0.0f32; W];
+    for (&v, &ci) in vals.iter().zip(idx.iter()) {
+        if v == 0.0 {
+            continue;
+        }
+        let start = ci as usize * dout + c0;
+        let wrow: &[f32; W] =
+            w[start..start + W].try_into().expect("tile width");
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..W].copy_from_slice(&acc);
+}
+
+/// Runtime-width `(row, tile)` microkernel for ragged tails and
+/// non-specialized tile widths; accumulators live in one stack array.
+#[inline(always)]
+fn row_tile_dyn(
+    vals: &[f32],
+    idx: &[u32],
+    w: &[f32],
+    dout: usize,
+    c0: usize,
+    tw: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(tw <= MAX_DOUT_TILE);
+    let mut buf = [0.0f32; MAX_DOUT_TILE];
+    let acc = &mut buf[..tw];
+    for (&v, &ci) in vals.iter().zip(idx.iter()) {
+        if v == 0.0 {
+            continue;
+        }
+        let start = ci as usize * dout + c0;
+        let wrow = &w[start..start + tw];
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..tw].copy_from_slice(acc);
+}
+
+/// Tiled compressed SpMM: `rows` compressed token rows of exactly
+/// `per_row` `(value, channel-index)` pairs each, against a row-major
+/// `[din, dout]` weight, written into `out` (`[rows, dout]`, fully
+/// overwritten). Bitwise identical to
+/// [`reference::spmm_nm`](super::reference::spmm_nm) for every
+/// `dout_tile`.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_nm_tiled(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &[f32],
+    dout: usize,
+    dout_tile: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(values.len(), rows * per_row, "values shape");
+    assert_eq!(index.len(), rows * per_row, "index shape");
+    assert_eq!(out.len(), rows * dout, "output shape");
+    let tile = clamp_tile(dout_tile);
+    for r in 0..rows {
+        let vals = &values[r * per_row..(r + 1) * per_row];
+        let idx = &index[r * per_row..(r + 1) * per_row];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut c0 = 0;
+        while c0 < dout {
+            let tw = tile.min(dout - c0);
+            let ot = &mut orow[c0..c0 + tw];
+            match tw {
+                4 => row_tile::<4>(vals, idx, w, dout, c0, ot),
+                8 => row_tile::<8>(vals, idx, w, dout, c0, ot),
+                16 => row_tile::<16>(vals, idx, w, dout, c0, ot),
+                32 => row_tile::<32>(vals, idx, w, dout, c0, ot),
+                _ => row_tile_dyn(vals, idx, w, dout, c0, tw, ot),
+            }
+            c0 += tw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiled_matches_reference_across_tile_widths() {
+        let mut rng = Rng::new(11);
+        let (rows, din, dout, n, m) = (5usize, 32usize, 37usize, 2, 4);
+        let per_row = din / m * n;
+        // synthetic compressed rows: two survivors per group of four,
+        // including an explicit 0.0 survivor to exercise the skip branch
+        let mut values = Vec::new();
+        let mut index = Vec::new();
+        for r in 0..rows {
+            for g in 0..din / m {
+                for j in 0..n {
+                    let v = if (r + g + j) % 7 == 0 {
+                        0.0
+                    } else {
+                        rng.normal() as f32
+                    };
+                    values.push(v);
+                    index.push((g * m + 2 * j) as u32);
+                }
+            }
+        }
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let golden =
+            reference::spmm_nm(&values, &index, rows, per_row, &w, dout);
+        for tile in [1usize, 3, 4, 5, 8, 16, 32, 64, 1000] {
+            let mut out = vec![0.0f32; rows * dout];
+            spmm_nm_tiled(
+                &values, &index, rows, per_row, &w, dout, tile, &mut out,
+            );
+            assert_eq!(out, golden, "tile {tile}");
+        }
+    }
+}

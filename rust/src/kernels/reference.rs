@@ -1,0 +1,116 @@
+//! The retained naive loops the tiled kernels are pinned against.
+//!
+//! These are the pre-tiling kernels, verbatim: the per-channel axpy
+//! SpMM/dense loops and the per-output-element int8 dot product. They
+//! are kept public (not `#[cfg(test)]`) because both the
+//! `tests/kernel_parity.rs` property suite and the `spmm` bench's
+//! reference-vs-tiled series consume them from outside the crate.
+//! They define the float-op order contract: the tiled kernels must be
+//! **bitwise identical** to these for every shape and tile width.
+
+/// Reference compressed N:M SpMM: per-channel axpy over the full
+/// output row, skipping stored zeros (the surviving-channel `0.0`
+/// case) — the original `NmCompressed::matmul` loop.
+pub fn spmm_nm(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    assert_eq!(values.len(), rows * per_row, "values shape");
+    assert_eq!(index.len(), rows * per_row, "index shape");
+    let mut out = vec![0.0f32; rows * dout];
+    for r in 0..rows {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let base = r * per_row;
+        for k in 0..per_row {
+            let v = values[base + k];
+            if v == 0.0 {
+                continue;
+            }
+            let c = index[base + k] as usize;
+            let wrow = &w[c * dout..(c + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += v * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Reference dense matmul: per-channel axpy over the full output row,
+/// no zero skipping — the original `dense_matmul` loop.
+pub fn dense(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), t * din, "activation shape");
+    assert_eq!(w.len(), din * dout, "weight shape");
+    let mut out = vec![0.0f32; t * dout];
+    for r in 0..t {
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let xrow = &x[r * din..(r + 1) * din];
+        for (c, &v) in xrow.iter().enumerate() {
+            let wrow = &w[c * dout..(c + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += v * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Reference W8A8 matmul with a per-tensor activation scale: one i32
+/// dot product per output element — the original `quant::w8a8_matmul`
+/// loop.
+pub fn w8a8(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &[i8],
+    dout: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; t * dout];
+    for r in 0..t {
+        for c in 0..dout {
+            let mut acc: i32 = 0;
+            for k in 0..din {
+                acc += xq[r * din + k] as i32 * wq[k * dout + c] as i32;
+            }
+            out[r * dout + c] = acc as f32 * x_scale * w_scales[c];
+        }
+    }
+    out
+}
+
+/// Reference W8A8 matmul with per-token activation scales: the same
+/// dot-product loop with `x_scales[r]` fused at dequant.
+pub fn w8a8_per_token(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &[i8],
+    dout: usize,
+    x_scales: &[f32],
+    w_scales: &[f32],
+) -> Vec<f32> {
+    assert_eq!(x_scales.len(), t, "one activation scale per token row");
+    let mut out = vec![0f32; t * dout];
+    for r in 0..t {
+        for c in 0..dout {
+            let mut acc: i32 = 0;
+            for k in 0..din {
+                acc += xq[r * din + k] as i32 * wq[k * dout + c] as i32;
+            }
+            out[r * dout + c] = acc as f32 * x_scales[r] * w_scales[c];
+        }
+    }
+    out
+}

@@ -23,6 +23,7 @@
 
 pub mod util;
 pub mod exec;
+pub mod kernels;
 pub mod tensor;
 pub mod metrics;
 pub mod sparsity;

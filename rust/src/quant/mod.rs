@@ -1,6 +1,17 @@
 //! Int8 quantization helpers (rust mirror of `amber/quant.py`) — used for
 //! verification of the W8A8 artifacts and by the native SpMM bench's int8
 //! variant (Outstanding-sparse's compute path).
+//!
+//! The matmuls dispatch to the register-tiled int8 kernel in
+//! [`crate::kernels::int8`] and are bitwise identical to the retained
+//! reference loops in [`crate::kernels::reference`]. Activation scaling
+//! comes in two flavors: per-tensor ([`quantize`] + [`w8a8_matmul`]) and
+//! **per-token** ([`quantize_per_token`] + [`w8a8_matmul_per_token`]),
+//! where each token row carries its own absmax scale — the serving path
+//! uses per-token so a token's quantized logits never depend on its
+//! batchmates (what makes packed sq prefill bitwise-reproducible).
+
+use crate::kernels::{self, DEFAULT_DOUT_TILE};
 
 /// Symmetric per-tensor int8 quantization with a static scale.
 pub fn quantize(x: &[f32], scale: f32) -> Vec<i8> {
@@ -14,30 +25,57 @@ pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
     q.iter().map(|&v| v as f32 * scale).collect()
 }
 
+/// Symmetric **per-token** int8 quantization of a `[t, din]` activation:
+/// each token row gets its own absmax scale (`(absmax/127).max(1e-8)`,
+/// the same formula the per-tensor serving path used for the whole
+/// batch). Returns `(quantized rows, per-row scales)`.
+pub fn quantize_per_token(
+    x: &[f32],
+    t: usize,
+    din: usize,
+) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), t * din, "quantize_per_token: x shape");
+    let mut q = Vec::with_capacity(t * din);
+    let mut scales = Vec::with_capacity(t);
+    for row in x.chunks_exact(din) {
+        let absmax = row.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let s = (absmax / 127.0).max(1e-8);
+        scales.push(s);
+        q.extend(
+            row.iter()
+                .map(|&v| (v / s).round().clamp(-127.0, 127.0) as i8),
+        );
+    }
+    (q, scales)
+}
+
 /// Per-output-channel weight quantization: w [din, dout] row-major ->
-/// (wq, per-column scales).
+/// (wq, per-column scales). Both sweeps walk the storage row-major
+/// (`chunks_exact(dout)` against a `dout`-wide running absmax /
+/// per-column scale vector), so the weight matrix is streamed
+/// sequentially instead of strided.
 pub fn quantize_weight(w: &[f32], din: usize, dout: usize) -> (Vec<i8>, Vec<f32>) {
-    let mut absmax = vec![0f32; dout];
-    for r in 0..din {
-        for c in 0..dout {
-            absmax[c] = absmax[c].max(w[r * dout + c].abs());
+    assert_eq!(w.len(), din * dout, "quantize_weight: w shape");
+    let mut absmax = vec![0.0f32; dout];
+    for row in w.chunks_exact(dout) {
+        for (a, &v) in absmax.iter_mut().zip(row.iter()) {
+            *a = a.max(v.abs());
         }
     }
     let scales: Vec<f32> =
         absmax.iter().map(|&a| (a / 127.0).max(1e-8)).collect();
-    let mut wq = vec![0i8; din * dout];
-    for r in 0..din {
-        for c in 0..dout {
-            wq[r * dout + c] = (w[r * dout + c] / scales[c])
-                .round()
-                .clamp(-127.0, 127.0) as i8;
-        }
+    let mut wq = Vec::with_capacity(din * dout);
+    for row in w.chunks_exact(dout) {
+        wq.extend(row.iter().zip(scales.iter()).map(|(&v, &s)| {
+            (v / s).round().clamp(-127.0, 127.0) as i8
+        }));
     }
     (wq, scales)
 }
 
-/// W8A8 matmul with int32 accumulation (reference semantics of the
-/// quant_matmul Pallas kernel).
+/// W8A8 matmul with int32 accumulation and a per-tensor activation
+/// scale (reference semantics of the quant_matmul Pallas kernel) —
+/// executed by the register-tiled int8 kernel.
 pub fn w8a8_matmul(
     xq: &[i8],
     t: usize,
@@ -47,16 +85,45 @@ pub fn w8a8_matmul(
     x_scale: f32,
     w_scales: &[f32],
 ) -> Vec<f32> {
-    let mut out = vec![0f32; t * dout];
-    for r in 0..t {
-        for c in 0..dout {
-            let mut acc: i32 = 0;
-            for k in 0..din {
-                acc += xq[r * din + k] as i32 * wq[k * dout + c] as i32;
-            }
-            out[r * dout + c] = acc as f32 * x_scale * w_scales[c];
-        }
-    }
+    let mut out = vec![0.0f32; t * dout];
+    kernels::int8::w8a8_tiled(
+        xq,
+        t,
+        din,
+        wq,
+        dout,
+        DEFAULT_DOUT_TILE,
+        x_scale,
+        w_scales,
+        &mut out,
+    );
+    out
+}
+
+/// W8A8 matmul with int32 accumulation and **per-token** activation
+/// scales fused at dequant — the serving path's int8 kernel (pair with
+/// [`quantize_per_token`]).
+pub fn w8a8_matmul_per_token(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &[i8],
+    dout: usize,
+    x_scales: &[f32],
+    w_scales: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * dout];
+    kernels::int8::w8a8_tiled_per_token(
+        xq,
+        t,
+        din,
+        wq,
+        dout,
+        DEFAULT_DOUT_TILE,
+        x_scales,
+        w_scales,
+        &mut out,
+    );
     out
 }
 
@@ -100,6 +167,65 @@ mod tests {
                 let err = (acc - yq[r * dout + c]).abs();
                 assert!(err < 0.15, "err {err} at ({r},{c})");
             }
+        }
+    }
+
+    #[test]
+    fn per_token_at_least_as_tight_as_per_tensor() {
+        // a batch with one large-magnitude row: per-tensor scaling
+        // crushes the small rows' resolution, per-token preserves it
+        let mut rng = Rng::new(8);
+        let (t, din, dout) = (4usize, 32usize, 8usize);
+        let mut x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32 * 0.05).collect();
+        for v in x[..din].iter_mut() {
+            *v *= 100.0; // row 0 dominates the batch absmax
+        }
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (wq, ws) = quantize_weight(&w, din, dout);
+        let (xq_pt, xs_pt) = quantize_per_token(&x, t, din);
+        let y_pt =
+            w8a8_matmul_per_token(&xq_pt, t, din, &wq, dout, &xs_pt, &ws);
+        let xmax = x.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let s = (xmax / 127.0).max(1e-8);
+        let y_tensor =
+            w8a8_matmul(&quantize(&x, s), t, din, &wq, dout, s, &ws);
+        // f32 reference, rows 1.. (the small rows)
+        let mut err_pt = 0.0f32;
+        let mut err_tensor = 0.0f32;
+        for r in 1..t {
+            for c in 0..dout {
+                let mut acc = 0f32;
+                for k in 0..din {
+                    acc += x[r * din + k] * w[k * dout + c];
+                }
+                err_pt = err_pt.max((acc - y_pt[r * dout + c]).abs());
+                err_tensor =
+                    err_tensor.max((acc - y_tensor[r * dout + c]).abs());
+            }
+        }
+        assert!(
+            err_pt < err_tensor,
+            "per-token ({err_pt}) should beat per-tensor ({err_tensor}) \
+             on the dominated rows"
+        );
+    }
+
+    #[test]
+    fn per_token_rows_independent_of_batchmates() {
+        // quantizing a row alone or inside a batch yields the same
+        // bytes and scale — the property that makes packed sq bitwise
+        let mut rng = Rng::new(9);
+        let (t, din) = (3usize, 16usize);
+        let x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32).collect();
+        let (q_all, s_all) = quantize_per_token(&x, t, din);
+        for r in 0..t {
+            let row = &x[r * din..(r + 1) * din];
+            let (q_row, s_row) = quantize_per_token(row, 1, din);
+            assert_eq!(&q_all[r * din..(r + 1) * din], &q_row[..]);
+            assert_eq!(s_all[r], s_row[0]);
         }
     }
 }

@@ -11,6 +11,8 @@
 //! code, the same float-op order, so paged and slot-style execution are
 //! bit-identical by construction (pinned by `tests/paged_parity.rs`).
 
+use std::sync::Arc;
+
 use crate::runtime::engine::{PagedKv, SparsityAudit};
 use crate::sparsity::plan::SparsityPlan;
 
@@ -22,9 +24,11 @@ impl NativeModel {
     /// view. Projections run through the same
     /// [`super::layers::Projection`] steps as prefill, under the
     /// all-dense plan. Rows with an empty block table are static-shape
-    /// fillers: they compute (so W8A8's per-tensor activation scale sees
-    /// the same batch the slot path saw) but own no storage — they
-    /// attend to their own freshly computed K/V only and write nothing.
+    /// fillers: they compute (keeping the batch shape static, as the
+    /// slot path always did) but own no storage — they attend to their
+    /// own freshly computed K/V only and write nothing. W8A8 uses
+    /// per-token activation scales, so filler rows cannot perturb real
+    /// rows through a shared batch absmax.
     #[allow(clippy::too_many_arguments)]
     pub(super) fn decode_paged(
         &self,
@@ -34,6 +38,7 @@ impl NativeModel {
         kv_len: &[i32],
         quantized: bool,
         block_rows: usize,
+        dout_tile: usize,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
         let sp = &self.spec;
@@ -41,12 +46,13 @@ impl NativeModel {
         let (d, qd, kvd) = (sp.d_model, sp.q_dim(), sp.kv_dim());
         let dh = sp.head_dim;
         let group = sp.n_q_heads / sp.n_kv_heads;
-        let dense_plan = SparsityPlan::dense(sp.n_layers);
+        let dense_plan =
+            SparsityPlan::dense(sp.n_layers).with_dout_tile(dout_tile);
         let opts =
             ExecOpts::new(&dense_plan, quantized, false, None, block_rows);
         let mut x = self.embed_tokens(token);
         for (l, lw) in self.layers.iter().enumerate() {
-            let h = rmsnorm(&x, b, d, &lw.attn_norm);
+            let h = Arc::new(rmsnorm(&x, b, d, &lw.attn_norm));
             let q = lw.projection(ProjKind::Q, sp).run(&h, b, l, &opts, audit);
             let k = lw.projection(ProjKind::K, sp).run(&h, b, l, &opts, audit);
             let v = lw.projection(ProjKind::V, sp).run(&h, b, l, &opts, audit);
@@ -117,28 +123,30 @@ impl NativeModel {
                     }
                 }
             }
+            let attn = Arc::new(attn);
             let o =
                 lw.projection(ProjKind::O, sp).run(&attn, b, l, &opts, audit);
             for (xi, oi) in x.iter_mut().zip(o.iter()) {
                 *xi += oi;
             }
-            let h2 = rmsnorm(&x, b, d, &lw.mlp_norm);
+            let h2 = Arc::new(rmsnorm(&x, b, d, &lw.mlp_norm));
             let gate =
                 lw.projection(ProjKind::Gate, sp).run(&h2, b, l, &opts, audit);
             let up =
                 lw.projection(ProjKind::Up, sp).run(&h2, b, l, &opts, audit);
-            let act: Vec<f32> = gate
-                .iter()
-                .zip(up.iter())
-                .map(|(&g, &u)| silu(g) * u)
-                .collect();
+            let act: Arc<Vec<f32>> = Arc::new(
+                gate.iter()
+                    .zip(up.iter())
+                    .map(|(&g, &u)| silu(g) * u)
+                    .collect(),
+            );
             let down =
                 lw.projection(ProjKind::Down, sp).run(&act, b, l, &opts, audit);
             for (xi, di) in x.iter_mut().zip(down.iter()) {
                 *xi += di;
             }
         }
-        self.logits(&x, b, None, block_rows, audit)
+        self.logits(&x, b, None, block_rows, dout_tile, audit)
     }
 }
 

@@ -3,19 +3,26 @@
 //! A transformer block is executed as a sequence of [`Projection`] steps
 //! (q/k/v/o, gate/up/down, lm_head) instead of inline matmul code: each
 //! step resolves its [`ProjPolicy`] from the prefill's [`SparsityPlan`],
-//! dispatches to the batched dense or block-compressed N:M kernel
-//! (optionally fanned out over the engine [`ThreadPool`]), validates
-//! pruned activations, and attributes FLOPs to its module in the
-//! [`SparsityAudit`] — one place for the policy/kernel/audit plumbing
-//! the old monolith re-derived at every call site.
+//! dispatches to the register-tiled dense / block-compressed N:M / W8A8
+//! kernels (optionally fanned out over the engine [`ThreadPool`]),
+//! validates pruned activations, and attributes FLOPs to its module in
+//! the [`SparsityAudit`] — one place for the policy/kernel/audit
+//! plumbing the old monolith re-derived at every call site.
+//!
+//! Activations flow through the pipeline as `Arc<Vec<f32>>`, so the
+//! parallel dense tiles share the buffer with pool workers without a
+//! per-call copy (zero-copy end-to-end), and the W8A8 path quantizes
+//! with **per-token** activation scales, so a token's quantized output
+//! never depends on its batchmates.
 
 use crate::exec::ThreadPool;
+use crate::kernels;
 use crate::quant;
 use crate::runtime::engine::SparsityAudit;
 use crate::sparsity::mask::validate_nm;
 use crate::sparsity::plan::SparsityPlan;
 use crate::sparsity::spmm::{
-    dense_matmul, dense_matmul_parallel, NmCompressedBatch,
+    dense_matmul_parallel, dense_matmul_with_tile, NmCompressedBatch,
 };
 
 use std::sync::Arc;
@@ -33,6 +40,8 @@ pub(super) struct ExecOpts<'a> {
     pub pool: Option<&'a ThreadPool>,
     /// row-tile height for the batched kernels
     pub block_rows: usize,
+    /// `dout`-tile width for the register-tiled kernels (from the plan)
+    pub dout_tile: usize,
 }
 
 impl<'a> ExecOpts<'a> {
@@ -49,6 +58,7 @@ impl<'a> ExecOpts<'a> {
             validate,
             pool,
             block_rows: block_rows.max(1),
+            dout_tile: plan.dout_tile,
         }
     }
 }
@@ -141,10 +151,12 @@ impl LayerWeights {
 impl<'m> Projection<'m> {
     /// Execute this step over `[t, din]` activations under the plan's
     /// policy for (`layer`, module). Pruned activations are validated
-    /// against the exact-N:M contract and accounted per module.
+    /// against the exact-N:M contract and accounted per module. The
+    /// activation arrives `Arc`'d so the parallel dense tiles can share
+    /// it with pool workers without copying (zero-copy end-to-end).
     pub(super) fn run(
         &self,
-        x: &[f32],
+        x: &Arc<Vec<f32>>,
         t: usize,
         layer: usize,
         opts: &ExecOpts<'_>,
@@ -195,19 +207,27 @@ impl<'m> Projection<'m> {
                     // over the pruned input; the audit still records n/m
                     // sparse FLOPs — the SpMM-hardware cost model (see
                     // SparsityAudit docs)
-                    w8a8_dense(
+                    w8a8_per_token(
                         pruned_dense.as_deref().unwrap(),
                         t,
                         self.din,
                         self.w,
                         self.dout,
+                        opts.dout_tile,
                     )
                 } else {
                     match opts.pool {
-                        Some(pool) => {
-                            c.matmul_parallel(self.w, self.dout, pool)
-                        }
-                        None => c.matmul(self.w, self.dout),
+                        Some(pool) => c.matmul_parallel_with_tile(
+                            self.w,
+                            self.dout,
+                            pool,
+                            opts.dout_tile,
+                        ),
+                        None => c.matmul_with_tile(
+                            self.w,
+                            self.dout,
+                            opts.dout_tile,
+                        ),
                     }
                 }
             }
@@ -222,7 +242,14 @@ impl<'m> Projection<'m> {
                     2 * (t * self.din * self.dout) as u64,
                 );
                 if opts.quantized {
-                    w8a8_dense(x, t, self.din, self.w, self.dout)
+                    w8a8_per_token(
+                        x,
+                        t,
+                        self.din,
+                        self.w,
+                        self.dout,
+                        opts.dout_tile,
+                    )
                 } else {
                     match opts.pool {
                         Some(pool) => dense_matmul_parallel(
@@ -233,10 +260,16 @@ impl<'m> Projection<'m> {
                             self.dout,
                             pool,
                             opts.block_rows,
+                            opts.dout_tile,
                         ),
-                        None => {
-                            dense_matmul(x, t, self.din, self.w, self.dout)
-                        }
+                        None => dense_matmul_with_tile(
+                            x,
+                            t,
+                            self.din,
+                            self.w,
+                            self.dout,
+                            opts.dout_tile,
+                        ),
                     }
                 }
             }
@@ -244,21 +277,27 @@ impl<'m> Projection<'m> {
     }
 }
 
-/// W8A8 reference path: per-tensor activation scale, per-channel weight
-/// scales. Weights are quantized per call — at native-model sizes this is
-/// noise next to the matmul itself.
-fn w8a8_dense(
+/// W8A8 path: **per-token** activation scales, per-channel weight
+/// scales, register-tiled int8 kernel. Per-token scaling means a
+/// token's quantized output depends only on its own row — packed and
+/// sequential sq prefills are bitwise identical (pinned by
+/// `tests/kernel_parity.rs`). Weights are quantized per call — at
+/// native-model sizes this is noise next to the matmul itself.
+fn w8a8_per_token(
     x: &[f32],
     t: usize,
     din: usize,
     w: &[f32],
     dout: usize,
+    dout_tile: usize,
 ) -> Vec<f32> {
     let (wq, ws) = quant::quantize_weight(w, din, dout);
-    let absmax = x.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
-    let xs = (absmax / 127.0).max(1e-8);
-    let xq = quant::quantize(x, xs);
-    quant::w8a8_matmul(&xq, t, din, &wq, dout, xs, &ws)
+    let (xq, xs) = quant::quantize_per_token(x, t, din);
+    let mut out = vec![0.0f32; t * dout];
+    kernels::int8::w8a8_tiled_per_token(
+        &xq, t, din, &wq, dout, dout_tile, &xs, &ws, &mut out,
+    );
+    out
 }
 
 pub(super) fn rmsnorm(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
@@ -352,11 +391,12 @@ impl NativeModel {
         t: usize,
         pool: Option<&ThreadPool>,
         block_rows: usize,
+        dout_tile: usize,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
         let d = self.spec.d_model;
-        let h = rmsnorm(x, t, d, &self.final_norm);
-        let dense_plan = SparsityPlan::dense(0);
+        let h = Arc::new(rmsnorm(x, t, d, &self.final_norm));
+        let dense_plan = SparsityPlan::dense(0).with_dout_tile(dout_tile);
         let opts = ExecOpts::new(&dense_plan, false, false, pool, block_rows);
         let head = Projection {
             module: "lm_head",

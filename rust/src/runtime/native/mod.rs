@@ -8,8 +8,9 @@
 //! * `model`   — [`ModelSpec`] geometry + deterministically synthesized
 //!               weights (`Arc`-shared for the tile fan-out)
 //! * `layers`  — the `Projection` step abstraction: policy
-//!               resolution from a [`SparsityPlan`], batched dense /
-//!               block-compressed N:M kernels, W8A8, per-module audit
+//!               resolution from a [`SparsityPlan`], register-tiled
+//!               dense / block-compressed N:M / per-token W8A8 kernels
+//!               ([`crate::kernels`]), per-module audit
 //! * `prefill` — one forward pass over a token-packed segment batch
 //!               (right-padded `[b, s]` prefill is the equal-segment
 //!               special case)
@@ -75,6 +76,10 @@ pub struct NativeEngine {
     pool: Option<Arc<ThreadPool>>,
     /// row-tile height for the batched kernels
     pub block_rows: usize,
+    /// `dout`-tile width for the register-tiled kernels; stamped onto
+    /// each binding's [`SparsityPlan`] at [`Engine::bind`] time (pure
+    /// perf — outputs are bitwise identical for every width)
+    pub dout_tile: usize,
 }
 
 impl NativeEngine {
@@ -142,12 +147,20 @@ impl NativeEngine {
             validate: true,
             pool: None,
             block_rows: DEFAULT_BLOCK_ROWS,
+            dout_tile: crate::kernels::DEFAULT_DOUT_TILE,
         }
     }
 
     /// Builder-style [`Engine::set_parallelism`].
     pub fn with_parallelism(mut self, threads: usize) -> NativeEngine {
         self.set_parallelism(threads);
+        self
+    }
+
+    /// Builder-style kernel `dout`-tile width (applies to bindings
+    /// created afterwards, and to every decode).
+    pub fn with_dout_tile(mut self, dout_tile: usize) -> NativeEngine {
+        self.dout_tile = crate::kernels::clamp_tile(dout_tile);
         self
     }
 
@@ -217,6 +230,7 @@ impl NativeEngine {
             validate,
             pool: pool.as_deref(),
             block_rows,
+            dout_tile: plan.dout_tile,
         };
         let vocab = model.spec.vocab;
         let t0 = Instant::now();
@@ -274,12 +288,15 @@ impl Engine for NativeEngine {
         let map_key = binding_key(artifact, &key);
         // the plan is built once per binding and reused by every prefill
         if !self.bindings.contains_key(&map_key) {
-            let plan = Arc::new(SparsityPlan::build(
-                model.spec.n_layers,
-                &model.spec.skip_layers,
-                nm,
-                setting,
-            ));
+            let plan = Arc::new(
+                SparsityPlan::build(
+                    model.spec.n_layers,
+                    &model.spec.skip_layers,
+                    nm,
+                    setting,
+                )
+                .with_dout_tile(self.dout_tile),
+            );
             self.bindings.insert(map_key, plan);
         }
         Ok(key)
@@ -423,10 +440,11 @@ impl Engine for NativeEngine {
         };
         let mut audit = self.audit;
         let block_rows = self.block_rows;
+        let dout_tile = self.dout_tile;
         let t0 = Instant::now();
         let logits = model.decode_paged(
             token, pos, &mut view, kv_len, quantized, block_rows,
-            &mut audit,
+            dout_tile, &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
         self.audit = audit;
@@ -506,9 +524,11 @@ impl Engine for NativeEngine {
         let vocab = model.spec.vocab;
         let mut audit = self.audit;
         let block_rows = self.block_rows;
+        let dout_tile = self.dout_tile;
         let t0 = Instant::now();
         let logits = model.decode_paged(
-            token, pos, kv, kv_len, quantized, block_rows, &mut audit,
+            token, pos, kv, kv_len, quantized, block_rows, dout_tile,
+            &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
         self.audit = audit;

@@ -10,6 +10,8 @@
 //!   finally reach the kernel as one `[total_tokens, d]` matrix,
 //!   compressed once and tiled over the engine thread pool.
 
+use std::sync::Arc;
+
 use crate::runtime::engine::SparsityAudit;
 
 use super::layers::{
@@ -44,7 +46,9 @@ impl NativeModel {
         let mut k_cache = vec![0.0f32; sp.n_layers * t * kvd];
         let mut v_cache = vec![0.0f32; sp.n_layers * t * kvd];
         for (l, lw) in self.layers.iter().enumerate() {
-            let h = rmsnorm(&x, t, d, &lw.attn_norm);
+            // activations are Arc'd once per step so the parallel dense
+            // tiles share them with pool workers without copying
+            let h = Arc::new(rmsnorm(&x, t, d, &lw.attn_norm));
             let q = lw.projection(ProjKind::Q, sp).run(&h, t, l, opts, audit);
             let k = lw.projection(ProjKind::K, sp).run(&h, t, l, opts, audit);
             let v = lw.projection(ProjKind::V, sp).run(&h, t, l, opts, audit);
@@ -52,29 +56,34 @@ impl NativeModel {
             let base = l * t * kvd;
             k_cache[base..base + t * kvd].copy_from_slice(&k);
             v_cache[base..base + t * kvd].copy_from_slice(&v);
-            let attn = causal_attention_segments(&q, &k, &v, &segs, sp);
+            let attn = Arc::new(causal_attention_segments(
+                &q, &k, &v, &segs, sp,
+            ));
             let o =
                 lw.projection(ProjKind::O, sp).run(&attn, t, l, opts, audit);
             for (xi, oi) in x.iter_mut().zip(o.iter()) {
                 *xi += oi;
             }
-            let h2 = rmsnorm(&x, t, d, &lw.mlp_norm);
+            let h2 = Arc::new(rmsnorm(&x, t, d, &lw.mlp_norm));
             let gate =
                 lw.projection(ProjKind::Gate, sp).run(&h2, t, l, opts, audit);
             let up =
                 lw.projection(ProjKind::Up, sp).run(&h2, t, l, opts, audit);
-            let act: Vec<f32> = gate
-                .iter()
-                .zip(up.iter())
-                .map(|(&g, &u)| silu(g) * u)
-                .collect();
+            let act: Arc<Vec<f32>> = Arc::new(
+                gate.iter()
+                    .zip(up.iter())
+                    .map(|(&g, &u)| silu(g) * u)
+                    .collect(),
+            );
             let down =
                 lw.projection(ProjKind::Down, sp).run(&act, t, l, opts, audit);
             for (xi, di) in x.iter_mut().zip(down.iter()) {
                 *xi += di;
             }
         }
-        let logits = self.logits(&x, t, opts.pool, opts.block_rows, audit);
+        let logits = self.logits(
+            &x, t, opts.pool, opts.block_rows, opts.dout_tile, audit,
+        );
         (logits, k_cache, v_cache)
     }
 }

@@ -18,6 +18,7 @@ use std::collections::BTreeMap;
 
 use super::coverage::Geometry;
 use super::policy::{self, Setting, MODULES};
+use crate::kernels::{clamp_tile, DEFAULT_DOUT_TILE};
 
 /// What one projection in one layer does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +47,11 @@ pub struct SparsityPlan {
     pub setting: Setting,
     /// the plan's N:M ratio (`None` = dense plan)
     pub nm: Option<(usize, usize)>,
+    /// `dout`-tile width every projection kernel of this plan runs at
+    /// (a pure performance knob — outputs are bitwise identical for
+    /// every width; see [`crate::kernels`]). Defaults to
+    /// [`crate::kernels::DEFAULT_DOUT_TILE`].
+    pub dout_tile: usize,
     /// `cells[layer][module_index]` over [`policy::MODULES`].
     cells: Vec<[ProjPolicy; MODULES.len()]>,
 }
@@ -85,7 +91,15 @@ impl SparsityPlan {
                 }
             }
         }
-        SparsityPlan { setting, nm, cells }
+        SparsityPlan { setting, nm, dout_tile: DEFAULT_DOUT_TILE, cells }
+    }
+
+    /// Set the kernel `dout`-tile width (clamped to the supported
+    /// range). Pure perf: the parity suite pins that every width yields
+    /// bitwise-identical outputs.
+    pub fn with_dout_tile(mut self, dout_tile: usize) -> SparsityPlan {
+        self.dout_tile = clamp_tile(dout_tile);
+        self
     }
 
     /// Build for a [`Geometry`] (uses its layer count).
@@ -200,6 +214,18 @@ mod tests {
         let all = SparsityPlan::build(3, &skips, Some((2, 4)), Setting::All);
         assert!(all.policy(0, "q_proj").scored);
         assert!(!all.policy(1, "q_proj").is_sparse());
+    }
+
+    #[test]
+    fn dout_tile_knob_defaults_and_clamps() {
+        let p = SparsityPlan::dense(2);
+        assert_eq!(p.dout_tile, DEFAULT_DOUT_TILE);
+        assert_eq!(p.clone().with_dout_tile(0).dout_tile, 1);
+        assert_eq!(p.clone().with_dout_tile(16).dout_tile, 16);
+        assert_eq!(
+            p.with_dout_tile(usize::MAX).dout_tile,
+            crate::kernels::MAX_DOUT_TILE
+        );
     }
 
     #[test]

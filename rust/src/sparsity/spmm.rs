@@ -14,11 +14,19 @@
 //! variant lives on as [`dense_matmul_skip_zeros`] (it is what a
 //! scalar-sparse CPU kernel would do), and [`dense_matmul_counted`] pins
 //! the FLOP behavior of both in tests.
+//!
+//! Since the register-tiled kernel core landed, every matmul here
+//! dispatches to [`crate::kernels`] (`dout`-tiled accumulators kept in
+//! registers) and is **bitwise identical** to the retained naive loops
+//! in [`crate::kernels::reference`] — `tests/kernel_parity.rs` pins the
+//! contract. The `*_with_tile` variants expose the tile-width knob; the
+//! plain names use [`crate::kernels::DEFAULT_DOUT_TILE`].
 
 use std::sync::Arc;
 
 use super::mask::nm_mask_scored;
 use crate::exec::ThreadPool;
+use crate::kernels::{self, DEFAULT_DOUT_TILE};
 
 /// Compressed N:M activation matrix [t, din*n/m] with per-element group
 /// channel indices.
@@ -117,26 +125,32 @@ impl NmCompressed {
 
     /// Compressed matmul: self [t, din] (sparse) x w [din, dout] -> dense
     /// [t, dout]. Only surviving channels' weight rows are touched.
+    /// Runs the register-tiled kernel at the default tile width.
     pub fn matmul(&self, w: &[f32], dout: usize) -> Vec<f32> {
+        self.matmul_with_tile(w, dout, DEFAULT_DOUT_TILE)
+    }
+
+    /// [`NmCompressed::matmul`] with an explicit `dout`-tile width —
+    /// bitwise identical for every width (the knob is pure perf).
+    pub fn matmul_with_tile(
+        &self,
+        w: &[f32],
+        dout: usize,
+        dout_tile: usize,
+    ) -> Vec<f32> {
         assert_eq!(w.len(), self.din * dout);
         let per_row = self.din / self.m * self.n;
         let mut out = vec![0.0f32; self.t * dout];
-        for r in 0..self.t {
-            let orow = &mut out[r * dout..(r + 1) * dout];
-            let base = r * per_row;
-            for k in 0..per_row {
-                let v = self.values[base + k];
-                if v == 0.0 {
-                    continue;
-                }
-                let c = self.index[base + k] as usize;
-                let wrow = &w[c * dout..(c + 1) * dout];
-                // axpy over the output row — contiguous, vectorizable
-                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                    *o += v * wv;
-                }
-            }
-        }
+        kernels::nm::spmm_nm_tiled(
+            &self.values,
+            &self.index,
+            self.t,
+            per_row,
+            w,
+            dout,
+            dout_tile,
+            &mut out,
+        );
         out
     }
 
@@ -167,27 +181,30 @@ pub struct NmBlock {
 }
 
 impl NmBlock {
-    /// Per-row tile matmul — the *same* per-row axpy loop as
-    /// [`NmCompressed::matmul`], so outputs are bit-identical.
-    fn matmul(&self, w: &[f32], din: usize, n: usize, m: usize,
-              dout: usize) -> Vec<f32> {
+    /// Per-row-tile matmul — the same register-tiled kernel (and so the
+    /// same per-element float-op order) as [`NmCompressed::matmul`], so
+    /// outputs are bit-identical regardless of the row tiling.
+    fn matmul(
+        &self,
+        w: &[f32],
+        din: usize,
+        n: usize,
+        m: usize,
+        dout: usize,
+        dout_tile: usize,
+    ) -> Vec<f32> {
         let per_row = din / m * n;
         let mut out = vec![0.0f32; self.rows * dout];
-        for r in 0..self.rows {
-            let orow = &mut out[r * dout..(r + 1) * dout];
-            let base = r * per_row;
-            for k in 0..per_row {
-                let v = self.values[base + k];
-                if v == 0.0 {
-                    continue;
-                }
-                let c = self.index[base + k] as usize;
-                let wrow = &w[c * dout..(c + 1) * dout];
-                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                    *o += v * wv;
-                }
-            }
-        }
+        kernels::nm::spmm_nm_tiled(
+            &self.values,
+            &self.index,
+            self.rows,
+            per_row,
+            w,
+            dout,
+            dout_tile,
+            &mut out,
+        );
         out
     }
 }
@@ -300,13 +317,26 @@ impl NmCompressedBatch {
         out
     }
 
-    /// Serial tiled SpMM: every tile on the calling thread, outputs
-    /// concatenated in row order.
+    /// Serial tiled SpMM: every row-tile on the calling thread, outputs
+    /// concatenated in row order. Runs the register-tiled kernel at the
+    /// default `dout`-tile width.
     pub fn matmul(&self, w: &[f32], dout: usize) -> Vec<f32> {
+        self.matmul_with_tile(w, dout, DEFAULT_DOUT_TILE)
+    }
+
+    /// [`NmCompressedBatch::matmul`] with an explicit `dout`-tile width
+    /// — bitwise identical for every width.
+    pub fn matmul_with_tile(
+        &self,
+        w: &[f32],
+        dout: usize,
+        dout_tile: usize,
+    ) -> Vec<f32> {
         assert_eq!(w.len(), self.din * dout);
         let mut out = vec![0.0f32; self.t * dout];
         for b in &self.blocks {
-            let tile = b.matmul(w, self.din, self.n, self.m, dout);
+            let tile =
+                b.matmul(w, self.din, self.n, self.m, dout, dout_tile);
             out[b.row0 * dout..(b.row0 + b.rows) * dout]
                 .copy_from_slice(&tile);
         }
@@ -324,14 +354,26 @@ impl NmCompressedBatch {
         dout: usize,
         pool: &ThreadPool,
     ) -> Vec<f32> {
+        self.matmul_parallel_with_tile(w, dout, pool, DEFAULT_DOUT_TILE)
+    }
+
+    /// [`NmCompressedBatch::matmul_parallel`] with an explicit
+    /// `dout`-tile width — bitwise identical for every width and pool.
+    pub fn matmul_parallel_with_tile(
+        &self,
+        w: &Arc<Vec<f32>>,
+        dout: usize,
+        pool: &ThreadPool,
+        dout_tile: usize,
+    ) -> Vec<f32> {
         assert_eq!(w.len(), self.din * dout);
         if pool.size() <= 1 || self.blocks.len() <= 1 {
-            return self.matmul(w, dout);
+            return self.matmul_with_tile(w, dout, dout_tile);
         }
         let (din, n, m) = (self.din, self.n, self.m);
         let w = Arc::clone(w);
         let tiles = pool.map(self.blocks.clone(), move |b| {
-            b.matmul(&w, din, n, m, dout)
+            b.matmul(&w, din, n, m, dout, dout_tile)
         });
         let mut out = vec![0.0f32; self.t * dout];
         for (b, tile) in self.blocks.iter().zip(tiles) {
@@ -353,28 +395,30 @@ impl NmCompressedBatch {
 }
 
 /// Row-tiled parallel variant of [`dense_matmul`]: rows are chunked into
-/// `block_rows`-high tiles and fanned out over `pool`. Each row's inner
-/// loop is identical to [`dense_matmul`], so the output is bit-identical
-/// to the serial kernel for every tiling and pool width.
+/// `block_rows`-high tiles and fanned out over `pool`. Each row runs the
+/// same register-tiled kernel as [`dense_matmul`], so the output is
+/// bit-identical to the serial kernel for every tiling and pool width.
 ///
-/// The activation is shared with the workers through a single `Arc`'d
-/// copy (`ThreadPool::map` jobs are `'static`, so `x` cannot be
-/// borrowed); eliminating even that one copy needs `Arc`-threaded
-/// activations end-to-end — a ROADMAP item.
+/// **Zero-copy**: the activation arrives as an `Arc` threaded from the
+/// pipeline (pool jobs are `'static`, so a borrowed slice cannot cross
+/// into the workers) — nothing is copied per call; workers slice their
+/// row range out of the shared buffer.
+#[allow(clippy::too_many_arguments)]
 pub fn dense_matmul_parallel(
-    x: &[f32],
+    x: &Arc<Vec<f32>>,
     t: usize,
     din: usize,
     w: &Arc<Vec<f32>>,
     dout: usize,
     pool: &ThreadPool,
     block_rows: usize,
+    dout_tile: usize,
 ) -> Vec<f32> {
     assert_eq!(x.len(), t * din);
     assert_eq!(w.len(), din * dout);
     let block_rows = block_rows.max(1);
     if pool.size() <= 1 || t <= block_rows {
-        return dense_matmul(x, t, din, w, dout);
+        return dense_matmul_with_tile(x, t, din, w, dout, dout_tile);
     }
     let mut tiles_spec: Vec<(usize, usize)> = Vec::new();
     let mut row0 = 0;
@@ -383,15 +427,16 @@ pub fn dense_matmul_parallel(
         tiles_spec.push((row0, rows));
         row0 += rows;
     }
-    let xs = Arc::new(x.to_vec());
+    let xs = Arc::clone(x);
     let w2 = Arc::clone(w);
     let tiles = pool.map(tiles_spec, move |(row0, rows)| {
-        dense_matmul(
+        dense_matmul_with_tile(
             &xs[row0 * din..(row0 + rows) * din],
             rows,
             din,
             &w2,
             dout,
+            dout_tile,
         )
     });
     // map preserves tile order: assembly is a straight concatenation
@@ -402,11 +447,11 @@ pub fn dense_matmul_parallel(
     out
 }
 
-/// Dense reference matmul (row-major x [t, din] @ w [din, dout]), written
-/// with the same axpy loop structure as the compressed kernel so the
-/// bench compares algorithms, not loop orders. Performs the full
+/// Dense matmul (row-major x [t, din] @ w [din, dout]) through the
+/// register-tiled kernel at the default tile width. Performs the full
 /// `t*din*dout` multiply-adds unconditionally — zeros in `x` are
-/// multiplied like any other value, exactly as a dense MXU would.
+/// multiplied like any other value, exactly as a dense MXU would — and
+/// is bitwise identical to [`crate::kernels::reference::dense`].
 pub fn dense_matmul(
     x: &[f32],
     t: usize,
@@ -414,17 +459,21 @@ pub fn dense_matmul(
     w: &[f32],
     dout: usize,
 ) -> Vec<f32> {
+    dense_matmul_with_tile(x, t, din, w, dout, DEFAULT_DOUT_TILE)
+}
+
+/// [`dense_matmul`] with an explicit `dout`-tile width — bitwise
+/// identical for every width.
+pub fn dense_matmul_with_tile(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    dout_tile: usize,
+) -> Vec<f32> {
     let mut out = vec![0.0f32; t * dout];
-    for r in 0..t {
-        let orow = &mut out[r * dout..(r + 1) * dout];
-        let xrow = &x[r * din..(r + 1) * din];
-        for (c, &v) in xrow.iter().enumerate() {
-            let wrow = &w[c * dout..(c + 1) * dout];
-            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                *o += v * wv;
-            }
-        }
-    }
+    kernels::dense::dense_tiled(x, t, din, w, dout, dout_tile, &mut out);
     out
 }
 
@@ -602,16 +651,20 @@ mod tests {
     fn dense_parallel_matches_serial_bitwise() {
         let mut rng = Rng::new(7);
         let (t, din, dout) = (13, 16, 8);
-        let x = rand_mat(&mut rng, t * din);
+        let x = Arc::new(rand_mat(&mut rng, t * din));
         let w = Arc::new(rand_mat(&mut rng, din * dout));
         let serial = dense_matmul(&x, t, din, &w, dout);
         for width in [1usize, 2, 4] {
             let pool = ThreadPool::new(width);
-            assert_eq!(
-                dense_matmul_parallel(&x, t, din, &w, dout, &pool, 4),
-                serial,
-                "pool {width}"
-            );
+            for tile in [1usize, 3, 8] {
+                assert_eq!(
+                    dense_matmul_parallel(
+                        &x, t, din, &w, dout, &pool, 4, tile
+                    ),
+                    serial,
+                    "pool {width} tile {tile}"
+                );
+            }
         }
     }
 

@@ -4,6 +4,8 @@
 //! per-row / per-request execution, across every N:M ratio and thread
 //! pool width.
 
+mod common;
+
 use std::sync::Arc;
 
 use amber_pruner::exec::ThreadPool;
@@ -13,9 +15,9 @@ use amber_pruner::runtime::{
 use amber_pruner::sparsity::spmm::{NmCompressed, NmCompressedBatch};
 use amber_pruner::util::rng::Rng;
 use anyhow::Result;
+use common::{prompt, sequential_logits};
 
 const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
-const PAD: i32 = 0;
 
 fn rand_mat(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
@@ -75,32 +77,6 @@ fn engine(threads: usize) -> NativeEngine {
         .with_parallelism(threads)
 }
 
-fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
-    (0..len).map(|_| 1 + rng.below(300) as i32).collect()
-}
-
-/// Per-request sequential reference: each prompt alone in row 0 of the
-/// static padded artifact — the pre-refactor serving pattern.
-fn sequential_logits(
-    e: &mut NativeEngine,
-    art: &str,
-    bind: &str,
-    b: usize,
-    s: usize,
-    prompts: &[Vec<i32>],
-) -> Vec<Vec<f32>> {
-    prompts
-        .iter()
-        .map(|p| {
-            let len = p.len().min(s).max(1);
-            let mut tokens = vec![PAD; b * s];
-            tokens[..p.len().min(s)].copy_from_slice(&p[..p.len().min(s)]);
-            let out = e.prefill(art, bind, &tokens).unwrap();
-            out.logits[..len * out.vocab].to_vec()
-        })
-        .collect()
-}
-
 #[test]
 fn packed_multi_request_prefill_matches_sequential_prefill() {
     let mut rng = Rng::new(7);
@@ -137,15 +113,15 @@ fn packed_multi_request_prefill_matches_sequential_prefill() {
 
 #[test]
 fn packed_sq_prefill_close_to_f32_reference() {
-    // W8A8 uses a per-TENSOR activation scale (absmax over whatever rows
-    // share the tensor), so a request's quantized logits depend on its
-    // batchmates — true of the pre-refactor padded batches too, and of
-    // the packed layout now. sq packing parity is therefore NOT bitwise
-    // (per-token activation scales are the ROADMAP fix); the meaningful
-    // pin is that packed sq stays within the same quantization-drift
-    // bound of the exact f32 reference that the unit suite
-    // (`quantized_path_close_to_f32`) enforces for padded sq — a wrong
-    // activation scale on the packed path blows straight through it.
+    // W8A8 quantizes activations with PER-TOKEN scales, so a request's
+    // quantized logits depend only on its own rows — never on its
+    // batchmates. sq packing parity is therefore an EQUALITY pin:
+    // packed sq must be bitwise identical to the sequential sq
+    // reference (one request at a time through the padded artifact).
+    // The quantization-drift bound against the f32 reference that the
+    // unit suite (`quantized_path_close_to_f32`) enforces for padded sq
+    // is kept as a sanity net — a wrong activation scale on the packed
+    // path blows straight through it.
     let mut rng = Rng::new(31);
     let lens = [9usize, 33, 64];
     let prompts: Vec<Vec<i32>> =
@@ -158,11 +134,20 @@ fn packed_sq_prefill_close_to_f32_reference() {
     let golden = sequential_logits(&mut e, fp_art, &fp_bind, 8, 64, &prompts);
     let sq_art = "tiny-lm-a.prefill64.sq";
     let sq_bind = e.bind(sq_art, &["tiny-lm-a.sq.atw"]).unwrap();
+    let golden_sq =
+        sequential_logits(&mut e, sq_art, &sq_bind, 8, 64, &prompts);
     let packed = e.prefill_packed(sq_art, &sq_bind, &prompts).unwrap();
     let v = packed.vocab;
     for (i, g) in golden.iter().enumerate() {
         let start = packed.row_start(i);
         let got = &packed.logits[start * v..(start + lens[i]) * v];
+        // the equality pin: per-token scales make packing bitwise
+        assert_eq!(
+            got,
+            &golden_sq[i][..],
+            "sq request {i}: packed != sequential (per-token scales \
+             must make sq packing bitwise)"
+        );
         let max_abs = g.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
         let diff = got
             .iter()

@@ -1,0 +1,38 @@
+//! Helpers shared by the parity suites (`batch_parity`,
+//! `kernel_parity`): random prompts and the per-request sequential
+//! prefill reference — one copy, so the padded-row-0 reference pattern
+//! cannot drift between suites.
+
+use amber_pruner::runtime::{Engine, NativeEngine};
+use amber_pruner::util::rng::Rng;
+
+/// PAD token id used by the padded reference batches.
+pub const PAD: i32 = 0;
+
+/// A random prompt of `len` tokens in the synthetic vocab.
+pub fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| 1 + rng.below(300) as i32).collect()
+}
+
+/// Per-request sequential reference: each prompt alone in row 0 of the
+/// static padded `[b, s]` artifact — the pre-refactor serving pattern.
+/// Returns each request's first `len` logit rows.
+pub fn sequential_logits(
+    e: &mut NativeEngine,
+    art: &str,
+    bind: &str,
+    b: usize,
+    s: usize,
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<f32>> {
+    prompts
+        .iter()
+        .map(|p| {
+            let len = p.len().min(s).max(1);
+            let mut tokens = vec![PAD; b * s];
+            tokens[..p.len().min(s)].copy_from_slice(&p[..p.len().min(s)]);
+            let out = e.prefill(art, bind, &tokens).unwrap();
+            out.logits[..len * out.vocab].to_vec()
+        })
+        .collect()
+}

@@ -1,0 +1,252 @@
+//! Kernel-parity property suite (ISSUE 4): the register-tiled
+//! SpMM / dense / W8A8 microkernels in `kernels::{nm,dense,int8}` must
+//! be **bitwise identical** to the retained naive loops in
+//! `kernels::reference` — across every N:M ratio, shapes where `dout`
+//! is not a multiple of the tile, tile widths (specialized and
+//! runtime-width), row-block heights and pool widths — and the
+//! per-token W8A8 activation scales must make packed sq prefill
+//! bitwise equal to the sequential reference.
+
+mod common;
+
+use std::sync::Arc;
+
+use amber_pruner::exec::ThreadPool;
+use amber_pruner::kernels::{reference, DEFAULT_DOUT_TILE, MAX_DOUT_TILE};
+use amber_pruner::quant;
+use amber_pruner::runtime::{Engine, ModelSpec, NativeEngine};
+use amber_pruner::sparsity::spmm::{
+    dense_matmul, dense_matmul_parallel, dense_matmul_with_tile,
+    NmCompressed, NmCompressedBatch,
+};
+use amber_pruner::util::rng::Rng;
+use common::{prompt, sequential_logits};
+
+const RATIOS: [(usize, usize); 3] = [(2, 4), (4, 8), (8, 16)];
+/// Tile widths under test: the specialized const paths (4/8/16/32), the
+/// runtime-width path (1/3/5/64), and an over-clamp value.
+const TILES: [usize; 9] = [1, 3, 4, 5, 8, 16, 32, 64, 4096];
+
+fn rand_mat(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+// ------------------------------------------------------------ N:M SpMM
+
+#[test]
+fn tiled_nm_spmm_bitwise_equals_reference() {
+    let mut rng = Rng::new(101);
+    for &(n, m) in &RATIOS {
+        let din = 2 * m * 3; // divisible by every m
+        let per_row = din / m * n;
+        // dout values deliberately NOT multiples of the default tile
+        // (and of most swept tiles): ragged tails on every width
+        for &(t, dout) in &[(1usize, 5usize), (7, 13), (33, 37), (4, 8)] {
+            let x = rand_mat(&mut rng, t * din);
+            let w = rand_mat(&mut rng, din * dout);
+            let scale: Vec<f32> =
+                (0..din).map(|_| rng.f64() as f32 + 0.1).collect();
+            for sc in [&[][..], &scale[..]] {
+                let c = NmCompressed::compress(&x, t, din, sc, n, m);
+                let golden = reference::spmm_nm(
+                    &c.values, &c.index, t, per_row, &w, dout,
+                );
+                assert_eq!(
+                    c.matmul(&w, dout),
+                    golden,
+                    "{n}:{m} t={t} dout={dout} default tile"
+                );
+                for &tile in &TILES {
+                    assert_eq!(
+                        c.matmul_with_tile(&w, dout, tile),
+                        golden,
+                        "{n}:{m} t={t} dout={dout} tile={tile}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_tiled_nm_spmm_bitwise_across_blocks_and_pools() {
+    let mut rng = Rng::new(103);
+    for &(n, m) in &RATIOS {
+        let din = 2 * m * 2;
+        let per_row = din / m * n;
+        let (t, dout) = (33usize, 21usize); // dout ragged for tile 8
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        let c = NmCompressed::compress(&x, t, din, &[], n, m);
+        let golden =
+            reference::spmm_nm(&c.values, &c.index, t, per_row, &w, dout);
+        let wa = Arc::new(w.clone());
+        for &block_rows in &[1usize, 7, 32] {
+            let batch = NmCompressedBatch::compress(
+                &x, t, din, &[], n, m, block_rows,
+            );
+            for &tile in &[3usize, DEFAULT_DOUT_TILE, 16] {
+                assert_eq!(
+                    batch.matmul_with_tile(&w, dout, tile),
+                    golden,
+                    "{n}:{m} block={block_rows} tile={tile} serial"
+                );
+                for &width in &[1usize, 4] {
+                    let pool = ThreadPool::new(width);
+                    assert_eq!(
+                        batch.matmul_parallel_with_tile(
+                            &wa, dout, &pool, tile
+                        ),
+                        golden,
+                        "{n}:{m} block={block_rows} tile={tile} \
+                         pool={width}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- dense
+
+#[test]
+fn tiled_dense_bitwise_equals_reference() {
+    let mut rng = Rng::new(107);
+    for &(t, din, dout) in
+        &[(1usize, 8usize, 5usize), (7, 24, 13), (33, 16, 37), (5, 32, 64)]
+    {
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        let golden = reference::dense(&x, t, din, &w, dout);
+        assert_eq!(dense_matmul(&x, t, din, &w, dout), golden);
+        for &tile in &TILES {
+            assert_eq!(
+                dense_matmul_with_tile(&x, t, din, &w, dout, tile),
+                golden,
+                "t={t} din={din} dout={dout} tile={tile}"
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_copy_dense_parallel_bitwise_across_pools() {
+    let mut rng = Rng::new(109);
+    let (t, din, dout) = (45usize, 16usize, 19usize);
+    let x = Arc::new(rand_mat(&mut rng, t * din));
+    let w = Arc::new(rand_mat(&mut rng, din * dout));
+    let golden = reference::dense(&x, t, din, &w, dout);
+    for &block_rows in &[1usize, 7, 32] {
+        for &width in &[1usize, 4] {
+            let pool = ThreadPool::new(width);
+            for &tile in &[1usize, DEFAULT_DOUT_TILE, 32] {
+                assert_eq!(
+                    dense_matmul_parallel(
+                        &x, t, din, &w, dout, &pool, block_rows, tile
+                    ),
+                    golden,
+                    "block={block_rows} pool={width} tile={tile}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- W8A8
+
+#[test]
+fn tiled_w8a8_bitwise_equals_reference() {
+    let mut rng = Rng::new(113);
+    for &(t, din, dout) in &[(1usize, 16usize, 5usize), (9, 32, 29)] {
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        let (wq, ws) = quant::quantize_weight(&w, din, dout);
+        // per-tensor
+        let xs = 0.037f32;
+        let xq = quant::quantize(&x, xs);
+        let golden = reference::w8a8(&xq, t, din, &wq, dout, xs, &ws);
+        assert_eq!(
+            quant::w8a8_matmul(&xq, t, din, &wq, dout, xs, &ws),
+            golden,
+            "per-tensor t={t} dout={dout}"
+        );
+        // per-token
+        let (xq_pt, xs_pt) = quant::quantize_per_token(&x, t, din);
+        let golden_pt = reference::w8a8_per_token(
+            &xq_pt, t, din, &wq, dout, &xs_pt, &ws,
+        );
+        assert_eq!(
+            quant::w8a8_matmul_per_token(
+                &xq_pt, t, din, &wq, dout, &xs_pt, &ws
+            ),
+            golden_pt,
+            "per-token t={t} dout={dout}"
+        );
+        // tile sweep through the kernel entry point
+        for &tile in &TILES {
+            let mut out = vec![0.0f32; t * dout];
+            amber_pruner::kernels::int8::w8a8_tiled_per_token(
+                &xq_pt, t, din, &wq, dout, tile, &xs_pt, &ws, &mut out,
+            );
+            assert_eq!(out, golden_pt, "per-token tile={tile}");
+        }
+    }
+}
+
+// ------------------------------------------------- engine-level parity
+
+#[test]
+fn per_token_scales_make_sq_packing_bitwise() {
+    // the satellite equality pin: with per-token activation scales a
+    // token's quantized logits depend only on its own rows, so the
+    // packed sq prefill must reproduce the sequential sq prefill
+    // bit-for-bit — for every pool width
+    let mut rng = Rng::new(127);
+    let lens = [5usize, 64, 17, 1];
+    let prompts: Vec<Vec<i32>> =
+        lens.iter().map(|&l| prompt(&mut rng, l)).collect();
+    let art = "tiny-lm-a.prefill64.sq";
+    for &threads in &[1usize, 4] {
+        let spec = ModelSpec::tiny("tiny-lm-a");
+        let mut e =
+            NativeEngine::synthetic(vec![spec]).with_parallelism(threads);
+        let bind = e.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+        let golden = sequential_logits(&mut e, art, &bind, 8, 64, &prompts);
+        let packed = e.prefill_packed(art, &bind, &prompts).unwrap();
+        let v = packed.vocab;
+        for (i, g) in golden.iter().enumerate() {
+            let start = packed.row_start(i);
+            let got = &packed.logits[start * v..(start + lens[i]) * v];
+            assert_eq!(
+                got,
+                &g[..],
+                "sq request {i} (threads={threads}): packed != \
+                 sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn dout_tile_knob_is_bit_transparent_through_engine() {
+    // the tile width is a pure perf knob: the full engine prefill must
+    // produce identical bits for every width, including the runtime
+    // fallback (5) and the clamp ceiling
+    let mut rng = Rng::new(131);
+    let prompts: Vec<Vec<i32>> =
+        [40usize, 64, 3].iter().map(|&l| prompt(&mut rng, l)).collect();
+    let art = "tiny-lm-a.prefill64.nm2_4";
+    let files = ["tiny-lm-a.atw", "tiny-lm-a.aux_all.atw"];
+    let run = |tile: usize| {
+        let mut e =
+            NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")])
+                .with_dout_tile(tile);
+        let bind = e.bind(art, &files).unwrap();
+        let out = e.prefill_packed(art, &bind, &prompts).unwrap();
+        (out.logits, out.k_cache, out.v_cache)
+    };
+    let golden = run(DEFAULT_DOUT_TILE);
+    for tile in [1usize, 5, 16, MAX_DOUT_TILE] {
+        assert_eq!(run(tile), golden, "dout_tile {tile}");
+    }
+}

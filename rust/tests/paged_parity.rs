@@ -334,9 +334,10 @@ fn fragmented_pool_admits_long_prompt_non_contiguously() {
 }
 
 /// The whole serving stack, end to end: identical workloads produce
-/// identical token sequences at every KV block size (fp configs only —
-/// W8A8's per-tensor activation scale is batch-composition-dependent,
-/// see the batch-parity suite).
+/// identical token sequences at every KV block size — including W8A8,
+/// whose per-token activation scales make quantized outputs independent
+/// of batch composition (the per-tensor scale used to force this test
+/// to fp configs only).
 #[test]
 fn end_to_end_serving_identical_across_block_sizes() {
     let run = |kv_block: usize| -> HashMap<u64, Vec<i32>> {
@@ -351,7 +352,7 @@ fn end_to_end_serving_identical_across_block_sizes() {
         )
         .unwrap();
         let configs: Vec<SparsityConfig> =
-            ["dense", "2:4:ls", "4:8:naive", "8:16:all"]
+            ["dense", "2:4:ls", "4:8:naive", "8:16:all", "2:4:ls+sq"]
                 .iter()
                 .map(|s| SparsityConfig::parse(s).unwrap())
                 .collect();
