@@ -16,12 +16,23 @@
 //! Compression / quantization happen outside the timed region (a fused
 //! prefill amortizes them); the `compress` series reports their cost
 //! separately.
+//!
+//! Since the bind-time preparation layer (ISSUE 5) each family also has
+//! a `packed` series: the same kernels over a tile-panel weight layout
+//! ([`amber_pruner::kernels::pack`]) built once up front, the way the
+//! native engine prepares weights at bind. Packing (and, for int8,
+//! quantize-once) cost is measured separately and each packed row
+//! carries `prep_secs` + `breakeven_calls` — how many kernel calls the
+//! one-time preparation needs to pay for itself against the unpacked
+//! per-call path.
 
 use std::collections::BTreeMap;
 
 use amber_pruner::bench::{bench, black_box};
+use amber_pruner::kernels::pack::PackedPanels;
 use amber_pruner::kernels::{dense, int8, nm, reference, DEFAULT_DOUT_TILE};
 use amber_pruner::quant;
+use amber_pruner::sparsity::plan::planned_tile;
 use amber_pruner::sparsity::spmm::NmCompressed;
 use amber_pruner::util::json::Json;
 use amber_pruner::util::rng::Rng;
@@ -44,6 +55,13 @@ struct Row {
     tokens: usize,
     median_secs: f64,
     executed_flops: u64,
+    /// one-time preparation seconds behind this series (packed rows)
+    prep_secs: Option<f64>,
+    /// calls for the one-time prep to break even vs the unpacked
+    /// per-call path (None: not a packed row, or never breaks even)
+    breakeven_calls: Option<f64>,
+    /// panel width of the packed layout (packed rows)
+    panel_w: Option<usize>,
 }
 
 impl Row {
@@ -54,6 +72,20 @@ impl Row {
         let mut o = BTreeMap::new();
         o.insert("kernel".into(), Json::Str(self.kernel.into()));
         o.insert("impl".into(), Json::Str(self.imp.into()));
+        o.insert(
+            "prep_secs".into(),
+            self.prep_secs.map(Json::Num).unwrap_or(Json::Null),
+        );
+        o.insert(
+            "breakeven_calls".into(),
+            self.breakeven_calls.map(Json::Num).unwrap_or(Json::Null),
+        );
+        o.insert(
+            "panel_w".into(),
+            self.panel_w
+                .map(|w| Json::Num(w as f64))
+                .unwrap_or(Json::Null),
+        );
         o.insert(
             "ratio".into(),
             match self.ratio {
@@ -92,6 +124,32 @@ fn main() {
     // tiled-dense medians per token count, the speedup/crossover base
     let mut dense_tiled_med: BTreeMap<usize, f64> = BTreeMap::new();
 
+    // ---- one-time preparation (what NativeEngine::bind amortizes):
+    // panel packing at the planned width, and quantize-once + pack for
+    // the int8 path; per-call quantize_weight is the cost the old W8A8
+    // hot path paid on every projection
+    let panel_w = planned_tile(DOUT);
+    let r = bench("prep.pack_f32", WARMUP, ITERS, None, || {
+        black_box(PackedPanels::pack(&w, DIN, DOUT, panel_w));
+    });
+    let pack_secs = r.median_secs;
+    let packed = PackedPanels::pack(&w, DIN, DOUT, panel_w);
+    let r = bench("prep.quantize_weight", WARMUP, ITERS, None, || {
+        black_box(quant::quantize_weight(&w, DIN, DOUT));
+    });
+    let quant_secs = r.median_secs;
+    let r = bench("prep.quant_plus_pack_int8", WARMUP, ITERS, None, || {
+        black_box(quant::quantize_weight_packed(&w, DIN, DOUT, panel_w));
+    });
+    let qpack_secs = r.median_secs;
+    let (wq_packed, ws_packed) =
+        quant::quantize_weight_packed(&w, DIN, DOUT, panel_w);
+
+    // one-time prep -> per-call saving -> calls to break even
+    let breakeven = |prep: f64, saving: f64| {
+        (saving > 0.0).then_some(prep / saving)
+    };
+
     println!("== spmm kernel core: reference vs tiled ({DIN}x{DOUT}) ==");
     for &t in &TOKENS {
         let x = rand_vec(&mut rng, t * DIN);
@@ -114,6 +172,9 @@ fn main() {
             tokens: t,
             median_secs: r.median_secs,
             executed_flops: dense_flops,
+            prep_secs: None,
+            breakeven_calls: None,
+            panel_w: None,
         });
         let mut out = vec![0.0f32; t * DOUT];
         let r = bench(
@@ -142,6 +203,33 @@ fn main() {
             tokens: t,
             median_secs: r.median_secs,
             executed_flops: dense_flops,
+            prep_secs: None,
+            breakeven_calls: None,
+            panel_w: None,
+        });
+        let r = bench(
+            &format!("dense.packed         t={t}"),
+            WARMUP,
+            ITERS,
+            Some(dense_flops),
+            || {
+                dense::dense_tiled_packed(&x, t, DIN, &packed, &mut out);
+                black_box(&out);
+            },
+        );
+        rows.push(Row {
+            kernel: "dense",
+            imp: "packed",
+            ratio: None,
+            tokens: t,
+            median_secs: r.median_secs,
+            executed_flops: dense_flops,
+            prep_secs: Some(pack_secs),
+            breakeven_calls: breakeven(
+                pack_secs,
+                dense_tiled_med[&t] - r.median_secs,
+            ),
+            panel_w: Some(panel_w),
         });
 
         // ---- N:M compressed SpMM, every ratio
@@ -167,6 +255,9 @@ fn main() {
                 tokens: t,
                 median_secs: r.median_secs,
                 executed_flops: sparse_flops,
+                prep_secs: None,
+                breakeven_calls: None,
+                panel_w: None,
             });
             let mut out = vec![0.0f32; t * DOUT];
             let r = bench(
@@ -193,6 +284,7 @@ fn main() {
                 dense_tiled_med[&t] / r.median_secs,
                 m as f64 / n as f64
             );
+            let nm_tiled_med = r.median_secs;
             rows.push(Row {
                 kernel: "nm",
                 imp: "tiled",
@@ -200,6 +292,36 @@ fn main() {
                 tokens: t,
                 median_secs: r.median_secs,
                 executed_flops: sparse_flops,
+                prep_secs: None,
+                breakeven_calls: None,
+                panel_w: None,
+            });
+            let r = bench(
+                &format!("nm{n}_{m}.packed       t={t}"),
+                WARMUP,
+                ITERS,
+                Some(sparse_flops),
+                || {
+                    nm::spmm_nm_tiled_packed(
+                        &c.values, &c.index, t, per_row, &packed,
+                        &mut out,
+                    );
+                    black_box(&out);
+                },
+            );
+            rows.push(Row {
+                kernel: "nm",
+                imp: "packed",
+                ratio: Some((n, m)),
+                tokens: t,
+                median_secs: r.median_secs,
+                executed_flops: sparse_flops,
+                prep_secs: Some(pack_secs),
+                breakeven_calls: breakeven(
+                    pack_secs,
+                    nm_tiled_med - r.median_secs,
+                ),
+                panel_w: Some(panel_w),
             });
         }
 
@@ -223,6 +345,9 @@ fn main() {
             tokens: t,
             median_secs: r.median_secs,
             executed_flops: dense_flops,
+            prep_secs: None,
+            breakeven_calls: None,
+            panel_w: None,
         });
         let mut out = vec![0.0f32; t * DOUT];
         let r = bench(
@@ -245,6 +370,7 @@ fn main() {
                 black_box(&out);
             },
         );
+        let w8a8_tiled_med = r.median_secs;
         rows.push(Row {
             kernel: "w8a8",
             imp: "tiled",
@@ -252,6 +378,38 @@ fn main() {
             tokens: t,
             median_secs: r.median_secs,
             executed_flops: dense_flops,
+            prep_secs: None,
+            breakeven_calls: None,
+            panel_w: None,
+        });
+        let r = bench(
+            &format!("w8a8.packed          t={t}"),
+            WARMUP,
+            ITERS,
+            Some(dense_flops),
+            || {
+                int8::w8a8_tiled_per_token_packed(
+                    &xq, t, DIN, &wq_packed, &xs, &ws_packed, &mut out,
+                );
+                black_box(&out);
+            },
+        );
+        rows.push(Row {
+            kernel: "w8a8",
+            imp: "packed",
+            ratio: None,
+            tokens: t,
+            median_secs: r.median_secs,
+            executed_flops: dense_flops,
+            prep_secs: Some(qpack_secs),
+            // the pre-prep W8A8 hot path re-quantized the weight on
+            // every call: the per-call saving includes that avoided
+            // quantization on top of the kernel delta
+            breakeven_calls: breakeven(
+                qpack_secs,
+                quant_secs + w8a8_tiled_med - r.median_secs,
+            ),
+            panel_w: Some(panel_w),
         });
 
         // compression overhead itself (prefill would fuse this)
@@ -306,6 +464,13 @@ fn main() {
         "dout_tile".into(),
         Json::Num(DEFAULT_DOUT_TILE as f64),
     );
+    // one-time preparation costs behind the packed series
+    let mut prep = BTreeMap::new();
+    prep.insert("panel_w".into(), Json::Num(panel_w as f64));
+    prep.insert("pack_f32_secs".into(), Json::Num(pack_secs));
+    prep.insert("quantize_weight_secs".into(), Json::Num(quant_secs));
+    prep.insert("quant_plus_pack_secs".into(), Json::Num(qpack_secs));
+    root.insert("prep".into(), Json::Obj(prep));
     root.insert("crossover".into(), Json::Obj(crossover));
     root.insert("results".into(), Json::Arr(results));
     let path = "BENCH_spmm.json";

@@ -293,6 +293,9 @@ impl Engine {
         let binding = self.rt.bind(&artifact, &file_refs)?;
         let dec_files = vec![file_refs[0]];
         let dec_binding = self.rt.bind(&decode_artifact, &dec_files)?;
+        // binds above are where weight preparation (panel packing +
+        // cached quantization) happens; refresh the prep gauges
+        self.publish_prep();
 
         // token-packed submission: each request's prompt rides verbatim
         // (the engine clamps to the artifact seq); no PAD rows between
@@ -535,6 +538,27 @@ impl Engine {
         EngineMetrics::set(
             &self.metrics.kv_frag_permille,
             (fs.fragmentation() * 1000.0).round() as u64,
+        );
+    }
+
+    /// Publish the engine's cumulative weight-preparation accounting
+    /// (bind-time panel packing + cached quantization) so prep
+    /// amortization is visible in the serving report. Cheap snapshot;
+    /// refreshed after each prefill batch's binds.
+    fn publish_prep(&self) {
+        let Some(ps) = self.rt.prep_stats() else { return };
+        EngineMetrics::set(
+            &self.metrics.weight_prep_us,
+            (ps.prep_secs * 1e6).round() as u64,
+        );
+        EngineMetrics::set(
+            &self.metrics.weight_bytes_packed,
+            ps.bytes_packed,
+        );
+        EngineMetrics::set(&self.metrics.weight_prep_hits, ps.cache_hits);
+        EngineMetrics::set(
+            &self.metrics.weight_prep_misses,
+            ps.prep_calls(),
         );
     }
 

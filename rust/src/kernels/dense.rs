@@ -7,6 +7,7 @@
 //! and the bitwise-parity argument against
 //! [`reference::dense`](super::reference::dense).
 
+use super::pack::PackedPanels;
 use super::{clamp_tile, MAX_DOUT_TILE};
 
 /// One `(row, tile)` microkernel at const width `W`.
@@ -89,11 +90,94 @@ pub fn dense_tiled(
     }
 }
 
+/// One `(row, panel)` microkernel at const width `W` over a packed
+/// panel: consecutive contraction steps read adjacent memory
+/// (`panel[k*W..][..W]`), so the whole pass is one sequential sweep.
+#[inline(always)]
+fn row_panel<const W: usize>(xrow: &[f32], panel: &[f32], out: &mut [f32]) {
+    let mut acc = [0.0f32; W];
+    for (k, &v) in xrow.iter().enumerate() {
+        let wrow: &[f32; W] =
+            panel[k * W..k * W + W].try_into().expect("panel width");
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..W].copy_from_slice(&acc);
+}
+
+/// Runtime-width `(row, panel)` microkernel (ragged last panel and
+/// non-specialized widths).
+#[inline(always)]
+fn row_panel_dyn(xrow: &[f32], panel: &[f32], tw: usize, out: &mut [f32]) {
+    debug_assert!(tw <= MAX_DOUT_TILE);
+    let mut buf = [0.0f32; MAX_DOUT_TILE];
+    let acc = &mut buf[..tw];
+    for (k, &v) in xrow.iter().enumerate() {
+        let wrow = &panel[k * tw..(k + 1) * tw];
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..tw].copy_from_slice(acc);
+}
+
+/// Panel-packed dense matmul: `x [t, din] @ w [din, dout]` with the
+/// weight in tile-panel layout. Same per-element ascending-`k`
+/// reduction chain as [`dense_tiled`] at `dout_tile = panel_w`, so the
+/// output is bitwise identical to
+/// [`reference::dense`](super::reference::dense) — the panel layout is
+/// a pure layout transform.
+pub fn dense_tiled_packed(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * din, "activation shape");
+    assert_eq!(w.din, din, "weight contraction width");
+    assert_eq!(out.len(), t * w.dout, "output shape");
+    let dout = w.dout;
+    for r in 0..t {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let ot = &mut orow[c0..c0 + tw];
+            match tw {
+                4 => row_panel::<4>(xrow, panel, ot),
+                8 => row_panel::<8>(xrow, panel, ot),
+                16 => row_panel::<16>(xrow, panel, ot),
+                32 => row_panel::<32>(xrow, panel, ot),
+                _ => row_panel_dyn(xrow, panel, tw, ot),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::reference;
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn packed_matches_reference_across_panel_widths() {
+        let mut rng = Rng::new(15);
+        let (t, din, dout) = (6usize, 24usize, 37usize);
+        let x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let golden = reference::dense(&x, t, din, &w, dout);
+        for pw in [1usize, 3, 4, 8, 16, 32, 64] {
+            let packed = PackedPanels::pack(&w, din, dout, pw);
+            let mut out = vec![0.0f32; t * dout];
+            dense_tiled_packed(&x, t, din, &packed, &mut out);
+            assert_eq!(out, golden, "panel_w {pw}");
+        }
+    }
 
     #[test]
     fn tiled_matches_reference_across_tile_widths() {

@@ -11,6 +11,7 @@
 //! turns packed-vs-sequential sq prefill parity from tolerance-based
 //! into bitwise (`tests/kernel_parity.rs`).
 
+use super::pack::PackedPanels;
 use super::{clamp_tile, MAX_DOUT_TILE};
 
 /// One `(row, tile)` microkernel at const width `W`: `W` i32
@@ -134,6 +135,97 @@ pub fn w8a8_tiled(
     );
 }
 
+/// One `(row, panel)` microkernel at const width `W` over a packed
+/// int8 panel: `W` i32 accumulators, sequential panel sweep,
+/// dequantized on store with the panel's slice of the column scales.
+#[inline(always)]
+fn row_panel<const W: usize>(
+    xrow: &[i8],
+    panel: &[i8],
+    x_scale: f32,
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    let mut acc = [0i32; W];
+    for (k, &v) in xrow.iter().enumerate() {
+        let wrow: &[i8; W] =
+            panel[k * W..k * W + W].try_into().expect("panel width");
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v as i32 * wv as i32;
+        }
+    }
+    for ((o, &a), &s) in out[..W].iter_mut().zip(acc.iter()).zip(w_scales)
+    {
+        *o = a as f32 * x_scale * s;
+    }
+}
+
+/// Runtime-width `(row, panel)` microkernel (ragged last panel and
+/// non-specialized widths).
+#[inline(always)]
+fn row_panel_dyn(
+    xrow: &[i8],
+    panel: &[i8],
+    tw: usize,
+    x_scale: f32,
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(tw <= MAX_DOUT_TILE);
+    let mut buf = [0i32; MAX_DOUT_TILE];
+    let acc = &mut buf[..tw];
+    for (k, &v) in xrow.iter().enumerate() {
+        let wrow = &panel[k * tw..(k + 1) * tw];
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v as i32 * wv as i32;
+        }
+    }
+    for ((o, &a), &s) in out[..tw].iter_mut().zip(acc.iter()).zip(w_scales)
+    {
+        *o = a as f32 * x_scale * s;
+    }
+}
+
+/// Panel-packed W8A8 matmul with **per-token** activation scales: the
+/// quantized weight arrives in tile-panel layout (packed once at bind
+/// from the cached `quantize_weight` output). Integer accumulation is
+/// exact and the dequant expression matches, so the output is bitwise
+/// identical to
+/// [`reference::w8a8_per_token`](super::reference::w8a8_per_token).
+pub fn w8a8_tiled_per_token_packed(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(xq.len(), t * din, "activation shape");
+    assert_eq!(wq.din, din, "weight contraction width");
+    assert_eq!(x_scales.len(), t, "one activation scale per token row");
+    assert_eq!(w_scales.len(), wq.dout, "one weight scale per column");
+    assert_eq!(out.len(), t * wq.dout, "output shape");
+    let dout = wq.dout;
+    for r in 0..t {
+        let xrow = &xq[r * din..(r + 1) * din];
+        let xs = x_scales[r];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        for p in 0..wq.n_panels() {
+            let (c0, tw, panel) = wq.panel(p);
+            let ws = &w_scales[c0..c0 + tw];
+            let ot = &mut orow[c0..c0 + tw];
+            match tw {
+                4 => row_panel::<4>(xrow, panel, xs, ws, ot),
+                8 => row_panel::<8>(xrow, panel, xs, ws, ot),
+                16 => row_panel::<16>(xrow, panel, xs, ws, ot),
+                32 => row_panel::<32>(xrow, panel, xs, ws, ot),
+                _ => row_panel_dyn(xrow, panel, tw, xs, ws, ot),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::reference;
@@ -163,6 +255,15 @@ mod tests {
                 &xq, t, din, &wq, dout, tile, &xs, &ws, &mut out,
             );
             assert_eq!(out, golden, "tile {tile}");
+        }
+        // panel-packed: pure layout transform, same bits
+        for pw in [1usize, 4, 7, 8, 16, 32] {
+            let packed = PackedPanels::pack(&wq, din, dout, pw);
+            let mut out = vec![0.0f32; t * dout];
+            w8a8_tiled_per_token_packed(
+                &xq, t, din, &packed, &xs, &ws, &mut out,
+            );
+            assert_eq!(out, golden, "panel_w {pw}");
         }
         // per-tensor == per-token with a broadcast scale
         let golden_pt =

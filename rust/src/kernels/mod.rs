@@ -45,18 +45,35 @@
 //! the same expression, in the same association order, as the
 //! reference, with per-token `x_scale` support fused at dequant.
 //!
+//! # Panel-packed weights
+//!
+//! The kernels above still stream a row-major weight with a
+//! `dout`-wide stride between contraction steps. The [`pack`] module
+//! stores the weight as contiguous **tile panels** instead
+//! ([`pack::PackedPanels`], built once per weight at bind time by the
+//! native engine's prep cache), and each kernel family has a
+//! `*_packed` variant whose inner loop streams the panel unit-stride.
+//! The panel transform is pure layout: the packed kernels add the same
+//! contributions in the same ascending-`k` order, so they remain
+//! bitwise identical to [`reference`] (see the [`pack`] docs for the
+//! layout and the argument).
+//!
 //! # Tuning
 //!
 //! [`DEFAULT_DOUT_TILE`] (8) fits comfortably in two SSE / one AVX2
 //! register set with room for the broadcast multiplier; widths 4, 8,
 //! 16 and 32 get const-unrolled fast paths, anything else (and every
 //! ragged tail tile) takes the runtime-width path. The knob rides on
-//! [`crate::sparsity::plan::SparsityPlan::dout_tile`] and is clamped to
-//! `1..=`[`MAX_DOUT_TILE`].
+//! [`crate::sparsity::plan::SparsityPlan::tiles`] and is clamped to
+//! `1..=`[`MAX_DOUT_TILE`]; since the bind-time preparation layer it is
+//! planned **per module** from the model geometry
+//! ([`crate::sparsity::plan::TileTable`]) and stamped into each packed
+//! weight.
 
 pub mod dense;
 pub mod int8;
 pub mod nm;
+pub mod pack;
 pub mod reference;
 
 /// Default accumulator-tile width (output columns per register tile).

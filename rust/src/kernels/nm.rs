@@ -9,6 +9,7 @@
 //! `-0.0` accumulators). See the [module docs](crate::kernels) for the
 //! tiling scheme and the bitwise-parity argument.
 
+use super::pack::PackedPanels;
 use super::{clamp_tile, MAX_DOUT_TILE};
 
 /// One `(row, tile)` microkernel at const width `W`: `W` accumulators
@@ -106,6 +107,94 @@ pub fn spmm_nm_tiled(
     }
 }
 
+/// One `(row, panel)` microkernel at const width `W` over a packed
+/// panel: the compressed walk stays fixed-stride, and each surviving
+/// channel's `W`-wide weight row is `panel[ci*W..][..W]` — the panel
+/// is revisited in ascending-channel order with no `dout` stride.
+#[inline(always)]
+fn row_panel<const W: usize>(
+    vals: &[f32],
+    idx: &[u32],
+    panel: &[f32],
+    out: &mut [f32],
+) {
+    let mut acc = [0.0f32; W];
+    for (&v, &ci) in vals.iter().zip(idx.iter()) {
+        if v == 0.0 {
+            continue;
+        }
+        let start = ci as usize * W;
+        let wrow: &[f32; W] =
+            panel[start..start + W].try_into().expect("panel width");
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..W].copy_from_slice(&acc);
+}
+
+/// Runtime-width `(row, panel)` microkernel (ragged last panel and
+/// non-specialized widths).
+#[inline(always)]
+fn row_panel_dyn(
+    vals: &[f32],
+    idx: &[u32],
+    panel: &[f32],
+    tw: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(tw <= MAX_DOUT_TILE);
+    let mut buf = [0.0f32; MAX_DOUT_TILE];
+    let acc = &mut buf[..tw];
+    for (&v, &ci) in vals.iter().zip(idx.iter()) {
+        if v == 0.0 {
+            continue;
+        }
+        let start = ci as usize * tw;
+        let wrow = &panel[start..start + tw];
+        for (a, &wv) in acc.iter_mut().zip(wrow.iter()) {
+            *a += v * wv;
+        }
+    }
+    out[..tw].copy_from_slice(acc);
+}
+
+/// Panel-packed compressed SpMM: same contract as [`spmm_nm_tiled`]
+/// with the weight in tile-panel layout. Each output element keeps its
+/// ascending-`k` reduction chain (the panel transform only changes
+/// *where* a weight row lives, not *when* it is added), so the output
+/// is bitwise identical to
+/// [`reference::spmm_nm`](super::reference::spmm_nm).
+pub fn spmm_nm_tiled_packed(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(values.len(), rows * per_row, "values shape");
+    assert_eq!(index.len(), rows * per_row, "index shape");
+    assert_eq!(out.len(), rows * w.dout, "output shape");
+    let dout = w.dout;
+    for r in 0..rows {
+        let vals = &values[r * per_row..(r + 1) * per_row];
+        let idx = &index[r * per_row..(r + 1) * per_row];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let ot = &mut orow[c0..c0 + tw];
+            match tw {
+                4 => row_panel::<4>(vals, idx, panel, ot),
+                8 => row_panel::<8>(vals, idx, panel, ot),
+                16 => row_panel::<16>(vals, idx, panel, ot),
+                32 => row_panel::<32>(vals, idx, panel, ot),
+                _ => row_panel_dyn(vals, idx, panel, tw, ot),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::reference;
@@ -144,6 +233,15 @@ mod tests {
                 &values, &index, rows, per_row, &w, dout, tile, &mut out,
             );
             assert_eq!(out, golden, "tile {tile}");
+        }
+        // panel-packed: pure layout transform, same bits
+        for pw in [1usize, 4, 5, 8, 16, 32] {
+            let packed = PackedPanels::pack(&w, din, dout, pw);
+            let mut out = vec![0.0f32; rows * dout];
+            spmm_nm_tiled_packed(
+                &values, &index, rows, per_row, &packed, &mut out,
+            );
+            assert_eq!(out, golden, "panel_w {pw}");
         }
     }
 }

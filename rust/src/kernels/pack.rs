@@ -1,0 +1,179 @@
+//! Tile-panel weight packing — the bind-time layout transform that
+//! makes the register-tiled kernels stream weights unit-stride.
+//!
+//! # Why panels
+//!
+//! The row-major `[din, dout]` weight layout forces every `(row, tile)`
+//! microkernel pass to stride by `dout` between consecutive contraction
+//! steps: the `W`-wide weight row of channel `k` lives at
+//! `k * dout + c0`, so two adjacent `k`s are `dout` floats apart. At
+//! realistic `dout` that defeats the hardware prefetcher and turns the
+//! tiled kernels memory-bound on weight traffic — the weight matrix is
+//! streamed once per tile *column*, in `dout`-strided gulps.
+//!
+//! A [`PackedPanels`] stores the same matrix as **panels** of
+//! `panel_w` output columns, each panel holding its `din` rows
+//! contiguously:
+//!
+//! ```text
+//! row-major  [din, dout]:            packed panels (panel_w = W):
+//!   k0: c0 c1 c2 c3 c4 c5 ...          panel 0 (cols 0..W):
+//!   k1: c0 c1 c2 c3 c4 c5 ...            k0: c0..cW   | unit
+//!   ...                                   k1: c0..cW   | stride
+//!                                         ...          v
+//!                                       panel 1 (cols W..2W): ...
+//!                                       last panel: ragged tail width
+//! ```
+//!
+//! The inner kernel loop for panel `p` then reads
+//! `panel[k * panel_w ..][..panel_w]` — consecutive `k`s are adjacent in
+//! memory, so a whole `(row, panel)` pass is one sequential sweep over
+//! `din * panel_w` elements. The transform is pure layout: every weight
+//! element keeps its value, and the packed kernels in
+//! [`super::nm`] / [`super::dense`] / [`super::int8`] add the exact same
+//! contributions in the exact same ascending-`k` order as the row-major
+//! tiled kernels, so outputs stay **bitwise identical** to
+//! [`super::reference`] (pinned by `tests/kernel_parity.rs`).
+//!
+//! Packing costs one pass over the matrix and one `din * dout` copy; it
+//! is done **once per weight at [`Engine::bind`] time** by the prep
+//! cache ([`crate::runtime`]'s native backend), never in a hot path.
+//!
+//! [`Engine::bind`]: crate::runtime::Engine::bind
+
+use super::clamp_tile;
+
+/// A `[din, dout]` matrix stored as contiguous tile panels of
+/// `panel_w` output columns (the last panel ragged when `panel_w` does
+/// not divide `dout`). Generic over the element type so the f32 and
+/// int8 (W8A8) weight paths share one layout.
+#[derive(Debug, Clone)]
+pub struct PackedPanels<T> {
+    /// contraction width (input channels)
+    pub din: usize,
+    /// total output columns across all panels
+    pub dout: usize,
+    /// full-panel width (clamped to `1..=`[`super::MAX_DOUT_TILE`])
+    pub panel_w: usize,
+    /// panel-major storage: panel `p` holds `din * width(p)` elements
+    data: Vec<T>,
+}
+
+impl<T: Copy> PackedPanels<T> {
+    /// Pack a row-major `[din, dout]` matrix into panels of `panel_w`
+    /// columns (clamped to the supported tile range).
+    ///
+    /// # Panics
+    /// When `w.len() != din * dout`.
+    pub fn pack(w: &[T], din: usize, dout: usize, panel_w: usize) -> Self {
+        assert_eq!(w.len(), din * dout, "pack: weight shape");
+        let panel_w = clamp_tile(panel_w);
+        let mut data = Vec::with_capacity(din * dout);
+        let mut c0 = 0;
+        while c0 < dout {
+            let tw = panel_w.min(dout - c0);
+            for k in 0..din {
+                let start = k * dout + c0;
+                data.extend_from_slice(&w[start..start + tw]);
+            }
+            c0 += tw;
+        }
+        PackedPanels { din, dout, panel_w, data }
+    }
+
+    /// Number of panels (`ceil(dout / panel_w)`).
+    pub fn n_panels(&self) -> usize {
+        self.dout.div_ceil(self.panel_w)
+    }
+
+    /// Panel `p` as `(first column, width, din-by-width slice)`. Every
+    /// column stores exactly `din` elements, so panel `p`'s offset is
+    /// simply `first_column * din`.
+    pub fn panel(&self, p: usize) -> (usize, usize, &[T]) {
+        let c0 = p * self.panel_w;
+        debug_assert!(c0 < self.dout, "panel index out of range");
+        let tw = self.panel_w.min(self.dout - c0);
+        let off = c0 * self.din;
+        (c0, tw, &self.data[off..off + self.din * tw])
+    }
+
+    /// Storage footprint in bytes (the packed copy only).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+
+    /// Reconstruct the row-major `[din, dout]` matrix (tests /
+    /// verification — the layout transform must be lossless).
+    pub fn unpack(&self) -> Vec<T>
+    where
+        T: Default,
+    {
+        let mut out = vec![T::default(); self.din * self.dout];
+        for p in 0..self.n_panels() {
+            let (c0, tw, panel) = self.panel(p);
+            for k in 0..self.din {
+                out[k * self.dout + c0..k * self.dout + c0 + tw]
+                    .copy_from_slice(&panel[k * tw..(k + 1) * tw]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_roundtrips_row_major() {
+        let mut rng = Rng::new(21);
+        for &(din, dout) in &[(3usize, 5usize), (16, 37), (8, 8), (2, 1)] {
+            let w: Vec<f32> =
+                (0..din * dout).map(|_| rng.normal() as f32).collect();
+            for &pw in &[1usize, 4, 8, 16, 64] {
+                let p = PackedPanels::pack(&w, din, dout, pw);
+                assert_eq!(p.unpack(), w, "din={din} dout={dout} pw={pw}");
+                assert_eq!(p.bytes(), din * dout * 4);
+            }
+        }
+    }
+
+    #[test]
+    fn panel_geometry_covers_every_column_once() {
+        let (din, dout, pw) = (4usize, 21usize, 8usize);
+        let w: Vec<f32> = (0..din * dout).map(|i| i as f32).collect();
+        let p = PackedPanels::pack(&w, din, dout, pw);
+        assert_eq!(p.n_panels(), 3);
+        let mut covered = 0usize;
+        for i in 0..p.n_panels() {
+            let (c0, tw, panel) = p.panel(i);
+            assert_eq!(c0, i * pw);
+            assert_eq!(panel.len(), din * tw);
+            // element (k, c0 + j) must be w[k*dout + c0 + j]
+            for k in 0..din {
+                for j in 0..tw {
+                    assert_eq!(panel[k * tw + j], w[k * dout + c0 + j]);
+                }
+            }
+            covered += tw;
+        }
+        assert_eq!(covered, dout);
+    }
+
+    #[test]
+    fn int8_packing_shares_the_layout() {
+        let (din, dout) = (4usize, 13usize);
+        let w: Vec<i8> =
+            (0..din * dout).map(|i| (i % 251) as i8).collect();
+        let p = PackedPanels::pack(&w, din, dout, 8);
+        assert_eq!(p.unpack(), w);
+        assert_eq!(p.bytes(), din * dout);
+    }
+
+    #[test]
+    #[should_panic(expected = "pack: weight shape")]
+    fn pack_rejects_bad_shape() {
+        PackedPanels::pack(&[0.0f32; 7], 2, 4, 8);
+    }
+}

@@ -11,6 +11,7 @@
 //! uses per-token so a token's quantized logits never depend on its
 //! batchmates (what makes packed sq prefill bitwise-reproducible).
 
+use crate::kernels::pack::PackedPanels;
 use crate::kernels::{self, DEFAULT_DOUT_TILE};
 
 /// Symmetric per-tensor int8 quantization with a static scale.
@@ -71,6 +72,42 @@ pub fn quantize_weight(w: &[f32], din: usize, dout: usize) -> (Vec<i8>, Vec<f32>
         }));
     }
     (wq, scales)
+}
+
+/// [`quantize_weight`] + tile-panel packing in one call: the bind-time
+/// preparation the native engine caches per weight `Arc` — quantize the
+/// `[din, dout]` weight once, pack the int8 bytes into panels of
+/// `panel_w` columns, and return the per-column scales alongside.
+/// Feed the result to
+/// [`w8a8_matmul_packed_per_token`] /
+/// [`crate::kernels::int8::w8a8_tiled_per_token_packed`].
+pub fn quantize_weight_packed(
+    w: &[f32],
+    din: usize,
+    dout: usize,
+    panel_w: usize,
+) -> (PackedPanels<i8>, Vec<f32>) {
+    let (wq, scales) = quantize_weight(w, din, dout);
+    (PackedPanels::pack(&wq, din, dout, panel_w), scales)
+}
+
+/// W8A8 matmul over a pre-quantized, panel-packed weight with
+/// **per-token** activation scales — the zero-preparation hot path the
+/// serving pipeline runs once weights are prepared at bind. Bitwise
+/// identical to [`w8a8_matmul_per_token`] on the same quantized bytes.
+pub fn w8a8_matmul_packed_per_token(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * wq.dout];
+    kernels::int8::w8a8_tiled_per_token_packed(
+        xq, t, din, wq, x_scales, w_scales, &mut out,
+    );
+    out
 }
 
 /// W8A8 matmul with int32 accumulation and a per-tensor activation
@@ -210,6 +247,31 @@ mod tests {
             "per-token ({err_pt}) should beat per-tensor ({err_tensor}) \
              on the dominated rows"
         );
+    }
+
+    #[test]
+    fn packed_quant_matches_row_major_bitwise() {
+        // quantize-once-and-pack must reproduce the per-call path bit
+        // for bit: same quantized bytes, same scales, same matmul
+        let mut rng = Rng::new(10);
+        let (t, din, dout) = (3usize, 32usize, 21usize);
+        let x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (wq, ws) = quantize_weight(&w, din, dout);
+        let (xq, xs) = quantize_per_token(&x, t, din);
+        let golden = w8a8_matmul_per_token(&xq, t, din, &wq, dout, &xs, &ws);
+        for pw in [1usize, 8, 16, 64] {
+            let (pq, ps) = quantize_weight_packed(&w, din, dout, pw);
+            assert_eq!(ps, ws, "panel_w {pw}: scales");
+            assert_eq!(pq.unpack(), wq, "panel_w {pw}: bytes");
+            assert_eq!(
+                w8a8_matmul_packed_per_token(&xq, t, din, &pq, &xs, &ps),
+                golden,
+                "panel_w {pw}: matmul"
+            );
+        }
     }
 
     #[test]

@@ -276,6 +276,39 @@ impl SparsityAudit {
     }
 }
 
+/// Cumulative bind-time weight-preparation accounting (the native
+/// engine's prep cache): how many weights were panel-packed /
+/// quantized, how often a bind or decode found its preparation already
+/// cached, and what the one-time cost was. Copy-cheap snapshot; the
+/// coordinator publishes it into `EngineMetrics` so prep amortization
+/// is visible in serving reports.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrepStats {
+    /// weights packed into tile panels (one per distinct weight `Arc`
+    /// per tile width — a miss)
+    pub weights_packed: u64,
+    /// weights quantized for the W8A8 path (at most one per weight
+    /// `Arc` — a miss; never in a hot path)
+    pub weights_quantized: u64,
+    /// preparation lookups served from the cache (re-binds, decode,
+    /// shared weights)
+    pub cache_hits: u64,
+    /// bytes of packed weight storage created (f32 panels + int8
+    /// panels)
+    pub bytes_packed: u64,
+    /// wall seconds spent packing + quantizing (one-time, at bind)
+    pub prep_secs: f64,
+}
+
+impl PrepStats {
+    /// Total preparation executions (packs + quantizations) — the
+    /// miss count, and the counter the native engine's debug
+    /// assertion pins at zero across steady-state decode.
+    pub fn prep_calls(&self) -> u64 {
+        self.weights_packed + self.weights_quantized
+    }
+}
+
 /// Backend-neutral execution engine. Object-safe: the coordinator holds
 /// a `Box<dyn Engine>`.
 pub trait Engine {
@@ -533,6 +566,13 @@ pub trait Engine {
     /// Sparsity accounting, if the backend tracks it (the native engine
     /// does; PJRT executes pruning inside the compiled graph).
     fn audit(&self) -> Option<SparsityAudit> {
+        None
+    }
+
+    /// Bind-time weight-preparation accounting, if the backend prepares
+    /// weights host-side (the native engine's prep cache; compiled
+    /// backends bake layout into the artifact).
+    fn prep_stats(&self) -> Option<PrepStats> {
         None
     }
 }

@@ -18,12 +18,16 @@ use crate::sparsity::plan::SparsityPlan;
 
 use super::layers::{rmsnorm, silu, softmax_inplace, ExecOpts, ProjKind};
 use super::model::NativeModel;
+use super::prepared::PreparedModel;
 
 impl NativeModel {
     /// Advance every batch row one decode step against a block-paged KV
     /// view. Projections run through the same
     /// [`super::layers::Projection`] steps as prefill, under the
-    /// all-dense plan. Rows with an empty block table are static-shape
+    /// all-dense plan, against the bind-time prepared weights — a
+    /// steady-state decode step performs **zero** weight preparation
+    /// (the engine pins this with a debug assertion on the prep
+    /// counter). Rows with an empty block table are static-shape
     /// fillers: they compute (keeping the batch shape static, as the
     /// slot path always did) but own no storage — they attend to their
     /// own freshly computed K/V only and write nothing. W8A8 uses
@@ -36,9 +40,9 @@ impl NativeModel {
         pos: &[i32],
         kv: &mut PagedKv<'_>,
         kv_len: &[i32],
+        prepared: &PreparedModel,
         quantized: bool,
         block_rows: usize,
-        dout_tile: usize,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
         let sp = &self.spec;
@@ -46,16 +50,27 @@ impl NativeModel {
         let (d, qd, kvd) = (sp.d_model, sp.q_dim(), sp.kv_dim());
         let dh = sp.head_dim;
         let group = sp.n_q_heads / sp.n_kv_heads;
-        let dense_plan =
-            SparsityPlan::dense(sp.n_layers).with_dout_tile(dout_tile);
+        let dense_plan = SparsityPlan::dense(sp.n_layers)
+            .with_tiles(prepared.tiles.clone());
         let opts =
             ExecOpts::new(&dense_plan, quantized, false, None, block_rows);
         let mut x = self.embed_tokens(token);
-        for (l, lw) in self.layers.iter().enumerate() {
+        for (l, (lw, pl)) in self
+            .layers
+            .iter()
+            .zip(prepared.layers.iter())
+            .enumerate()
+        {
             let h = Arc::new(rmsnorm(&x, b, d, &lw.attn_norm));
-            let q = lw.projection(ProjKind::Q, sp).run(&h, b, l, &opts, audit);
-            let k = lw.projection(ProjKind::K, sp).run(&h, b, l, &opts, audit);
-            let v = lw.projection(ProjKind::V, sp).run(&h, b, l, &opts, audit);
+            let q = lw
+                .projection(ProjKind::Q, sp, pl)
+                .run(&h, b, l, &opts, audit);
+            let k = lw
+                .projection(ProjKind::K, sp, pl)
+                .run(&h, b, l, &opts, audit);
+            let v = lw
+                .projection(ProjKind::V, sp, pl)
+                .run(&h, b, l, &opts, audit);
             let mut attn = vec![0.0f32; b * qd];
             for bi in 0..b {
                 let krow_new = &k[bi * kvd..(bi + 1) * kvd];
@@ -124,29 +139,33 @@ impl NativeModel {
                 }
             }
             let attn = Arc::new(attn);
-            let o =
-                lw.projection(ProjKind::O, sp).run(&attn, b, l, &opts, audit);
+            let o = lw
+                .projection(ProjKind::O, sp, pl)
+                .run(&attn, b, l, &opts, audit);
             for (xi, oi) in x.iter_mut().zip(o.iter()) {
                 *xi += oi;
             }
             let h2 = Arc::new(rmsnorm(&x, b, d, &lw.mlp_norm));
-            let gate =
-                lw.projection(ProjKind::Gate, sp).run(&h2, b, l, &opts, audit);
-            let up =
-                lw.projection(ProjKind::Up, sp).run(&h2, b, l, &opts, audit);
+            let gate = lw
+                .projection(ProjKind::Gate, sp, pl)
+                .run(&h2, b, l, &opts, audit);
+            let up = lw
+                .projection(ProjKind::Up, sp, pl)
+                .run(&h2, b, l, &opts, audit);
             let act: Arc<Vec<f32>> = Arc::new(
                 gate.iter()
                     .zip(up.iter())
                     .map(|(&g, &u)| silu(g) * u)
                     .collect(),
             );
-            let down =
-                lw.projection(ProjKind::Down, sp).run(&act, b, l, &opts, audit);
+            let down = lw
+                .projection(ProjKind::Down, sp, pl)
+                .run(&act, b, l, &opts, audit);
             for (xi, di) in x.iter_mut().zip(down.iter()) {
                 *xi += di;
             }
         }
-        self.logits(&x, b, None, block_rows, dout_tile, audit)
+        self.logits(&x, b, prepared, None, block_rows, audit)
     }
 }
 

@@ -3,31 +3,41 @@
 //! A transformer block is executed as a sequence of [`Projection`] steps
 //! (q/k/v/o, gate/up/down, lm_head) instead of inline matmul code: each
 //! step resolves its [`ProjPolicy`] from the prefill's [`SparsityPlan`],
-//! dispatches to the register-tiled dense / block-compressed N:M / W8A8
-//! kernels (optionally fanned out over the engine [`ThreadPool`]),
-//! validates pruned activations, and attributes FLOPs to its module in
-//! the [`SparsityAudit`] — one place for the policy/kernel/audit
-//! plumbing the old monolith re-derived at every call site.
+//! dispatches to the panel-packed register-tiled dense / block-compressed
+//! N:M / W8A8 kernels (optionally fanned out over the engine
+//! [`ThreadPool`]), validates pruned activations, and attributes FLOPs to
+//! its module in the [`SparsityAudit`] — one place for the
+//! policy/kernel/audit plumbing the old monolith re-derived at every call
+//! site.
 //!
 //! Activations flow through the pipeline as `Arc<Vec<f32>>`, so the
 //! parallel dense tiles share the buffer with pool workers without a
 //! per-call copy (zero-copy end-to-end), and the W8A8 path quantizes
-//! with **per-token** activation scales, so a token's quantized output
+//! activations with **per-token** scales, so a token's quantized output
 //! never depends on its batchmates.
+//!
+//! Weights arrive **prepared**: every step holds a
+//! [`PreparedWeight`](super::prepared::PreparedWeight) built once at
+//! bind time — panel-packed f32 at the module's planned tile width,
+//! plus the cached `(wq, w_scales)` int8 panels for quantized bindings.
+//! No projection run packs or quantizes anything; the hot path is pure
+//! kernel execution.
+//!
+//! [`ProjPolicy`]: crate::sparsity::plan::ProjPolicy
 
 use crate::exec::ThreadPool;
-use crate::kernels;
 use crate::quant;
 use crate::runtime::engine::SparsityAudit;
 use crate::sparsity::mask::validate_nm;
 use crate::sparsity::plan::SparsityPlan;
 use crate::sparsity::spmm::{
-    dense_matmul_parallel, dense_matmul_with_tile, NmCompressedBatch,
+    dense_matmul_packed, dense_matmul_packed_parallel, NmCompressedBatch,
 };
 
 use std::sync::Arc;
 
 use super::model::{LayerWeights, ModelSpec, NativeModel};
+use super::prepared::{PreparedLayer, PreparedModel, PreparedWeight};
 
 /// Execution knobs shared by every projection of one forward pass.
 pub(super) struct ExecOpts<'a> {
@@ -40,8 +50,6 @@ pub(super) struct ExecOpts<'a> {
     pub pool: Option<&'a ThreadPool>,
     /// row-tile height for the batched kernels
     pub block_rows: usize,
-    /// `dout`-tile width for the register-tiled kernels (from the plan)
-    pub dout_tile: usize,
 }
 
 impl<'a> ExecOpts<'a> {
@@ -58,7 +66,6 @@ impl<'a> ExecOpts<'a> {
             validate,
             pool,
             block_rows: block_rows.max(1),
-            dout_tile: plan.dout_tile,
         }
     }
 }
@@ -76,70 +83,74 @@ pub(super) enum ProjKind {
 }
 
 /// One linear projection step: which policy module it resolves against,
-/// its `[din, dout]` weight, and the optional Robust-Norm channel scores.
+/// its bind-time-prepared weight (panel-packed f32 + cached int8), and
+/// the optional Robust-Norm channel scores.
 pub(super) struct Projection<'m> {
     pub module: &'static str,
-    pub w: &'m Arc<Vec<f32>>,
+    pub prep: &'m PreparedWeight,
     pub din: usize,
     pub dout: usize,
     pub scale: Option<&'m [f32]>,
 }
 
 impl LayerWeights {
-    /// The projection step for one slot of this layer.
+    /// The projection step for one slot of this layer, running against
+    /// the layer's prepared weights.
     pub(super) fn projection<'m>(
         &'m self,
         kind: ProjKind,
         sp: &ModelSpec,
+        pl: &'m PreparedLayer,
     ) -> Projection<'m> {
         let (d, qd, kvd, f) =
             (sp.d_model, sp.q_dim(), sp.kv_dim(), sp.d_ff);
+        let prep = pl.get(kind);
         match kind {
             ProjKind::Q => Projection {
                 module: "q_proj",
-                w: &self.wq,
+                prep,
                 din: d,
                 dout: qd,
                 scale: Some(&self.scale_q),
             },
             ProjKind::K => Projection {
                 module: "k_proj",
-                w: &self.wk,
+                prep,
                 din: d,
                 dout: kvd,
                 scale: None,
             },
             ProjKind::V => Projection {
                 module: "v_proj",
-                w: &self.wv,
+                prep,
                 din: d,
                 dout: kvd,
                 scale: None,
             },
             ProjKind::O => Projection {
                 module: "o_proj",
-                w: &self.wo,
+                prep,
                 din: qd,
                 dout: d,
                 scale: None,
             },
             ProjKind::Gate => Projection {
                 module: "gate_proj",
-                w: &self.w_gate,
+                prep,
                 din: d,
                 dout: f,
                 scale: Some(&self.scale_gate),
             },
             ProjKind::Up => Projection {
                 module: "up_proj",
-                w: &self.w_up,
+                prep,
                 din: d,
                 dout: f,
                 scale: None,
             },
             ProjKind::Down => Projection {
                 module: "down_proj",
-                w: &self.w_down,
+                prep,
                 din: f,
                 dout: d,
                 scale: Some(&self.scale_down),
@@ -153,7 +164,9 @@ impl<'m> Projection<'m> {
     /// policy for (`layer`, module). Pruned activations are validated
     /// against the exact-N:M contract and accounted per module. The
     /// activation arrives `Arc`'d so the parallel dense tiles can share
-    /// it with pool workers without copying (zero-copy end-to-end).
+    /// it with pool workers without copying (zero-copy end-to-end); the
+    /// weight side is the bind-time panel-packed preparation — no
+    /// packing or quantization happens here.
     pub(super) fn run(
         &self,
         x: &Arc<Vec<f32>>,
@@ -162,6 +175,16 @@ impl<'m> Projection<'m> {
         opts: &ExecOpts<'_>,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
+        debug_assert_eq!(self.prep.din, self.din, "prepared weight din");
+        debug_assert_eq!(self.prep.dout, self.dout, "prepared weight dout");
+        // the plan's tile table and the pack-time stamp must agree —
+        // the packed data's width is what the kernel executes
+        debug_assert_eq!(
+            self.prep.tile,
+            opts.plan.tiles.tile_for(self.module),
+            "{}: prepared tile != planned tile",
+            self.module
+        );
         let policy = opts.plan.policy(layer, self.module);
         match policy.nm {
             Some((n, m)) if self.din % m == 0 => {
@@ -207,27 +230,17 @@ impl<'m> Projection<'m> {
                     // over the pruned input; the audit still records n/m
                     // sparse FLOPs — the SpMM-hardware cost model (see
                     // SparsityAudit docs)
-                    w8a8_per_token(
+                    self.w8a8_per_token(
                         pruned_dense.as_deref().unwrap(),
                         t,
-                        self.din,
-                        self.w,
-                        self.dout,
-                        opts.dout_tile,
                     )
                 } else {
                     match opts.pool {
-                        Some(pool) => c.matmul_parallel_with_tile(
-                            self.w,
-                            self.dout,
+                        Some(pool) => c.matmul_packed_parallel(
+                            &self.prep.packed,
                             pool,
-                            opts.dout_tile,
                         ),
-                        None => c.matmul_with_tile(
-                            self.w,
-                            self.dout,
-                            opts.dout_tile,
-                        ),
+                        None => c.matmul_packed(&self.prep.packed),
                     }
                 }
             }
@@ -242,62 +255,47 @@ impl<'m> Projection<'m> {
                     2 * (t * self.din * self.dout) as u64,
                 );
                 if opts.quantized {
-                    w8a8_per_token(
-                        x,
-                        t,
-                        self.din,
-                        self.w,
-                        self.dout,
-                        opts.dout_tile,
-                    )
+                    self.w8a8_per_token(x, t)
                 } else {
                     match opts.pool {
-                        Some(pool) => dense_matmul_parallel(
+                        Some(pool) => dense_matmul_packed_parallel(
                             x,
                             t,
                             self.din,
-                            self.w,
-                            self.dout,
+                            &self.prep.packed,
                             pool,
                             opts.block_rows,
-                            opts.dout_tile,
                         ),
-                        None => dense_matmul_with_tile(
+                        None => dense_matmul_packed(
                             x,
                             t,
                             self.din,
-                            self.w,
-                            self.dout,
-                            opts.dout_tile,
+                            &self.prep.packed,
                         ),
                     }
                 }
             }
         }
     }
-}
 
-/// W8A8 path: **per-token** activation scales, per-channel weight
-/// scales, register-tiled int8 kernel. Per-token scaling means a
-/// token's quantized output depends only on its own row — packed and
-/// sequential sq prefills are bitwise identical (pinned by
-/// `tests/kernel_parity.rs`). Weights are quantized per call — at
-/// native-model sizes this is noise next to the matmul itself.
-fn w8a8_per_token(
-    x: &[f32],
-    t: usize,
-    din: usize,
-    w: &[f32],
-    dout: usize,
-    dout_tile: usize,
-) -> Vec<f32> {
-    let (wq, ws) = quant::quantize_weight(w, din, dout);
-    let (xq, xs) = quant::quantize_per_token(x, t, din);
-    let mut out = vec![0.0f32; t * dout];
-    kernels::int8::w8a8_tiled_per_token(
-        &xq, t, din, &wq, dout, dout_tile, &xs, &ws, &mut out,
-    );
-    out
+    /// W8A8 path: **per-token** activation scales, per-channel weight
+    /// scales, panel-packed register-tiled int8 kernel. The weight side
+    /// (`wq`, `w_scales`) is the bind-time cached quantization — a
+    /// quantized binding prepares it before any projection runs, so the
+    /// hot path only quantizes the activation.
+    fn w8a8_per_token(&self, x: &[f32], t: usize) -> Vec<f32> {
+        let q = self.prep.quant().unwrap_or_else(|| {
+            panic!(
+                "{}: quantized run without bind-time weight \
+                 quantization — bind() must prepare sq bindings",
+                self.module
+            )
+        });
+        let (xq, xs) = quant::quantize_per_token(x, t, self.din);
+        quant::w8a8_matmul_packed_per_token(
+            &xq, t, self.din, &q.wq, &xs, &q.scales,
+        )
+    }
 }
 
 pub(super) fn rmsnorm(x: &[f32], t: usize, d: usize, w: &[f32]) -> Vec<f32> {
@@ -384,23 +382,25 @@ pub(super) fn causal_attention_segments(
 impl NativeModel {
     /// Final norm + lm_head logits. The lm_head always runs dense f32
     /// (never quantized, never pruned, never validated) — the same
-    /// special case as the pre-refactor `logits` helper.
+    /// special case as the pre-refactor `logits` helper — against the
+    /// prepared (panel-packed) head weight.
     pub(super) fn logits(
         &self,
         x: &[f32],
         t: usize,
+        prepared: &PreparedModel,
         pool: Option<&ThreadPool>,
         block_rows: usize,
-        dout_tile: usize,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
         let d = self.spec.d_model;
         let h = Arc::new(rmsnorm(x, t, d, &self.final_norm));
-        let dense_plan = SparsityPlan::dense(0).with_dout_tile(dout_tile);
+        let dense_plan =
+            SparsityPlan::dense(0).with_tiles(prepared.tiles.clone());
         let opts = ExecOpts::new(&dense_plan, false, false, pool, block_rows);
         let head = Projection {
             module: "lm_head",
-            w: &self.lm_head,
+            prep: &prepared.lm_head,
             din: d,
             dout: self.spec.vocab,
             scale: None,

@@ -5,18 +5,23 @@
 //! positional encoding — causality alone breaks symmetry at this scale)
 //! as a composable prefill pipeline:
 //!
-//! * `model`   — [`ModelSpec`] geometry + deterministically synthesized
-//!               weights (`Arc`-shared for the tile fan-out)
-//! * `layers`  — the `Projection` step abstraction: policy
-//!               resolution from a [`SparsityPlan`], register-tiled
-//!               dense / block-compressed N:M / per-token W8A8 kernels
-//!               ([`crate::kernels`]), per-module audit
-//! * `prefill` — one forward pass over a token-packed segment batch
-//!               (right-padded `[b, s]` prefill is the equal-segment
-//!               special case)
-//! * `decode`  — the dense decode step over block-paged KV
-//!               ([`crate::runtime::PagedKv`] block tables; the
-//!               contiguous slot cache is the one-block special case)
+//! * `model`    — [`ModelSpec`] geometry + deterministically synthesized
+//!                weights (`Arc`-shared for the tile fan-out)
+//! * `prepared` — bind-time weight preparation: panel packing at the
+//!                per-module planned tile width + cached W8A8
+//!                quantization, keyed per weight `Arc` (no hot path
+//!                packs or quantizes anything)
+//! * `layers`   — the `Projection` step abstraction: policy
+//!                resolution from a [`SparsityPlan`], panel-packed
+//!                register-tiled dense / block-compressed N:M /
+//!                per-token W8A8 kernels ([`crate::kernels`]),
+//!                per-module audit
+//! * `prefill`  — one forward pass over a token-packed segment batch
+//!                (right-padded `[b, s]` prefill is the equal-segment
+//!                special case)
+//! * `decode`   — the dense decode step over block-paged KV
+//!                ([`crate::runtime::PagedKv`] block tables; the
+//!                contiguous slot cache is the one-block special case)
 //!
 //! Per-request N:M configs arrive exactly as they do on the PJRT path:
 //! the artifact name carries the ratio (`...nm2_4`) and the bound aux
@@ -38,6 +43,7 @@ mod decode;
 mod layers;
 mod model;
 mod prefill;
+mod prepared;
 
 pub use model::{ModelSpec, NativeModel, RATIOS};
 
@@ -51,15 +57,16 @@ use anyhow::{anyhow, bail, Result};
 use super::artifact::Manifest;
 use super::engine::{
     DecodeOut, Engine, PackedPrefillOut, PagedDecodeOut, PagedKv,
-    PrefillOut, SparsityAudit,
+    PrefillOut, PrepStats, SparsityAudit,
 };
 use crate::exec::ThreadPool;
-use crate::sparsity::plan::SparsityPlan;
+use crate::sparsity::plan::{SparsityPlan, TileTable};
 use crate::sparsity::policy::Setting;
 use crate::sparsity::spmm::DEFAULT_BLOCK_ROWS;
 use crate::util::json::Json;
 
 use layers::ExecOpts;
+use prepared::{PrepCache, PreparedModel};
 
 /// The native CPU execution engine (see module docs).
 pub struct NativeEngine {
@@ -76,10 +83,20 @@ pub struct NativeEngine {
     pool: Option<Arc<ThreadPool>>,
     /// row-tile height for the batched kernels
     pub block_rows: usize,
-    /// `dout`-tile width for the register-tiled kernels; stamped onto
-    /// each binding's [`SparsityPlan`] at [`Engine::bind`] time (pure
-    /// perf — outputs are bitwise identical for every width)
-    pub dout_tile: usize,
+    /// uniform `dout`-tile override for the register-tiled kernels;
+    /// `None` (the default) plans a per-module [`TileTable`] from each
+    /// model's geometry at [`Engine::bind`] time (pure perf — outputs
+    /// are bitwise identical for every width)
+    pub tile_override: Option<usize>,
+    /// bind-time weight preparation cache: panel-packed f32 + cached
+    /// W8A8 quantization per weight `Arc`
+    prep: PrepCache,
+    /// (model name, tile table) -> the prepared weights bindings built
+    /// under that table execute against. Keyed by table so toggling
+    /// [`NativeEngine::tile_override`] between binds can never desync a
+    /// live binding's plan from the weights it resolves to — each
+    /// binding looks up preparation through its own plan's tiles.
+    prepared: HashMap<(String, TileTable), Arc<PreparedModel>>,
 }
 
 impl NativeEngine {
@@ -147,7 +164,9 @@ impl NativeEngine {
             validate: true,
             pool: None,
             block_rows: DEFAULT_BLOCK_ROWS,
-            dout_tile: crate::kernels::DEFAULT_DOUT_TILE,
+            tile_override: None,
+            prep: PrepCache::default(),
+            prepared: HashMap::new(),
         }
     }
 
@@ -157,11 +176,51 @@ impl NativeEngine {
         self
     }
 
-    /// Builder-style kernel `dout`-tile width (applies to bindings
-    /// created afterwards, and to every decode).
+    /// Builder-style uniform kernel `dout`-tile override (applies to
+    /// bindings created afterwards, and to every decode); without it
+    /// each model gets a per-module [`TileTable`] planned from its
+    /// geometry. Pure perf either way: the parity suite pins that every
+    /// width yields bitwise-identical outputs.
     pub fn with_dout_tile(mut self, dout_tile: usize) -> NativeEngine {
-        self.dout_tile = crate::kernels::clamp_tile(dout_tile);
+        self.tile_override = Some(crate::kernels::clamp_tile(dout_tile));
         self
+    }
+
+    /// The tile table bindings of `spec`'s model are packed with: the
+    /// uniform override when set, otherwise the geometry-planned
+    /// per-module table.
+    fn tile_table(&self, spec: &ModelSpec) -> TileTable {
+        match self.tile_override {
+            Some(t) => TileTable::uniform(t),
+            None => TileTable::plan(&spec.geometry(), spec.vocab),
+        }
+    }
+
+    /// Cumulative weight-preparation accounting (packs, cached
+    /// quantizations, hits, bytes, one-time seconds).
+    pub fn prep_report(&self) -> PrepStats {
+        self.prep.stats()
+    }
+
+    /// The prepared-weight handle a binding of `artifact`'s model
+    /// executes against, resolved by the binding plan's own tile table
+    /// (so every binding sees exactly the preparation its plan was
+    /// built with).
+    fn prepared_for(
+        &self,
+        artifact: &str,
+        tiles: &TileTable,
+    ) -> Result<Arc<PreparedModel>> {
+        let model_name = model_name_of(artifact);
+        self.prepared
+            .get(&(model_name.to_string(), tiles.clone()))
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {artifact}: weights not prepared — \
+                     bind() must run first"
+                )
+            })
     }
 
     /// Zero the accumulated [`SparsityAudit`].
@@ -175,7 +234,7 @@ impl NativeEngine {
     }
 
     fn model_for_artifact(&self, artifact: &str) -> Result<&NativeModel> {
-        let model_name = artifact.split('.').next().unwrap_or(artifact);
+        let model_name = model_name_of(artifact);
         self.models.get(model_name).ok_or_else(|| {
             anyhow!("artifact {artifact}: model '{model_name}' not loaded")
         })
@@ -219,23 +278,24 @@ impl NativeEngine {
         lens: &[usize],
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize, f64)> {
         let plan = Arc::clone(self.binding_plan(artifact, binding)?);
+        let prepared = self.prepared_for(artifact, &plan.tiles)?;
         let validate = self.validate;
         let block_rows = self.block_rows;
         let pool = self.pool.clone();
         let mut audit = self.audit;
         let model = self.model_for_artifact(artifact)?;
-        let opts = ExecOpts {
-            plan: &plan,
+        let opts = ExecOpts::new(
+            &plan,
             quantized,
             validate,
-            pool: pool.as_deref(),
+            pool.as_deref(),
             block_rows,
-            dout_tile: plan.dout_tile,
-        };
+        );
         let vocab = model.spec.vocab;
         let t0 = Instant::now();
-        let (logits, k_cache, v_cache) =
-            model.prefill_segments(tokens, lens, &opts, &mut audit);
+        let (logits, k_cache, v_cache) = model.prefill_segments(
+            tokens, lens, &prepared, &opts, &mut audit,
+        );
         let exec_secs = t0.elapsed().as_secs_f64();
         self.audit = audit;
         Ok((logits, k_cache, v_cache, vocab, exec_secs))
@@ -244,6 +304,12 @@ impl NativeEngine {
 
 fn binding_key(artifact: &str, binding: &str) -> String {
     format!("{artifact}::{binding}")
+}
+
+/// The model that owns an artifact: the leading dot-separated segment
+/// of its name (`tiny-lm-a.prefill64.nm2_4` → `tiny-lm-a`).
+fn model_name_of(artifact: &str) -> &str {
+    artifact.split('.').next().unwrap_or(artifact)
 }
 
 /// Resolve the setting encoded in a bound file list: the aux file name
@@ -282,12 +348,26 @@ impl Engine for NativeEngine {
     fn bind(&mut self, artifact: &str, files: &[&str]) -> Result<String> {
         let meta = self.manifest.artifact(artifact)?;
         let nm = meta.nm;
+        let want_quant = meta.variant.starts_with("sq");
         let setting = setting_from_files(files, nm.is_some())?;
-        let model = self.model_for_artifact(artifact)?;
+        // field-precise model lookup: `prep` below needs `&mut self`
+        // alongside this `&NativeModel`
+        let model_name = model_name_of(artifact).to_string();
+        let model = self.models.get(&model_name).ok_or_else(|| {
+            anyhow!("artifact {artifact}: model '{model_name}' not loaded")
+        })?;
+        let tiles = self.tile_table(&model.spec);
         let key = files.join("+");
         let map_key = binding_key(artifact, &key);
-        // the plan is built once per binding and reused by every prefill
-        if !self.bindings.contains_key(&map_key) {
+        // the plan is built once per binding and reused by every
+        // prefill; rebuilt if the tile table changed since (e.g. the
+        // uniform override was toggled between binds), so the plan's
+        // table always matches what the weights are packed with
+        let plan_stale = self
+            .bindings
+            .get(&map_key)
+            .is_some_and(|p| p.tiles != tiles);
+        if plan_stale || !self.bindings.contains_key(&map_key) {
             let plan = Arc::new(
                 SparsityPlan::build(
                     model.spec.n_layers,
@@ -295,10 +375,16 @@ impl Engine for NativeEngine {
                     nm,
                     setting,
                 )
-                .with_dout_tile(self.dout_tile),
+                .with_tiles(tiles.clone()),
             );
             self.bindings.insert(map_key, plan);
         }
+        // bind-time weight preparation: panel-pack every projection at
+        // its planned tile width, and (for sq bindings) quantize + pack
+        // the int8 side — all cached per weight Arc, so a re-bind is
+        // pure cache hits and no hot path ever prepares anything
+        let pm = self.prep.prepare_model(model, &tiles, want_quant);
+        self.prepared.insert((model_name, tiles), Arc::new(pm));
         Ok(key)
     }
 
@@ -403,7 +489,7 @@ impl Engine for NativeEngine {
         if meta.kind != "decode" {
             bail!("artifact {artifact} is not a decode artifact");
         }
-        self.binding_plan(artifact, binding)?;
+        let tiles = self.binding_plan(artifact, binding)?.tiles.clone();
         let b = meta.batch;
         let cache = meta.cache;
         if b == 0 || cache == 0 {
@@ -440,13 +526,23 @@ impl Engine for NativeEngine {
         };
         let mut audit = self.audit;
         let block_rows = self.block_rows;
-        let dout_tile = self.dout_tile;
+        let prepared = self.prepared_for(artifact, &tiles)?;
+        // steady-state contract: a decode step performs zero weight
+        // preparation — everything was packed/quantized at bind
+        #[cfg(debug_assertions)]
+        let prep_calls_before = self.prep.stats().prep_calls();
         let t0 = Instant::now();
         let logits = model.decode_paged(
-            token, pos, &mut view, kv_len, quantized, block_rows,
-            dout_tile, &mut audit,
+            token, pos, &mut view, kv_len, &prepared, quantized,
+            block_rows, &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            self.prep.stats().prep_calls(),
+            prep_calls_before,
+            "decode must not prepare weights"
+        );
         self.audit = audit;
         Ok(DecodeOut {
             logits,
@@ -471,7 +567,7 @@ impl Engine for NativeEngine {
         if meta.kind != "decode" {
             bail!("artifact {artifact} is not a decode artifact");
         }
-        self.binding_plan(artifact, binding)?;
+        let tiles = self.binding_plan(artifact, binding)?.tiles.clone();
         let b = meta.batch;
         if token.len() != b || pos.len() != b || kv_len.len() != b {
             bail!("decode {artifact}: batch inputs must have len {b}");
@@ -524,13 +620,23 @@ impl Engine for NativeEngine {
         let vocab = model.spec.vocab;
         let mut audit = self.audit;
         let block_rows = self.block_rows;
-        let dout_tile = self.dout_tile;
+        let prepared = self.prepared_for(artifact, &tiles)?;
+        // steady-state contract: a decode step performs zero weight
+        // preparation — everything was packed/quantized at bind
+        #[cfg(debug_assertions)]
+        let prep_calls_before = self.prep.stats().prep_calls();
         let t0 = Instant::now();
         let logits = model.decode_paged(
-            token, pos, kv, kv_len, quantized, block_rows, dout_tile,
+            token, pos, kv, kv_len, &prepared, quantized, block_rows,
             &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            self.prep.stats().prep_calls(),
+            prep_calls_before,
+            "decode must not prepare weights"
+        );
         self.audit = audit;
         Ok(PagedDecodeOut {
             logits,
@@ -551,6 +657,10 @@ impl Engine for NativeEngine {
 
     fn audit(&self) -> Option<SparsityAudit> {
         Some(self.audit)
+    }
+
+    fn prep_stats(&self) -> Option<PrepStats> {
+        Some(self.prep.stats())
     }
 }
 
@@ -594,6 +704,27 @@ mod tests {
         assert!(!plan.policy(1, "q_proj").is_sparse());
         assert!(plan.policy(1, "down_proj").is_sparse());
         assert!(!plan.policy(0, "o_proj").is_sparse());
+    }
+
+    #[test]
+    fn bind_prepares_weights_once_and_rebind_hits_cache() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let art = "tiny-lm-a.prefill16.sq";
+        e.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+        let s1 = e.prep_report();
+        // 7 weights x 2 layers + lm_head packed; the 14 layer weights
+        // quantized (lm_head logits always run f32)
+        assert_eq!(s1.weights_packed, 15);
+        assert_eq!(s1.weights_quantized, 14);
+        assert!(s1.bytes_packed > 0);
+        // re-bind (and a dense bind of the same model): zero new
+        // preparations — pure cache hits
+        e.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+        e.bind("tiny-lm-a.prefill16.dense", &["tiny-lm-a.atw"])
+            .unwrap();
+        let s2 = e.prep_report();
+        assert_eq!(s2.prep_calls(), s1.prep_calls());
+        assert!(s2.cache_hits > s1.cache_hits);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use super::super::artifact::{ArtifactMeta, Manifest, ModelInfo};
+use crate::sparsity::coverage::Geometry;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -152,6 +153,21 @@ impl ModelSpec {
     /// Longest served prefill sequence length.
     pub fn max_prefill_seq(&self) -> usize {
         self.prefill_seqs.iter().copied().max().unwrap_or(64)
+    }
+
+    /// The spec as a [`Geometry`] (what per-module tile planning and
+    /// coverage accounting consume).
+    pub fn geometry(&self) -> Geometry {
+        Geometry {
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            q_dim: self.q_dim(),
+            kv_dim: self.kv_dim(),
+            d_ff: self.d_ff,
+            n_experts: 0,
+            top_k: 0,
+            d_ff_expert: 0,
+        }
     }
 
     /// Synthesize the manifest entries (artifacts + model info +

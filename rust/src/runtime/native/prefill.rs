@@ -18,17 +18,21 @@ use super::layers::{
     causal_attention_segments, rmsnorm, silu, ExecOpts, ProjKind,
 };
 use super::model::NativeModel;
+use super::prepared::PreparedModel;
 
 impl NativeModel {
     /// Forward pass over packed segments: `tokens` is the concatenation
     /// of every request's prompt (`lens[i]` tokens each); request `i`
     /// owns rows `sum(lens[..i]) ..+ lens[i]` of every activation,
     /// attends only within its own segment, and its K/V land at the same
-    /// rows of the `[L, total, H_kv*Dh]` caches.
+    /// rows of the `[L, total, H_kv*Dh]` caches. Every projection runs
+    /// against the bind-time prepared (panel-packed, quant-cached)
+    /// weights in `prepared`.
     pub(super) fn prefill_segments(
         &self,
         tokens: &[i32],
         lens: &[usize],
+        prepared: &PreparedModel,
         opts: &ExecOpts<'_>,
         audit: &mut SparsityAudit,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -45,13 +49,24 @@ impl NativeModel {
         let mut x = self.embed_tokens(tokens);
         let mut k_cache = vec![0.0f32; sp.n_layers * t * kvd];
         let mut v_cache = vec![0.0f32; sp.n_layers * t * kvd];
-        for (l, lw) in self.layers.iter().enumerate() {
+        for (l, (lw, pl)) in self
+            .layers
+            .iter()
+            .zip(prepared.layers.iter())
+            .enumerate()
+        {
             // activations are Arc'd once per step so the parallel dense
             // tiles share them with pool workers without copying
             let h = Arc::new(rmsnorm(&x, t, d, &lw.attn_norm));
-            let q = lw.projection(ProjKind::Q, sp).run(&h, t, l, opts, audit);
-            let k = lw.projection(ProjKind::K, sp).run(&h, t, l, opts, audit);
-            let v = lw.projection(ProjKind::V, sp).run(&h, t, l, opts, audit);
+            let q = lw
+                .projection(ProjKind::Q, sp, pl)
+                .run(&h, t, l, opts, audit);
+            let k = lw
+                .projection(ProjKind::K, sp, pl)
+                .run(&h, t, l, opts, audit);
+            let v = lw
+                .projection(ProjKind::V, sp, pl)
+                .run(&h, t, l, opts, audit);
             // stash this layer's K/V in [L, total, H_kv, D_h]
             let base = l * t * kvd;
             k_cache[base..base + t * kvd].copy_from_slice(&k);
@@ -59,30 +74,34 @@ impl NativeModel {
             let attn = Arc::new(causal_attention_segments(
                 &q, &k, &v, &segs, sp,
             ));
-            let o =
-                lw.projection(ProjKind::O, sp).run(&attn, t, l, opts, audit);
+            let o = lw
+                .projection(ProjKind::O, sp, pl)
+                .run(&attn, t, l, opts, audit);
             for (xi, oi) in x.iter_mut().zip(o.iter()) {
                 *xi += oi;
             }
             let h2 = Arc::new(rmsnorm(&x, t, d, &lw.mlp_norm));
-            let gate =
-                lw.projection(ProjKind::Gate, sp).run(&h2, t, l, opts, audit);
-            let up =
-                lw.projection(ProjKind::Up, sp).run(&h2, t, l, opts, audit);
+            let gate = lw
+                .projection(ProjKind::Gate, sp, pl)
+                .run(&h2, t, l, opts, audit);
+            let up = lw
+                .projection(ProjKind::Up, sp, pl)
+                .run(&h2, t, l, opts, audit);
             let act: Arc<Vec<f32>> = Arc::new(
                 gate.iter()
                     .zip(up.iter())
                     .map(|(&g, &u)| silu(g) * u)
                     .collect(),
             );
-            let down =
-                lw.projection(ProjKind::Down, sp).run(&act, t, l, opts, audit);
+            let down = lw
+                .projection(ProjKind::Down, sp, pl)
+                .run(&act, t, l, opts, audit);
             for (xi, di) in x.iter_mut().zip(down.iter()) {
                 *xi += di;
             }
         }
         let logits = self.logits(
-            &x, t, opts.pool, opts.block_rows, opts.dout_tile, audit,
+            &x, t, prepared, opts.pool, opts.block_rows, audit,
         );
         (logits, k_cache, v_cache)
     }

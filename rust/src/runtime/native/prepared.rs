@@ -1,0 +1,328 @@
+//! Bind-time weight preparation: panel packing + cached W8A8
+//! quantization, keyed per weight `Arc`.
+//!
+//! Every projection weight the hot path touches is prepared **once**,
+//! at [`Engine::bind`] time, into a [`PreparedWeight`]:
+//!
+//! * the f32 matrix is packed into tile panels
+//!   ([`crate::kernels::pack::PackedPanels`]) at the width the
+//!   per-module [`TileTable`] plans for its output dimension, so the
+//!   inner kernel loops stream weights unit-stride instead of striding
+//!   by `dout`;
+//! * for W8A8 (`sq*`) bindings the weight is additionally quantized
+//!   (`quant::quantize_weight`, **the only call site under
+//!   `runtime/native/`**) and its int8 bytes packed into the same
+//!   panel layout — cached in a `OnceLock`, so quantization happens at
+//!   most once per weight `Arc` no matter how many bindings, prefills
+//!   or decode steps share it.
+//!
+//! The [`PrepCache`] keys preparations by `(weight Arc pointer, tile
+//! width)`: re-binds, the decode path, and the lm_head all resolve to
+//! the same `Arc<PreparedWeight>` (a cache *hit*), so steady-state
+//! serving does **zero** weight preparation — a contract the engine
+//! pins with a debug assertion around every decode step, and reports
+//! through [`PrepStats`] (`weight_prep_ms` / hit / miss counters in
+//! `EngineMetrics`). Keying by pointer is sound here because the
+//! engine's models (and thus their weight `Arc`s) live as long as the
+//! engine itself.
+//!
+//! [`Engine::bind`]: crate::runtime::Engine::bind
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::kernels::pack::PackedPanels;
+use crate::quant;
+use crate::runtime::engine::PrepStats;
+use crate::sparsity::plan::TileTable;
+
+use super::layers::ProjKind;
+use super::model::NativeModel;
+
+/// A quantized, panel-packed weight: the cached output of
+/// `quantize_weight` + packing (per-column scales ride alongside).
+pub(super) struct QuantPanels {
+    /// int8 weight bytes in tile-panel layout
+    pub wq: PackedPanels<i8>,
+    /// per-output-column dequant scales
+    pub scales: Vec<f32>,
+}
+
+/// One projection weight, prepared for the hot path: panel-packed f32
+/// (always) and panel-packed int8 + scales (once a quantized binding
+/// asks for it). Shared by every binding/decode via `Arc`.
+pub(super) struct PreparedWeight {
+    /// contraction width
+    pub din: usize,
+    /// output columns
+    pub dout: usize,
+    /// panel / `dout`-tile width stamped at pack time (from the
+    /// binding's [`TileTable`])
+    pub tile: usize,
+    /// f32 panels (`Arc` so pool workers share them zero-copy)
+    pub packed: Arc<PackedPanels<f32>>,
+    quant: OnceLock<QuantPanels>,
+}
+
+impl PreparedWeight {
+    /// The cached quantized panels, if a quantized binding prepared
+    /// them. Hot paths `expect` this: bind() prepares quantization for
+    /// every `sq*` artifact before any projection runs.
+    pub fn quant(&self) -> Option<&QuantPanels> {
+        self.quant.get()
+    }
+}
+
+/// One transformer layer's prepared projections.
+pub(super) struct PreparedLayer {
+    q: Arc<PreparedWeight>,
+    k: Arc<PreparedWeight>,
+    v: Arc<PreparedWeight>,
+    o: Arc<PreparedWeight>,
+    gate: Arc<PreparedWeight>,
+    up: Arc<PreparedWeight>,
+    down: Arc<PreparedWeight>,
+}
+
+impl PreparedLayer {
+    /// The prepared weight for one projection slot.
+    pub fn get(&self, kind: ProjKind) -> &PreparedWeight {
+        match kind {
+            ProjKind::Q => &self.q,
+            ProjKind::K => &self.k,
+            ProjKind::V => &self.v,
+            ProjKind::O => &self.o,
+            ProjKind::Gate => &self.gate,
+            ProjKind::Up => &self.up,
+            ProjKind::Down => &self.down,
+        }
+    }
+}
+
+/// A whole model's prepared weights under one tile table — what
+/// prefill, decode and logits execute against.
+pub(super) struct PreparedModel {
+    /// per transformer layer
+    pub layers: Vec<PreparedLayer>,
+    /// the logits head (never quantized — logits always run f32)
+    pub lm_head: Arc<PreparedWeight>,
+    /// the tile table the weights were packed with
+    pub tiles: TileTable,
+}
+
+/// The engine's preparation cache: `(weight Arc pointer, tile width)`
+/// → prepared weight, plus cumulative [`PrepStats`].
+#[derive(Default)]
+pub(super) struct PrepCache {
+    weights: HashMap<(usize, usize), Arc<PreparedWeight>>,
+    /// row-major quantization `(wq bytes, per-column scales)` per
+    /// weight `Arc` — tile-independent, so preparing the same weight
+    /// at another tile width re-packs the int8 panels but never
+    /// re-quantizes
+    quants: HashMap<usize, Arc<(Vec<i8>, Vec<f32>)>>,
+    stats: PrepStats,
+}
+
+impl PrepCache {
+    /// Snapshot of the cumulative preparation accounting.
+    pub fn stats(&self) -> PrepStats {
+        self.stats
+    }
+
+    /// Get-or-pack one weight at `tile` width. A hit returns the
+    /// shared handle; a miss packs (counted + timed).
+    fn prepare(
+        &mut self,
+        w: &Arc<Vec<f32>>,
+        din: usize,
+        dout: usize,
+        tile: usize,
+    ) -> Arc<PreparedWeight> {
+        let key = (Arc::as_ptr(w) as usize, tile);
+        if let Some(p) = self.weights.get(&key) {
+            self.stats.cache_hits += 1;
+            return Arc::clone(p);
+        }
+        let t0 = Instant::now();
+        let packed = Arc::new(PackedPanels::pack(w, din, dout, tile));
+        self.stats.prep_secs += t0.elapsed().as_secs_f64();
+        self.stats.weights_packed += 1;
+        self.stats.bytes_packed += packed.bytes() as u64;
+        let p = Arc::new(PreparedWeight {
+            din,
+            dout,
+            tile,
+            packed,
+            quant: OnceLock::new(),
+        });
+        self.weights.insert(key, Arc::clone(&p));
+        p
+    }
+
+    /// Quantize + pack the int8 side of `p` if not already cached.
+    /// Quantization itself runs **at most once per weight `Arc`** (the
+    /// row-major bytes/scales are tile-independent and cached by
+    /// pointer); a different tile width only re-packs those bytes into
+    /// new panels.
+    fn ensure_quant(&mut self, key_ptr: usize, p: &PreparedWeight, w: &[f32]) {
+        if p.quant.get().is_some() {
+            self.stats.cache_hits += 1;
+            return;
+        }
+        let rm = match self.quants.get(&key_ptr) {
+            Some(q) => {
+                self.stats.cache_hits += 1;
+                Arc::clone(q)
+            }
+            None => {
+                let t0 = Instant::now();
+                let (wq, scales) =
+                    quant::quantize_weight(w, p.din, p.dout);
+                self.stats.prep_secs += t0.elapsed().as_secs_f64();
+                self.stats.weights_quantized += 1;
+                let q = Arc::new((wq, scales));
+                self.quants.insert(key_ptr, Arc::clone(&q));
+                q
+            }
+        };
+        let t0 = Instant::now();
+        let wq = PackedPanels::pack(&rm.0, p.din, p.dout, p.tile);
+        self.stats.prep_secs += t0.elapsed().as_secs_f64();
+        self.stats.bytes_packed += wq.bytes() as u64;
+        // a racing fill is impossible (the cache is behind &mut), but
+        // set() is the non-panicking idempotent form regardless
+        let _ = p.quant.set(QuantPanels { wq, scales: rm.1.clone() });
+    }
+
+    /// Prepare every projection of `model` under `tiles` (and, when
+    /// `want_quant`, the cached W8A8 side of each layer weight — the
+    /// lm_head stays f32-only: logits are never quantized). Cheap when
+    /// already prepared: all lookups hit.
+    pub fn prepare_model(
+        &mut self,
+        model: &NativeModel,
+        tiles: &TileTable,
+        want_quant: bool,
+    ) -> PreparedModel {
+        let sp = &model.spec;
+        let (d, qd, kvd, f) =
+            (sp.d_model, sp.q_dim(), sp.kv_dim(), sp.d_ff);
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for lw in &model.layers {
+            let slots: [(&Arc<Vec<f32>>, &str, usize, usize); 7] = [
+                (&lw.wq, "q_proj", d, qd),
+                (&lw.wk, "k_proj", d, kvd),
+                (&lw.wv, "v_proj", d, kvd),
+                (&lw.wo, "o_proj", qd, d),
+                (&lw.w_gate, "gate_proj", d, f),
+                (&lw.w_up, "up_proj", d, f),
+                (&lw.w_down, "down_proj", f, d),
+            ];
+            let mut prepared: Vec<Arc<PreparedWeight>> =
+                Vec::with_capacity(slots.len());
+            for (w, module, din, dout) in slots {
+                let p =
+                    self.prepare(w, din, dout, tiles.tile_for(module));
+                if want_quant {
+                    let ptr = Arc::as_ptr(w) as usize;
+                    self.ensure_quant(ptr, &p, w);
+                }
+                prepared.push(p);
+            }
+            let mut it = prepared.into_iter();
+            layers.push(PreparedLayer {
+                q: it.next().unwrap(),
+                k: it.next().unwrap(),
+                v: it.next().unwrap(),
+                o: it.next().unwrap(),
+                gate: it.next().unwrap(),
+                up: it.next().unwrap(),
+                down: it.next().unwrap(),
+            });
+        }
+        let lm_head =
+            self.prepare(&model.lm_head, d, sp.vocab, tiles.lm_head);
+        PreparedModel {
+            layers,
+            lm_head,
+            tiles: tiles.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::ModelSpec;
+    use super::*;
+
+    #[test]
+    fn prepare_is_cached_per_arc_and_tile() {
+        let model = NativeModel::build(ModelSpec::tiny("prep-test"));
+        let tiles =
+            TileTable::plan(&model.spec.geometry(), model.spec.vocab);
+        let mut cache = PrepCache::default();
+        let pm = cache.prepare_model(&model, &tiles, false);
+        let s1 = cache.stats();
+        // 7 weights per layer + lm_head, all misses, none quantized
+        let expect = (7 * model.spec.n_layers + 1) as u64;
+        assert_eq!(s1.weights_packed, expect);
+        assert_eq!(s1.weights_quantized, 0);
+        assert_eq!(s1.cache_hits, 0);
+        assert!(s1.bytes_packed > 0);
+        // tile stamps follow the table
+        assert_eq!(
+            pm.layers[0].get(ProjKind::K).tile,
+            tiles.tile_for("k_proj")
+        );
+        assert_eq!(pm.lm_head.tile, tiles.lm_head);
+        // re-prepare: pure hits, same handles
+        let pm2 = cache.prepare_model(&model, &tiles, false);
+        let s2 = cache.stats();
+        assert_eq!(s2.weights_packed, expect);
+        assert_eq!(s2.cache_hits, expect);
+        assert!(Arc::ptr_eq(&pm.lm_head, &pm2.lm_head));
+        // quantized re-prepare: quantizes the 7*L layer weights once,
+        // never the lm_head; a further pass is all hits again
+        let pm3 = cache.prepare_model(&model, &tiles, true);
+        let s3 = cache.stats();
+        assert_eq!(
+            s3.weights_quantized,
+            (7 * model.spec.n_layers) as u64
+        );
+        assert!(pm3.layers[0].get(ProjKind::Q).quant().is_some());
+        assert!(pm3.lm_head.quant().is_none());
+        let calls_before = cache.stats().prep_calls();
+        cache.prepare_model(&model, &tiles, true);
+        assert_eq!(cache.stats().prep_calls(), calls_before);
+        // a different tile table re-packs (f32 + int8 panels) but
+        // NEVER re-quantizes: the row-major bytes are per-Arc
+        let uni = TileTable::uniform(4);
+        let pm4 = cache.prepare_model(&model, &uni, true);
+        let s4 = cache.stats();
+        assert_eq!(
+            s4.weights_quantized,
+            (7 * model.spec.n_layers) as u64,
+            "re-tiling must not re-quantize"
+        );
+        assert_eq!(s4.weights_packed, 2 * expect);
+        assert!(pm4.layers[0].get(ProjKind::Q).quant().is_some());
+        assert_eq!(pm4.layers[0].get(ProjKind::Q).tile, 4);
+    }
+
+    #[test]
+    fn packed_panels_roundtrip_through_prepared_weight() {
+        let model = NativeModel::build(ModelSpec::tiny("prep-rt"));
+        let mut cache = PrepCache::default();
+        let lw = &model.layers[0];
+        let (d, f) = (model.spec.d_model, model.spec.d_ff);
+        let p = cache.prepare(&lw.w_gate, d, f, 16);
+        assert_eq!(p.packed.unpack(), *lw.w_gate);
+        let ptr = Arc::as_ptr(&lw.w_gate) as usize;
+        cache.ensure_quant(ptr, &p, &lw.w_gate);
+        let q = p.quant().unwrap();
+        let (wq, ws) = quant::quantize_weight(&lw.w_gate, d, f);
+        assert_eq!(q.wq.unpack(), wq);
+        assert_eq!(q.scales, ws);
+    }
+}

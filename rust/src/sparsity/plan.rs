@@ -13,12 +13,110 @@
 //! [`Geometry`] (the paper's ">55% of linear computation sparsified"
 //! headline), so serving, audits and the repro tables all report from the
 //! same source of truth.
+//!
+//! Since the bind-time weight-preparation layer, the plan additionally
+//! carries a per-module **tile table** ([`TileTable`]): the `dout`-tile
+//! width each projection's kernels run at, planned from the model
+//! geometry (narrow panels for `kv_dim`-sized outputs, wide for `d_ff`
+//! and the vocab head) and stamped into each packed weight at
+//! preparation time. Tile width is a pure performance knob — outputs
+//! are bitwise identical for every width ([`crate::kernels`]).
 
 use std::collections::BTreeMap;
 
 use super::coverage::Geometry;
 use super::policy::{self, Setting, MODULES};
 use crate::kernels::{clamp_tile, DEFAULT_DOUT_TILE};
+
+/// The planned `dout`-tile (= weight panel) width for a projection with
+/// `dout` output columns: always one of the const-specialized kernel
+/// widths (4/8/16/32), chosen so narrow projections (`kv_dim`-sized)
+/// still split into several panels while wide ones (`d_ff`, vocab) get
+/// the widest register tile. The exact cutoffs are a heuristic; the
+/// parity suite pins that any choice yields identical bits.
+pub fn planned_tile(dout: usize) -> usize {
+    match dout {
+        0..=7 => 4,
+        8..=31 => 8,
+        32..=127 => 16,
+        _ => 32,
+    }
+}
+
+/// Per-module `dout`-tile widths: one entry per policy module
+/// ([`policy::MODULES`]) plus the lm_head, with a fallback for modules
+/// the table does not know. Planned from [`Geometry`] via
+/// [`TileTable::plan`], or uniform via [`TileTable::uniform`] (the
+/// engine-global override). Equality/hash are derived so re-binds can
+/// detect an unchanged table and the engine can key prepared weights
+/// by it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TileTable {
+    widths: [usize; MODULES.len()],
+    /// the lm_head / logits projection width
+    pub lm_head: usize,
+    /// width for modules the table does not cover
+    pub fallback: usize,
+}
+
+impl TileTable {
+    /// Every module at the same (clamped) width — the engine-global
+    /// `dout_tile` override, and the pre-planning default.
+    pub fn uniform(w: usize) -> TileTable {
+        let w = clamp_tile(w);
+        TileTable {
+            widths: [w; MODULES.len()],
+            lm_head: w,
+            fallback: w,
+        }
+    }
+
+    /// Plan per-module widths from the geometry: each module's width is
+    /// [`planned_tile`] of its output dimension (`vocab` sizes the
+    /// lm_head panel).
+    pub fn plan(g: &Geometry, vocab: usize) -> TileTable {
+        let dout_of = |name: &str| match name {
+            "q_proj" => g.q_dim,
+            "k_proj" | "v_proj" => g.kv_dim,
+            "o_proj" | "down_proj" => g.d_model,
+            "gate_proj" | "up_proj" => {
+                if g.is_moe() {
+                    g.d_ff_expert
+                } else {
+                    g.d_ff
+                }
+            }
+            _ => g.d_model,
+        };
+        let mut widths = [DEFAULT_DOUT_TILE; MODULES.len()];
+        for (mi, name) in MODULES.iter().enumerate() {
+            widths[mi] = planned_tile(dout_of(name));
+        }
+        TileTable {
+            widths,
+            lm_head: planned_tile(vocab),
+            fallback: DEFAULT_DOUT_TILE,
+        }
+    }
+
+    /// The planned width for `module` ("q_proj", ..., "lm_head");
+    /// unknown modules get the fallback width.
+    pub fn tile_for(&self, module: &str) -> usize {
+        if module == "lm_head" {
+            return self.lm_head;
+        }
+        match policy::module_index(module) {
+            Some(mi) => self.widths[mi],
+            None => self.fallback,
+        }
+    }
+}
+
+impl Default for TileTable {
+    fn default() -> TileTable {
+        TileTable::uniform(DEFAULT_DOUT_TILE)
+    }
+}
 
 /// What one projection in one layer does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,11 +145,13 @@ pub struct SparsityPlan {
     pub setting: Setting,
     /// the plan's N:M ratio (`None` = dense plan)
     pub nm: Option<(usize, usize)>,
-    /// `dout`-tile width every projection kernel of this plan runs at
-    /// (a pure performance knob — outputs are bitwise identical for
-    /// every width; see [`crate::kernels`]). Defaults to
-    /// [`crate::kernels::DEFAULT_DOUT_TILE`].
-    pub dout_tile: usize,
+    /// per-module tile table the binding's weights were packed with —
+    /// stamped at bind time ([`TileTable::plan`] from the geometry, or
+    /// uniform under the engine-global override) and threaded through
+    /// `ExecOpts` into prefill, decode and logits. A pure performance
+    /// knob: outputs are bitwise identical for every width
+    /// ([`crate::kernels`]).
+    pub tiles: TileTable,
     /// `cells[layer][module_index]` over [`policy::MODULES`].
     cells: Vec<[ProjPolicy; MODULES.len()]>,
 }
@@ -91,14 +191,22 @@ impl SparsityPlan {
                 }
             }
         }
-        SparsityPlan { setting, nm, dout_tile: DEFAULT_DOUT_TILE, cells }
+        SparsityPlan { setting, nm, tiles: TileTable::default(), cells }
     }
 
-    /// Set the kernel `dout`-tile width (clamped to the supported
-    /// range). Pure perf: the parity suite pins that every width yields
-    /// bitwise-identical outputs.
+    /// Set a uniform kernel `dout`-tile width (clamped to the supported
+    /// range) — collapses the tile table to that width. Pure perf: the
+    /// parity suite pins that every width yields bitwise-identical
+    /// outputs.
     pub fn with_dout_tile(mut self, dout_tile: usize) -> SparsityPlan {
-        self.dout_tile = clamp_tile(dout_tile);
+        self.tiles = TileTable::uniform(dout_tile);
+        self
+    }
+
+    /// Stamp the per-module tile table the binding's weights are packed
+    /// with (see [`TileTable::plan`]).
+    pub fn with_tiles(mut self, tiles: TileTable) -> SparsityPlan {
+        self.tiles = tiles;
         self
     }
 
@@ -219,13 +327,62 @@ mod tests {
     #[test]
     fn dout_tile_knob_defaults_and_clamps() {
         let p = SparsityPlan::dense(2);
-        assert_eq!(p.dout_tile, DEFAULT_DOUT_TILE);
-        assert_eq!(p.clone().with_dout_tile(0).dout_tile, 1);
-        assert_eq!(p.clone().with_dout_tile(16).dout_tile, 16);
+        assert_eq!(p.tiles, TileTable::uniform(DEFAULT_DOUT_TILE));
+        let tile = |p: &SparsityPlan| p.tiles.tile_for("q_proj");
+        assert_eq!(tile(&p.clone().with_dout_tile(0)), 1);
+        assert_eq!(tile(&p.clone().with_dout_tile(16)), 16);
         assert_eq!(
-            p.with_dout_tile(usize::MAX).dout_tile,
+            tile(&p.with_dout_tile(usize::MAX)),
             crate::kernels::MAX_DOUT_TILE
         );
+    }
+
+    #[test]
+    fn tile_table_plans_per_module_widths() {
+        let g = Geometry {
+            d_model: 32,
+            n_layers: 2,
+            q_dim: 32,
+            kv_dim: 16,
+            d_ff: 256,
+            n_experts: 0,
+            top_k: 0,
+            d_ff_expert: 0,
+        };
+        let t = TileTable::plan(&g, 384);
+        // kv_dim-sized outputs get narrow panels, d_ff/vocab wide ones
+        assert_eq!(t.tile_for("k_proj"), 8);
+        assert_eq!(t.tile_for("v_proj"), 8);
+        assert_eq!(t.tile_for("q_proj"), 16);
+        assert_eq!(t.tile_for("o_proj"), 16);
+        assert_eq!(t.tile_for("down_proj"), 16);
+        assert_eq!(t.tile_for("gate_proj"), 32);
+        assert_eq!(t.tile_for("up_proj"), 32);
+        assert_eq!(t.tile_for("lm_head"), 32);
+        assert_eq!(t.tile_for("mystery"), DEFAULT_DOUT_TILE);
+        // uniform override collapses everything, clamped
+        let u = TileTable::uniform(0);
+        assert_eq!(u.tile_for("gate_proj"), 1);
+        assert_eq!(u.tile_for("lm_head"), 1);
+        // with_dout_tile keeps plan.tiles consistent with the knob
+        let p = SparsityPlan::dense(2).with_dout_tile(16);
+        assert_eq!(p.tiles, TileTable::uniform(16));
+        // with_tiles stamps a planned table verbatim
+        let p2 = SparsityPlan::dense(2).with_tiles(t.clone());
+        assert_eq!(p2.tiles, t);
+    }
+
+    #[test]
+    fn planned_tile_uses_specialized_widths_only() {
+        for dout in 1usize..400 {
+            let w = planned_tile(dout);
+            assert!(
+                [4usize, 8, 16, 32].contains(&w),
+                "dout {dout} planned non-specialized width {w}"
+            );
+        }
+        assert_eq!(planned_tile(16), 8);
+        assert_eq!(planned_tile(384), 32);
     }
 
     #[test]

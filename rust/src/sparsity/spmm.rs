@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use super::mask::nm_mask_scored;
 use crate::exec::ThreadPool;
+use crate::kernels::pack::PackedPanels;
 use crate::kernels::{self, DEFAULT_DOUT_TILE};
 
 /// Compressed N:M activation matrix [t, din*n/m] with per-element group
@@ -154,6 +155,24 @@ impl NmCompressed {
         out
     }
 
+    /// [`NmCompressed::matmul`] against a panel-packed weight —
+    /// bitwise identical to the row-major paths (the packing is a pure
+    /// layout transform; see [`crate::kernels::pack`]).
+    pub fn matmul_packed(&self, w: &PackedPanels<f32>) -> Vec<f32> {
+        assert_eq!(w.din, self.din, "packed weight contraction width");
+        let per_row = self.din / self.m * self.n;
+        let mut out = vec![0.0f32; self.t * w.dout];
+        kernels::nm::spmm_nm_tiled_packed(
+            &self.values,
+            &self.index,
+            self.t,
+            per_row,
+            w,
+            &mut out,
+        );
+        out
+    }
+
     /// Dense vs executed FLOPs for a matmul against `dout` columns.
     pub fn stats(&self, dout: usize) -> SpmmStats {
         SpmmStats {
@@ -203,6 +222,29 @@ impl NmBlock {
             w,
             dout,
             dout_tile,
+            &mut out,
+        );
+        out
+    }
+
+    /// Per-row-tile matmul against a panel-packed weight — same
+    /// per-element float-op order, bit-identical to
+    /// [`NmBlock::matmul`].
+    fn matmul_packed(
+        &self,
+        w: &PackedPanels<f32>,
+        din: usize,
+        n: usize,
+        m: usize,
+    ) -> Vec<f32> {
+        let per_row = din / m * n;
+        let mut out = vec![0.0f32; self.rows * w.dout];
+        kernels::nm::spmm_nm_tiled_packed(
+            &self.values,
+            &self.index,
+            self.rows,
+            per_row,
+            w,
             &mut out,
         );
         out
@@ -383,6 +425,47 @@ impl NmCompressedBatch {
         out
     }
 
+    /// Serial tiled SpMM against a panel-packed weight — bitwise
+    /// identical to [`NmCompressedBatch::matmul`] for every panel
+    /// width; the weight panels stream unit-stride.
+    pub fn matmul_packed(&self, w: &PackedPanels<f32>) -> Vec<f32> {
+        assert_eq!(w.din, self.din, "packed weight contraction width");
+        let dout = w.dout;
+        let mut out = vec![0.0f32; self.t * dout];
+        for b in &self.blocks {
+            let tile = b.matmul_packed(w, self.din, self.n, self.m);
+            out[b.row0 * dout..(b.row0 + b.rows) * dout]
+                .copy_from_slice(&tile);
+        }
+        out
+    }
+
+    /// Parallel tiled SpMM against a panel-packed weight: row-tiles
+    /// fanned out over `pool`, the packed weight `Arc`-shared with the
+    /// workers (zero copies). Bit-identical to
+    /// [`NmCompressedBatch::matmul_packed`] for every pool width.
+    pub fn matmul_packed_parallel(
+        &self,
+        w: &Arc<PackedPanels<f32>>,
+        pool: &ThreadPool,
+    ) -> Vec<f32> {
+        assert_eq!(w.din, self.din, "packed weight contraction width");
+        if pool.size() <= 1 || self.blocks.len() <= 1 {
+            return self.matmul_packed(w);
+        }
+        let (din, n, m, dout) = (self.din, self.n, self.m, w.dout);
+        let w = Arc::clone(w);
+        let tiles = pool.map(self.blocks.clone(), move |b| {
+            b.matmul_packed(&w, din, n, m)
+        });
+        let mut out = vec![0.0f32; self.t * dout];
+        for (b, tile) in self.blocks.iter().zip(tiles) {
+            out[b.row0 * dout..(b.row0 + b.rows) * dout]
+                .copy_from_slice(&tile);
+        }
+        out
+    }
+
     /// Dense vs executed FLOPs for a matmul against `dout` columns.
     pub fn stats(&self, dout: usize) -> SpmmStats {
         SpmmStats {
@@ -392,6 +475,63 @@ impl NmCompressedBatch {
                 / self.m as u64,
         }
     }
+}
+
+/// Panel-packed dense matmul: [`dense_matmul`] with the weight in
+/// tile-panel layout — bitwise identical for every panel width.
+pub fn dense_matmul_packed(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * w.dout];
+    kernels::dense::dense_tiled_packed(x, t, din, w, &mut out);
+    out
+}
+
+/// Row-tiled parallel variant of [`dense_matmul_packed`]: rows are
+/// chunked into `block_rows`-high tiles fanned out over `pool`, with
+/// both the activation and the packed weight `Arc`-shared with the
+/// workers (zero copies either way). Bit-identical to the serial
+/// packed kernel for every tiling and pool width.
+pub fn dense_matmul_packed_parallel(
+    x: &Arc<Vec<f32>>,
+    t: usize,
+    din: usize,
+    w: &Arc<PackedPanels<f32>>,
+    pool: &ThreadPool,
+    block_rows: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), t * din);
+    assert_eq!(w.din, din, "packed weight contraction width");
+    let block_rows = block_rows.max(1);
+    if pool.size() <= 1 || t <= block_rows {
+        return dense_matmul_packed(x, t, din, w);
+    }
+    let mut tiles_spec: Vec<(usize, usize)> = Vec::new();
+    let mut row0 = 0;
+    while row0 < t {
+        let rows = block_rows.min(t - row0);
+        tiles_spec.push((row0, rows));
+        row0 += rows;
+    }
+    let xs = Arc::clone(x);
+    let w2 = Arc::clone(w);
+    let tiles = pool.map(tiles_spec, move |(row0, rows)| {
+        dense_matmul_packed(
+            &xs[row0 * din..(row0 + rows) * din],
+            rows,
+            din,
+            &w2,
+        )
+    });
+    // map preserves tile order: assembly is a straight concatenation
+    let mut out = Vec::with_capacity(t * w.dout);
+    for tile in tiles {
+        out.extend_from_slice(&tile);
+    }
+    out
 }
 
 /// Row-tiled parallel variant of [`dense_matmul`]: rows are chunked into
@@ -664,6 +804,61 @@ mod tests {
                     serial,
                     "pool {width} tile {tile}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_paths_match_row_major_bitwise() {
+        // serial + parallel packed SpMM and dense against every panel
+        // width must reproduce the row-major kernels bit for bit
+        let mut rng = Rng::new(11);
+        let (t, din, dout) = (11usize, 32usize, 21usize);
+        let x = rand_mat(&mut rng, t * din);
+        let w = rand_mat(&mut rng, din * dout);
+        let xa = Arc::new(x.clone());
+        let dense_golden = dense_matmul(&x, t, din, &w, dout);
+        for &pw in &[1usize, 8, 16, 64] {
+            let packed = Arc::new(PackedPanels::pack(&w, din, dout, pw));
+            assert_eq!(
+                dense_matmul_packed(&x, t, din, &packed),
+                dense_golden,
+                "dense pw {pw}"
+            );
+            for &width in &[1usize, 4] {
+                let pool = ThreadPool::new(width);
+                assert_eq!(
+                    dense_matmul_packed_parallel(
+                        &xa, t, din, &packed, &pool, 4
+                    ),
+                    dense_golden,
+                    "dense pw {pw} pool {width}"
+                );
+            }
+            for &(n, m) in &[(2usize, 4usize), (4, 8)] {
+                let c = NmCompressed::compress(&x, t, din, &[], n, m);
+                let golden = c.matmul(&w, dout);
+                assert_eq!(
+                    c.matmul_packed(&packed),
+                    golden,
+                    "{n}:{m} pw {pw} per-row"
+                );
+                let batch = NmCompressedBatch::compress(
+                    &x, t, din, &[], n, m, 4,
+                );
+                assert_eq!(
+                    batch.matmul_packed(&packed),
+                    golden,
+                    "{n}:{m} pw {pw} batch"
+                );
+                for &width in &[1usize, 4] {
+                    let pool = ThreadPool::new(width);
+                    assert_eq!(
+                        batch.matmul_packed_parallel(&packed, &pool),
+                        golden,
+                        "{n}:{m} pw {pw} pool {width}"
+                    );
+                }
             }
         }
     }

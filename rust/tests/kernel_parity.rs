@@ -1,23 +1,29 @@
-//! Kernel-parity property suite (ISSUE 4): the register-tiled
-//! SpMM / dense / W8A8 microkernels in `kernels::{nm,dense,int8}` must
+//! Kernel-parity property suite (ISSUE 4 + ISSUE 5): the
+//! register-tiled SpMM / dense / W8A8 microkernels in
+//! `kernels::{nm,dense,int8}` — row-major **and panel-packed** — must
 //! be **bitwise identical** to the retained naive loops in
 //! `kernels::reference` — across every N:M ratio, shapes where `dout`
-//! is not a multiple of the tile, tile widths (specialized and
+//! is not a multiple of the tile, tile/panel widths (specialized and
 //! runtime-width), row-block heights and pool widths — and the
 //! per-token W8A8 activation scales must make packed sq prefill
-//! bitwise equal to the sequential reference.
+//! bitwise equal to the sequential reference. The `packed_*` tests are
+//! the ISSUE 5 gate: the panel layout is a pure layout transform, and
+//! bind-time cached quantization must be bitwise identical to fresh
+//! quantization.
 
 mod common;
 
 use std::sync::Arc;
 
 use amber_pruner::exec::ThreadPool;
+use amber_pruner::kernels::pack::PackedPanels;
 use amber_pruner::kernels::{reference, DEFAULT_DOUT_TILE, MAX_DOUT_TILE};
 use amber_pruner::quant;
 use amber_pruner::runtime::{Engine, ModelSpec, NativeEngine};
 use amber_pruner::sparsity::spmm::{
-    dense_matmul, dense_matmul_parallel, dense_matmul_with_tile,
-    NmCompressed, NmCompressedBatch,
+    dense_matmul, dense_matmul_packed, dense_matmul_packed_parallel,
+    dense_matmul_parallel, dense_matmul_with_tile, NmCompressed,
+    NmCompressedBatch,
 };
 use amber_pruner::util::rng::Rng;
 use common::{prompt, sequential_logits};
@@ -225,6 +231,182 @@ fn per_token_scales_make_sq_packing_bitwise() {
             );
         }
     }
+}
+
+// ------------------------------------------ panel-packed (ISSUE 5)
+
+/// Panel widths under test: the specialized const paths (4/8/16/32),
+/// the runtime-width path (1/3/5/64), and an over-clamp value.
+const PANELS: [usize; 8] = [1, 3, 4, 8, 16, 32, 64, 4096];
+
+#[test]
+fn packed_kernels_bitwise_equal_reference_across_matrix() {
+    // the full ISSUE 5 parity matrix: ratios x ragged douts x panel
+    // widths x block_rows x pools, all three kernel families, against
+    // the retained reference loops — packing is a pure layout transform
+    let mut rng = Rng::new(211);
+    let pools: Vec<ThreadPool> =
+        [1usize, 4].iter().map(|&w| ThreadPool::new(w)).collect();
+    for &(n, m) in &RATIOS {
+        let din = 2 * m * 3; // divisible by every m
+        let per_row = din / m * n;
+        for &dout in &[5usize, 13, 21, 29, 37] {
+            let t = 9usize;
+            let x = rand_mat(&mut rng, t * din);
+            let xa = Arc::new(x.clone());
+            let w = rand_mat(&mut rng, din * dout);
+            let c = NmCompressed::compress(&x, t, din, &[], n, m);
+            let nm_golden = reference::spmm_nm(
+                &c.values, &c.index, t, per_row, &w, dout,
+            );
+            let dense_golden = reference::dense(&x, t, din, &w, dout);
+            let (wq, ws) = quant::quantize_weight(&w, din, dout);
+            let (xq, xs) = quant::quantize_per_token(&x, t, din);
+            let int8_golden = reference::w8a8_per_token(
+                &xq, t, din, &wq, dout, &xs, &ws,
+            );
+            let pt_scale = 0.037f32;
+            let xq_pt = quant::quantize(&x, pt_scale);
+            let int8_pt_golden = reference::w8a8(
+                &xq_pt, t, din, &wq, dout, pt_scale, &ws,
+            );
+            for &pw in &PANELS {
+                let ctx = format!("{n}:{m} dout={dout} panel={pw}");
+                let packed =
+                    Arc::new(PackedPanels::pack(&w, din, dout, pw));
+                // N:M per-row + dense serial
+                assert_eq!(
+                    c.matmul_packed(&packed),
+                    nm_golden,
+                    "{ctx} nm per-row"
+                );
+                assert_eq!(
+                    dense_matmul_packed(&x, t, din, &packed),
+                    dense_golden,
+                    "{ctx} dense serial"
+                );
+                // int8: quantize-once-and-pack, per-token scales
+                let (pq, ps) =
+                    quant::quantize_weight_packed(&w, din, dout, pw);
+                assert_eq!(ps, ws, "{ctx} int8 scales");
+                assert_eq!(
+                    quant::w8a8_matmul_packed_per_token(
+                        &xq, t, din, &pq, &xs, &ps
+                    ),
+                    int8_golden,
+                    "{ctx} int8 per-token"
+                );
+                // int8 per-tensor = per-token with a broadcast scale
+                let bcast = vec![pt_scale; t];
+                assert_eq!(
+                    quant::w8a8_matmul_packed_per_token(
+                        &xq_pt, t, din, &pq, &bcast, &ps
+                    ),
+                    int8_pt_golden,
+                    "{ctx} int8 per-tensor"
+                );
+                // blocked + pooled
+                for &block_rows in &[1usize, 7, 32] {
+                    let batch = NmCompressedBatch::compress(
+                        &x, t, din, &[], n, m, block_rows,
+                    );
+                    assert_eq!(
+                        batch.matmul_packed(&packed),
+                        nm_golden,
+                        "{ctx} block={block_rows} serial"
+                    );
+                    for pool in &pools {
+                        assert_eq!(
+                            batch.matmul_packed_parallel(&packed, pool),
+                            nm_golden,
+                            "{ctx} block={block_rows} pool={}",
+                            pool.size()
+                        );
+                        assert_eq!(
+                            dense_matmul_packed_parallel(
+                                &xa, t, din, &packed, pool, block_rows
+                            ),
+                            dense_golden,
+                            "{ctx} dense block={block_rows} pool={}",
+                            pool.size()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_per_module_tile_table_is_bit_transparent_through_engine() {
+    // the planned per-module table mixes widths on the tiny geometry
+    // (kv_dim 16 -> 8, d_model/q_dim/d_ff -> 16, vocab 384 -> 32); a
+    // full prefill under it must be bitwise identical to every uniform
+    // override — tile width is pure perf, per module or global
+    let mut rng = Rng::new(223);
+    let prompts: Vec<Vec<i32>> =
+        [40usize, 64, 3].iter().map(|&l| prompt(&mut rng, l)).collect();
+    let art = "tiny-lm-a.prefill64.nm2_4";
+    let files = ["tiny-lm-a.atw", "tiny-lm-a.aux_all.atw"];
+    let run = |tile: Option<usize>| {
+        let mut e =
+            NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")]);
+        if let Some(t) = tile {
+            e = e.with_dout_tile(t);
+        }
+        let bind = e.bind(art, &files).unwrap();
+        let plan = e.plan_for(art, &bind).unwrap();
+        let out = e.prefill_packed(art, &bind, &prompts).unwrap();
+        (plan, out.logits, out.k_cache, out.v_cache)
+    };
+    let (plan, logits, kc, vc) = run(None);
+    // prove the default really is a mixed table
+    assert_eq!(plan.tiles.tile_for("k_proj"), 8);
+    assert_eq!(plan.tiles.tile_for("q_proj"), 16);
+    assert_eq!(plan.tiles.tile_for("lm_head"), 32);
+    for tile in [1usize, 5, DEFAULT_DOUT_TILE, MAX_DOUT_TILE] {
+        let (uplan, ul, uk, uv) = run(Some(tile));
+        assert_eq!(uplan.tiles.tile_for("k_proj"), tile.min(64));
+        assert_eq!((ul, uk, uv), (logits.clone(), kc.clone(), vc.clone()),
+            "uniform tile {tile}");
+    }
+}
+
+#[test]
+fn packed_bind_rebind_cached_quant_bitwise_equals_fresh() {
+    // the engine-level ISSUE 5 pin: a bind/re-bind cycle whose W8A8
+    // weights come from the prep cache must be bitwise identical to a
+    // fresh engine that quantizes at first bind — and quantization must
+    // run at most once per weight Arc no matter how many binds
+    let mut rng = Rng::new(227);
+    let prompts: Vec<Vec<i32>> =
+        [17usize, 64, 5].iter().map(|&l| prompt(&mut rng, l)).collect();
+    let art = "tiny-lm-a.prefill64.sq";
+    let spec = || ModelSpec::tiny("tiny-lm-a");
+    // engine A: dense bind first (packs f32 only), then sq (adds the
+    // cached quantization), then an sq re-bind (pure hits)
+    let mut a = NativeEngine::synthetic(vec![spec()]);
+    a.bind("tiny-lm-a.prefill64.dense", &["tiny-lm-a.atw"]).unwrap();
+    assert_eq!(a.prep_report().weights_quantized, 0);
+    let b1 = a.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+    let quants = a.prep_report().weights_quantized;
+    assert!(quants > 0, "sq bind must prepare quantized weights");
+    let out1 = a.prefill_packed(art, &b1, &prompts).unwrap();
+    let b2 = a.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+    let out2 = a.prefill_packed(art, &b2, &prompts).unwrap();
+    assert_eq!(
+        a.prep_report().weights_quantized,
+        quants,
+        "re-bind must reuse the cached quantization"
+    );
+    // engine B: fresh quantization at its first (and only) sq bind
+    let mut b = NativeEngine::synthetic(vec![spec()]);
+    let bb = b.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+    let out3 = b.prefill_packed(art, &bb, &prompts).unwrap();
+    assert_eq!(out1.logits, out2.logits, "re-bind changed sq logits");
+    assert_eq!(out1.logits, out3.logits, "cached != fresh quantization");
+    assert_eq!(out1.k_cache, out3.k_cache);
+    assert_eq!(out1.v_cache, out3.v_cache);
 }
 
 #[test]
