@@ -109,6 +109,27 @@ impl PrefillQueues {
         Some(self.drain_bucket(key, cap))
     }
 
+    /// Worst-case block demand across every bucket's *head* request
+    /// (prompt clamped to `seq`, reservation clamped per
+    /// [`BlockBudget::demand`]). The scheduler compares this against
+    /// the free-block count to decide how hard to evict prefix-cache
+    /// nodes: as long as `free >= max_head_demand`, no queue head is
+    /// starved by cached blocks. `None` when every bucket is empty.
+    pub fn max_head_demand(
+        &self,
+        budget: &BlockBudget,
+        seq: usize,
+    ) -> Option<usize> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|t| {
+                let tk = t.req.prompt.len().min(seq).max(1);
+                budget.demand(tk, t.req.max_new_tokens)
+            })
+            .max()
+    }
+
     /// Token-packed, block-budgeted variant of
     /// [`PrefillQueues::next_batch`]: the bucket is chosen by the same
     /// policy (`select_bucket`), but the batch is cut by two
@@ -456,6 +477,21 @@ mod tests {
             .expect("oversized head is surfaced");
         assert_eq!(b.len(), 1);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_head_demand_peeks_every_bucket() {
+        let mut q = PrefillQueues::new(4, 10.0);
+        let bb = budget(8, 8, 16);
+        assert_eq!(q.max_head_demand(&bb, 64), None);
+        // heads: 2+4 tokens -> 1 block vs 40+4 tokens -> 3 blocks;
+        // the non-head 40-token request in "a" must not count
+        q.push(ConfigKey("a".into()), tracked_len(1, 2));
+        q.push(ConfigKey("a".into()), tracked_len(2, 40));
+        q.push(ConfigKey("b".into()), tracked_len(3, 40));
+        assert_eq!(q.max_head_demand(&bb, 64), Some(3));
+        // prompt clamps to seq: 16+4 tokens -> 2 blocks
+        assert_eq!(q.max_head_demand(&bb, 16), Some(2));
     }
 
     #[test]

@@ -220,6 +220,145 @@ impl KvPages {
         )
     }
 
+    /// Share the first `n_blocks` of `parent`'s table with a new
+    /// sequence `child` (prefix-cache hit): pure refcount accounting in
+    /// the [`BlockPool`] — no KV rows move. The child has a block table
+    /// but no valid length until [`KvPages::admit_packed_prefixed`]
+    /// stages its suffix, so prefix-cache *nodes* (which are never
+    /// admitted) simply hold block tables that keep their blocks alive.
+    pub fn fork_prefix(
+        &mut self,
+        parent: u64,
+        child: u64,
+        n_blocks: usize,
+    ) -> Result<()> {
+        self.pool.fork_prefix(parent, child, n_blocks)
+    }
+
+    /// Copy-on-write `seq`'s table entry `block_idx` if the physical
+    /// block is shared: the pool swaps in a fresh block and this copies
+    /// the old block's K/V payload into it across all layers, so the
+    /// caller may then overwrite rows without disturbing other owners.
+    /// Returns the `(old, new)` physical ids when a copy happened.
+    pub fn cow_block(&mut self, seq: u64, block_idx: usize)
+                     -> Result<Option<(u32, u32)>> {
+        let Some((old, new)) = self.pool.cow(seq, block_idx)? else {
+            return Ok(None);
+        };
+        let span = self.block_size() * self.kv_dim();
+        for l in 0..self.n_layers {
+            let src = self.block_base(l, old);
+            let dst = self.block_base(l, new);
+            self.k.copy_within(src..src + span, dst);
+            self.v.copy_within(src..src + span, dst);
+        }
+        Ok(Some((old, new)))
+    }
+
+    /// Make the block holding token position `pos` exclusively owned
+    /// before a write lands there (decode appends into a possibly
+    /// shared tail block). No-op when the block is already exclusive.
+    pub fn make_writable(&mut self, seq: u64, pos: usize) -> Result<()> {
+        let idx = pos / self.block_size();
+        self.cow_block(seq, idx).map(|_| ())
+    }
+
+    /// Admit a sequence whose first `cached_len` KV rows already live in
+    /// its block table (shared via [`KvPages::fork_prefix`]): stage only
+    /// the `suffix_len` freshly computed rows — packed at rows
+    /// `start .. start + suffix_len` of a `[L, total, H, D]` cache —
+    /// at positions `cached_len ..` of the sequence, growing the table
+    /// to `reserve_tokens`. If `cached_len` is not block-aligned the
+    /// boundary block is shared *and* partially overwritten, so it is
+    /// copy-on-written first and its stale tail rows zeroed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit_packed_prefixed(
+        &mut self,
+        seq_id: u64,
+        packed_k: &[f32],
+        packed_v: &[f32],
+        start: usize,
+        total_tokens: usize,
+        cached_len: usize,
+        suffix_len: usize,
+        reserve_tokens: usize,
+    ) -> Result<()> {
+        let bs = self.block_size();
+        let row_sz = self.kv_dim();
+        if cached_len == 0 || suffix_len == 0 {
+            bail!(
+                "prefixed admit of seq {seq_id} needs a nonempty cached \
+                 prefix and suffix (got {cached_len}+{suffix_len})"
+            );
+        }
+        if self.len.contains_key(&seq_id) {
+            bail!("seq {seq_id} already admitted");
+        }
+        let have = self
+            .pool
+            .table(seq_id)
+            .map(|t| t.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "prefixed admit of seq {seq_id} without a forked table"
+                )
+            })?;
+        if have * bs < cached_len {
+            bail!(
+                "seq {seq_id}'s forked table covers {} tokens, \
+                 cached prefix claims {cached_len}",
+                have * bs
+            );
+        }
+        let valid_len = cached_len + suffix_len;
+        let reserve = reserve_tokens.max(valid_len);
+        if reserve > self.max_seq_tokens {
+            bail!(
+                "sequence {seq_id} needs {reserve} tokens, cache holds {}",
+                self.max_seq_tokens
+            );
+        }
+        if start + suffix_len > total_tokens {
+            bail!(
+                "packed rows {start}..{} exceed batch of {total_tokens}",
+                start + suffix_len
+            );
+        }
+        let added = self.pool.extend(seq_id, reserve)?;
+        if !added.is_empty() {
+            self.zero_blocks(&added);
+        }
+        // boundary block: shared with the cache node but about to take
+        // suffix rows — copy it, then clear the donor's stale tail
+        let off = cached_len % bs;
+        if off != 0 {
+            let bidx = cached_len / bs;
+            self.cow_block(seq_id, bidx)?;
+            let blk = self.pool.table(seq_id).unwrap()[bidx];
+            for l in 0..self.n_layers {
+                let at = self.block_base(l, blk) + off * row_sz;
+                let end = self.block_base(l, blk) + bs * row_sz;
+                self.k[at..end].fill(0.0);
+                self.v[at..end].fill(0.0);
+            }
+        }
+        let table: Vec<u32> = self.pool.table(seq_id).unwrap().to_vec();
+        for l in 0..self.n_layers {
+            for r in 0..suffix_len {
+                let pos = cached_len + r;
+                let blk = table[pos / bs];
+                let src = (l * total_tokens + start + r) * row_sz;
+                let dst = self.block_base(l, blk) + (pos % bs) * row_sz;
+                self.k[dst..dst + row_sz]
+                    .copy_from_slice(&packed_k[src..src + row_sz]);
+                self.v[dst..dst + row_sz]
+                    .copy_from_slice(&packed_v[src..src + row_sz]);
+            }
+        }
+        self.len.insert(seq_id, valid_len);
+        Ok(())
+    }
+
     /// Make sure `seq`'s table covers `tokens` tokens, allocating (and
     /// zeroing) tail blocks on a block boundary. A no-op while the
     /// admission-time reservation still covers the length.
@@ -476,6 +615,124 @@ mod tests {
         assert_eq!(kv.seq_len(1), Some(5));
         // growth past the per-seq cap is rejected
         assert!(kv.ensure_capacity(1, 9).is_err());
+        kv.check_invariants().unwrap();
+    }
+
+    /// Packed single-seq cache `[L=2, total, H*D=4]` with row value
+    /// `layer*1000 + row*10 + lane`.
+    fn packed(total: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; 2 * total * 4];
+        for l in 0..2 {
+            for r in 0..total {
+                for d in 0..4 {
+                    out[(l * total + r) * 4 + d] =
+                        (l * 1000 + r * 10 + d) as f32;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prefixed_admit_matches_cold_admit_aligned() {
+        // donor holds 8 tokens (2 blocks of 4); a fork of its first
+        // block plus a staged suffix must gather identically to a cold
+        // admit of the same 7 rows
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 8, 8).unwrap();
+        kv.fork_prefix(1, 2, 1).unwrap();
+        // suffix rows 4..7 of the same cache, cached_len = 4
+        kv.admit_packed_prefixed(2, &pre, &pre, 4, 8, 4, 3, 7).unwrap();
+        assert_eq!(kv.seq_len(2), Some(7));
+        let mut cold = mk(4);
+        cold.admit_packed(2, &pre, &pre, 0, 8, 7, 7).unwrap();
+        assert_eq!(kv.gather_seq(2, 7), cold.gather_seq(2, 7));
+        // shared leading block, fresh tail block
+        assert_eq!(kv.table(2).unwrap()[0], kv.table(1).unwrap()[0]);
+        assert_ne!(kv.table(2).unwrap()[1], kv.table(1).unwrap()[1]);
+        kv.check_invariants().unwrap();
+        kv.release(1).unwrap();
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_blocks(), kv.n_blocks());
+    }
+
+    #[test]
+    fn prefixed_admit_cows_unaligned_boundary_block() {
+        // cached_len = 3 lands mid-block: the boundary block must be
+        // copied before the suffix overwrites rows 3.., leaving the
+        // donor's rows intact
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 6, 6).unwrap();
+        kv.fork_prefix(1, 2, 1).unwrap();
+        let shared = kv.table(2).unwrap()[0];
+        kv.admit_packed_prefixed(2, &pre, &pre, 3, 8, 3, 4, 7).unwrap();
+        assert_ne!(kv.table(2).unwrap()[0], shared, "boundary not CoW'd");
+        let mut cold = mk(4);
+        cold.admit_packed(2, &pre, &pre, 0, 8, 7, 7).unwrap();
+        assert_eq!(kv.gather_seq(2, 7), cold.gather_seq(2, 7));
+        // donor unchanged
+        let mut donor = mk(4);
+        donor.admit_packed(1, &pre, &pre, 0, 8, 6, 6).unwrap();
+        assert_eq!(kv.gather_seq(1, 6), donor.gather_seq(1, 6));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefixed_admit_validates_preconditions() {
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 8, 8).unwrap();
+        // no forked table
+        assert!(kv
+            .admit_packed_prefixed(9, &pre, &pre, 4, 8, 4, 2, 6)
+            .is_err());
+        kv.fork_prefix(1, 2, 1).unwrap();
+        // cached prefix beyond the forked table (1 block = 4 tokens)
+        assert!(kv
+            .admit_packed_prefixed(2, &pre, &pre, 4, 8, 5, 2, 7)
+            .is_err());
+        // empty suffix / empty prefix
+        assert!(kv
+            .admit_packed_prefixed(2, &pre, &pre, 4, 8, 4, 0, 6)
+            .is_err());
+        assert!(kv
+            .admit_packed_prefixed(2, &pre, &pre, 4, 8, 0, 2, 6)
+            .is_err());
+        // reserve past the per-seq cap (mk: max_seq_tokens = 8)
+        assert!(kv
+            .admit_packed_prefixed(2, &pre, &pre, 4, 8, 4, 2, 9)
+            .is_err());
+        // packed rows out of range
+        assert!(kv
+            .admit_packed_prefixed(2, &pre, &pre, 7, 8, 4, 2, 6)
+            .is_err());
+        // the happy path still works after all those rejections
+        kv.admit_packed_prefixed(2, &pre, &pre, 4, 8, 4, 2, 6).unwrap();
+        // double admit
+        assert!(kv
+            .admit_packed_prefixed(2, &pre, &pre, 4, 8, 4, 2, 6)
+            .is_err());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn make_writable_cows_shared_append_target() {
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 8, 8).unwrap();
+        kv.fork_prefix(1, 2, 2).unwrap();
+        let shared_tail = kv.table(2).unwrap()[1];
+        kv.make_writable(2, 5).unwrap(); // pos 5 -> block index 1
+        let owned_tail = kv.table(2).unwrap()[1];
+        assert_ne!(owned_tail, shared_tail);
+        assert_eq!(kv.table(1).unwrap()[1], shared_tail);
+        // payload was copied: both gathers still agree
+        assert_eq!(kv.gather_seq(2, 8), kv.gather_seq(1, 8));
+        // exclusive now: second call is a no-op
+        kv.make_writable(2, 5).unwrap();
+        assert_eq!(kv.table(2).unwrap()[1], owned_tail);
         kv.check_invariants().unwrap();
     }
 

@@ -29,6 +29,7 @@
 pub mod batcher;
 pub mod kv;
 pub mod paged;
+pub mod prefix;
 pub mod request;
 pub mod scheduler;
 pub mod router;

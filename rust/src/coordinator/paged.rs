@@ -11,9 +11,11 @@
 //! anything — its table can be scattered across the whole pool.
 //!
 //! Blocks are ref-counted so a shared prompt prefix can be accounted
-//! once ([`BlockPool::fork`], copy-on-write accounting); writers must
-//! copy a shared tail block before appending to it (the serving
-//! scheduler never forks, so its blocks are always exclusively owned).
+//! once ([`BlockPool::fork_prefix`], copy-on-write accounting): the
+//! prefix cache ([`super::prefix`]) forks a cached sequence's leading
+//! blocks into a new request's table, and writers must copy a shared
+//! block before mutating it ([`BlockPool::cow`]) — decode appends and
+//! partial-block admission both go through that path.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -155,23 +157,107 @@ impl BlockPool {
         Ok(added)
     }
 
-    /// Fork: new sequence shares the owner's blocks (prefix cache hit) —
+    /// Fork: new sequence shares the owner's **whole** table (the
+    /// full-table special case of [`BlockPool::fork_prefix`]) —
     /// copy-on-write accounting via refcounts. Writers must copy a
-    /// shared block before mutating it.
+    /// shared block before mutating it ([`BlockPool::cow`]).
     pub fn fork(&mut self, parent: u64, child: u64) -> Result<()> {
-        let blocks = self
+        let len = self
             .owners
             .get(&parent)
-            .cloned()
+            .map(|b| b.len())
+            .ok_or_else(|| anyhow::anyhow!("parent {parent} missing"))?;
+        self.fork_prefix(parent, child, len)
+    }
+
+    /// Fork the first `n_blocks` of `parent`'s table into a new
+    /// sequence `child` (prefix-cache hit): the child's table aliases
+    /// the parent's leading blocks, each refcount bumped. Fork chains
+    /// (fork of a fork) are fine — refcounts compose. Errors: missing
+    /// parent, child already allocated, `n_blocks` zero or beyond the
+    /// parent's table, or a refcount at `u16::MAX` (saturation would
+    /// silently alias on release).
+    pub fn fork_prefix(
+        &mut self,
+        parent: u64,
+        child: u64,
+        n_blocks: usize,
+    ) -> Result<()> {
+        let table = self
+            .owners
+            .get(&parent)
             .ok_or_else(|| anyhow::anyhow!("parent {parent} missing"))?;
         if self.owners.contains_key(&child) {
             bail!("child {child} already allocated");
+        }
+        if n_blocks == 0 {
+            bail!("fork of zero blocks from parent {parent}");
+        }
+        if n_blocks > table.len() {
+            bail!(
+                "fork of {n_blocks} blocks from parent {parent} \
+                 (table holds {})",
+                table.len()
+            );
+        }
+        let blocks: Vec<u32> = table[..n_blocks].to_vec();
+        // check before mutating: saturation must not half-apply
+        for &b in &blocks {
+            if self.refcount[b as usize] == u16::MAX {
+                bail!("refcount saturated on block {b}");
+            }
         }
         for &b in &blocks {
             self.refcount[b as usize] += 1;
         }
         self.owners.insert(child, blocks);
         Ok(())
+    }
+
+    /// Copy-on-write a sequence's table entry `block_idx`: if the
+    /// physical block is shared (refcount > 1), allocate a fresh block,
+    /// point the table entry at it and return `Some((old, new))` so the
+    /// caller can copy the payload; if the block is already exclusively
+    /// owned, return `None` (nothing to do). Errors: unknown sequence,
+    /// index beyond the table, or pool exhaustion.
+    pub fn cow(
+        &mut self,
+        seq: u64,
+        block_idx: usize,
+    ) -> Result<Option<(u32, u32)>> {
+        let table = self
+            .owners
+            .get(&seq)
+            .ok_or_else(|| anyhow::anyhow!("cow of unallocated seq {seq}"))?;
+        let Some(&old) = table.get(block_idx) else {
+            bail!(
+                "cow index {block_idx} beyond seq {seq}'s table ({})",
+                table.len()
+            );
+        };
+        if self.refcount[old as usize] <= 1 {
+            return Ok(None); // exclusive: write in place
+        }
+        let Some(new) = self.free.pop() else {
+            bail!("pool exhausted on copy-on-write of seq {seq}");
+        };
+        self.refcount[new as usize] = 1;
+        self.refcount[old as usize] -= 1;
+        self.owners.get_mut(&seq).unwrap()[block_idx] = new;
+        Ok(Some((old, new)))
+    }
+
+    /// The refcount of a physical block id, if in range (test/metrics
+    /// introspection).
+    pub fn refcount_of(&self, block: u32) -> Option<u16> {
+        self.refcount.get(block as usize).copied()
+    }
+
+    /// Sequence ids that currently own a block table, ascending.
+    pub fn sequences(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.owners.keys().copied().collect();
+        ids.sort_unstable();
+        ids
     }
 
     /// Return a sequence's blocks to the free list. Freeing a sequence
@@ -336,6 +422,118 @@ mod tests {
     fn extend_of_unallocated_seq_is_an_error() {
         let mut p = BlockPool::new(2, 16);
         assert!(p.extend(3, 16).is_err());
+    }
+
+    #[test]
+    fn fork_of_missing_parent_is_an_error() {
+        let mut p = BlockPool::new(4, 16);
+        assert!(p.fork(9, 10).unwrap_err().to_string().contains("missing"));
+        assert!(p
+            .fork_prefix(9, 10, 1)
+            .unwrap_err()
+            .to_string()
+            .contains("missing"));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_onto_existing_child_is_an_error() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 16).unwrap();
+        p.allocate(2, 16).unwrap();
+        assert!(p.fork(1, 2).unwrap_err().to_string().contains("already"));
+        // nothing half-applied: refcounts unchanged
+        assert_eq!(p.refcount_of(p.table(1).unwrap()[0]), Some(1));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_prefix_bounds_are_enforced() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 32).unwrap(); // 2 blocks
+        assert!(p.fork_prefix(1, 2, 0).is_err());
+        assert!(p.fork_prefix(1, 2, 3).is_err());
+        assert!(p.table(2).is_none(), "failed fork must not allocate");
+        p.fork_prefix(1, 2, 1).unwrap();
+        assert_eq!(p.table(2).unwrap(), &p.table(1).unwrap()[..1]);
+        assert_eq!(p.refcount_of(p.table(1).unwrap()[0]), Some(2));
+        assert_eq!(p.refcount_of(p.table(1).unwrap()[1]), Some(1));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_of_fork_chains_compose_refcounts() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 32).unwrap(); // 2 blocks
+        p.fork(1, 2).unwrap();
+        p.fork_prefix(2, 3, 1).unwrap(); // fork of a fork
+        let b0 = p.table(1).unwrap()[0];
+        let b1 = p.table(1).unwrap()[1];
+        assert_eq!(p.refcount_of(b0), Some(3));
+        assert_eq!(p.refcount_of(b1), Some(2));
+        p.check_invariants().unwrap();
+        // releasing the original parent keeps shared blocks alive
+        p.release(1).unwrap();
+        assert_eq!(p.refcount_of(b0), Some(2));
+        assert_eq!(p.refcount_of(b1), Some(1));
+        assert_eq!(p.free_blocks(), 2);
+        p.check_invariants().unwrap();
+        p.release(2).unwrap();
+        p.release(3).unwrap();
+        assert_eq!(p.free_blocks(), 4);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_on_exclusive_block_is_a_no_op() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 32).unwrap();
+        let before = p.table(1).unwrap().to_vec();
+        assert_eq!(p.cow(1, 1).unwrap(), None);
+        assert_eq!(p.table(1).unwrap(), &before[..]);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_on_shared_block_copies_exactly_one_entry() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(1, 32).unwrap(); // 2 blocks
+        p.fork(1, 2).unwrap();
+        let parent = p.table(1).unwrap().to_vec();
+        let (old, new) = p.cow(2, 1).unwrap().expect("shared -> must copy");
+        assert_eq!(old, parent[1]);
+        assert_ne!(new, old);
+        assert_eq!(p.table(2).unwrap()[0], parent[0], "untouched entry");
+        assert_eq!(p.table(2).unwrap()[1], new);
+        assert_eq!(p.table(1).unwrap(), &parent[..], "parent unchanged");
+        assert_eq!(p.refcount_of(old), Some(1));
+        assert_eq!(p.refcount_of(new), Some(1));
+        assert_eq!(p.refcount_of(parent[0]), Some(2));
+        p.check_invariants().unwrap();
+        // second write to the now-exclusive block: no further copy
+        assert_eq!(p.cow(2, 1).unwrap(), None);
+    }
+
+    #[test]
+    fn cow_errors_on_bad_seq_index_and_exhaustion() {
+        let mut p = BlockPool::new(2, 16);
+        assert!(p.cow(1, 0).unwrap_err().to_string().contains("unalloc"));
+        p.allocate(1, 32).unwrap(); // both blocks
+        assert!(p.cow(1, 2).unwrap_err().to_string().contains("beyond"));
+        p.fork(1, 2).unwrap();
+        // every block shared, zero free: the copy cannot be satisfied
+        let err = p.cow(2, 0).unwrap_err();
+        assert!(err.to_string().contains("exhausted"));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sequences_lists_owners_in_order() {
+        let mut p = BlockPool::new(4, 16);
+        p.allocate(7, 16).unwrap();
+        p.allocate(3, 16).unwrap();
+        p.fork(7, 5).unwrap();
+        assert_eq!(p.sequences(), vec![3, 5, 7]);
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Hash-chained prefix cache over block-aligned token prefixes.
+//!
+//! vLLM-style automatic prefix caching on the paged substrate: every
+//! **full** block of a prompt is addressable by the chain hash of the
+//! token ids up to that block boundary (a radix-trie keyed by hash
+//! instead of pointers). Each cached node is an independent [`BlockPool`]
+//! sequence holding the first `depth` blocks of the prompt that
+//! registered it — created with [`KvPages::fork_prefix`], so the node is
+//! pure refcount accounting and keeps its blocks alive after the
+//! registering request completes and releases its own table.
+//!
+//! Admission flow (driven by the scheduler):
+//! 1. [`PrefixCache::lookup`] walks the prompt's block boundaries
+//!    deepest-first match, verifies the stored tokens (hashes can
+//!    collide), **pins** the hit so eviction cannot race admission,
+//!    and returns the node to fork from.
+//! 2. The scheduler forks the node's leading blocks into the request's
+//!    table, prefills only the uncached suffix, and stages it with
+//!    [`KvPages::admit_packed_prefixed`] — copy-on-write handles the
+//!    partially-valid boundary block.
+//! 3. [`PrefixCache::register`] inserts nodes for the request's own
+//!    full blocks (deduplicated by hash), then the scheduler unpins.
+//!
+//! Eviction is LRU with deepest-first tie-breaking: under block
+//! pressure the scheduler calls [`PrefixCache::evict_one`], which
+//! releases the least-recently-used unpinned node — preferring the
+//! deepest such node, since leaf blocks are the least shared and
+//! releasing them actually returns blocks to the free list.
+//!
+//! [`BlockPool`]: super::paged::BlockPool
+
+use std::collections::HashMap;
+
+use super::kv::KvPages;
+
+/// First sequence id used for cache nodes — far above any realistic
+/// client request id, so node tables and request tables share the
+/// [`super::paged::BlockPool`] namespace without colliding.
+pub const NODE_SEQ_BASE: u64 = 1 << 62;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Chain-hash step: fold one block's token ids into the parent hash.
+fn chain_hash(parent: u64, chunk: &[i32]) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, &parent.to_le_bytes());
+    for &t in chunk {
+        h = fnv1a(h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// One cached block-aligned prefix (module docs).
+#[derive(Debug)]
+struct Node {
+    /// The pool sequence holding this prefix's blocks.
+    seq: u64,
+    /// Prefix length in blocks.
+    depth: usize,
+    /// The exact token prefix — verified on lookup, hashes can collide.
+    tokens: Vec<i32>,
+    /// Logical-clock timestamp of the last hit/registration (LRU).
+    last_use: u64,
+    /// In-flight admissions forking from this node; pinned nodes are
+    /// never evicted.
+    pins: u32,
+}
+
+/// A successful [`PrefixCache::lookup`]: fork `cached_tokens` tokens
+/// (= `depth_blocks` full blocks) from pool sequence `node_seq`. The
+/// node is pinned until [`PrefixCache::unpin`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    /// Pool sequence id of the cached node to fork from.
+    pub node_seq: u64,
+    /// Shared prefix length in blocks.
+    pub depth_blocks: usize,
+    /// Shared prefix length in tokens (`depth_blocks * block_size`).
+    pub cached_tokens: usize,
+}
+
+/// Hash-chained radix index over cached block-aligned prefixes
+/// (module docs).
+pub struct PrefixCache {
+    block_size: usize,
+    /// chain hash -> node
+    nodes: HashMap<u64, Node>,
+    /// node seq -> chain hash (for unpin/eviction bookkeeping)
+    by_seq: HashMap<u64, u64>,
+    next_seq: u64,
+    clock: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    /// An empty cache over `block_size`-token blocks.
+    pub fn new(block_size: usize) -> PrefixCache {
+        PrefixCache {
+            block_size: block_size.max(1),
+            nodes: HashMap::new(),
+            by_seq: HashMap::new(),
+            next_seq: NODE_SEQ_BASE,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Cached nodes currently held.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether the cache holds no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Nodes evicted over the cache's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Deepest cached node matching a block-aligned prefix of `tokens`,
+    /// if any. Refreshes the LRU stamp of every matched ancestor and
+    /// **pins** the returned node — callers must
+    /// [`PrefixCache::unpin`] once the fork has happened (or been
+    /// abandoned).
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<PrefixHit> {
+        self.clock += 1;
+        let bs = self.block_size;
+        let mut h = 0u64;
+        let mut best: Option<(u64, usize)> = None;
+        for d in 1..=tokens.len() / bs {
+            h = chain_hash(h, &tokens[(d - 1) * bs..d * bs]);
+            let Some(node) = self.nodes.get_mut(&h) else {
+                break;
+            };
+            if node.depth != d || node.tokens != tokens[..d * bs] {
+                break; // hash collision: treat as a miss from here on
+            }
+            node.last_use = self.clock;
+            best = Some((h, d));
+        }
+        let (h, d) = best?;
+        let node = self.nodes.get_mut(&h).unwrap();
+        node.pins += 1;
+        Some(PrefixHit {
+            node_seq: node.seq,
+            depth_blocks: d,
+            cached_tokens: d * bs,
+        })
+    }
+
+    /// Drop the pin taken by [`PrefixCache::lookup`]. Unknown sequences
+    /// are ignored (the node may have been evicted after an abandoned
+    /// fork — pins only block eviction while nonzero).
+    pub fn unpin(&mut self, node_seq: u64) {
+        if let Some(h) = self.by_seq.get(&node_seq) {
+            if let Some(node) = self.nodes.get_mut(h) {
+                node.pins = node.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Register every full-block prefix of `tokens` from the admitted
+    /// sequence `owner` (whose block table must cover them): each new
+    /// depth forks `owner`'s leading blocks into a fresh node sequence.
+    /// Existing nodes are refreshed, not duplicated. Returns the number
+    /// of nodes created; fork failures stop registration and are
+    /// reported by the caller's invariant checks rather than panicking.
+    pub fn register(
+        &mut self,
+        owner: u64,
+        tokens: &[i32],
+        kv: &mut KvPages,
+    ) -> usize {
+        self.clock += 1;
+        let bs = self.block_size;
+        let mut h = 0u64;
+        let mut created = 0usize;
+        for d in 1..=tokens.len() / bs {
+            h = chain_hash(h, &tokens[(d - 1) * bs..d * bs]);
+            if let Some(node) = self.nodes.get_mut(&h) {
+                if node.depth == d && node.tokens == tokens[..d * bs] {
+                    node.last_use = self.clock;
+                } // else: hash collision — keep the incumbent
+                continue;
+            }
+            let seq = self.next_seq;
+            if kv.fork_prefix(owner, seq, d).is_err() {
+                break; // owner released or pool inconsistency: stop
+            }
+            self.next_seq += 1;
+            self.nodes.insert(
+                h,
+                Node {
+                    seq,
+                    depth: d,
+                    tokens: tokens[..d * bs].to_vec(),
+                    last_use: self.clock,
+                    pins: 0,
+                },
+            );
+            self.by_seq.insert(seq, h);
+            created += 1;
+        }
+        created
+    }
+
+    /// Evict the least-recently-used unpinned node (deepest first on
+    /// ties — leaf blocks are the least shared, so releasing them is
+    /// what actually frees memory). Returns the number of blocks
+    /// returned to the free list, or `None` when every node is pinned
+    /// or the cache is empty.
+    pub fn evict_one(&mut self, kv: &mut KvPages) -> Option<usize> {
+        let (&h, _) = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.pins == 0)
+            .min_by_key(|(_, n)| (n.last_use, usize::MAX - n.depth))?;
+        let node = self.nodes.remove(&h).unwrap();
+        self.by_seq.remove(&node.seq);
+        let before = kv.free_blocks();
+        // release failure would mean the pool lost the node's table —
+        // surfaced by kv.check_invariants() in the suites; the node is
+        // forgotten either way so eviction cannot livelock
+        let _ = kv.release(node.seq);
+        self.evictions += 1;
+        Some(kv.free_blocks() - before)
+    }
+
+    /// Release every node (serving-loop shutdown), returning tables to
+    /// the pool so the final invariant sweep sees a drained allocator.
+    pub fn clear(&mut self, kv: &mut KvPages) {
+        for (_, node) in self.nodes.drain() {
+            let _ = kv.release(node.seq);
+        }
+        self.by_seq.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(n_blocks: usize, bs: usize) -> KvPages {
+        KvPages::new(1, n_blocks, bs, 1, 2, n_blocks * bs)
+    }
+
+    fn admit(kv: &mut KvPages, seq: u64, len: usize) {
+        let pre = vec![0.25f32; len * 2];
+        kv.admit_packed(seq, &pre, &pre, 0, len, len, len).unwrap();
+    }
+
+    #[test]
+    fn register_then_lookup_hits_deepest_block() {
+        let mut kv = kv(8, 4);
+        let mut pc = PrefixCache::new(4);
+        let prompt: Vec<i32> = (1..=10).collect(); // 2 full blocks + 2
+        admit(&mut kv, 1, 10);
+        assert_eq!(pc.register(1, &prompt, &mut kv), 2);
+        assert_eq!(pc.len(), 2);
+        kv.release(1).unwrap(); // nodes keep the blocks alive
+        kv.check_invariants().unwrap();
+        let hit = pc.lookup(&prompt).expect("full prefix cached");
+        assert_eq!(hit.depth_blocks, 2);
+        assert_eq!(hit.cached_tokens, 8);
+        assert!(kv.table(hit.node_seq).is_some());
+        // divergence after the first block hits only depth 1
+        let mut div = prompt.clone();
+        div[5] = 99;
+        let shallow = pc.lookup(&div).unwrap();
+        assert_eq!(shallow.depth_blocks, 1);
+        // divergence in the first block misses entirely
+        div[0] = 99;
+        assert_eq!(pc.lookup(&div), None);
+        // prompts shorter than one block can never hit
+        assert_eq!(pc.lookup(&prompt[..3]), None);
+        pc.unpin(hit.node_seq);
+        pc.unpin(shallow.node_seq);
+        pc.clear(&mut kv);
+        assert_eq!(kv.free_blocks(), kv.n_blocks());
+    }
+
+    #[test]
+    fn register_deduplicates_shared_prefixes() {
+        let mut kv = kv(8, 4);
+        let mut pc = PrefixCache::new(4);
+        let a: Vec<i32> = (1..=8).collect();
+        let mut b = a.clone();
+        b[7] = 77; // shares exactly the first block
+        admit(&mut kv, 1, 8);
+        admit(&mut kv, 2, 8);
+        assert_eq!(pc.register(1, &a, &mut kv), 2);
+        assert_eq!(pc.register(2, &b, &mut kv), 1, "block 1 deduped");
+        assert_eq!(pc.len(), 3);
+        kv.check_invariants().unwrap();
+        pc.clear(&mut kv);
+        kv.release(1).unwrap();
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_blocks(), kv.n_blocks());
+    }
+
+    #[test]
+    fn eviction_is_lru_deepest_first_and_respects_pins() {
+        let mut kv = kv(8, 4);
+        let mut pc = PrefixCache::new(4);
+        let prompt: Vec<i32> = (1..=8).collect();
+        admit(&mut kv, 1, 8);
+        pc.register(1, &prompt, &mut kv); // depths 1 and 2, same stamp
+        kv.release(1).unwrap();
+        // deepest-first on the LRU tie: the depth-2 leaf goes first
+        let freed = pc.evict_one(&mut kv).unwrap();
+        assert_eq!(freed, 1, "leaf block exclusively owned by depth 2");
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pc.evictions(), 1);
+        // pin the survivor: nothing evictable
+        let hit = pc.lookup(&prompt).unwrap();
+        assert_eq!(hit.depth_blocks, 1);
+        assert_eq!(pc.evict_one(&mut kv), None);
+        pc.unpin(hit.node_seq);
+        assert_eq!(pc.evict_one(&mut kv), Some(1));
+        assert_eq!(kv.free_blocks(), kv.n_blocks());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lookup_refreshes_lru_order() {
+        let mut kv = kv(16, 4);
+        let mut pc = PrefixCache::new(4);
+        let a: Vec<i32> = (1..=4).collect();
+        let b: Vec<i32> = (11..=14).collect();
+        admit(&mut kv, 1, 4);
+        admit(&mut kv, 2, 4);
+        pc.register(1, &a, &mut kv);
+        pc.register(2, &b, &mut kv); // b newer than a
+        kv.release(1).unwrap();
+        kv.release(2).unwrap();
+        let hit = pc.lookup(&a).unwrap(); // a newest now
+        pc.unpin(hit.node_seq);
+        pc.evict_one(&mut kv).unwrap(); // evicts b
+        assert!(pc.lookup(&b).is_none());
+        assert!(pc.lookup(&a).is_some());
+        kv.check_invariants().unwrap();
+    }
+}

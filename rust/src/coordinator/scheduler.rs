@@ -32,9 +32,12 @@ use anyhow::{Context, Result};
 use super::batcher::{routing, BlockBudget, ConfigKey, PrefillQueues};
 use super::kv::KvPages;
 use super::paged::DEFAULT_BLOCK;
+use super::prefix::PrefixCache;
 use super::request::{Request, Response, Tracked};
 use crate::metrics::EngineMetrics;
-use crate::runtime::{Engine as ExecEngine, SparsityAudit};
+use crate::runtime::{
+    Engine as ExecEngine, PrefixedPrompt, SparsityAudit,
+};
 use crate::tensor::math::argmax;
 
 /// End-of-sequence token id of the synthetic token world.
@@ -64,6 +67,13 @@ pub struct EngineConfig {
     /// paged-parity suite); the knob exists for memory-granularity
     /// tuning and tests.
     pub kv_block: usize,
+    /// share full prompt-prefix KV blocks across requests through the
+    /// radix [`PrefixCache`] (fork at admission, copy-on-write on
+    /// divergence, LRU-evicted under block pressure). On by default:
+    /// forked-prefix prefill is bit-identical to cold prefill (see the
+    /// prefix-parity suite), so the knob only trades KV blocks for
+    /// prefill compute.
+    pub prefix_cache: bool,
 }
 
 impl EngineConfig {
@@ -77,6 +87,7 @@ impl EngineConfig {
             run_until: 0,
             pool_threads: default_pool_threads(),
             kv_block: DEFAULT_BLOCK,
+            prefix_cache: true,
         }
     }
 }
@@ -115,6 +126,9 @@ pub struct Engine {
     queues: PrefillQueues,
     /// block-paged KV store (physical blocks + per-sequence tables)
     kv: KvPages,
+    /// radix index over cached prompt prefixes; its nodes hold forked
+    /// block tables in `kv` until evicted under block pressure
+    prefix: PrefixCache,
     active: HashMap<u64, ActiveSeq>,
     /// round-robin cursor over decode-artifact groups (fp vs sq decode
     /// differ), so no group starves under sustained mixed-config load
@@ -176,6 +190,7 @@ impl Engine {
         let vocab = g("vocab_size");
         Ok(Engine {
             queues: PrefillQueues::new(prefill_batch, cfg.max_wait_secs),
+            prefix: PrefixCache::new(kv_block),
             cfg,
             rt,
             metrics,
@@ -235,10 +250,12 @@ impl Engine {
                 }
             }
             if !open && self.queues.is_empty() && self.active.is_empty() {
+                self.shutdown_prefix();
                 return Ok(());
             }
             if self.cfg.run_until > 0 && self.completed >= self.cfg.run_until
             {
+                self.shutdown_prefix();
                 return Ok(());
             }
             self.step()?;
@@ -255,12 +272,25 @@ impl Engine {
         // itself is by free-block count: each request's worst-case KV
         // footprint must fit somewhere in the pool.
         let budget = self.queues.max_batch * self.cfg.prefill_seq;
-        let blocks = BlockBudget {
+        let mut blocks = BlockBudget {
             free_blocks: self.kv.free_blocks(),
             total_blocks: self.kv.n_blocks(),
             block_size: self.kv.block_size(),
             max_seq_tokens: self.kv.max_seq_tokens,
         };
+        // prefix-cache nodes hold KV blocks; under pressure they yield
+        // to admissions. Evict (LRU, deepest-first on ties) until the
+        // worst-case queue head fits the free list — cached blocks must
+        // never starve, let alone deadlock, the prefill queues.
+        if let Some(need) =
+            self.queues.max_head_demand(&blocks, self.cfg.prefill_seq)
+        {
+            while self.kv.free_blocks() < need
+                && self.prefix.evict_one(&mut self.kv).is_some()
+            {}
+            blocks.free_blocks = self.kv.free_blocks();
+            self.publish_prefix();
+        }
         if let Some((key, batch)) = self.queues.next_packed_batch(
             blocks,
             self.cfg.prefill_seq,
@@ -297,13 +327,91 @@ impl Engine {
         // cached quantization) happens; refresh the prep gauges
         self.publish_prep();
 
-        // token-packed submission: each request's prompt rides verbatim
-        // (the engine clamps to the artifact seq); no PAD rows between
-        // requests, so the batch reaches the kernel as one
-        // [total_tokens, d] matrix
-        let prompts: Vec<Vec<i32>> =
-            batch.iter().map(|t| t.req.prompt.clone()).collect();
-        let out = self.rt.prefill_packed(&artifact, &binding, &prompts)?;
+        // Phase A — prefix-cache lookup. For every request whose leading
+        // full blocks are cached, fork the donor node's blocks into the
+        // request's table NOW (refcount bump, no data movement) and
+        // gather the donor's K/V rows so the backend can attend over
+        // them; everything else rides cold. At least one suffix token is
+        // always recomputed — the last prompt row must be live to sample
+        // the first token from (a fully cached prompt copy-on-writes its
+        // boundary block at admission instead).
+        let seq_cap = self.cfg.prefill_seq;
+        // per request: Some(donor node) + cached token count when warm
+        let mut hits: Vec<Option<(u64, usize)>> =
+            Vec::with_capacity(batch.len());
+        let mut reqs: Vec<PrefixedPrompt> =
+            Vec::with_capacity(batch.len());
+        let mut any_warm = false;
+        for t in &batch {
+            let p = &t.req.prompt;
+            let clamped = &p[..p.len().min(seq_cap)];
+            let mut warm = None;
+            if self.cfg.prefix_cache && !clamped.is_empty() {
+                if let Some(hit) = self.prefix.lookup(clamped) {
+                    let cached =
+                        hit.cached_tokens.min(clamped.len() - 1);
+                    if cached > 0
+                        && self
+                            .kv
+                            .fork_prefix(
+                                hit.node_seq,
+                                t.req.id,
+                                self.kv.blocks_for(cached),
+                            )
+                            .is_ok()
+                    {
+                        match self.kv.gather_seq(hit.node_seq, cached) {
+                            Some((pk, pv)) => {
+                                warm = Some((hit.node_seq, cached, pk, pv));
+                            }
+                            None => {
+                                // unreachable for a live node; undo the
+                                // fork and fall back to a cold prefill
+                                let _ = self.kv.release(t.req.id);
+                            }
+                        }
+                    }
+                    if warm.is_none() {
+                        self.prefix.unpin(hit.node_seq);
+                    }
+                }
+            }
+            match warm {
+                Some((node, cached, pk, pv)) => {
+                    any_warm = true;
+                    hits.push(Some((node, cached)));
+                    reqs.push(PrefixedPrompt {
+                        tokens: p.clone(),
+                        cached_len: cached,
+                        prefix_k: pk,
+                        prefix_v: pv,
+                    });
+                }
+                None => {
+                    hits.push(None);
+                    reqs.push(PrefixedPrompt {
+                        tokens: p.clone(),
+                        cached_len: 0,
+                        prefix_k: Vec::new(),
+                        prefix_v: Vec::new(),
+                    });
+                }
+            }
+        }
+
+        // Phase B — token-packed submission: each request's prompt (warm:
+        // uncached suffix only) rides verbatim (the engine clamps to the
+        // artifact seq); no PAD rows between requests, so the batch
+        // reaches the kernel as one [total_tokens, d] matrix. An
+        // all-cold batch takes the plain packed path — byte-for-byte the
+        // route a prefix-cache-disabled engine takes.
+        let out = if any_warm {
+            self.rt.prefill_packed_prefixed(&artifact, &binding, &reqs)?
+        } else {
+            let prompts: Vec<Vec<i32>> =
+                reqs.into_iter().map(|r| r.tokens).collect();
+            self.rt.prefill_packed(&artifact, &binding, &prompts)?
+        };
         let total = out.total_tokens();
         EngineMetrics::inc(&self.metrics.prefill_tokens, total as u64);
         // 0 on the native shape-flexible pipeline; the real padding cost
@@ -316,10 +424,18 @@ impl Engine {
         let now = Instant::now();
         let mut start = 0usize; // packed row offset of request i
         for (i, mut t) in batch.drain(..).enumerate() {
+            // packed row count this request contributed: the full
+            // (clamped) prompt when cold, the uncached suffix when warm
             let len = out.lens[i];
+            let (node, cached) = match hits[i] {
+                Some((n, c)) => (Some(n), c),
+                None => (None, 0),
+            };
             // greedy first token from the last prompt position (an empty
             // prompt — rejected at the TCP layer, but defend the engine
-            // too — occupies one PAD row and scores from it)
+            // too — occupies one PAD row and scores from it); a warm
+            // request's last prompt row is always computed (phase A
+            // leaves >= 1 suffix token), so the same indexing holds
             let row = &out.logits
                 [(start + len - 1) * out.vocab..(start + len) * out.vocab];
             let first = argmax(row) as i32;
@@ -334,24 +450,49 @@ impl Engine {
             // fail mid-stream. Blocks may be scattered anywhere. The
             // reservation clamps to the per-sequence cap — a generation
             // budget the cache can't hold truncates at the cap
-            // (run_decode force-completes) instead of erroring.
-            let reserve =
-                (len + t.req.max_new_tokens).min(self.kv.max_seq_tokens);
-            if let Err(err) = self.kv.admit_packed(
-                id,
-                &out.k_cache,
-                &out.v_cache,
-                start,
-                total,
-                len,
-                reserve,
-            ) {
+            // (run_decode force-completes) instead of erroring. Warm
+            // requests extend the table forked in phase A, with the
+            // boundary block copy-on-written if the cached prefix ends
+            // mid-block.
+            let reserve = (cached + len + t.req.max_new_tokens)
+                .min(self.kv.max_seq_tokens);
+            let admitted = if cached > 0 {
+                self.kv.admit_packed_prefixed(
+                    id,
+                    &out.k_cache,
+                    &out.v_cache,
+                    start,
+                    total,
+                    cached,
+                    len,
+                    reserve,
+                )
+            } else {
+                self.kv.admit_packed(
+                    id,
+                    &out.k_cache,
+                    &out.v_cache,
+                    start,
+                    total,
+                    len,
+                    reserve,
+                )
+            };
+            if let Err(err) = admitted {
                 // unservable request (e.g. a prompt longer than the KV
                 // cap on a misconfigured manifest): fail it ALONE with
                 // its prefill-sampled token, never the whole serve loop
                 crate::warn_log!(
                     "request {id} rejected by KV admission: {err}"
                 );
+                if cached > 0 {
+                    // drop the forked table; the donor node keeps its
+                    // own refcounts on the shared blocks
+                    let _ = self.kv.release(id);
+                }
+                if let Some(n) = node {
+                    self.prefix.unpin(n);
+                }
                 start += len;
                 let e2e =
                     now.duration_since(t.arrived).as_secs_f64();
@@ -368,6 +509,28 @@ impl Engine {
                 continue;
             }
             start += len;
+            // reuse accounting only counts admissions it actually served
+            if cached > 0 {
+                EngineMetrics::inc(
+                    &self.metrics.prefix_hit_blocks,
+                    self.kv.blocks_for(cached) as u64,
+                );
+                EngineMetrics::inc(
+                    &self.metrics.prefix_hit_tokens,
+                    cached as u64,
+                );
+            }
+            // publish this prompt's own full blocks back into the cache
+            // before maybe_complete: an immediately-finished request
+            // still seeds the cache for followers
+            if self.cfg.prefix_cache {
+                let clamped_len = t.req.prompt.len().min(seq_cap);
+                let clamped = t.req.prompt[..clamped_len].to_vec();
+                self.prefix.register(id, &clamped, &mut self.kv);
+            }
+            if let Some(n) = node {
+                self.prefix.unpin(n);
+            }
             self.active.insert(
                 id,
                 ActiveSeq {
@@ -383,6 +546,7 @@ impl Engine {
         }
         self.publish_paging();
         self.publish_frag();
+        self.publish_prefix();
         Ok(())
     }
 
@@ -448,8 +612,12 @@ impl Engine {
                 .with_context(|| format!("seq {id} missing from KV"))?;
             // append lands at position `len`: allocate the tail block if
             // `len` crosses a block boundary (a no-op while the
-            // admission-time reservation covers it)
+            // admission-time reservation covers it), then make sure the
+            // target block is exclusively owned — the first append past
+            // a shared cached prefix copy-on-writes it (a no-op on
+            // unshared blocks)
             self.kv.ensure_capacity(*id, len + 1)?;
+            self.kv.make_writable(*id, len)?;
             token[row] = a.last_token;
             pos[row] = len as i32;
             kv_len[row] = (len + 1) as i32;
@@ -560,6 +728,29 @@ impl Engine {
             &self.metrics.weight_prep_misses,
             ps.prep_calls(),
         );
+    }
+
+    /// Push the prefix-cache gauges (resident nodes, lifetime
+    /// evictions). Refreshed after each prefill batch and after
+    /// pressure-driven eviction.
+    fn publish_prefix(&self) {
+        EngineMetrics::set(
+            &self.metrics.prefix_cache_nodes,
+            self.prefix.len() as u64,
+        );
+        EngineMetrics::set(
+            &self.metrics.prefix_evictions,
+            self.prefix.evictions(),
+        );
+    }
+
+    /// Drop every prefix-cache node on serve-loop exit, returning their
+    /// block tables to the pool so the post-run invariant sweep (and a
+    /// fresh serve loop) sees a fully drained allocator.
+    fn shutdown_prefix(&mut self) {
+        self.prefix.clear(&mut self.kv);
+        self.publish_paging();
+        self.publish_prefix();
     }
 
     /// Check the paged KV store's invariants (block tables, refcounts,

@@ -77,6 +77,23 @@ impl PackedPrefillOut {
     }
 }
 
+/// One request of a prefix-aware packed prefill
+/// ([`Engine::prefill_packed_prefixed`]): the **full** prompt plus the
+/// K/V of its already-cached leading tokens, so the backend only has to
+/// compute (or, on the default path, only has to *return*) the suffix.
+pub struct PrefixedPrompt {
+    /// Full prompt tokens — cached prefix followed by the fresh suffix.
+    pub tokens: Vec<i32>,
+    /// Leading tokens whose K/V is already staged in the paged store;
+    /// `0 <= cached_len < tokens.len()` after artifact-seq clamping.
+    pub cached_len: usize,
+    /// Cached-prefix keys, `[L, cached_len, H_kv * D_h]` (empty when
+    /// `cached_len == 0`).
+    pub prefix_k: Vec<f32>,
+    /// Cached-prefix values, same layout as `prefix_k`.
+    pub prefix_v: Vec<f32>,
+}
+
 /// Output of one decode step over caller-owned contiguous caches.
 pub struct DecodeOut {
     /// `[batch, vocab]`
@@ -434,6 +451,97 @@ pub trait Engine {
             v_cache,
             padded_tokens,
             exec_secs,
+        })
+    }
+
+    /// Run a token-packed prefill where each request may carry a cached
+    /// K/V prefix (prefix-cache hit): the returned [`PackedPrefillOut`]
+    /// covers **only the suffix rows** — `lens[i]` is request `i`'s
+    /// suffix length, logits and K/V hold exactly those rows.
+    ///
+    /// The contract is bitwise: the suffix rows must equal the
+    /// corresponding rows of a cold [`Engine::prefill_packed`] over the
+    /// full prompts whenever `prefix_k/v` equal the cold run's prefix
+    /// K/V. The default implementation guarantees this trivially by
+    /// recomputing the full prompts and slicing the suffix out — correct
+    /// for compiled static backends at zero kernel cost (the recomputed
+    /// prefix rows are reported in `padded_tokens`, keeping the wasted-
+    /// compute metric honest). Shape-flexible backends (the native
+    /// engine) override it and genuinely skip the cached rows.
+    fn prefill_packed_prefixed(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        reqs: &[PrefixedPrompt],
+    ) -> Result<PackedPrefillOut> {
+        if reqs.is_empty() {
+            bail!("prefill_packed_prefixed {artifact}: empty batch");
+        }
+        let prompts: Vec<Vec<i32>> =
+            reqs.iter().map(|r| r.tokens.clone()).collect();
+        let full = self.prefill_packed(artifact, binding, &prompts)?;
+        for (i, r) in reqs.iter().enumerate() {
+            if r.cached_len >= full.lens[i] {
+                bail!(
+                    "prefill_packed_prefixed {artifact}: request {i} has \
+                     cached_len {} but only {} prompt rows — at least one \
+                     suffix token must be computed",
+                    r.cached_len,
+                    full.lens[i]
+                );
+            }
+        }
+        let model_name = artifact.split('.').next().unwrap_or(artifact);
+        let layers = self
+            .manifest()
+            .models
+            .get(model_name)
+            .and_then(|m| m.config.get("n_layers").copied())
+            .filter(|&l| l > 0)
+            .ok_or_else(|| {
+                anyhow!(
+                    "prefill_packed_prefixed {artifact}: model \
+                     '{model_name}' missing n_layers"
+                )
+            })?;
+        let total_full = full.total_tokens();
+        let kvd = full.k_cache.len() / (layers * total_full).max(1);
+        let lens: Vec<usize> = reqs
+            .iter()
+            .zip(&full.lens)
+            .map(|(r, &l)| l - r.cached_len)
+            .collect();
+        let total: usize = lens.iter().sum();
+        let vocab = full.vocab;
+        let mut logits = vec![0.0f32; total * vocab];
+        let mut k_cache = vec![0.0f32; layers * total * kvd];
+        let mut v_cache = vec![0.0f32; layers * total * kvd];
+        let mut row = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            let src0 = full.row_start(i) + r.cached_len;
+            let n = lens[i];
+            logits[row * vocab..(row + n) * vocab].copy_from_slice(
+                &full.logits[src0 * vocab..(src0 + n) * vocab],
+            );
+            for l in 0..layers {
+                let src = (l * total_full + src0) * kvd;
+                let dst = (l * total + row) * kvd;
+                k_cache[dst..dst + n * kvd]
+                    .copy_from_slice(&full.k_cache[src..src + n * kvd]);
+                v_cache[dst..dst + n * kvd]
+                    .copy_from_slice(&full.v_cache[src..src + n * kvd]);
+            }
+            row += n;
+        }
+        let recomputed: usize = reqs.iter().map(|r| r.cached_len).sum();
+        Ok(PackedPrefillOut {
+            logits,
+            lens,
+            vocab,
+            k_cache,
+            v_cache,
+            padded_tokens: full.padded_tokens + recomputed,
+            exec_secs: full.exec_secs,
         })
     }
 

@@ -23,7 +23,8 @@ pub mod pjrt;
 pub use artifact::{ArtifactMeta, Manifest};
 pub use engine::{
     engine_for, DecodeOut, Engine, ModuleAudit, PackedPrefillOut,
-    PagedDecodeOut, PagedKv, PrefillOut, PrepStats, SparsityAudit,
+    PagedDecodeOut, PagedKv, PrefillOut, PrefixedPrompt, PrepStats,
+    SparsityAudit,
 };
 pub use native::{ModelSpec, NativeEngine};
 #[cfg(feature = "pjrt")]

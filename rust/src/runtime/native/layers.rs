@@ -328,6 +328,22 @@ pub(super) fn softmax_inplace(scores: &mut [f32]) {
     }
 }
 
+/// One segment's cached-prefix K/V for prefix-aware attention: `len`
+/// leading positions whose rows live in `k`/`v` (`[len, H_kv*D_h]`,
+/// a single layer's slice). `len == 0` marks a cold segment.
+pub(super) struct SegPrefix<'a> {
+    pub len: usize,
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+}
+
+impl SegPrefix<'_> {
+    /// An empty (cold) prefix.
+    pub(super) fn none() -> SegPrefix<'static> {
+        SegPrefix { len: 0, k: &[], v: &[] }
+    }
+}
+
 /// Causal GQA attention over token-packed segments: `segs` lists each
 /// request's `(start_row, len)` in the packed `[total, *]` activation;
 /// every token attends to its own segment's prefix only. A right-padded
@@ -340,22 +356,57 @@ pub(super) fn causal_attention_segments(
     segs: &[(usize, usize)],
     sp: &ModelSpec,
 ) -> Vec<f32> {
+    let cold: Vec<SegPrefix<'_>> =
+        segs.iter().map(|_| SegPrefix::none()).collect();
+    causal_attention_segments_prefixed(q, k, v, segs, &cold, sp)
+}
+
+/// Prefix-aware causal GQA attention: segment `i`'s queries sit at
+/// **global** positions `prefixes[i].len ..`, attending first over the
+/// cached-prefix K/V rows and then over the segment's own fresh rows.
+/// With empty prefixes this is exactly [`causal_attention_segments`] —
+/// one implementation, so the cold and warm paths cannot drift. The
+/// float op sequence per query is identical to a cold run over the full
+/// sequence (same ascending-`j` dots, same softmax over the same score
+/// vector, same ascending-`j` V accumulation), which is what makes
+/// forked-prefix prefill bitwise equal to cold prefill.
+pub(super) fn causal_attention_segments_prefixed(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    segs: &[(usize, usize)],
+    prefixes: &[SegPrefix<'_>],
+    sp: &ModelSpec,
+) -> Vec<f32> {
     let (qd, kvd, dh) = (sp.q_dim(), sp.kv_dim(), sp.head_dim);
     let group = sp.n_q_heads / sp.n_kv_heads;
     let inv_sqrt = 1.0 / (dh as f32).sqrt();
     let total = q.len() / qd;
-    let max_len = segs.iter().map(|&(_, l)| l).max().unwrap_or(0);
+    debug_assert_eq!(segs.len(), prefixes.len());
+    let max_len = segs
+        .iter()
+        .zip(prefixes.iter())
+        .map(|(&(_, l), pre)| l + pre.len)
+        .max()
+        .unwrap_or(0);
     let mut out = vec![0.0f32; total * qd];
     let mut scores = vec![0.0f32; max_len];
-    for &(start, len) in segs {
+    for (&(start, len), pre) in segs.iter().zip(prefixes.iter()) {
+        let off = pre.len;
         for p in 0..len {
             let qbase = (start + p) * qd;
+            let span = off + p + 1;
             for hq in 0..sp.n_q_heads {
                 let kvh = hq / group;
                 let qrow = &q[qbase + hq * dh..qbase + (hq + 1) * dh];
-                for (j, sc) in scores.iter_mut().take(p + 1).enumerate() {
-                    let kr = (start + j) * kvd + kvh * dh;
-                    let krow = &k[kr..kr + dh];
+                for (j, sc) in scores.iter_mut().take(span).enumerate() {
+                    let krow = if j < off {
+                        let kr = j * kvd + kvh * dh;
+                        &pre.k[kr..kr + dh]
+                    } else {
+                        let kr = (start + j - off) * kvd + kvh * dh;
+                        &k[kr..kr + dh]
+                    };
                     let dot: f32 = qrow
                         .iter()
                         .zip(krow.iter())
@@ -363,13 +414,18 @@ pub(super) fn causal_attention_segments(
                         .sum();
                     *sc = dot * inv_sqrt;
                 }
-                softmax_inplace(&mut scores[..p + 1]);
+                softmax_inplace(&mut scores[..span]);
                 let orow =
                     &mut out[qbase + hq * dh..qbase + (hq + 1) * dh];
-                for (j, &wgt) in scores[..p + 1].iter().enumerate() {
-                    let vr = (start + j) * kvd + kvh * dh;
-                    for (oe, &ve) in orow.iter_mut().zip(v[vr..vr + dh].iter())
-                    {
+                for (j, &wgt) in scores[..span].iter().enumerate() {
+                    let vrow = if j < off {
+                        let vr = j * kvd + kvh * dh;
+                        &pre.v[vr..vr + dh]
+                    } else {
+                        let vr = (start + j - off) * kvd + kvh * dh;
+                        &v[vr..vr + dh]
+                    };
+                    for (oe, &ve) in orow.iter_mut().zip(vrow.iter()) {
                         *oe += wgt * ve;
                     }
                 }
@@ -406,5 +462,95 @@ impl NativeModel {
             scale: None,
         };
         head.run(&h, t, 0, &opts, audit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Splitting a segment at any offset into (cached prefix, fresh
+    /// suffix) must reproduce the cold attention rows bitwise — the
+    /// kernel-level core of the prefix-parity contract.
+    #[test]
+    fn prefixed_attention_matches_cold_at_every_split() {
+        let sp = ModelSpec::tiny("attn-parity");
+        let (qd, kvd) = (sp.q_dim(), sp.kv_dim());
+        let len = 9usize;
+        let mut rng = Rng::new(42);
+        let fill = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.below(2000) as f32 / 1000.0 - 1.0).collect()
+        };
+        let q = fill(&mut rng, len * qd);
+        let k = fill(&mut rng, len * kvd);
+        let v = fill(&mut rng, len * kvd);
+        let cold = causal_attention_segments(&q, &k, &v, &[(0, len)], &sp);
+        for off in 1..len {
+            let pre = SegPrefix {
+                len: off,
+                k: &k[..off * kvd],
+                v: &v[..off * kvd],
+            };
+            let warm = causal_attention_segments_prefixed(
+                &q[off * qd..],
+                &k[off * kvd..],
+                &v[off * kvd..],
+                &[(0, len - off)],
+                &[pre],
+                &sp,
+            );
+            assert_eq!(warm, cold[off * qd..], "split at {off} drifted");
+        }
+    }
+
+    /// Two packed segments, one warm and one cold, in the same call:
+    /// the cold segment must be unaffected by its neighbor's prefix.
+    #[test]
+    fn mixed_warm_cold_segments_are_independent() {
+        let sp = ModelSpec::tiny("attn-mixed");
+        let (qd, kvd) = (sp.q_dim(), sp.kv_dim());
+        let (a_len, b_len, off) = (6usize, 5usize, 4usize);
+        let mut rng = Rng::new(7);
+        let fill = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.below(2000) as f32 / 1000.0 - 1.0).collect()
+        };
+        // request A: full sequence a_len, suffix computed after `off`
+        let qa = fill(&mut rng, a_len * qd);
+        let ka = fill(&mut rng, a_len * kvd);
+        let va = fill(&mut rng, a_len * kvd);
+        // request B: cold
+        let qb = fill(&mut rng, b_len * qd);
+        let kb = fill(&mut rng, b_len * kvd);
+        let vb = fill(&mut rng, b_len * kvd);
+        let cold_a =
+            causal_attention_segments(&qa, &ka, &va, &[(0, a_len)], &sp);
+        let cold_b =
+            causal_attention_segments(&qb, &kb, &vb, &[(0, b_len)], &sp);
+        // packed: A's suffix rows then B's full rows
+        let sfx = a_len - off;
+        let mut q = qa[off * qd..].to_vec();
+        q.extend_from_slice(&qb);
+        let mut k = ka[off * kvd..].to_vec();
+        k.extend_from_slice(&kb);
+        let mut v = va[off * kvd..].to_vec();
+        v.extend_from_slice(&vb);
+        let out = causal_attention_segments_prefixed(
+            &q,
+            &k,
+            &v,
+            &[(0, sfx), (sfx, b_len)],
+            &[
+                SegPrefix {
+                    len: off,
+                    k: &ka[..off * kvd],
+                    v: &va[..off * kvd],
+                },
+                SegPrefix::none(),
+            ],
+            &sp,
+        );
+        assert_eq!(out[..sfx * qd], cold_a[off * qd..]);
+        assert_eq!(out[sfx * qd..], cold_b[..]);
     }
 }

@@ -57,7 +57,7 @@ use anyhow::{anyhow, bail, Result};
 use super::artifact::Manifest;
 use super::engine::{
     DecodeOut, Engine, PackedPrefillOut, PagedDecodeOut, PagedKv,
-    PrefillOut, PrepStats, SparsityAudit,
+    PrefillOut, PrefixedPrompt, PrepStats, SparsityAudit,
 };
 use crate::exec::ThreadPool;
 use crate::sparsity::plan::{SparsityPlan, TileTable};
@@ -66,6 +66,7 @@ use crate::sparsity::spmm::DEFAULT_BLOCK_ROWS;
 use crate::util::json::Json;
 
 use layers::ExecOpts;
+use prefill::PrefixKv;
 use prepared::{PrepCache, PreparedModel};
 
 /// The native CPU execution engine (see module docs).
@@ -300,6 +301,44 @@ impl NativeEngine {
         self.audit = audit;
         Ok((logits, k_cache, v_cache, vocab, exec_secs))
     }
+
+    /// Prefix-aware variant of [`NativeEngine::exec_prefill`]: segment
+    /// `i` holds only its request's suffix tokens and `prefixes[i]`
+    /// carries the cached-prefix K/V (`[L, len, H_kv*D_h]`). Cold
+    /// prefill is the all-empty-prefix special case, so the two paths
+    /// share one pipeline and cannot drift.
+    fn exec_prefill_prefixed(
+        &mut self,
+        artifact: &str,
+        quantized: bool,
+        binding: &str,
+        tokens: &[i32],
+        lens: &[usize],
+        prefixes: &[PrefixKv<'_>],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, usize, f64)> {
+        let plan = Arc::clone(self.binding_plan(artifact, binding)?);
+        let prepared = self.prepared_for(artifact, &plan.tiles)?;
+        let validate = self.validate;
+        let block_rows = self.block_rows;
+        let pool = self.pool.clone();
+        let mut audit = self.audit;
+        let model = self.model_for_artifact(artifact)?;
+        let opts = ExecOpts::new(
+            &plan,
+            quantized,
+            validate,
+            pool.as_deref(),
+            block_rows,
+        );
+        let vocab = model.spec.vocab;
+        let t0 = Instant::now();
+        let (logits, k_cache, v_cache) = model.prefill_segments_prefixed(
+            tokens, lens, prefixes, &prepared, &opts, &mut audit,
+        );
+        let exec_secs = t0.elapsed().as_secs_f64();
+        self.audit = audit;
+        Ok((logits, k_cache, v_cache, vocab, exec_secs))
+    }
 }
 
 fn binding_key(artifact: &str, binding: &str) -> String {
@@ -471,6 +510,88 @@ impl Engine for NativeEngine {
             k_cache,
             v_cache,
             padded_tokens: 0, // shape-flexible: no PAD rows computed
+            exec_secs,
+        })
+    }
+
+    fn prefill_packed_prefixed(
+        &mut self,
+        artifact: &str,
+        binding: &str,
+        reqs: &[PrefixedPrompt],
+    ) -> Result<PackedPrefillOut> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if meta.kind != "prefill" {
+            bail!("artifact {artifact} is not a prefill artifact");
+        }
+        if reqs.is_empty() {
+            bail!("prefill_packed_prefixed {artifact}: empty batch");
+        }
+        let s = meta.seq;
+        if s == 0 {
+            bail!("prefill_packed_prefixed {artifact}: degenerate seq 0");
+        }
+        let (layers, kvd) = {
+            let spec = &self.model_for_artifact(artifact)?.spec;
+            (spec.n_layers, spec.kv_dim())
+        };
+        // clamp to the artifact's seq (the scheduler clamps before the
+        // prefix lookup, so cached_len is always within the clamped
+        // prompt); validate the prefix buffers before any kernel runs
+        let mut lens = Vec::with_capacity(reqs.len());
+        let mut tokens: Vec<i32> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let full = r.tokens.len().min(s).max(1);
+            if r.cached_len >= full {
+                bail!(
+                    "prefill_packed_prefixed {artifact}: request {i} has \
+                     cached_len {} but only {full} prompt rows — at least \
+                     one suffix token must be computed",
+                    r.cached_len
+                );
+            }
+            let want = layers * r.cached_len * kvd;
+            if r.prefix_k.len() != want || r.prefix_v.len() != want {
+                bail!(
+                    "prefill_packed_prefixed {artifact}: request {i} \
+                     prefix K/V must be [L={layers}, {}, {kvd}] = {want} \
+                     floats (got {}/{})",
+                    r.cached_len,
+                    r.prefix_k.len(),
+                    r.prefix_v.len()
+                );
+            }
+            lens.push(full - r.cached_len);
+            if r.tokens.is_empty() {
+                tokens.push(0); // PAD, mirroring prefill_packed
+            } else {
+                tokens.extend_from_slice(&r.tokens[r.cached_len..full]);
+            }
+        }
+        let prefixes: Vec<PrefixKv<'_>> = reqs
+            .iter()
+            .map(|r| PrefixKv {
+                len: r.cached_len,
+                k: &r.prefix_k,
+                v: &r.prefix_v,
+            })
+            .collect();
+        let (logits, k_cache, v_cache, vocab, exec_secs) = self
+            .exec_prefill_prefixed(
+                artifact,
+                meta.variant.starts_with("sq"),
+                binding,
+                &tokens,
+                &lens,
+                &prefixes,
+            )?;
+        Ok(PackedPrefillOut {
+            logits,
+            lens,
+            vocab,
+            k_cache,
+            v_cache,
+            padded_tokens: 0, // cached rows are genuinely skipped
             exec_secs,
         })
     }

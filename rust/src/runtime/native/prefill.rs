@@ -15,10 +15,27 @@ use std::sync::Arc;
 use crate::runtime::engine::SparsityAudit;
 
 use super::layers::{
-    causal_attention_segments, rmsnorm, silu, ExecOpts, ProjKind,
+    causal_attention_segments_prefixed, rmsnorm, silu, ExecOpts,
+    ProjKind, SegPrefix,
 };
 use super::model::NativeModel;
 use super::prepared::PreparedModel;
+
+/// One request's cached-prefix K/V for the prefixed prefill pipeline:
+/// `len` leading tokens whose keys/values live in `k`/`v` as
+/// `[L, len, H_kv*D_h]`. `len == 0` marks a cold request.
+pub(super) struct PrefixKv<'a> {
+    pub len: usize,
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+}
+
+impl PrefixKv<'_> {
+    /// An empty (cold) prefix.
+    pub(super) fn none() -> PrefixKv<'static> {
+        PrefixKv { len: 0, k: &[], v: &[] }
+    }
+}
 
 impl NativeModel {
     /// Forward pass over packed segments: `tokens` is the concatenation
@@ -36,10 +53,41 @@ impl NativeModel {
         opts: &ExecOpts<'_>,
         audit: &mut SparsityAudit,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let cold: Vec<PrefixKv<'_>> =
+            lens.iter().map(|_| PrefixKv::none()).collect();
+        self.prefill_segments_prefixed(
+            tokens, lens, &cold, prepared, opts, audit,
+        )
+    }
+
+    /// Prefix-aware packed prefill: segment `i` holds only the **suffix**
+    /// tokens of its request (`lens[i]` of them), sitting at global
+    /// positions `prefixes[i].len ..` of the sequence; attention reads
+    /// the cached-prefix K/V from `prefixes[i]` and the fresh rows from
+    /// this pass. Logits and the `[L, total, H_kv*Dh]` caches cover the
+    /// suffix rows only. With empty prefixes this **is**
+    /// [`NativeModel::prefill_segments`] — the cold path delegates here,
+    /// so the two cannot drift. Every per-row stage (embed, rmsnorm,
+    /// projections, N:M compression, W8A8 per-token scales, lm_head)
+    /// is row-independent, and the model applies no positional encoding
+    /// (causality alone breaks symmetry), so suffix rows computed here
+    /// are bitwise equal to the same rows of a cold full-prompt prefill
+    /// whenever the cached K/V is bitwise equal — the prefix-parity
+    /// suite pins exactly that.
+    pub(super) fn prefill_segments_prefixed(
+        &self,
+        tokens: &[i32],
+        lens: &[usize],
+        prefixes: &[PrefixKv<'_>],
+        prepared: &PreparedModel,
+        opts: &ExecOpts<'_>,
+        audit: &mut SparsityAudit,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let sp = &self.spec;
         let (d, kvd) = (sp.d_model, sp.kv_dim());
         let t: usize = lens.iter().sum();
         debug_assert_eq!(tokens.len(), t, "tokens must match packed lens");
+        debug_assert_eq!(lens.len(), prefixes.len());
         let mut segs = Vec::with_capacity(lens.len());
         let mut start = 0usize;
         for &len in lens {
@@ -71,8 +119,20 @@ impl NativeModel {
             let base = l * t * kvd;
             k_cache[base..base + t * kvd].copy_from_slice(&k);
             v_cache[base..base + t * kvd].copy_from_slice(&v);
-            let attn = Arc::new(causal_attention_segments(
-                &q, &k, &v, &segs, sp,
+            // this layer's slice of each request's cached-prefix K/V
+            let seg_pre: Vec<SegPrefix<'_>> = prefixes
+                .iter()
+                .map(|pre| {
+                    let span = pre.len * kvd;
+                    SegPrefix {
+                        len: pre.len,
+                        k: &pre.k[l * span..(l + 1) * span],
+                        v: &pre.v[l * span..(l + 1) * span],
+                    }
+                })
+                .collect();
+            let attn = Arc::new(causal_attention_segments_prefixed(
+                &q, &k, &v, &segs, &seg_pre, sp,
             ));
             let o = lw
                 .projection(ProjKind::O, sp, pl)

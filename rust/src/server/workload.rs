@@ -48,6 +48,14 @@ pub struct WorkloadSpec {
     pub mix: Vec<(SparsityConfig, f64)>,
     /// RNG seed (same spec -> same workload)
     pub seed: u64,
+    /// multi-tenant shared prefixes: requests are assigned round-robin
+    /// to this many tenants, each with a fixed prompt prefix (0 or 1 =
+    /// every prompt independent, the default)
+    pub tenants: usize,
+    /// tokens of shared per-tenant prompt prefix (counts toward the
+    /// prompt length; block-align it to the engine's `kv_block` to make
+    /// every shared token prefix-cacheable)
+    pub tenant_prefix_len: usize,
 }
 
 impl WorkloadSpec {
@@ -61,7 +69,25 @@ impl WorkloadSpec {
             max_new_tokens: 8,
             mix: vec![(SparsityConfig::dense(), 1.0)],
             seed: 7,
+            tenants: 0,
+            tenant_prefix_len: 0,
         }
+    }
+
+    /// `n` all-dense requests split across `tenants` tenants, each
+    /// sharing a fixed `prefix_len`-token prompt prefix — the canonical
+    /// prefix-cache workload (warm requests prefill only their suffix).
+    pub fn shared_prefix(
+        n: usize,
+        tenants: usize,
+        prefix_len: usize,
+    ) -> WorkloadSpec {
+        let mut spec = WorkloadSpec::uniform_dense(n);
+        spec.prompt_len_lo = spec.prompt_len_lo.max(prefix_len + 4);
+        spec.prompt_len_hi = spec.prompt_len_hi.max(prefix_len + 16);
+        spec.tenants = tenants;
+        spec.tenant_prefix_len = prefix_len;
+        spec
     }
 }
 
@@ -124,6 +150,19 @@ pub fn gen_prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
 pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
     let mut rng = Rng::new(spec.seed);
     let total_w: f64 = spec.mix.iter().map(|(_, w)| w).sum();
+    // fixed per-tenant prompt prefixes, each from its own sub-rng so the
+    // per-request token stream below is untouched by the tenant count
+    let tenanted = spec.tenants > 1 && spec.tenant_prefix_len > 0;
+    let prefixes: Vec<Vec<i32>> = if tenanted {
+        (0..spec.tenants)
+            .map(|t| {
+                let mut trng = Rng::new(spec.seed ^ (0x7e4a_0001 + t as u64));
+                gen_prompt(&mut trng, spec.tenant_prefix_len)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut out = Vec::with_capacity(spec.n_requests);
     let mut t = 0.0;
     for id in 0..spec.n_requests {
@@ -141,11 +180,27 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
         if spec.rate > 0.0 {
             t += rng.exp(spec.rate);
         }
+        // tenant mode: the tenant's fixed prefix + a per-request
+        // grammar-word suffix (always >= 1 suffix token, so every
+        // prompt diverges from its shared prefix)
+        let prompt = if tenanted {
+            let mut p = prefixes[id % spec.tenants].clone();
+            let target = len.max(p.len() + 1);
+            while p.len() < target {
+                p.push(
+                    vocab::WORD_A0
+                        + rng.below(vocab::N_WORDS_A as u64) as i32,
+                );
+            }
+            p
+        } else {
+            gen_prompt(&mut rng, len)
+        };
         out.push(TimedRequest {
             at: t,
             req: Request {
                 id: id as u64,
-                prompt: gen_prompt(&mut rng, len),
+                prompt,
                 max_new_tokens: spec.max_new_tokens,
                 config,
             },
@@ -180,6 +235,31 @@ mod tests {
             assert!(w[1].at >= w[0].at);
         }
         assert!(reqs.last().unwrap().at > 0.0);
+    }
+
+    #[test]
+    fn shared_prefix_tenants_share_exact_prefixes() {
+        let spec = WorkloadSpec::shared_prefix(12, 3, 16);
+        let reqs = generate(&spec);
+        assert_eq!(reqs.len(), 12);
+        for (i, r) in reqs.iter().enumerate() {
+            let peer = &reqs[i % 3].req.prompt; // same tenant as i
+            assert_eq!(
+                &r.req.prompt[..16],
+                &peer[..16],
+                "tenant {} prefix mismatch at request {i}",
+                i % 3
+            );
+            assert!(r.req.prompt.len() > 16, "must diverge after prefix");
+        }
+        // distinct tenants get distinct prefixes
+        assert_ne!(reqs[0].req.prompt[..16], reqs[1].req.prompt[..16]);
+        assert_ne!(reqs[1].req.prompt[..16], reqs[2].req.prompt[..16]);
+        // deterministic
+        let again = generate(&spec);
+        for (a, b) in reqs.iter().zip(again.iter()) {
+            assert_eq!(a.req.prompt, b.req.prompt);
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@ use amber_pruner::coordinator::scheduler::{
 use amber_pruner::coordinator::request::{Request, SparsityConfig};
 use amber_pruner::metrics::EngineMetrics;
 use amber_pruner::runtime::NativeEngine;
+use amber_pruner::server::workload::{generate, WorkloadSpec};
 use amber_pruner::util::rng::Rng;
 
 fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
@@ -145,4 +146,61 @@ fn single_config_batch_completes_in_submission_order() {
     let audit = engine.audit().unwrap();
     assert_eq!(audit.nm_violations, 0);
     assert!(audit.pruned_matmuls > 0);
+}
+
+#[test]
+fn shared_prefix_tenants_hit_the_prefix_cache() {
+    // the canonical multi-tenant prefix-cache workload (ISSUE 6): 9
+    // requests across 3 tenants, each tenant sharing a 32-token
+    // (2-block) prompt prefix. Wave 1 serves one request per tenant
+    // cold and seeds the cache; wave 2's six requests each fork the
+    // cached prefix instead of re-prefilling it. Driven by manual
+    // `step()` (run() clears the cache on exit).
+    use std::sync::atomic::Ordering;
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new("tiny-lm-a");
+    cfg.pool_threads = 1;
+    let mut engine = Engine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let reqs = generate(&WorkloadSpec::shared_prefix(9, 3, 32));
+    assert_eq!(reqs.len(), 9);
+    let (reply_tx, reply_rx) = channel();
+    let mut it = reqs.into_iter();
+    // wave 1: one request per tenant, all cold
+    for t in it.by_ref().take(3) {
+        engine.submit(t.req, reply_tx.clone());
+    }
+    while engine.step().unwrap() {}
+    assert_eq!(
+        metrics.prefix_hit_blocks.load(Ordering::Relaxed),
+        0,
+        "first request of each tenant must prefill cold"
+    );
+    // wave 2: two more per tenant — each reuses the 32-token prefix
+    for t in it {
+        engine.submit(t.req, reply_tx.clone());
+    }
+    while engine.step().unwrap() {}
+    drop(reply_tx);
+    assert_eq!(
+        metrics.prefix_hit_blocks.load(Ordering::Relaxed),
+        12,
+        "6 warm requests x 2 shared blocks each"
+    );
+    assert_eq!(
+        metrics.prefix_hit_tokens.load(Ordering::Relaxed),
+        6 * 32,
+        "every warm request skips the full 32-token prefix"
+    );
+    assert!(metrics.prefix_cache_nodes.load(Ordering::Relaxed) > 0);
+    engine.kv_invariants().unwrap();
+    let responses: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(responses.len(), 9, "every request must complete");
+    for r in &responses {
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 8);
+    }
 }
