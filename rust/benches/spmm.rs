@@ -25,11 +25,19 @@
 //! carries `prep_secs` + `breakeven_calls` — how many kernel calls the
 //! one-time preparation needs to pay for itself against the unpacked
 //! per-call path.
+//!
+//! Since the explicit-SIMD layer (ISSUE 7) the packed series runs once
+//! per dispatch level the host CPU offers (just `scalar` on default
+//! features; AVX2/AVX-512/NEON under `--features simd`), each row
+//! tagged with its `dispatch` level, and the sparse:dense crossover is
+//! recomputed per level (`crossover_by_dispatch`) — vectorizing both
+//! sides of the comparison moves the break-even honestly.
 
 use std::collections::BTreeMap;
 
 use amber_pruner::bench::{bench, black_box};
 use amber_pruner::kernels::pack::PackedPanels;
+use amber_pruner::kernels::simd::Dispatch;
 use amber_pruner::kernels::{dense, int8, nm, reference, DEFAULT_DOUT_TILE};
 use amber_pruner::quant;
 use amber_pruner::sparsity::plan::planned_tile;
@@ -62,6 +70,9 @@ struct Row {
     breakeven_calls: Option<f64>,
     /// panel width of the packed layout (packed rows)
     panel_w: Option<usize>,
+    /// SIMD dispatch level the series ran at ("scalar" unless the
+    /// `simd` feature resolved a vector level for a packed row)
+    dispatch: &'static str,
 }
 
 impl Row {
@@ -86,6 +97,7 @@ impl Row {
                 .map(|w| Json::Num(w as f64))
                 .unwrap_or(Json::Null),
         );
+        o.insert("dispatch".into(), Json::Str(self.dispatch.into()));
         o.insert(
             "ratio".into(),
             match self.ratio {
@@ -123,6 +135,16 @@ fn main() {
     let mut rows: Vec<Row> = Vec::new();
     // tiled-dense medians per token count, the speedup/crossover base
     let mut dense_tiled_med: BTreeMap<usize, f64> = BTreeMap::new();
+    // every SIMD dispatch level this build/CPU offers (just scalar on
+    // default features): the packed series runs once per level, and
+    // the sparse:dense crossover is recomputed per level
+    let levels = Dispatch::available_levels();
+    let mut packed_dense_med: BTreeMap<(&'static str, usize), f64> =
+        BTreeMap::new();
+    let mut packed_nm_med: BTreeMap<
+        (&'static str, usize, usize, usize),
+        f64,
+    > = BTreeMap::new();
 
     // ---- one-time preparation (what NativeEngine::bind amortizes):
     // panel packing at the planned width, and quantize-once + pack for
@@ -175,6 +197,7 @@ fn main() {
             prep_secs: None,
             breakeven_calls: None,
             panel_w: None,
+            dispatch: "scalar",
         });
         let mut out = vec![0.0f32; t * DOUT];
         let r = bench(
@@ -206,31 +229,37 @@ fn main() {
             prep_secs: None,
             breakeven_calls: None,
             panel_w: None,
+            dispatch: "scalar",
         });
-        let r = bench(
-            &format!("dense.packed         t={t}"),
-            WARMUP,
-            ITERS,
-            Some(dense_flops),
-            || {
-                dense::dense_tiled_packed(&x, t, DIN, &packed, &mut out);
-                black_box(&out);
-            },
-        );
-        rows.push(Row {
-            kernel: "dense",
-            imp: "packed",
-            ratio: None,
-            tokens: t,
-            median_secs: r.median_secs,
-            executed_flops: dense_flops,
-            prep_secs: Some(pack_secs),
-            breakeven_calls: breakeven(
-                pack_secs,
-                dense_tiled_med[&t] - r.median_secs,
-            ),
-            panel_w: Some(panel_w),
-        });
+        for &level in &levels {
+            let disp = Dispatch::force(level).unwrap();
+            let r = bench(
+                &format!("dense.packed.{:<6} t={t}", level.name()),
+                WARMUP,
+                ITERS,
+                Some(dense_flops),
+                || {
+                    (disp.dense)(&x, t, DIN, &packed, &mut out);
+                    black_box(&out);
+                },
+            );
+            packed_dense_med.insert((level.name(), t), r.median_secs);
+            rows.push(Row {
+                kernel: "dense",
+                imp: "packed",
+                ratio: None,
+                tokens: t,
+                median_secs: r.median_secs,
+                executed_flops: dense_flops,
+                prep_secs: Some(pack_secs),
+                breakeven_calls: breakeven(
+                    pack_secs,
+                    dense_tiled_med[&t] - r.median_secs,
+                ),
+                panel_w: Some(panel_w),
+                dispatch: level.name(),
+            });
+        }
 
         // ---- N:M compressed SpMM, every ratio
         for &(n, m) in &RATIOS {
@@ -258,6 +287,7 @@ fn main() {
                 prep_secs: None,
                 breakeven_calls: None,
                 panel_w: None,
+                dispatch: "scalar",
             });
             let mut out = vec![0.0f32; t * DOUT];
             let r = bench(
@@ -295,34 +325,44 @@ fn main() {
                 prep_secs: None,
                 breakeven_calls: None,
                 panel_w: None,
+                dispatch: "scalar",
             });
-            let r = bench(
-                &format!("nm{n}_{m}.packed       t={t}"),
-                WARMUP,
-                ITERS,
-                Some(sparse_flops),
-                || {
-                    nm::spmm_nm_tiled_packed(
-                        &c.values, &c.index, t, per_row, &packed,
-                        &mut out,
-                    );
-                    black_box(&out);
-                },
-            );
-            rows.push(Row {
-                kernel: "nm",
-                imp: "packed",
-                ratio: Some((n, m)),
-                tokens: t,
-                median_secs: r.median_secs,
-                executed_flops: sparse_flops,
-                prep_secs: Some(pack_secs),
-                breakeven_calls: breakeven(
-                    pack_secs,
-                    nm_tiled_med - r.median_secs,
-                ),
-                panel_w: Some(panel_w),
-            });
+            for &level in &levels {
+                let disp = Dispatch::force(level).unwrap();
+                let r = bench(
+                    &format!(
+                        "nm{n}_{m}.packed.{:<6} t={t}",
+                        level.name()
+                    ),
+                    WARMUP,
+                    ITERS,
+                    Some(sparse_flops),
+                    || {
+                        (disp.spmm)(
+                            &c.values, &c.index, t, per_row, &packed,
+                            &mut out,
+                        );
+                        black_box(&out);
+                    },
+                );
+                packed_nm_med
+                    .insert((level.name(), n, m, t), r.median_secs);
+                rows.push(Row {
+                    kernel: "nm",
+                    imp: "packed",
+                    ratio: Some((n, m)),
+                    tokens: t,
+                    median_secs: r.median_secs,
+                    executed_flops: sparse_flops,
+                    prep_secs: Some(pack_secs),
+                    breakeven_calls: breakeven(
+                        pack_secs,
+                        nm_tiled_med - r.median_secs,
+                    ),
+                    panel_w: Some(panel_w),
+                    dispatch: level.name(),
+                });
+            }
         }
 
         // ---- W8A8 int8 (per-token activation scales, as served)
@@ -348,6 +388,7 @@ fn main() {
             prep_secs: None,
             breakeven_calls: None,
             panel_w: None,
+            dispatch: "scalar",
         });
         let mut out = vec![0.0f32; t * DOUT];
         let r = bench(
@@ -381,36 +422,42 @@ fn main() {
             prep_secs: None,
             breakeven_calls: None,
             panel_w: None,
+            dispatch: "scalar",
         });
-        let r = bench(
-            &format!("w8a8.packed          t={t}"),
-            WARMUP,
-            ITERS,
-            Some(dense_flops),
-            || {
-                int8::w8a8_tiled_per_token_packed(
-                    &xq, t, DIN, &wq_packed, &xs, &ws_packed, &mut out,
-                );
-                black_box(&out);
-            },
-        );
-        rows.push(Row {
-            kernel: "w8a8",
-            imp: "packed",
-            ratio: None,
-            tokens: t,
-            median_secs: r.median_secs,
-            executed_flops: dense_flops,
-            prep_secs: Some(qpack_secs),
-            // the pre-prep W8A8 hot path re-quantized the weight on
-            // every call: the per-call saving includes that avoided
-            // quantization on top of the kernel delta
-            breakeven_calls: breakeven(
-                qpack_secs,
-                quant_secs + w8a8_tiled_med - r.median_secs,
-            ),
-            panel_w: Some(panel_w),
-        });
+        for &level in &levels {
+            let disp = Dispatch::force(level).unwrap();
+            let r = bench(
+                &format!("w8a8.packed.{:<6} t={t}", level.name()),
+                WARMUP,
+                ITERS,
+                Some(dense_flops),
+                || {
+                    (disp.w8a8)(
+                        &xq, t, DIN, &wq_packed, &xs, &ws_packed,
+                        &mut out,
+                    );
+                    black_box(&out);
+                },
+            );
+            rows.push(Row {
+                kernel: "w8a8",
+                imp: "packed",
+                ratio: None,
+                tokens: t,
+                median_secs: r.median_secs,
+                executed_flops: dense_flops,
+                prep_secs: Some(qpack_secs),
+                // the pre-prep W8A8 hot path re-quantized the weight
+                // on every call: the per-call saving includes that
+                // avoided quantization on top of the kernel delta
+                breakeven_calls: breakeven(
+                    qpack_secs,
+                    quant_secs + w8a8_tiled_med - r.median_secs,
+                ),
+                panel_w: Some(panel_w),
+                dispatch: level.name(),
+            });
+        }
 
         // compression overhead itself (prefill would fuse this)
         bench(
@@ -452,6 +499,38 @@ fn main() {
         );
     }
 
+    // ---- per-dispatch crossover: same question for the packed
+    // kernels at every available SIMD level (packed N:M vs packed
+    // dense at the same level — vectorizing both sides moves the
+    // break-even, and the acceptance bar is that it never moves above
+    // the tiled baseline)
+    let mut crossover_by_dispatch = BTreeMap::new();
+    for &level in &levels {
+        let mut per = BTreeMap::new();
+        for &(n, m) in &RATIOS {
+            let cross = TOKENS.iter().copied().find(|&t| {
+                packed_nm_med[&(level.name(), n, m, t)]
+                    < packed_dense_med[&(level.name(), t)]
+            });
+            println!(
+                "crossover[{}] {n}:{m}: {}",
+                level.name(),
+                cross
+                    .map(|t| format!("tokens >= {t}"))
+                    .unwrap_or_else(|| "not reached".into())
+            );
+            per.insert(
+                format!("{n}:{m}"),
+                match cross {
+                    Some(t) => Json::Num(t as f64),
+                    None => Json::Null,
+                },
+            );
+        }
+        crossover_by_dispatch
+            .insert(level.name().to_string(), Json::Obj(per));
+    }
+
     let results: Vec<Json> = rows
         .iter()
         .map(|r| r.json(dense_tiled_med.get(&r.tokens).copied()))
@@ -472,6 +551,10 @@ fn main() {
     prep.insert("quant_plus_pack_secs".into(), Json::Num(qpack_secs));
     root.insert("prep".into(), Json::Obj(prep));
     root.insert("crossover".into(), Json::Obj(crossover));
+    root.insert(
+        "crossover_by_dispatch".into(),
+        Json::Obj(crossover_by_dispatch),
+    );
     root.insert("results".into(), Json::Arr(results));
     let path = "BENCH_spmm.json";
     match std::fs::write(path, Json::Obj(root).to_string()) {

@@ -723,6 +723,10 @@ impl Engine {
             &self.metrics.weight_bytes_packed,
             ps.bytes_packed,
         );
+        EngineMetrics::set(
+            &self.metrics.weight_bytes_resident,
+            ps.bytes_resident,
+        );
         EngineMetrics::set(&self.metrics.weight_prep_hits, ps.cache_hits);
         EngineMetrics::set(
             &self.metrics.weight_prep_misses,

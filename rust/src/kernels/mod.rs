@@ -58,6 +58,19 @@
 //! bitwise identical to [`reference`] (see the [`pack`] docs for the
 //! layout and the argument).
 //!
+//! # Explicit SIMD with runtime dispatch
+//!
+//! The [`simd`] module (behind the `simd` cargo feature) re-implements
+//! the three `*_packed` families with explicit AVX-512 / AVX2 / NEON
+//! inner loops, resolved **once** into a [`simd::Dispatch`] vtable of
+//! function pointers at `NativeEngine::bind` and threaded through the
+//! execution options — the hot paths never probe the CPU. The vector
+//! strategy (a register holds adjacent output columns; `k` stays a
+//! scalar-ordered loop; separate multiply + add, never FMA) preserves
+//! every element's reduction chain, so all levels remain bitwise
+//! identical to [`reference`] (the `simd_` family in
+//! `tests/kernel_parity.rs`, run as the `simd-parity` CI gate).
+//!
 //! # Tuning
 //!
 //! [`DEFAULT_DOUT_TILE`] (8) fits comfortably in two SSE / one AVX2
@@ -75,6 +88,7 @@ pub mod int8;
 pub mod nm;
 pub mod pack;
 pub mod reference;
+pub mod simd;
 
 /// Default accumulator-tile width (output columns per register tile).
 pub const DEFAULT_DOUT_TILE: usize = 8;

@@ -1,0 +1,260 @@
+//! Explicit-SIMD microkernels with one-time runtime CPU dispatch.
+//!
+//! # The dispatch design
+//!
+//! The register-tiled `*_packed` kernels trust LLVM to vectorize; this
+//! module makes the vector code explicit — AVX-512 / AVX2+FMA / NEON
+//! inner loops over the same [`PackedPanels`] layout — behind the
+//! `simd` cargo feature. CPU capability is probed **once** (a cached
+//! [`Level`] detection) and resolved into a [`Dispatch`] vtable of
+//! plain function pointers at `NativeEngine::bind`; the hot paths call
+//! through the vtable and never probe per call. This module is the
+//! only place a CPU-feature probe may appear (a CI grep guard rejects
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!`
+//! anywhere else).
+//!
+//! # Why SIMD stays bitwise-identical
+//!
+//! The vector strategy is **vectorize across outputs, not along k**: a
+//! SIMD register holds adjacent output *columns* of a panel (unit
+//! stride, thanks to the panel layout), and the contraction axis `k`
+//! remains a scalar-ordered loop. Each output element therefore keeps
+//! exactly the per-element reduction chain of the scalar kernels —
+//! same contributions, same ascending-`k` order, one f32 add per step
+//! — so f32 SIMD == tiled == reference **bitwise**. Two details make
+//! this airtight:
+//!
+//! * every k-step is a separate vector multiply then vector add
+//!   (`mul_ps` + `add_ps`, never `fmadd`): an FMA would skip the
+//!   intermediate rounding the scalar chain performs;
+//! * the N:M kernels keep the `v == 0.0` skip branch (skipping a
+//!   stored zero is not a no-op for `-0.0` accumulators).
+//!
+//! A panel wider than the vector is processed as `tw / lanes` vector
+//! chunks plus a scalar tail — columns are independent, so mixing
+//! vector and scalar columns cannot change any element's chain. The
+//! int8 kernels widen each `i8` pair into `i32` lanes and accumulate
+//! in `i32` (exact, associative — lane order is irrelevant), then
+//! dequantize as `(cvt(acc) * x_scale) * w_scale[c]`, the same
+//! association order as scalar; hardware `i32 → f32` conversion
+//! rounds to nearest even exactly like `as f32`.
+//!
+//! `tests/kernel_parity.rs` pins every *available* level against the
+//! scalar kernels across the full shape matrix (the `simd_` family,
+//! run as the `simd-parity` CI gate).
+//!
+//! [`PackedPanels`]: super::pack::PackedPanels
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86;
+
+use super::pack::PackedPanels;
+use super::{dense, int8, nm};
+use std::sync::OnceLock;
+
+/// A resolved CPU-dispatch level. `Scalar` is the register-tiled
+/// fallback and always available; the vector levels exist only when
+/// the `simd` feature is on *and* the running CPU reports the ISA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Level {
+    /// Scalar register-tiled kernels (the `*_packed` baseline).
+    Scalar,
+    /// AVX2 (detected together with FMA — FMA is never *used*, the
+    /// bitwise contract forbids contraction; it tags the CPU tier).
+    Avx2,
+    /// AVX-512F: 16 f32 / i32 lanes per register.
+    Avx512,
+    /// aarch64 NEON: 4 f32 / i32 lanes per register.
+    Neon,
+}
+
+impl Level {
+    /// f32 lanes per vector register at this level — the unit the tile
+    /// planner rounds panel widths to so full panels have no scalar
+    /// tail.
+    pub fn lanes_f32(self) -> usize {
+        match self {
+            Level::Scalar => 1,
+            Level::Neon => 4,
+            Level::Avx2 => 8,
+            Level::Avx512 => 16,
+        }
+    }
+
+    /// Stable lowercase name (bench/report labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+            Level::Avx512 => "avx512",
+            Level::Neon => "neon",
+        }
+    }
+}
+
+/// Kernel vtable for one dispatch level: the three packed kernel
+/// families behind plain function pointers with the exact signatures
+/// of the scalar `*_packed` kernels. Resolved once (at bind) and
+/// threaded through `ExecOpts` — calling through it never probes the
+/// CPU.
+#[derive(Debug, Clone, Copy)]
+pub struct Dispatch {
+    /// The level this vtable was resolved for.
+    pub level: Level,
+    /// Panel-packed N:M SpMM (see [`nm::spmm_nm_tiled_packed`]).
+    pub spmm:
+        fn(&[f32], &[u32], usize, usize, &PackedPanels<f32>, &mut [f32]),
+    /// Panel-packed dense matmul (see [`dense::dense_tiled_packed`]).
+    pub dense: fn(&[f32], usize, usize, &PackedPanels<f32>, &mut [f32]),
+    /// Panel-packed per-token W8A8 matmul (see
+    /// [`int8::w8a8_tiled_per_token_packed`]).
+    pub w8a8: fn(
+        &[i8],
+        usize,
+        usize,
+        &PackedPanels<i8>,
+        &[f32],
+        &[f32],
+        &mut [f32],
+    ),
+}
+
+impl Default for Dispatch {
+    fn default() -> Self {
+        Dispatch::scalar()
+    }
+}
+
+impl PartialEq for Dispatch {
+    fn eq(&self, other: &Self) -> bool {
+        self.level == other.level
+    }
+}
+
+impl Eq for Dispatch {}
+
+impl Dispatch {
+    /// The scalar vtable: the register-tiled `*_packed` kernels,
+    /// available on every build and every CPU.
+    pub fn scalar() -> Dispatch {
+        Dispatch {
+            level: Level::Scalar,
+            spmm: nm::spmm_nm_tiled_packed,
+            dense: dense::dense_tiled_packed,
+            w8a8: int8::w8a8_tiled_per_token_packed,
+        }
+    }
+
+    /// The vtable for the best level this CPU supports. Detection runs
+    /// once per process (cached); without the `simd` feature this is
+    /// always [`Dispatch::scalar`].
+    pub fn auto() -> Dispatch {
+        static BEST: OnceLock<Level> = OnceLock::new();
+        let level = *BEST.get_or_init(detect_level);
+        Dispatch::force(level).expect("detected level must resolve")
+    }
+
+    /// The vtable for a specific level, or `None` when that level is
+    /// not available (feature off, wrong arch, or the CPU lacks the
+    /// ISA) — the test/tuning override behind
+    /// `NativeEngine::with_dispatch_level`. `Scalar` always resolves.
+    pub fn force(level: Level) -> Option<Dispatch> {
+        match level {
+            Level::Scalar => Some(Dispatch::scalar()),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Level::Avx2 if x86::avx2_available() => Some(Dispatch {
+                level,
+                spmm: x86::spmm_avx2,
+                dense: x86::dense_avx2,
+                w8a8: x86::w8a8_avx2,
+            }),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Level::Avx512 if x86::avx512_available() => Some(Dispatch {
+                level,
+                spmm: x86::spmm_avx512,
+                dense: x86::dense_avx512,
+                w8a8: x86::w8a8_avx512,
+            }),
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            Level::Neon if neon::neon_available() => Some(Dispatch {
+                level,
+                spmm: neon::spmm_neon,
+                dense: neon::dense_neon,
+                w8a8: neon::w8a8_neon,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Every level that resolves on this build + CPU, best-first
+    /// (`Scalar` is always last). Parity tests sweep this.
+    pub fn available_levels() -> Vec<Level> {
+        [Level::Avx512, Level::Avx2, Level::Neon, Level::Scalar]
+            .into_iter()
+            .filter(|&l| Dispatch::force(l).is_some())
+            .collect()
+    }
+}
+
+/// Probe the CPU for the best supported level. The only runtime
+/// feature detection in the crate; called once through the
+/// [`Dispatch::auto`] cache.
+fn detect_level() -> Level {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::avx512_available() {
+            return Level::Avx512;
+        }
+        if x86::avx2_available() {
+            return Level::Avx2;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if neon::neon_available() {
+            return Level::Neon;
+        }
+    }
+    Level::Scalar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_always_resolves_and_auto_is_cached() {
+        assert_eq!(Dispatch::force(Level::Scalar).unwrap().level, Level::Scalar);
+        let a = Dispatch::auto();
+        let b = Dispatch::auto();
+        assert_eq!(a.level, b.level);
+        assert!(Dispatch::available_levels().contains(&a.level));
+        assert_eq!(Dispatch::available_levels().last(), Some(&Level::Scalar));
+    }
+
+    #[test]
+    fn every_available_level_matches_scalar_on_a_ragged_shape() {
+        // the full matrix lives in tests/kernel_parity.rs (simd_
+        // family); this is the in-crate smoke over one awkward shape
+        let mut rng = Rng::new(29);
+        let (t, din, dout) = (5usize, 24usize, 37usize);
+        let x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32).collect();
+        for pw in [5usize, 8, 16, 32] {
+            let packed = PackedPanels::pack(&w, din, dout, pw);
+            let mut golden = vec![0.0f32; t * dout];
+            (Dispatch::scalar().dense)(&x, t, din, &packed, &mut golden);
+            for level in Dispatch::available_levels() {
+                let d = Dispatch::force(level).unwrap();
+                let mut out = vec![0.0f32; t * dout];
+                (d.dense)(&x, t, din, &packed, &mut out);
+                assert_eq!(out, golden, "level {level:?} pw {pw}");
+            }
+        }
+    }
+}

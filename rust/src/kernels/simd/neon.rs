@@ -1,0 +1,227 @@
+//! aarch64 NEON vector microkernels over the panel layout. Same
+//! contract as the x86 file: vectorize across output columns, keep the
+//! scalar ascending-`k` chain per element, and use separate vector
+//! multiply then vector add for f32 (`vmulq_f32` + `vaddq_f32`, never
+//! `vfmaq_f32` — fused would skip the intermediate rounding). The f32
+//! kernels chunk panels by 4 lanes; the int8 kernel widens 8 weights
+//! at a time into two `i32x4` accumulators (`vmlaq_s32` is exact
+//! integer multiply-add, so fusing is fine there).
+
+use super::super::pack::PackedPanels;
+use super::super::MAX_DOUT_TILE;
+use std::arch::aarch64::*;
+
+/// NEON present (architecturally mandatory on aarch64; probed anyway
+/// so every vector level flows through the same detection story).
+pub(super) fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+const L4: usize = 4; // f32 / i32 lanes per 128-bit register
+const V4: usize = MAX_DOUT_TILE / L4; // f32 accumulator bank size
+const LI8: usize = 8; // int8 columns widened per load
+const VI8: usize = 2 * (MAX_DOUT_TILE / LI8); // paired i32x4 bank
+
+/// Panel-packed dense matmul, NEON lanes. Signature and panics match
+/// [`dense_tiled_packed`](crate::kernels::dense::dense_tiled_packed).
+pub(super) fn dense_neon(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * din, "activation shape");
+    assert_eq!(w.din, din, "weight contraction width");
+    assert_eq!(out.len(), t * w.dout, "output shape");
+    // SAFETY: `Dispatch::force` hands this pointer out only after
+    // `neon_available()` returned true on this CPU.
+    unsafe { dense_neon_impl(x, t, din, w, out) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dense_neon_impl(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    let dout = w.dout;
+    for r in 0..t {
+        let xrow = &x[r * din..(r + 1) * din];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let nv = tw / L4;
+            let tail0 = nv * L4;
+            let pp = panel.as_ptr();
+            let mut vacc = [vdupq_n_f32(0.0); V4];
+            let mut sacc = [0.0f32; L4 - 1];
+            for (k, &v) in xrow.iter().enumerate() {
+                let wrow = pp.add(k * tw);
+                let vs = vdupq_n_f32(v);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    let wv = vld1q_f32(wrow.add(j * L4));
+                    *a = vaddq_f32(*a, vmulq_f32(vs, wv));
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v * *wrow.add(tail0 + i);
+                }
+            }
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                vst1q_f32(op.add(j * L4), *a);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) = *a;
+            }
+        }
+    }
+}
+
+/// Panel-packed N:M SpMM, NEON lanes. Signature and panics match
+/// [`spmm_nm_tiled_packed`](crate::kernels::nm::spmm_nm_tiled_packed);
+/// keeps the `v == 0.0` skip branch.
+pub(super) fn spmm_neon(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(values.len(), rows * per_row, "values shape");
+    assert_eq!(index.len(), rows * per_row, "index shape");
+    assert_eq!(out.len(), rows * w.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected NEON.
+    unsafe { spmm_neon_impl(values, index, rows, per_row, w, out) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn spmm_neon_impl(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    let dout = w.dout;
+    for r in 0..rows {
+        let vals = &values[r * per_row..(r + 1) * per_row];
+        let idx = &index[r * per_row..(r + 1) * per_row];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let nv = tw / L4;
+            let tail0 = nv * L4;
+            let pp = panel.as_ptr();
+            let mut vacc = [vdupq_n_f32(0.0); V4];
+            let mut sacc = [0.0f32; L4 - 1];
+            for (&v, &ci) in vals.iter().zip(idx.iter()) {
+                if v == 0.0 {
+                    continue;
+                }
+                let wrow = pp.add(ci as usize * tw);
+                let vs = vdupq_n_f32(v);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    let wv = vld1q_f32(wrow.add(j * L4));
+                    *a = vaddq_f32(*a, vmulq_f32(vs, wv));
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v * *wrow.add(tail0 + i);
+                }
+            }
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                vst1q_f32(op.add(j * L4), *a);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) = *a;
+            }
+        }
+    }
+}
+
+/// Panel-packed per-token W8A8 matmul, NEON lanes: widening `i8 → i32`
+/// accumulation (exact), vector dequant in the scalar association
+/// order. Signature and panics match
+/// [`w8a8_tiled_per_token_packed`](crate::kernels::int8::w8a8_tiled_per_token_packed).
+pub(super) fn w8a8_neon(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(xq.len(), t * din, "activation shape");
+    assert_eq!(wq.din, din, "weight contraction width");
+    assert_eq!(x_scales.len(), t, "one activation scale per token row");
+    assert_eq!(w_scales.len(), wq.dout, "one weight scale per column");
+    assert_eq!(out.len(), t * wq.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected NEON.
+    unsafe { w8a8_neon_impl(xq, t, din, wq, x_scales, w_scales, out) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn w8a8_neon_impl(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    let dout = wq.dout;
+    for r in 0..t {
+        let xrow = &xq[r * din..(r + 1) * din];
+        let xs = x_scales[r];
+        for p in 0..wq.n_panels() {
+            let (c0, tw, panel) = wq.panel(p);
+            let nv = tw / LI8;
+            let tail0 = nv * LI8;
+            let pp = panel.as_ptr();
+            let mut vacc = [vdupq_n_s32(0); VI8];
+            let mut sacc = [0i32; LI8 - 1];
+            for (k, &v) in xrow.iter().enumerate() {
+                let wrow = pp.add(k * tw);
+                let vv = vdupq_n_s32(v as i32);
+                for j in 0..nv {
+                    // 8 i8 weights -> i16x8 -> two i32x4 lanes
+                    let wb = vld1_s8(wrow.add(j * LI8));
+                    let w16 = vmovl_s8(wb);
+                    let lo = vmovl_s16(vget_low_s16(w16));
+                    let hi = vmovl_s16(vget_high_s16(w16));
+                    vacc[2 * j] = vmlaq_s32(vacc[2 * j], lo, vv);
+                    vacc[2 * j + 1] =
+                        vmlaq_s32(vacc[2 * j + 1], hi, vv);
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v as i32 * *wrow.add(tail0 + i) as i32;
+                }
+            }
+            let ws = w_scales.as_ptr().add(c0);
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            let vxs = vdupq_n_f32(xs);
+            for h in 0..2 * nv {
+                // (cvt(acc) * x_scale) * w_scale — scalar association
+                let f = vcvtq_f32_s32(vacc[h]);
+                let f = vmulq_f32(f, vxs);
+                let f = vmulq_f32(f, vld1q_f32(ws.add(h * L4)));
+                vst1q_f32(op.add(h * L4), f);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) =
+                    *a as f32 * xs * *ws.add(tail0 + i);
+            }
+        }
+    }
+}

@@ -1,0 +1,447 @@
+//! x86-64 vector microkernels: AVX2 and AVX-512F lanes over the panel
+//! layout. See the [module docs](super) for the dispatch design and
+//! the bitwise argument; the one rule enforced throughout this file is
+//! **separate vector multiply then vector add per k-step** (`mul_ps`
+//! + `add_ps`, never `fmadd`), because an FMA would skip the
+//! intermediate rounding every scalar chain performs.
+//!
+//! Each kernel mirrors its scalar `*_packed` twin exactly: rows outer,
+//! panels inner, and per `(row, panel)` a bank of lane accumulators
+//! covering `tw / LANES` vector chunks plus scalar-tail accumulators
+//! for the ragged remainder (`tw % LANES` columns). Every load/store
+//! is unaligned (`loadu`/`storeu`) and stays inside the panel slice /
+//! output row by the chunk arithmetic.
+
+use super::super::pack::PackedPanels;
+use super::super::MAX_DOUT_TILE;
+use std::arch::x86_64::*;
+
+/// AVX2 present (FMA probed alongside to tag the CPU tier; the
+/// kernels never emit FMA — the bitwise contract forbids it).
+pub(super) fn avx2_available() -> bool {
+    std::is_x86_feature_detected!("avx2")
+        && std::is_x86_feature_detected!("fma")
+}
+
+/// AVX-512 foundation present (all intrinsics used here are AVX512F).
+pub(super) fn avx512_available() -> bool {
+    std::is_x86_feature_detected!("avx512f")
+}
+
+// ---------------------------------------------------------------- AVX2
+
+const L8: usize = 8; // f32 / i32 lanes per 256-bit register
+const V8: usize = MAX_DOUT_TILE / L8; // accumulator bank size
+
+/// Panel-packed dense matmul, AVX2 lanes. Signature and panics match
+/// [`dense_tiled_packed`](crate::kernels::dense::dense_tiled_packed).
+pub(super) fn dense_avx2(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * din, "activation shape");
+    assert_eq!(w.din, din, "weight contraction width");
+    assert_eq!(out.len(), t * w.dout, "output shape");
+    // SAFETY: `Dispatch::force` hands this pointer out only after
+    // `avx2_available()` returned true on this CPU.
+    unsafe { dense_avx2_impl(x, t, din, w, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dense_avx2_impl(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    let dout = w.dout;
+    for r in 0..t {
+        let xrow = &x[r * din..(r + 1) * din];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let nv = tw / L8;
+            let tail0 = nv * L8;
+            let pp = panel.as_ptr();
+            let mut vacc = [_mm256_setzero_ps(); V8];
+            let mut sacc = [0.0f32; L8 - 1];
+            for (k, &v) in xrow.iter().enumerate() {
+                let wrow = pp.add(k * tw);
+                let vs = _mm256_set1_ps(v);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    let wv = _mm256_loadu_ps(wrow.add(j * L8));
+                    *a = _mm256_add_ps(*a, _mm256_mul_ps(vs, wv));
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v * *wrow.add(tail0 + i);
+                }
+            }
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                _mm256_storeu_ps(op.add(j * L8), *a);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) = *a;
+            }
+        }
+    }
+}
+
+/// Panel-packed N:M SpMM, AVX2 lanes. Signature and panics match
+/// [`spmm_nm_tiled_packed`](crate::kernels::nm::spmm_nm_tiled_packed);
+/// keeps the `v == 0.0` skip branch.
+pub(super) fn spmm_avx2(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(values.len(), rows * per_row, "values shape");
+    assert_eq!(index.len(), rows * per_row, "index shape");
+    assert_eq!(out.len(), rows * w.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected AVX2.
+    unsafe { spmm_avx2_impl(values, index, rows, per_row, w, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn spmm_avx2_impl(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    let dout = w.dout;
+    for r in 0..rows {
+        let vals = &values[r * per_row..(r + 1) * per_row];
+        let idx = &index[r * per_row..(r + 1) * per_row];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let nv = tw / L8;
+            let tail0 = nv * L8;
+            let pp = panel.as_ptr();
+            let mut vacc = [_mm256_setzero_ps(); V8];
+            let mut sacc = [0.0f32; L8 - 1];
+            for (&v, &ci) in vals.iter().zip(idx.iter()) {
+                if v == 0.0 {
+                    continue;
+                }
+                let wrow = pp.add(ci as usize * tw);
+                let vs = _mm256_set1_ps(v);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    let wv = _mm256_loadu_ps(wrow.add(j * L8));
+                    *a = _mm256_add_ps(*a, _mm256_mul_ps(vs, wv));
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v * *wrow.add(tail0 + i);
+                }
+            }
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                _mm256_storeu_ps(op.add(j * L8), *a);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) = *a;
+            }
+        }
+    }
+}
+
+/// Panel-packed per-token W8A8 matmul, AVX2 lanes: widening
+/// `i8 → i32` lane accumulation (exact), vector dequant in the scalar
+/// association order. Signature and panics match
+/// [`w8a8_tiled_per_token_packed`](crate::kernels::int8::w8a8_tiled_per_token_packed).
+pub(super) fn w8a8_avx2(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(xq.len(), t * din, "activation shape");
+    assert_eq!(wq.din, din, "weight contraction width");
+    assert_eq!(x_scales.len(), t, "one activation scale per token row");
+    assert_eq!(w_scales.len(), wq.dout, "one weight scale per column");
+    assert_eq!(out.len(), t * wq.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected AVX2.
+    unsafe { w8a8_avx2_impl(xq, t, din, wq, x_scales, w_scales, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn w8a8_avx2_impl(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    let dout = wq.dout;
+    for r in 0..t {
+        let xrow = &xq[r * din..(r + 1) * din];
+        let xs = x_scales[r];
+        for p in 0..wq.n_panels() {
+            let (c0, tw, panel) = wq.panel(p);
+            let nv = tw / L8;
+            let tail0 = nv * L8;
+            let pp = panel.as_ptr();
+            let mut vacc = [_mm256_setzero_si256(); V8];
+            let mut sacc = [0i32; L8 - 1];
+            for (k, &v) in xrow.iter().enumerate() {
+                let wrow = pp.add(k * tw);
+                let vv = _mm256_set1_epi32(v as i32);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    // 8 i8 weights, sign-extended to i32 lanes
+                    let wb = _mm_loadl_epi64(
+                        wrow.add(j * L8) as *const __m128i
+                    );
+                    let wi = _mm256_cvtepi8_epi32(wb);
+                    *a = _mm256_add_epi32(
+                        *a,
+                        _mm256_mullo_epi32(vv, wi),
+                    );
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v as i32 * *wrow.add(tail0 + i) as i32;
+                }
+            }
+            let ws = w_scales.as_ptr().add(c0);
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            let vxs = _mm256_set1_ps(xs);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                // (cvt(acc) * x_scale) * w_scale — scalar association
+                let f = _mm256_cvtepi32_ps(*a);
+                let f = _mm256_mul_ps(f, vxs);
+                let f = _mm256_mul_ps(f, _mm256_loadu_ps(ws.add(j * L8)));
+                _mm256_storeu_ps(op.add(j * L8), f);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) =
+                    *a as f32 * xs * *ws.add(tail0 + i);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- AVX-512
+
+const L16: usize = 16; // f32 / i32 lanes per 512-bit register
+const V16: usize = MAX_DOUT_TILE / L16; // accumulator bank size
+
+/// Panel-packed dense matmul, AVX-512F lanes (contract as
+/// [`dense_avx2`]).
+pub(super) fn dense_avx512(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * din, "activation shape");
+    assert_eq!(w.din, din, "weight contraction width");
+    assert_eq!(out.len(), t * w.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected
+    // AVX-512F.
+    unsafe { dense_avx512_impl(x, t, din, w, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn dense_avx512_impl(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    let dout = w.dout;
+    for r in 0..t {
+        let xrow = &x[r * din..(r + 1) * din];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let nv = tw / L16;
+            let tail0 = nv * L16;
+            let pp = panel.as_ptr();
+            let mut vacc = [_mm512_setzero_ps(); V16];
+            let mut sacc = [0.0f32; L16 - 1];
+            for (k, &v) in xrow.iter().enumerate() {
+                let wrow = pp.add(k * tw);
+                let vs = _mm512_set1_ps(v);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    let wv = _mm512_loadu_ps(wrow.add(j * L16));
+                    *a = _mm512_add_ps(*a, _mm512_mul_ps(vs, wv));
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v * *wrow.add(tail0 + i);
+                }
+            }
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                _mm512_storeu_ps(op.add(j * L16), *a);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) = *a;
+            }
+        }
+    }
+}
+
+/// Panel-packed N:M SpMM, AVX-512F lanes (contract as [`spmm_avx2`]).
+pub(super) fn spmm_avx512(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(values.len(), rows * per_row, "values shape");
+    assert_eq!(index.len(), rows * per_row, "index shape");
+    assert_eq!(out.len(), rows * w.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected
+    // AVX-512F.
+    unsafe { spmm_avx512_impl(values, index, rows, per_row, w, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn spmm_avx512_impl(
+    values: &[f32],
+    index: &[u32],
+    rows: usize,
+    per_row: usize,
+    w: &PackedPanels<f32>,
+    out: &mut [f32],
+) {
+    let dout = w.dout;
+    for r in 0..rows {
+        let vals = &values[r * per_row..(r + 1) * per_row];
+        let idx = &index[r * per_row..(r + 1) * per_row];
+        for p in 0..w.n_panels() {
+            let (c0, tw, panel) = w.panel(p);
+            let nv = tw / L16;
+            let tail0 = nv * L16;
+            let pp = panel.as_ptr();
+            let mut vacc = [_mm512_setzero_ps(); V16];
+            let mut sacc = [0.0f32; L16 - 1];
+            for (&v, &ci) in vals.iter().zip(idx.iter()) {
+                if v == 0.0 {
+                    continue;
+                }
+                let wrow = pp.add(ci as usize * tw);
+                let vs = _mm512_set1_ps(v);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    let wv = _mm512_loadu_ps(wrow.add(j * L16));
+                    *a = _mm512_add_ps(*a, _mm512_mul_ps(vs, wv));
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v * *wrow.add(tail0 + i);
+                }
+            }
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                _mm512_storeu_ps(op.add(j * L16), *a);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) = *a;
+            }
+        }
+    }
+}
+
+/// Panel-packed per-token W8A8 matmul, AVX-512F lanes (contract as
+/// [`w8a8_avx2`]).
+pub(super) fn w8a8_avx512(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(xq.len(), t * din, "activation shape");
+    assert_eq!(wq.din, din, "weight contraction width");
+    assert_eq!(x_scales.len(), t, "one activation scale per token row");
+    assert_eq!(w_scales.len(), wq.dout, "one weight scale per column");
+    assert_eq!(out.len(), t * wq.dout, "output shape");
+    // SAFETY: handed out by `Dispatch::force` only under detected
+    // AVX-512F.
+    unsafe { w8a8_avx512_impl(xq, t, din, wq, x_scales, w_scales, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn w8a8_avx512_impl(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    out: &mut [f32],
+) {
+    let dout = wq.dout;
+    for r in 0..t {
+        let xrow = &xq[r * din..(r + 1) * din];
+        let xs = x_scales[r];
+        for p in 0..wq.n_panels() {
+            let (c0, tw, panel) = wq.panel(p);
+            let nv = tw / L16;
+            let tail0 = nv * L16;
+            let pp = panel.as_ptr();
+            let mut vacc = [_mm512_setzero_si512(); V16];
+            let mut sacc = [0i32; L16 - 1];
+            for (k, &v) in xrow.iter().enumerate() {
+                let wrow = pp.add(k * tw);
+                let vv = _mm512_set1_epi32(v as i32);
+                for (j, a) in vacc.iter_mut().enumerate().take(nv) {
+                    // 16 i8 weights, sign-extended to i32 lanes
+                    let wb = _mm_loadu_si128(
+                        wrow.add(j * L16) as *const __m128i
+                    );
+                    let wi = _mm512_cvtepi8_epi32(wb);
+                    *a = _mm512_add_epi32(
+                        *a,
+                        _mm512_mullo_epi32(vv, wi),
+                    );
+                }
+                for (i, a) in
+                    sacc.iter_mut().enumerate().take(tw - tail0)
+                {
+                    *a += v as i32 * *wrow.add(tail0 + i) as i32;
+                }
+            }
+            let ws = w_scales.as_ptr().add(c0);
+            let op = out.as_mut_ptr().add(r * dout + c0);
+            let vxs = _mm512_set1_ps(xs);
+            for (j, a) in vacc.iter().enumerate().take(nv) {
+                let f = _mm512_cvtepi32_ps(*a);
+                let f = _mm512_mul_ps(f, vxs);
+                let f =
+                    _mm512_mul_ps(f, _mm512_loadu_ps(ws.add(j * L16)));
+                _mm512_storeu_ps(op.add(j * L16), f);
+            }
+            for (i, a) in sacc.iter().enumerate().take(tw - tail0) {
+                *op.add(tail0 + i) =
+                    *a as f32 * xs * *ws.add(tail0 + i);
+            }
+        }
+    }
+}

@@ -11,8 +11,11 @@
 //! uses per-token so a token's quantized logits never depend on its
 //! batchmates (what makes packed sq prefill bitwise-reproducible).
 
+use crate::exec::ThreadPool;
 use crate::kernels::pack::PackedPanels;
+use crate::kernels::simd::Dispatch;
 use crate::kernels::{self, DEFAULT_DOUT_TILE};
+use std::sync::Arc;
 
 /// Symmetric per-tensor int8 quantization with a static scale.
 pub fn quantize(x: &[f32], scale: f32) -> Vec<i8> {
@@ -103,10 +106,90 @@ pub fn w8a8_matmul_packed_per_token(
     x_scales: &[f32],
     w_scales: &[f32],
 ) -> Vec<f32> {
+    w8a8_matmul_packed_per_token_dispatch(
+        xq,
+        t,
+        din,
+        wq,
+        x_scales,
+        w_scales,
+        Dispatch::scalar(),
+    )
+}
+
+/// [`w8a8_matmul_packed_per_token`] through a resolved SIMD
+/// [`Dispatch`] vtable — bitwise identical at every level.
+pub fn w8a8_matmul_packed_per_token_dispatch(
+    xq: &[i8],
+    t: usize,
+    din: usize,
+    wq: &PackedPanels<i8>,
+    x_scales: &[f32],
+    w_scales: &[f32],
+    disp: Dispatch,
+) -> Vec<f32> {
     let mut out = vec![0.0f32; t * wq.dout];
-    kernels::int8::w8a8_tiled_per_token_packed(
-        xq, t, din, wq, x_scales, w_scales, &mut out,
-    );
+    (disp.w8a8)(xq, t, din, wq, x_scales, w_scales, &mut out);
+    out
+}
+
+/// Row-tiled parallel variant of [`w8a8_matmul_packed_per_token`]:
+/// token rows are chunked into `block_rows`-high tiles fanned out over
+/// `pool`, with the quantized activation, per-token scales, packed
+/// weight and per-column scales all `Arc`-shared with the workers
+/// (zero copies). Per-token scaling makes every row's arithmetic
+/// independent of its batchmates, so each tile runs the identical
+/// serial kernel on its own rows and the result is **bit-identical**
+/// to the serial packed kernel for every tiling and pool width — the
+/// same contract [`crate::sparsity::spmm::dense_matmul_packed_parallel`]
+/// holds for f32.
+#[allow(clippy::too_many_arguments)]
+pub fn w8a8_matmul_packed_per_token_parallel_dispatch(
+    xq: &Arc<Vec<i8>>,
+    t: usize,
+    din: usize,
+    wq: &Arc<PackedPanels<i8>>,
+    x_scales: &Arc<Vec<f32>>,
+    w_scales: &Arc<Vec<f32>>,
+    pool: &ThreadPool,
+    block_rows: usize,
+    disp: Dispatch,
+) -> Vec<f32> {
+    assert_eq!(xq.len(), t * din, "w8a8 parallel: activation shape");
+    assert_eq!(x_scales.len(), t, "w8a8 parallel: per-token scales");
+    let block_rows = block_rows.max(1);
+    if pool.size() <= 1 || t <= block_rows {
+        return w8a8_matmul_packed_per_token_dispatch(
+            xq, t, din, wq, x_scales, w_scales, disp,
+        );
+    }
+    let mut tiles_spec: Vec<(usize, usize)> = Vec::new();
+    let mut row0 = 0;
+    while row0 < t {
+        let rows = block_rows.min(t - row0);
+        tiles_spec.push((row0, rows));
+        row0 += rows;
+    }
+    let xs = Arc::clone(xq);
+    let ss = Arc::clone(x_scales);
+    let w2 = Arc::clone(wq);
+    let ws2 = Arc::clone(w_scales);
+    let tiles = pool.map(tiles_spec, move |(row0, rows)| {
+        w8a8_matmul_packed_per_token_dispatch(
+            &xs[row0 * din..(row0 + rows) * din],
+            rows,
+            din,
+            &w2,
+            &ss[row0..row0 + rows],
+            &ws2,
+            disp,
+        )
+    });
+    // map preserves tile order: assembly is a straight concatenation
+    let mut out = Vec::with_capacity(t * wq.dout);
+    for tile in tiles {
+        out.extend_from_slice(&tile);
+    }
     out
 }
 
@@ -271,6 +354,46 @@ mod tests {
                 golden,
                 "panel_w {pw}: matmul"
             );
+        }
+    }
+
+    #[test]
+    fn packed_per_token_parallel_matches_serial_bitwise() {
+        // the pooled int8 fan-out must reproduce the serial packed
+        // kernel bit for bit at every row tiling and pool width
+        let mut rng = Rng::new(12);
+        let (t, din, dout) = (13usize, 32usize, 21usize);
+        let x: Vec<f32> =
+            (0..t * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|_| rng.normal() as f32 * 0.1).collect();
+        let (pq, ps) = quantize_weight_packed(&w, din, dout, 8);
+        let (xq, xs) = quantize_per_token(&x, t, din);
+        let golden =
+            w8a8_matmul_packed_per_token(&xq, t, din, &pq, &xs, &ps);
+        let xq = Arc::new(xq);
+        let xs = Arc::new(xs);
+        let pq = Arc::new(pq);
+        let ps = Arc::new(ps);
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for block_rows in [1usize, 3, 4, 32] {
+                assert_eq!(
+                    w8a8_matmul_packed_per_token_parallel_dispatch(
+                        &xq,
+                        t,
+                        din,
+                        &pq,
+                        &xs,
+                        &ps,
+                        &pool,
+                        block_rows,
+                        Dispatch::scalar(),
+                    ),
+                    golden,
+                    "threads {threads} block_rows {block_rows}"
+                );
+            }
         }
     }
 

@@ -313,6 +313,10 @@ pub struct PrepStats {
     /// bytes of packed weight storage created (f32 panels + int8
     /// panels)
     pub bytes_packed: u64,
+    /// bytes of row-major weight originals still resident alongside
+    /// the panels; zero at steady state — `bind` releases originals
+    /// once they are packed, so weights are not held twice
+    pub bytes_resident: u64,
     /// wall seconds spent packing + quantizing (one-time, at bind)
     pub prep_secs: f64,
 }

@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use crate::kernels::simd::Dispatch;
 use crate::runtime::engine::{PagedKv, SparsityAudit};
 use crate::sparsity::plan::SparsityPlan;
 
@@ -43,6 +44,7 @@ impl NativeModel {
         prepared: &PreparedModel,
         quantized: bool,
         block_rows: usize,
+        dispatch: Dispatch,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
         let sp = &self.spec;
@@ -52,8 +54,14 @@ impl NativeModel {
         let group = sp.n_q_heads / sp.n_kv_heads;
         let dense_plan = SparsityPlan::dense(sp.n_layers)
             .with_tiles(prepared.tiles.clone());
-        let opts =
-            ExecOpts::new(&dense_plan, quantized, false, None, block_rows);
+        let opts = ExecOpts::new(
+            &dense_plan,
+            quantized,
+            false,
+            None,
+            block_rows,
+            dispatch,
+        );
         let mut x = self.embed_tokens(token);
         for (l, (lw, pl)) in self
             .layers
@@ -165,7 +173,7 @@ impl NativeModel {
                 *xi += di;
             }
         }
-        self.logits(&x, b, prepared, None, block_rows, audit)
+        self.logits(&x, b, prepared, None, block_rows, dispatch, audit)
     }
 }
 

@@ -26,12 +26,14 @@
 //! [`ProjPolicy`]: crate::sparsity::plan::ProjPolicy
 
 use crate::exec::ThreadPool;
+use crate::kernels::simd::Dispatch;
 use crate::quant;
 use crate::runtime::engine::SparsityAudit;
 use crate::sparsity::mask::validate_nm;
 use crate::sparsity::plan::SparsityPlan;
 use crate::sparsity::spmm::{
-    dense_matmul_packed, dense_matmul_packed_parallel, NmCompressedBatch,
+    dense_matmul_packed_dispatch, dense_matmul_packed_parallel_dispatch,
+    NmCompressedBatch,
 };
 
 use std::sync::Arc;
@@ -50,6 +52,9 @@ pub(super) struct ExecOpts<'a> {
     pub pool: Option<&'a ThreadPool>,
     /// row-tile height for the batched kernels
     pub block_rows: usize,
+    /// the SIMD kernel vtable the binding resolved at bind time — every
+    /// level is bitwise identical, so this is pure perf
+    pub dispatch: Dispatch,
 }
 
 impl<'a> ExecOpts<'a> {
@@ -59,6 +64,7 @@ impl<'a> ExecOpts<'a> {
         validate: bool,
         pool: Option<&'a ThreadPool>,
         block_rows: usize,
+        dispatch: Dispatch,
     ) -> ExecOpts<'a> {
         ExecOpts {
             plan,
@@ -66,6 +72,7 @@ impl<'a> ExecOpts<'a> {
             validate,
             pool,
             block_rows: block_rows.max(1),
+            dispatch,
         }
     }
 }
@@ -233,14 +240,19 @@ impl<'m> Projection<'m> {
                     self.w8a8_per_token(
                         pruned_dense.as_deref().unwrap(),
                         t,
+                        opts,
                     )
                 } else {
                     match opts.pool {
-                        Some(pool) => c.matmul_packed_parallel(
+                        Some(pool) => c.matmul_packed_parallel_dispatch(
                             &self.prep.packed,
                             pool,
+                            opts.dispatch,
                         ),
-                        None => c.matmul_packed(&self.prep.packed),
+                        None => c.matmul_packed_dispatch(
+                            &self.prep.packed,
+                            opts.dispatch,
+                        ),
                     }
                 }
             }
@@ -255,22 +267,24 @@ impl<'m> Projection<'m> {
                     2 * (t * self.din * self.dout) as u64,
                 );
                 if opts.quantized {
-                    self.w8a8_per_token(x, t)
+                    self.w8a8_per_token(x, t, opts)
                 } else {
                     match opts.pool {
-                        Some(pool) => dense_matmul_packed_parallel(
+                        Some(pool) => dense_matmul_packed_parallel_dispatch(
                             x,
                             t,
                             self.din,
                             &self.prep.packed,
                             pool,
                             opts.block_rows,
+                            opts.dispatch,
                         ),
-                        None => dense_matmul_packed(
+                        None => dense_matmul_packed_dispatch(
                             x,
                             t,
                             self.din,
                             &self.prep.packed,
+                            opts.dispatch,
                         ),
                     }
                 }
@@ -282,8 +296,16 @@ impl<'m> Projection<'m> {
     /// scales, panel-packed register-tiled int8 kernel. The weight side
     /// (`wq`, `w_scales`) is the bind-time cached quantization — a
     /// quantized binding prepares it before any projection runs, so the
-    /// hot path only quantizes the activation.
-    fn w8a8_per_token(&self, x: &[f32], t: usize) -> Vec<f32> {
+    /// hot path only quantizes the activation. With a pool in the opts
+    /// the matmul fans out over row tiles like the dense/N:M paths
+    /// (per-token scales make every row independent, so the fan-out is
+    /// bit-identical to the serial kernel).
+    fn w8a8_per_token(
+        &self,
+        x: &[f32],
+        t: usize,
+        opts: &ExecOpts<'_>,
+    ) -> Vec<f32> {
         let q = self.prep.quant().unwrap_or_else(|| {
             panic!(
                 "{}: quantized run without bind-time weight \
@@ -292,9 +314,32 @@ impl<'m> Projection<'m> {
             )
         });
         let (xq, xs) = quant::quantize_per_token(x, t, self.din);
-        quant::w8a8_matmul_packed_per_token(
-            &xq, t, self.din, &q.wq, &xs, &q.scales,
-        )
+        match opts.pool {
+            Some(pool) => {
+                let xq = Arc::new(xq);
+                let xs = Arc::new(xs);
+                quant::w8a8_matmul_packed_per_token_parallel_dispatch(
+                    &xq,
+                    t,
+                    self.din,
+                    &q.wq,
+                    &xs,
+                    &q.scales,
+                    pool,
+                    opts.block_rows,
+                    opts.dispatch,
+                )
+            }
+            None => quant::w8a8_matmul_packed_per_token_dispatch(
+                &xq,
+                t,
+                self.din,
+                &q.wq,
+                &xs,
+                &q.scales,
+                opts.dispatch,
+            ),
+        }
     }
 }
 
@@ -440,6 +485,7 @@ impl NativeModel {
     /// (never quantized, never pruned, never validated) — the same
     /// special case as the pre-refactor `logits` helper — against the
     /// prepared (panel-packed) head weight.
+    #[allow(clippy::too_many_arguments)]
     pub(super) fn logits(
         &self,
         x: &[f32],
@@ -447,13 +493,21 @@ impl NativeModel {
         prepared: &PreparedModel,
         pool: Option<&ThreadPool>,
         block_rows: usize,
+        dispatch: Dispatch,
         audit: &mut SparsityAudit,
     ) -> Vec<f32> {
         let d = self.spec.d_model;
         let h = Arc::new(rmsnorm(x, t, d, &self.final_norm));
         let dense_plan =
             SparsityPlan::dense(0).with_tiles(prepared.tiles.clone());
-        let opts = ExecOpts::new(&dense_plan, false, false, pool, block_rows);
+        let opts = ExecOpts::new(
+            &dense_plan,
+            false,
+            false,
+            pool,
+            block_rows,
+            dispatch,
+        );
         let head = Projection {
             module: "lm_head",
             prep: &prepared.lm_head,

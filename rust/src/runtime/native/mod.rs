@@ -60,6 +60,7 @@ use super::engine::{
     PrefillOut, PrefixedPrompt, PrepStats, SparsityAudit,
 };
 use crate::exec::ThreadPool;
+use crate::kernels::simd::{Dispatch, Level};
 use crate::sparsity::plan::{SparsityPlan, TileTable};
 use crate::sparsity::policy::Setting;
 use crate::sparsity::spmm::DEFAULT_BLOCK_ROWS;
@@ -89,8 +90,17 @@ pub struct NativeEngine {
     /// model's geometry at [`Engine::bind`] time (pure perf — outputs
     /// are bitwise identical for every width)
     pub tile_override: Option<usize>,
+    /// force the SIMD dispatch to a specific level at the next bind
+    /// (`None` = auto-detect); resolution fails loudly when the level
+    /// is unavailable on this build/CPU
+    force_level: Option<Level>,
+    /// the SIMD kernel vtable resolved at [`Engine::bind`] time and
+    /// threaded through `ExecOpts` — hot paths never probe the CPU.
+    /// Scalar until the first bind; every level is bitwise identical,
+    /// so the value is pure perf
+    dispatch: Dispatch,
     /// bind-time weight preparation cache: panel-packed f32 + cached
-    /// W8A8 quantization per weight `Arc`
+    /// W8A8 quantization per weight id
     prep: PrepCache,
     /// (model name, tile table) -> the prepared weights bindings built
     /// under that table execute against. Keyed by table so toggling
@@ -166,6 +176,8 @@ impl NativeEngine {
             pool: None,
             block_rows: DEFAULT_BLOCK_ROWS,
             tile_override: None,
+            force_level: None,
+            dispatch: Dispatch::scalar(),
             prep: PrepCache::default(),
             prepared: HashMap::new(),
         }
@@ -187,20 +199,50 @@ impl NativeEngine {
         self
     }
 
+    /// Builder-style SIMD dispatch-level override: the next `bind`
+    /// resolves its kernel vtable at exactly `level` instead of
+    /// auto-detecting, failing loudly if the level is unavailable on
+    /// this build/CPU. The test/tuning knob behind the `simd_` parity
+    /// family — every level is bitwise identical, so this is pure perf.
+    pub fn with_dispatch_level(mut self, level: Level) -> NativeEngine {
+        self.force_level = Some(level);
+        self
+    }
+
+    /// The dispatch level the engine last resolved (Scalar before any
+    /// bind, and always Scalar without the `simd` feature).
+    pub fn dispatch_level(&self) -> Level {
+        self.dispatch.level
+    }
+
     /// The tile table bindings of `spec`'s model are packed with: the
     /// uniform override when set, otherwise the geometry-planned
-    /// per-module table.
-    fn tile_table(&self, spec: &ModelSpec) -> TileTable {
+    /// per-module table, widened so full panels are whole vector
+    /// registers at the resolved dispatch level (`lanes` = 1 keeps the
+    /// scalar plan).
+    fn tile_table(&self, spec: &ModelSpec, lanes: usize) -> TileTable {
         match self.tile_override {
             Some(t) => TileTable::uniform(t),
-            None => TileTable::plan(&spec.geometry(), spec.vocab),
+            None => TileTable::plan_for_lanes(
+                &spec.geometry(),
+                spec.vocab,
+                lanes,
+            ),
         }
     }
 
     /// Cumulative weight-preparation accounting (packs, cached
-    /// quantizations, hits, bytes, one-time seconds).
+    /// quantizations, hits, bytes, one-time seconds), plus the
+    /// still-resident row-major weight bytes (zero at steady state:
+    /// `bind` releases originals once they are packed).
     pub fn prep_report(&self) -> PrepStats {
-        self.prep.stats()
+        let mut s = self.prep.stats();
+        s.bytes_resident = self
+            .models
+            .values()
+            .map(|m| m.weight_bytes_resident())
+            .sum();
+        s
     }
 
     /// The prepared-weight handle a binding of `artifact`'s model
@@ -291,6 +333,7 @@ impl NativeEngine {
             validate,
             pool.as_deref(),
             block_rows,
+            self.dispatch,
         );
         let vocab = model.spec.vocab;
         let t0 = Instant::now();
@@ -329,6 +372,7 @@ impl NativeEngine {
             validate,
             pool.as_deref(),
             block_rows,
+            self.dispatch,
         );
         let vocab = model.spec.vocab;
         let t0 = Instant::now();
@@ -389,13 +433,27 @@ impl Engine for NativeEngine {
         let nm = meta.nm;
         let want_quant = meta.variant.starts_with("sq");
         let setting = setting_from_files(files, nm.is_some())?;
+        // resolve the SIMD kernel vtable ONCE, here — the hot paths
+        // carry the resolved function pointers through ExecOpts and
+        // never probe the CPU (auto() caches detection process-wide)
+        self.dispatch = match self.force_level {
+            Some(level) => Dispatch::force(level).ok_or_else(|| {
+                anyhow!(
+                    "dispatch level {level:?} unavailable on this \
+                     build/CPU (simd feature off, wrong arch, or \
+                     missing ISA)"
+                )
+            })?,
+            None => Dispatch::auto(),
+        };
         // field-precise model lookup: `prep` below needs `&mut self`
         // alongside this `&NativeModel`
         let model_name = model_name_of(artifact).to_string();
         let model = self.models.get(&model_name).ok_or_else(|| {
             anyhow!("artifact {artifact}: model '{model_name}' not loaded")
         })?;
-        let tiles = self.tile_table(&model.spec);
+        let tiles =
+            self.tile_table(&model.spec, self.dispatch.level.lanes_f32());
         let key = files.join("+");
         let map_key = binding_key(artifact, &key);
         // the plan is built once per binding and reused by every
@@ -423,6 +481,16 @@ impl Engine for NativeEngine {
         // the int8 side — all cached per weight Arc, so a re-bind is
         // pure cache hits and no hot path ever prepares anything
         let pm = self.prep.prepare_model(model, &tiles, want_quant);
+        // packed-only weight memory: the panels (and cached quant
+        // source) are now the only copies the engine needs, so drop
+        // the row-major originals instead of holding every projection
+        // twice. A later re-bind at a different tile width
+        // reconstructs the row-major view losslessly from any packed
+        // entry (`PackedPanels::unpack`), so this is pure memory, not
+        // a behavior change.
+        if let Some(m) = self.models.get_mut(&model_name) {
+            m.release_weight_originals();
+        }
         self.prepared.insert((model_name, tiles), Arc::new(pm));
         Ok(key)
     }
@@ -647,6 +715,7 @@ impl Engine for NativeEngine {
         };
         let mut audit = self.audit;
         let block_rows = self.block_rows;
+        let dispatch = self.dispatch;
         let prepared = self.prepared_for(artifact, &tiles)?;
         // steady-state contract: a decode step performs zero weight
         // preparation — everything was packed/quantized at bind
@@ -655,7 +724,7 @@ impl Engine for NativeEngine {
         let t0 = Instant::now();
         let logits = model.decode_paged(
             token, pos, &mut view, kv_len, &prepared, quantized,
-            block_rows, &mut audit,
+            block_rows, dispatch, &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
         #[cfg(debug_assertions)]
@@ -741,6 +810,7 @@ impl Engine for NativeEngine {
         let vocab = model.spec.vocab;
         let mut audit = self.audit;
         let block_rows = self.block_rows;
+        let dispatch = self.dispatch;
         let prepared = self.prepared_for(artifact, &tiles)?;
         // steady-state contract: a decode step performs zero weight
         // preparation — everything was packed/quantized at bind
@@ -749,7 +819,7 @@ impl Engine for NativeEngine {
         let t0 = Instant::now();
         let logits = model.decode_paged(
             token, pos, kv, kv_len, &prepared, quantized, block_rows,
-            &mut audit,
+            dispatch, &mut audit,
         );
         let exec_secs = t0.elapsed().as_secs_f64();
         #[cfg(debug_assertions)]
@@ -781,7 +851,9 @@ impl Engine for NativeEngine {
     }
 
     fn prep_stats(&self) -> Option<PrepStats> {
-        Some(self.prep.stats())
+        // prep_report (not the raw cache stats) so the resident-bytes
+        // gauge reflects whether the row-major originals were released
+        Some(self.prep_report())
     }
 }
 
@@ -846,6 +918,34 @@ mod tests {
         let s2 = e.prep_report();
         assert_eq!(s2.prep_calls(), s1.prep_calls());
         assert!(s2.cache_hits > s1.cache_hits);
+    }
+
+    #[test]
+    fn bind_drops_row_major_weight_originals() {
+        let mut e = NativeEngine::synthetic(vec![small_spec()]);
+        let before = e.prep_report();
+        // before any bind the row-major originals are the only copy
+        assert!(before.bytes_resident > 0);
+        assert_eq!(before.bytes_packed, 0);
+        let art = "tiny-lm-a.prefill16.sq";
+        let bind = e.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+        let after = e.prep_report();
+        // the ~2x duplication is gone: packed panels hold every value,
+        // the originals are released
+        assert_eq!(after.bytes_resident, 0);
+        assert!(after.bytes_packed >= before.bytes_resident);
+        // a re-bind at a NEW tile width must re-prepare from the
+        // packed panels (lossless unpack), not from the originals
+        e.tile_override = Some(5);
+        e.bind(art, &["tiny-lm-a.sq.atw"]).unwrap();
+        let repacked = e.prep_report();
+        assert!(repacked.weights_packed > after.weights_packed);
+        assert_eq!(repacked.bytes_resident, 0);
+        // and serving still works off packed-only memory
+        e.tile_override = None;
+        let tokens = super::testsupport::tokens_for(2, 16);
+        let out = e.prefill(art, &bind, &tokens).unwrap();
+        assert!(out.logits.iter().all(|v| v.is_finite()));
     }
 
     #[test]

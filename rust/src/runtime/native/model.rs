@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::super::artifact::{ArtifactMeta, Manifest, ModelInfo};
@@ -295,21 +296,90 @@ fn stats_skip_layers(dir: &Path, model: &str) -> Option<Vec<usize>> {
     Some(arr.iter().filter_map(|v| v.as_usize()).collect())
 }
 
+/// Process-wide weight-identity counter backing [`ModelWeight::id`].
+static NEXT_WEIGHT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One projection weight matrix with a stable identity.
+///
+/// The preparation cache used to key prepared panels by the weight's
+/// `Arc` pointer, which forced the row-major original to stay alive for
+/// the engine's whole lifetime — a ~2x duplication of every projection
+/// weight once the panel-packed copy existed. A `ModelWeight` instead
+/// carries a process-unique `id` (the cache key, valid even after the
+/// data is gone) and makes the row-major bytes **releasable**: after
+/// `bind` packs a weight, [`ModelWeight::release`] drops the original
+/// and the panels become the only resident copy. A later preparation at
+/// a different tile width reconstructs the row-major bytes losslessly
+/// from any existing panel packing (`PackedPanels::unpack`).
+pub(super) struct ModelWeight {
+    id: u64,
+    data: Option<Arc<Vec<f32>>>,
+}
+
+impl ModelWeight {
+    /// Wrap a freshly synthesized/loaded `[din, dout]` matrix.
+    pub(super) fn new(data: Vec<f32>) -> ModelWeight {
+        ModelWeight {
+            id: NEXT_WEIGHT_ID.fetch_add(1, Ordering::Relaxed),
+            data: Some(Arc::new(data)),
+        }
+    }
+
+    /// Process-unique identity — the preparation-cache key.
+    pub(super) fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The row-major original, while still resident.
+    pub(super) fn data(&self) -> Option<&Arc<Vec<f32>>> {
+        self.data.as_ref()
+    }
+
+    /// Drop the row-major original (the packed panels keep the bytes).
+    pub(super) fn release(&mut self) {
+        self.data = None;
+    }
+
+    /// Bytes of row-major f32 still resident in this weight.
+    pub(super) fn resident_bytes(&self) -> u64 {
+        self.data
+            .as_ref()
+            .map(|d| (d.len() * std::mem::size_of::<f32>()) as u64)
+            .unwrap_or(0)
+    }
+}
+
 /// One transformer layer's weights; `scale_*` are the per-input-channel
 /// weight norms the `all` setting uses as Robust-Norm-style scores.
 pub(super) struct LayerWeights {
     pub(super) attn_norm: Vec<f32>,
-    pub(super) wq: Arc<Vec<f32>>,
-    pub(super) wk: Arc<Vec<f32>>,
-    pub(super) wv: Arc<Vec<f32>>,
-    pub(super) wo: Arc<Vec<f32>>,
+    pub(super) wq: ModelWeight,
+    pub(super) wk: ModelWeight,
+    pub(super) wv: ModelWeight,
+    pub(super) wo: ModelWeight,
     pub(super) mlp_norm: Vec<f32>,
-    pub(super) w_gate: Arc<Vec<f32>>,
-    pub(super) w_up: Arc<Vec<f32>>,
-    pub(super) w_down: Arc<Vec<f32>>,
+    pub(super) w_gate: ModelWeight,
+    pub(super) w_up: ModelWeight,
+    pub(super) w_down: ModelWeight,
     pub(super) scale_q: Vec<f32>,
     pub(super) scale_gate: Vec<f32>,
     pub(super) scale_down: Vec<f32>,
+}
+
+impl LayerWeights {
+    /// The layer's eight projection weights (seven slots; the lm_head
+    /// lives on the model).
+    fn weights_mut(&mut self) -> [&mut ModelWeight; 7] {
+        [
+            &mut self.wq,
+            &mut self.wk,
+            &mut self.wv,
+            &mut self.wo,
+            &mut self.w_gate,
+            &mut self.w_up,
+            &mut self.w_down,
+        ]
+    }
 }
 
 /// A native model: spec + deterministically synthesized weights.
@@ -319,7 +389,7 @@ pub struct NativeModel {
     pub(super) embed: Vec<f32>,
     pub(super) layers: Vec<LayerWeights>,
     pub(super) final_norm: Vec<f32>,
-    pub(super) lm_head: Arc<Vec<f32>>,
+    pub(super) lm_head: ModelWeight,
 }
 
 fn rand_mat(rng: &mut Rng, din: usize, dout: usize) -> Vec<f32> {
@@ -355,27 +425,61 @@ impl NativeModel {
                 let w_down = rand_mat(&mut rng, f, d);
                 LayerWeights {
                     attn_norm: vec![1.0; d],
-                    wk: Arc::new(rand_mat(&mut rng, d, kvd)),
-                    wv: Arc::new(rand_mat(&mut rng, d, kvd)),
-                    wo: Arc::new(rand_mat(&mut rng, qd, d)),
+                    wk: ModelWeight::new(rand_mat(&mut rng, d, kvd)),
+                    wv: ModelWeight::new(rand_mat(&mut rng, d, kvd)),
+                    wo: ModelWeight::new(rand_mat(&mut rng, qd, d)),
                     mlp_norm: vec![1.0; d],
-                    w_up: Arc::new(rand_mat(&mut rng, d, f)),
+                    w_up: ModelWeight::new(rand_mat(&mut rng, d, f)),
                     scale_q: row_norms(&wq, d, qd),
                     scale_gate: row_norms(&w_gate, d, f),
                     scale_down: row_norms(&w_down, f, d),
-                    wq: Arc::new(wq),
-                    w_gate: Arc::new(w_gate),
-                    w_down: Arc::new(w_down),
+                    wq: ModelWeight::new(wq),
+                    w_gate: ModelWeight::new(w_gate),
+                    w_down: ModelWeight::new(w_down),
                 }
             })
             .collect();
         NativeModel {
             embed: rand_mat(&mut rng, spec.vocab, spec.d_model),
             final_norm: vec![1.0; spec.d_model],
-            lm_head: Arc::new(rand_mat(&mut rng, spec.d_model, spec.vocab)),
+            lm_head: ModelWeight::new(rand_mat(
+                &mut rng,
+                spec.d_model,
+                spec.vocab,
+            )),
             layers,
             spec,
         }
+    }
+
+    /// Drop every projection weight's row-major original — called by
+    /// `bind` right after preparation packs them, making the panel
+    /// layout the only resident copy (the `embed` table and the norm /
+    /// score vectors are not packed and stay).
+    pub(super) fn release_weight_originals(&mut self) {
+        for lw in &mut self.layers {
+            for w in lw.weights_mut() {
+                w.release();
+            }
+        }
+        self.lm_head.release();
+    }
+
+    /// Row-major projection-weight bytes still resident (the
+    /// `weight_bytes_resident` metric): per-weight f32 bytes for every
+    /// not-yet-released original, zero once `bind` has released them.
+    pub(super) fn weight_bytes_resident(&self) -> u64 {
+        let mut total = self.lm_head.resident_bytes();
+        for lw in &self.layers {
+            total += lw.wq.resident_bytes()
+                + lw.wk.resident_bytes()
+                + lw.wv.resident_bytes()
+                + lw.wo.resident_bytes()
+                + lw.w_gate.resident_bytes()
+                + lw.w_up.resident_bytes()
+                + lw.w_down.resident_bytes();
+        }
+        total
     }
 
     pub(super) fn embed_tokens(&self, tokens: &[i32]) -> Vec<f32> {

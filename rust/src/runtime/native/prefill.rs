@@ -161,7 +161,13 @@ impl NativeModel {
             }
         }
         let logits = self.logits(
-            &x, t, prepared, opts.pool, opts.block_rows, audit,
+            &x,
+            t,
+            prepared,
+            opts.pool,
+            opts.block_rows,
+            opts.dispatch,
+            audit,
         );
         (logits, k_cache, v_cache)
     }

@@ -1,5 +1,5 @@
 //! Bind-time weight preparation: panel packing + cached W8A8
-//! quantization, keyed per weight `Arc`.
+//! quantization, keyed per weight identity.
 //!
 //! Every projection weight the hot path touches is prepared **once**,
 //! at [`Engine::bind`] time, into a [`PreparedWeight`]:
@@ -13,18 +13,27 @@
 //!   (`quant::quantize_weight`, **the only call site under
 //!   `runtime/native/`**) and its int8 bytes packed into the same
 //!   panel layout — cached in a `OnceLock`, so quantization happens at
-//!   most once per weight `Arc` no matter how many bindings, prefills
-//!   or decode steps share it.
+//!   most once per weight no matter how many bindings, prefills or
+//!   decode steps share it.
 //!
-//! The [`PrepCache`] keys preparations by `(weight Arc pointer, tile
-//! width)`: re-binds, the decode path, and the lm_head all resolve to
-//! the same `Arc<PreparedWeight>` (a cache *hit*), so steady-state
-//! serving does **zero** weight preparation — a contract the engine
-//! pins with a debug assertion around every decode step, and reports
-//! through [`PrepStats`] (`weight_prep_ms` / hit / miss counters in
-//! `EngineMetrics`). Keying by pointer is sound here because the
-//! engine's models (and thus their weight `Arc`s) live as long as the
-//! engine itself.
+//! The [`PrepCache`] keys preparations by `(weight id, tile width)`
+//! ([`ModelWeight::id`], a process-unique identity): re-binds, the
+//! decode path, and the lm_head all resolve to the same
+//! `Arc<PreparedWeight>` (a cache *hit*), so steady-state serving does
+//! **zero** weight preparation — a contract the engine pins with a
+//! debug assertion around every decode step, and reports through
+//! [`PrepStats`] (`weight_prep_ms` / hit / miss counters in
+//! `EngineMetrics`).
+//!
+//! Keying by id rather than pointer is what lets `bind` **release**
+//! the row-major originals after packing ([`ModelWeight::release`])
+//! without dangling the cache: the id stays valid with the data gone.
+//! Packed weight memory is therefore not duplicated at steady state
+//! (the `weight_bytes_resident` metric pins this at zero after bind) —
+//! and when a released weight must be prepared again at a different
+//! tile width, the cache reconstructs its row-major bytes losslessly
+//! from any existing panel packing (`PackedPanels::unpack`), so the
+//! new panels are bitwise identical to packing the original.
 //!
 //! [`Engine::bind`]: crate::runtime::Engine::bind
 
@@ -38,15 +47,17 @@ use crate::runtime::engine::PrepStats;
 use crate::sparsity::plan::TileTable;
 
 use super::layers::ProjKind;
-use super::model::NativeModel;
+use super::model::{ModelWeight, NativeModel};
 
 /// A quantized, panel-packed weight: the cached output of
 /// `quantize_weight` + packing (per-column scales ride alongside).
+/// Both members are `Arc`'d so the parallel W8A8 row tiles can share
+/// them with pool workers without copying.
 pub(super) struct QuantPanels {
     /// int8 weight bytes in tile-panel layout
-    pub wq: PackedPanels<i8>,
+    pub wq: Arc<PackedPanels<i8>>,
     /// per-output-column dequant scales
-    pub scales: Vec<f32>,
+    pub scales: Arc<Vec<f32>>,
 }
 
 /// One projection weight, prepared for the hot path: panel-packed f32
@@ -111,16 +122,16 @@ pub(super) struct PreparedModel {
     pub tiles: TileTable,
 }
 
-/// The engine's preparation cache: `(weight Arc pointer, tile width)`
-/// → prepared weight, plus cumulative [`PrepStats`].
+/// The engine's preparation cache: `(weight id, tile width)` →
+/// prepared weight, plus cumulative [`PrepStats`].
 #[derive(Default)]
 pub(super) struct PrepCache {
-    weights: HashMap<(usize, usize), Arc<PreparedWeight>>,
+    weights: HashMap<(u64, usize), Arc<PreparedWeight>>,
     /// row-major quantization `(wq bytes, per-column scales)` per
-    /// weight `Arc` — tile-independent, so preparing the same weight
-    /// at another tile width re-packs the int8 panels but never
+    /// weight id — tile-independent, so preparing the same weight at
+    /// another tile width re-packs the int8 panels but never
     /// re-quantizes
-    quants: HashMap<usize, Arc<(Vec<i8>, Vec<f32>)>>,
+    quants: HashMap<u64, Arc<(Vec<i8>, Vec<f32>)>>,
     stats: PrepStats,
 }
 
@@ -130,22 +141,45 @@ impl PrepCache {
         self.stats
     }
 
+    /// The row-major f32 bytes of `w`: the resident original when it
+    /// has not been released, otherwise a lossless reconstruction from
+    /// any existing panel packing of the same weight (release happens
+    /// only after a first packing exists, so one always does).
+    fn row_major(&self, w: &ModelWeight) -> Arc<Vec<f32>> {
+        if let Some(d) = w.data() {
+            return Arc::clone(d);
+        }
+        let packed = self
+            .weights
+            .iter()
+            .find(|((id, _), _)| *id == w.id())
+            .map(|(_, p)| &p.packed)
+            .unwrap_or_else(|| {
+                panic!(
+                    "weight {} released before any packing existed",
+                    w.id()
+                )
+            });
+        Arc::new(packed.unpack())
+    }
+
     /// Get-or-pack one weight at `tile` width. A hit returns the
     /// shared handle; a miss packs (counted + timed).
     fn prepare(
         &mut self,
-        w: &Arc<Vec<f32>>,
+        w: &ModelWeight,
         din: usize,
         dout: usize,
         tile: usize,
     ) -> Arc<PreparedWeight> {
-        let key = (Arc::as_ptr(w) as usize, tile);
+        let key = (w.id(), tile);
         if let Some(p) = self.weights.get(&key) {
             self.stats.cache_hits += 1;
             return Arc::clone(p);
         }
+        let rm = self.row_major(w);
         let t0 = Instant::now();
-        let packed = Arc::new(PackedPanels::pack(w, din, dout, tile));
+        let packed = Arc::new(PackedPanels::pack(&rm, din, dout, tile));
         self.stats.prep_secs += t0.elapsed().as_secs_f64();
         self.stats.weights_packed += 1;
         self.stats.bytes_packed += packed.bytes() as u64;
@@ -161,28 +195,31 @@ impl PrepCache {
     }
 
     /// Quantize + pack the int8 side of `p` if not already cached.
-    /// Quantization itself runs **at most once per weight `Arc`** (the
-    /// row-major bytes/scales are tile-independent and cached by
-    /// pointer); a different tile width only re-packs those bytes into
-    /// new panels.
-    fn ensure_quant(&mut self, key_ptr: usize, p: &PreparedWeight, w: &[f32]) {
+    /// Quantization itself runs **at most once per weight id** (the
+    /// row-major bytes/scales are tile-independent and cached by id);
+    /// a different tile width only re-packs those bytes into new
+    /// panels. Works after release too: the f32 source is then
+    /// reconstructed from `p`'s own panels, which is bitwise the
+    /// original.
+    fn ensure_quant(&mut self, w: &ModelWeight, p: &PreparedWeight) {
         if p.quant.get().is_some() {
             self.stats.cache_hits += 1;
             return;
         }
-        let rm = match self.quants.get(&key_ptr) {
+        let rm = match self.quants.get(&w.id()) {
             Some(q) => {
                 self.stats.cache_hits += 1;
                 Arc::clone(q)
             }
             None => {
+                let src = self.row_major(w);
                 let t0 = Instant::now();
                 let (wq, scales) =
-                    quant::quantize_weight(w, p.din, p.dout);
+                    quant::quantize_weight(&src, p.din, p.dout);
                 self.stats.prep_secs += t0.elapsed().as_secs_f64();
                 self.stats.weights_quantized += 1;
                 let q = Arc::new((wq, scales));
-                self.quants.insert(key_ptr, Arc::clone(&q));
+                self.quants.insert(w.id(), Arc::clone(&q));
                 q
             }
         };
@@ -192,7 +229,10 @@ impl PrepCache {
         self.stats.bytes_packed += wq.bytes() as u64;
         // a racing fill is impossible (the cache is behind &mut), but
         // set() is the non-panicking idempotent form regardless
-        let _ = p.quant.set(QuantPanels { wq, scales: rm.1.clone() });
+        let _ = p.quant.set(QuantPanels {
+            wq: Arc::new(wq),
+            scales: Arc::new(rm.1.clone()),
+        });
     }
 
     /// Prepare every projection of `model` under `tiles` (and, when
@@ -210,7 +250,7 @@ impl PrepCache {
             (sp.d_model, sp.q_dim(), sp.kv_dim(), sp.d_ff);
         let mut layers = Vec::with_capacity(model.layers.len());
         for lw in &model.layers {
-            let slots: [(&Arc<Vec<f32>>, &str, usize, usize); 7] = [
+            let slots: [(&ModelWeight, &str, usize, usize); 7] = [
                 (&lw.wq, "q_proj", d, qd),
                 (&lw.wk, "k_proj", d, kvd),
                 (&lw.wv, "v_proj", d, kvd),
@@ -225,8 +265,7 @@ impl PrepCache {
                 let p =
                     self.prepare(w, din, dout, tiles.tile_for(module));
                 if want_quant {
-                    let ptr = Arc::as_ptr(w) as usize;
-                    self.ensure_quant(ptr, &p, w);
+                    self.ensure_quant(w, &p);
                 }
                 prepared.push(p);
             }
@@ -257,7 +296,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn prepare_is_cached_per_arc_and_tile() {
+    fn prepare_is_cached_per_weight_and_tile() {
         let model = NativeModel::build(ModelSpec::tiny("prep-test"));
         let tiles =
             TileTable::plan(&model.spec.geometry(), model.spec.vocab);
@@ -296,7 +335,7 @@ mod tests {
         cache.prepare_model(&model, &tiles, true);
         assert_eq!(cache.stats().prep_calls(), calls_before);
         // a different tile table re-packs (f32 + int8 panels) but
-        // NEVER re-quantizes: the row-major bytes are per-Arc
+        // NEVER re-quantizes: the row-major bytes are cached per id
         let uni = TileTable::uniform(4);
         let pm4 = cache.prepare_model(&model, &uni, true);
         let s4 = cache.stats();
@@ -316,13 +355,43 @@ mod tests {
         let mut cache = PrepCache::default();
         let lw = &model.layers[0];
         let (d, f) = (model.spec.d_model, model.spec.d_ff);
+        let original: Vec<f32> = lw.w_gate.data().unwrap().to_vec();
         let p = cache.prepare(&lw.w_gate, d, f, 16);
-        assert_eq!(p.packed.unpack(), *lw.w_gate);
-        let ptr = Arc::as_ptr(&lw.w_gate) as usize;
-        cache.ensure_quant(ptr, &p, &lw.w_gate);
+        assert_eq!(p.packed.unpack(), original);
+        cache.ensure_quant(&lw.w_gate, &p);
         let q = p.quant().unwrap();
-        let (wq, ws) = quant::quantize_weight(&lw.w_gate, d, f);
+        let (wq, ws) = quant::quantize_weight(&original, d, f);
         assert_eq!(q.wq.unpack(), wq);
-        assert_eq!(q.scales, ws);
+        assert_eq!(*q.scales, ws);
+    }
+
+    #[test]
+    fn released_weights_reprepare_bitwise_from_panels() {
+        // pack dense-only, release the originals, then ask for a
+        // quantized preparation at a NEW tile width: both the f32
+        // panels and the int8 quantization must be reconstructed
+        // bitwise from the surviving panel packing
+        let mut model = NativeModel::build(ModelSpec::tiny("prep-rel"));
+        let tiles =
+            TileTable::plan(&model.spec.geometry(), model.spec.vocab);
+        let mut cache = PrepCache::default();
+        cache.prepare_model(&model, &tiles, false);
+        // goldens from the resident originals
+        let (d, f) = (model.spec.d_model, model.spec.d_ff);
+        let w0: Vec<f32> =
+            model.layers[0].w_gate.data().unwrap().to_vec();
+        let (wq0, ws0) = quant::quantize_weight(&w0, d, f);
+        assert!(model.weight_bytes_resident() > 0);
+        model.release_weight_originals();
+        assert_eq!(model.weight_bytes_resident(), 0);
+        // re-tile + quantize with the data gone
+        let uni = TileTable::uniform(4);
+        let pm = cache.prepare_model(&model, &uni, true);
+        let p = pm.layers[0].get(ProjKind::Gate);
+        assert_eq!(p.tile, 4);
+        assert_eq!(p.packed.unpack(), w0, "f32 repack drifted");
+        let q = p.quant().unwrap();
+        assert_eq!(q.wq.unpack(), wq0, "int8 quantization drifted");
+        assert_eq!(*q.scales, ws0);
     }
 }

@@ -43,6 +43,18 @@ pub fn planned_tile(dout: usize) -> usize {
     }
 }
 
+/// [`planned_tile`] made lane-aware: the planned width, widened to at
+/// least `lanes` (the f32 lane count of the resolved SIMD dispatch
+/// level, a power of two `<= 16`). Because the specialized widths
+/// (4/8/16/32) and the lane counts (1/4/8/16) are all powers of two,
+/// `max` alone guarantees the result is a whole multiple of `lanes` —
+/// full panels then carry no scalar tail under the vector kernels —
+/// while staying one of the const-specialized widths. Purely a
+/// performance refinement: parity holds at every width regardless.
+pub fn planned_tile_for_lanes(dout: usize, lanes: usize) -> usize {
+    clamp_tile(planned_tile(dout).max(lanes))
+}
+
 /// Per-module `dout`-tile widths: one entry per policy module
 /// ([`policy::MODULES`]) plus the lm_head, with a fallback for modules
 /// the table does not know. Planned from [`Geometry`] via
@@ -75,6 +87,19 @@ impl TileTable {
     /// [`planned_tile`] of its output dimension (`vocab` sizes the
     /// lm_head panel).
     pub fn plan(g: &Geometry, vocab: usize) -> TileTable {
+        TileTable::plan_for_lanes(g, vocab, 1)
+    }
+
+    /// [`TileTable::plan`] widened for a SIMD dispatch level: every
+    /// planned width is [`planned_tile_for_lanes`] of the module's
+    /// output dimension, so full panels are whole vector registers at
+    /// the level the binding resolved (`lanes` = `Level::lanes_f32`).
+    /// With `lanes == 1` this is exactly [`TileTable::plan`].
+    pub fn plan_for_lanes(
+        g: &Geometry,
+        vocab: usize,
+        lanes: usize,
+    ) -> TileTable {
         let dout_of = |name: &str| match name {
             "q_proj" => g.q_dim,
             "k_proj" | "v_proj" => g.kv_dim,
@@ -90,12 +115,12 @@ impl TileTable {
         };
         let mut widths = [DEFAULT_DOUT_TILE; MODULES.len()];
         for (mi, name) in MODULES.iter().enumerate() {
-            widths[mi] = planned_tile(dout_of(name));
+            widths[mi] = planned_tile_for_lanes(dout_of(name), lanes);
         }
         TileTable {
             widths,
-            lm_head: planned_tile(vocab),
-            fallback: DEFAULT_DOUT_TILE,
+            lm_head: planned_tile_for_lanes(vocab, lanes),
+            fallback: planned_tile_for_lanes(DEFAULT_DOUT_TILE, lanes),
         }
     }
 
@@ -383,6 +408,39 @@ mod tests {
         }
         assert_eq!(planned_tile(16), 8);
         assert_eq!(planned_tile(384), 32);
+    }
+
+    #[test]
+    fn lane_aware_planning_rounds_to_whole_registers() {
+        // every lane count keeps widths specialized AND lane-multiple
+        for lanes in [1usize, 4, 8, 16] {
+            for dout in 1usize..400 {
+                let w = planned_tile_for_lanes(dout, lanes);
+                assert!(
+                    [4usize, 8, 16, 32].contains(&w),
+                    "dout {dout} lanes {lanes}: width {w}"
+                );
+                assert_eq!(w % lanes, 0, "dout {dout} lanes {lanes}");
+                assert!(w >= planned_tile(dout), "never narrows");
+            }
+        }
+        // lanes == 1 is exactly the scalar plan
+        assert_eq!(planned_tile_for_lanes(16, 1), planned_tile(16));
+        // a 16-lane register widens the narrow kv panels to one register
+        let g = Geometry {
+            d_model: 32,
+            n_layers: 2,
+            q_dim: 32,
+            kv_dim: 16,
+            d_ff: 256,
+            n_experts: 0,
+            top_k: 0,
+            d_ff_expert: 0,
+        };
+        let t = TileTable::plan_for_lanes(&g, 384, 16);
+        assert_eq!(t.tile_for("k_proj"), 16);
+        assert_eq!(t.tile_for("gate_proj"), 32);
+        assert_eq!(TileTable::plan_for_lanes(&g, 384, 1), TileTable::plan(&g, 384));
     }
 
     #[test]

@@ -27,6 +27,7 @@ use std::sync::Arc;
 use super::mask::nm_mask_scored;
 use crate::exec::ThreadPool;
 use crate::kernels::pack::PackedPanels;
+use crate::kernels::simd::Dispatch;
 use crate::kernels::{self, DEFAULT_DOUT_TILE};
 
 /// Compressed N:M activation matrix [t, din*n/m] with per-element group
@@ -237,9 +238,23 @@ impl NmBlock {
         n: usize,
         m: usize,
     ) -> Vec<f32> {
+        self.matmul_packed_dispatch(w, din, n, m, Dispatch::scalar())
+    }
+
+    /// [`NmBlock::matmul_packed`] through a resolved SIMD [`Dispatch`]
+    /// vtable — bitwise identical at every level (the SIMD kernels
+    /// preserve each element's scalar reduction chain).
+    fn matmul_packed_dispatch(
+        &self,
+        w: &PackedPanels<f32>,
+        din: usize,
+        n: usize,
+        m: usize,
+        disp: Dispatch,
+    ) -> Vec<f32> {
         let per_row = din / m * n;
         let mut out = vec![0.0f32; self.rows * w.dout];
-        kernels::nm::spmm_nm_tiled_packed(
+        (disp.spmm)(
             &self.values,
             &self.index,
             self.rows,
@@ -429,11 +444,23 @@ impl NmCompressedBatch {
     /// identical to [`NmCompressedBatch::matmul`] for every panel
     /// width; the weight panels stream unit-stride.
     pub fn matmul_packed(&self, w: &PackedPanels<f32>) -> Vec<f32> {
+        self.matmul_packed_dispatch(w, Dispatch::scalar())
+    }
+
+    /// [`NmCompressedBatch::matmul_packed`] through a resolved SIMD
+    /// [`Dispatch`] vtable — bitwise identical at every level.
+    pub fn matmul_packed_dispatch(
+        &self,
+        w: &PackedPanels<f32>,
+        disp: Dispatch,
+    ) -> Vec<f32> {
         assert_eq!(w.din, self.din, "packed weight contraction width");
         let dout = w.dout;
         let mut out = vec![0.0f32; self.t * dout];
         for b in &self.blocks {
-            let tile = b.matmul_packed(w, self.din, self.n, self.m);
+            let tile = b.matmul_packed_dispatch(
+                w, self.din, self.n, self.m, disp,
+            );
             out[b.row0 * dout..(b.row0 + b.rows) * dout]
                 .copy_from_slice(&tile);
         }
@@ -449,14 +476,26 @@ impl NmCompressedBatch {
         w: &Arc<PackedPanels<f32>>,
         pool: &ThreadPool,
     ) -> Vec<f32> {
+        self.matmul_packed_parallel_dispatch(w, pool, Dispatch::scalar())
+    }
+
+    /// [`NmCompressedBatch::matmul_packed_parallel`] through a resolved
+    /// SIMD [`Dispatch`] vtable (the `Copy` vtable rides into the pool
+    /// workers) — bitwise identical at every level and pool width.
+    pub fn matmul_packed_parallel_dispatch(
+        &self,
+        w: &Arc<PackedPanels<f32>>,
+        pool: &ThreadPool,
+        disp: Dispatch,
+    ) -> Vec<f32> {
         assert_eq!(w.din, self.din, "packed weight contraction width");
         if pool.size() <= 1 || self.blocks.len() <= 1 {
-            return self.matmul_packed(w);
+            return self.matmul_packed_dispatch(w, disp);
         }
         let (din, n, m, dout) = (self.din, self.n, self.m, w.dout);
         let w = Arc::clone(w);
         let tiles = pool.map(self.blocks.clone(), move |b| {
-            b.matmul_packed(&w, din, n, m)
+            b.matmul_packed_dispatch(&w, din, n, m, disp)
         });
         let mut out = vec![0.0f32; self.t * dout];
         for (b, tile) in self.blocks.iter().zip(tiles) {
@@ -485,8 +524,20 @@ pub fn dense_matmul_packed(
     din: usize,
     w: &PackedPanels<f32>,
 ) -> Vec<f32> {
+    dense_matmul_packed_dispatch(x, t, din, w, Dispatch::scalar())
+}
+
+/// [`dense_matmul_packed`] through a resolved SIMD [`Dispatch`] vtable
+/// — bitwise identical at every level.
+pub fn dense_matmul_packed_dispatch(
+    x: &[f32],
+    t: usize,
+    din: usize,
+    w: &PackedPanels<f32>,
+    disp: Dispatch,
+) -> Vec<f32> {
     let mut out = vec![0.0f32; t * w.dout];
-    kernels::dense::dense_tiled_packed(x, t, din, w, &mut out);
+    (disp.dense)(x, t, din, w, &mut out);
     out
 }
 
@@ -503,11 +554,35 @@ pub fn dense_matmul_packed_parallel(
     pool: &ThreadPool,
     block_rows: usize,
 ) -> Vec<f32> {
+    dense_matmul_packed_parallel_dispatch(
+        x,
+        t,
+        din,
+        w,
+        pool,
+        block_rows,
+        Dispatch::scalar(),
+    )
+}
+
+/// [`dense_matmul_packed_parallel`] through a resolved SIMD
+/// [`Dispatch`] vtable — bitwise identical at every level, tiling and
+/// pool width.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_matmul_packed_parallel_dispatch(
+    x: &Arc<Vec<f32>>,
+    t: usize,
+    din: usize,
+    w: &Arc<PackedPanels<f32>>,
+    pool: &ThreadPool,
+    block_rows: usize,
+    disp: Dispatch,
+) -> Vec<f32> {
     assert_eq!(x.len(), t * din);
     assert_eq!(w.din, din, "packed weight contraction width");
     let block_rows = block_rows.max(1);
     if pool.size() <= 1 || t <= block_rows {
-        return dense_matmul_packed(x, t, din, w);
+        return dense_matmul_packed_dispatch(x, t, din, w, disp);
     }
     let mut tiles_spec: Vec<(usize, usize)> = Vec::new();
     let mut row0 = 0;
@@ -519,11 +594,12 @@ pub fn dense_matmul_packed_parallel(
     let xs = Arc::clone(x);
     let w2 = Arc::clone(w);
     let tiles = pool.map(tiles_spec, move |(row0, rows)| {
-        dense_matmul_packed(
+        dense_matmul_packed_dispatch(
             &xs[row0 * din..(row0 + rows) * din],
             rows,
             din,
             &w2,
+            disp,
         )
     });
     // map preserves tile order: assembly is a straight concatenation

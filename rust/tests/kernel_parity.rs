@@ -17,11 +17,13 @@ use std::sync::Arc;
 
 use amber_pruner::exec::ThreadPool;
 use amber_pruner::kernels::pack::PackedPanels;
+use amber_pruner::kernels::simd::{Dispatch, Level};
 use amber_pruner::kernels::{reference, DEFAULT_DOUT_TILE, MAX_DOUT_TILE};
 use amber_pruner::quant;
 use amber_pruner::runtime::{Engine, ModelSpec, NativeEngine};
 use amber_pruner::sparsity::spmm::{
-    dense_matmul, dense_matmul_packed, dense_matmul_packed_parallel,
+    dense_matmul, dense_matmul_packed, dense_matmul_packed_dispatch,
+    dense_matmul_packed_parallel, dense_matmul_packed_parallel_dispatch,
     dense_matmul_parallel, dense_matmul_with_tile, NmCompressed,
     NmCompressedBatch,
 };
@@ -349,8 +351,13 @@ fn packed_per_module_tile_table_is_bit_transparent_through_engine() {
     let art = "tiny-lm-a.prefill64.nm2_4";
     let files = ["tiny-lm-a.atw", "tiny-lm-a.aux_all.atw"];
     let run = |tile: Option<usize>| {
+        // force scalar dispatch: this test pins the scalar-planned
+        // per-module widths, and auto-dispatch on a wide-SIMD CPU
+        // legitimately widens them to whole registers (covered by the
+        // simd_ tests below)
         let mut e =
-            NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")]);
+            NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")])
+                .with_dispatch_level(Level::Scalar);
         if let Some(t) = tile {
             e = e.with_dout_tile(t);
         }
@@ -407,6 +414,157 @@ fn packed_bind_rebind_cached_quant_bitwise_equals_fresh() {
     assert_eq!(out1.logits, out3.logits, "cached != fresh quantization");
     assert_eq!(out1.k_cache, out3.k_cache);
     assert_eq!(out1.v_cache, out3.v_cache);
+}
+
+// ---------------------------------------------- SIMD dispatch (ISSUE 7)
+
+#[test]
+fn simd_every_dispatch_level_bitwise_equals_tiled_across_matrix() {
+    // the ISSUE 7 kernel gate: every dispatch level this build/CPU
+    // offers — scalar always; AVX2/AVX-512/NEON when the `simd`
+    // feature and the ISA are present — must be bitwise identical to
+    // the tiled packed kernels (themselves pinned against the naive
+    // reference above) across ratios x ragged douts x panel widths x
+    // block_rows x pools, all three kernel families. With default
+    // features the sweep degenerates to scalar-vs-scalar and stays
+    // green.
+    let mut rng = Rng::new(229);
+    let levels = Dispatch::available_levels();
+    assert!(levels.contains(&Level::Scalar), "scalar always available");
+    let pools: Vec<ThreadPool> =
+        [1usize, 4].iter().map(|&w| ThreadPool::new(w)).collect();
+    for &(n, m) in &RATIOS {
+        let din = 2 * m * 3; // divisible by every m
+        for &dout in &[5usize, 13, 21, 37] {
+            let t = 9usize;
+            let x = rand_mat(&mut rng, t * din);
+            let xa = Arc::new(x.clone());
+            let w = rand_mat(&mut rng, din * dout);
+            let (xq, xs) = quant::quantize_per_token(&x, t, din);
+            let xqa = Arc::new(xq.clone());
+            let xsa = Arc::new(xs.clone());
+            for &pw in &PANELS {
+                let packed =
+                    Arc::new(PackedPanels::pack(&w, din, dout, pw));
+                let (pq, ps) =
+                    quant::quantize_weight_packed(&w, din, dout, pw);
+                let (pq, ps) = (Arc::new(pq), Arc::new(ps));
+                let batch = NmCompressedBatch::compress(
+                    &x, t, din, &[], n, m, 7,
+                );
+                let nm_golden = batch.matmul_packed(&packed);
+                let dense_golden = dense_matmul_packed(&x, t, din, &packed);
+                let int8_golden = quant::w8a8_matmul_packed_per_token(
+                    &xq, t, din, &pq, &xs, &ps,
+                );
+                for &level in &levels {
+                    let disp = Dispatch::force(level).unwrap();
+                    let ctx = format!(
+                        "{n}:{m} dout={dout} panel={pw} level={level:?}"
+                    );
+                    assert_eq!(
+                        batch.matmul_packed_dispatch(&packed, disp),
+                        nm_golden,
+                        "{ctx} nm serial"
+                    );
+                    assert_eq!(
+                        dense_matmul_packed_dispatch(
+                            &x, t, din, &packed, disp
+                        ),
+                        dense_golden,
+                        "{ctx} dense serial"
+                    );
+                    assert_eq!(
+                        quant::w8a8_matmul_packed_per_token_dispatch(
+                            &xq, t, din, &pq, &xs, &ps, disp
+                        ),
+                        int8_golden,
+                        "{ctx} int8 serial"
+                    );
+                    for pool in &pools {
+                        for &block_rows in &[1usize, 32] {
+                            let pctx = format!(
+                                "{ctx} pool={} block={block_rows}",
+                                pool.size()
+                            );
+                            assert_eq!(
+                                batch.matmul_packed_parallel_dispatch(
+                                    &packed, pool, disp
+                                ),
+                                nm_golden,
+                                "{pctx} nm"
+                            );
+                            assert_eq!(
+                                dense_matmul_packed_parallel_dispatch(
+                                    &xa, t, din, &packed, pool,
+                                    block_rows, disp,
+                                ),
+                                dense_golden,
+                                "{pctx} dense"
+                            );
+                            assert_eq!(
+                                quant::w8a8_matmul_packed_per_token_parallel_dispatch(
+                                    &xqa, t, din, &pq, &xsa, &ps, pool,
+                                    block_rows, disp,
+                                ),
+                                int8_golden,
+                                "{pctx} int8"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_auto_dispatch_bind_serves_tokens_identical_to_forced_scalar() {
+    // the ISSUE 7 engine gate: an auto-dispatch bind (whatever level
+    // this CPU resolves, including the lane-widened tile planning that
+    // comes with it) must serve token-identical output to a
+    // forced-scalar bind — and so must every individually forced
+    // level. SIMD is pure perf all the way through packing, N:M
+    // prefill, and per-token W8A8.
+    let mut rng = Rng::new(233);
+    let prompts: Vec<Vec<i32>> =
+        [5usize, 64, 17, 1].iter().map(|&l| prompt(&mut rng, l)).collect();
+    let cases: [(&str, &[&str]); 2] = [
+        ("tiny-lm-a.prefill64.sq", &["tiny-lm-a.sq.atw"]),
+        (
+            "tiny-lm-a.prefill64.nm2_4",
+            &["tiny-lm-a.atw", "tiny-lm-a.aux_all.atw"],
+        ),
+    ];
+    for (art, files) in cases {
+        let run = |force: Option<Level>| {
+            let mut e =
+                NativeEngine::synthetic(vec![ModelSpec::tiny("tiny-lm-a")])
+                    .with_parallelism(4);
+            if let Some(level) = force {
+                e = e.with_dispatch_level(level);
+            }
+            let bind = e.bind(art, files).unwrap();
+            let level = e.dispatch_level();
+            let out = e.prefill_packed(art, &bind, &prompts).unwrap();
+            (level, out.logits, out.k_cache, out.v_cache)
+        };
+        let (_, gl, gk, gv) = run(Some(Level::Scalar));
+        let (auto_level, al, ak, av) = run(None);
+        assert_eq!(
+            (al, ak, av),
+            (gl.clone(), gk.clone(), gv.clone()),
+            "{art}: auto dispatch ({auto_level:?}) != forced scalar"
+        );
+        for level in Dispatch::available_levels() {
+            let (_, fl, fk, fv) = run(Some(level));
+            assert_eq!(
+                (fl, fk, fv),
+                (gl.clone(), gk.clone(), gv.clone()),
+                "{art}: forced {level:?} != forced scalar"
+            );
+        }
+    }
 }
 
 #[test]
