@@ -9,7 +9,11 @@
 //! tokens x {dense, 2:4, 4:8, 8:16} x pool width and emits
 //! machine-readable results to `BENCH_prefill.json` (written next to the
 //! package manifest when run via `cargo bench --bench prefill_latency`) —
-//! the perf baseline future PRs regress against. Every projection here
+//! the perf baseline future PRs regress against. Each row carries a
+//! `chunk_tokens` column (0 = one-shot); the chunked row set replays
+//! the same token population the way the continuous-batching scheduler
+//! does under `chunk_tokens` (ISSUE 8), pricing the chunking overhead
+//! against the one-shot rows. Every projection here
 //! executes through the register-tiled kernel core (`kernels::*` via
 //! the engine's per-module `SparsityPlan::tiles` table), so these
 //! numbers reflect
@@ -31,7 +35,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use amber_pruner::bench::bench;
-use amber_pruner::runtime::{engine_for, Engine as _};
+use amber_pruner::runtime::{engine_for, Engine as _, PrefixedPrompt};
 use amber_pruner::util::json::Json;
 
 const MODEL: &str = "tiny-lm-a";
@@ -185,6 +189,7 @@ fn batched_section() {
                 o.insert("tokens".into(), num(tokens as f64));
                 o.insert("pool".into(), num(pool as f64));
                 o.insert("requests".into(), num(n_req as f64));
+                o.insert("chunk_tokens".into(), num(0.0));
                 o.insert("median_secs".into(), num(r.median_secs));
                 o.insert("mean_secs".into(), num(r.mean_secs));
                 o.insert("p95_secs".into(), num(r.p95_secs));
@@ -194,6 +199,99 @@ fn batched_section() {
                 );
                 o.insert("speedup_vs_dense".into(), num(speedup));
                 o.insert("prep_secs".into(), num(prep_secs));
+                results.push(Json::Obj(o));
+            }
+        }
+        // chunked prefill rows (ISSUE 8): replay the same 1024 tokens
+        // the way the scheduler serves them under `chunk_tokens` —
+        // every request's i-th chunk batched into one prefixed prefill
+        // over the request's own earlier chunks. The prefix K/V is a
+        // cold prefill of the leading tokens, staged OUTSIDE the timed
+        // loop (the serving engine gathers it from the paged KV store),
+        // so the rows price exactly the chunking overhead: re-attention
+        // over the cached prefix plus the extra dispatches.
+        for variant in ["dense", "nm2_4"] {
+            let art = format!("{MODEL}.prefill{seq}.{variant}");
+            if !rt.manifest().artifacts.contains_key(&art) {
+                continue;
+            }
+            let files: Vec<String> = if variant == "dense" {
+                vec![weights.clone()]
+            } else {
+                vec![weights.clone(), format!("{MODEL}.aux_ls.atw")]
+            };
+            let refs: Vec<&str> =
+                files.iter().map(|s| s.as_str()).collect();
+            let binding = rt.bind(&art, &refs).expect("bind");
+            let tokens = 1024usize;
+            let n_req = tokens / seq;
+            let prompts: Vec<Vec<i32>> = (0..n_req)
+                .map(|r| {
+                    (0..seq)
+                        .map(|i| 1 + ((r * seq + i) % 300) as i32)
+                        .collect()
+                })
+                .collect();
+            for &chunk in &[16usize, 32] {
+                let mut batches: Vec<Vec<PrefixedPrompt>> = Vec::new();
+                let mut done = 0usize;
+                while done < seq {
+                    let len = chunk.min(seq - done);
+                    let mut batch = Vec::with_capacity(n_req);
+                    for p in &prompts {
+                        let (pk, pv) = if done == 0 {
+                            (Vec::new(), Vec::new())
+                        } else {
+                            let prefix = p[..done].to_vec();
+                            let out = rt
+                                .prefill_packed(
+                                    &art,
+                                    &binding,
+                                    std::slice::from_ref(&prefix),
+                                )
+                                .expect("prefix prefill");
+                            (out.k_cache, out.v_cache)
+                        };
+                        batch.push(PrefixedPrompt {
+                            tokens: p[..done + len].to_vec(),
+                            cached_len: done,
+                            prefix_k: pk,
+                            prefix_v: pv,
+                        });
+                    }
+                    batches.push(batch);
+                    done += len;
+                }
+                let name = format!(
+                    "chunked.{variant}.t{tokens}.pool{pool}.c{chunk}"
+                );
+                let r = bench(&name, 2, 10, Some(tokens as u64), || {
+                    for batch in &batches {
+                        rt.prefill_packed_prefixed(&art, &binding, batch)
+                            .expect("chunked prefill");
+                    }
+                });
+                let speedup = dense_med
+                    .get(&tokens)
+                    .map(|d| d / r.median_secs)
+                    .unwrap_or(0.0);
+                if speedup > 0.0 {
+                    println!("    -> vs one-shot dense: {speedup:.2}x");
+                }
+                let mut o = BTreeMap::new();
+                o.insert("variant".into(), Json::Str(variant.into()));
+                o.insert("tokens".into(), num(tokens as f64));
+                o.insert("pool".into(), num(pool as f64));
+                o.insert("requests".into(), num(n_req as f64));
+                o.insert("chunk_tokens".into(), num(chunk as f64));
+                o.insert("median_secs".into(), num(r.median_secs));
+                o.insert("mean_secs".into(), num(r.mean_secs));
+                o.insert("p95_secs".into(), num(r.p95_secs));
+                o.insert(
+                    "toks_per_sec".into(),
+                    num(r.throughput.unwrap_or(0.0)),
+                );
+                o.insert("speedup_vs_dense".into(), num(speedup));
                 results.push(Json::Obj(o));
             }
         }

@@ -37,6 +37,13 @@ impl PrefillQueues {
         self.queues.entry(key).or_default().push_back(t);
     }
 
+    /// Re-enqueue a preempted request at the *front* of its bucket: it
+    /// already waited its turn (and lost staged work to the eviction),
+    /// so on re-admission it must not queue behind younger arrivals.
+    pub fn push_front(&mut self, key: ConfigKey, t: Tracked) {
+        self.queues.entry(key).or_default().push_front(t);
+    }
+
     /// Requests waiting across all buckets.
     pub fn waiting(&self) -> usize {
         self.queues.values().map(|q| q.len()).sum()
@@ -223,6 +230,99 @@ impl PrefillQueues {
         }
         Some(self.drain_bucket(key, n))
     }
+
+    /// Chunk-aware [`PrefillQueues::max_head_demand`]: the block demand
+    /// of every bucket head's *first chunk* — exactly what
+    /// [`PrefillQueues::next_chunk_batch`] admission will charge
+    /// ([`BlockBudget::chunk_demand`]), not the one-shot worst case.
+    pub fn max_head_chunk_demand(
+        &self,
+        budget: &BlockBudget,
+        seq: usize,
+        chunk_tokens: usize,
+    ) -> Option<usize> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|t| {
+                let tk = t.req.prompt.len().min(seq).max(1);
+                budget.chunk_demand(tk, chunk_tokens)
+            })
+            .max()
+    }
+
+    /// Chunk-aware admission for the continuous-batching loop: the same
+    /// bucket policy and budget shape as
+    /// [`PrefillQueues::next_packed_batch`], but each request is costed
+    /// by its **first chunk** — `min(prompt, chunk_tokens)` packed
+    /// tokens and the matching [`BlockBudget::chunk_demand`] blocks —
+    /// because chunked admission stages only chunk 1. Later chunks and
+    /// decode grow the block table on demand, with preemption (not an
+    /// up-front worst-case reservation) covering pool pressure. With
+    /// `chunk_tokens = usize::MAX` this costs the whole clamped prompt,
+    /// recovering one-shot admission minus the `+ max_new` reservation.
+    pub fn next_chunk_batch(
+        &mut self,
+        budget: BlockBudget,
+        seq: usize,
+        chunk_tokens: usize,
+        max_tokens: usize,
+        idle: bool,
+        now: Instant,
+    ) -> Option<(ConfigKey, Vec<Tracked>)> {
+        if budget.free_blocks == 0 || max_tokens == 0 {
+            return None;
+        }
+        let full_at = self.max_batch.max(1);
+        // (requests to take, packed tokens, cut by the block budget?)
+        let packable = |q: &VecDeque<Tracked>| -> (usize, usize, bool) {
+            let mut toks = 0usize;
+            let mut blocks = 0usize;
+            let mut n = 0usize;
+            let mut cut = false;
+            for t in q.iter() {
+                let tk = t.req.prompt.len().min(seq).max(1);
+                let ck = tk.min(chunk_tokens);
+                let bl = budget.chunk_demand(tk, chunk_tokens);
+                if n == 0 {
+                    if bl > budget.free_blocks {
+                        // same wait-vs-surface policy as
+                        // `next_packed_batch` (see its docs)
+                        if bl <= budget.total_blocks {
+                            cut = true;
+                            break;
+                        }
+                        return (1, ck, true);
+                    }
+                } else if toks + ck > max_tokens {
+                    break;
+                } else if blocks + bl > budget.free_blocks {
+                    cut = true;
+                    break;
+                }
+                toks += ck;
+                blocks += bl;
+                n += 1;
+                if toks >= max_tokens {
+                    break;
+                }
+            }
+            (n, toks, cut)
+        };
+        let key = self.select_bucket(
+            |q| {
+                let (n, toks, cut) = packable(q);
+                n >= full_at || toks >= max_tokens || (cut && n > 0)
+            },
+            idle,
+            now,
+        )?;
+        let (n, _, _) = packable(&self.queues[&key]);
+        if n == 0 {
+            return None; // head waits for blocks to free up
+        }
+        Some(self.drain_bucket(key, n))
+    }
 }
 
 /// Free-KV-block budget the packed batcher admits against (built by the
@@ -253,6 +353,21 @@ impl BlockBudget {
     pub fn demand(&self, prompt_tokens: usize, max_new: usize) -> usize {
         self.blocks_for(
             (prompt_tokens + max_new).min(self.max_seq_tokens),
+        )
+    }
+
+    /// Blocks the *first chunk* of a request stages under chunked,
+    /// on-demand admission: `min(prompt, chunk)` tokens, cap-clamped.
+    /// No `+ max_new` term — later chunks and decode extend the block
+    /// table on demand and preemption covers pool pressure, so this is
+    /// what admission actually allocates, not a worst case.
+    pub fn chunk_demand(
+        &self,
+        prompt_tokens: usize,
+        chunk_tokens: usize,
+    ) -> usize {
+        self.blocks_for(
+            prompt_tokens.min(chunk_tokens).min(self.max_seq_tokens),
         )
     }
 }
@@ -492,6 +607,80 @@ mod tests {
         assert_eq!(q.max_head_demand(&bb, 64), Some(3));
         // prompt clamps to seq: 16+4 tokens -> 2 blocks
         assert_eq!(q.max_head_demand(&bb, 16), Some(2));
+    }
+
+    #[test]
+    fn push_front_requeues_ahead_of_younger_arrivals() {
+        let mut q = PrefillQueues::new(4, 10.0);
+        q.push(ConfigKey("a".into()), tracked(1));
+        q.push(ConfigKey("a".into()), tracked(2));
+        // a preempted request jumps the line on re-admission
+        q.push_front(ConfigKey("a".into()), tracked(9));
+        let (_, b) = q.next_batch(8, true, Instant::now()).unwrap();
+        assert_eq!(
+            b.iter().map(|t| t.req.id).collect::<Vec<_>>(),
+            vec![9, 1, 2]
+        );
+    }
+
+    #[test]
+    fn chunk_demand_charges_first_chunk_not_worst_case() {
+        let bb = budget(8, 8, 16);
+        // 40-token prompt, 16-token chunks: 1 block now, not
+        // ceil((40 + max_new) / 16) up front
+        assert_eq!(bb.chunk_demand(40, 16), 1);
+        assert_eq!(bb.chunk_demand(40, 32), 2);
+        // chunk = MAX recovers the whole clamped prompt (no + max_new)
+        assert_eq!(bb.chunk_demand(40, usize::MAX), 3);
+        let capped = BlockBudget { max_seq_tokens: 32, ..bb };
+        assert_eq!(capped.chunk_demand(100, usize::MAX), 2);
+    }
+
+    #[test]
+    fn chunk_batch_admits_by_first_chunk_cost() {
+        // four 40-token prompts, 16-token chunks, 4 free blocks: each
+        // head chunk costs 1 block and 16 tokens, so all four admit
+        // where one-shot packing (3 blocks each) would cut at one
+        let now = Instant::now();
+        let mut q = PrefillQueues::new(8, 10.0);
+        for i in 0..4 {
+            q.push(ConfigKey("a".into()), tracked_len(i, 40));
+        }
+        let (_, b) = q
+            .next_chunk_batch(budget(4, 16, 16), 64, 16, 256, true, now)
+            .expect("batch");
+        assert_eq!(b.len(), 4);
+        // token budget still cuts: 16-token chunks against a 32-token
+        // iteration budget admit two per call
+        let mut q2 = PrefillQueues::new(8, 10.0);
+        for i in 0..4 {
+            q2.push(ConfigKey("a".into()), tracked_len(i, 40));
+        }
+        let (_, b2) = q2
+            .next_chunk_batch(budget(16, 16, 16), 64, 16, 32, true, now)
+            .unwrap();
+        assert_eq!(b2.len(), 2);
+        // a head whose first chunk exceeds the free blocks waits
+        let mut q3 = PrefillQueues::new(8, 10.0);
+        q3.push(ConfigKey("a".into()), tracked_len(1, 40));
+        assert!(q3
+            .next_chunk_batch(budget(1, 8, 16), 64, 32, 256, true, now)
+            .is_none());
+        assert_eq!(q3.waiting(), 1);
+    }
+
+    #[test]
+    fn max_head_chunk_demand_is_chunk_clamped() {
+        let mut q = PrefillQueues::new(4, 10.0);
+        let bb = budget(8, 8, 16);
+        assert_eq!(q.max_head_chunk_demand(&bb, 64, 16), None);
+        q.push(ConfigKey("a".into()), tracked_len(1, 40));
+        q.push(ConfigKey("b".into()), tracked_len(2, 2));
+        // 40-token head: first chunk of 16 -> 1 block (one-shot
+        // max_head_demand would say 3)
+        assert_eq!(q.max_head_chunk_demand(&bb, 64, 16), Some(1));
+        assert_eq!(q.max_head_chunk_demand(&bb, 64, 32), Some(2));
+        assert_eq!(q.max_head_chunk_demand(&bb, 64, usize::MAX), Some(3));
     }
 
     #[test]

@@ -263,6 +263,20 @@ impl KvPages {
         self.cow_block(seq, idx).map(|_| ())
     }
 
+    /// Whether the block holding token position `pos` of `seq` is
+    /// shared with another owner, i.e. a write there will trigger a
+    /// copy-on-write (and hence needs a spare block). False for
+    /// unknown sequences or positions past the table.
+    pub fn is_shared(&self, seq: u64, pos: usize) -> bool {
+        let Some(table) = self.pool.table(seq) else {
+            return false;
+        };
+        match table.get(pos / self.block_size()) {
+            Some(&b) => self.pool.refcount_of(b).unwrap_or(0) > 1,
+            None => false,
+        }
+    }
+
     /// Admit a sequence whose first `cached_len` KV rows already live in
     /// its block table (shared via [`KvPages::fork_prefix`]): stage only
     /// the `suffix_len` freshly computed rows — packed at rows
@@ -356,6 +370,68 @@ impl KvPages {
             }
         }
         self.len.insert(seq_id, valid_len);
+        Ok(())
+    }
+
+    /// Stage a continuation chunk for an *already admitted* sequence:
+    /// `suffix_len` freshly computed KV rows — packed at rows
+    /// `start .. start + suffix_len` of a `[L, total, H, D]` cache —
+    /// appended at the sequence's current valid length. The block table
+    /// grows on demand ([`BlockPool::extend`]), so chunked prefill
+    /// reserves nothing beyond what it has actually computed; the
+    /// boundary block is made writable first (a no-op unless a cached
+    /// prefix left it shared).
+    pub fn extend_packed(
+        &mut self,
+        seq_id: u64,
+        packed_k: &[f32],
+        packed_v: &[f32],
+        start: usize,
+        total_tokens: usize,
+        suffix_len: usize,
+    ) -> Result<()> {
+        let Some(&len) = self.len.get(&seq_id) else {
+            bail!("continuation chunk for unadmitted seq {seq_id}");
+        };
+        if suffix_len == 0 {
+            bail!("empty continuation chunk for seq {seq_id}");
+        }
+        let new_len = len + suffix_len;
+        if new_len > self.max_seq_tokens {
+            bail!(
+                "sequence {seq_id} grew to {new_len} tokens, cache \
+                 holds {}",
+                self.max_seq_tokens
+            );
+        }
+        if start + suffix_len > total_tokens {
+            bail!(
+                "packed rows {start}..{} exceed batch of {total_tokens}",
+                start + suffix_len
+            );
+        }
+        let added = self.pool.extend(seq_id, new_len)?;
+        if !added.is_empty() {
+            self.zero_blocks(&added);
+        }
+        self.make_writable(seq_id, len)?;
+        let bs = self.block_size();
+        let row_sz = self.kv_dim();
+        let table: Vec<u32> = self.pool.table(seq_id).unwrap().to_vec();
+        for l in 0..self.n_layers {
+            for r in 0..suffix_len {
+                let pos = len + r;
+                let blk = table[pos / bs];
+                let src = (l * total_tokens + start + r) * row_sz;
+                let dst =
+                    self.block_base(l, blk) + (pos % bs) * row_sz;
+                self.k[dst..dst + row_sz]
+                    .copy_from_slice(&packed_k[src..src + row_sz]);
+                self.v[dst..dst + row_sz]
+                    .copy_from_slice(&packed_v[src..src + row_sz]);
+            }
+        }
+        self.len.insert(seq_id, new_len);
         Ok(())
     }
 
@@ -718,6 +794,66 @@ mod tests {
     }
 
     #[test]
+    fn extend_packed_chunks_gather_like_one_cold_admit() {
+        // staging 7 rows as 3 + 2 + 2 chunks (on-demand block growth)
+        // must gather bitwise-identically to one cold 7-row admit
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 3, 3).unwrap();
+        assert_eq!(kv.table(1).unwrap().len(), 1); // nothing reserved
+        kv.extend_packed(1, &pre, &pre, 3, 8, 2).unwrap();
+        assert_eq!(kv.seq_len(1), Some(5));
+        assert_eq!(kv.table(1).unwrap().len(), 2); // grew on demand
+        kv.extend_packed(1, &pre, &pre, 5, 8, 2).unwrap();
+        assert_eq!(kv.seq_len(1), Some(7));
+        let mut cold = mk(4);
+        cold.admit_packed(1, &pre, &pre, 0, 8, 7, 7).unwrap();
+        assert_eq!(kv.gather_seq(1, 7), cold.gather_seq(1, 7));
+        kv.check_invariants().unwrap();
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), kv.n_blocks());
+    }
+
+    #[test]
+    fn extend_packed_after_prefixed_admit_cows_nothing_extra() {
+        // chunk 2 of a warm request: the append boundary is past the
+        // forked prefix, so no block may be copied and the donor stays
+        // bitwise intact
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 8, 8).unwrap();
+        kv.fork_prefix(1, 2, 1).unwrap();
+        kv.admit_packed_prefixed(2, &pre, &pre, 4, 8, 4, 2, 6).unwrap();
+        let tail = kv.table(2).unwrap()[1];
+        kv.extend_packed(2, &pre, &pre, 6, 8, 2).unwrap();
+        assert_eq!(kv.table(2).unwrap()[1], tail, "tail block was CoW'd");
+        let mut cold = mk(4);
+        cold.admit_packed(2, &pre, &pre, 0, 8, 8, 8).unwrap();
+        assert_eq!(kv.gather_seq(2, 8), cold.gather_seq(2, 8));
+        assert_eq!(kv.gather_seq(1, 8), cold.gather_seq(2, 8));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_packed_validates_preconditions() {
+        let pre = packed(8);
+        let mut kv = mk(4);
+        // unknown sequence
+        assert!(kv.extend_packed(9, &pre, &pre, 0, 8, 2).is_err());
+        kv.admit_packed(1, &pre, &pre, 0, 8, 4, 4).unwrap();
+        // empty chunk
+        assert!(kv.extend_packed(1, &pre, &pre, 4, 8, 0).is_err());
+        // growth past the per-seq cap (mk: max_seq_tokens = 8)
+        assert!(kv.extend_packed(1, &pre, &pre, 0, 8, 5).is_err());
+        // packed rows out of range
+        assert!(kv.extend_packed(1, &pre, &pre, 7, 8, 2).is_err());
+        // the happy path still works after the rejections
+        kv.extend_packed(1, &pre, &pre, 4, 8, 4).unwrap();
+        assert_eq!(kv.seq_len(1), Some(8));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
     fn make_writable_cows_shared_append_target() {
         let pre = packed(8);
         let mut kv = mk(4);
@@ -733,6 +869,25 @@ mod tests {
         // exclusive now: second call is a no-op
         kv.make_writable(2, 5).unwrap();
         assert_eq!(kv.table(2).unwrap()[1], owned_tail);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn is_shared_tracks_fork_and_cow() {
+        let pre = packed(8);
+        let mut kv = mk(4);
+        kv.admit_packed(1, &pre, &pre, 0, 8, 8, 8).unwrap();
+        assert!(!kv.is_shared(1, 0));
+        kv.fork_prefix(1, 2, 2).unwrap(); // share both donor blocks
+        assert!(kv.is_shared(1, 0));
+        assert!(kv.is_shared(2, 5));
+        kv.make_writable(2, 5).unwrap();
+        assert!(!kv.is_shared(2, 5));
+        // block 0 of seq 2 is still the shared donor block
+        assert!(kv.is_shared(2, 0));
+        // unknown sequence / past-the-table positions are not shared
+        assert!(!kv.is_shared(99, 0));
+        assert!(!kv.is_shared(1, 1000));
         kv.check_invariants().unwrap();
     }
 

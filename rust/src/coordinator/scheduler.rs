@@ -1,33 +1,48 @@
-//! The engine loop: iteration-level scheduling over an execution backend.
+//! The engine loop: continuous batching (iteration-level scheduling)
+//! over an execution backend.
 //!
-//! Each iteration either (a) packs a same-config prefill batch, runs the
-//! (possibly N:M-sparse) prefill artifact, samples first tokens and
-//! admits the sequences into the block-paged KV store, or (b) advances a
-//! decode batch one step. Prefill is prioritized (the paper's setting:
-//! prefill is the compute bottleneck being accelerated); a partial
-//! prefill batch is flushed once its head request ages past `max_wait`,
-//! the decode side is idle, or the free-block budget cuts it (the rest
-//! of the bucket continues in a later batch).
+//! Each iteration runs **both** kinds of work inside one token budget:
+//! pending prefill *chunks* (long prompts split into block-aligned
+//! pieces) and the due decode batch. A chunk is just a prefixed prefill
+//! whose "cached" prefix is the request's own earlier chunks — the
+//! bitwise-pinned PR 6 segment path ([`crate::runtime::Engine::
+//! prefill_packed_prefixed`]) — so chunked execution is bitwise
+//! identical to one-shot prefill (the `chunk-parity` suite pins this),
+//! and a long prompt no longer head-of-line-blocks the short requests
+//! and decode steps behind it.
 //!
-//! Admission is by free **block** count ([`super::paged::BlockPool`]):
-//! a request reserves `ceil((prompt + max_new_tokens) / block)` blocks,
-//! which may live anywhere in the pool — long prompts never need a
-//! contiguous KV slot, so concurrency is bounded by total KV memory,
-//! not by `decode_batch` slots. When more sequences are active than the
-//! decode artifact's static batch, decode steps the least-advanced
-//! sequences first (fair round-robin by generated length, then id).
+//! Admission is by free **block** count ([`super::paged::BlockPool`])
+//! and *on demand*: a request stages only what it has actually
+//! computed (its first chunk at admission; later chunks and decode
+//! tokens extend the block table as they land), never the old
+//! `prompt + max_new_tokens` worst case. When the pool runs dry, the
+//! scheduler reclaims blocks instead of blocking: prefix-cache nodes
+//! evict first, then the *youngest* block-holding request is preempted
+//! (KV released, prompt recomputed from scratch on re-admission at the
+//! front of its queue). Preemption is age-ordered — only requests
+//! strictly younger than the one that needs blocks are victims — so
+//! the oldest request always progresses and admission cannot livelock.
+//! Responses only go out at completion and the pipeline is
+//! deterministic, so a preempted-and-resumed request is
+//! token-identical to an undisturbed run (the scheduler property suite
+//! checks this over randomized interleavings).
+//!
+//! When more sequences are active than the decode artifact's static
+//! batch, decode steps the least-advanced sequences first (fair
+//! round-robin by generated length, then id); a round-robin cursor
+//! over flight configs does the same for prefill chunks.
 //!
 //! The loop is backend-neutral: it drives a `Box<dyn runtime::Engine>`,
-//! so the same scheduler serves the native CPU backend (default) and the
-//! PJRT backend (`pjrt` feature), which sees contiguous KV via the
+//! so the same scheduler serves the native CPU backend (default) and
+//! the PJRT backend (`pjrt` feature), which sees contiguous KV via the
 //! default [`crate::runtime::Engine::decode_paged`] gather.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::batcher::{routing, BlockBudget, ConfigKey, PrefillQueues};
 use super::kv::KvPages;
@@ -74,11 +89,29 @@ pub struct EngineConfig {
     /// prefix-parity suite), so the knob only trades KV blocks for
     /// prefill compute.
     pub prefix_cache: bool,
+    /// split prompts into prefill chunks of at most this many tokens
+    /// (rounded up to whole KV blocks — chunks stage block-by-block).
+    /// Each chunk runs as a prefixed prefill over the request's own
+    /// earlier chunks and is co-scheduled with the due decode batch.
+    /// `usize::MAX` disables chunking (one-shot prefill, the parity
+    /// baseline); results are bit-identical at every chunk size (see
+    /// the chunk-parity suite), so the knob only trades time-to-first-
+    /// token of long prompts against interactivity of everyone else.
+    pub chunk_tokens: usize,
+    /// per-iteration token budget shared by prefill chunks and the due
+    /// decode batch (0 = auto: the prefill artifact's static
+    /// `batch x seq` token capacity)
+    pub iteration_budget: usize,
+    /// override the paged pool's block count (0 = derive from the
+    /// decode artifact's `batch x cache` capacity). Deliberately small
+    /// pools force the preemption path; the scheduler property suite
+    /// uses this.
+    pub kv_pool_blocks: usize,
 }
 
 impl EngineConfig {
     /// Defaults for `model`: seq 64, 5 ms max-wait, host parallelism,
-    /// [`DEFAULT_BLOCK`]-token KV blocks.
+    /// [`DEFAULT_BLOCK`]-token KV blocks, 2-block prefill chunks.
     pub fn new(model: &str) -> EngineConfig {
         EngineConfig {
             model: model.to_string(),
@@ -88,6 +121,9 @@ impl EngineConfig {
             pool_threads: default_pool_threads(),
             kv_block: DEFAULT_BLOCK,
             prefix_cache: true,
+            chunk_tokens: 2 * DEFAULT_BLOCK,
+            iteration_budget: 0,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -115,6 +151,36 @@ struct ActiveSeq {
     last_token_at: Instant,
 }
 
+/// A request mid-chunked-prefill: admitted out of its queue, its KV
+/// growing chunk by chunk until the whole (clamped) prompt is staged
+/// and it graduates to decode.
+struct ChunkFlight {
+    tracked: Tracked,
+    /// prefill bucket this request was admitted from (chunk batches
+    /// group by it, preemption requeues under it)
+    key: ConfigKey,
+    /// prompt tokens actually served: `min(prompt_len, prefill_seq)`
+    clamped_len: usize,
+    /// KV rows staged so far (forked cache prefix + executed chunks);
+    /// 0 = holds no blocks yet
+    done: usize,
+}
+
+/// One chunk of the batch being executed this iteration (build-phase
+/// bookkeeping; the matching [`PrefixedPrompt`] rides in a parallel
+/// vector).
+struct BuiltChunk {
+    id: u64,
+    /// tokens forked from the prefix cache (chunk 1 only, for metrics)
+    cached: usize,
+    /// KV rows valid before this chunk (cache prefix or earlier chunks)
+    cached_now: usize,
+    /// pinned donor node to unpin once the chunk is staged
+    node: Option<u64>,
+    /// chunk 1 (admit) vs continuation (extend)
+    first: bool,
+}
+
 /// The serving engine: scheduler state over an execution backend.
 pub struct Engine {
     /// engine-loop configuration
@@ -129,10 +195,17 @@ pub struct Engine {
     /// radix index over cached prompt prefixes; its nodes hold forked
     /// block tables in `kv` until evicted under block pressure
     prefix: PrefixCache,
+    /// requests mid-chunked-prefill, in admission (arrival) order
+    flight: Vec<ChunkFlight>,
     active: HashMap<u64, ActiveSeq>,
     /// round-robin cursor over decode-artifact groups (fp vs sq decode
     /// differ), so no group starves under sustained mixed-config load
     decode_rr: usize,
+    /// round-robin cursor over the flight's config buckets, so no
+    /// bucket's chunks starve while another drains a long prompt
+    prefill_rr: usize,
+    /// the decode artifact's static batch (iteration-budget accounting)
+    decode_batch: usize,
     #[allow(dead_code)] // kept for config introspection / tests
     vocab: usize,
     completed: usize,
@@ -141,7 +214,8 @@ pub struct Engine {
 impl Engine {
     /// Build the engine for `cfg.model`, sizing the paged KV store from
     /// the decode artifact's static shapes (`batch * cache` tokens of
-    /// capacity, split into `cfg.kv_block`-token blocks).
+    /// capacity, split into `cfg.kv_block`-token blocks) unless
+    /// `cfg.kv_pool_blocks` overrides the block count.
     pub fn new(
         mut rt: Box<dyn ExecEngine>,
         cfg: EngineConfig,
@@ -173,7 +247,11 @@ impl Engine {
             .unwrap_or(8)
             .max(1);
         let kv_block = cfg.kv_block.max(1);
-        let n_blocks = (dec.batch * dec.cache / kv_block).max(1);
+        let n_blocks = if cfg.kv_pool_blocks > 0 {
+            cfg.kv_pool_blocks
+        } else {
+            (dec.batch * dec.cache / kv_block).max(1)
+        };
         // the per-sequence cap must never exceed what the pool can
         // physically hold (block flooring can shave tokens off the
         // nominal batch*cache capacity)
@@ -195,8 +273,11 @@ impl Engine {
             rt,
             metrics,
             kv,
+            flight: Vec::new(),
             active: HashMap::new(),
             decode_rr: 0,
+            prefill_rr: 0,
+            decode_batch: dec.batch.max(1),
             vocab,
             completed: 0,
         })
@@ -219,12 +300,17 @@ impl Engine {
         );
     }
 
-    /// Blocking serve loop over a message channel.
+    /// Blocking serve loop over a message channel. The prefix cache
+    /// deliberately survives loop exit: a later `run` on the same
+    /// engine starts warm (see the warm-restart test); use
+    /// [`Engine::clear_prefix_cache`] to drain it explicitly.
     pub fn run(&mut self, rx: Receiver<EngineMsg>) -> Result<()> {
         let mut open = true;
         loop {
             // drain incoming messages (non-blocking while work pending)
-            let busy = !self.queues.is_empty() || !self.active.is_empty();
+            let busy = !self.queues.is_empty()
+                || !self.active.is_empty()
+                || !self.flight.is_empty();
             loop {
                 let msg = if busy {
                     match rx.try_recv() {
@@ -249,41 +335,91 @@ impl Engine {
                     None => break,
                 }
             }
-            if !open && self.queues.is_empty() && self.active.is_empty() {
-                self.shutdown_prefix();
+            if !open
+                && self.queues.is_empty()
+                && self.active.is_empty()
+                && self.flight.is_empty()
+            {
                 return Ok(());
             }
-            if self.cfg.run_until > 0 && self.completed >= self.cfg.run_until
+            if self.cfg.run_until > 0
+                && self.completed >= self.cfg.run_until
             {
-                self.shutdown_prefix();
                 return Ok(());
             }
             self.step()?;
         }
     }
 
-    /// One scheduling iteration. Returns whether any work was done.
+    /// One scheduling iteration: run due prefill chunks *and* the due
+    /// decode batch inside one token budget. Returns whether any work
+    /// was done.
     pub fn step(&mut self) -> Result<bool> {
-        let idle = self.active.is_empty();
+        let idle = self.active.is_empty() && self.flight.is_empty();
         let now = Instant::now();
-        // token-packed batching: the budget is the prefill artifact's
-        // static token capacity (batch x seq), but short prompts can
-        // pack more requests than the static batch into it. Admission
-        // itself is by free-block count: each request's worst-case KV
-        // footprint must fit somewhere in the pool.
-        let budget = self.queues.max_batch * self.cfg.prefill_seq;
-        let mut blocks = BlockBudget {
+        let chunk = self.effective_chunk();
+        // iteration token budget: prefill chunks share the iteration
+        // with the due decode batch, so the chunk share shrinks by the
+        // decode rows about to run
+        let budget = if self.cfg.iteration_budget > 0 {
+            self.cfg.iteration_budget
+        } else {
+            self.queues.max_batch * self.cfg.prefill_seq
+        };
+        let decode_due = self.active.len().min(self.decode_batch);
+        let chunk_budget = budget.saturating_sub(decode_due).max(1);
+        let prefilled =
+            self.run_prefill_chunks(chunk, chunk_budget, idle, now)?;
+        // decode advances every iteration it has work — prefill chunks
+        // no longer monopolize the loop
+        let decoded = if self.active.is_empty() {
+            false
+        } else {
+            self.run_decode()?
+        };
+        Ok(prefilled || decoded)
+    }
+
+    /// The serving chunk size: `cfg.chunk_tokens` rounded up to a
+    /// whole number of KV blocks; `usize::MAX` = one-shot.
+    fn effective_chunk(&self) -> usize {
+        let c = self.cfg.chunk_tokens;
+        if c == usize::MAX {
+            return usize::MAX;
+        }
+        let bs = self.kv.block_size().max(1);
+        c.max(1).div_ceil(bs) * bs
+    }
+
+    fn block_budget(&self) -> BlockBudget {
+        BlockBudget {
             free_blocks: self.kv.free_blocks(),
             total_blocks: self.kv.n_blocks(),
             block_size: self.kv.block_size(),
             max_seq_tokens: self.kv.max_seq_tokens,
-        };
+        }
+    }
+
+    /// Admit due requests into the flight and run one config bucket's
+    /// next chunks as a single packed (possibly prefixed) prefill
+    /// batch. Returns whether a batch executed.
+    fn run_prefill_chunks(
+        &mut self,
+        chunk: usize,
+        max_tokens: usize,
+        idle: bool,
+        now: Instant,
+    ) -> Result<bool> {
+        let seq_cap = self.cfg.prefill_seq;
+        let mut blocks = self.block_budget();
         // prefix-cache nodes hold KV blocks; under pressure they yield
         // to admissions. Evict (LRU, deepest-first on ties) until the
-        // worst-case queue head fits the free list — cached blocks must
-        // never starve, let alone deadlock, the prefill queues.
-        if let Some(need) =
-            self.queues.max_head_demand(&blocks, self.cfg.prefill_seq)
+        // largest queue-head *first chunk* fits the free list — not
+        // the one-shot worst case: later chunks grow on demand and
+        // reclaim covers pressure.
+        if let Some(need) = self
+            .queues
+            .max_head_chunk_demand(&blocks, seq_cap, chunk)
         {
             while self.kv.free_blocks() < need
                 && self.prefix.evict_one(&mut self.kv).is_some()
@@ -291,122 +427,205 @@ impl Engine {
             blocks.free_blocks = self.kv.free_blocks();
             self.publish_prefix();
         }
-        if let Some((key, batch)) = self.queues.next_packed_batch(
-            blocks,
-            self.cfg.prefill_seq,
-            budget,
-            idle,
-            now,
+        // admission: move one due bucket into the flight, costed by
+        // first chunks. Members run below in admission (arrival) order.
+        if let Some((key, batch)) = self.queues.next_chunk_batch(
+            blocks, seq_cap, chunk, max_tokens, idle, now,
         ) {
-            self.run_prefill(&key, batch)?;
-            return Ok(true);
+            for t in batch {
+                let clamped_len = t.req.prompt.len().min(seq_cap);
+                self.flight.push(ChunkFlight {
+                    key: key.clone(),
+                    clamped_len,
+                    done: 0,
+                    tracked: t,
+                });
+            }
         }
-        if !self.active.is_empty() {
-            self.run_decode()?;
-            return Ok(true);
+        if self.flight.is_empty() {
+            return Ok(false);
         }
-        Ok(false)
-    }
+        // rotate over the distinct config buckets in flight so no
+        // bucket's chunks starve behind another's long prompt
+        let mut keys: Vec<ConfigKey> = Vec::new();
+        for f in &self.flight {
+            if !keys.contains(&f.key) {
+                keys.push(f.key.clone());
+            }
+        }
+        let key = keys[self.prefill_rr % keys.len()].clone();
+        self.prefill_rr = self.prefill_rr.wrapping_add(1);
+        let member_ids: Vec<u64> = self
+            .flight
+            .iter()
+            .filter(|f| f.key == key)
+            .map(|f| f.tracked.req.id)
+            .collect();
 
-    fn run_prefill(
-        &mut self,
-        key: &ConfigKey,
-        mut batch: Vec<Tracked>,
-    ) -> Result<()> {
+        // Build phase — each member contributes its next chunk until
+        // the token budget cuts. Chunk 1 does the prefix-cache lookup
+        // and fork (the only chunk that can be cache-warm); every
+        // chunk's prefix K/V is gathered from the request's own table,
+        // so a continuation chunk attends over its earlier chunks
+        // exactly as a warm request attends over a donor's blocks.
+        let mut built: Vec<BuiltChunk> = Vec::new();
+        let mut reqs: Vec<PrefixedPrompt> = Vec::new();
+        let mut toks = 0usize;
+        for id in member_ids {
+            if self.flight.iter().all(|f| f.tracked.req.id != id) {
+                continue; // preempted while reclaiming below
+            }
+            let (done0, clamped_len, arrived) = {
+                let f = self
+                    .flight
+                    .iter()
+                    .find(|f| f.tracked.req.id == id)
+                    .unwrap();
+                (f.done, f.clamped_len, f.tracked.arrived)
+            };
+            let target = clamped_len.max(1);
+            // worst-case length before the (possibly warm) lookup —
+            // budget-cut here so nothing needs undoing on a break
+            if !built.is_empty()
+                && toks + (target - done0).min(chunk) > max_tokens
+            {
+                break;
+            }
+            let mut node = None;
+            let mut cached = 0usize;
+            if done0 == 0 && self.cfg.prefix_cache && clamped_len > 0 {
+                let f = self
+                    .flight
+                    .iter()
+                    .find(|f| f.tracked.req.id == id)
+                    .unwrap();
+                let clamped = &f.tracked.req.prompt[..clamped_len];
+                if let Some(hit) = self.prefix.lookup(clamped) {
+                    // at least one suffix token always recomputes: the
+                    // last prompt row must be live to sample from
+                    let c = hit.cached_tokens.min(clamped_len - 1);
+                    if c > 0
+                        && self
+                            .kv
+                            .fork_prefix(
+                                hit.node_seq,
+                                id,
+                                self.kv.blocks_for(c),
+                            )
+                            .is_ok()
+                    {
+                        node = Some(hit.node_seq);
+                        cached = c;
+                    } else {
+                        self.prefix.unpin(hit.node_seq);
+                    }
+                }
+            }
+            let cached_now = if done0 == 0 { cached } else { done0 };
+            let len = (target - cached_now).min(chunk);
+            // block demand of staging this chunk: table growth plus
+            // one copy-on-write block when a warm prefix ends mid-block
+            let bs = self.kv.block_size();
+            let table_len =
+                self.kv.table(id).map(|t| t.len()).unwrap_or(0);
+            let mut need = (cached_now + len)
+                .div_ceil(bs)
+                .saturating_sub(table_len);
+            if done0 == 0 && cached > 0 && cached % bs != 0 {
+                need += 1;
+            }
+            if need > self.kv.free_blocks() {
+                let undo = |eng: &mut Engine| {
+                    if cached > 0 {
+                        let _ = eng.kv.release(id);
+                    }
+                    if let Some(n) = node {
+                        eng.prefix.unpin(n);
+                    }
+                };
+                if need > self.kv.n_blocks() {
+                    // cannot fit even an emptied pool: unservable
+                    undo(self);
+                    self.reject_flight(
+                        id,
+                        "chunk demand exceeds the block pool",
+                    )?;
+                    continue;
+                }
+                if !built.is_empty() {
+                    // only the batch head preempts; later members wait
+                    undo(self);
+                    break;
+                }
+                let mut protect: HashSet<u64> = HashSet::new();
+                protect.insert(id);
+                if !self.reclaim_blocks(need, (arrived, id), &protect)? {
+                    // every holder is as old or older: they complete
+                    // and free blocks; retry next iteration
+                    undo(self);
+                    break;
+                }
+            }
+            let (pk, pv) = if cached_now > 0 {
+                self.kv.gather_seq(id, cached_now).with_context(|| {
+                    format!("gather of seq {id}'s chunk prefix")
+                })?
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            let f = self
+                .flight
+                .iter()
+                .find(|f| f.tracked.req.id == id)
+                .unwrap();
+            let upto = (cached_now + len).min(clamped_len);
+            reqs.push(PrefixedPrompt {
+                tokens: f.tracked.req.prompt[..upto].to_vec(),
+                cached_len: cached_now,
+                prefix_k: pk,
+                prefix_v: pv,
+            });
+            built.push(BuiltChunk {
+                id,
+                cached,
+                cached_now,
+                node,
+                first: done0 == 0,
+            });
+            toks += len;
+        }
+        if built.is_empty() {
+            return Ok(false);
+        }
+
+        // Execute phase — bind and run the batch. Weight binding comes
+        // from the first member's config (a bucket shares it by
+        // construction). An all-cold batch takes the plain packed path:
+        // byte-for-byte the route a chunking- and prefix-cache-disabled
+        // engine takes.
         let artifact = key.0.clone();
-        // weights binding comes from the first request's config (all
-        // requests in a bucket share it by construction)
-        let cfg0 = batch[0].req.config;
+        let cfg0 = self
+            .flight
+            .iter()
+            .find(|f| f.tracked.req.id == built[0].id)
+            .unwrap()
+            .tracked
+            .req
+            .config;
         let (_, decode_artifact, files) =
-            routing(&self.cfg.model, self.cfg.prefill_seq, &cfg0);
-        let file_refs: Vec<&str> = files.iter().map(|f| f.as_str()).collect();
+            routing(&self.cfg.model, seq_cap, &cfg0);
+        let file_refs: Vec<&str> =
+            files.iter().map(|f| f.as_str()).collect();
         let binding = self.rt.bind(&artifact, &file_refs)?;
         let dec_files = vec![file_refs[0]];
         let dec_binding = self.rt.bind(&decode_artifact, &dec_files)?;
         // binds above are where weight preparation (panel packing +
         // cached quantization) happens; refresh the prep gauges
         self.publish_prep();
-
-        // Phase A — prefix-cache lookup. For every request whose leading
-        // full blocks are cached, fork the donor node's blocks into the
-        // request's table NOW (refcount bump, no data movement) and
-        // gather the donor's K/V rows so the backend can attend over
-        // them; everything else rides cold. At least one suffix token is
-        // always recomputed — the last prompt row must be live to sample
-        // the first token from (a fully cached prompt copy-on-writes its
-        // boundary block at admission instead).
-        let seq_cap = self.cfg.prefill_seq;
-        // per request: Some(donor node) + cached token count when warm
-        let mut hits: Vec<Option<(u64, usize)>> =
-            Vec::with_capacity(batch.len());
-        let mut reqs: Vec<PrefixedPrompt> =
-            Vec::with_capacity(batch.len());
-        let mut any_warm = false;
-        for t in &batch {
-            let p = &t.req.prompt;
-            let clamped = &p[..p.len().min(seq_cap)];
-            let mut warm = None;
-            if self.cfg.prefix_cache && !clamped.is_empty() {
-                if let Some(hit) = self.prefix.lookup(clamped) {
-                    let cached =
-                        hit.cached_tokens.min(clamped.len() - 1);
-                    if cached > 0
-                        && self
-                            .kv
-                            .fork_prefix(
-                                hit.node_seq,
-                                t.req.id,
-                                self.kv.blocks_for(cached),
-                            )
-                            .is_ok()
-                    {
-                        match self.kv.gather_seq(hit.node_seq, cached) {
-                            Some((pk, pv)) => {
-                                warm = Some((hit.node_seq, cached, pk, pv));
-                            }
-                            None => {
-                                // unreachable for a live node; undo the
-                                // fork and fall back to a cold prefill
-                                let _ = self.kv.release(t.req.id);
-                            }
-                        }
-                    }
-                    if warm.is_none() {
-                        self.prefix.unpin(hit.node_seq);
-                    }
-                }
-            }
-            match warm {
-                Some((node, cached, pk, pv)) => {
-                    any_warm = true;
-                    hits.push(Some((node, cached)));
-                    reqs.push(PrefixedPrompt {
-                        tokens: p.clone(),
-                        cached_len: cached,
-                        prefix_k: pk,
-                        prefix_v: pv,
-                    });
-                }
-                None => {
-                    hits.push(None);
-                    reqs.push(PrefixedPrompt {
-                        tokens: p.clone(),
-                        cached_len: 0,
-                        prefix_k: Vec::new(),
-                        prefix_v: Vec::new(),
-                    });
-                }
-            }
-        }
-
-        // Phase B — token-packed submission: each request's prompt (warm:
-        // uncached suffix only) rides verbatim (the engine clamps to the
-        // artifact seq); no PAD rows between requests, so the batch
-        // reaches the kernel as one [total_tokens, d] matrix. An
-        // all-cold batch takes the plain packed path — byte-for-byte the
-        // route a prefix-cache-disabled engine takes.
+        let any_warm = built.iter().any(|b| b.cached_now > 0);
         let out = if any_warm {
-            self.rt.prefill_packed_prefixed(&artifact, &binding, &reqs)?
+            self.rt
+                .prefill_packed_prefixed(&artifact, &binding, &reqs)?
         } else {
             let prompts: Vec<Vec<i32>> =
                 reqs.into_iter().map(|r| r.tokens).collect();
@@ -414,143 +633,258 @@ impl Engine {
         };
         let total = out.total_tokens();
         EngineMetrics::inc(&self.metrics.prefill_tokens, total as u64);
-        // 0 on the native shape-flexible pipeline; the real padding cost
-        // on backends using the pad-and-gather default path (PJRT)
+        // 0 on the native shape-flexible pipeline; the real padding
+        // cost on backends using the pad-and-gather default (PJRT)
         EngineMetrics::inc(
             &self.metrics.padded_prefill_tokens,
             out.padded_tokens as u64,
         );
         EngineMetrics::inc(&self.metrics.prefill_batches, 1);
+        EngineMetrics::inc(
+            &self.metrics.prefill_chunks,
+            built.len() as u64,
+        );
+
+        // Stage phase — land each chunk's KV, then either keep the
+        // request in flight (more chunks to come) or graduate it to
+        // decode with its first sampled token.
         let now = Instant::now();
-        let mut start = 0usize; // packed row offset of request i
-        for (i, mut t) in batch.drain(..).enumerate() {
-            // packed row count this request contributed: the full
-            // (clamped) prompt when cold, the uncached suffix when warm
+        let mut start = 0usize; // packed row offset of chunk i
+        for (i, b) in built.iter().enumerate() {
             let len = out.lens[i];
-            let (node, cached) = match hits[i] {
-                Some((n, c)) => (Some(n), c),
-                None => (None, 0),
-            };
-            // greedy first token from the last prompt position (an empty
-            // prompt — rejected at the TCP layer, but defend the engine
-            // too — occupies one PAD row and scores from it); a warm
-            // request's last prompt row is always computed (phase A
-            // leaves >= 1 suffix token), so the same indexing holds
-            let row = &out.logits
-                [(start + len - 1) * out.vocab..(start + len) * out.vocab];
-            let first = argmax(row) as i32;
-            t.first_token_at = Some(now);
-            self.metrics
-                .observe_ttft(now.duration_since(t.arrived).as_secs_f64());
-            t.generated.push(first);
-            let id = t.req.id;
-            // block-paged admission: stage this request's packed KV rows
-            // block-by-block, reserving its worst-case footprint
-            // (prompt + full generation budget) so decode growth cannot
-            // fail mid-stream. Blocks may be scattered anywhere. The
-            // reservation clamps to the per-sequence cap — a generation
-            // budget the cache can't hold truncates at the cap
-            // (run_decode force-completes) instead of erroring. Warm
-            // requests extend the table forked in phase A, with the
-            // boundary block copy-on-written if the cached prefix ends
-            // mid-block.
-            let reserve = (cached + len + t.req.max_new_tokens)
-                .min(self.kv.max_seq_tokens);
-            let admitted = if cached > 0 {
-                self.kv.admit_packed_prefixed(
-                    id,
+            let staged = if !b.first {
+                self.kv.extend_packed(
+                    b.id,
                     &out.k_cache,
                     &out.v_cache,
                     start,
                     total,
-                    cached,
                     len,
-                    reserve,
+                )
+            } else if b.cached > 0 {
+                self.kv.admit_packed_prefixed(
+                    b.id,
+                    &out.k_cache,
+                    &out.v_cache,
+                    start,
+                    total,
+                    b.cached,
+                    len,
+                    b.cached + len,
                 )
             } else {
+                // on-demand reservation: exactly the staged tokens —
+                // decode and later chunks extend the table themselves
                 self.kv.admit_packed(
-                    id,
+                    b.id,
                     &out.k_cache,
                     &out.v_cache,
                     start,
                     total,
                     len,
-                    reserve,
+                    len,
                 )
             };
-            if let Err(err) = admitted {
+            start += len;
+            if let Err(err) = staged {
                 // unservable request (e.g. a prompt longer than the KV
-                // cap on a misconfigured manifest): fail it ALONE with
-                // its prefill-sampled token, never the whole serve loop
-                crate::warn_log!(
-                    "request {id} rejected by KV admission: {err}"
-                );
-                if cached > 0 {
-                    // drop the forked table; the donor node keeps its
-                    // own refcounts on the shared blocks
-                    let _ = self.kv.release(id);
-                }
-                if let Some(n) = node {
+                // cap on a misconfigured manifest): fail it ALONE,
+                // never the whole serve loop
+                if let Some(n) = b.node {
                     self.prefix.unpin(n);
                 }
-                start += len;
-                let e2e =
-                    now.duration_since(t.arrived).as_secs_f64();
-                self.metrics.observe_e2e(e2e);
-                EngineMetrics::inc(&self.metrics.requests_completed, 1);
-                self.completed += 1;
-                let _ = t.reply.send(Response {
-                    id,
-                    tokens: t.generated,
-                    ttft_secs: e2e,
-                    e2e_secs: e2e,
-                    prefill_artifact: String::new(),
-                });
+                self.reject_flight(b.id, &format!("{err}"))?;
                 continue;
             }
-            start += len;
-            // reuse accounting only counts admissions it actually served
-            if cached > 0 {
+            // reuse accounting only counts admissions actually served
+            if b.cached > 0 {
                 EngineMetrics::inc(
                     &self.metrics.prefix_hit_blocks,
-                    self.kv.blocks_for(cached) as u64,
+                    self.kv.blocks_for(b.cached) as u64,
                 );
                 EngineMetrics::inc(
                     &self.metrics.prefix_hit_tokens,
-                    cached as u64,
+                    b.cached as u64,
                 );
             }
-            // publish this prompt's own full blocks back into the cache
-            // before maybe_complete: an immediately-finished request
-            // still seeds the cache for followers
-            if self.cfg.prefix_cache {
-                let clamped_len = t.req.prompt.len().min(seq_cap);
-                let clamped = t.req.prompt[..clamped_len].to_vec();
-                self.prefix.register(id, &clamped, &mut self.kv);
-            }
-            if let Some(n) = node {
+            if let Some(n) = b.node {
                 self.prefix.unpin(n);
             }
+            let fpos = self
+                .flight
+                .iter()
+                .position(|f| f.tracked.req.id == b.id)
+                .unwrap();
+            let done_after = b.cached_now + len;
+            self.flight[fpos].done = done_after;
+            if done_after < self.flight[fpos].clamped_len.max(1) {
+                continue; // more chunks to come
+            }
+            // final chunk: greedy first token from the last prompt row
+            // (an empty prompt — rejected at the TCP layer, but defend
+            // the engine too — occupies one PAD row and scores from it)
+            let mut f = self.flight.remove(fpos);
+            let row = &out.logits
+                [(start - 1) * out.vocab..start * out.vocab];
+            let first = argmax(row) as i32;
+            // a preempted-and-resumed request keeps its original TTFT
+            if f.tracked.first_token_at.is_none() {
+                f.tracked.first_token_at = Some(now);
+                self.metrics.observe_ttft(
+                    now.duration_since(f.tracked.arrived).as_secs_f64(),
+                );
+            }
+            f.tracked.generated.push(first);
+            // publish this prompt's own full blocks back into the
+            // cache before maybe_complete: an immediately-finished
+            // request still seeds the cache for followers
+            if self.cfg.prefix_cache {
+                let clamped =
+                    f.tracked.req.prompt[..f.clamped_len].to_vec();
+                self.prefix.register(b.id, &clamped, &mut self.kv);
+            }
             self.active.insert(
-                id,
+                b.id,
                 ActiveSeq {
-                    tracked: t,
+                    tracked: f.tracked,
                     last_token: first,
                     decode_artifact: decode_artifact.clone(),
                     decode_binding: dec_binding.clone(),
                     last_token_at: now,
                 },
             );
-            // immediately-finished sequences (max_new_tokens == 1 or EOS)
-            self.maybe_complete(id)?;
+            // immediately-finished sequences (max_new_tokens == 1/EOS)
+            self.maybe_complete(b.id)?;
         }
         self.publish_paging();
         self.publish_frag();
         self.publish_prefix();
+        Ok(true)
+    }
+
+    /// Fail one admitted request alone (unservable chunk), replying
+    /// with whatever was generated so far.
+    fn reject_flight(&mut self, id: u64, err: &str) -> Result<()> {
+        crate::warn_log!("request {id} rejected by KV admission: {err}");
+        let Some(p) = self
+            .flight
+            .iter()
+            .position(|f| f.tracked.req.id == id)
+        else {
+            return Ok(());
+        };
+        let f = self.flight.remove(p);
+        if self.kv.table(id).is_some() {
+            let _ = self.kv.release(id);
+        }
+        let t = f.tracked;
+        let e2e = Instant::now()
+            .duration_since(t.arrived)
+            .as_secs_f64();
+        self.metrics.observe_e2e(e2e);
+        EngineMetrics::inc(&self.metrics.requests_completed, 1);
+        self.completed += 1;
+        let _ = t.reply.send(Response {
+            id,
+            tokens: t.generated,
+            ttft_secs: e2e,
+            e2e_secs: e2e,
+            prefill_artifact: String::new(),
+        });
+        self.publish_paging();
         Ok(())
     }
 
-    fn run_decode(&mut self) -> Result<()> {
+    /// Evict a request's KV blocks and send it back to the *front* of
+    /// its prefill queue. Generated tokens are discarded and the
+    /// prompt recomputes from chunk 1 on re-admission — the pipeline
+    /// is deterministic and responses only go out at completion, so
+    /// preemption is invisible to the client except as latency.
+    fn preempt(&mut self, id: u64) -> Result<()> {
+        let mut t = if let Some(a) = self.active.remove(&id) {
+            a.tracked
+        } else if let Some(p) = self
+            .flight
+            .iter()
+            .position(|f| f.tracked.req.id == id)
+        {
+            self.flight.remove(p).tracked
+        } else {
+            bail!("preempt of unknown request {id}");
+        };
+        if self.kv.table(id).is_some() {
+            self.kv.release(id)?;
+        }
+        t.generated.clear();
+        EngineMetrics::inc(&self.metrics.preemptions, 1);
+        let (prefill, _, _) =
+            routing(&self.cfg.model, self.cfg.prefill_seq, &t.req.config);
+        self.queues.push_front(ConfigKey(prefill), t);
+        self.publish_paging();
+        Ok(())
+    }
+
+    /// The youngest block-holding request strictly younger (by
+    /// arrival, then id) than `than`, excluding `protect`. Age-ordered
+    /// preemption: the oldest request can always grow, so the loop
+    /// cannot livelock.
+    fn preemption_victim(
+        &self,
+        than: (Instant, u64),
+        protect: &HashSet<u64>,
+    ) -> Option<u64> {
+        let mut best: Option<(Instant, u64)> = None;
+        {
+            let mut consider = |arrived: Instant, id: u64| {
+                if protect.contains(&id) {
+                    return;
+                }
+                let p = (arrived, id);
+                if p > than && best.is_none_or(|b| p > b) {
+                    best = Some(p);
+                }
+            };
+            for (id, a) in &self.active {
+                consider(a.tracked.arrived, *id);
+            }
+            for f in &self.flight {
+                if f.done > 0 {
+                    consider(f.tracked.arrived, f.tracked.req.id);
+                }
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Free blocks until at least `need` are available: prefix-cache
+    /// nodes evict first (cached blocks are pure opportunism), then
+    /// the youngest request younger than `than` is preempted. Returns
+    /// `false` when neither source can help — every holder is
+    /// `protect`ed or at least as old — leaving the caller to skip
+    /// and retry once they complete.
+    fn reclaim_blocks(
+        &mut self,
+        need: usize,
+        than: (Instant, u64),
+        protect: &HashSet<u64>,
+    ) -> Result<bool> {
+        let ok = loop {
+            if self.kv.free_blocks() >= need {
+                break true;
+            }
+            if self.prefix.evict_one(&mut self.kv).is_some() {
+                continue;
+            }
+            match self.preemption_victim(than, protect) {
+                Some(v) => self.preempt(v)?,
+                None => break false,
+            }
+        };
+        self.publish_prefix();
+        Ok(ok)
+    }
+
+    fn run_decode(&mut self) -> Result<bool> {
         // group by decode artifact (fp vs sq); BTreeMap so group order
         // is deterministic (HashMap iteration varies run to run, and
         // W8A8 logits depend on batch composition), and a round-robin
@@ -560,18 +894,22 @@ impl Engine {
             BTreeMap::new();
         for (id, a) in &self.active {
             by_art
-                .entry((a.decode_artifact.clone(), a.decode_binding.clone()))
+                .entry((
+                    a.decode_artifact.clone(),
+                    a.decode_binding.clone(),
+                ))
                 .or_default()
                 .push(*id);
         }
         if by_art.is_empty() {
-            return Ok(());
+            return Ok(false);
         }
         let pick = self.decode_rr % by_art.len();
         self.decode_rr = self.decode_rr.wrapping_add(1);
-        let Some(((artifact, binding), ids)) = by_art.into_iter().nth(pick)
+        let Some(((artifact, binding), ids)) =
+            by_art.into_iter().nth(pick)
         else {
-            return Ok(());
+            return Ok(false);
         };
         let meta = self.rt.manifest().artifact(&artifact)?.clone();
         let b = meta.batch;
@@ -583,12 +921,13 @@ impl Engine {
         let (step_ids, full_ids): (Vec<u64>, Vec<u64>) = ids
             .into_iter()
             .partition(|id| self.kv.seq_len(*id).unwrap_or(0) < cap);
+        let forced = !full_ids.is_empty();
         for id in full_ids {
             self.complete(id)?;
         }
         let mut ids = step_ids;
         if ids.is_empty() {
-            return Ok(());
+            return Ok(forced);
         }
         // paged KV admits more concurrent sequences than the decode
         // artifact's static batch; step the least-advanced first so
@@ -599,25 +938,61 @@ impl Engine {
             });
             ids.truncate(b);
         }
-        ids.sort_unstable(); // determinism of row assignment
+        // assure KV capacity oldest-first, reclaiming blocks (prefix
+        // eviction, then preemption of strictly younger requests)
+        // under pressure: age always progresses, and a preempted
+        // victim simply drops out of this step
+        ids.sort_unstable_by_key(|id| {
+            (self.active[id].tracked.arrived, *id)
+        });
+        let mut assured: Vec<u64> = Vec::new();
+        for id in ids {
+            if !self.active.contains_key(&id) {
+                continue; // preempted while reclaiming for an older one
+            }
+            let len = self
+                .kv
+                .seq_len(id)
+                .with_context(|| format!("seq {id} missing from KV"))?;
+            let bs = self.kv.block_size();
+            let table_len =
+                self.kv.table(id).map(|t| t.len()).unwrap_or(0);
+            // append lands at position `len`: a fresh tail block when
+            // `len` crosses a boundary, plus one copy-on-write block
+            // when the target block is still shared (cached prefix)
+            let mut need =
+                (len + 1).div_ceil(bs).saturating_sub(table_len);
+            if self.kv.is_shared(id, len) {
+                need += 1;
+            }
+            if need > self.kv.free_blocks() {
+                let mut protect: HashSet<u64> =
+                    assured.iter().copied().collect();
+                protect.insert(id);
+                let than = (self.active[&id].tracked.arrived, id);
+                if !self.reclaim_blocks(need, than, &protect)? {
+                    // every holder is as old or older: skip this
+                    // sequence for the iteration; it retries once
+                    // they complete and free blocks
+                    continue;
+                }
+            }
+            self.kv.ensure_capacity(id, len + 1)?;
+            self.kv.make_writable(id, len)?;
+            assured.push(id);
+        }
+        if assured.is_empty() {
+            return Ok(forced);
+        }
+        assured.sort_unstable(); // determinism of row assignment
+        let ids = assured;
         let mut token = vec![PAD; b];
         let mut pos = vec![0i32; b];
         let mut kv_len = vec![1i32; b];
         let mut rows: Vec<Option<u64>> = vec![None; b];
         for (row, id) in ids.iter().enumerate() {
             let a = &self.active[id];
-            let len = self
-                .kv
-                .seq_len(*id)
-                .with_context(|| format!("seq {id} missing from KV"))?;
-            // append lands at position `len`: allocate the tail block if
-            // `len` crosses a block boundary (a no-op while the
-            // admission-time reservation covers it), then make sure the
-            // target block is exclusively owned — the first append past
-            // a shared cached prefix copy-on-writes it (a no-op on
-            // unshared blocks)
-            self.kv.ensure_capacity(*id, len + 1)?;
-            self.kv.make_writable(*id, len)?;
+            let len = self.kv.seq_len(*id).unwrap_or(0);
             token[row] = a.last_token;
             pos[row] = len as i32;
             kv_len[row] = (len + 1) as i32;
@@ -648,7 +1023,7 @@ impl Engine {
             self.metrics.observe_tpot(tpot);
             self.maybe_complete(*id)?;
         }
-        Ok(())
+        Ok(true)
     }
 
     fn maybe_complete(&mut self, id: u64) -> Result<()> {
@@ -748,13 +1123,35 @@ impl Engine {
         );
     }
 
-    /// Drop every prefix-cache node on serve-loop exit, returning their
-    /// block tables to the pool so the post-run invariant sweep (and a
-    /// fresh serve loop) sees a fully drained allocator.
-    fn shutdown_prefix(&mut self) {
+    /// Drop every prefix-cache node, returning their block tables to
+    /// the pool. The cache deliberately persists across [`Engine::run`]
+    /// invocations (warm restarts get hits); this is the explicit
+    /// drain for tests, invariant sweeps and memory reclaim.
+    pub fn clear_prefix_cache(&mut self) {
         self.prefix.clear(&mut self.kv);
         self.publish_paging();
         self.publish_prefix();
+    }
+
+    /// Sequences currently in the decode phase.
+    pub fn active_requests(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests admitted but still mid-chunked-prefill.
+    pub fn flight_requests(&self) -> usize {
+        self.flight.len()
+    }
+
+    /// Requests still waiting in the prefill queues (includes
+    /// preempted requests awaiting re-admission).
+    pub fn queued_requests(&self) -> usize {
+        self.queues.waiting()
+    }
+
+    /// `(free, total)` blocks in the paged KV pool.
+    pub fn kv_blocks(&self) -> (usize, usize) {
+        (self.kv.free_blocks(), self.kv.n_blocks())
     }
 
     /// Check the paged KV store's invariants (block tables, refcounts,

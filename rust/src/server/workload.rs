@@ -56,6 +56,16 @@ pub struct WorkloadSpec {
     /// prompt length; block-align it to the engine's `kv_block` to make
     /// every shared token prefix-cacheable)
     pub tenant_prefix_len: usize,
+    /// Pareto shape for heavy-tail prompt lengths (0 = uniform lengths,
+    /// the default). When set, lengths cluster near `prompt_len_lo`
+    /// with a long tail reaching `prompt_len_hi` — the mix that makes
+    /// chunked prefill earn its keep.
+    pub tail_alpha: f64,
+    /// upper generation budget: when > `max_new_tokens`, each request
+    /// draws its budget uniformly from
+    /// `max_new_tokens ..= max_new_tokens_hi` (0 = every request uses
+    /// `max_new_tokens`, the default)
+    pub max_new_tokens_hi: usize,
 }
 
 impl WorkloadSpec {
@@ -71,6 +81,29 @@ impl WorkloadSpec {
             seed: 7,
             tenants: 0,
             tenant_prefix_len: 0,
+            tail_alpha: 0.0,
+            max_new_tokens_hi: 0,
+        }
+    }
+
+    /// `n` requests with a heavy-tail length mix: most prompts near 8
+    /// tokens, a Pareto(1.2) tail out to 64, generation budgets drawn
+    /// from 1–8. Short requests keep arriving behind the occasional
+    /// long prompt, so chunked prefill (vs head-of-line blocking) is
+    /// actually observable.
+    pub fn heavy_tail(n: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            n_requests: n,
+            rate: 0.0,
+            prompt_len_lo: 8,
+            prompt_len_hi: 64,
+            max_new_tokens: 1,
+            max_new_tokens_hi: 8,
+            mix: vec![(SparsityConfig::dense(), 1.0)],
+            seed: 7,
+            tenants: 0,
+            tenant_prefix_len: 0,
+            tail_alpha: 1.2,
         }
     }
 
@@ -166,8 +199,18 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
     let mut out = Vec::with_capacity(spec.n_requests);
     let mut t = 0.0;
     for id in 0..spec.n_requests {
-        let len = spec.prompt_len_lo
-            + rng.usize_below(spec.prompt_len_hi - spec.prompt_len_lo + 1);
+        let len = if spec.tail_alpha > 0.0 {
+            // Pareto(alpha): mass near lo, a long tail toward hi
+            let span = spec.prompt_len_hi - spec.prompt_len_lo;
+            let x = (1.0 - rng.f64()).powf(-1.0 / spec.tail_alpha);
+            let extra = ((x - 1.0) * span as f64 / 4.0).floor() as usize;
+            spec.prompt_len_lo + extra.min(span)
+        } else {
+            spec.prompt_len_lo
+                + rng.usize_below(
+                    spec.prompt_len_hi - spec.prompt_len_lo + 1,
+                )
+        };
         let mut pick = rng.f64() * total_w;
         let mut config = spec.mix[0].0;
         for (c, w) in &spec.mix {
@@ -177,6 +220,16 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
             }
             pick -= w;
         }
+        // only draw when a range is configured, so specs predating the
+        // knob keep their exact request streams
+        let max_new = if spec.max_new_tokens_hi > spec.max_new_tokens {
+            spec.max_new_tokens
+                + rng.usize_below(
+                    spec.max_new_tokens_hi - spec.max_new_tokens + 1,
+                )
+        } else {
+            spec.max_new_tokens
+        };
         if spec.rate > 0.0 {
             t += rng.exp(spec.rate);
         }
@@ -201,7 +254,7 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
             req: Request {
                 id: id as u64,
                 prompt,
-                max_new_tokens: spec.max_new_tokens,
+                max_new_tokens: max_new,
                 config,
             },
         });
@@ -259,6 +312,37 @@ mod tests {
         let again = generate(&spec);
         for (a, b) in reqs.iter().zip(again.iter()) {
             assert_eq!(a.req.prompt, b.req.prompt);
+        }
+    }
+
+    #[test]
+    fn heavy_tail_is_mostly_short_with_a_real_tail() {
+        let spec = WorkloadSpec::heavy_tail(128);
+        let reqs = generate(&spec);
+        assert_eq!(reqs.len(), 128);
+        let lens: Vec<usize> =
+            reqs.iter().map(|r| r.req.prompt.len()).collect();
+        for &l in &lens {
+            assert!((8..=64).contains(&l), "len {l} out of bounds");
+        }
+        let short = lens.iter().filter(|&&l| l <= 24).count();
+        let long = lens.iter().filter(|&&l| l >= 40).count();
+        assert!(long >= 1, "no tail prompts at all");
+        assert!(short > long, "short={short} long={long}: not heavy-tail");
+        let budgets: Vec<usize> =
+            reqs.iter().map(|r| r.req.max_new_tokens).collect();
+        for &b in &budgets {
+            assert!((1..=8).contains(&b), "budget {b} out of bounds");
+        }
+        assert!(
+            budgets.iter().min() < budgets.iter().max(),
+            "generation budgets did not vary"
+        );
+        // deterministic
+        let again = generate(&spec);
+        for (a, b) in reqs.iter().zip(again.iter()) {
+            assert_eq!(a.req.prompt, b.req.prompt);
+            assert_eq!(a.req.max_new_tokens, b.req.max_new_tokens);
         }
     }
 

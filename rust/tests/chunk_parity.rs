@@ -1,0 +1,242 @@
+//! Chunk-parity suite (ISSUE 8): chunked prefill must be **bitwise
+//! identical** to one-shot prefill. A chunk is a prefixed prefill whose
+//! cached prefix is the request's own earlier chunks, so given the PR 6
+//! fork-parity guarantee (suffix rows over a bitwise-equal cached
+//! prefix equal the cold rows), induction over chunks pins the whole
+//! chunked run to the cold one. This suite checks that induction at
+//! the runtime layer (every chunk's logits and K/V against the cold
+//! slices), then end to end through the serving engine (chunked token
+//! streams == one-shot token streams across chunk sizes, sparsity
+//! configs, prefix-cache settings and a heavy-tail mixed workload).
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use amber_pruner::coordinator::batcher::routing;
+use amber_pruner::coordinator::request::{Request, SparsityConfig};
+use amber_pruner::coordinator::scheduler::{
+    Engine as ServeEngine, EngineConfig,
+};
+use amber_pruner::metrics::EngineMetrics;
+use amber_pruner::runtime::{
+    Engine, ModelSpec, NativeEngine, PrefixedPrompt,
+};
+use amber_pruner::server::workload::{generate, WorkloadSpec};
+use amber_pruner::util::rng::Rng;
+
+const MODEL: &str = "tiny-lm-a";
+// tiny-lm geometry (ModelSpec::tiny)
+const L: usize = 2;
+const KVD: usize = 16;
+
+/// Every ratio x {fp, sq} plus dense — the full config surface.
+const CONFIGS: [&str; 8] = [
+    "dense",
+    "dense+sq",
+    "2:4:ls",
+    "2:4:ls+sq",
+    "4:8:naive",
+    "4:8:naive+sq",
+    "8:16:all",
+    "8:16:all+sq",
+];
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| 1 + rng.below(300) as i32).collect()
+}
+
+/// Rows `lo..hi` of a `[L, total, KVD]` packed cache, per layer.
+fn slice_rows(c: &[f32], total: usize, lo: usize, hi: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(L * (hi - lo) * KVD);
+    for l in 0..L {
+        let at = (l * total + lo) * KVD;
+        out.extend_from_slice(&c[at..at + (hi - lo) * KVD]);
+    }
+    out
+}
+
+/// The induction step at the runtime layer: replay a prompt chunk by
+/// chunk, each chunk a prefixed prefill over the cold run's leading
+/// rows (exactly what the scheduler gathers from the request's own
+/// KV), and require every chunk's logits and K/V to equal the cold
+/// slices bitwise. Prompt length 60 is a multiple of neither chunk
+/// size, so the final partial chunk is covered too.
+#[test]
+fn chunked_prefill_is_bitwise_one_shot_at_every_chunk() {
+    let mut rng = Rng::new(61);
+    let p = prompt(&mut rng, 60);
+    let total = p.len();
+    for cfg_s in CONFIGS {
+        let cfg = SparsityConfig::parse(cfg_s).unwrap();
+        let (art, _, files) = routing(MODEL, 64, &cfg);
+        let refs: Vec<&str> = files.iter().map(|f| f.as_str()).collect();
+        let mut e = NativeEngine::synthetic(vec![ModelSpec::tiny(MODEL)]);
+        let bind = e.bind(&art, &refs).unwrap();
+        let cold = e
+            .prefill_packed(&art, &bind, std::slice::from_ref(&p))
+            .unwrap();
+        assert_eq!(cold.lens, vec![total]);
+        for chunk in [16usize, 48] {
+            let mut done = 0usize;
+            while done < total {
+                let len = chunk.min(total - done);
+                let req = PrefixedPrompt {
+                    tokens: p[..done + len].to_vec(),
+                    cached_len: done,
+                    prefix_k: slice_rows(&cold.k_cache, total, 0, done),
+                    prefix_v: slice_rows(&cold.v_cache, total, 0, done),
+                };
+                let out = e
+                    .prefill_packed_prefixed(
+                        &art,
+                        &bind,
+                        std::slice::from_ref(&req),
+                    )
+                    .unwrap();
+                assert_eq!(
+                    out.lens,
+                    vec![len],
+                    "{cfg_s} chunk {chunk} at {done}"
+                );
+                assert_eq!(
+                    out.logits[..],
+                    cold.logits
+                        [done * cold.vocab..(done + len) * cold.vocab],
+                    "{cfg_s} chunk {chunk}: logits diverged at {done}"
+                );
+                assert_eq!(
+                    out.k_cache,
+                    slice_rows(&cold.k_cache, total, done, done + len),
+                    "{cfg_s} chunk {chunk}: K diverged at {done}"
+                );
+                assert_eq!(
+                    out.v_cache,
+                    slice_rows(&cold.v_cache, total, done, done + len),
+                    "{cfg_s} chunk {chunk}: V diverged at {done}"
+                );
+                done += len;
+            }
+        }
+    }
+}
+
+/// Serve `reqs` on a fresh engine with the given scheduling knobs and
+/// return the response token map plus the metrics.
+fn serve(
+    chunk_tokens: usize,
+    prefix_cache: bool,
+    reqs: &[Request],
+) -> (HashMap<u64, Vec<i32>>, Arc<EngineMetrics>) {
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.chunk_tokens = chunk_tokens;
+    cfg.prefix_cache = prefix_cache;
+    let mut engine = ServeEngine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let (reply_tx, reply_rx) = channel();
+    for r in reqs {
+        engine.submit(r.clone(), reply_tx.clone());
+    }
+    while engine.step().unwrap() {}
+    drop(reply_tx);
+    assert_eq!(engine.queued_requests(), 0, "requests left queued");
+    assert_eq!(engine.flight_requests(), 0, "requests left in flight");
+    engine.clear_prefix_cache();
+    engine.kv_invariants().unwrap();
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked after drain");
+    (reply_rx.try_iter().map(|r| (r.id, r.tokens)).collect(), metrics)
+}
+
+/// End to end per config: the served token streams are identical at
+/// every chunk size ({1 block, 3 blocks, one-shot}) and prefix-cache
+/// setting. Prompt lengths include multiples of neither chunk size
+/// (45, 17), an exact multiple (64 = the seq cap) and a one-chunk
+/// short (8).
+#[test]
+fn served_tokens_identical_across_chunk_sizes_and_prefix_cache() {
+    let mut rng = Rng::new(67);
+    let lens = [45usize, 17, 60, 33, 64, 8];
+    for cfg_s in CONFIGS {
+        let config = SparsityConfig::parse(cfg_s).unwrap();
+        let reqs: Vec<Request> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| Request {
+                id: i as u64,
+                prompt: prompt(&mut rng, len),
+                max_new_tokens: 4,
+                config,
+            })
+            .collect();
+        let (golden, mg) = serve(usize::MAX, false, &reqs);
+        assert_eq!(golden.len(), reqs.len(), "{cfg_s}: requests lost");
+        // one-shot = one chunk per request
+        assert_eq!(
+            mg.prefill_chunks.load(Ordering::Relaxed),
+            reqs.len() as u64,
+            "{cfg_s}: one-shot must count one chunk per request"
+        );
+        for chunk in [16usize, 48, usize::MAX] {
+            for prefix in [false, true] {
+                if chunk == usize::MAX && !prefix {
+                    continue; // the golden run itself
+                }
+                let (got, m) = serve(chunk, prefix, &reqs);
+                assert_eq!(
+                    got, golden,
+                    "{cfg_s}: tokens diverged at chunk={chunk} \
+                     prefix={prefix}"
+                );
+                if chunk == 16 {
+                    // 45->3, 17->2, 60->4, 33->3, 64->4, 8->1 chunks
+                    assert!(
+                        m.prefill_chunks.load(Ordering::Relaxed)
+                            > reqs.len() as u64,
+                        "{cfg_s}: long prompts must actually chunk"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The mixed-workload e2e gate: a heavy-tail workload over a mixed
+/// sparsity/quantization population serves token-identically on a
+/// chunked engine and a one-shot engine, with and without the prefix
+/// cache.
+#[test]
+fn heavy_tail_mixed_workload_serves_identically_chunked() {
+    let mut spec = WorkloadSpec::heavy_tail(24);
+    spec.mix = vec![
+        (SparsityConfig::parse("dense").unwrap(), 1.0),
+        (SparsityConfig::parse("2:4:ls").unwrap(), 1.0),
+        (SparsityConfig::parse("8:16:all+sq").unwrap(), 1.0),
+    ];
+    let reqs: Vec<Request> =
+        generate(&spec).into_iter().map(|t| t.req).collect();
+    let (golden, _) = serve(usize::MAX, false, &reqs);
+    assert_eq!(golden.len(), 24, "every request must complete");
+    for (chunk, prefix) in
+        [(16usize, false), (16, true), (32, true), (usize::MAX, true)]
+    {
+        let (got, m) = serve(chunk, prefix, &reqs);
+        assert_eq!(
+            got, golden,
+            "heavy-tail tokens diverged at chunk={chunk} prefix={prefix}"
+        );
+        if chunk == 16 {
+            assert!(
+                m.prefill_chunks.load(Ordering::Relaxed) > 24,
+                "the heavy tail must produce multi-chunk prefills"
+            );
+        }
+    }
+}

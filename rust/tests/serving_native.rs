@@ -154,8 +154,7 @@ fn shared_prefix_tenants_hit_the_prefix_cache() {
     // requests across 3 tenants, each tenant sharing a 32-token
     // (2-block) prompt prefix. Wave 1 serves one request per tenant
     // cold and seeds the cache; wave 2's six requests each fork the
-    // cached prefix instead of re-prefilling it. Driven by manual
-    // `step()` (run() clears the cache on exit).
+    // cached prefix instead of re-prefilling it.
     use std::sync::atomic::Ordering;
     let metrics = Arc::new(EngineMetrics::new());
     let mut cfg = EngineConfig::new("tiny-lm-a");
@@ -202,5 +201,155 @@ fn shared_prefix_tenants_hit_the_prefix_cache() {
     assert_eq!(responses.len(), 9, "every request must complete");
     for r in &responses {
         assert!(!r.tokens.is_empty() && r.tokens.len() <= 8);
+    }
+}
+
+#[test]
+fn prefix_cache_survives_run_restart() {
+    // ROADMAP follow-up (ISSUE 8 bugfix): the prefix cache used to be
+    // cleared when `run` returned, so a warm restart — a second `run`
+    // on the same engine — re-prefilled prefixes it had already
+    // cached. Two runs over the same tenants must now show run 2
+    // getting pure cache hits from run 1's registrations.
+    use std::sync::atomic::Ordering;
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new("tiny-lm-a");
+    cfg.pool_threads = 1;
+    let mut engine = Engine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let reqs = generate(&WorkloadSpec::shared_prefix(6, 3, 32));
+    let (reply_tx, reply_rx) = channel();
+    // run 1: one request per tenant, all cold
+    let (tx, rx) = channel();
+    for t in reqs.iter().take(3) {
+        tx.send(EngineMsg::Submit(t.req.clone(), reply_tx.clone()))
+            .unwrap();
+    }
+    drop(tx);
+    engine.run(rx).unwrap();
+    assert_eq!(
+        metrics.prefix_hit_blocks.load(Ordering::Relaxed),
+        0,
+        "run 1 is cold"
+    );
+    assert!(
+        metrics.prefix_cache_nodes.load(Ordering::Relaxed) > 0,
+        "run 1 must leave the cache warm for the next run"
+    );
+    // run 2 (warm restart): same tenants — every request forks the
+    // 32-token (2-block) prefix cached by run 1
+    let (tx, rx) = channel();
+    for t in reqs.iter().skip(3) {
+        tx.send(EngineMsg::Submit(t.req.clone(), reply_tx.clone()))
+            .unwrap();
+    }
+    drop(tx);
+    engine.run(rx).unwrap();
+    drop(reply_tx);
+    assert_eq!(
+        metrics.prefix_hit_blocks.load(Ordering::Relaxed),
+        6,
+        "3 warm-restart requests x 2 shared blocks each"
+    );
+    assert_eq!(
+        metrics.prefix_hit_tokens.load(Ordering::Relaxed),
+        3 * 32,
+        "every run-2 request skips its full 32-token prefix"
+    );
+    let responses: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(responses.len(), 6, "both runs complete their requests");
+    engine.clear_prefix_cache();
+    engine.kv_invariants().unwrap();
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked across the restart");
+}
+
+#[test]
+fn long_prompt_no_longer_head_of_line_blocks_shorts() {
+    // ISSUE 8: under one-shot prefill a long prompt monopolizes the
+    // iteration it is admitted into, so short requests behind it wait
+    // out its entire prefill (head-of-line blocking). Chunked prefill
+    // splits it across iterations and co-schedules the shorts. Both
+    // engines serve the same heavy-tail-derived workload with a
+    // 64-token iteration budget; completion order and per-response
+    // TTFT flip between them.
+    let spec = WorkloadSpec::heavy_tail(8);
+    let mut prompts: Vec<Vec<i32>> =
+        generate(&spec).into_iter().map(|t| t.req.prompt).collect();
+    prompts.sort_by_key(|p| p.len());
+    // the heavy-tail head, stretched to the 64-token seq cap; the 3
+    // shortest tail requests, clamped to one 16-token chunk so each
+    // completes in its first iteration
+    let mut long = prompts.pop().unwrap();
+    while long.len() < 64 {
+        long.push(long[long.len() % 8]);
+    }
+    let shorts: Vec<Vec<i32>> = prompts
+        .into_iter()
+        .take(3)
+        .map(|mut p| {
+            p.truncate(16);
+            p
+        })
+        .collect();
+    let serve = |chunk_tokens: usize| -> Vec<(u64, f64)> {
+        let metrics = Arc::new(EngineMetrics::new());
+        let mut cfg = EngineConfig::new("tiny-lm-a");
+        cfg.pool_threads = 1;
+        cfg.max_wait_secs = 0.0;
+        cfg.prefix_cache = false;
+        cfg.chunk_tokens = chunk_tokens;
+        cfg.iteration_budget = 64;
+        let mut engine = Engine::new(
+            Box::new(NativeEngine::tiny()),
+            cfg,
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let (reply_tx, reply_rx) = channel();
+        let mk = |id: u64, prompt: Vec<i32>| Request {
+            id,
+            prompt,
+            max_new_tokens: 1,
+            config: SparsityConfig::parse("dense").unwrap(),
+        };
+        engine.submit(mk(0, long.clone()), reply_tx.clone());
+        for (i, s) in shorts.iter().enumerate() {
+            engine.submit(mk(1 + i as u64, s.clone()), reply_tx.clone());
+        }
+        while engine.step().unwrap() {}
+        drop(reply_tx);
+        engine.kv_invariants().unwrap();
+        // completion order with each response's TTFT
+        reply_rx.try_iter().map(|r| (r.id, r.ttft_secs)).collect()
+    };
+    // one-shot: the 64-token head fills the whole iteration budget, so
+    // it runs alone first and every short waits out its prefill
+    let one_shot = serve(usize::MAX);
+    assert_eq!(one_shot.len(), 4, "every request completes");
+    assert_eq!(
+        one_shot[0].0, 0,
+        "one-shot: the long prompt completes first (HOL blocking)"
+    );
+    // chunked: the long prompt's first 16-token chunk shares iteration
+    // 1 with all three shorts, which complete immediately; the long
+    // prompt finishes three iterations later
+    let chunked = serve(16);
+    assert_eq!(chunked.len(), 4, "every request completes");
+    assert_eq!(
+        chunked[3].0, 0,
+        "chunked: the long prompt must complete last"
+    );
+    let long_ttft = chunked[3].1;
+    for (id, ttft) in &chunked[..3] {
+        assert!(
+            *ttft < long_ttft,
+            "short {id} must reach its first token before the long \
+             prompt ({ttft} vs {long_ttft})"
+        );
     }
 }
