@@ -16,11 +16,13 @@ fn tracked(id: u64, cfg: SparsityConfig) -> Tracked {
     std::mem::forget(rx);
     Tracked {
         req: Request { id, prompt: vec![1; 32], max_new_tokens: 8,
-                       config: cfg },
+                       config: cfg, deadline_ticks: 0 },
         arrived: Instant::now(),
         first_token_at: None,
         generated: vec![],
         reply: tx,
+        retries: 0,
+        deadline_at: None,
     }
 }
 

@@ -54,6 +54,40 @@ impl PrefillQueues {
         self.waiting() == 0
     }
 
+    /// Queued prompt-token backlog across all buckets — the signal the
+    /// overload watermarks ([`super::scheduler::DegradePolicy`])
+    /// compare against at admission.
+    pub fn queued_tokens(&self) -> usize {
+        self.queues
+            .values()
+            .flat_map(|q| q.iter())
+            .map(|t| t.req.prompt.len())
+            .sum()
+    }
+
+    /// Remove and return every queued request whose deadline has
+    /// passed (`deadline_at < tick` — a request keeps the whole tick
+    /// it expires on, so `deadline_ticks = 1` gets one scheduling
+    /// opportunity). The scheduler sweeps this at the top of every
+    /// iteration and answers each with a `Rejected` response.
+    pub fn take_expired(&mut self, tick: u64) -> Vec<Tracked> {
+        let mut out = Vec::new();
+        self.queues.retain(|_, q| {
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].deadline_at.is_some_and(|d| d < tick) {
+                    if let Some(t) = q.remove(i) {
+                        out.push(t);
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            !q.is_empty()
+        });
+        out
+    }
+
     /// The shared bucket-selection policy: a "full" bucket if any
     /// (per the caller's capacity rule), otherwise the bucket with the
     /// oldest head *if* it exceeded max_wait or the engine is otherwise
@@ -420,16 +454,53 @@ mod tests {
                 prompt: vec![1; prompt_len.max(1)],
                 max_new_tokens: 4,
                 config: SparsityConfig::dense(),
+                deadline_ticks: 0,
             },
             arrived: Instant::now(),
             first_token_at: None,
             generated: vec![],
             reply: tx,
+            retries: 0,
+            deadline_at: None,
         }
     }
 
     fn tracked(id: u64) -> Tracked {
         tracked_len(id, 2)
+    }
+
+    #[test]
+    fn take_expired_sweeps_only_past_deadlines() {
+        let mut q = PrefillQueues::new(4, 10.0);
+        let mut live = tracked(1);
+        live.deadline_at = Some(10);
+        let mut edge = tracked(2); // expires on tick 5, kept through it
+        edge.deadline_at = Some(5);
+        let mut dead = tracked(3);
+        dead.deadline_at = Some(4);
+        q.push(ConfigKey("a".into()), live);
+        q.push(ConfigKey("a".into()), edge);
+        q.push(ConfigKey("b".into()), dead);
+        let expired = q.take_expired(5);
+        assert_eq!(
+            expired.iter().map(|t| t.req.id).collect::<Vec<_>>(),
+            vec![3]
+        );
+        assert_eq!(q.waiting(), 2);
+        // the rest expire once the tick passes their deadlines, but a
+        // request without one is never swept
+        q.push(ConfigKey("a".into()), tracked(4));
+        assert_eq!(q.take_expired(1_000_000).len(), 2);
+        assert_eq!(q.waiting(), 1);
+    }
+
+    #[test]
+    fn queued_tokens_sums_prompt_backlog() {
+        let mut q = PrefillQueues::new(4, 10.0);
+        assert_eq!(q.queued_tokens(), 0);
+        q.push(ConfigKey("a".into()), tracked_len(1, 10));
+        q.push(ConfigKey("b".into()), tracked_len(2, 7));
+        assert_eq!(q.queued_tokens(), 17);
     }
 
     #[test]

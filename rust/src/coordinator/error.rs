@@ -1,0 +1,85 @@
+//! Error taxonomy for the serving loop (ISSUE 9).
+//!
+//! Every failure the engine can hand back to a client is classified
+//! into one of three kinds, and the classification decides the
+//! scheduler's reaction:
+//!
+//! | kind | meaning | scheduler reaction |
+//! |------|---------|--------------------|
+//! | `Transient` | retryable hiccup (failed batch, injected fault) | release KV, re-queue with tick-based backoff |
+//! | `Fatal` | cannot complete (retries exhausted, engine panic) | error `Response`, release KV, keep serving |
+//! | `Rejected` | refused by policy (deadline, shed, unservable) | error `Response` immediately |
+//!
+//! `Transient` never reaches a client directly — it is the *internal*
+//! classification that drives the retry path; only when the retry
+//! budget is exhausted does it escalate to `Fatal`. The taxonomy rides
+//! on [`super::request::Response::error`], so the fault-free path
+//! (`error == None`) is byte-identical to the pre-taxonomy protocol.
+
+/// Failure classification (module docs for the full table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Retryable: the engine re-queues the request with tick-based
+    /// exponential backoff instead of failing it.
+    Transient,
+    /// Unrecoverable for this request: retries exhausted or the engine
+    /// panicked while it was in flight. The loop keeps serving others.
+    Fatal,
+    /// Refused by policy: deadline exceeded, overload shed, or a
+    /// request the pool can never hold.
+    Rejected,
+}
+
+impl ErrorKind {
+    /// Wire-protocol label (`"transient"` / `"fatal"` / `"rejected"`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrorKind::Transient => "transient",
+            ErrorKind::Fatal => "fatal",
+            ErrorKind::Rejected => "rejected",
+        }
+    }
+}
+
+/// A classified per-request failure, carried on
+/// [`super::request::Response::error`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestError {
+    /// failure classification
+    pub kind: ErrorKind,
+    /// human-readable cause
+    pub reason: String,
+}
+
+impl RequestError {
+    /// An unrecoverable failure.
+    pub fn fatal(reason: impl Into<String>) -> RequestError {
+        RequestError { kind: ErrorKind::Fatal, reason: reason.into() }
+    }
+
+    /// A policy refusal (deadline, shed, unservable).
+    pub fn rejected(reason: impl Into<String>) -> RequestError {
+        RequestError { kind: ErrorKind::Rejected, reason: reason.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable_wire_strings() {
+        assert_eq!(ErrorKind::Transient.label(), "transient");
+        assert_eq!(ErrorKind::Fatal.label(), "fatal");
+        assert_eq!(ErrorKind::Rejected.label(), "rejected");
+    }
+
+    #[test]
+    fn constructors_classify() {
+        assert_eq!(RequestError::fatal("x").kind, ErrorKind::Fatal);
+        assert_eq!(
+            RequestError::rejected("x").kind,
+            ErrorKind::Rejected
+        );
+    }
+}

@@ -27,6 +27,8 @@
 //! exactly as the paper confines sparsity to prefill.
 
 pub mod batcher;
+pub mod error;
+pub mod fault;
 pub mod kv;
 pub mod paged;
 pub mod prefix;
@@ -34,5 +36,7 @@ pub mod request;
 pub mod scheduler;
 pub mod router;
 
+pub use error::{ErrorKind, RequestError};
+pub use fault::{FaultKind, FaultPlan, FaultSite};
 pub use request::{Request, Response, SparsityConfig};
-pub use scheduler::{Engine, EngineConfig};
+pub use scheduler::{DegradePolicy, Engine, EngineConfig};

@@ -3,6 +3,7 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use super::error::RequestError;
 use crate::sparsity::policy::Setting;
 
 /// Per-request sparsity knob — the paper's method surfaced at the API.
@@ -71,6 +72,35 @@ impl SparsityConfig {
         Some(SparsityConfig { setting, nm: Some((n, m)), quantized })
     }
 
+    /// One rung down the graceful-degradation ladder: a strictly more
+    /// aggressive N:M ratio serving the same request with less prefill
+    /// compute. The paper's method is training-free, so the ratio can
+    /// tighten per request at admission time with no model change —
+    /// overload control degrades before it sheds
+    /// ([`super::scheduler::DegradePolicy`]).
+    ///
+    /// Ladder: dense → 4:8 → 2:4 (an `m > 8` config steps to 4:8
+    /// first); 2:4 is the floor (`None`). The quantization flag is
+    /// preserved; a dense request picks up the full Amber policy
+    /// ([`Setting::All`]) with its first ratio.
+    pub fn degraded(&self) -> Option<SparsityConfig> {
+        let nm = match self.nm {
+            None => (4, 8),
+            Some((_, m)) if m > 8 => (4, 8),
+            Some((_, m)) if m > 4 => (2, 4),
+            Some(_) => return None, // already at the 2:4 floor
+        };
+        Some(SparsityConfig {
+            setting: if self.setting == Setting::Dense {
+                Setting::All
+            } else {
+                self.setting
+            },
+            nm: Some(nm),
+            quantized: self.quantized,
+        })
+    }
+
     /// Canonical string form (inverse of [`SparsityConfig::parse`]).
     pub fn label(&self) -> String {
         let q = if self.quantized { "+sq" } else { "" };
@@ -99,6 +129,13 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// the request's sparsity configuration
     pub config: SparsityConfig,
+    /// complete-or-cancel deadline, measured in engine iterations
+    /// (ticks) from submission — deterministic, never wall-clock. The
+    /// engine cancels an expired request at its next scheduling point
+    /// (queue sweep, chunk boundary, decode turn) with a `Rejected`
+    /// error response carrying any tokens generated so far. 0 = no
+    /// deadline (the default).
+    pub deadline_ticks: u64,
 }
 
 /// The completed generation for one request.
@@ -114,6 +151,9 @@ pub struct Response {
     pub e2e_secs: f64,
     /// the prefill artifact that served the request (may be empty)
     pub prefill_artifact: String,
+    /// how the request failed, if it did (`None` = success; `tokens`
+    /// then holds whatever was generated before the failure)
+    pub error: Option<RequestError>,
 }
 
 /// A request in flight inside the engine.
@@ -128,6 +168,12 @@ pub struct Tracked {
     pub generated: Vec<i32>,
     /// where the response goes on completion
     pub reply: Sender<Response>,
+    /// transient-failure retries consumed so far (preemptions are not
+    /// failures and do not count)
+    pub retries: u32,
+    /// absolute expiry tick (`submit tick + deadline_ticks`), resolved
+    /// once at submission; `None` = no deadline
+    pub deadline_at: Option<u64>,
 }
 
 #[cfg(test)]
@@ -143,6 +189,23 @@ mod tests {
         }
         assert!(SparsityConfig::parse("3x7").is_none());
         assert!(SparsityConfig::parse("2:4:bogus").is_none());
+    }
+
+    #[test]
+    fn degradation_ladder_tightens_to_the_2_4_floor() {
+        let d0 = SparsityConfig::dense();
+        let d1 = d0.degraded().unwrap();
+        assert_eq!(d1.nm, Some((4, 8)));
+        assert_eq!(d1.setting, Setting::All);
+        let d2 = d1.degraded().unwrap();
+        assert_eq!(d2.nm, Some((2, 4)));
+        assert!(d2.degraded().is_none(), "2:4 is the floor");
+        // 8:16 steps through 4:8, keeping setting and quantization
+        let o = SparsityConfig::outstanding(8, 16);
+        let o1 = o.degraded().unwrap();
+        assert_eq!(o1.nm, Some((4, 8)));
+        assert_eq!(o1.setting, Setting::LayerSkip);
+        assert!(o1.quantized);
     }
 
     #[test]

@@ -129,6 +129,7 @@ mod tests {
             prompt: vec![1],
             max_new_tokens: 1,
             config: SparsityConfig::dense(),
+            deadline_ticks: 0,
         }
     }
 

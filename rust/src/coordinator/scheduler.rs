@@ -45,10 +45,12 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::batcher::{routing, BlockBudget, ConfigKey, PrefillQueues};
+use super::error::{ErrorKind, RequestError};
+use super::fault::{FaultKind, FaultPlan, FaultSite};
 use super::kv::KvPages;
 use super::paged::DEFAULT_BLOCK;
 use super::prefix::PrefixCache;
-use super::request::{Request, Response, Tracked};
+use super::request::{Request, Response, SparsityConfig, Tracked};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{
     Engine as ExecEngine, PrefixedPrompt, SparsityAudit,
@@ -107,6 +109,37 @@ pub struct EngineConfig {
     /// pools force the preemption path; the scheduler property suite
     /// uses this.
     pub kv_pool_blocks: usize,
+    /// deterministic fault-injection schedule (chaos testing); the
+    /// default empty plan is a guaranteed no-op — every check is one
+    /// `Vec::is_empty`, and the fault-free parity suites pin that a
+    /// no-op plan serves byte-identical tokens
+    pub fault_plan: FaultPlan,
+    /// opt-in overload control: degrade-then-shed watermarks over the
+    /// queued prompt-token backlog (`None` = admit everything, the
+    /// default)
+    pub degrade_policy: Option<DegradePolicy>,
+    /// transient failures tolerated per request before it escalates to
+    /// a `Fatal` response
+    pub max_retries: u32,
+    /// base retry backoff in engine iterations (ticks); doubles per
+    /// retry, capped at 64x the base. Deterministic, never wall-clock.
+    pub retry_backoff_ticks: u64,
+}
+
+/// Overload-control watermarks over the queued prompt-token backlog,
+/// checked at admission ([`Engine::submit`]). Past `degrade_at` a new
+/// request's N:M config is tightened one rung
+/// ([`SparsityConfig::degraded`]) — the paper's training-free ratio
+/// flexibility as a shed-compute-before-shedding-requests lever; past
+/// `shed_at` new requests are refused with a `Rejected` response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradePolicy {
+    /// backlog (queued prompt tokens) at which new requests degrade
+    /// one N:M rung (0 disables degradation)
+    pub degrade_at: usize,
+    /// backlog at which new requests are shed outright (0 disables
+    /// shedding)
+    pub shed_at: usize,
 }
 
 impl EngineConfig {
@@ -124,6 +157,10 @@ impl EngineConfig {
             chunk_tokens: 2 * DEFAULT_BLOCK,
             iteration_budget: 0,
             kv_pool_blocks: 0,
+            fault_plan: FaultPlan::none(),
+            degrade_policy: None,
+            max_retries: 3,
+            retry_backoff_ticks: 2,
         }
     }
 }
@@ -181,6 +218,16 @@ struct BuiltChunk {
     first: bool,
 }
 
+/// A transiently-failed request waiting out its tick-based retry
+/// backoff before re-queuing at the front of its bucket.
+struct Parked {
+    /// tick at which it re-queues
+    ready: u64,
+    /// its prefill bucket
+    key: ConfigKey,
+    tracked: Tracked,
+}
+
 /// The serving engine: scheduler state over an execution backend.
 pub struct Engine {
     /// engine-loop configuration
@@ -209,6 +256,13 @@ pub struct Engine {
     #[allow(dead_code)] // kept for config introspection / tests
     vocab: usize,
     completed: usize,
+    /// deterministic iteration counter — the tick clock that drives
+    /// deadlines, retry backoff and fault schedules
+    tick: u64,
+    /// the mutable copy of `cfg.fault_plan` being consumed
+    faults: FaultPlan,
+    /// transiently-failed requests waiting out their retry backoff
+    parked: Vec<Parked>,
 }
 
 impl Engine {
@@ -269,6 +323,7 @@ impl Engine {
         Ok(Engine {
             queues: PrefillQueues::new(prefill_batch, cfg.max_wait_secs),
             prefix: PrefixCache::new(kv_block),
+            faults: cfg.fault_plan.clone(),
             cfg,
             rt,
             metrics,
@@ -280,14 +335,61 @@ impl Engine {
             decode_batch: dec.batch.max(1),
             vocab,
             completed: 0,
+            tick: 0,
+            parked: Vec::new(),
         })
     }
 
-    /// Enqueue a request into its config bucket.
-    pub fn submit(&mut self, req: Request, reply: Sender<Response>) {
+    /// Enqueue a request into its config bucket, running admission
+    /// control first: past `degrade_policy.shed_at` queued prompt
+    /// tokens the request is shed with a `Rejected` response; past
+    /// `degrade_at` its sparsity config tightens one rung
+    /// ([`SparsityConfig::degraded`]), shedding compute before
+    /// shedding requests. A `deadline_ticks` budget resolves to its
+    /// absolute expiry tick here.
+    pub fn submit(&mut self, mut req: Request, reply: Sender<Response>) {
+        if let Some(pol) = self.cfg.degrade_policy {
+            let backlog = self.queues.queued_tokens();
+            if pol.shed_at > 0 && backlog >= pol.shed_at {
+                EngineMetrics::inc(&self.metrics.sheds, 1);
+                let t = Tracked {
+                    req,
+                    arrived: Instant::now(),
+                    first_token_at: None,
+                    generated: Vec::new(),
+                    reply,
+                    retries: 0,
+                    deadline_at: None,
+                };
+                self.finish_with_error(
+                    t,
+                    ErrorKind::Rejected,
+                    format!("overloaded: {backlog} queued prompt tokens"),
+                );
+                return;
+            }
+            if pol.degrade_at > 0 && backlog >= pol.degrade_at {
+                if let Some(d) = req.config.degraded() {
+                    EngineMetrics::inc(&self.metrics.degraded, 1);
+                    crate::debug_log!(
+                        "request {}: degraded {} -> {} at {backlog} \
+                         queued tokens",
+                        req.id,
+                        req.config.label(),
+                        d.label()
+                    );
+                    req.config = d;
+                }
+            }
+        }
         let (prefill, _, _) =
             routing(&self.cfg.model, self.cfg.prefill_seq, &req.config);
         EngineMetrics::inc(&self.metrics.requests_admitted, 1);
+        let deadline_at = if req.deadline_ticks > 0 {
+            Some(self.tick + req.deadline_ticks)
+        } else {
+            None
+        };
         self.queues.push(
             ConfigKey(prefill),
             Tracked {
@@ -295,7 +397,9 @@ impl Engine {
                 arrived: Instant::now(),
                 first_token_at: None,
                 generated: Vec::new(),
-                reply: reply.clone(),
+                reply,
+                retries: 0,
+                deadline_at,
             },
         );
     }
@@ -304,13 +408,20 @@ impl Engine {
     /// deliberately survives loop exit: a later `run` on the same
     /// engine starts warm (see the warm-restart test); use
     /// [`Engine::clear_prefix_cache`] to drain it explicitly.
+    ///
+    /// This is also the fault boundary: a panicking or erroring
+    /// [`Engine::step`] fails the in-flight requests with `Fatal`
+    /// responses and keeps serving — after a panic, only once a
+    /// [`Engine::kv_invariants`] self-check passes (a corrupt KV store
+    /// aborts the loop with an error instead).
     pub fn run(&mut self, rx: Receiver<EngineMsg>) -> Result<()> {
         let mut open = true;
         loop {
             // drain incoming messages (non-blocking while work pending)
             let busy = !self.queues.is_empty()
                 || !self.active.is_empty()
-                || !self.flight.is_empty();
+                || !self.flight.is_empty()
+                || !self.parked.is_empty();
             loop {
                 let msg = if busy {
                     match rx.try_recv() {
@@ -339,6 +450,7 @@ impl Engine {
                 && self.queues.is_empty()
                 && self.active.is_empty()
                 && self.flight.is_empty()
+                && self.parked.is_empty()
             {
                 return Ok(());
             }
@@ -347,14 +459,92 @@ impl Engine {
             {
                 return Ok(());
             }
-            self.step()?;
+            // the unwind boundary: one bad request or backend bug must
+            // not take the serve loop (and every other client) down
+            let stepped = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| self.step()),
+            );
+            match stepped {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => {
+                    crate::warn_log!(
+                        "engine step failed: {e:#}; failing in-flight \
+                         requests and continuing"
+                    );
+                    self.fail_in_flight(&format!(
+                        "engine step failed: {e}"
+                    ));
+                }
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    if let Err(inv) = self.kv_invariants() {
+                        // corrupt KV store: answer what we can, then
+                        // refuse to keep serving on broken state
+                        self.fail_in_flight(&format!(
+                            "engine panicked: {msg}"
+                        ));
+                        bail!(
+                            "engine panic ({msg}) left the KV store \
+                             corrupt: {inv}"
+                        );
+                    }
+                    crate::warn_log!(
+                        "engine step panicked ({msg}); KV invariants \
+                         hold — failing in-flight requests and \
+                         continuing"
+                    );
+                    self.fail_in_flight(&format!(
+                        "engine panicked: {msg}"
+                    ));
+                }
+            }
         }
+    }
+
+    /// Fail every admitted request (flight + active) with a `Fatal`
+    /// response, releasing KV best-effort. The backstop after a step
+    /// error or caught panic: those requests' states are
+    /// unrecoverable, but queued and future requests keep being
+    /// served.
+    fn fail_in_flight(&mut self, reason: &str) {
+        let flight = std::mem::take(&mut self.flight);
+        for f in flight {
+            let id = f.tracked.req.id;
+            if self.kv.table(id).is_some() {
+                let _ = self.kv.release(id);
+            }
+            self.finish_with_error(
+                f.tracked,
+                ErrorKind::Fatal,
+                reason.to_string(),
+            );
+        }
+        let mut ids: Vec<u64> = self.active.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let Some(a) = self.active.remove(&id) else { continue };
+            if self.kv.table(id).is_some() {
+                let _ = self.kv.release(id);
+            }
+            self.finish_with_error(
+                a.tracked,
+                ErrorKind::Fatal,
+                reason.to_string(),
+            );
+        }
+        self.publish_paging();
     }
 
     /// One scheduling iteration: run due prefill chunks *and* the due
     /// decode batch inside one token budget. Returns whether any work
     /// was done.
+    ///
+    /// Each call advances the engine's deterministic tick clock, which
+    /// drives request deadlines, retry backoff and the fault schedule
+    /// — iteration counts, never wall-clock time.
     pub fn step(&mut self) -> Result<bool> {
+        self.tick += 1;
+        self.expire_and_wake();
         let idle = self.active.is_empty() && self.flight.is_empty();
         let now = Instant::now();
         let chunk = self.effective_chunk();
@@ -378,6 +568,181 @@ impl Engine {
             self.run_decode()?
         };
         Ok(prefilled || decoded)
+    }
+
+    /// Top-of-iteration sweep: cancel queued and parked requests past
+    /// their deadlines (`Rejected`, one response each) and move
+    /// backed-off requests whose retry tick has come to the front of
+    /// their queues, oldest arrival frontmost.
+    fn expire_and_wake(&mut self) {
+        let tick = self.tick;
+        for t in self.queues.take_expired(tick) {
+            EngineMetrics::inc(&self.metrics.timeouts, 1);
+            self.finish_with_error(
+                t,
+                ErrorKind::Rejected,
+                "deadline exceeded while queued".into(),
+            );
+        }
+        if self.parked.is_empty() {
+            return;
+        }
+        let parked = std::mem::take(&mut self.parked);
+        let mut wake: Vec<Parked> = Vec::new();
+        for p in parked {
+            if p.tracked.deadline_at.is_some_and(|d| d < tick) {
+                EngineMetrics::inc(&self.metrics.timeouts, 1);
+                self.finish_with_error(
+                    p.tracked,
+                    ErrorKind::Rejected,
+                    "deadline exceeded during retry backoff".into(),
+                );
+            } else if p.ready <= tick {
+                wake.push(p);
+            } else {
+                self.parked.push(p);
+            }
+        }
+        // push_front in reverse age order leaves the oldest frontmost
+        wake.sort_by_key(|p| (p.tracked.arrived, p.tracked.req.id));
+        for p in wake.into_iter().rev() {
+            self.queues.push_front(p.key, p.tracked);
+        }
+    }
+
+    /// Consult the fault plan at `site` for the current tick, counting
+    /// and logging any injection that fires. A `Panic` injection
+    /// panics right here, exercising the [`Engine::run`] unwind
+    /// boundary.
+    fn fire(&mut self, site: FaultSite) -> Option<FaultKind> {
+        if self.faults.is_noop() {
+            return None; // the fault-free fast path
+        }
+        let kind = self.faults.fire(self.tick, site)?;
+        EngineMetrics::inc(&self.metrics.faults_injected, 1);
+        crate::warn_log!(
+            "injected fault at tick {}: {site:?} {kind:?}",
+            self.tick
+        );
+        if kind == FaultKind::Panic {
+            panic!("injected panic at tick {} ({site:?})", self.tick);
+        }
+        Some(kind)
+    }
+
+    /// Best-effort response delivery: a vanished client (dropped
+    /// receiver) is logged and skipped — never a panic, never a dead
+    /// serve loop. Consults the fault plan's `ReplySend` site first.
+    fn send_reply(
+        &mut self,
+        id: u64,
+        reply: &Sender<Response>,
+        resp: Response,
+    ) {
+        if self.fire(FaultSite::ReplySend).is_some() {
+            crate::warn_log!(
+                "request {id}: reply dropped by injected fault"
+            );
+            return;
+        }
+        if reply.send(resp).is_err() {
+            crate::warn_log!(
+                "request {id}: client disconnected; response dropped"
+            );
+        }
+    }
+
+    /// Terminal error reply: record latency metrics, count the
+    /// request completed (it will never be scheduled again) and send a
+    /// best-effort `Response` carrying `kind`, `reason` and any tokens
+    /// generated before the failure.
+    fn finish_with_error(
+        &mut self,
+        t: Tracked,
+        kind: ErrorKind,
+        reason: String,
+    ) {
+        let now = Instant::now();
+        let e2e = now.duration_since(t.arrived).as_secs_f64();
+        self.metrics.observe_e2e(e2e);
+        EngineMetrics::inc(&self.metrics.requests_completed, 1);
+        self.completed += 1;
+        let ttft = t
+            .first_token_at
+            .map(|f| f.duration_since(t.arrived).as_secs_f64())
+            .unwrap_or(0.0);
+        let id = t.req.id;
+        crate::debug_log!(
+            "request {id} failed ({}): {reason}",
+            kind.label()
+        );
+        let resp = Response {
+            id,
+            tokens: t.generated,
+            ttft_secs: ttft,
+            e2e_secs: e2e,
+            prefill_artifact: String::new(),
+            error: Some(RequestError { kind, reason }),
+        };
+        self.send_reply(id, &t.reply, resp);
+    }
+
+    /// Transient-failure path: release the request's KV, clear its
+    /// generated tokens and park it under tick-based exponential
+    /// backoff (base `retry_backoff_ticks`, doubling per retry, capped
+    /// at 64x) before it re-queues at the front of its bucket — the
+    /// same deterministic recompute-from-scratch machinery as
+    /// preemption, so a retried request is token-identical to an
+    /// undisturbed run. After `max_retries` failures it escalates to
+    /// `Fatal`.
+    fn fail_transient(&mut self, id: u64, reason: &str) -> Result<()> {
+        let mut t = if let Some(a) = self.active.remove(&id) {
+            a.tracked
+        } else if let Some(p) = self
+            .flight
+            .iter()
+            .position(|f| f.tracked.req.id == id)
+        {
+            self.flight.remove(p).tracked
+        } else {
+            bail!("transient failure of unknown request {id}");
+        };
+        if self.kv.table(id).is_some() {
+            self.kv.release(id)?;
+        }
+        self.publish_paging();
+        t.generated.clear();
+        t.retries += 1;
+        if t.retries > self.cfg.max_retries {
+            let n = t.retries - 1;
+            self.finish_with_error(
+                t,
+                ErrorKind::Fatal,
+                format!(
+                    "giving up after {n} transient failures: {reason}"
+                ),
+            );
+            return Ok(());
+        }
+        EngineMetrics::inc(&self.metrics.retries, 1);
+        let base = self.cfg.retry_backoff_ticks.max(1);
+        let backoff = base << (t.retries - 1).min(6);
+        crate::debug_log!(
+            "request {id}: transient failure ({reason}); retry {} in \
+             {backoff} tick(s)",
+            t.retries
+        );
+        let (prefill, _, _) = routing(
+            &self.cfg.model,
+            self.cfg.prefill_seq,
+            &t.req.config,
+        );
+        self.parked.push(Parked {
+            ready: self.tick + backoff,
+            key: ConfigKey(prefill),
+            tracked: t,
+        });
+        Ok(())
     }
 
     /// The serving chunk size: `cfg.chunk_tokens` rounded up to a
@@ -410,6 +775,18 @@ impl Engine {
         idle: bool,
         now: Instant,
     ) -> Result<bool> {
+        // fault hook: `Delay` stalls the whole prefill phase one tick;
+        // `Fail` makes this tick's batch execution (if any) error into
+        // the transient-retry path. Consulted only when prefill work
+        // could actually run.
+        let mut fail_exec = false;
+        if !self.flight.is_empty() || !self.queues.is_empty() {
+            match self.fire(FaultSite::PrefillChunk) {
+                Some(FaultKind::Delay) => return Ok(false),
+                Some(_) => fail_exec = true,
+                None => {}
+            }
+        }
         let seq_cap = self.cfg.prefill_seq;
         let mut blocks = self.block_budget();
         // prefix-cache nodes hold KV blocks; under pressure they yield
@@ -471,18 +848,42 @@ impl Engine {
         let mut built: Vec<BuiltChunk> = Vec::new();
         let mut reqs: Vec<PrefixedPrompt> = Vec::new();
         let mut toks = 0usize;
+        let mut cfg0: Option<SparsityConfig> = None;
         for id in member_ids {
-            if self.flight.iter().all(|f| f.tracked.req.id != id) {
+            let Some(fpos) = self
+                .flight
+                .iter()
+                .position(|f| f.tracked.req.id == id)
+            else {
                 continue; // preempted while reclaiming below
-            }
-            let (done0, clamped_len, arrived) = {
-                let f = self
-                    .flight
-                    .iter()
-                    .find(|f| f.tracked.req.id == id)
-                    .unwrap();
-                (f.done, f.clamped_len, f.tracked.arrived)
             };
+            let (done0, clamped_len, arrived, deadline_at, config) = {
+                let f = &self.flight[fpos];
+                (
+                    f.done,
+                    f.clamped_len,
+                    f.tracked.arrived,
+                    f.tracked.deadline_at,
+                    f.tracked.req.config,
+                )
+            };
+            // chunk-boundary deadline check: an expired request stops
+            // consuming prefill budget right here
+            if deadline_at.is_some_and(|d| d < self.tick) {
+                let f = self.flight.remove(fpos);
+                if self.kv.table(id).is_some() {
+                    let _ = self.kv.release(id);
+                }
+                self.publish_paging();
+                EngineMetrics::inc(&self.metrics.timeouts, 1);
+                self.finish_with_error(
+                    f.tracked,
+                    ErrorKind::Rejected,
+                    "deadline exceeded during chunked prefill".into(),
+                );
+                continue;
+            }
+            let prompt = self.flight[fpos].tracked.req.prompt.clone();
             let target = clamped_len.max(1);
             // worst-case length before the (possibly warm) lookup —
             // budget-cut here so nothing needs undoing on a break
@@ -494,12 +895,7 @@ impl Engine {
             let mut node = None;
             let mut cached = 0usize;
             if done0 == 0 && self.cfg.prefix_cache && clamped_len > 0 {
-                let f = self
-                    .flight
-                    .iter()
-                    .find(|f| f.tracked.req.id == id)
-                    .unwrap();
-                let clamped = &f.tracked.req.prompt[..clamped_len];
+                let clamped = &prompt[..clamped_len];
                 if let Some(hit) = self.prefix.lookup(clamped) {
                     // at least one suffix token always recomputes: the
                     // last prompt row must be live to sample from
@@ -573,14 +969,9 @@ impl Engine {
             } else {
                 (Vec::new(), Vec::new())
             };
-            let f = self
-                .flight
-                .iter()
-                .find(|f| f.tracked.req.id == id)
-                .unwrap();
             let upto = (cached_now + len).min(clamped_len);
             reqs.push(PrefixedPrompt {
-                tokens: f.tracked.req.prompt[..upto].to_vec(),
+                tokens: prompt[..upto].to_vec(),
                 cached_len: cached_now,
                 prefix_k: pk,
                 prefix_v: pv,
@@ -592,6 +983,9 @@ impl Engine {
                 node,
                 first: done0 == 0,
             });
+            if cfg0.is_none() {
+                cfg0 = Some(config);
+            }
             toks += len;
         }
         if built.is_empty() {
@@ -604,14 +998,7 @@ impl Engine {
         // byte-for-byte the route a chunking- and prefix-cache-disabled
         // engine takes.
         let artifact = key.0.clone();
-        let cfg0 = self
-            .flight
-            .iter()
-            .find(|f| f.tracked.req.id == built[0].id)
-            .unwrap()
-            .tracked
-            .req
-            .config;
+        let Some(cfg0) = cfg0 else { return Ok(false) };
         let (_, decode_artifact, files) =
             routing(&self.cfg.model, seq_cap, &cfg0);
         let file_refs: Vec<&str> =
@@ -623,13 +1010,38 @@ impl Engine {
         // cached quantization) happens; refresh the prep gauges
         self.publish_prep();
         let any_warm = built.iter().any(|b| b.cached_now > 0);
-        let out = if any_warm {
-            self.rt
-                .prefill_packed_prefixed(&artifact, &binding, &reqs)?
+        let ran = if fail_exec {
+            Err(anyhow::anyhow!(
+                "injected prefill failure at tick {}",
+                self.tick
+            ))
+        } else if any_warm {
+            self.rt.prefill_packed_prefixed(&artifact, &binding, &reqs)
         } else {
             let prompts: Vec<Vec<i32>> =
                 reqs.into_iter().map(|r| r.tokens).collect();
-            self.rt.prefill_packed(&artifact, &binding, &prompts)?
+            self.rt.prefill_packed(&artifact, &binding, &prompts)
+        };
+        let out = match ran {
+            Ok(out) => out,
+            Err(e) => {
+                // a failed batch fails *transiently*: every member
+                // releases its KV (forked prefixes included), unpins
+                // its donor node and parks for a backed-off retry —
+                // the loop keeps serving everyone else
+                let msg = format!("prefill batch failed: {e}");
+                for b in &built {
+                    if let Some(n) = b.node {
+                        self.prefix.unpin(n);
+                    }
+                }
+                let ids: Vec<u64> =
+                    built.iter().map(|b| b.id).collect();
+                for id in ids {
+                    self.fail_transient(id, &msg)?;
+                }
+                return Ok(true);
+            }
         };
         let total = out.total_tokens();
         EngineMetrics::inc(&self.metrics.prefill_tokens, total as u64);
@@ -649,9 +1061,27 @@ impl Engine {
         // request in flight (more chunks to come) or graduate it to
         // decode with its first sampled token.
         let now = Instant::now();
+        // the KvAlloc fault site: prefill staging consults it first
+        // (decode capacity assurance gets it only on ticks where no
+        // chunk stages); at most one member's allocation fails
+        let mut kv_fault = self.fire(FaultSite::KvAlloc);
         let mut start = 0usize; // packed row offset of chunk i
         for (i, b) in built.iter().enumerate() {
             let len = out.lens[i];
+            if kv_fault.take().is_some() {
+                // injected allocation failure: this member's staging
+                // fails before touching the store — transient retry,
+                // everyone else in the batch stages normally
+                if let Some(n) = b.node {
+                    self.prefix.unpin(n);
+                }
+                self.fail_transient(
+                    b.id,
+                    "injected KV allocation failure",
+                )?;
+                start += len;
+                continue;
+            }
             let staged = if !b.first {
                 self.kv.extend_packed(
                     b.id,
@@ -710,11 +1140,17 @@ impl Engine {
             if let Some(n) = b.node {
                 self.prefix.unpin(n);
             }
-            let fpos = self
+            let Some(fpos) = self
                 .flight
                 .iter()
                 .position(|f| f.tracked.req.id == b.id)
-                .unwrap();
+            else {
+                crate::warn_log!(
+                    "request {}: vanished from flight mid-stage",
+                    b.id
+                );
+                continue;
+            };
             let done_after = b.cached_now + len;
             self.flight[fpos].done = done_after;
             if done_after < self.flight[fpos].clamped_len.max(1) {
@@ -762,8 +1198,9 @@ impl Engine {
         Ok(true)
     }
 
-    /// Fail one admitted request alone (unservable chunk), replying
-    /// with whatever was generated so far.
+    /// Fail one admitted request alone (unservable chunk — e.g. a
+    /// demand exceeding the whole block pool) with a `Rejected`
+    /// response; the serve loop and the rest of the batch continue.
     fn reject_flight(&mut self, id: u64, err: &str) -> Result<()> {
         crate::warn_log!("request {id} rejected by KV admission: {err}");
         let Some(p) = self
@@ -777,20 +1214,11 @@ impl Engine {
         if self.kv.table(id).is_some() {
             let _ = self.kv.release(id);
         }
-        let t = f.tracked;
-        let e2e = Instant::now()
-            .duration_since(t.arrived)
-            .as_secs_f64();
-        self.metrics.observe_e2e(e2e);
-        EngineMetrics::inc(&self.metrics.requests_completed, 1);
-        self.completed += 1;
-        let _ = t.reply.send(Response {
-            id,
-            tokens: t.generated,
-            ttft_secs: e2e,
-            e2e_secs: e2e,
-            prefill_artifact: String::new(),
-        });
+        self.finish_with_error(
+            f.tracked,
+            ErrorKind::Rejected,
+            format!("KV admission rejected the request: {err}"),
+        );
         self.publish_paging();
         Ok(())
     }
@@ -885,6 +1313,44 @@ impl Engine {
     }
 
     fn run_decode(&mut self) -> Result<bool> {
+        // decode-turn deadline sweep: an expired sequence answers now
+        // with whatever it generated (partial tokens, `Rejected`) and
+        // releases its blocks before this tick's batch forms
+        let mut expired: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|(_, a)| {
+                a.tracked.deadline_at.is_some_and(|d| d < self.tick)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        expired.sort_unstable();
+        let any_expired = !expired.is_empty();
+        for id in expired {
+            let Some(a) = self.active.remove(&id) else { continue };
+            if self.kv.table(id).is_some() {
+                let _ = self.kv.release(id);
+            }
+            self.publish_paging();
+            EngineMetrics::inc(&self.metrics.timeouts, 1);
+            self.finish_with_error(
+                a.tracked,
+                ErrorKind::Rejected,
+                "deadline exceeded during decode".into(),
+            );
+        }
+        if self.active.is_empty() {
+            return Ok(any_expired);
+        }
+        // fault hook: `Delay` stalls this tick's decode batch one
+        // iteration; `Fail` errors the batch execution below into the
+        // transient-retry path
+        let mut fail_exec = false;
+        match self.fire(FaultSite::DecodeStep) {
+            Some(FaultKind::Delay) => return Ok(any_expired),
+            Some(_) => fail_exec = true,
+            None => {}
+        }
         // group by decode artifact (fp vs sq); BTreeMap so group order
         // is deterministic (HashMap iteration varies run to run, and
         // W8A8 logits depend on batch composition), and a round-robin
@@ -946,9 +1412,19 @@ impl Engine {
             (self.active[id].tracked.arrived, *id)
         });
         let mut assured: Vec<u64> = Vec::new();
+        // the KvAlloc fault site (when prefill staging left it unfired
+        // this tick): one sequence's capacity assurance fails
+        let mut kv_fault = self.fire(FaultSite::KvAlloc);
         for id in ids {
             if !self.active.contains_key(&id) {
                 continue; // preempted while reclaiming for an older one
+            }
+            if kv_fault.take().is_some() {
+                self.fail_transient(
+                    id,
+                    "injected KV allocation failure",
+                )?;
+                continue;
             }
             let len = self
                 .kv
@@ -998,12 +1474,32 @@ impl Engine {
             kv_len[row] = (len + 1) as i32;
             rows[row] = Some(*id);
         }
-        // split the borrows: the backend runs over the paged KV view
-        let rt = &mut self.rt;
-        let mut view = self.kv.view(&rows);
-        let out = rt.decode_paged(
-            &artifact, &binding, &token, &pos, &mut view, &kv_len,
-        )?;
+        let ran = if fail_exec {
+            Err(anyhow::anyhow!(
+                "injected decode failure at tick {}",
+                self.tick
+            ))
+        } else {
+            // split the borrows: the backend runs over the paged view
+            let rt = &mut self.rt;
+            let mut view = self.kv.view(&rows);
+            rt.decode_paged(
+                &artifact, &binding, &token, &pos, &mut view, &kv_len,
+            )
+        };
+        let out = match ran {
+            Ok(out) => out,
+            Err(e) => {
+                // transient batch failure: nothing advanced (KV valid
+                // lengths only bump on success below), so every
+                // stepped sequence releases and parks for a retry
+                let msg = format!("decode batch failed: {e}");
+                for id in ids {
+                    self.fail_transient(id, &msg)?;
+                }
+                return Ok(true);
+            }
+        };
         EngineMetrics::inc(&self.metrics.decode_batches, 1);
         EngineMetrics::inc(&self.metrics.decode_tokens, ids.len() as u64);
         // the engine wrote each stepped sequence's K/V in place through
@@ -1013,7 +1509,7 @@ impl Engine {
         }
         let now = Instant::now();
         for (row, id) in ids.iter().enumerate() {
-            let a = self.active.get_mut(id).unwrap();
+            let Some(a) = self.active.get_mut(id) else { continue };
             let r = &out.logits[row * out.vocab..(row + 1) * out.vocab];
             let next = argmax(r) as i32;
             a.last_token = next;
@@ -1027,12 +1523,10 @@ impl Engine {
     }
 
     fn maybe_complete(&mut self, id: u64) -> Result<()> {
-        let done = {
-            let a = &self.active[&id];
-            let g = &a.tracked.generated;
-            g.len() >= a.tracked.req.max_new_tokens
-                || g.last() == Some(&EOS)
-        };
+        let Some(a) = self.active.get(&id) else { return Ok(()) };
+        let g = &a.tracked.generated;
+        let done = g.len() >= a.tracked.req.max_new_tokens
+            || g.last() == Some(&EOS);
         if !done {
             return Ok(());
         }
@@ -1040,9 +1534,11 @@ impl Engine {
     }
 
     /// Finish a sequence unconditionally: release its KV blocks, record
-    /// metrics and send the response.
+    /// metrics and send the (successful, `error: None`) response.
     fn complete(&mut self, id: u64) -> Result<()> {
-        let a = self.active.remove(&id).unwrap();
+        let Some(a) = self.active.remove(&id) else {
+            return Ok(());
+        };
         self.kv.release(id)?;
         self.publish_paging();
         let now = Instant::now();
@@ -1055,13 +1551,16 @@ impl Engine {
             .first_token_at
             .map(|t| t.duration_since(a.tracked.arrived).as_secs_f64())
             .unwrap_or(0.0);
-        let _ = a.tracked.reply.send(Response {
+        let t = a.tracked;
+        let resp = Response {
             id,
-            tokens: a.tracked.generated,
+            tokens: t.generated,
             ttft_secs: ttft,
             e2e_secs: e2e,
             prefill_artifact: String::new(),
-        });
+            error: None,
+        };
+        self.send_reply(id, &t.reply, resp);
         Ok(())
     }
 
@@ -1149,6 +1648,23 @@ impl Engine {
         self.queues.waiting()
     }
 
+    /// Transiently-failed requests waiting out their retry backoff.
+    pub fn parked_requests(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Engine iterations stepped so far — the deterministic tick clock
+    /// behind deadlines, retry backoff and fault schedules.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// The fault plan being consumed (fired / pending accounting for
+    /// chaos tests).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
     /// `(free, total)` blocks in the paged KV pool.
     pub fn kv_blocks(&self) -> (usize, usize) {
         (self.kv.free_blocks(), self.kv.n_blocks())
@@ -1163,5 +1679,17 @@ impl Engine {
     /// Sparsity accounting from the backend, if it tracks any.
     pub fn audit(&self) -> Option<SparsityAudit> {
         self.rt.audit()
+    }
+}
+
+/// Best-effort text of a caught panic payload (`&str` and `String`
+/// payloads cover `panic!` in practice; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }

@@ -158,6 +158,14 @@ fn serve(args: &Args) -> Result<()> {
     let mut ecfg = EngineConfig::new(&scfg.model);
     ecfg.prefill_seq = scfg.prefill_seq;
     ecfg.max_wait_secs = scfg.max_wait_ms / 1e3;
+    ecfg.max_retries = scfg.max_retries;
+    if scfg.degrade_at > 0 || scfg.shed_at > 0 {
+        ecfg.degrade_policy =
+            Some(amber_pruner::coordinator::scheduler::DegradePolicy {
+                degrade_at: scfg.degrade_at,
+                shed_at: scfg.shed_at,
+            });
+    }
     let mut engine = Engine::new(rt, ecfg, Arc::clone(&metrics))?;
     let (tx, rx) = channel::<EngineMsg>();
     let (bound, _h) = tcp::serve(&scfg.addr, tx, Arc::clone(&metrics))?;

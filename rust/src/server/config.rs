@@ -29,6 +29,15 @@ pub struct ServeConfig {
     pub max_queue: usize,
     /// clamp per-request generation budgets to this many tokens
     pub max_new_tokens_cap: usize,
+    /// queued-prompt-token backlog past which new requests degrade one
+    /// N:M rung (0 = never degrade, the default)
+    pub degrade_at: usize,
+    /// queued-prompt-token backlog past which new requests are shed
+    /// with a `rejected` response (0 = never shed, the default)
+    pub shed_at: usize,
+    /// transient failures tolerated per request before a `fatal`
+    /// response
+    pub max_retries: u32,
 }
 
 impl Default for ServeConfig {
@@ -42,6 +51,9 @@ impl Default for ServeConfig {
             default_sparsity: SparsityConfig::dense(),
             max_queue: 1024,
             max_new_tokens_cap: 64,
+            degrade_at: 0,
+            shed_at: 0,
+            max_retries: 3,
         }
     }
 }
@@ -80,6 +92,10 @@ impl ServeConfig {
             max_queue: get_u("max_queue", d.max_queue),
             max_new_tokens_cap: get_u("max_new_tokens_cap",
                                       d.max_new_tokens_cap),
+            degrade_at: get_u("degrade_at", d.degrade_at),
+            shed_at: get_u("shed_at", d.shed_at),
+            max_retries: get_u("max_retries", d.max_retries as usize)
+                as u32,
         })
     }
 
@@ -123,5 +139,20 @@ mod tests {
         let c = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(c.model, "tiny-lm-a");
         assert_eq!(c.max_queue, 1024);
+        assert_eq!(c.degrade_at, 0, "overload control off by default");
+        assert_eq!(c.shed_at, 0);
+        assert_eq!(c.max_retries, 3);
+    }
+
+    #[test]
+    fn parses_overload_knobs() {
+        let j = Json::parse(
+            r#"{"degrade_at": 512, "shed_at": 2048, "max_retries": 5}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.degrade_at, 512);
+        assert_eq!(c.shed_at, 2048);
+        assert_eq!(c.max_retries, 5);
     }
 }

@@ -2,12 +2,22 @@
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"id": 1, "prompt": [1, 84, 91], "max_new_tokens": 8,
-//!       "sparsity": "8:16:ls"}
+//!       "sparsity": "8:16:ls", "deadline_ticks": 50}
 //!   <- {"id": 1, "tokens": [93, 2], "ttft_ms": 3.1, "e2e_ms": 9.0}
+//!   <- {"id": 1, "tokens": [], ..., "error": "...", "kind":
+//!      "rejected"}   (failed requests; `kind` in
+//!      transient|fatal|rejected)
 //!   -> {"cmd": "stats"}            <- {"requests": ...}
 //!   -> {"cmd": "quit"}             (closes the connection)
+//!
+//! The front-end is hardened against hostile or broken clients: input
+//! lines are bounded at [`MAX_LINE_BYTES`] (oversized lines are
+//! answered with a structured error and the stream resyncs at the next
+//! newline), malformed JSON fails the *line* with an error reply — not
+//! the connection, and a connection's IO error kills only its own
+//! thread — the acceptor and every other connection keep serving.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -19,6 +29,11 @@ use crate::coordinator::request::{Request, Response, SparsityConfig};
 use crate::coordinator::scheduler::EngineMsg;
 use crate::metrics::EngineMetrics;
 use crate::util::json::{self, Json};
+
+/// Upper bound on one protocol line. A line past the cap is rejected
+/// with a structured error and the stream resyncs at the next newline;
+/// memory per connection stays bounded no matter what the peer sends.
+pub const MAX_LINE_BYTES: usize = 256 * 1024;
 
 /// Parse one request line of the wire protocol (module docs) into a
 /// coordinator [`Request`].
@@ -43,12 +58,25 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .map(|s| SparsityConfig::parse(s))
         .unwrap_or(Some(SparsityConfig::dense()))
         .context("bad sparsity config")?;
-    Ok(Request { id, prompt, max_new_tokens: max_new, config: cfg })
+    let deadline_ticks = j
+        .get("deadline_ticks")
+        .and_then(|v| v.as_f64())
+        .map(|v| v.max(0.0) as u64)
+        .unwrap_or(0);
+    Ok(Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        config: cfg,
+        deadline_ticks,
+    })
 }
 
 /// Serialize a coordinator [`Response`] as one wire-protocol line.
+/// Failed requests carry `error` (the reason) and `kind`
+/// (`transient|fatal|rejected`) alongside any partial tokens.
 pub fn response_json(r: &Response) -> String {
-    json::obj(vec![
+    let mut pairs = vec![
         ("id", json::num(r.id as f64)),
         (
             "tokens",
@@ -56,8 +84,19 @@ pub fn response_json(r: &Response) -> String {
         ),
         ("ttft_ms", json::num(r.ttft_secs * 1e3)),
         ("e2e_ms", json::num(r.e2e_secs * 1e3)),
-    ])
-    .to_string()
+    ];
+    if let Some(err) = &r.error {
+        pairs.push(("error", json::s(&err.reason)));
+        pairs.push(("kind", json::s(err.kind.label())));
+    }
+    json::obj(pairs).to_string()
+}
+
+/// One wire-protocol error line (same shape as a failed [`Response`]'s
+/// error fields, minus the request echo).
+fn error_json(kind: &str, msg: &str) -> String {
+    json::obj(vec![("error", json::s(msg)), ("kind", json::s(kind))])
+        .to_string()
 }
 
 fn handle_conn(
@@ -67,13 +106,64 @@ fn handle_conn(
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        // bounded read: at most MAX_LINE_BYTES + 1, so a missing
+        // newline can never grow the buffer without limit
+        let n = match (&mut reader)
+            .take((MAX_LINE_BYTES + 1) as u64)
+            .read_until(b'\n', &mut buf)
+        {
+            Ok(0) => break, // EOF: client closed cleanly
+            Ok(n) => n,
+            Err(e) => {
+                // this connection is broken; the listener survives
+                log::trace(&format!("connection {peer} read error: {e}"));
+                break;
+            }
+        };
+        if n > MAX_LINE_BYTES {
+            // discard the rest of the jumbo line, then answer and
+            // resync at the next newline
+            while buf.last() != Some(&b'\n') {
+                buf.clear();
+                match (&mut reader)
+                    .take(MAX_LINE_BYTES as u64)
+                    .read_until(b'\n', &mut buf)
+                {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+            writeln!(
+                writer,
+                "{}",
+                error_json(
+                    "rejected",
+                    &format!("line exceeds {MAX_LINE_BYTES} bytes"),
+                )
+            )?;
             continue;
         }
-        let j = Json::parse(&line)?;
+        let text = String::from_utf8_lossy(&buf);
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        // malformed JSON fails this LINE, never the connection
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    error_json("rejected", &format!("malformed JSON: {e}"))
+                )?;
+                continue;
+            }
+        };
         if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
             match cmd {
                 "quit" => break,
@@ -84,25 +174,53 @@ fn handle_conn(
                 other => {
                     writeln!(
                         writer,
-                        "{{\"error\":\"unknown cmd {other}\"}}"
+                        "{}",
+                        error_json(
+                            "rejected",
+                            &format!("unknown cmd {other}"),
+                        )
                     )?;
                     continue;
                 }
             }
         }
-        match parse_request(&line) {
+        match parse_request(line) {
             Ok(req) => {
                 let (tx, rx) = channel();
-                engine_tx
-                    .send(EngineMsg::Submit(req, tx))
-                    .map_err(|_| anyhow::anyhow!("engine gone"))?;
+                if engine_tx.send(EngineMsg::Submit(req, tx)).is_err() {
+                    writeln!(
+                        writer,
+                        "{}",
+                        error_json("fatal", "engine unavailable")
+                    )?;
+                    break;
+                }
                 // synchronous per-connection semantics: wait for this
-                // request (pipelining across connections, not within one)
-                let resp = rx.recv()?;
-                writeln!(writer, "{}", response_json(&resp))?;
+                // request (pipelining across connections, not within
+                // one). A dropped reply (engine fault path) answers
+                // the client rather than hanging it.
+                match rx.recv() {
+                    Ok(resp) => {
+                        writeln!(writer, "{}", response_json(&resp))?
+                    }
+                    Err(_) => {
+                        writeln!(
+                            writer,
+                            "{}",
+                            error_json(
+                                "fatal",
+                                "engine dropped the request",
+                            )
+                        )?;
+                    }
+                }
             }
             Err(e) => {
-                writeln!(writer, "{{\"error\":{:?}}}", e.to_string())?;
+                writeln!(
+                    writer,
+                    "{}",
+                    error_json("rejected", &e.to_string())
+                )?;
             }
         }
     }
@@ -165,18 +283,20 @@ pub fn serve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::error::{ErrorKind, RequestError};
 
     #[test]
     fn parse_request_full() {
         let r = parse_request(
             r#"{"id": 3, "prompt": [1, 2, 3], "max_new_tokens": 5,
-                "sparsity": "4:8:ls"}"#,
+                "sparsity": "4:8:ls", "deadline_ticks": 40}"#,
         )
         .unwrap();
         assert_eq!(r.id, 3);
         assert_eq!(r.prompt, vec![1, 2, 3]);
         assert_eq!(r.max_new_tokens, 5);
         assert_eq!(r.config.nm, Some((4, 8)));
+        assert_eq!(r.deadline_ticks, 40);
     }
 
     #[test]
@@ -184,6 +304,7 @@ mod tests {
         let r = parse_request(r#"{"id": 1, "prompt": [1]}"#).unwrap();
         assert!(r.config.nm.is_none());
         assert_eq!(r.max_new_tokens, 8);
+        assert_eq!(r.deadline_ticks, 0, "no deadline by default");
     }
 
     #[test]
@@ -200,9 +321,126 @@ mod tests {
             ttft_secs: 0.001,
             e2e_secs: 0.002,
             prefill_artifact: String::new(),
+            error: None,
         };
         let j = Json::parse(&response_json(&r)).unwrap();
         assert_eq!(j.req_usize("id").unwrap(), 9);
         assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("error").is_none(), "success carries no error");
+    }
+
+    #[test]
+    fn response_json_carries_error_fields() {
+        let r = Response {
+            id: 4,
+            tokens: vec![1],
+            ttft_secs: 0.0,
+            e2e_secs: 0.0,
+            prefill_artifact: String::new(),
+            error: Some(RequestError {
+                kind: ErrorKind::Rejected,
+                reason: "overloaded".into(),
+            }),
+        };
+        let j = Json::parse(&response_json(&r)).unwrap();
+        assert_eq!(
+            j.get("kind").and_then(|k| k.as_str()),
+            Some("rejected")
+        );
+        assert_eq!(
+            j.get("error").and_then(|e| e.as_str()),
+            Some("overloaded")
+        );
+        assert_eq!(
+            j.req("tokens").unwrap().as_arr().unwrap().len(),
+            1,
+            "partial tokens ride along"
+        );
+    }
+
+    /// A stand-in engine thread answering every submit with a canned
+    /// two-token success.
+    fn fake_engine() -> Sender<EngineMsg> {
+        let (tx, rx) = channel::<EngineMsg>();
+        thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                if let EngineMsg::Submit(req, reply) = msg {
+                    let _ = reply.send(Response {
+                        id: req.id,
+                        tokens: vec![7, 2],
+                        ttft_secs: 0.0,
+                        e2e_secs: 0.0,
+                        prefill_artifact: String::new(),
+                        error: None,
+                    });
+                }
+            }
+        });
+        tx
+    }
+
+    #[test]
+    fn malformed_lines_do_not_kill_the_connection() {
+        let (addr, _h) = serve(
+            "127.0.0.1:0",
+            fake_engine(),
+            Arc::new(EngineMetrics::new()),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "this is not json").unwrap();
+        writeln!(s, r#"{{"id": 1, "prompt": [1, 2]}}"#).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.get("kind").and_then(|k| k.as_str()),
+            Some("rejected"),
+            "malformed line answers a structured error"
+        );
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.req_usize("id").unwrap(),
+            1,
+            "the connection survives and serves the next request"
+        );
+    }
+
+    #[test]
+    fn oversized_lines_reject_then_resync() {
+        let (addr, _h) = serve(
+            "127.0.0.1:0",
+            fake_engine(),
+            Arc::new(EngineMetrics::new()),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let jumbo = vec![b'x'; MAX_LINE_BYTES + 64];
+        s.write_all(&jumbo).unwrap();
+        s.write_all(b"\n").unwrap();
+        writeln!(s, r#"{{"id": 2, "prompt": [3]}}"#).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.get("kind").and_then(|k| k.as_str()),
+            Some("rejected")
+        );
+        assert!(j
+            .get("error")
+            .and_then(|e| e.as_str())
+            .is_some_and(|e| e.contains("exceeds")));
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.req_usize("id").unwrap(),
+            2,
+            "the stream resyncs at the newline"
+        );
     }
 }

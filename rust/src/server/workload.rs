@@ -66,6 +66,18 @@ pub struct WorkloadSpec {
     /// `max_new_tokens ..= max_new_tokens_hi` (0 = every request uses
     /// `max_new_tokens`, the default)
     pub max_new_tokens_hi: usize,
+    /// burst arrivals: requests land in same-instant groups of this
+    /// size (a `rate` gap separates groups when set; 0 or 1 = no
+    /// bursting, the default). The overload workload: a burst's worth
+    /// of prompt tokens hits admission at once.
+    pub burst_size: usize,
+    /// tick deadline given to a `deadline_frac` share of requests
+    /// (0 = no deadlines, the default)
+    pub deadline_ticks: u64,
+    /// fraction of requests carrying `deadline_ticks` (the rest run
+    /// without a deadline); only drawn when `deadline_ticks > 0`, so
+    /// specs predating the knob keep their exact request streams
+    pub deadline_frac: f64,
 }
 
 impl WorkloadSpec {
@@ -83,6 +95,9 @@ impl WorkloadSpec {
             tenant_prefix_len: 0,
             tail_alpha: 0.0,
             max_new_tokens_hi: 0,
+            burst_size: 0,
+            deadline_ticks: 0,
+            deadline_frac: 0.0,
         }
     }
 
@@ -104,6 +119,9 @@ impl WorkloadSpec {
             tenants: 0,
             tenant_prefix_len: 0,
             tail_alpha: 1.2,
+            burst_size: 0,
+            deadline_ticks: 0,
+            deadline_frac: 0.0,
         }
     }
 
@@ -120,6 +138,23 @@ impl WorkloadSpec {
         spec.prompt_len_hi = spec.prompt_len_hi.max(prefix_len + 16);
         spec.tenants = tenants;
         spec.tenant_prefix_len = prefix_len;
+        spec
+    }
+
+    /// `n` requests arriving in same-instant bursts of `burst`, half
+    /// of them carrying a `deadline`-tick budget — the overload
+    /// workload: a burst's worth of prompt tokens hits admission at
+    /// once, driving the degrade/shed watermarks and deadline sweeps
+    /// ([`crate::coordinator::scheduler::DegradePolicy`]).
+    pub fn bursty_deadlines(
+        n: usize,
+        burst: usize,
+        deadline: u64,
+    ) -> WorkloadSpec {
+        let mut spec = WorkloadSpec::uniform_dense(n);
+        spec.burst_size = burst;
+        spec.deadline_ticks = deadline;
+        spec.deadline_frac = 0.5;
         spec
     }
 }
@@ -230,9 +265,23 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
         } else {
             spec.max_new_tokens
         };
-        if spec.rate > 0.0 {
+        // burst mode groups arrivals: only a burst head draws an
+        // arrival gap, so a whole burst lands at the same instant.
+        // burst_size <= 1 reduces to the old per-request draw exactly.
+        if spec.rate > 0.0
+            && (spec.burst_size <= 1 || id % spec.burst_size == 0)
+        {
             t += rng.exp(spec.rate);
         }
+        // only drawn when the knob is set, so specs predating it keep
+        // their exact request streams
+        let deadline_ticks = if spec.deadline_ticks > 0
+            && rng.f64() < spec.deadline_frac
+        {
+            spec.deadline_ticks
+        } else {
+            0
+        };
         // tenant mode: the tenant's fixed prefix + a per-request
         // grammar-word suffix (always >= 1 suffix token, so every
         // prompt diverges from its shared prefix)
@@ -256,6 +305,7 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
                 prompt,
                 max_new_tokens: max_new,
                 config,
+                deadline_ticks,
             },
         });
     }
@@ -343,6 +393,60 @@ mod tests {
         for (a, b) in reqs.iter().zip(again.iter()) {
             assert_eq!(a.req.prompt, b.req.prompt);
             assert_eq!(a.req.max_new_tokens, b.req.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn bursty_deadlines_groups_arrivals_and_mixes_deadlines() {
+        let mut spec = WorkloadSpec::bursty_deadlines(40, 8, 12);
+        spec.rate = 50.0; // gaps between bursts, none within
+        let reqs = generate(&spec);
+        assert_eq!(reqs.len(), 40);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(
+                r.at,
+                reqs[i - i % 8].at,
+                "request {i} must share its burst head's arrival"
+            );
+        }
+        assert!(
+            reqs[0].at < reqs[8].at,
+            "distinct bursts must be separated in time"
+        );
+        let with = reqs
+            .iter()
+            .filter(|r| r.req.deadline_ticks == 12)
+            .count();
+        let without = reqs
+            .iter()
+            .filter(|r| r.req.deadline_ticks == 0)
+            .count();
+        assert_eq!(with + without, 40, "deadline is 12 or absent");
+        assert!(with >= 8, "deadline share too low: {with}/40");
+        assert!(without >= 8, "deadline share too high: {with}/40");
+        // deterministic
+        let again = generate(&spec);
+        for (a, b) in reqs.iter().zip(again.iter()) {
+            assert_eq!(a.req.deadline_ticks, b.req.deadline_ticks);
+            assert_eq!(a.at, b.at);
+        }
+    }
+
+    #[test]
+    fn legacy_specs_draw_identical_streams() {
+        // the burst/deadline knobs must not disturb the RNG stream of
+        // a spec that leaves them at their defaults
+        let mut spec = WorkloadSpec::uniform_dense(30);
+        spec.rate = 80.0;
+        let a = generate(&spec);
+        let mut again = spec.clone();
+        again.burst_size = 0;
+        again.deadline_ticks = 0;
+        let b = generate(&again);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.req.deadline_ticks, 0);
         }
     }
 

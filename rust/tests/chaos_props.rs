@@ -1,0 +1,428 @@
+//! Chaos suite (ISSUE 9): drive the serving engine through >= 100
+//! seeded fault schedules — injected prefill/decode failures, delays,
+//! KV-allocation failures and dropped replies — layered over random
+//! workload mixes, tiny block pools, chunked prefill, prefix caching
+//! and tick deadlines, and check the fault-tolerance contract: every
+//! request gets exactly one response (minus replies deliberately
+//! dropped by injection), no KV blocks leak, the loop never livelocks,
+//! and every *successful* response is token-identical to an
+//! undisturbed fault-free reference — retries recompute from scratch,
+//! so a survived fault is invisible to the client. Deterministic
+//! companions pin the no-op guarantee of a plan that never fires, the
+//! exactly-one-drop accounting of a `ReplySend` injection, and the
+//! panic-to-`Fatal` conversion at the `Engine::run` unwind boundary.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use amber_pruner::coordinator::error::ErrorKind;
+use amber_pruner::coordinator::fault::{
+    FaultKind, FaultPlan, FaultSite, ALL_SITES,
+};
+use amber_pruner::coordinator::request::{Request, SparsityConfig};
+use amber_pruner::coordinator::scheduler::{
+    Engine, EngineConfig, EngineMsg,
+};
+use amber_pruner::metrics::EngineMetrics;
+use amber_pruner::runtime::NativeEngine;
+use amber_pruner::testutil::prop::{prop_check, Gen};
+use amber_pruner::util::rng::Rng;
+
+const MODEL: &str = "tiny-lm-a";
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| 1 + rng.below(300) as i32).collect()
+}
+
+fn mk_engine(
+    cfg: EngineConfig,
+    metrics: &Arc<EngineMetrics>,
+) -> Engine {
+    Engine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(metrics),
+    )
+    .unwrap()
+}
+
+/// Fault-free, deadline-free reference: one-shot prefill, ample pool,
+/// no prefix cache. Successful responses under any fault schedule must
+/// match this bitwise.
+fn serve_reference(reqs: &[Request]) -> HashMap<u64, Vec<i32>> {
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    for r in reqs {
+        engine.submit(r.clone(), reply_tx.clone());
+    }
+    while engine.step().unwrap() {}
+    drop(reply_tx);
+    engine.kv_invariants().unwrap();
+    reply_rx.try_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// The headline chaos property: >= 100 seeded fault schedules over
+/// randomized workloads, pools, chunk sizes and deadlines. Checks
+/// exactly-one-response accounting, token parity of successful
+/// responses against the fault-free reference, no block leaks, no
+/// over-allocation and no livelock; the suite as a whole must actually
+/// fire faults, retry transients and cancel deadlines (non-vacuity).
+#[test]
+fn seeded_fault_schedules_never_leak_lose_or_livelock() {
+    let total_fired = AtomicU64::new(0);
+    let total_retries = AtomicU64::new(0);
+    let total_timeouts = AtomicU64::new(0);
+    prop_check("chaos", 110, |rng, size| {
+        let n = 3 + size / 4; // 3..=10 requests
+        let mut reqs: Vec<Request> = Vec::new();
+        for id in 0..n {
+            let len = 1 + rng.usize_below(48);
+            reqs.push(Request {
+                id: id as u64,
+                prompt: prompt(rng, len),
+                max_new_tokens: 1 + rng.usize_below(5),
+                config: SparsityConfig::parse(*Gen::choice(
+                    rng,
+                    &["dense", "2:4:ls"],
+                ))
+                .unwrap(),
+                // ~30% run under a tight tick deadline (1..=6); the
+                // rest are patient
+                deadline_ticks: if rng.bool(0.3) {
+                    1 + rng.below(6)
+                } else {
+                    0
+                },
+            });
+        }
+        // the reference run strips deadlines: it pins what the tokens
+        // *would* be, and only error-free chaos responses compare
+        let patient: Vec<Request> = reqs
+            .iter()
+            .map(|r| Request {
+                deadline_ticks: 0,
+                ..r.clone()
+            })
+            .collect();
+        let golden = serve_reference(&patient);
+        if golden.len() != n {
+            return Err(format!(
+                "reference run lost requests: {} of {n}",
+                golden.len()
+            ));
+        }
+
+        let metrics = Arc::new(EngineMetrics::new());
+        let mut cfg = EngineConfig::new(MODEL);
+        cfg.pool_threads = 1;
+        cfg.max_wait_secs = 0.0;
+        cfg.kv_pool_blocks = 6 + rng.usize_below(7);
+        cfg.chunk_tokens =
+            *Gen::choice(rng, &[16usize, 32, usize::MAX]);
+        cfg.prefix_cache = rng.bool(0.5);
+        cfg.fault_plan = FaultPlan::seeded(
+            rng.below(u64::MAX),
+            1 + rng.usize_below(6),
+            1 + rng.below(25),
+        );
+        let mut engine = mk_engine(cfg, &metrics);
+        let (reply_tx, reply_rx) = channel();
+
+        let mut next = reqs.iter();
+        let mut submitted = 0usize;
+        while submitted < n {
+            if rng.bool(0.6) {
+                engine
+                    .submit(next.next().unwrap().clone(), reply_tx.clone());
+                submitted += 1;
+            } else {
+                engine.step().map_err(|e| format!("step: {e}"))?;
+                engine
+                    .kv_invariants()
+                    .map_err(|e| format!("kv invariants mid-run: {e}"))?;
+            }
+        }
+        // drain; retry backoff legitimately idles for stretches, so
+        // the livelock guard allows bounded no-work runs
+        let mut spins = 0usize;
+        loop {
+            let worked =
+                engine.step().map_err(|e| format!("step: {e}"))?;
+            engine
+                .kv_invariants()
+                .map_err(|e| format!("kv invariants mid-drain: {e}"))?;
+            let pending = engine.queued_requests()
+                + engine.flight_requests()
+                + engine.active_requests()
+                + engine.parked_requests();
+            if pending == 0 {
+                break;
+            }
+            spins = if worked { 0 } else { spins + 1 };
+            if spins > 2_000 {
+                return Err(format!(
+                    "livelock: {pending} requests pending"
+                ));
+            }
+        }
+        drop(reply_tx);
+
+        let responses: Vec<_> = reply_rx.try_iter().collect();
+        let dropped = engine.faults().fired_reply();
+        if responses.len() as u64 != n as u64 - dropped {
+            return Err(format!(
+                "{} responses for {n} requests ({dropped} replies \
+                 dropped by injection)",
+                responses.len()
+            ));
+        }
+        let mut seen: HashSet<u64> = HashSet::new();
+        for r in &responses {
+            if !seen.insert(r.id) {
+                return Err(format!("request {} answered twice", r.id));
+            }
+            if r.error.is_none()
+                && golden.get(&r.id) != Some(&r.tokens)
+            {
+                return Err(format!(
+                    "request {}: successful response diverged from \
+                     the fault-free reference",
+                    r.id
+                ));
+            }
+        }
+        engine
+            .kv_invariants()
+            .map_err(|e| format!("kv invariants: {e}"))?;
+        engine.clear_prefix_cache();
+        let (free, total) = engine.kv_blocks();
+        if free != total {
+            return Err(format!(
+                "block leak: {free} free of {total} after drain"
+            ));
+        }
+        let peak = metrics.kv_blocks_peak.load(Ordering::Relaxed);
+        if peak > total as u64 {
+            return Err(format!(
+                "allocation exceeded capacity: peak {peak} of {total}"
+            ));
+        }
+        total_fired
+            .fetch_add(engine.faults().fired(), Ordering::Relaxed);
+        total_retries.fetch_add(
+            metrics.retries.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        total_timeouts.fetch_add(
+            metrics.timeouts.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        Ok(())
+    });
+    // the suite must exercise the paths it claims to cover
+    assert!(
+        total_fired.load(Ordering::Relaxed) > 0,
+        "no fault ever fired — schedules never hit a live site"
+    );
+    assert!(
+        total_retries.load(Ordering::Relaxed) > 0,
+        "no transient failure was ever retried"
+    );
+    assert!(
+        total_timeouts.load(Ordering::Relaxed) > 0,
+        "no deadline was ever cancelled"
+    );
+}
+
+/// A plan whose injections never come due (far-future ticks at every
+/// site) must be a perfect no-op: responses bitwise identical to the
+/// fault-free reference, nothing fired, nothing counted.
+#[test]
+fn unfired_fault_plan_is_bitwise_invisible() {
+    let mut rng = Rng::new(101);
+    let reqs: Vec<Request> = (0..6u64)
+        .map(|id| Request {
+            id,
+            prompt: prompt(&mut rng, 10 + id as usize * 7),
+            max_new_tokens: 4,
+            config: SparsityConfig::parse(if id % 2 == 0 {
+                "dense"
+            } else {
+                "2:4:ls"
+            })
+            .unwrap(),
+            deadline_ticks: 0,
+        })
+        .collect();
+    let golden = serve_reference(&reqs);
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    let mut plan = FaultPlan::none();
+    for site in ALL_SITES {
+        plan = plan.with(1_000_000, site, FaultKind::Fail);
+    }
+    cfg.fault_plan = plan;
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    for r in &reqs {
+        engine.submit(r.clone(), reply_tx.clone());
+    }
+    while engine.step().unwrap() {}
+    drop(reply_tx);
+
+    let got: HashMap<u64, Vec<i32>> =
+        reply_rx.try_iter().map(|r| (r.id, r.tokens)).collect();
+    assert_eq!(got, golden, "an unfired plan must be invisible");
+    assert_eq!(engine.faults().fired(), 0);
+    assert_eq!(engine.faults().pending(), ALL_SITES.len());
+    assert_eq!(metrics.faults_injected.load(Ordering::Relaxed), 0);
+}
+
+/// A `ReplySend` injection drops exactly one response: the struck
+/// request still runs to completion and releases its blocks, the
+/// other request's reply arrives, and the plan's reply-drop counter
+/// matches the accounting chaos runs rely on.
+#[test]
+fn injected_reply_drop_loses_exactly_one_response() {
+    let mut rng = Rng::new(103);
+    // r0 completes at tick 1 (one-shot prefill + its single token),
+    // which is exactly when the ReplySend injection is armed
+    let r0 = Request {
+        id: 0,
+        prompt: prompt(&mut rng, 8),
+        max_new_tokens: 1,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let r1 = Request {
+        id: 1,
+        prompt: prompt(&mut rng, 8),
+        max_new_tokens: 2,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    cfg.fault_plan = FaultPlan::none().with(
+        1,
+        FaultSite::ReplySend,
+        FaultKind::Fail,
+    );
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    engine.submit(r0, reply_tx.clone());
+    engine.submit(r1, reply_tx.clone());
+    while engine.step().unwrap() {}
+    drop(reply_tx);
+
+    assert_eq!(engine.faults().fired_reply(), 1);
+    assert_eq!(metrics.faults_injected.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        metrics.requests_completed.load(Ordering::Relaxed),
+        2,
+        "the struck request still completes server-side"
+    );
+    let got: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(got.len(), 1, "exactly one response must be dropped");
+    assert_eq!(got[0].id, 1);
+    assert!(got[0].error.is_none());
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "the struck request leaked blocks");
+}
+
+/// A `Panic` injection unwinds into `Engine::run`'s catch boundary:
+/// the in-flight requests answer `Fatal`, the KV store passes its
+/// self-check and is left empty, and the same engine serves a fresh
+/// run normally afterwards.
+#[test]
+fn injected_panic_converts_to_fatal_and_loop_survives() {
+    let mut rng = Rng::new(107);
+    let r0 = Request {
+        id: 0,
+        prompt: prompt(&mut rng, 20),
+        max_new_tokens: 8,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let r1 = Request {
+        id: 1,
+        prompt: prompt(&mut rng, 20),
+        max_new_tokens: 8,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let after = Request {
+        id: 2,
+        prompt: prompt(&mut rng, 20),
+        max_new_tokens: 4,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let golden = serve_reference(std::slice::from_ref(&after));
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    // both requests are decoding by tick 2, when the panic fires
+    cfg.fault_plan = FaultPlan::none().with(
+        2,
+        FaultSite::DecodeStep,
+        FaultKind::Panic,
+    );
+    let mut engine = mk_engine(cfg, &metrics);
+    let (tx, rx) = channel();
+    let (reply_tx, reply_rx) = channel();
+    tx.send(EngineMsg::Submit(r0, reply_tx.clone())).unwrap();
+    tx.send(EngineMsg::Submit(r1, reply_tx.clone())).unwrap();
+    drop(tx);
+    engine.run(rx).unwrap();
+
+    assert_eq!(metrics.faults_injected.load(Ordering::Relaxed), 1);
+    let got: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(got.len(), 2, "both in-flight requests must answer");
+    for r in &got {
+        let err =
+            r.error.as_ref().expect("panicked step must answer Fatal");
+        assert_eq!(err.kind, ErrorKind::Fatal);
+        assert!(
+            err.reason.contains("panicked"),
+            "unexpected reason: {}",
+            err.reason
+        );
+    }
+    engine.kv_invariants().unwrap();
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "panic recovery leaked blocks");
+
+    // the same engine serves a fresh run normally afterwards
+    let (tx2, rx2) = channel();
+    tx2.send(EngineMsg::Submit(after, reply_tx.clone())).unwrap();
+    drop(tx2);
+    drop(reply_tx);
+    engine.run(rx2).unwrap();
+    let got: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(got.len(), 1, "the fresh request must answer");
+    assert!(got[0].error.is_none());
+    assert_eq!(got[0].tokens, golden[&2], "post-panic run diverged");
+}

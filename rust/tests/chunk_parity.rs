@@ -174,6 +174,7 @@ fn served_tokens_identical_across_chunk_sizes_and_prefix_cache() {
                 prompt: prompt(&mut rng, len),
                 max_new_tokens: 4,
                 config,
+                deadline_ticks: 0,
             })
             .collect();
         let (golden, mg) = serve(usize::MAX, false, &reqs);

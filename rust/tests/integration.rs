@@ -96,6 +96,7 @@ fn engine_serves_mixed_sparsity_requests() {
                 prompt,
                 max_new_tokens: 3,
                 config: configs[(id % 3) as usize],
+                deadline_ticks: 0,
             },
             reply_tx.clone(),
         ))
@@ -213,11 +214,14 @@ fn prop_batcher_conserves_and_groups_requests() {
                         prompt: vec![1],
                         max_new_tokens: 1,
                         config: cfg,
+                        deadline_ticks: 0,
                     },
                     arrived: std::time::Instant::now(),
                     first_token_at: None,
                     generated: vec![],
                     reply: tx,
+                    retries: 0,
+                    deadline_at: None,
                 },
             );
         }

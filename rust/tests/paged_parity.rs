@@ -367,6 +367,7 @@ fn end_to_end_serving_identical_across_block_sizes() {
                     prompt: prompt(&mut rng, len),
                     max_new_tokens: 3 + (id % 3) as usize,
                     config: configs[(id as usize) % configs.len()],
+                    deadline_ticks: 0,
                 },
                 reply_tx.clone(),
             ))
@@ -407,6 +408,7 @@ fn generation_budget_beyond_cache_truncates_instead_of_erroring() {
             prompt: prompt(&mut rng, 60),
             max_new_tokens: 500, // far beyond the 96-token cache
             config: SparsityConfig::parse("dense").unwrap(),
+            deadline_ticks: 0,
         },
         reply_tx.clone(),
     ))

@@ -255,6 +255,7 @@ fn mk_req(id: u64, shared: &[i32], suffix_seed: u64, cfg: &str) -> Request {
         prompt: p,
         max_new_tokens: 4,
         config: SparsityConfig::parse(cfg).unwrap(),
+        deadline_ticks: 0,
     }
 }
 
@@ -337,6 +338,7 @@ fn divergence_at_every_offset_matches_cold() {
                 prompt: donor.clone(),
                 max_new_tokens: 2,
                 config: SparsityConfig::parse("dense").unwrap(),
+                deadline_ticks: 0,
             },
             reply_tx.clone(),
         );
@@ -348,6 +350,7 @@ fn divergence_at_every_offset_matches_cold() {
                     prompt: p.clone(),
                     max_new_tokens: 2,
                     config: SparsityConfig::parse("dense").unwrap(),
+                    deadline_ticks: 0,
                 },
                 reply_tx.clone(),
             );
@@ -401,6 +404,7 @@ fn eviction_under_pressure_then_readmit_stays_correct() {
                 prompt: p.clone(),
                 max_new_tokens: 8,
                 config: SparsityConfig::parse("dense").unwrap(),
+                deadline_ticks: 0,
             },
             reply_tx.clone(),
         );
@@ -419,6 +423,7 @@ fn eviction_under_pressure_then_readmit_stays_correct() {
             prompt: prompts[0].clone(),
             max_new_tokens: 8,
             config: SparsityConfig::parse("dense").unwrap(),
+            deadline_ticks: 0,
         },
         reply_tx.clone(),
     );

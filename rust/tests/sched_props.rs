@@ -5,16 +5,25 @@
 //! leaks, allocation never exceeds pool capacity, and every admitted
 //! request completes with tokens identical to an undisturbed one-shot
 //! reference run (so preempt-and-resume is invisible to the client).
-//! Deterministic companions pin the preemption path itself and the
-//! no-decode-starvation guarantee while prefill chunks are pending.
+//! Deterministic companions pin the preemption path itself, the
+//! no-decode-starvation guarantee while prefill chunks are pending,
+//! and (ISSUE 9) the fault-tolerance paths: deadline cancellation,
+//! transient retry with backoff, retry exhaustion, overload
+//! degrade/shed and dropped-receiver survival.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
+use amber_pruner::coordinator::error::ErrorKind;
+use amber_pruner::coordinator::fault::{
+    FaultKind, FaultPlan, FaultSite,
+};
 use amber_pruner::coordinator::request::{Request, SparsityConfig};
-use amber_pruner::coordinator::scheduler::{Engine, EngineConfig};
+use amber_pruner::coordinator::scheduler::{
+    DegradePolicy, Engine, EngineConfig,
+};
 use amber_pruner::metrics::EngineMetrics;
 use amber_pruner::runtime::NativeEngine;
 use amber_pruner::testutil::prop::{prop_check, Gen};
@@ -59,6 +68,27 @@ fn serve_reference(reqs: &[Request]) -> HashMap<u64, Vec<i32>> {
     reply_rx.try_iter().map(|r| (r.id, r.tokens)).collect()
 }
 
+/// Step until nothing is queued, in flight, active or parked,
+/// checking KV invariants at every tick. Unlike `while step()`, this
+/// keeps ticking through retry-backoff windows where an iteration
+/// legitimately does no work; a livelocked engine fails fast instead.
+fn drain(engine: &mut Engine) {
+    let mut spins = 0usize;
+    loop {
+        let worked = engine.step().unwrap();
+        engine.kv_invariants().unwrap();
+        let pending = engine.queued_requests()
+            + engine.flight_requests()
+            + engine.active_requests()
+            + engine.parked_requests();
+        if pending == 0 {
+            break;
+        }
+        spins = if worked { 0 } else { spins + 1 };
+        assert!(spins <= 1_000, "drain stalled: {pending} pending");
+    }
+}
+
 /// The headline property: >= 100 randomized interleavings of submit
 /// and step against engines with tiny pools (forcing the preemption
 /// path), random chunk sizes and prefix-cache settings. Every request
@@ -82,6 +112,7 @@ fn randomized_interleavings_preserve_tokens_and_blocks() {
                     &["dense", "2:4:ls"],
                 ))
                 .unwrap(),
+                deadline_ticks: 0,
             });
         }
         let golden = serve_reference(&reqs);
@@ -117,6 +148,9 @@ fn randomized_interleavings_preserve_tokens_and_blocks() {
                 submitted += 1;
             } else {
                 engine.step().map_err(|e| format!("step: {e}"))?;
+                engine
+                    .kv_invariants()
+                    .map_err(|e| format!("kv invariants mid-run: {e}"))?;
             }
         }
         // drain, with a convergence guard so a livelocked scheduler
@@ -125,9 +159,13 @@ fn randomized_interleavings_preserve_tokens_and_blocks() {
         loop {
             let worked =
                 engine.step().map_err(|e| format!("step: {e}"))?;
+            engine
+                .kv_invariants()
+                .map_err(|e| format!("kv invariants mid-drain: {e}"))?;
             let pending = engine.queued_requests()
                 + engine.flight_requests()
-                + engine.active_requests();
+                + engine.active_requests()
+                + engine.parked_requests();
             if pending == 0 {
                 break;
             }
@@ -208,12 +246,14 @@ fn preempted_request_resumes_token_identically() {
         prompt: prompt(&mut rng, 30),
         max_new_tokens: 20,
         config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
     };
     let b = Request {
         id: 1,
         prompt: prompt(&mut rng, 30),
         max_new_tokens: 20,
         config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
     };
     let solo_a = serve_reference(std::slice::from_ref(&a));
     let solo_b = serve_reference(std::slice::from_ref(&b));
@@ -273,6 +313,7 @@ fn decode_advances_every_iteration_while_chunks_are_pending() {
             prompt: prompt(&mut rng, 8),
             max_new_tokens: 30,
             config: SparsityConfig::parse("dense").unwrap(),
+            deadline_ticks: 0,
         },
         reply_tx.clone(),
     );
@@ -284,6 +325,7 @@ fn decode_advances_every_iteration_while_chunks_are_pending() {
             prompt: prompt(&mut rng, 64),
             max_new_tokens: 1,
             config: SparsityConfig::parse("dense").unwrap(),
+            deadline_ticks: 0,
         },
         reply_tx.clone(),
     );
@@ -314,4 +356,296 @@ fn decode_advances_every_iteration_while_chunks_are_pending() {
     let got: Vec<_> = reply_rx.try_iter().collect();
     assert_eq!(got.len(), 2, "both requests must complete");
     engine.kv_invariants().unwrap();
+}
+
+/// Deterministic queued-deadline pin (ISSUE 9): a request that cannot
+/// be admitted before its tick budget runs out is cancelled from the
+/// queue with a `Rejected` response and an empty token stream, while
+/// the resident request finishes token-identically to its solo run.
+#[test]
+fn queued_request_past_its_deadline_is_rejected() {
+    let mut rng = Rng::new(81);
+    let a = Request {
+        id: 0,
+        prompt: prompt(&mut rng, 30),
+        max_new_tokens: 20,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let b = Request {
+        id: 1,
+        prompt: prompt(&mut rng, 33),
+        max_new_tokens: 4,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 2,
+    };
+    let solo_a = serve_reference(std::slice::from_ref(&a));
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    // 64 tokens: A's prompt takes 2 of the 4 blocks and its
+    // generation grows to all 4, so B's 3-block one-shot prompt can
+    // never be admitted while A is resident (admission waits, it
+    // never preempts) — B must expire in the queue
+    cfg.kv_pool_blocks = 4;
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    engine.submit(a, reply_tx.clone());
+    assert!(engine.step().unwrap(), "A must prefill");
+    engine.submit(b, reply_tx.clone());
+    drain(&mut engine);
+    drop(reply_tx);
+
+    assert_eq!(
+        metrics.timeouts.load(Ordering::Relaxed),
+        1,
+        "exactly one deadline cancellation"
+    );
+    let got: HashMap<u64, _> =
+        reply_rx.try_iter().map(|r| (r.id, r)).collect();
+    assert_eq!(got.len(), 2, "exactly one response per request");
+    let err = got[&1].error.as_ref().expect("B must carry an error");
+    assert_eq!(err.kind, ErrorKind::Rejected);
+    assert!(
+        err.reason.contains("queued"),
+        "unexpected reason: {}",
+        err.reason
+    );
+    assert!(got[&1].tokens.is_empty(), "B never generated a token");
+    assert_eq!(got[&0].tokens, solo_a[&0], "A diverged");
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked across the cancellation");
+}
+
+/// Deterministic transient-retry pin (ISSUE 9): an injected prefill
+/// failure releases the request's KV and parks it for a backed-off
+/// retry, and the retried run is token-identical to an undisturbed
+/// one — the fault is invisible to the client.
+#[test]
+fn injected_prefill_failure_retries_token_identically() {
+    let mut rng = Rng::new(83);
+    let req = Request {
+        id: 0,
+        prompt: prompt(&mut rng, 24),
+        max_new_tokens: 6,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let golden = serve_reference(std::slice::from_ref(&req));
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    cfg.fault_plan = FaultPlan::none().with(
+        1,
+        FaultSite::PrefillChunk,
+        FaultKind::Fail,
+    );
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    engine.submit(req, reply_tx.clone());
+    drain(&mut engine);
+    drop(reply_tx);
+
+    assert_eq!(metrics.faults_injected.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.retries.load(Ordering::Relaxed), 1);
+    assert_eq!(engine.faults().pending(), 0, "the fault must fire");
+    assert_eq!(engine.parked_requests(), 0);
+    let got: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(got.len(), 1, "exactly one response");
+    assert!(got[0].error.is_none(), "the retry must succeed");
+    assert_eq!(got[0].tokens, golden[&0], "retried run diverged");
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked across the retry");
+}
+
+/// Retry-exhaustion pin (ISSUE 9): with `max_retries = 1`, a second
+/// injected failure escalates to a `Fatal` "giving up" response — and
+/// the engine keeps serving fresh requests afterwards.
+#[test]
+fn exhausted_retries_escalate_to_fatal_and_engine_survives() {
+    let mut rng = Rng::new(87);
+    let doomed = Request {
+        id: 0,
+        prompt: prompt(&mut rng, 16),
+        max_new_tokens: 4,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let healthy = Request {
+        id: 1,
+        prompt: prompt(&mut rng, 16),
+        max_new_tokens: 4,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let golden = serve_reference(std::slice::from_ref(&healthy));
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    cfg.max_retries = 1;
+    cfg.retry_backoff_ticks = 1;
+    // fails at tick 1, and again at tick 2 when the backed-off retry
+    // wakes — exhausting the single-retry budget
+    cfg.fault_plan = FaultPlan::none()
+        .with(1, FaultSite::PrefillChunk, FaultKind::Fail)
+        .with(2, FaultSite::PrefillChunk, FaultKind::Fail);
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    engine.submit(doomed, reply_tx.clone());
+    drain(&mut engine);
+
+    let r0 = reply_rx.try_iter().next().expect("doomed must answer");
+    let err = r0.error.as_ref().expect("must be a terminal error");
+    assert_eq!(err.kind, ErrorKind::Fatal);
+    assert!(
+        err.reason.contains("giving up"),
+        "unexpected reason: {}",
+        err.reason
+    );
+    assert_eq!(metrics.faults_injected.load(Ordering::Relaxed), 2);
+    assert_eq!(
+        metrics.retries.load(Ordering::Relaxed),
+        1,
+        "only the first failure is a retry; the second is fatal"
+    );
+
+    // the loop keeps serving: a fresh request completes normally
+    engine.submit(healthy, reply_tx.clone());
+    drain(&mut engine);
+    drop(reply_tx);
+    let got: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(got.len(), 1, "the healthy request must answer");
+    assert!(got[0].error.is_none());
+    assert_eq!(got[0].tokens, golden[&1], "healthy run diverged");
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked across the fatal path");
+}
+
+/// Overload-admission pin (ISSUE 9): past `degrade_at` queued prompt
+/// tokens a dense request tightens to 4:8 (shedding compute, still
+/// served); past `shed_at` it is shed outright with an immediate
+/// `Rejected` response, before any engine iteration runs.
+#[test]
+fn admission_degrades_then_sheds_under_backlog() {
+    let mut rng = Rng::new(89);
+    let mut mk = |id: u64, len: usize| Request {
+        id,
+        prompt: prompt(&mut rng, len),
+        max_new_tokens: 3,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let a = mk(0, 30);
+    let b = mk(1, 30);
+    let c = mk(2, 10);
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    cfg.degrade_policy = Some(DegradePolicy {
+        degrade_at: 20,
+        shed_at: 60,
+    });
+    let mut engine = mk_engine(cfg, &metrics);
+    let (reply_tx, reply_rx) = channel();
+    engine.submit(a, reply_tx.clone()); // backlog 0: admitted dense
+    engine.submit(b, reply_tx.clone()); // backlog 30 >= 20: degraded
+    engine.submit(c, reply_tx.clone()); // backlog 60 >= 60: shed
+
+    assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.sheds.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        metrics.requests_admitted.load(Ordering::Relaxed),
+        2,
+        "the shed request is never admitted"
+    );
+    // the shed response is immediate, before any engine iteration
+    let rc = reply_rx.try_iter().next().expect("shed answers at once");
+    assert_eq!(rc.id, 2);
+    let err = rc.error.as_ref().expect("shed must carry an error");
+    assert_eq!(err.kind, ErrorKind::Rejected);
+    assert!(
+        err.reason.contains("overloaded"),
+        "unexpected reason: {}",
+        err.reason
+    );
+
+    drain(&mut engine);
+    drop(reply_tx);
+    let got: HashMap<u64, _> =
+        reply_rx.try_iter().map(|r| (r.id, r)).collect();
+    assert_eq!(got.len(), 2, "A and B must still be served");
+    assert!(got[&0].error.is_none() && got[&1].error.is_none());
+    assert!(!got[&0].tokens.is_empty() && !got[&1].tokens.is_empty());
+    // the degraded request routes to the 4:8 bucket, so the two
+    // survivors can no longer share one prefill batch
+    assert!(
+        metrics.prefill_batches.load(Ordering::Relaxed) >= 2,
+        "degraded request must run in its own config bucket"
+    );
+    engine.kv_invariants().unwrap();
+}
+
+/// Dropped-receiver regression (ISSUE 9 satellite): a client that
+/// vanishes before its response is sent must not panic or wedge the
+/// loop — the send failure is swallowed, the request still completes
+/// and later clients are served normally.
+#[test]
+fn dropped_reply_receiver_does_not_kill_the_loop() {
+    let mut rng = Rng::new(97);
+    let orphan = Request {
+        id: 0,
+        prompt: prompt(&mut rng, 12),
+        max_new_tokens: 3,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+    let live = Request {
+        id: 1,
+        prompt: prompt(&mut rng, 12),
+        max_new_tokens: 3,
+        config: SparsityConfig::parse("dense").unwrap(),
+        deadline_ticks: 0,
+    };
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    let mut engine = mk_engine(cfg, &metrics);
+    let (orphan_tx, orphan_rx) = channel();
+    engine.submit(orphan, orphan_tx);
+    drop(orphan_rx); // the client vanishes before its answer
+    drain(&mut engine);
+    assert_eq!(
+        metrics.requests_completed.load(Ordering::Relaxed),
+        1,
+        "the orphaned request still runs to completion"
+    );
+
+    let (reply_tx, reply_rx) = channel();
+    engine.submit(live, reply_tx);
+    drain(&mut engine);
+    let got: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(got.len(), 1, "later clients are served normally");
+    assert!(got[0].error.is_none());
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked past the dropped client");
 }

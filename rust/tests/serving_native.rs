@@ -7,7 +7,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use amber_pruner::coordinator::scheduler::{
-    Engine, EngineConfig, EngineMsg,
+    DegradePolicy, Engine, EngineConfig, EngineMsg,
 };
 use amber_pruner::coordinator::request::{Request, SparsityConfig};
 use amber_pruner::metrics::EngineMetrics;
@@ -49,6 +49,7 @@ fn mixed_ratio_workload_completes_with_valid_sparsity() {
                 prompt: prompt(&mut rng, len),
                 max_new_tokens: 4,
                 config: configs[(id as usize) % configs.len()],
+                deadline_ticks: 0,
             },
             reply_tx.clone(),
         ))
@@ -114,6 +115,7 @@ fn single_config_batch_completes_in_submission_order() {
                 prompt: prompt(&mut rng, 12),
                 max_new_tokens: 2,
                 config: SparsityConfig::parse("8:16:ls").unwrap(),
+                deadline_ticks: 0,
             },
             reply_tx.clone(),
         ))
@@ -316,6 +318,7 @@ fn long_prompt_no_longer_head_of_line_blocks_shorts() {
             prompt,
             max_new_tokens: 1,
             config: SparsityConfig::parse("dense").unwrap(),
+            deadline_ticks: 0,
         };
         engine.submit(mk(0, long.clone()), reply_tx.clone());
         for (i, s) in shorts.iter().enumerate() {
@@ -352,4 +355,91 @@ fn long_prompt_no_longer_head_of_line_blocks_shorts() {
              prompt ({ttft} vs {long_ttft})"
         );
     }
+}
+
+#[test]
+fn burst_overload_sheds_degrades_and_cancels_deadlines() {
+    // ISSUE 9 e2e: a 40-request burst (the bursty_deadlines workload)
+    // hits admission at once, half the requests on a 3-tick deadline.
+    // The overload watermarks first tighten dense requests to 4:8,
+    // then shed outright; the deadline sweeps cancel what cannot be
+    // served in time. Every request still gets exactly one response,
+    // the error taxonomy accounts for all of them, and the block pool
+    // drains clean.
+    use std::sync::atomic::Ordering;
+    let spec = WorkloadSpec::bursty_deadlines(40, 8, 3);
+    let reqs: Vec<Request> =
+        generate(&spec).into_iter().map(|t| t.req).collect();
+    assert!(
+        reqs.iter().any(|r| r.deadline_ticks == 3)
+            && reqs.iter().any(|r| r.deadline_ticks == 0),
+        "the workload must mix deadlines"
+    );
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new("tiny-lm-a");
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.prefix_cache = false;
+    // ~1200 prompt tokens arrive at once: past 200 queued tokens the
+    // admission path degrades dense to 4:8, past 600 it sheds
+    cfg.degrade_policy = Some(DegradePolicy {
+        degrade_at: 200,
+        shed_at: 600,
+    });
+    let mut engine = Engine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let (reply_tx, reply_rx) = channel();
+    for r in reqs {
+        engine.submit(r, reply_tx.clone());
+    }
+    let mut spins = 0usize;
+    loop {
+        let worked = engine.step().unwrap();
+        let pending = engine.queued_requests()
+            + engine.flight_requests()
+            + engine.active_requests()
+            + engine.parked_requests();
+        if pending == 0 {
+            break;
+        }
+        spins = if worked { 0 } else { spins + 1 };
+        assert!(spins <= 1_000, "drain stalled: {pending} pending");
+    }
+    drop(reply_tx);
+
+    let sheds = metrics.sheds.load(Ordering::Relaxed);
+    let degraded = metrics.degraded.load(Ordering::Relaxed);
+    let timeouts = metrics.timeouts.load(Ordering::Relaxed);
+    assert!(sheds > 0, "the burst must overflow the shed watermark");
+    assert!(degraded > 0, "the burst must cross the degrade watermark");
+    assert!(timeouts > 0, "tight deadlines must cancel under overload");
+
+    let responses: Vec<_> = reply_rx.try_iter().collect();
+    assert_eq!(responses.len(), 40, "exactly one response per request");
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..40).collect::<Vec<u64>>(),
+        "no request lost or duplicated"
+    );
+    let served = responses.iter().filter(|r| r.error.is_none()).count();
+    assert!(served > 0, "the engine must still serve under overload");
+    for r in responses.iter().filter(|r| r.error.is_none()) {
+        assert!(!r.tokens.is_empty(), "served response without tokens");
+    }
+    // no faults are injected here, so every request either completed,
+    // was shed at admission or was cancelled by its deadline
+    assert_eq!(
+        served as u64 + sheds + timeouts,
+        40,
+        "the error taxonomy must account for every request"
+    );
+    engine.kv_invariants().unwrap();
+    let (free, total) = engine.kv_blocks();
+    assert_eq!(free, total, "blocks leaked under overload");
 }
