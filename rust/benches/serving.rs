@@ -1,0 +1,228 @@
+//! Multi-replica serving latency: TTFT / TPOT percentiles for the same
+//! request burst served by replica pools of width 1, 2 and 4, plus a
+//! failover row where one of two replicas is killed mid-burst (ISSUE
+//! 10). The pool runs the full supervised path — router dispatch,
+//! per-replica engines on their own threads, fan-in, and (in the
+//! failover row) crash detection plus re-dispatch — so the rows price
+//! the coordination overhead and the failover recovery cost, not just
+//! the kernels. Emits machine-readable results to `BENCH_serving.json`
+//! (written next to the package manifest when run via
+//! `cargo bench --bench serving`).
+//!
+//! Runs out of the box on the synthetic tiny model; no artifacts or
+//! PJRT required.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amber_pruner::coordinator::replica::{
+    EngineFactory, PoolConfig, ReplicaPool,
+};
+use amber_pruner::coordinator::request::{
+    Request, Response, SparsityConfig,
+};
+use amber_pruner::coordinator::scheduler::{Engine, EngineConfig};
+use amber_pruner::metrics::stats::Histogram;
+use amber_pruner::metrics::EngineMetrics;
+use amber_pruner::runtime::NativeEngine;
+use amber_pruner::util::json::Json;
+use amber_pruner::util::rng::Rng;
+
+const MODEL: &str = "tiny-lm-a";
+const REQUESTS: usize = 48;
+const PROMPT_LEN: usize = 48;
+const MAX_NEW: usize = 8;
+
+fn factory(metrics: &Arc<EngineMetrics>) -> EngineFactory {
+    let m = Arc::clone(metrics);
+    Arc::new(move |_i| {
+        let mut cfg = EngineConfig::new(MODEL);
+        cfg.pool_threads = 1;
+        cfg.max_wait_secs = 0.0;
+        cfg.prefix_cache = false;
+        Engine::new(Box::new(NativeEngine::tiny()), cfg, Arc::clone(&m))
+    })
+}
+
+fn burst() -> Vec<Request> {
+    let mut rng = Rng::new(0xbe_5e_7a);
+    (0..REQUESTS as u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..PROMPT_LEN)
+                .map(|_| 1 + rng.below(300) as i32)
+                .collect(),
+            max_new_tokens: MAX_NEW,
+            config: SparsityConfig::dense(),
+            deadline_ticks: 0,
+        })
+        .collect()
+}
+
+struct Row {
+    label: String,
+    replicas: usize,
+    failover: bool,
+    wall_secs: f64,
+    ttft_p50: f64,
+    ttft_p99: f64,
+    tpot_p50: f64,
+    tpot_p99: f64,
+    redispatches: u64,
+    restarts: u64,
+}
+
+/// Serve the fixed burst on a fresh pool of `replicas` engines; with
+/// `failover` the busiest of two replicas is stalled briefly and killed
+/// once work is observed outstanding, so the row includes detection,
+/// restart and re-dispatch recovery in its tail.
+fn run_pool(label: &str, replicas: usize, failover: bool) -> Row {
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = PoolConfig::new(replicas);
+    cfg.poll = Duration::from_millis(1);
+    // benches share loaded CI machines: never let a slow tick read as a
+    // hung replica (thread-death detection still covers the kill row)
+    cfg.heartbeat_timeout = Duration::ZERO;
+    let mut pool =
+        ReplicaPool::start(factory(&metrics), Arc::clone(&metrics), cfg)
+            .expect("pool start");
+    let handle = pool.handle();
+
+    let reqs = burst();
+    let (tx, rx) = channel::<Response>();
+    let t0 = Instant::now();
+    for r in &reqs {
+        handle.submit(r.clone(), tx.clone()).expect("submit");
+    }
+    if failover {
+        // wait until someone actually owns work, then strike the
+        // busiest replica while a stall pins its queue
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let victim = loop {
+            let snap = handle.snapshot().expect("snapshot");
+            if let Some(s) = snap
+                .iter()
+                .filter(|s| s.outstanding > 0)
+                .max_by_key(|s| s.outstanding)
+            {
+                break s.index;
+            }
+            assert!(Instant::now() < deadline, "no replica took work");
+            std::thread::sleep(Duration::from_micros(200));
+        };
+        handle.stall(victim, 20);
+        handle.kill(victim);
+    }
+
+    let mut ttft = Histogram::new();
+    let mut tpot = Histogram::new();
+    for _ in 0..reqs.len() {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response");
+        assert!(r.error.is_none(), "bench burst must not error");
+        ttft.observe(r.ttft_secs);
+        if r.tokens.len() > 1 {
+            tpot.observe(
+                (r.e2e_secs - r.ttft_secs) / (r.tokens.len() - 1) as f64,
+            );
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    pool.shutdown().expect("pool shutdown");
+
+    let (ts, ds) = (ttft.summary(), tpot.summary());
+    let row = Row {
+        label: label.to_string(),
+        replicas,
+        failover,
+        wall_secs,
+        ttft_p50: ts.p50,
+        ttft_p99: ts.p99,
+        tpot_p50: ds.p50,
+        tpot_p99: ds.p99,
+        redispatches: metrics
+            .replica_redispatches
+            .load(Ordering::Relaxed),
+        restarts: metrics.replica_restarts.load(Ordering::Relaxed),
+    };
+    println!(
+        "bench {:<24} wall {:>8.3}s  ttft p50 {:>8.3}ms p99 {:>8.3}ms  \
+         tpot p50 {:>8.3}ms p99 {:>8.3}ms  redispatch {}  restarts {}",
+        row.label,
+        row.wall_secs,
+        row.ttft_p50 * 1e3,
+        row.ttft_p99 * 1e3,
+        row.tpot_p50 * 1e3,
+        row.tpot_p99 * 1e3,
+        row.redispatches,
+        row.restarts,
+    );
+    row
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    println!(
+        "== multi-replica serving ({REQUESTS} reqs, prompt {PROMPT_LEN}, \
+         {MAX_NEW} new tokens) =="
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for &replicas in &[1usize, 2, 4] {
+        rows.push(run_pool(
+            &format!("replicas{replicas}"),
+            replicas,
+            false,
+        ));
+    }
+    rows.push(run_pool("replicas2.failover", 2, true));
+
+    let baseline = rows[0].wall_secs;
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            if r.replicas > 1 && !r.failover {
+                println!(
+                    "    -> {} vs 1 replica: {:.2}x wall",
+                    r.label,
+                    baseline / r.wall_secs.max(1e-12)
+                );
+            }
+            let mut o = BTreeMap::new();
+            o.insert("label".into(), Json::Str(r.label.clone()));
+            o.insert("replicas".into(), num(r.replicas as f64));
+            o.insert("failover".into(), Json::Bool(r.failover));
+            o.insert("requests".into(), num(REQUESTS as f64));
+            o.insert("wall_secs".into(), num(r.wall_secs));
+            o.insert("ttft_p50_secs".into(), num(r.ttft_p50));
+            o.insert("ttft_p99_secs".into(), num(r.ttft_p99));
+            o.insert("tpot_p50_secs".into(), num(r.tpot_p50));
+            o.insert("tpot_p99_secs".into(), num(r.tpot_p99));
+            o.insert(
+                "redispatches".into(),
+                num(r.redispatches as f64),
+            );
+            o.insert("restarts".into(), num(r.restarts as f64));
+            Json::Obj(o)
+        })
+        .collect();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("replica_serving".into()));
+    root.insert("model".into(), Json::Str(MODEL.into()));
+    root.insert("requests".into(), num(REQUESTS as f64));
+    root.insert("prompt_len".into(), num(PROMPT_LEN as f64));
+    root.insert("max_new_tokens".into(), num(MAX_NEW as f64));
+    root.insert("results".into(), Json::Arr(results));
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -65,6 +65,20 @@ impl PrefillQueues {
             .sum()
     }
 
+    /// Empty every bucket, returning all queued requests oldest
+    /// arrival first (ties by id). The graceful-drain hand-back path:
+    /// the scheduler sends these back to the replica pool un-replied
+    /// so survivors can recompute them.
+    pub fn drain_all(&mut self) -> Vec<Tracked> {
+        let mut out: Vec<Tracked> = Vec::new();
+        for q in self.queues.values_mut() {
+            out.extend(q.drain(..));
+        }
+        self.queues.clear();
+        out.sort_by_key(|t| (t.arrived, t.req.id));
+        out
+    }
+
     /// Remove and return every queued request whose deadline has
     /// passed (`deadline_at < tick` — a request keeps the whole tick
     /// it expires on, so `deadline_ticks = 1` gets one scheduling

@@ -13,6 +13,12 @@
 //!                                      PJRT behind the `pjrt` feature)
 //! ```
 //!
+//! Multi-replica deployments put a supervised [`replica::ReplicaPool`]
+//! in front: N engine threads behind a health-aware [`router::Router`]
+//! (prefix-affinity / least-outstanding / round-robin), with crash
+//! failover re-dispatch, heartbeat fencing and graceful drain — see
+//! the `replica` module docs.
+//!
 //! The KV cache is genuinely block-paged (`paged::BlockPool` allocator +
 //! `kv::KvPages` physical store): admission is by free-**block** count,
 //! so long prompts never need a contiguous slot and concurrency is
@@ -32,11 +38,17 @@ pub mod fault;
 pub mod kv;
 pub mod paged;
 pub mod prefix;
+pub mod replica;
 pub mod request;
 pub mod scheduler;
 pub mod router;
 
 pub use error::{ErrorKind, RequestError};
 pub use fault::{FaultKind, FaultPlan, FaultSite};
-pub use request::{Request, Response, SparsityConfig};
-pub use scheduler::{DegradePolicy, Engine, EngineConfig};
+pub use replica::{
+    EngineFactory, Gateway, PoolConfig, PoolHandle, ReplicaPool,
+    ReplicaStat,
+};
+pub use request::{HandedBack, Request, Response, SparsityConfig};
+pub use router::{Health, Policy, RouteError};
+pub use scheduler::{DegradePolicy, Engine, EngineConfig, EngineMsg};

@@ -1,0 +1,970 @@
+//! Supervised replica pool: N engine serve loops behind one
+//! health-aware router, with failover re-dispatch and graceful drain.
+//!
+//! ```text
+//!                      ┌─ replica-0 thread ─ Engine::run ─┐
+//!  clients ─► PoolMsg ─┤  replica-1 thread ─ Engine::run  ├─► fan-in
+//!             (supervisor: ledger + Router + heartbeats)  │   (one
+//!                      └─ replica-N thread ─ Engine::run ─┘  channel)
+//! ```
+//!
+//! Each replica is an [`Engine`] built *inside* its own thread (the
+//! execution backends are not `Send`, so a factory closure travels to
+//! the thread and binds there) and wrapped in supervision: the
+//! supervisor detects death three ways — the thread finishing (panic
+//! escaping [`Engine::run`], an engine error, a disconnected channel)
+//! and a heartbeat that stops advancing (a hung serve loop) — and
+//! restarts the replica with a fresh engine bind.
+//!
+//! **Exactly-once responses.** The supervisor keeps a ledger of every
+//! accepted request. All replica responses fan into one channel; the
+//! first response for an id is forwarded to the client and retires the
+//! ledger entry, any later copy (a fenced-off zombie finishing a
+//! request that was already re-dispatched) is dropped. The pipeline is
+//! deterministic and recomputes from scratch, so either copy carries
+//! identical tokens — the replay guarantee PR 9 pinned for preemption
+//! and retries extends across the replica boundary unchanged.
+//!
+//! **Failover.** When a replica dies, its ledger entries re-dispatch
+//! to survivors (deterministic id order). Each crash-failover consumes
+//! one pool-level attempt; past [`PoolConfig::max_redispatch`] the
+//! request fails with a `Fatal` response instead of bouncing forever.
+//! Graceful-drain hand-backs re-dispatch **without** consuming the
+//! budget — a drain is an operator action, not a failure. Tick-based
+//! deadlines (`deadline_ticks`) are relative budgets and re-resolve on
+//! the survivor's tick clock.
+//!
+//! **Drain.** [`PoolHandle::drain`] walks a replica `Up → Draining →
+//! Down`: the engine stops admitting, hands queued/parked work back
+//! un-replied ([`HandedBack`]), finishes what is in flight, and exits.
+//! Nothing is lost and nothing answers twice — the ledger fence holds
+//! for drains exactly as for crashes.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::error::RequestError;
+use super::request::{HandedBack, Request, Response};
+use super::router::{Health, Policy, Replica, Router};
+use super::scheduler::{Engine, EngineMsg};
+use crate::metrics::EngineMetrics;
+
+/// Builds one replica's engine, called **inside** the replica thread
+/// (execution backends are not `Send`). The argument is the replica
+/// index, so factories can vary per-replica configuration.
+pub type EngineFactory =
+    Arc<dyn Fn(usize) -> Result<Engine> + Send + Sync>;
+
+/// Replica-pool tuning knobs.
+#[derive(Clone)]
+pub struct PoolConfig {
+    /// number of replicas to spawn
+    pub replicas: usize,
+    /// replica-selection policy for new and re-dispatched requests
+    pub policy: Policy,
+    /// declare a replica hung when its heartbeat has not advanced for
+    /// this long, fence it off and restart it (`0` disables heartbeat
+    /// supervision; thread-death detection always runs)
+    pub heartbeat_timeout: Duration,
+    /// supervisor poll period: the latency floor for dispatch,
+    /// fan-out and death detection
+    pub poll: Duration,
+    /// crash-failover re-dispatches tolerated per request before it
+    /// fails with a `Fatal` response (drain hand-backs are free)
+    pub max_redispatch: u32,
+    /// automatic restarts tolerated per replica slot before the
+    /// supervisor leaves it `Down` for good
+    pub max_restarts: u32,
+}
+
+impl PoolConfig {
+    /// Defaults for `replicas` slots: least-outstanding routing, 1 s
+    /// heartbeat timeout, 2 ms poll, 3 re-dispatches, 8 restarts.
+    pub fn new(replicas: usize) -> PoolConfig {
+        PoolConfig {
+            replicas: replicas.max(1),
+            policy: Policy::LeastOutstanding,
+            heartbeat_timeout: Duration::from_secs(1),
+            poll: Duration::from_millis(2),
+            max_redispatch: 3,
+            max_restarts: 8,
+        }
+    }
+}
+
+/// Control-plane messages understood by the pool supervisor.
+enum PoolMsg {
+    /// accept a request; the response goes to the sender exactly once
+    Submit(Request, Sender<Response>),
+    /// a replica response, forwarded off the fan-in channel
+    Completed(Response),
+    /// chaos: crash a replica (panic out of its serve loop)
+    Kill(usize),
+    /// chaos: stall a replica's serve loop for the given milliseconds
+    Stall(usize, u64),
+    /// gracefully drain a replica (`Up → Draining → Down`)
+    Drain(usize),
+    /// restart a `Down` replica with a fresh engine bind
+    Restart(usize),
+    /// snapshot per-replica stats
+    Snapshot(Sender<Vec<ReplicaStat>>),
+    /// graceful pool shutdown; the optional sender is acked once every
+    /// ledger entry is answered and every replica thread has exited
+    Shutdown(Option<Sender<()>>),
+}
+
+/// Point-in-time view of one replica slot ([`PoolHandle::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct ReplicaStat {
+    /// slot index
+    pub index: usize,
+    /// router-visible health
+    pub health: Health,
+    /// requests dispatched to this incarnation and not yet answered
+    pub outstanding: u64,
+    /// engine binds consumed by this slot (0 = the initial bind, each
+    /// restart adds one)
+    pub generation: u32,
+    /// requests dispatched to this slot over the pool's lifetime
+    pub dispatched: u64,
+    /// latest heartbeat value (0 = the incarnation has not beaten yet)
+    pub beats: u64,
+}
+
+/// How a replica thread ended.
+enum ReplicaExit {
+    /// `Engine::run` returned `Ok` (shutdown or drain completed)
+    Clean,
+    /// `Engine::run` returned an error (e.g. corrupt KV after a panic)
+    Failed(String),
+    /// a panic escaped `Engine::run` (crash injection or a real bug)
+    Panicked(String),
+    /// the factory could not build the engine
+    BindFailed(String),
+}
+
+/// One supervised replica slot.
+struct Slot {
+    join: Option<JoinHandle<ReplicaExit>>,
+    heartbeat: Arc<AtomicU64>,
+    /// last heartbeat value observed by the supervisor
+    last_beat: u64,
+    /// when `last_beat` last changed
+    last_beat_at: Instant,
+    generation: u32,
+    dispatched: u64,
+}
+
+/// One accepted request: the authoritative exactly-once record. The
+/// entry is retired by the first response for its id; everything else
+/// about the request (where it ran, how often it failed over) lives
+/// here so replicas stay disposable.
+struct Entry {
+    /// slot currently working the request (`None` = awaiting
+    /// re-dispatch)
+    replica: Option<usize>,
+    req: Request,
+    /// the client's reply channel (replicas answer into the fan-in,
+    /// never to clients directly)
+    reply: Sender<Response>,
+    /// crash-failover re-dispatches consumed
+    attempts: u32,
+}
+
+/// Cloneable handle for submitting work and driving chaos/lifecycle
+/// operations against a running [`ReplicaPool`].
+#[derive(Clone)]
+pub struct PoolHandle {
+    ctl: Sender<PoolMsg>,
+}
+
+impl PoolHandle {
+    /// Submit a request; its response arrives on `reply` exactly once.
+    pub fn submit(
+        &self,
+        req: Request,
+        reply: Sender<Response>,
+    ) -> Result<()> {
+        self.ctl
+            .send(PoolMsg::Submit(req, reply))
+            .map_err(|_| anyhow::anyhow!("replica pool is gone"))
+    }
+
+    /// Crash replica `i` (its in-flight work fails over to survivors
+    /// and the supervisor restarts it).
+    pub fn kill(&self, i: usize) {
+        let _ = self.ctl.send(PoolMsg::Kill(i));
+    }
+
+    /// Stall replica `i`'s serve loop for `ms` milliseconds (heartbeat
+    /// supervision fences and replaces it if the stall outlives the
+    /// timeout).
+    pub fn stall(&self, i: usize, ms: u64) {
+        let _ = self.ctl.send(PoolMsg::Stall(i, ms));
+    }
+
+    /// Gracefully drain replica `i` (`Up → Draining → Down`); its
+    /// queued work re-dispatches to survivors, in-flight work finishes
+    /// in place.
+    pub fn drain(&self, i: usize) {
+        let _ = self.ctl.send(PoolMsg::Drain(i));
+    }
+
+    /// Restart a `Down` replica with a fresh engine bind.
+    pub fn restart(&self, i: usize) {
+        let _ = self.ctl.send(PoolMsg::Restart(i));
+    }
+
+    /// Per-replica health/outstanding/generation stats.
+    pub fn snapshot(&self) -> Result<Vec<ReplicaStat>> {
+        let (tx, rx) = channel();
+        self.ctl
+            .send(PoolMsg::Snapshot(tx))
+            .map_err(|_| anyhow::anyhow!("replica pool is gone"))?;
+        rx.recv().context("replica pool dropped the snapshot")
+    }
+
+    /// Begin a graceful pool shutdown without waiting for it (the
+    /// drain-on-shutdown trigger for the TCP path; use
+    /// [`ReplicaPool::shutdown`] to wait).
+    pub fn begin_shutdown(&self) {
+        let _ = self.ctl.send(PoolMsg::Shutdown(None));
+    }
+}
+
+/// A running pool of supervised engine replicas (module docs).
+pub struct ReplicaPool {
+    handle: PoolHandle,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+impl ReplicaPool {
+    /// Spawn `cfg.replicas` supervised replicas plus the supervisor
+    /// thread. Engines are built lazily inside their threads via
+    /// `factory`; replicas become routable at their first heartbeat.
+    pub fn start(
+        factory: EngineFactory,
+        metrics: Arc<EngineMetrics>,
+        cfg: PoolConfig,
+    ) -> Result<ReplicaPool> {
+        let (ctl_tx, ctl_rx) = channel::<PoolMsg>();
+        let (fanin_tx, fanin_rx) = channel::<Response>();
+        // forwarder: replica responses become control-plane messages,
+        // so the supervisor blocks on exactly one channel
+        let fwd_ctl = ctl_tx.clone();
+        std::thread::Builder::new()
+            .name("pool-fanin".into())
+            .spawn(move || {
+                for resp in fanin_rx {
+                    if fwd_ctl.send(PoolMsg::Completed(resp)).is_err() {
+                        break; // supervisor gone
+                    }
+                }
+            })
+            .context("spawn of the pool fan-in thread")?;
+        let n = cfg.replicas;
+        let sup = Supervisor::new(factory, metrics, cfg, fanin_tx);
+        let supervisor = std::thread::Builder::new()
+            .name("pool-supervisor".into())
+            .spawn(move || sup.run(ctl_rx))
+            .with_context(|| {
+                format!("spawn of the supervisor for {n} replicas")
+            })?;
+        Ok(ReplicaPool {
+            handle: PoolHandle { ctl: ctl_tx },
+            supervisor: Some(supervisor),
+        })
+    }
+
+    /// A cloneable submission/chaos handle.
+    pub fn handle(&self) -> PoolHandle {
+        self.handle.clone()
+    }
+
+    /// Block until the supervisor exits — i.e. until a shutdown
+    /// initiated elsewhere (the TCP `shutdown` command via
+    /// [`PoolHandle::begin_shutdown`]) completes. Does not itself
+    /// start a shutdown.
+    pub fn wait(&mut self) -> Result<()> {
+        let Some(sup) = self.supervisor.take() else {
+            return Ok(());
+        };
+        match sup.join() {
+            Ok(()) => Ok(()),
+            Err(_) => Err(anyhow::anyhow!(
+                "replica-pool supervisor panicked"
+            )),
+        }
+    }
+
+    /// Graceful shutdown: every accepted request is answered (served,
+    /// or failed with a typed error), every replica thread joins, then
+    /// the supervisor exits. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let Some(sup) = self.supervisor.take() else {
+            return Ok(());
+        };
+        let (ack_tx, ack_rx) = channel();
+        let _ = self.handle.ctl.send(PoolMsg::Shutdown(Some(ack_tx)));
+        // the ack only exists for callers that want to block; the join
+        // below is the real synchronization
+        let _ = ack_rx.recv_timeout(Duration::from_secs(60));
+        match sup.join() {
+            Ok(()) => Ok(()),
+            Err(_) => Err(anyhow::anyhow!(
+                "replica-pool supervisor panicked"
+            )),
+        }
+    }
+}
+
+impl Drop for ReplicaPool {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// The supervisor's mutable state (runs on its own thread).
+struct Supervisor {
+    factory: EngineFactory,
+    metrics: Arc<EngineMetrics>,
+    cfg: PoolConfig,
+    router: Router,
+    slots: Vec<Slot>,
+    ledger: HashMap<u64, Entry>,
+    /// accepted requests awaiting (re-)dispatch, in failover order
+    unassigned: VecDeque<u64>,
+    /// replica responses fan into this (cloned per dispatch)
+    fanin_tx: Sender<Response>,
+    /// drain hand-backs arrive here
+    handback_tx: Sender<HandedBack>,
+    handback_rx: Receiver<HandedBack>,
+    shutting_down: bool,
+    shutdown_acks: Vec<Sender<()>>,
+}
+
+impl Supervisor {
+    fn new(
+        factory: EngineFactory,
+        metrics: Arc<EngineMetrics>,
+        cfg: PoolConfig,
+        fanin_tx: Sender<Response>,
+    ) -> Supervisor {
+        let n = cfg.replicas;
+        let (handback_tx, handback_rx) = channel();
+        // placeholder channels; spawn_slot rebinds each immediately
+        let replicas: Vec<Replica> = (0..n)
+            .map(|_| {
+                let (tx, _rx) = channel();
+                Replica::new(tx)
+            })
+            .collect();
+        let now = Instant::now();
+        let slots: Vec<Slot> = (0..n)
+            .map(|_| Slot {
+                join: None,
+                heartbeat: Arc::new(AtomicU64::new(0)),
+                last_beat: 0,
+                last_beat_at: now,
+                generation: 0,
+                dispatched: 0,
+            })
+            .collect();
+        let mut sup = Supervisor {
+            factory,
+            metrics,
+            router: Router::new(replicas, cfg.policy),
+            cfg,
+            slots,
+            ledger: HashMap::new(),
+            unassigned: VecDeque::new(),
+            fanin_tx,
+            handback_tx,
+            handback_rx,
+            shutting_down: false,
+            shutdown_acks: Vec::new(),
+        };
+        for i in 0..n {
+            sup.spawn_slot(i, true);
+        }
+        sup
+    }
+
+    /// The supervision loop: control messages, hand-backs, death and
+    /// heartbeat checks, re-dispatch, gauges — every `cfg.poll`.
+    fn run(mut self, ctl_rx: Receiver<PoolMsg>) {
+        loop {
+            match ctl_rx.recv_timeout(self.cfg.poll) {
+                Ok(m) => {
+                    self.handle(m);
+                    loop {
+                        match ctl_rx.try_recv() {
+                            Ok(m) => self.handle(m),
+                            Err(_) => break,
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // every handle is gone; nobody can ack, but drain
+                    // what was accepted before exiting
+                    self.begin_shutdown();
+                }
+            }
+            loop {
+                match self.handback_rx.try_recv() {
+                    Ok(h) => self.requeue_handback(h),
+                    Err(_) => break,
+                }
+            }
+            self.supervise();
+            self.flush_unassigned();
+            self.publish();
+            if self.shutting_down && self.done() {
+                for ack in self.shutdown_acks.drain(..) {
+                    let _ = ack.send(());
+                }
+                return;
+            }
+        }
+    }
+
+    fn handle(&mut self, msg: PoolMsg) {
+        match msg {
+            PoolMsg::Submit(req, reply) => self.accept(req, reply),
+            PoolMsg::Completed(resp) => self.deliver(resp),
+            PoolMsg::Kill(i) => {
+                if i < self.slots.len() {
+                    let _ = self.router.tx(i).send(EngineMsg::Crash);
+                }
+            }
+            PoolMsg::Stall(i, ms) => {
+                if i < self.slots.len() {
+                    let _ =
+                        self.router.tx(i).send(EngineMsg::Stall(ms));
+                }
+            }
+            PoolMsg::Drain(i) => self.drain(i),
+            PoolMsg::Restart(i) => {
+                if i < self.slots.len()
+                    && self.router.health(i) == Health::Down
+                    && !self.shutting_down
+                {
+                    EngineMetrics::inc(
+                        &self.metrics.replica_restarts,
+                        1,
+                    );
+                    self.spawn_slot(i, false);
+                }
+            }
+            PoolMsg::Snapshot(tx) => {
+                let _ = tx.send(self.snapshot());
+            }
+            PoolMsg::Shutdown(ack) => {
+                self.begin_shutdown();
+                if let Some(a) = ack {
+                    if self.done() {
+                        let _ = a.send(());
+                    } else {
+                        self.shutdown_acks.push(a);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accept a request into the ledger (or refuse it with a typed
+    /// response when the pool is shutting down / the id is taken).
+    fn accept(&mut self, req: Request, reply: Sender<Response>) {
+        let id = req.id;
+        if self.shutting_down {
+            refuse(&reply, id, "pool is shutting down");
+            return;
+        }
+        if self.ledger.contains_key(&id) {
+            refuse(&reply, id, "duplicate request id");
+            return;
+        }
+        self.ledger.insert(
+            id,
+            Entry { replica: None, req, reply, attempts: 0 },
+        );
+        self.unassigned.push_back(id);
+    }
+
+    /// Forward the first response for an id to its client; drop any
+    /// later copy (a fenced-off zombie answering a request that was
+    /// already re-dispatched — token-identical either way).
+    fn deliver(&mut self, resp: Response) {
+        match self.ledger.remove(&resp.id) {
+            Some(e) => {
+                if let Some(i) = e.replica {
+                    self.router.complete(i);
+                }
+                let _ = e.reply.send(resp);
+            }
+            None => {
+                EngineMetrics::inc(
+                    &self.metrics.replica_stale_replies,
+                    1,
+                );
+            }
+        }
+    }
+
+    /// Begin a graceful drain of replica `i`.
+    fn drain(&mut self, i: usize) {
+        if i >= self.slots.len()
+            || self.router.health(i) != Health::Up
+        {
+            return;
+        }
+        EngineMetrics::inc(&self.metrics.replica_drains, 1);
+        self.router.set_health(i, Health::Draining);
+        if self
+            .router
+            .tx(i)
+            .send(EngineMsg::Drain(self.handback_tx.clone()))
+            .is_err()
+        {
+            // already dead; supervision will fail it over
+            self.router.set_health(i, Health::Down);
+        }
+    }
+
+    /// A drained request re-enters the dispatch queue without
+    /// consuming failover budget. The engine's `HandedBack.reply` is
+    /// the fan-in sender, not the client — the ledger entry owns the
+    /// real reply channel, so an entry-less hand-back (the request was
+    /// already answered) is simply dropped.
+    fn requeue_handback(&mut self, h: HandedBack) {
+        let id = h.req.id;
+        if let Some(e) = self.ledger.get_mut(&id) {
+            if let Some(i) = e.replica.take() {
+                self.router.complete(i);
+            }
+            if !self.unassigned.contains(&id) {
+                self.unassigned.push_back(id);
+            }
+        }
+    }
+
+    /// Spawn (or respawn) slot `i`: fresh channel, fresh heartbeat,
+    /// engine factory runs inside the new thread. The slot is
+    /// `Restarting` until its first heartbeat.
+    fn spawn_slot(&mut self, i: usize, initial: bool) {
+        let gen = if initial {
+            self.slots[i].generation
+        } else {
+            self.slots[i].generation + 1
+        };
+        let (tx, rx) = channel::<EngineMsg>();
+        let beat = Arc::new(AtomicU64::new(0));
+        let factory = self.factory.clone();
+        let thread_beat = beat.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("replica-{i}.g{gen}"))
+            .spawn(move || {
+                let mut engine = match factory(i) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        return ReplicaExit::BindFailed(format!(
+                            "{e:#}"
+                        ))
+                    }
+                };
+                engine.set_heartbeat(thread_beat);
+                let ran = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(move || {
+                        engine.run(rx)
+                    }),
+                );
+                match ran {
+                    Ok(Ok(())) => ReplicaExit::Clean,
+                    Ok(Err(e)) => {
+                        ReplicaExit::Failed(format!("{e:#}"))
+                    }
+                    Err(p) => {
+                        ReplicaExit::Panicked(panic_text(p.as_ref()))
+                    }
+                }
+            });
+        match spawned {
+            Ok(join) => {
+                self.router.rebind(i, tx);
+                let s = &mut self.slots[i];
+                s.join = Some(join);
+                s.heartbeat = beat;
+                s.last_beat = 0;
+                s.last_beat_at = Instant::now();
+                s.generation = gen;
+            }
+            Err(e) => {
+                crate::warn_log!(
+                    "replica {i}: thread spawn failed ({e}); slot down"
+                );
+                self.router.set_health(i, Health::Down);
+            }
+        }
+    }
+
+    /// Death and liveness checks for every slot.
+    fn supervise(&mut self) {
+        for i in 0..self.slots.len() {
+            match self.router.health(i) {
+                Health::Down => {}
+                Health::Draining => {
+                    if self.slot_finished(i) {
+                        // deliberate exit; anything still on the books
+                        // (a hand-back raced the exit) re-dispatches
+                        // without penalty
+                        self.reap(i);
+                        self.failover(i, false);
+                        self.router.set_health(i, Health::Down);
+                    }
+                }
+                Health::Up | Health::Restarting => {
+                    if self.slot_finished(i) {
+                        self.on_death(i);
+                    } else {
+                        self.check_heartbeat(i);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Has slot `i`'s current thread exited?
+    fn slot_finished(&self, i: usize) -> bool {
+        self.slots[i]
+            .join
+            .as_ref()
+            .is_some_and(|j| j.is_finished())
+    }
+
+    /// Join a finished slot thread and log how it ended.
+    fn reap(&mut self, i: usize) -> Option<ReplicaExit> {
+        let join = self.slots[i].join.take()?;
+        match join.join() {
+            Ok(exit) => {
+                let what = match &exit {
+                    ReplicaExit::Clean => "exited cleanly".into(),
+                    ReplicaExit::Failed(e) => format!("failed: {e}"),
+                    ReplicaExit::Panicked(p) => {
+                        format!("panicked: {p}")
+                    }
+                    ReplicaExit::BindFailed(e) => {
+                        format!("engine bind failed: {e}")
+                    }
+                };
+                crate::warn_log!("replica {i}: {what}");
+                Some(exit)
+            }
+            Err(_) => {
+                crate::warn_log!("replica {i}: thread died opaquely");
+                Some(ReplicaExit::Panicked("opaque thread death".into()))
+            }
+        }
+    }
+
+    /// An `Up`/`Restarting` replica's thread died: fail its work over
+    /// to survivors and restart the slot (until `max_restarts`).
+    fn on_death(&mut self, i: usize) {
+        let exit = self.reap(i);
+        self.failover(i, true);
+        self.router.set_health(i, Health::Down);
+        let bind_failed =
+            matches!(exit, Some(ReplicaExit::BindFailed(_)));
+        if self.shutting_down {
+            return; // never restart while draining the pool
+        }
+        if self.slots[i].generation + 1 > self.cfg.max_restarts {
+            crate::warn_log!(
+                "replica {i}: restart budget exhausted; slot down"
+            );
+            return;
+        }
+        if bind_failed && self.slots[i].generation >= 1 {
+            // two consecutive bind failures: the factory is broken,
+            // not the replica — stop burning threads on it
+            crate::warn_log!(
+                "replica {i}: engine bind failed twice; slot down"
+            );
+            return;
+        }
+        EngineMetrics::inc(&self.metrics.replica_restarts, 1);
+        self.spawn_slot(i, false);
+    }
+
+    /// Promote a `Restarting` slot at its first heartbeat; fence and
+    /// replace an `Up` slot whose heartbeat stalled past the timeout.
+    fn check_heartbeat(&mut self, i: usize) {
+        let beat = self.slots[i]
+            .heartbeat
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if beat != self.slots[i].last_beat {
+            self.slots[i].last_beat = beat;
+            self.slots[i].last_beat_at = Instant::now();
+            if self.router.health(i) == Health::Restarting && beat > 0
+            {
+                self.router.set_health(i, Health::Up);
+            }
+            return;
+        }
+        let timeout = self.cfg.heartbeat_timeout;
+        if timeout.is_zero()
+            || self.router.health(i) != Health::Up
+            || self.slots[i].last_beat_at.elapsed() <= timeout
+        {
+            return;
+        }
+        // hung: fence the incarnation off (drop its channel so a
+        // late-waking zombie drains into disconnected senders and its
+        // stale replies hit the ledger fence) and bind a replacement
+        crate::warn_log!(
+            "replica {i}: heartbeat stalled past {timeout:?}; \
+             fencing and restarting"
+        );
+        self.slots[i].join = None; // detach the zombie thread
+        self.failover(i, true);
+        if !self.shutting_down
+            && self.slots[i].generation + 1 <= self.cfg.max_restarts
+        {
+            EngineMetrics::inc(&self.metrics.replica_restarts, 1);
+            self.spawn_slot(i, false);
+        } else {
+            self.router.set_health(i, Health::Down);
+        }
+    }
+
+    /// Move every ledger entry assigned to slot `i` back to the
+    /// dispatch queue (deterministic id order). `penalize` charges one
+    /// failover attempt per request — crashes do, drains don't — and
+    /// requests past the budget fail with a `Fatal` response here.
+    fn failover(&mut self, i: usize, penalize: bool) {
+        let mut ids: Vec<u64> = self
+            .ledger
+            .iter()
+            .filter(|(_, e)| e.replica == Some(i))
+            .map(|(id, _)| *id)
+            .collect();
+        if ids.is_empty() {
+            return;
+        }
+        ids.sort_unstable();
+        for id in ids {
+            let Some(e) = self.ledger.get_mut(&id) else { continue };
+            e.replica = None;
+            // the entry no longer counts against the dead slot (a
+            // rebind would also reset the counter, but a slot can go
+            // `Down` for good without one)
+            self.router.complete(i);
+            if penalize {
+                e.attempts += 1;
+                if e.attempts > self.cfg.max_redispatch {
+                    let n = e.attempts - 1;
+                    if let Some(e) = self.ledger.remove(&id) {
+                        fail(
+                            &e.reply,
+                            id,
+                            format!(
+                                "giving up after {n} replica \
+                                 failovers"
+                            ),
+                        );
+                    }
+                    continue;
+                }
+                EngineMetrics::inc(
+                    &self.metrics.replica_redispatches,
+                    1,
+                );
+            }
+            if !self.unassigned.contains(&id) {
+                self.unassigned.push_back(id);
+            }
+        }
+    }
+
+    /// Dispatch every queued request to an `Up` replica. With nothing
+    /// routable: wait if a replica is restarting, otherwise answer
+    /// each request with a typed refusal so exactly-once still holds.
+    fn flush_unassigned(&mut self) {
+        while let Some(id) = self.unassigned.pop_front() {
+            let Some(entry) = self.ledger.get(&id) else {
+                continue; // already answered (stale queue slot)
+            };
+            if self.router.n_up() == 0 {
+                let restarting = (0..self.slots.len()).any(|i| {
+                    self.router.health(i) == Health::Restarting
+                });
+                if restarting && !self.shutting_down {
+                    // a fresh bind is coming; hold the queue
+                    self.unassigned.push_front(id);
+                    return;
+                }
+                if let Some(e) = self.ledger.remove(&id) {
+                    let why = if self.shutting_down {
+                        "pool is shutting down"
+                    } else {
+                        "no replicas available"
+                    };
+                    refuse(&e.reply, id, why);
+                }
+                continue;
+            }
+            let req = entry.req.clone();
+            match self.router.dispatch(req, self.fanin_tx.clone()) {
+                Ok(i) => {
+                    if let Some(e) = self.ledger.get_mut(&id) {
+                        e.replica = Some(i);
+                    }
+                    self.slots[i].dispatched += 1;
+                }
+                Err(_) => {
+                    // the picked replica died mid-send (dispatch
+                    // already downed it); retry on the next pass
+                    self.unassigned.push_front(id);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Start the graceful pool shutdown exactly once: refuse new
+    /// work, flush what is queued, then ask every replica to finish
+    /// and exit.
+    fn begin_shutdown(&mut self) {
+        if self.shutting_down {
+            return;
+        }
+        self.shutting_down = true;
+        self.flush_unassigned();
+        self.router.shutdown();
+    }
+
+    /// Shutdown is complete when every accepted request has been
+    /// answered and every replica thread has exited.
+    fn done(&mut self) -> bool {
+        if !self.ledger.is_empty() || !self.unassigned.is_empty() {
+            return false;
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].join.is_some() {
+                if !self.slot_finished(i) {
+                    return false;
+                }
+                self.reap(i);
+                self.router.set_health(i, Health::Down);
+            }
+        }
+        true
+    }
+
+    fn snapshot(&self) -> Vec<ReplicaStat> {
+        (0..self.slots.len())
+            .map(|i| ReplicaStat {
+                index: i,
+                health: self.router.health(i),
+                outstanding: self.router.outstanding(i),
+                generation: self.slots[i].generation,
+                dispatched: self.slots[i].dispatched,
+                beats: self.slots[i]
+                    .heartbeat
+                    .load(std::sync::atomic::Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    fn publish(&self) {
+        EngineMetrics::set(
+            &self.metrics.replicas_total,
+            self.slots.len() as u64,
+        );
+        EngineMetrics::set(
+            &self.metrics.replicas_up,
+            self.router.n_up() as u64,
+        );
+    }
+}
+
+/// Answer a request with a `Rejected` response (pool-level refusal).
+fn refuse(reply: &Sender<Response>, id: u64, why: &str) {
+    let _ = reply.send(Response {
+        id,
+        tokens: Vec::new(),
+        ttft_secs: 0.0,
+        e2e_secs: 0.0,
+        prefill_artifact: String::new(),
+        error: Some(RequestError::rejected(why)),
+    });
+}
+
+/// Answer a request with a `Fatal` response (failover budget spent).
+fn fail(reply: &Sender<Response>, id: u64, why: String) {
+    let _ = reply.send(Response {
+        id,
+        tokens: Vec::new(),
+        ttft_secs: 0.0,
+        e2e_secs: 0.0,
+        prefill_artifact: String::new(),
+        error: Some(RequestError::fatal(why)),
+    });
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Where the TCP front door sends work: one engine's channel (the
+/// single-replica deployment, byte-identical to the pre-pool path) or
+/// a supervised pool.
+#[derive(Clone)]
+pub enum Gateway {
+    /// a single engine behind a plain message channel
+    Direct(Sender<EngineMsg>),
+    /// a supervised replica pool
+    Pool(PoolHandle),
+}
+
+impl Gateway {
+    /// Submit a request; the response arrives on `reply` exactly once
+    /// (or an error is returned and nothing was accepted).
+    pub fn submit(
+        &self,
+        req: Request,
+        reply: Sender<Response>,
+    ) -> Result<()> {
+        match self {
+            Gateway::Direct(tx) => tx
+                .send(EngineMsg::Submit(req, reply))
+                .map_err(|_| anyhow::anyhow!("engine is gone")),
+            Gateway::Pool(h) => h.submit(req, reply),
+        }
+    }
+
+    /// Begin a graceful shutdown of whatever is behind the gateway:
+    /// in-flight and queued work finishes, then the serve loop(s)
+    /// exit.
+    pub fn begin_shutdown(&self) {
+        match self {
+            Gateway::Direct(tx) => {
+                let _ = tx.send(EngineMsg::Shutdown);
+            }
+            Gateway::Pool(h) => h.begin_shutdown(),
+        }
+    }
+}

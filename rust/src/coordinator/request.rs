@@ -156,6 +156,23 @@ pub struct Response {
     pub error: Option<RequestError>,
 }
 
+/// A not-yet-finished request handed back by a draining engine
+/// ([`super::scheduler::EngineMsg::Drain`]): it has received **no**
+/// response, so whoever drains the replica owns re-dispatching it.
+/// The pipeline is deterministic and recomputes from scratch, so a
+/// survivor replica serves it token-identically.
+pub struct HandedBack {
+    /// the request, untouched (generated tokens are discarded — replay
+    /// recomputes from the prompt)
+    pub req: Request,
+    /// where its eventual response must go
+    pub reply: Sender<Response>,
+    /// transient-failure retries the request had already consumed on
+    /// the draining replica, for supervisors that account retry budget
+    /// across replicas
+    pub retries: u32,
+}
+
 /// A request in flight inside the engine.
 pub struct Tracked {
     /// the request itself

@@ -1,16 +1,24 @@
-//! Request router: fronts one or more engine replicas.
+//! Health-aware request router: fronts one or more engine replicas.
 //!
-//! Policies: round-robin, least-outstanding. On this single-core testbed a
-//! single replica is the normal deployment; the router exists so the
-//! serving stack has the full shape of the paper's target environment
-//! (8-NPU node = 8 replicas behind one router) and is exercised by unit +
-//! property tests.
+//! Policies: round-robin, least-outstanding, and prefix-affinity
+//! (hash the block-aligned prompt prefix so prefix-cache siblings
+//! land on the same replica, spilling to least-outstanding when the
+//! affinity target is overloaded or unhealthy). Every policy skips
+//! replicas that are not [`Health::Up`]; with zero routable replicas
+//! selection returns a typed [`RouteError`] instead of panicking.
+//!
+//! On this single-core testbed a single replica is the normal
+//! deployment; the router exists so the serving stack has the full
+//! shape of the paper's target environment (8-NPU node = 8 replicas
+//! behind one router). The [`super::replica::ReplicaPool`] supervisor
+//! drives the health states; unit + property tests exercise the rest.
 
-use std::sync::mpsc::Sender;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::request::{Request, Response};
 use super::scheduler::EngineMsg;
@@ -18,11 +26,76 @@ use super::scheduler::EngineMsg;
 /// Replica-selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
-    /// cycle through replicas in order
+    /// cycle through healthy replicas in order
     RoundRobin,
-    /// pick the replica with the fewest requests in flight
+    /// pick the healthy replica with the fewest requests in flight
     LeastOutstanding,
+    /// hash the block-aligned prompt prefix to a home replica, so
+    /// requests sharing a cached prefix land on the same replica's
+    /// prefix cache; spill to least-outstanding when the home replica
+    /// is not `Up` or already has `spill_at` requests in flight
+    PrefixAffinity {
+        /// prefix tokens are hashed in blocks of this many tokens
+        /// (use the KV block size so the hashed span is exactly the
+        /// cacheable span); 0 hashes the whole prompt
+        block: usize,
+        /// spill to least-outstanding when the home replica has this
+        /// many requests outstanding (0 = never spill on load)
+        spill_at: u64,
+    },
 }
+
+/// Replica health as seen by the router. Only `Up` replicas receive
+/// new work; the supervisor walks replicas through the other states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// serving; routable
+    Up,
+    /// graceful drain in progress: finishing in-flight work, not
+    /// admitting — the router must not send it anything new
+    Draining,
+    /// dead (crashed, hung, or drained to completion); not routable
+    Down,
+    /// a fresh engine is binding after a restart; not routable until
+    /// its first heartbeat
+    Restarting,
+}
+
+impl Health {
+    /// Short lowercase label for logs and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Health::Up => "up",
+            Health::Draining => "draining",
+            Health::Down => "down",
+            Health::Restarting => "restarting",
+        }
+    }
+}
+
+/// Typed selection failure: the caller decides whether to park the
+/// request (replicas are restarting) or reject it (pool is empty /
+/// everything is gone for good). Never a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// the router fronts zero replicas
+    NoReplicas,
+    /// every replica is unroutable (draining, down, or restarting)
+    AllDown,
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::NoReplicas => write!(f, "no replicas"),
+            RouteError::AllDown => {
+                write!(f, "no routable replica (all down or draining)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// One engine replica behind the router.
 pub struct Replica {
@@ -30,6 +103,19 @@ pub struct Replica {
     pub tx: Sender<EngineMsg>,
     /// requests dispatched but not yet completed
     pub outstanding: Arc<AtomicU64>,
+    /// router-visible health; only `Up` receives new work
+    pub health: Health,
+}
+
+impl Replica {
+    /// A fresh `Up` replica behind `tx` with zero outstanding work.
+    pub fn new(tx: Sender<EngineMsg>) -> Replica {
+        Replica {
+            tx,
+            outstanding: Arc::new(AtomicU64::new(0)),
+            health: Health::Up,
+        }
+    }
 }
 
 /// Fronts one or more engine replicas (module docs).
@@ -39,60 +125,171 @@ pub struct Router {
     rr_next: usize,
 }
 
+/// FNV-1a over the little-endian bytes of the token ids. Hand-rolled
+/// so the affinity mapping is deterministic across runs and Rust
+/// versions (`DefaultHasher` promises neither).
+fn fnv1a(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The affinity key of a prompt: FNV-1a over its block-aligned prefix
+/// (the span the prefix cache can actually share). Prompts shorter
+/// than one block hash whole, so short siblings still co-locate.
+pub fn affinity_hash(prompt: &[i32], block: usize) -> u64 {
+    let aligned = if block == 0 {
+        prompt.len()
+    } else {
+        (prompt.len() / block) * block
+    };
+    let span = if aligned == 0 { prompt.len() } else { aligned };
+    fnv1a(&prompt[..span])
+}
+
 impl Router {
     /// A router over `replicas` with the given policy.
     pub fn new(replicas: Vec<Replica>, policy: Policy) -> Router {
         Router { replicas, policy, rr_next: 0 }
     }
 
-    /// Replica count.
+    /// Replica count (any health).
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
     }
 
-    /// Pick a replica index for the next request.
-    pub fn pick(&mut self) -> Result<usize> {
-        if self.replicas.is_empty() {
-            bail!("no replicas");
-        }
-        Ok(match self.policy {
-            Policy::RoundRobin => {
-                let i = self.rr_next % self.replicas.len();
-                self.rr_next = (self.rr_next + 1) % self.replicas.len();
-                i
-            }
-            Policy::LeastOutstanding => self
-                .replicas
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, r)| r.outstanding.load(Ordering::Relaxed))
-                .map(|(i, _)| i)
-                .unwrap(),
-        })
+    /// Replicas currently `Up`.
+    pub fn n_up(&self) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| r.health == Health::Up)
+            .count()
     }
 
-    /// Route one request to a replica; returns the replica index.
+    /// A replica's health.
+    pub fn health(&self, i: usize) -> Health {
+        self.replicas[i].health
+    }
+
+    /// Set a replica's health (the supervisor's lifecycle hook).
+    pub fn set_health(&mut self, i: usize, h: Health) {
+        self.replicas[i].health = h;
+    }
+
+    /// A replica's outstanding-request count.
+    pub fn outstanding(&self, i: usize) -> u64 {
+        self.replicas[i].outstanding.load(Ordering::Relaxed)
+    }
+
+    /// A replica's message channel (for drain/chaos control messages).
+    pub fn tx(&self, i: usize) -> &Sender<EngineMsg> {
+        &self.replicas[i].tx
+    }
+
+    /// Swap in a restarted replica's fresh channel: outstanding resets
+    /// to zero (the supervisor re-dispatched or failed everything the
+    /// old incarnation held) and health moves to `Restarting` until
+    /// its first heartbeat.
+    pub fn rebind(&mut self, i: usize, tx: Sender<EngineMsg>) {
+        let r = &mut self.replicas[i];
+        r.tx = tx;
+        r.outstanding.store(0, Ordering::Relaxed);
+        r.health = Health::Restarting;
+    }
+
+    /// The `Up` replica with the fewest outstanding requests (ties to
+    /// the lowest index), if any is `Up`.
+    fn least_outstanding(&self) -> Option<usize> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.health == Health::Up)
+            .min_by_key(|(i, r)| {
+                (r.outstanding.load(Ordering::Relaxed), *i)
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Pick a replica index for `req`. Only `Up` replicas are
+    /// candidates; with none routable this is a typed [`RouteError`],
+    /// never a panic.
+    pub fn pick(&mut self, req: &Request) -> Result<usize, RouteError> {
+        if self.replicas.is_empty() {
+            return Err(RouteError::NoReplicas);
+        }
+        let n = self.replicas.len();
+        match self.policy {
+            Policy::RoundRobin => {
+                for k in 0..n {
+                    let i = (self.rr_next + k) % n;
+                    if self.replicas[i].health == Health::Up {
+                        self.rr_next = (i + 1) % n;
+                        return Ok(i);
+                    }
+                }
+                Err(RouteError::AllDown)
+            }
+            Policy::LeastOutstanding => {
+                self.least_outstanding().ok_or(RouteError::AllDown)
+            }
+            Policy::PrefixAffinity { block, spill_at } => {
+                // home replica from the stable hash over ALL slots, so
+                // the mapping survives restarts of other replicas
+                let home =
+                    (affinity_hash(&req.prompt, block) % n as u64)
+                        as usize;
+                let r = &self.replicas[home];
+                let loaded = spill_at > 0
+                    && r.outstanding.load(Ordering::Relaxed) >= spill_at;
+                if r.health == Health::Up && !loaded {
+                    return Ok(home);
+                }
+                // spill: the home replica is unhealthy or overloaded
+                self.least_outstanding().ok_or(RouteError::AllDown)
+            }
+        }
+    }
+
+    /// Route one request to a replica; returns the replica index. A
+    /// failed send (replica channel closed — it died between the
+    /// health check and the send) rolls the outstanding counter back
+    /// and marks the replica `Down`, so one dead replica can never
+    /// permanently bias `LeastOutstanding` toward itself.
     pub fn dispatch(
         &mut self,
         req: Request,
         reply: Sender<Response>,
     ) -> Result<usize> {
-        let i = self.pick()?;
-        self.replicas[i]
-            .outstanding
-            .fetch_add(1, Ordering::Relaxed);
-        self.replicas[i]
+        let i = self.pick(&req)?;
+        self.replicas[i].outstanding.fetch_add(1, Ordering::Relaxed);
+        if self.replicas[i]
             .tx
             .send(EngineMsg::Submit(req, reply))
-            .map_err(|_| anyhow::anyhow!("replica {i} channel closed"))?;
+            .is_err()
+        {
+            // roll back the optimistic increment — the request never
+            // reached the replica
+            self.complete(i);
+            self.replicas[i].health = Health::Down;
+            return Err(anyhow::anyhow!("replica {i} channel closed"));
+        }
         Ok(i)
     }
 
-    /// Called by the completion fan-in when a response arrives.
+    /// Called by the completion fan-in when a response arrives (and by
+    /// the dispatch rollback). Saturating: a stray double-complete
+    /// must not wrap the gauge to u64::MAX and poison the policy.
     pub fn complete(&self, replica: usize) {
-        self.replicas[replica]
-            .outstanding
-            .fetch_sub(1, Ordering::Relaxed);
+        let _ = self.replicas[replica].outstanding.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
     }
 
     /// Send shutdown to every replica.
@@ -109,15 +306,15 @@ mod tests {
     use crate::coordinator::request::SparsityConfig;
     use std::sync::mpsc::channel;
 
-    fn mk_router(n: usize, policy: Policy) -> (Router, Vec<std::sync::mpsc::Receiver<EngineMsg>>) {
+    fn mk_router(
+        n: usize,
+        policy: Policy,
+    ) -> (Router, Vec<std::sync::mpsc::Receiver<EngineMsg>>) {
         let mut reps = Vec::new();
         let mut rxs = Vec::new();
         for _ in 0..n {
             let (tx, rx) = channel();
-            reps.push(Replica {
-                tx,
-                outstanding: Arc::new(AtomicU64::new(0)),
-            });
+            reps.push(Replica::new(tx));
             rxs.push(rx);
         }
         (Router::new(reps, policy), rxs)
@@ -133,6 +330,10 @@ mod tests {
         }
     }
 
+    fn req_with_prompt(id: u64, prompt: Vec<i32>) -> Request {
+        Request { prompt, ..req(id) }
+    }
+
     #[test]
     fn round_robin_cycles() {
         let (mut r, rxs) = mk_router(3, Policy::RoundRobin);
@@ -145,6 +346,17 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_skips_unhealthy() {
+        let (mut r, _rxs) = mk_router(3, Policy::RoundRobin);
+        let (tx, _rx) = channel();
+        r.set_health(1, Health::Down);
+        let picks: Vec<usize> = (0..4)
+            .map(|i| r.dispatch(req(i), tx.clone()).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
     fn least_outstanding_balances() {
         let (mut r, _rxs) = mk_router(2, Policy::LeastOutstanding);
         let (tx, _rx) = channel();
@@ -154,5 +366,88 @@ mod tests {
         // replica 0 now has 0 outstanding, replica 1 has 1
         let i = r.dispatch(req(2), tx).unwrap();
         assert_eq!(i, 0);
+    }
+
+    #[test]
+    fn all_down_is_a_typed_error_not_a_panic() {
+        for policy in [
+            Policy::RoundRobin,
+            Policy::LeastOutstanding,
+            Policy::PrefixAffinity { block: 16, spill_at: 0 },
+        ] {
+            let (mut r, _rxs) = mk_router(2, policy);
+            r.set_health(0, Health::Down);
+            r.set_health(1, Health::Draining);
+            assert_eq!(r.pick(&req(0)), Err(RouteError::AllDown));
+        }
+        let (mut empty, _) = mk_router(0, Policy::LeastOutstanding);
+        assert_eq!(empty.pick(&req(0)), Err(RouteError::NoReplicas));
+    }
+
+    #[test]
+    fn failed_send_rolls_back_outstanding_and_downs_the_replica() {
+        // regression: the counter leak used to bias LeastOutstanding
+        // toward a dead replica forever (fetch_add before a failed
+        // send, no decrement on the error path)
+        let (mut r, mut rxs) = mk_router(2, Policy::LeastOutstanding);
+        let (tx, _rx) = channel();
+        drop(rxs.remove(0)); // replica 0's engine is gone
+        let err = r.dispatch(req(0), tx.clone());
+        assert!(err.is_err());
+        assert_eq!(r.outstanding(0), 0, "no leak on the error path");
+        assert_eq!(r.health(0), Health::Down);
+        // and the survivor keeps serving
+        let i = r.dispatch(req(1), tx).unwrap();
+        assert_eq!(i, 1);
+    }
+
+    #[test]
+    fn prefix_affinity_colocates_and_spills() {
+        let policy = Policy::PrefixAffinity { block: 4, spill_at: 2 };
+        let (mut r, _rxs) = mk_router(4, policy);
+        let (tx, _rx) = channel();
+        // identical block-aligned prefixes land on one replica even
+        // when the tails differ
+        let shared: Vec<i32> = (1..=8).collect();
+        let mut a = shared.clone();
+        a.extend([91, 92]);
+        let mut b = shared.clone();
+        b.extend([71]);
+        let ia = r.dispatch(req_with_prompt(0, a.clone()), tx.clone());
+        let ib = r.dispatch(req_with_prompt(1, b.clone()), tx.clone());
+        let home = ia.unwrap();
+        assert_eq!(home, ib.unwrap(), "siblings share a home replica");
+        // the sub-block tail does not change the key...
+        assert_eq!(
+            affinity_hash(&a, 4),
+            affinity_hash(&b, 4),
+            "tail past the aligned prefix is ignored"
+        );
+        // ...but at spill_at outstanding the home overflows to the
+        // least-outstanding survivor
+        let ic = r
+            .dispatch(req_with_prompt(2, shared.clone()), tx.clone())
+            .unwrap();
+        assert_ne!(ic, home, "overloaded home spills");
+        // a downed home also spills instead of failing
+        r.set_health(home, Health::Down);
+        let id = r.dispatch(req_with_prompt(3, shared), tx).unwrap();
+        assert_ne!(id, home);
+    }
+
+    #[test]
+    fn rebind_resets_outstanding_and_requires_health_promotion() {
+        let (mut r, _rxs) = mk_router(1, Policy::LeastOutstanding);
+        let (tx, _rx) = channel();
+        r.dispatch(req(0), tx.clone()).unwrap();
+        assert_eq!(r.outstanding(0), 1);
+        let (ntx, _nrx) = channel();
+        r.rebind(0, ntx);
+        assert_eq!(r.outstanding(0), 0);
+        assert_eq!(r.health(0), Health::Restarting);
+        // not routable until the supervisor promotes it
+        assert_eq!(r.pick(&req(1)), Err(RouteError::AllDown));
+        r.set_health(0, Health::Up);
+        assert!(r.pick(&req(1)).is_ok());
     }
 }

@@ -38,6 +38,7 @@
 //! default [`crate::runtime::Engine::decode_paged`] gather.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -50,7 +51,9 @@ use super::fault::{FaultKind, FaultPlan, FaultSite};
 use super::kv::KvPages;
 use super::paged::DEFAULT_BLOCK;
 use super::prefix::PrefixCache;
-use super::request::{Request, Response, SparsityConfig, Tracked};
+use super::request::{
+    HandedBack, Request, Response, SparsityConfig, Tracked,
+};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{
     Engine as ExecEngine, PrefixedPrompt, SparsityAudit,
@@ -176,8 +179,25 @@ fn default_pool_threads() -> usize {
 pub enum EngineMsg {
     /// Enqueue a request; the response goes to the provided sender.
     Submit(Request, Sender<Response>),
-    /// Drain remaining work, then exit the serve loop.
+    /// Finish remaining work (queued included), then exit the serve
+    /// loop.
     Shutdown,
+    /// Graceful drain: stop admitting, hand queued/parked work back
+    /// through the sender un-replied, finish what is already in
+    /// flight, then exit the serve loop. New submits arriving during
+    /// the drain are handed back immediately instead of admitted.
+    Drain(Sender<HandedBack>),
+    /// Chaos hook: panic out of the serve loop, abandoning every
+    /// in-flight request *without* a reply — the deterministic stand-in
+    /// for a replica process dying. The panic escapes [`Engine::run`]
+    /// (it is raised outside the per-step unwind boundary), so a
+    /// supervisor observes a dead thread exactly as it would for a
+    /// real crash.
+    Crash,
+    /// Chaos hook: block the serve loop for this many milliseconds
+    /// without dying, so heartbeat supervision sees a stalled (not
+    /// dead) replica.
+    Stall(u64),
 }
 
 struct ActiveSeq {
@@ -263,6 +283,12 @@ pub struct Engine {
     faults: FaultPlan,
     /// transiently-failed requests waiting out their retry backoff
     parked: Vec<Parked>,
+    /// set while a graceful drain is in progress: queued/parked work
+    /// (and any new submit) is handed back here instead of served
+    drain_to: Option<Sender<HandedBack>>,
+    /// liveness beacon: [`Engine::run`] stores a fresh value here every
+    /// loop iteration so a supervisor can detect a hung loop
+    heartbeat: Option<Arc<AtomicU64>>,
 }
 
 impl Engine {
@@ -337,7 +363,18 @@ impl Engine {
             completed: 0,
             tick: 0,
             parked: Vec::new(),
+            drain_to: None,
+            heartbeat: None,
         })
+    }
+
+    /// Install a liveness beacon: every [`Engine::run`] loop iteration
+    /// stores a monotonically increasing value into `beat`. The loop
+    /// beats even when idle (the idle path still polls and steps), so
+    /// a beat that stops moving really means a stalled serve loop —
+    /// the replica supervisor's missed-heartbeat signal.
+    pub fn set_heartbeat(&mut self, beat: Arc<AtomicU64>) {
+        self.heartbeat = Some(beat);
     }
 
     /// Enqueue a request into its config bucket, running admission
@@ -409,6 +446,13 @@ impl Engine {
     /// engine starts warm (see the warm-restart test); use
     /// [`Engine::clear_prefix_cache`] to drain it explicitly.
     ///
+    /// [`EngineMsg::Drain`] turns the loop into a graceful drain:
+    /// queued and parked requests are handed back un-replied through
+    /// the drain sender (see [`HandedBack`]), in-flight work finishes
+    /// and replies normally, and the loop exits once empty. Because
+    /// the pipeline is deterministic, a handed-back request recomputed
+    /// elsewhere is token-identical — drain loses nothing.
+    ///
     /// This is also the fault boundary: a panicking or erroring
     /// [`Engine::step`] fails the in-flight requests with `Fatal`
     /// responses and keeps serving — after a panic, only once a
@@ -417,6 +461,11 @@ impl Engine {
     pub fn run(&mut self, rx: Receiver<EngineMsg>) -> Result<()> {
         let mut open = true;
         loop {
+            // liveness beacon: beats every iteration, idle or busy, so
+            // a supervisor can tell "hung" from "quiet"
+            if let Some(beat) = &self.heartbeat {
+                beat.store(self.tick + 1, Ordering::Relaxed);
+            }
             // drain incoming messages (non-blocking while work pending)
             let busy = !self.queues.is_empty()
                 || !self.active.is_empty()
@@ -441,10 +490,42 @@ impl Engine {
                     None
                 };
                 match msg {
-                    Some(EngineMsg::Submit(r, tx)) => self.submit(r, tx),
+                    Some(EngineMsg::Submit(r, tx)) => {
+                        if self.drain_to.is_some() {
+                            self.hand_back_submit(r, tx);
+                        } else {
+                            self.submit(r, tx);
+                        }
+                    }
                     Some(EngineMsg::Shutdown) => open = false,
+                    Some(EngineMsg::Drain(tx)) => {
+                        self.drain_to = Some(tx);
+                        open = false;
+                    }
+                    Some(EngineMsg::Crash) => {
+                        // outside the per-step unwind boundary on
+                        // purpose: the panic escapes `run`, the thread
+                        // dies, and in-flight requests go unanswered —
+                        // a faithful stand-in for a replica crash
+                        panic!(
+                            "injected replica crash at tick {}",
+                            self.tick
+                        );
+                    }
+                    Some(EngineMsg::Stall(ms)) => {
+                        crate::warn_log!(
+                            "injected stall: serve loop blocked {ms} ms"
+                        );
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
                     None => break,
                 }
+            }
+            // a drain keeps handing back anything that lands in the
+            // queues after the initial sweep (preemptions, woken
+            // retries) — in-flight work still finishes normally
+            if self.drain_to.is_some() {
+                self.hand_back_waiting();
             }
             if !open
                 && self.queues.is_empty()
@@ -452,11 +533,13 @@ impl Engine {
                 && self.flight.is_empty()
                 && self.parked.is_empty()
             {
+                self.drain_to = None;
                 return Ok(());
             }
             if self.cfg.run_until > 0
                 && self.completed >= self.cfg.run_until
             {
+                self.drain_to = None;
                 return Ok(());
             }
             // the unwind boundary: one bad request or backend bug must
@@ -533,6 +616,86 @@ impl Engine {
             );
         }
         self.publish_paging();
+    }
+
+    /// Refuse a submit that arrived mid-drain: it goes straight back
+    /// out through the drain sender, never into the queues.
+    fn hand_back_submit(&mut self, req: Request, reply: Sender<Response>) {
+        let id = req.id;
+        let Some(tx) = self.drain_to.clone() else { return };
+        EngineMetrics::inc(&self.metrics.replica_handbacks, 1);
+        let hb = HandedBack { req, reply, retries: 0 };
+        if let Err(back) = tx.send(hb) {
+            // drain receiver gone: nobody can re-dispatch this request,
+            // so answer it here rather than lose it
+            let hb = back.0;
+            crate::warn_log!(
+                "request {id}: drain hand-back receiver dropped; \
+                 failing the request"
+            );
+            let t = Tracked {
+                req: hb.req,
+                arrived: Instant::now(),
+                first_token_at: None,
+                generated: Vec::new(),
+                reply: hb.reply,
+                retries: hb.retries,
+                deadline_at: None,
+            };
+            self.finish_with_error(
+                t,
+                ErrorKind::Fatal,
+                "drain hand-back receiver dropped".into(),
+            );
+        }
+    }
+
+    /// The drain sweep: empty the prefill queues and the retry park,
+    /// handing every waiting request back un-replied (oldest arrival
+    /// first) through the drain sender. Runs every loop iteration
+    /// while a drain is active, so work that re-enters the queues
+    /// mid-drain (preemptions, woken retries) is handed back too.
+    fn hand_back_waiting(&mut self) {
+        let Some(tx) = self.drain_to.clone() else { return };
+        let mut waiting = self.queues.drain_all();
+        for p in std::mem::take(&mut self.parked) {
+            waiting.push(p.tracked);
+        }
+        if waiting.is_empty() {
+            return;
+        }
+        waiting.sort_by_key(|t| (t.arrived, t.req.id));
+        for t in waiting {
+            let id = t.req.id;
+            EngineMetrics::inc(&self.metrics.replica_handbacks, 1);
+            let arrived = t.arrived;
+            let hb = HandedBack {
+                req: t.req,
+                reply: t.reply,
+                retries: t.retries,
+            };
+            if let Err(back) = tx.send(hb) {
+                let hb = back.0;
+                crate::warn_log!(
+                    "request {id}: drain hand-back receiver dropped; \
+                     failing the request"
+                );
+                let t = Tracked {
+                    req: hb.req,
+                    arrived,
+                    first_token_at: None,
+                    generated: Vec::new(),
+                    reply: hb.reply,
+                    retries: hb.retries,
+                    deadline_at: None,
+                };
+                self.finish_with_error(
+                    t,
+                    ErrorKind::Fatal,
+                    "drain hand-back receiver dropped".into(),
+                );
+            }
+        }
     }
 
     /// One scheduling iteration: run due prefill chunks *and* the due

@@ -14,11 +14,16 @@
 use std::path::PathBuf;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use amber_pruner::coordinator::replica::{
+    EngineFactory, Gateway, PoolConfig, ReplicaPool,
+};
 use amber_pruner::coordinator::request::SparsityConfig;
 use amber_pruner::coordinator::scheduler::{Engine, EngineConfig, EngineMsg};
+use amber_pruner::server::config::ServeConfig;
 use amber_pruner::eval::{eval_multiple_choice, load_task};
 use amber_pruner::metrics::{EngineMetrics, Timer};
 use amber_pruner::repro::{self, ReproCtx};
@@ -32,8 +37,10 @@ amber — N:M activation-sparse LLM serving (Amber Pruner reproduction)
 USAGE:
   amber info      [--artifacts DIR] [--engine native|pjrt]
   amber serve     [--artifacts DIR] [--model NAME] [--addr HOST:PORT]
+                  [--replicas N] [--config serve.json]
   amber bench-serve [--artifacts DIR] [--model NAME] [--requests N]
                   [--rate R] [--sparsity CFG] [--max-new N]
+                  [--replicas N]
   amber repro     TARGET [--artifacts DIR] [--limit N] [--model NAME]
                   (TARGET: table1 table2 table3 app-table1 fig2 fig34
                            fig6 appc coverage all)
@@ -59,12 +66,13 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     p
 }
 
-/// Build the selected execution backend.
-fn make_engine(
+/// Build the execution backend named by `kind` (callable from replica
+/// threads — backends are not `Send`, so each replica builds its own).
+fn backend_for(
     dir: &std::path::Path,
-    args: &Args,
+    kind: &str,
 ) -> Result<Box<dyn ExecEngine>> {
-    match args.opt("engine").unwrap_or("native") {
+    match kind {
         "native" => engine_for(dir),
         #[cfg(feature = "pjrt")]
         "pjrt" => Ok(Box::new(
@@ -81,11 +89,49 @@ fn make_engine(
     }
 }
 
+/// Build the `--engine`-selected execution backend.
+fn make_engine(
+    dir: &std::path::Path,
+    args: &Args,
+) -> Result<Box<dyn ExecEngine>> {
+    backend_for(dir, args.opt("engine").unwrap_or("native"))
+}
+
+/// Coordinator engine config derived from a serving deployment.
+fn engine_config(scfg: &ServeConfig) -> EngineConfig {
+    let mut ecfg = EngineConfig::new(&scfg.model);
+    ecfg.prefill_seq = scfg.prefill_seq;
+    ecfg.max_wait_secs = scfg.max_wait_ms / 1e3;
+    ecfg.max_retries = scfg.max_retries;
+    if scfg.degrade_at > 0 || scfg.shed_at > 0 {
+        ecfg.degrade_policy =
+            Some(amber_pruner::coordinator::scheduler::DegradePolicy {
+                degrade_at: scfg.degrade_at,
+                shed_at: scfg.shed_at,
+            });
+    }
+    ecfg
+}
+
+/// Replica-pool factory: rebuilds backend + engine inside each replica
+/// thread (and on every supervised restart).
+fn pool_factory(
+    dir: PathBuf,
+    engine_kind: String,
+    scfg: ServeConfig,
+    metrics: Arc<EngineMetrics>,
+) -> EngineFactory {
+    Arc::new(move |_i| {
+        let rt = backend_for(&dir, &engine_kind)?;
+        Engine::new(rt, engine_config(&scfg), Arc::clone(&metrics))
+    })
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env(&[
         "artifacts", "model", "addr", "requests", "rate", "sparsity",
         "max-new", "limit", "artifact", "weights", "task", "config",
-        "engine",
+        "engine", "replicas",
     ])?;
     let cmd = args.positional.first().map(|s| s.as_str());
     match cmd {
@@ -142,10 +188,8 @@ fn info(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let mut scfg = match args.opt("config") {
-        Some(p) => amber_pruner::server::config::ServeConfig::load(
-            std::path::Path::new(p),
-        )?,
-        None => amber_pruner::server::config::ServeConfig::default(),
+        Some(p) => ServeConfig::load(std::path::Path::new(p))?,
+        None => ServeConfig::default(),
     };
     if let Some(m) = args.opt("model") {
         scfg.model = m.to_string();
@@ -153,24 +197,48 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(a) = args.opt("addr") {
         scfg.addr = a.to_string();
     }
+    scfg.replicas = args.opt_usize("replicas", scfg.replicas)?;
     let metrics = Arc::new(EngineMetrics::new());
-    let rt = make_engine(&dir, args)?;
-    let mut ecfg = EngineConfig::new(&scfg.model);
-    ecfg.prefill_seq = scfg.prefill_seq;
-    ecfg.max_wait_secs = scfg.max_wait_ms / 1e3;
-    ecfg.max_retries = scfg.max_retries;
-    if scfg.degrade_at > 0 || scfg.shed_at > 0 {
-        ecfg.degrade_policy =
-            Some(amber_pruner::coordinator::scheduler::DegradePolicy {
-                degrade_at: scfg.degrade_at,
-                shed_at: scfg.shed_at,
-            });
+    if scfg.replicas <= 1 {
+        // classic single-engine deployment: the engine runs on the
+        // main thread, behind a Direct gateway
+        let rt = make_engine(&dir, args)?;
+        let mut engine =
+            Engine::new(rt, engine_config(&scfg), Arc::clone(&metrics))?;
+        let (tx, rx) = channel::<EngineMsg>();
+        let (bound, _h) = tcp::serve(
+            &scfg.addr,
+            Gateway::Direct(tx),
+            Arc::clone(&metrics),
+        )?;
+        println!("serving {} on {bound} (ctrl-c to stop)", scfg.model);
+        engine.run(rx)?;
+        return Ok(());
     }
-    let mut engine = Engine::new(rt, ecfg, Arc::clone(&metrics))?;
-    let (tx, rx) = channel::<EngineMsg>();
-    let (bound, _h) = tcp::serve(&scfg.addr, tx, Arc::clone(&metrics))?;
-    println!("serving {} on {bound} (ctrl-c to stop)", scfg.model);
-    engine.run(rx)?;
+    // supervised replica pool: N engine threads, crash failover,
+    // graceful drain on the TCP `shutdown` command
+    let engine_kind =
+        args.opt("engine").unwrap_or("native").to_string();
+    let factory = pool_factory(
+        dir,
+        engine_kind,
+        scfg.clone(),
+        Arc::clone(&metrics),
+    );
+    let mut pcfg = PoolConfig::new(scfg.replicas);
+    pcfg.heartbeat_timeout = Duration::from_millis(scfg.heartbeat_ms);
+    pcfg.max_redispatch = scfg.max_redispatch;
+    let mut pool =
+        ReplicaPool::start(factory, Arc::clone(&metrics), pcfg)?;
+    let gateway = Gateway::Pool(pool.handle());
+    let (bound, _h) =
+        tcp::serve(&scfg.addr, gateway, Arc::clone(&metrics))?;
+    println!(
+        "serving {} on {bound} across {} replicas \
+         (send {{\"cmd\": \"shutdown\"}} to drain)",
+        scfg.model, scfg.replicas
+    );
+    pool.wait()?;
     Ok(())
 }
 
@@ -184,16 +252,66 @@ fn bench_serve(args: &Args) -> Result<()> {
     let cfg = SparsityConfig::parse(&sparsity)
         .ok_or_else(|| anyhow::anyhow!("bad --sparsity {sparsity}"))?;
 
+    let replicas = args.opt_usize("replicas", 1)?;
+
     let metrics = Arc::new(EngineMetrics::new());
-    let rt = make_engine(&dir, args)?;
-    let mut engine =
-        Engine::new(rt, EngineConfig::new(&model), Arc::clone(&metrics))?;
 
     let mut spec = workload::WorkloadSpec::uniform_dense(n);
     spec.rate = rate;
     spec.max_new_tokens = max_new;
     spec.mix = vec![(cfg, 1.0)];
     let reqs = workload::generate(&spec);
+
+    if replicas > 1 {
+        // pool path: submit through the supervisor, drain, report
+        let scfg = ServeConfig {
+            model: model.to_string(),
+            ..ServeConfig::default()
+        };
+        let factory = pool_factory(
+            dir,
+            args.opt("engine").unwrap_or("native").to_string(),
+            scfg,
+            Arc::clone(&metrics),
+        );
+        let mut pool = ReplicaPool::start(
+            factory,
+            Arc::clone(&metrics),
+            PoolConfig::new(replicas),
+        )?;
+        let handle = pool.handle();
+        let (reply_tx, reply_rx) = channel();
+        let t = Timer::start();
+        let start = std::time::Instant::now();
+        for tr in reqs {
+            let dt = tr.at - start.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(dt));
+            }
+            handle.submit(tr.req, reply_tx.clone())?;
+        }
+        let mut got = 0usize;
+        for _ in 0..n {
+            match reply_rx.recv_timeout(Duration::from_secs(120)) {
+                Ok(_) => got += 1,
+                Err(_) => break,
+            }
+        }
+        pool.shutdown()?;
+        let wall = t.secs();
+        println!(
+            "\n== bench-serve {model} sparsity={} requests={n} \
+             rate={rate} replicas={replicas} ==",
+            cfg.label()
+        );
+        println!("completed {got}/{n} in {wall:.2}s");
+        println!("{}", metrics.report(wall));
+        return Ok(());
+    }
+
+    let rt = make_engine(&dir, args)?;
+    let mut engine =
+        Engine::new(rt, EngineConfig::new(&model), Arc::clone(&metrics))?;
 
     let (reply_tx, reply_rx) = channel();
     let t = Timer::start();

@@ -38,6 +38,13 @@ pub struct ServeConfig {
     /// transient failures tolerated per request before a `fatal`
     /// response
     pub max_retries: u32,
+    /// replica heartbeat timeout, milliseconds: a replica that has not
+    /// advanced its tick beacon for this long is declared hung and
+    /// replaced (0 = heartbeat supervision off). Multi-replica only.
+    pub heartbeat_ms: u64,
+    /// replica crash/hang failovers tolerated per request before a
+    /// `fatal` response (graceful-drain hand-backs are free)
+    pub max_redispatch: u32,
 }
 
 impl Default for ServeConfig {
@@ -54,6 +61,8 @@ impl Default for ServeConfig {
             degrade_at: 0,
             shed_at: 0,
             max_retries: 3,
+            heartbeat_ms: 1000,
+            max_redispatch: 3,
         }
     }
 }
@@ -96,6 +105,12 @@ impl ServeConfig {
             shed_at: get_u("shed_at", d.shed_at),
             max_retries: get_u("max_retries", d.max_retries as usize)
                 as u32,
+            heartbeat_ms: get_u("heartbeat_ms", d.heartbeat_ms as usize)
+                as u64,
+            max_redispatch: get_u(
+                "max_redispatch",
+                d.max_redispatch as usize,
+            ) as u32,
         })
     }
 
@@ -142,6 +157,20 @@ mod tests {
         assert_eq!(c.degrade_at, 0, "overload control off by default");
         assert_eq!(c.shed_at, 0);
         assert_eq!(c.max_retries, 3);
+        assert_eq!(c.heartbeat_ms, 1000);
+        assert_eq!(c.max_redispatch, 3);
+    }
+
+    #[test]
+    fn parses_replica_knobs() {
+        let j = Json::parse(
+            r#"{"replicas": 4, "heartbeat_ms": 250, "max_redispatch": 1}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.heartbeat_ms, 250);
+        assert_eq!(c.max_redispatch, 1);
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //!      transient|fatal|rejected)
 //!   -> {"cmd": "stats"}            <- {"requests": ...}
 //!   -> {"cmd": "quit"}             (closes the connection)
+//!   -> {"cmd": "shutdown"}         <- {"ok": "draining"}  (graceful
+//!      drain of the engine/pool behind the gateway, then the server
+//!      exits; see `main::serve`)
+//!
+//! The front door is a [`Gateway`]: one engine channel (the classic
+//! single-replica deployment) or a supervised replica pool — the wire
+//! protocol is identical either way.
 //!
 //! The front-end is hardened against hostile or broken clients: input
 //! lines are bounded at [`MAX_LINE_BYTES`] (oversized lines are
@@ -19,14 +26,14 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::thread;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::replica::Gateway;
 use crate::coordinator::request::{Request, Response, SparsityConfig};
-use crate::coordinator::scheduler::EngineMsg;
 use crate::metrics::EngineMetrics;
 use crate::util::json::{self, Json};
 
@@ -101,7 +108,7 @@ fn error_json(kind: &str, msg: &str) -> String {
 
 fn handle_conn(
     stream: TcpStream,
-    engine_tx: Sender<EngineMsg>,
+    gateway: Gateway,
     metrics: Arc<EngineMetrics>,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
@@ -171,6 +178,17 @@ fn handle_conn(
                     writeln!(writer, "{}", stats_json(&metrics))?;
                     continue;
                 }
+                "shutdown" => {
+                    // graceful drain: stop admitting, finish what is
+                    // in flight, then the serve loop in `main` exits
+                    gateway.begin_shutdown();
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![("ok", json::s("draining"))])
+                    )?;
+                    break;
+                }
                 other => {
                     writeln!(
                         writer,
@@ -187,7 +205,7 @@ fn handle_conn(
         match parse_request(line) {
             Ok(req) => {
                 let (tx, rx) = channel();
-                if engine_tx.send(EngineMsg::Submit(req, tx)).is_err() {
+                if gateway.submit(req, tx).is_err() {
                     writeln!(
                         writer,
                         "{}",
@@ -255,7 +273,7 @@ fn stats_json(m: &EngineMetrics) -> String {
 /// with port 0 in tests).
 pub fn serve(
     addr: &str,
-    engine_tx: Sender<EngineMsg>,
+    gateway: Gateway,
     metrics: Arc<EngineMetrics>,
 ) -> Result<(std::net::SocketAddr, thread::JoinHandle<()>)> {
     let listener = TcpListener::bind(addr)
@@ -267,10 +285,10 @@ pub fn serve(
             for stream in listener.incoming() {
                 match stream {
                     Ok(s) => {
-                        let tx = engine_tx.clone();
+                        let gw = gateway.clone();
                         let m = Arc::clone(&metrics);
                         thread::spawn(move || {
-                            let _ = handle_conn(s, tx, m);
+                            let _ = handle_conn(s, gw, m);
                         });
                     }
                     Err(_) => break,
@@ -284,6 +302,7 @@ pub fn serve(
 mod tests {
     use super::*;
     use crate::coordinator::error::{ErrorKind, RequestError};
+    use crate::coordinator::scheduler::EngineMsg;
 
     #[test]
     fn parse_request_full() {
@@ -359,8 +378,8 @@ mod tests {
     }
 
     /// A stand-in engine thread answering every submit with a canned
-    /// two-token success.
-    fn fake_engine() -> Sender<EngineMsg> {
+    /// two-token success, wrapped as a single-engine [`Gateway`].
+    fn fake_engine() -> Gateway {
         let (tx, rx) = channel::<EngineMsg>();
         thread::spawn(move || {
             while let Ok(msg) = rx.recv() {
@@ -376,7 +395,34 @@ mod tests {
                 }
             }
         });
-        tx
+        Gateway::Direct(tx)
+    }
+
+    #[test]
+    fn shutdown_cmd_acknowledges_and_closes() {
+        let (addr, _h) = serve(
+            "127.0.0.1:0",
+            fake_engine(),
+            Arc::new(EngineMetrics::new()),
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.get("ok").and_then(|v| v.as_str()),
+            Some("draining"),
+            "shutdown is acknowledged before the connection closes"
+        );
+        line.clear();
+        assert_eq!(
+            r.read_line(&mut line).unwrap(),
+            0,
+            "the issuing connection is closed after the ack"
+        );
     }
 
     #[test]

@@ -159,6 +159,66 @@ impl WorkloadSpec {
     }
 }
 
+/// Replica lifecycle actions a chaos schedule can fire against a
+/// [`crate::coordinator::replica::ReplicaPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaAction {
+    /// crash the replica (panic out of its serve loop; in-flight work
+    /// fails over, the supervisor restarts the slot)
+    Kill,
+    /// gracefully drain the replica (queued work re-dispatches,
+    /// in-flight work finishes in place, the slot goes `Down`)
+    Drain,
+    /// restart a previously killed/drained slot with a fresh bind
+    Restart,
+}
+
+/// One scheduled replica lifecycle event in a chaos run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaEvent {
+    /// fire time, milliseconds from workload start
+    pub at_ms: u64,
+    /// target replica slot
+    pub replica: usize,
+    /// what happens to it
+    pub action: ReplicaAction,
+}
+
+/// Deterministic replica chaos schedule: `n_events` kill/drain/restart
+/// events spread over `span_ms`, in fire order. Drawn from the seed's
+/// own sub-rng, so the request streams of [`generate`] are untouched
+/// by the presence (or size) of a chaos schedule. `Restart` only ever
+/// targets a slot an earlier event took down.
+pub fn replica_schedule(
+    seed: u64,
+    replicas: usize,
+    n_events: usize,
+    span_ms: u64,
+) -> Vec<ReplicaEvent> {
+    let mut rng = Rng::new(seed ^ 0x5e7a_c0de);
+    let mut out = Vec::with_capacity(n_events);
+    let mut downed: Vec<usize> = Vec::new();
+    let step = span_ms / (n_events.max(1) as u64) + 1;
+    let mut t = 0u64;
+    for _ in 0..n_events {
+        t += rng.below(step) + 1;
+        let (replica, action) = match rng.below(4) {
+            3 if !downed.is_empty() => {
+                let i = downed.remove(rng.usize_below(downed.len()));
+                (i, ReplicaAction::Restart)
+            }
+            2 => (rng.usize_below(replicas), ReplicaAction::Drain),
+            _ => (rng.usize_below(replicas), ReplicaAction::Kill),
+        };
+        if action != ReplicaAction::Restart && !downed.contains(&replica)
+        {
+            downed.push(replica);
+        }
+        out.push(ReplicaEvent { at_ms: t, replica, action });
+    }
+    out
+}
+
 /// A generated request + its arrival offset (seconds from start).
 pub struct TimedRequest {
     /// arrival time, seconds from workload start
@@ -447,6 +507,49 @@ mod tests {
             assert_eq!(x.req.prompt, y.req.prompt);
             assert_eq!(x.at, y.at);
             assert_eq!(x.req.deadline_ticks, 0);
+        }
+    }
+
+    #[test]
+    fn replica_schedules_are_deterministic_and_well_formed() {
+        let a = replica_schedule(11, 3, 24, 500);
+        let b = replica_schedule(11, 3, 24, 500);
+        assert_eq!(a, b, "same seed must draw the same schedule");
+        assert_eq!(a.len(), 24);
+        let mut down: Vec<usize> = Vec::new();
+        let mut last = 0u64;
+        for e in &a {
+            assert!(e.replica < 3, "slot {} out of range", e.replica);
+            assert!(e.at_ms >= last, "events must be in fire order");
+            last = e.at_ms;
+            match e.action {
+                ReplicaAction::Restart => {
+                    assert!(
+                        down.contains(&e.replica),
+                        "restart of a slot nothing took down"
+                    );
+                    down.retain(|&i| i != e.replica);
+                }
+                _ => {
+                    if !down.contains(&e.replica) {
+                        down.push(e.replica);
+                    }
+                }
+            }
+        }
+        let c = replica_schedule(12, 3, 24, 500);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn replica_schedule_does_not_disturb_request_streams() {
+        let spec = WorkloadSpec::uniform_dense(20);
+        let before = generate(&spec);
+        let _chaos = replica_schedule(spec.seed, 4, 16, 1000);
+        let after = generate(&spec);
+        for (x, y) in before.iter().zip(after.iter()) {
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.at, y.at);
         }
     }
 

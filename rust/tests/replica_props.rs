@@ -1,0 +1,625 @@
+//! Replica-pool suite (ISSUE 10): drive a supervised multi-replica
+//! pool through >= 100 seeded schedules of submissions interleaved
+//! with replica kills, graceful drains and restarts, and check the
+//! failover contract: every accepted request gets exactly one
+//! response, every error-free response is token-identical to a
+//! single-replica fault-free reference (failover recomputes from
+//! scratch, so a crash is invisible to the client), and the router's
+//! outstanding counters settle to zero once everything is answered.
+//! Deterministic companions pin kill-mid-prefill and kill-mid-decode
+//! failover, drain-loses-nothing (plus restart-after-drain), heartbeat
+//! fencing of a stalled replica, and the engine-level drain hand-back
+//! protocol.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amber_pruner::coordinator::replica::{
+    EngineFactory, PoolConfig, PoolHandle, ReplicaPool, ReplicaStat,
+};
+use amber_pruner::coordinator::request::{Request, SparsityConfig};
+use amber_pruner::coordinator::router::{Health, Policy};
+use amber_pruner::coordinator::scheduler::{
+    Engine, EngineConfig, EngineMsg,
+};
+use amber_pruner::metrics::EngineMetrics;
+use amber_pruner::runtime::NativeEngine;
+use amber_pruner::server::workload::{replica_schedule, ReplicaAction};
+use amber_pruner::testutil::prop::{prop_check, Gen};
+use amber_pruner::util::rng::Rng;
+
+const MODEL: &str = "tiny-lm-a";
+
+fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| 1 + rng.below(300) as i32).collect()
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        config: SparsityConfig::dense(),
+        deadline_ticks: 0,
+    }
+}
+
+/// Pool factory: every replica (and every restart) binds a fresh tiny
+/// native engine with the given chunk size.
+fn factory(
+    metrics: &Arc<EngineMetrics>,
+    chunk_tokens: usize,
+) -> EngineFactory {
+    let m = Arc::clone(metrics);
+    Arc::new(move |_i| {
+        let mut cfg = EngineConfig::new(MODEL);
+        cfg.pool_threads = 1;
+        cfg.max_wait_secs = 0.0;
+        cfg.chunk_tokens = chunk_tokens;
+        cfg.prefix_cache = false;
+        Engine::new(Box::new(NativeEngine::tiny()), cfg, Arc::clone(&m))
+    })
+}
+
+/// Single-replica, fault-free reference: what the tokens must be.
+fn serve_reference(reqs: &[Request]) -> HashMap<u64, Vec<i32>> {
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    let mut engine = Engine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+    let (reply_tx, reply_rx) = channel();
+    for r in reqs {
+        engine.submit(r.clone(), reply_tx.clone());
+    }
+    while engine.step().unwrap() {}
+    drop(reply_tx);
+    reply_rx.try_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// Poll [`PoolHandle::snapshot`] until `pred` holds (or time out).
+fn wait_for<F: Fn(&[ReplicaStat]) -> bool>(
+    handle: &PoolHandle,
+    pred: F,
+    timeout: Duration,
+    what: &str,
+) -> Result<Vec<ReplicaStat>, String> {
+    let start = Instant::now();
+    loop {
+        let snap = handle
+            .snapshot()
+            .map_err(|e| format!("snapshot: {e}"))?;
+        if pred(&snap) {
+            return Ok(snap);
+        }
+        if start.elapsed() > timeout {
+            return Err(format!("timed out waiting for {what}: {snap:?}"));
+        }
+        std::thread::sleep(Duration::from_micros(500));
+    }
+}
+
+/// The headline property: >= 100 seeded schedules of submissions
+/// interleaved with kills/drains/restarts over 2–3 replicas under a
+/// random routing policy. Exactly one response per request, unique
+/// ids, error-free responses token-identical to the single-replica
+/// reference, and no outstanding-counter drift once the dust settles.
+/// The suite as a whole must actually restart and drain replicas
+/// (non-vacuity).
+#[test]
+fn seeded_replica_schedules_answer_exactly_once_and_match() {
+    let total_restarts = AtomicU64::new(0);
+    let total_drains = AtomicU64::new(0);
+    let total_redispatched = AtomicU64::new(0);
+    prop_check("replica", 110, |rng, size| {
+        let replicas = 2 + rng.usize_below(2); // 2..=3
+        let n = 4 + size / 4; // 4..=11 requests
+        let mut reqs: Vec<Request> = Vec::new();
+        for id in 0..n {
+            let len = 8 + rng.usize_below(41); // 8..=48
+            reqs.push(req(
+                id as u64,
+                prompt(rng, len),
+                1 + rng.usize_below(4),
+            ));
+        }
+        let golden = serve_reference(&reqs);
+        if golden.len() != n {
+            return Err(format!(
+                "reference run lost requests: {} of {n}",
+                golden.len()
+            ));
+        }
+
+        let metrics = Arc::new(EngineMetrics::new());
+        let mut pcfg = PoolConfig::new(replicas);
+        pcfg.policy = *Gen::choice(
+            rng,
+            &[
+                Policy::RoundRobin,
+                Policy::LeastOutstanding,
+                Policy::PrefixAffinity { block: 16, spill_at: 2 },
+            ],
+        );
+        // thread-death supervision only: a loaded CI box must not
+        // fence a merely-slow replica mid-property
+        pcfg.heartbeat_timeout = Duration::ZERO;
+        pcfg.poll = Duration::from_millis(1);
+        let mut pool = ReplicaPool::start(
+            factory(&metrics, *Gen::choice(rng, &[8usize, usize::MAX])),
+            Arc::clone(&metrics),
+            pcfg,
+        )
+        .map_err(|e| format!("pool start: {e}"))?;
+        let handle = pool.handle();
+
+        let mut chaos = replica_schedule(
+            rng.below(u64::MAX),
+            replicas,
+            1 + rng.usize_below(5),
+            0, // position-interleaved below; fire times unused
+        )
+        .into_iter();
+        let (reply_tx, reply_rx) = channel();
+        for r in &reqs {
+            handle
+                .submit(r.clone(), reply_tx.clone())
+                .map_err(|e| format!("submit: {e}"))?;
+            if rng.bool(0.35) {
+                if let Some(e) = chaos.next() {
+                    match e.action {
+                        ReplicaAction::Kill => handle.kill(e.replica),
+                        ReplicaAction::Drain => handle.drain(e.replica),
+                        ReplicaAction::Restart => {
+                            handle.restart(e.replica)
+                        }
+                    }
+                }
+            }
+        }
+        drop(reply_tx);
+
+        let mut responses = Vec::with_capacity(n);
+        for k in 0..n {
+            match reply_rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(r) => responses.push(r),
+                Err(_) => {
+                    return Err(format!(
+                        "response {k} of {n} never arrived"
+                    ))
+                }
+            }
+        }
+        let mut seen: HashSet<u64> = HashSet::new();
+        for r in &responses {
+            if !seen.insert(r.id) {
+                return Err(format!("request {} answered twice", r.id));
+            }
+            if r.error.is_none()
+                && golden.get(&r.id) != Some(&r.tokens)
+            {
+                return Err(format!(
+                    "request {}: error-free response diverged from \
+                     the single-replica reference",
+                    r.id
+                ));
+            }
+        }
+        // late zombie replies are dropped by the ledger fence, so the
+        // client channel stays exactly-once even if we wait
+        if let Ok(extra) =
+            reply_rx.recv_timeout(Duration::from_millis(20))
+        {
+            return Err(format!(
+                "request {} answered twice (late duplicate)",
+                extra.id
+            ));
+        }
+        // every dispatch must have been balanced by exactly one
+        // completion/failover/rebind: no counter drift anywhere
+        wait_for(
+            &handle,
+            |snap| snap.iter().all(|s| s.outstanding == 0),
+            Duration::from_secs(10),
+            "outstanding counters to settle at zero",
+        )?;
+        pool.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+        total_restarts.fetch_add(
+            metrics.replica_restarts.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        total_drains.fetch_add(
+            metrics.replica_drains.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        total_redispatched.fetch_add(
+            metrics.replica_redispatches.load(Ordering::Relaxed)
+                + metrics.replica_handbacks.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+        Ok(())
+    });
+    // the suite must exercise the paths it claims to cover
+    assert!(
+        total_restarts.load(Ordering::Relaxed) > 0,
+        "no replica was ever restarted — kills never landed"
+    );
+    assert!(
+        total_drains.load(Ordering::Relaxed) > 0,
+        "no replica was ever drained"
+    );
+    assert!(
+        total_redispatched.load(Ordering::Relaxed) > 0,
+        "no request was ever re-dispatched or handed back"
+    );
+}
+
+/// Kill a replica mid-prefill (long prompts, small chunks): its
+/// in-flight requests fail over and recompute, every response is
+/// error-free and token-identical to the single-replica reference.
+#[test]
+fn kill_mid_prefill_fails_over_token_identically() {
+    let mut rng = Rng::new(0x10_aa);
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| req(id, prompt(&mut rng, 60), 4))
+        .collect();
+    let golden = serve_reference(&reqs);
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut pcfg = PoolConfig::new(2);
+    pcfg.heartbeat_timeout = Duration::ZERO;
+    pcfg.poll = Duration::from_millis(1);
+    // 60-token prompts in 4-token chunks: 15 prefill ticks per
+    // request, so the kill below lands mid-prefill
+    let mut pool = ReplicaPool::start(
+        factory(&metrics, 4),
+        Arc::clone(&metrics),
+        pcfg,
+    )
+    .unwrap();
+    let handle = pool.handle();
+    let (reply_tx, reply_rx) = channel();
+    for r in &reqs {
+        handle.submit(r.clone(), reply_tx.clone()).unwrap();
+    }
+    let snap = wait_for(
+        &handle,
+        |s| s.iter().any(|r| r.outstanding >= 2),
+        Duration::from_secs(10),
+        "a replica with work in flight",
+    )
+    .unwrap();
+    let victim = snap
+        .iter()
+        .max_by_key(|s| s.outstanding)
+        .unwrap()
+        .index;
+    // a short stall pins the victim's queue while the crash message
+    // lands behind it, so the kill provably strikes work in flight
+    handle.stall(victim, 50);
+    handle.kill(victim);
+    drop(reply_tx);
+
+    let responses: Vec<_> = (0..reqs.len())
+        .map(|_| {
+            reply_rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("response lost across failover")
+        })
+        .collect();
+    let ids: HashSet<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), reqs.len(), "duplicate or missing ids");
+    for r in &responses {
+        assert!(
+            r.error.is_none(),
+            "request {} failed across failover: {:?}",
+            r.id,
+            r.error
+        );
+        assert_eq!(
+            golden[&r.id], r.tokens,
+            "request {}: failover replay diverged",
+            r.id
+        );
+    }
+    assert!(
+        metrics.replica_redispatches.load(Ordering::Relaxed) > 0,
+        "the kill never re-dispatched anything"
+    );
+    assert!(
+        metrics.replica_restarts.load(Ordering::Relaxed) > 0,
+        "the killed replica was never restarted"
+    );
+    pool.shutdown().unwrap();
+}
+
+/// Kill a replica mid-decode (short prompts, long generation): same
+/// contract as the mid-prefill kill.
+#[test]
+fn kill_mid_decode_fails_over_token_identically() {
+    let mut rng = Rng::new(0x10_bb);
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| req(id, prompt(&mut rng, 4), 24))
+        .collect();
+    let golden = serve_reference(&reqs);
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut pcfg = PoolConfig::new(2);
+    pcfg.heartbeat_timeout = Duration::ZERO;
+    pcfg.poll = Duration::from_millis(1);
+    // one-shot prefill, 24 decode ticks per request: the kill lands
+    // mid-decode
+    let mut pool = ReplicaPool::start(
+        factory(&metrics, usize::MAX),
+        Arc::clone(&metrics),
+        pcfg,
+    )
+    .unwrap();
+    let handle = pool.handle();
+    let (reply_tx, reply_rx) = channel();
+    for r in &reqs {
+        handle.submit(r.clone(), reply_tx.clone()).unwrap();
+    }
+    let snap = wait_for(
+        &handle,
+        |s| s.iter().any(|r| r.outstanding >= 2),
+        Duration::from_secs(10),
+        "a replica with work in flight",
+    )
+    .unwrap();
+    let victim = snap
+        .iter()
+        .max_by_key(|s| s.outstanding)
+        .unwrap()
+        .index;
+    // stall-then-kill: the crash message queues behind a short sleep,
+    // so it provably strikes while decode work is outstanding
+    handle.stall(victim, 50);
+    handle.kill(victim);
+    drop(reply_tx);
+
+    for _ in 0..reqs.len() {
+        let r = reply_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("response lost across failover");
+        assert!(r.error.is_none(), "request {} failed", r.id);
+        assert_eq!(
+            golden[&r.id], r.tokens,
+            "request {}: failover replay diverged",
+            r.id
+        );
+    }
+    assert!(
+        metrics.replica_redispatches.load(Ordering::Relaxed) > 0,
+        "the kill never re-dispatched anything"
+    );
+    pool.shutdown().unwrap();
+}
+
+/// Graceful drain loses nothing: every request submitted before the
+/// drain is answered error-free and token-identical, the drained slot
+/// ends `Down`, and a restart brings it back for new work.
+#[test]
+fn graceful_drain_loses_nothing_and_restart_revives() {
+    let mut rng = Rng::new(0x10_cc);
+    let reqs: Vec<Request> = (0..10u64)
+        .map(|id| req(id, prompt(&mut rng, 32), 4))
+        .collect();
+    let after = req(99, prompt(&mut rng, 12), 2);
+    let mut all = reqs.clone();
+    all.push(after.clone());
+    let golden = serve_reference(&all);
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut pcfg = PoolConfig::new(2);
+    pcfg.heartbeat_timeout = Duration::ZERO;
+    pcfg.poll = Duration::from_millis(1);
+    let mut pool = ReplicaPool::start(
+        factory(&metrics, 8),
+        Arc::clone(&metrics),
+        pcfg,
+    )
+    .unwrap();
+    let handle = pool.handle();
+    let (reply_tx, reply_rx) = channel();
+    for r in &reqs {
+        handle.submit(r.clone(), reply_tx.clone()).unwrap();
+    }
+    let snap = wait_for(
+        &handle,
+        |s| s.iter().any(|r| r.outstanding > 0),
+        Duration::from_secs(10),
+        "a replica with work in flight",
+    )
+    .unwrap();
+    let victim = snap
+        .iter()
+        .max_by_key(|s| s.outstanding)
+        .unwrap()
+        .index;
+    handle.drain(victim);
+
+    for _ in 0..reqs.len() {
+        let r = reply_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("drain lost a response");
+        assert!(r.error.is_none(), "request {} failed", r.id);
+        assert_eq!(
+            golden[&r.id], r.tokens,
+            "request {}: response diverged across the drain",
+            r.id
+        );
+    }
+    assert_eq!(metrics.replica_drains.load(Ordering::Relaxed), 1);
+    let snap = wait_for(
+        &handle,
+        |s| s[victim].health == Health::Down,
+        Duration::from_secs(10),
+        "the drained slot to finish",
+    )
+    .unwrap();
+    assert_eq!(snap[victim].outstanding, 0, "drain leaked a counter");
+
+    // a drained slot is revivable: restart, wait for its heartbeat
+    // promotion, and serve fresh work
+    handle.restart(victim);
+    wait_for(
+        &handle,
+        |s| s[victim].health == Health::Up,
+        Duration::from_secs(10),
+        "the restarted slot to come up",
+    )
+    .unwrap();
+    handle.submit(after.clone(), reply_tx.clone()).unwrap();
+    drop(reply_tx);
+    let r = reply_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("post-restart request lost");
+    assert_eq!(r.id, 99);
+    assert!(r.error.is_none());
+    assert_eq!(golden[&99], r.tokens);
+    pool.shutdown().unwrap();
+}
+
+/// A stalled serve loop stops heartbeating: the supervisor fences the
+/// zombie, re-dispatches its work and binds a replacement — clients
+/// still get exactly one, token-identical response each.
+#[test]
+fn stalled_replica_is_fenced_and_replaced() {
+    let mut rng = Rng::new(0x10_dd);
+    let reqs: Vec<Request> = (0..6u64)
+        .map(|id| req(id, prompt(&mut rng, 8), 12))
+        .collect();
+    let golden = serve_reference(&reqs);
+
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut pcfg = PoolConfig::new(2);
+    pcfg.heartbeat_timeout = Duration::from_millis(250);
+    pcfg.poll = Duration::from_millis(1);
+    let mut pool = ReplicaPool::start(
+        factory(&metrics, usize::MAX),
+        Arc::clone(&metrics),
+        pcfg,
+    )
+    .unwrap();
+    let handle = pool.handle();
+    // both replicas must be heartbeating before the stall, so the
+    // fence provably fires on a *stalled* beat, not a missing one
+    wait_for(
+        &handle,
+        |s| s.iter().all(|r| r.health == Health::Up),
+        Duration::from_secs(10),
+        "both replicas up",
+    )
+    .unwrap();
+    let (reply_tx, reply_rx) = channel();
+    for r in &reqs {
+        handle.submit(r.clone(), reply_tx.clone()).unwrap();
+    }
+    handle.stall(0, 1_500);
+    drop(reply_tx);
+
+    for _ in 0..reqs.len() {
+        let r = reply_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("response lost across the fence");
+        assert!(r.error.is_none(), "request {} failed", r.id);
+        assert_eq!(
+            golden[&r.id], r.tokens,
+            "request {}: fenced failover diverged",
+            r.id
+        );
+    }
+    // the fence must actually have fired and bound a fresh generation
+    wait_for(
+        &handle,
+        |s| s[0].generation >= 1,
+        Duration::from_secs(10),
+        "the stalled slot to be rebound",
+    )
+    .unwrap();
+    assert!(
+        metrics.replica_restarts.load(Ordering::Relaxed) > 0,
+        "the heartbeat fence never replaced the zombie"
+    );
+    pool.shutdown().unwrap();
+}
+
+/// Engine-level drain protocol: queued work is handed back un-replied
+/// (retry counts preserved), the hand-back metric counts each one,
+/// and the serve loop exits cleanly.
+#[test]
+fn engine_drain_hands_back_queued_work_unreplied() {
+    let mut rng = Rng::new(0x10_ee);
+    let metrics = Arc::new(EngineMetrics::new());
+    let mut cfg = EngineConfig::new(MODEL);
+    cfg.pool_threads = 1;
+    cfg.max_wait_secs = 0.0;
+    cfg.chunk_tokens = usize::MAX;
+    cfg.prefix_cache = false;
+    let mut engine = Engine::new(
+        Box::new(NativeEngine::tiny()),
+        cfg,
+        Arc::clone(&metrics),
+    )
+    .unwrap();
+
+    let (tx, rx) = channel();
+    let (reply_tx, reply_rx) = channel();
+    let (back_tx, back_rx) = channel();
+    for id in 0..6u64 {
+        tx.send(EngineMsg::Submit(
+            req(id, prompt(&mut rng, 12), 2),
+            reply_tx.clone(),
+        ))
+        .unwrap();
+    }
+    // the drain arrives in the same message batch, before any step:
+    // everything is still queued, so everything hands back un-replied
+    tx.send(EngineMsg::Drain(back_tx)).unwrap();
+    drop(tx);
+    drop(reply_tx);
+    engine.run(rx).unwrap();
+
+    let backs: Vec<_> = back_rx.try_iter().collect();
+    assert_eq!(backs.len(), 6, "all queued work must hand back");
+    let ids: HashSet<u64> = backs.iter().map(|h| h.req.id).collect();
+    assert_eq!(ids, (0..6).collect::<HashSet<u64>>());
+    for h in &backs {
+        assert_eq!(h.retries, 0, "retry budget must be preserved");
+    }
+    assert_eq!(
+        reply_rx.try_iter().count(),
+        0,
+        "handed-back work must not be answered by the drained engine"
+    );
+    assert_eq!(
+        metrics.replica_handbacks.load(Ordering::Relaxed),
+        6
+    );
+
+    // the same engine object serves normally again after the drain
+    let (tx2, rx2) = channel();
+    let (reply_tx2, reply_rx2) = channel();
+    tx2.send(EngineMsg::Submit(
+        req(7, prompt(&mut rng, 12), 2),
+        reply_tx2.clone(),
+    ))
+    .unwrap();
+    drop(tx2);
+    drop(reply_tx2);
+    engine.run(rx2).unwrap();
+    let r = reply_rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(r.id, 7);
+    assert!(r.error.is_none(), "post-drain engine must serve again");
+}

@@ -443,3 +443,123 @@ fn burst_overload_sheds_degrades_and_cancels_deadlines() {
     let (free, total) = engine.kv_blocks();
     assert_eq!(free, total, "blocks leaked under overload");
 }
+
+#[test]
+fn replica_kill_mid_burst_keeps_the_error_taxonomy_exact() {
+    // ISSUE 10 e2e: the overload burst above, served by a 2-replica
+    // pool with one replica killed while the burst is in flight. The
+    // victim's work fails over to the survivor; every request still
+    // gets exactly one response, and the response-level taxonomy is
+    // exact: served + shed + deadline-cancelled == n (a crash adds no
+    // fourth category — failover re-dispatch absorbs it).
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    use amber_pruner::coordinator::error::ErrorKind;
+    use amber_pruner::coordinator::replica::{
+        EngineFactory, PoolConfig, ReplicaPool,
+    };
+
+    let spec = WorkloadSpec::bursty_deadlines(40, 8, 3);
+    let reqs: Vec<Request> =
+        generate(&spec).into_iter().map(|t| t.req).collect();
+    let metrics = Arc::new(EngineMetrics::new());
+    let m = Arc::clone(&metrics);
+    let factory: EngineFactory = Arc::new(move |_i| {
+        let mut cfg = EngineConfig::new("tiny-lm-a");
+        cfg.pool_threads = 1;
+        cfg.max_wait_secs = 0.0;
+        cfg.prefix_cache = false;
+        // per-replica watermarks at half the single-engine test's
+        // levels: the burst splits across two engines
+        cfg.degrade_policy = Some(DegradePolicy {
+            degrade_at: 100,
+            shed_at: 300,
+        });
+        Engine::new(Box::new(NativeEngine::tiny()), cfg, Arc::clone(&m))
+    });
+    let mut pcfg = PoolConfig::new(2);
+    pcfg.heartbeat_timeout = Duration::ZERO;
+    pcfg.poll = Duration::from_millis(1);
+    let mut pool =
+        ReplicaPool::start(factory, Arc::clone(&metrics), pcfg).unwrap();
+    let handle = pool.handle();
+    let (reply_tx, reply_rx) = channel();
+    for r in &reqs {
+        handle.submit(r.clone(), reply_tx.clone()).unwrap();
+    }
+    // pick whichever replica holds the most of the burst and kill it
+    // mid-flight (the stall pins its queue while the crash lands)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let victim = loop {
+        let snap = handle.snapshot().unwrap();
+        let busiest =
+            snap.iter().max_by_key(|s| s.outstanding).unwrap();
+        if busiest.outstanding > 0 {
+            break busiest.index;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "the burst never reached a replica"
+        );
+        std::thread::sleep(Duration::from_micros(500));
+    };
+    handle.stall(victim, 50);
+    handle.kill(victim);
+    drop(reply_tx);
+
+    let responses: Vec<_> = (0..40)
+        .map(|k| {
+            reply_rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|_| {
+                    panic!("response {k} of 40 never arrived")
+                })
+        })
+        .collect();
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..40).collect::<Vec<u64>>(),
+        "no request lost or duplicated across the kill"
+    );
+    let served =
+        responses.iter().filter(|r| r.error.is_none()).count();
+    let sheds = responses
+        .iter()
+        .filter(|r| {
+            r.error.as_ref().is_some_and(|e| {
+                e.kind == ErrorKind::Rejected
+                    && e.reason.starts_with("overloaded")
+            })
+        })
+        .count();
+    let timeouts = responses
+        .iter()
+        .filter(|r| {
+            r.error.as_ref().is_some_and(|e| {
+                e.kind == ErrorKind::Rejected
+                    && e.reason.starts_with("deadline")
+            })
+        })
+        .count();
+    assert!(served > 0, "the pool must still serve through the kill");
+    assert!(sheds > 0, "the burst must overflow the shed watermark");
+    assert!(timeouts > 0, "tight deadlines must cancel under overload");
+    assert_eq!(
+        served + sheds + timeouts,
+        40,
+        "the error taxonomy must account for every request \
+         (a replica crash must not add a fourth category)"
+    );
+    assert!(
+        metrics.replica_redispatches.load(Ordering::Relaxed) > 0,
+        "the kill must land while the burst is in flight"
+    );
+    assert!(
+        metrics.replica_restarts.load(Ordering::Relaxed) > 0,
+        "the supervisor must restart the killed replica"
+    );
+    pool.shutdown().unwrap();
+}
